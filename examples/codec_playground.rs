@@ -1,0 +1,108 @@
+//! Codec playground: dissect what SL-FAC does to one batch of smashed data.
+//!
+//! Prints, per channel: the AFD split point k*, the FQC bit allocation, the
+//! spectral energy distribution, and the wire-byte breakdown — the
+//! inspectability story behind Algorithm 1.
+//!
+//! ```text
+//! cargo run --release --example codec_playground -- [--theta F] [--shape BxCxMxN]
+//! ```
+
+use slfac::cli::Command;
+use slfac::codec::{self, ActivationCodec, SlFacCodec, SlFacConfig};
+use slfac::dct::Dct2d;
+use slfac::freq::{afd_channel, zigzag};
+use slfac::quant::{allocate_bits, AllocationConfig};
+
+fn main() -> anyhow::Result<()> {
+    let cmd = Command::new("codec_playground", "inspect AFD + FQC on one tensor")
+        .opt("theta", "F", "energy threshold", Some("0.9"))
+        .opt("shape", "BxCxMxN", "tensor shape", Some("1x8x14x14"));
+    let m = match cmd.parse() {
+        Ok(m) => m,
+        Err(slfac::cli::CliError::Help(h)) => {
+            println!("{h}");
+            return Ok(());
+        }
+        Err(slfac::cli::CliError::Bad(e)) => anyhow::bail!(e),
+    };
+    let theta: f64 = m.get_parsed("theta").map_err(anyhow::Error::msg)?.unwrap();
+    let shape: Vec<usize> = m
+        .req("shape")
+        .map_err(anyhow::Error::msg)?
+        .split('x')
+        .map(|s| s.parse().unwrap())
+        .collect();
+
+    let x = codec::smooth_activations(&shape, 7);
+    let coeffs = Dct2d::forward_tensor(&x);
+    let (b, c, mm, nn) = coeffs.as_bchw();
+    let zz = zigzag(mm, nn);
+    let alloc = AllocationConfig::default();
+
+    println!("AFD + FQC dissection (theta = {theta}, plane {mm}x{nn}, {} coeffs)\n", mm * nn);
+    println!(
+        "{:>4} {:>6} {:>8} {:>7} {:>7} {:>10} {:>10} {:>9}",
+        "ch", "k*", "k*/MN", "b_low", "b_high", "E_low", "E_high", "bits/val"
+    );
+    for bi in 0..b.min(1) {
+        for ci in 0..c {
+            let split = afd_channel(&zz, coeffs.channel(bi, ci), theta);
+            let (bl, bh) =
+                allocate_bits(&alloc, split.mean_energy_low, split.mean_energy_high);
+            let total = mm * nn;
+            let bits = split.k * bl as usize + (total - split.k) * bh as usize;
+            println!(
+                "{:>4} {:>6} {:>7.1}% {:>7} {:>7} {:>10.3} {:>10.5} {:>9.2}",
+                ci,
+                split.k,
+                100.0 * split.k as f64 / total as f64,
+                bl,
+                bh,
+                split.mean_energy_low,
+                split.mean_energy_high,
+                bits as f64 / total as f64
+            );
+        }
+    }
+
+    // wire breakdown
+    let slfac = SlFacCodec::new(SlFacConfig {
+        theta,
+        ..Default::default()
+    });
+    let payload = slfac.compress(&coeffs)?;
+    let raw = x.numel() * 4;
+    let headers = b * c * 12; // k* + widths + F_l range (F_h range varies)
+    println!(
+        "\nwire: {} B total = 28 B payload header + >= {} B channel headers + packed bits",
+        payload.wire_bytes(),
+        headers
+    );
+    println!(
+        "raw fp32 {} B -> {:.1}x compression; reconstruction rel L2 err {:.4}",
+        raw,
+        payload.compression_ratio(),
+        Dct2d::inverse_tensor(&slfac.decompress(&payload)?).rel_l2_error(&x)
+    );
+
+    // theta sweep on the same tensor (Fig. 3's mechanism)
+    println!("\ntheta sweep (same tensor):");
+    println!("{:>7} {:>12} {:>8} {:>10}", "theta", "wire B", "ratio", "rel err");
+    for t in [0.5, 0.7, 0.8, 0.9, 0.95, 0.99] {
+        let c = SlFacCodec::new(SlFacConfig {
+            theta: t,
+            ..Default::default()
+        });
+        let p = c.compress(&coeffs)?;
+        let err = Dct2d::inverse_tensor(&c.decompress(&p)?).rel_l2_error(&x);
+        println!(
+            "{:>7.2} {:>12} {:>7.1}x {:>10.4}",
+            t,
+            p.wire_bytes(),
+            p.compression_ratio(),
+            err
+        );
+    }
+    Ok(())
+}

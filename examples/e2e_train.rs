@@ -1,0 +1,85 @@
+//! End-to-end validation driver (DESIGN.md §5, EXPERIMENTS.md §E2E).
+//!
+//! Trains the split ResNet on the MNIST-like workload for a full
+//! communication budget through ALL layers of the stack — synthetic data →
+//! Rust coordinator → AFD+FQC codec → simulated links → PJRT-compiled HLO
+//! (containing the L1 Pallas DCT kernel) → SplitFed aggregation — and logs
+//! the loss/accuracy curve plus executor and link statistics.
+//!
+//! ```text
+//! cargo run --release --example e2e_train -- [--rounds N] [--codec NAME]
+//! ```
+
+use slfac::cli::Command;
+use slfac::config::ExperimentConfig;
+use slfac::coordinator::Trainer;
+use slfac::runtime::ExecutorHandle;
+
+fn main() -> anyhow::Result<()> {
+    slfac::logging::init_from_env();
+    let cmd = Command::new("e2e_train", "full end-to-end training driver")
+        .opt("rounds", "N", "communication rounds", Some("15"))
+        .opt("codec", "NAME", "codec", Some("slfac"))
+        .opt("config", "PATH", "base config", Some("configs/mnist_iid.json"));
+    let m = match cmd.parse() {
+        Ok(m) => m,
+        Err(slfac::cli::CliError::Help(h)) => {
+            println!("{h}");
+            return Ok(());
+        }
+        Err(slfac::cli::CliError::Bad(e)) => anyhow::bail!(e),
+    };
+
+    let mut cfg = ExperimentConfig::load(m.req("config").map_err(anyhow::Error::msg)?)?;
+    cfg.name = "e2e".into();
+    cfg.rounds = m
+        .get_parsed::<usize>("rounds")
+        .map_err(anyhow::Error::msg)?
+        .unwrap_or(15);
+    cfg.codec = m.req("codec").map_err(anyhow::Error::msg)?.to_string();
+
+    println!(
+        "e2e: dataset {}, {} devices, {} rounds x {} batches, codec {}",
+        cfg.dataset.name(),
+        cfg.devices,
+        cfg.rounds,
+        cfg.batches_per_round,
+        cfg.codec
+    );
+    let exec = ExecutorHandle::spawn(&cfg.artifacts_dir, &[cfg.dataset.name().to_string()])?;
+    let mut trainer = Trainer::new(cfg, exec)?;
+    let outcome = trainer.run()?;
+
+    println!("\nloss curve (round, train loss, test acc):");
+    for r in &outcome.history.rounds {
+        println!(
+            "  {:>3}  {:>8.4}  {:>6.2}%   [{:>8} B up, {:>8} B down]",
+            r.round,
+            r.train_loss,
+            r.test_acc * 100.0,
+            r.uplink_bytes,
+            r.downlink_bytes
+        );
+    }
+    println!("\n{}", outcome.history.summary());
+    println!("\nexecutor profile:");
+    for (key, (n, t)) in &outcome.exec_stats.per_artifact {
+        println!(
+            "  {key:<22} {n:>5} execs  {:>9.3}s total  {:>8.2}ms mean",
+            t.as_secs_f64(),
+            t.as_secs_f64() * 1e3 / (*n as f64)
+        );
+    }
+    println!("\nper-device links (id, up MB, down MB, busy s):");
+    for (id, up, down, busy) in trainer.link_stats() {
+        println!(
+            "  dev{id}: {:>8.2} {:>8.2} {:>8.3}",
+            up as f64 / 1e6,
+            down as f64 / 1e6,
+            busy
+        );
+    }
+    outcome.history.write_csv("results/e2e_train.csv")?;
+    println!("\nmetrics -> results/e2e_train.csv");
+    Ok(())
+}

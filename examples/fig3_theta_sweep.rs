@@ -1,0 +1,58 @@
+//! Fig. 3 reproduction: impact of the energy threshold θ on model
+//! performance (MNIST, IID and non-IID).
+//!
+//! ```text
+//! cargo run --release --example fig3_theta_sweep -- \
+//!     [--thetas 0.5,0.7,0.8,0.9,0.95] [--rounds N] [--partitions iid,non-iid]
+//! ```
+
+use slfac::cli::Command;
+use slfac::config::{ExperimentConfig, Partition};
+use slfac::experiments::{print_convergence_table, run_suite, with_theta};
+
+fn main() -> anyhow::Result<()> {
+    slfac::logging::init_from_env();
+    let cmd = Command::new("fig3_theta_sweep", "paper Fig. 3 reproduction")
+        .opt("thetas", "LIST", "θ values", Some("0.5,0.7,0.8,0.9,0.95"))
+        .opt("partitions", "LIST", "iid,non-iid", Some("iid,non-iid"))
+        .opt("rounds", "N", "override rounds (0 = config default)", Some("0"));
+    let m = match cmd.parse() {
+        Ok(m) => m,
+        Err(slfac::cli::CliError::Help(h)) => {
+            println!("{h}");
+            return Ok(());
+        }
+        Err(slfac::cli::CliError::Bad(e)) => anyhow::bail!(e),
+    };
+    let thetas: Vec<f64> = m
+        .req("thetas")
+        .map_err(anyhow::Error::msg)?
+        .split(',')
+        .map(|s| s.parse().unwrap())
+        .collect();
+    let partitions: Vec<&str> = m.req("partitions").map_err(anyhow::Error::msg)?.split(',').collect();
+    let rounds_override: usize = m.get_parsed("rounds").map_err(anyhow::Error::msg)?.unwrap_or(0);
+
+    for partition in &partitions {
+        let cfg_name = if *partition == "iid" { "mnist_iid" } else { "mnist_noniid" };
+        let mut base = ExperimentConfig::load(&format!("configs/{cfg_name}.json"))?;
+        base.partition = if *partition == "iid" {
+            Partition::Iid
+        } else {
+            Partition::Dirichlet(0.5)
+        };
+        base.codec = "slfac".into();
+        if rounds_override > 0 {
+            base.rounds = rounds_override;
+        }
+        let variants: Vec<ExperimentConfig> =
+            thetas.iter().map(|&t| with_theta(&base, t)).collect();
+        let mut runs = run_suite(variants)?;
+        // label columns by theta instead of codec
+        for (run, &t) in runs.iter_mut().zip(&thetas) {
+            run.cfg.codec = format!("θ={t}");
+        }
+        print_convergence_table(&format!("Fig. 3 panel: MNIST / {partition}"), &runs);
+    }
+    Ok(())
+}

@@ -1,0 +1,219 @@
+"""AOT lowering: JAX entry points -> HLO *text* artifacts + manifest.
+
+Run once at build time (``make artifacts``); the Rust coordinator is
+self-contained afterwards. Interchange is HLO **text**, not serialized
+``HloModuleProto``: jax >= 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 (the version the published ``xla`` crate binds)
+rejects; the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Per dataset preset this emits::
+
+    artifacts/<preset>/init.hlo.txt          ()                      -> params
+    artifacts/<preset>/client_fwd.hlo.txt    (cp..., x)              -> (act, act_dct)
+    artifacts/<preset>/server_step.hlo.txt   (sp..., sm..., act, y, lr)
+                                             -> (sp'..., sm'..., loss, correct, gact, gact_dct)
+    artifacts/<preset>/client_step.hlo.txt   (cp..., cm..., x, gact, lr) -> (cp'..., cm'...)
+    artifacts/<preset>/idct.hlo.txt          (coeffs)                -> spatial
+    artifacts/<preset>/eval_step.hlo.txt     (cp..., sp..., x, y)    -> (loss, correct)
+
+plus ``artifacts/manifest.json`` (signatures, shapes, flat parameter specs)
+and ``artifacts/golden/golden.json`` (cross-language test vectors consumed
+by ``rust/tests/golden_vectors.rs``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import dct_kernel, ref
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default ELIDES large
+    # constants as literal "{...}" placeholders, which the XLA text parser
+    # happily reads back as zeros — silently zeroing the DCT basis matrices
+    # and every initialized parameter.
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "{...}" not in text, "HLO text still contains elided constants"
+    return text
+
+
+def _spec_json(specs):
+    return [{"name": s.name, "shape": list(s.shape)} for s in specs]
+
+
+def _shape_dtype(tree):
+    """Flatten a pytree of arrays into [(shape, dtype_str), ...]."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return [
+        {"shape": list(l.shape), "dtype": str(l.dtype)} for l in leaves
+    ]
+
+
+def lower_preset(cfg: model.ModelConfig, out_dir: str) -> dict:
+    """Lower all entry points for one preset; returns its manifest section."""
+    os.makedirs(out_dir, exist_ok=True)
+    b = cfg.batch_size
+    f32 = jnp.float32
+    x_spec = jax.ShapeDtypeStruct((b, cfg.in_channels, cfg.image_hw, cfg.image_hw), f32)
+    y_spec = jax.ShapeDtypeStruct((b,), jnp.int32)
+    lr_spec = jax.ShapeDtypeStruct((), f32)
+    act_shape = cfg.activation_shape()
+    act_spec = jax.ShapeDtypeStruct(act_shape, f32)
+
+    cspecs = model.client_specs(cfg)
+    sspecs = model.server_specs(cfg)
+    cp_spec = [jax.ShapeDtypeStruct(s.shape, f32) for s in cspecs]
+    sp_spec = [jax.ShapeDtypeStruct(s.shape, f32) for s in sspecs]
+
+    artifacts = {}
+
+    def emit(name, fn, *arg_specs):
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_shapes = _shape_dtype(
+            jax.eval_shape(fn, *arg_specs)
+        )
+        in_shapes = _shape_dtype(arg_specs)
+        artifacts[name] = {
+            "file": fname,
+            "inputs": in_shapes,
+            "outputs": out_shapes,
+            "hlo_lines": len(text.splitlines()),
+        }
+        print(f"  {name:<12} {len(text.splitlines()):>6} HLO lines "
+              f"{len(in_shapes):>3} in {len(out_shapes):>3} out")
+
+    emit("init", functools.partial(model.entry_init, cfg))
+    emit(
+        "client_fwd",
+        lambda cp, x: model.entry_client_fwd(cfg, cp, x),
+        cp_spec,
+        x_spec,
+    )
+    emit(
+        "server_step",
+        lambda sp, sm, a, y, lr: model.entry_server_step(cfg, sp, sm, a, y, lr),
+        sp_spec,
+        sp_spec,
+        act_spec,
+        y_spec,
+        lr_spec,
+    )
+    emit(
+        "client_step",
+        lambda cp, cm, x, g, lr: model.entry_client_step(cfg, cp, cm, x, g, lr),
+        cp_spec,
+        cp_spec,
+        x_spec,
+        act_spec,
+        lr_spec,
+    )
+    emit("idct", model.entry_idct, act_spec)
+    emit(
+        "eval_step",
+        lambda cp, sp, x, y: model.entry_eval(cfg, cp, sp, x, y),
+        cp_spec,
+        sp_spec,
+        x_spec,
+        y_spec,
+    )
+
+    return {
+        "batch_size": b,
+        "in_channels": cfg.in_channels,
+        "image_hw": cfg.image_hw,
+        "num_classes": cfg.num_classes,
+        "activation_shape": list(act_shape),
+        "client_params": _spec_json(cspecs),
+        "server_params": _spec_json(sspecs),
+        "artifacts": artifacts,
+        "vmem_bytes_per_tile": dct_kernel.vmem_bytes_estimate(
+            act_shape[2], act_shape[3]
+        ),
+    }
+
+
+def write_golden(out_dir: str, seed: int = 2026):
+    """Cross-language test vectors for the Rust side."""
+    os.makedirs(out_dir, exist_ok=True)
+    rng = np.random.default_rng(seed)
+    cases = []
+    for shape in [(1, 2, 4, 4), (2, 3, 8, 8), (1, 1, 14, 14), (1, 2, 6, 10)]:
+        x = rng.standard_normal(shape).astype(np.float32)
+        y = np.asarray(dct_kernel.dct2_pallas(jnp.asarray(x)))
+        back = np.asarray(dct_kernel.idct2_pallas(jnp.asarray(y)))
+        cases.append(
+            {
+                "shape": list(shape),
+                "input": [float(v) for v in x.ravel()],
+                "dct": [float(v) for v in y.ravel()],
+                "idct_roundtrip_max_err": float(np.abs(back - x).max()),
+            }
+        )
+    zz = {
+        f"{m}x{n}": [int(i) for i in ref.zigzag_indices(m, n)]
+        for (m, n) in [(4, 4), (8, 8), (14, 14), (3, 5), (16, 16)]
+    }
+    afd = []
+    for _ in range(6):
+        m, n = int(rng.integers(2, 10)), int(rng.integers(2, 10))
+        plane = rng.standard_normal((m, n)).astype(np.float32)
+        plane *= np.exp(-0.3 * np.arange(m * n).reshape(m, n) / (m * n) * 10)
+        order = ref.zigzag_indices(m, n)
+        seq = plane.ravel()[order]
+        theta = float(rng.choice([0.5, 0.7, 0.9, 0.95]))
+        afd.append(
+            {
+                "m": m,
+                "n": n,
+                "plane": [float(v) for v in plane.ravel()],
+                "theta": theta,
+                "k_star": ref.afd_split_point(seq, theta),
+            }
+        )
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump({"dct_cases": cases, "zigzag": zz, "afd_cases": afd}, f)
+    print(f"  golden vectors -> {out_dir}/golden.json")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--presets", default="mnist,ham")
+    args = ap.parse_args()
+
+    manifest = {"version": 1, "presets": {}}
+    for name in args.presets.split(","):
+        cfg = model.PRESETS[name.strip()]
+        print(f"lowering preset '{name}' "
+              f"(batch {cfg.batch_size}, act {cfg.activation_shape()})")
+        manifest["presets"][name] = lower_preset(
+            cfg, os.path.join(args.out_dir, name)
+        )
+    write_golden(os.path.join(args.out_dir, "golden"))
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest -> {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

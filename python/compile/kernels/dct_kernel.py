@@ -1,0 +1,126 @@
+"""L1: the batched per-channel 2-D DCT as a Pallas kernel.
+
+The paper's compute hot-spot on the wire path is the frequency transform of
+the smashed data (AFD step 1, Eq. 1). On GPU the authors run it as CUDA
+tensor ops; re-thought for TPU (DESIGN.md section "Hardware-Adaptation"):
+
+* the 2-D DCT factorizes into two dense matmuls per channel,
+  ``D_M @ X @ D_N^T`` -- an MXU (systolic array) workload;
+* the grid iterates over the flattened (batch x channel) planes; BlockSpec
+  keeps one ``M x N`` plane plus both basis matrices resident in VMEM per
+  grid step (< 3 KiB for 14x14 f32 -- far under the ~16 MiB VMEM budget,
+  see ``vmem_bytes_estimate``), so there are no HBM round-trips between the
+  two matmuls;
+* both matmuls accumulate in f32 via ``preferred_element_type`` so the
+  kernel is bfloat16-input ready on real MXU hardware.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO which runs on any backend
+and is bit-compatible with the ref oracle. On a real TPU the same
+``pallas_call`` compiles with ``interpret=False`` unchanged.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _dct2_kernel_grid(x_ref, dm_ref, dnt_ref, o_ref):
+    """One grid step: transform one (M, N) plane. All refs live in VMEM."""
+    x = x_ref[0]  # (M, N)
+    # tmp = D_M @ X  -- MXU matmul 1
+    tmp = jnp.dot(dm_ref[...], x, preferred_element_type=jnp.float32)
+    # out = tmp @ D_N^T -- MXU matmul 2
+    o_ref[0] = jnp.dot(tmp, dnt_ref[...], preferred_element_type=jnp.float32)
+
+
+def _dct2_kernel_block(x_ref, dm_ref, dnt_ref, o_ref):
+    """Single-block form: transform all (B*C) planes with batched matmuls.
+
+    Used for the AOT/CPU path. The grid form (`_dct2_kernel_grid`) lowers
+    interpret-mode to an HLO while-loop with dynamic-update-slice, which
+    xla_extension 0.5.1 (the version the rust `xla` crate binds) parses but
+    executes incorrectly (all-zero output buffers). The single-block form
+    lowers to plain dot_generals — identical math, and on a real TPU the
+    grid form is what you would compile (see DESIGN.md
+    §Hardware-Adaptation).
+    """
+    x = x_ref[...]  # (BC, M, N)
+    tmp = jnp.einsum(
+        "um,bmn->bun", dm_ref[...], x, preferred_element_type=jnp.float32
+    )
+    o_ref[...] = jnp.einsum(
+        "bun,vn->buv", tmp, dnt_ref[...].T, preferred_element_type=jnp.float32
+    )
+
+
+#: Set SLFAC_PALLAS_GRID=1 to lower the per-plane grid variant (real-TPU
+#: shape; not executable by the CPU xla_extension 0.5.1 runtime — see
+#: `_dct2_kernel_block`).
+USE_GRID = os.environ.get("SLFAC_PALLAS_GRID", "0") == "1"
+
+
+def _transform(x: jnp.ndarray, dm: jnp.ndarray, dnt: jnp.ndarray) -> jnp.ndarray:
+    """Apply the kernel over (B, C, M, N)."""
+    b, c, m, n = x.shape
+    flat = x.reshape(b * c, m, n)
+    if USE_GRID:
+        out = pl.pallas_call(
+            _dct2_kernel_grid,
+            grid=(b * c,),
+            in_specs=[
+                pl.BlockSpec((1, m, n), lambda i: (i, 0, 0)),  # one plane/step
+                pl.BlockSpec((m, m), lambda i: (0, 0)),        # D_M resident
+                pl.BlockSpec((n, n), lambda i: (0, 0)),        # D_N^T resident
+            ],
+            out_specs=pl.BlockSpec((1, m, n), lambda i: (i, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((b * c, m, n), jnp.float32),
+            interpret=True,
+        )(flat, dm, dnt)
+    else:
+        out = pl.pallas_call(
+            _dct2_kernel_block,
+            out_shape=jax.ShapeDtypeStruct((b * c, m, n), jnp.float32),
+            interpret=True,  # CPU-PJRT compatible; see module docstring
+        )(flat, dm, dnt)
+    return out.reshape(b, c, m, n)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def dct2_pallas(x: jnp.ndarray) -> jnp.ndarray:
+    """Forward 2-D DCT-II of every channel of a (B, C, M, N) tensor."""
+    m, n = x.shape[-2], x.shape[-1]
+    dm = ref.dct_matrix(m)
+    dn = ref.dct_matrix(n)
+    return _transform(x, dm, dn.T)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def idct2_pallas(y: jnp.ndarray) -> jnp.ndarray:
+    """Inverse (DCT-III): D_M^T @ Y @ D_N."""
+    m, n = y.shape[-2], y.shape[-1]
+    dm = ref.dct_matrix(m)
+    dn = ref.dct_matrix(n)
+    return _transform(y, dm.T, dn)
+
+
+def vmem_bytes_estimate(m: int, n: int) -> int:
+    """Per-grid-step VMEM footprint (bytes): one plane in, one out, both
+    basis matrices, plus the (M, N) matmul temporary. Used by DESIGN.md's
+    real-TPU estimate and checked in the perf tests."""
+    plane = m * n * 4
+    return 2 * plane + (m * m + n * n) * 4 + plane
+
+
+def mxu_utilization_estimate(m: int, n: int) -> float:
+    """Fraction of a 128x128 MXU pass the two matmuls fill (upper bound on
+    achievable MXU efficiency for one plane; batching planes into the grid
+    amortizes the systolic pipeline fill)."""
+    return min(1.0, m / 128.0) * min(1.0, n / 128.0)

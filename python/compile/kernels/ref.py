@@ -1,0 +1,91 @@
+"""Pure-jnp reference implementations (the correctness oracles).
+
+Everything the Pallas kernel (dct_kernel.py) and the Rust frequency stack
+must agree with is defined here once, in the most transparent form:
+
+* ``dct_matrix(n)``   -- orthonormal DCT-II basis matrix (paper Eq. 1-2).
+* ``dct2`` / ``idct2`` -- per-channel 2-D DCT-II / DCT-III over (B, C, M, N).
+* ``zigzag_indices``  -- JPEG-style anti-diagonal scan order for MxN planes.
+* ``spectral_energy`` / ``cumulative_energy_ratio`` -- Eq. 3 / Eq. 4.
+* ``afd_split_point`` -- the smallest k* with ratio >= theta (Algorithm 1).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def dct_matrix(n: int) -> jnp.ndarray:
+    """Orthonormal DCT-II basis: D[u, m] = a(u) cos(pi/n (m+1/2) u).
+
+    Matches paper Eq. 1-2 (written there 1-based; this is the standard
+    0-based form). D is orthogonal: D @ D.T = I.
+    """
+    m = np.arange(n)
+    u = np.arange(n)[:, None]
+    mat = np.cos(np.pi / n * (m + 0.5) * u)
+    mat[0] *= np.sqrt(1.0 / n)
+    mat[1:] *= np.sqrt(2.0 / n)
+    return jnp.asarray(mat, dtype=jnp.float32)
+
+
+def dct2(x: jnp.ndarray) -> jnp.ndarray:
+    """2-D DCT-II of each channel of a (..., M, N) array: D_M @ X @ D_N^T."""
+    m, n = x.shape[-2], x.shape[-1]
+    dm = dct_matrix(m)
+    dn = dct_matrix(n)
+    return jnp.einsum("um,...mn,vn->...uv", dm, x, dn)
+
+
+def idct2(y: jnp.ndarray) -> jnp.ndarray:
+    """Inverse (DCT-III) of each channel: D_M^T @ Y @ D_N."""
+    m, n = y.shape[-2], y.shape[-1]
+    dm = dct_matrix(m)
+    dn = dct_matrix(n)
+    return jnp.einsum("mu,...uv,nv->...mn", dm.T, y, dn.T)
+
+
+def zigzag_indices(m: int, n: int) -> np.ndarray:
+    """Row-major indices of an MxN plane in zig-zag (low->high freq) order.
+
+    Even anti-diagonals are walked bottom-left->top-right, odd ones the
+    other way (JPEG convention, generalized to rectangles). Must match
+    ``slfac::freq::ZigZag`` exactly -- cross-checked by the golden vectors.
+    """
+    out = []
+    for d in range(m + n - 1):
+        r_lo = max(0, d - n + 1)
+        r_hi = min(d, m - 1)
+        rows = range(r_hi, r_lo - 1, -1) if d % 2 == 0 else range(r_lo, r_hi + 1)
+        for r in rows:
+            out.append(r * n + (d - r))
+    return np.asarray(out, dtype=np.int64)
+
+
+def spectral_energy(coeffs: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 3: E = X^2 elementwise."""
+    return coeffs * coeffs
+
+
+def cumulative_energy_ratio(coeffs_zigzag: np.ndarray) -> np.ndarray:
+    """Eq. 4 over an already-zig-zag-ordered 1-D coefficient sequence."""
+    e = np.asarray(coeffs_zigzag, dtype=np.float64) ** 2
+    total = e.sum()
+    if total <= 0:
+        return np.ones_like(e)
+    return np.cumsum(e) / total
+
+
+def afd_split_point(coeffs_zigzag: np.ndarray, theta: float) -> int:
+    """Smallest k* (1-based count) with cumulative ratio >= theta.
+
+    All-zero planes default to k* = 1 (the DC term), matching the Rust
+    implementation (``slfac::freq::afd_channel``).
+    """
+    e = np.asarray(coeffs_zigzag, dtype=np.float64) ** 2
+    if e.sum() <= 0:
+        return 1
+    r = cumulative_energy_ratio(coeffs_zigzag)
+    idx = np.nonzero(r >= theta - 1e-15)[0]
+    return int(idx[0]) + 1 if idx.size else len(coeffs_zigzag)

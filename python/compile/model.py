@@ -1,0 +1,313 @@
+"""L2: the split ResNet in pure JAX (no flax), plus loss/optimizer.
+
+The paper splits ResNet-18 after the "first three layers" (stem + first
+residual stage) -- client side -- leaving the rest on the server. We follow
+the same cut with a width-reduced ResNet sized for CPU-PJRT execution
+(DESIGN.md section 3): the cut-layer tensor per sample keeps the (C, M, N)
+layout the codec operates on, which is what matters for reproduction.
+
+Normalization: GroupNorm instead of BatchNorm. The AOT artifacts must be
+pure functions (no running statistics flowing between rust-held state and
+the graph), and GroupNorm is the standard stats-free substitute in split /
+federated settings where client batches are small and non-IID.
+
+Parameters are **flat lists of arrays** with an explicit spec (name, shape)
+so the lowering order is deterministic and the Rust manifest can describe
+every HLO parameter. The optimizer is SGD with momentum, also expressed as
+pure functions over flat lists.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import dct_kernel
+
+
+# --------------------------------------------------------------------------
+# primitive layers
+# --------------------------------------------------------------------------
+
+def conv(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """3x3 (or 1x1) SAME convolution, NCHW activations, HWIO weights."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NCHW", "HWIO", "NCHW"),
+    )
+
+
+def group_norm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray, groups: int = 4) -> jnp.ndarray:
+    """GroupNorm over channel groups of an NCHW tensor."""
+    b, c, h, w = x.shape
+    g = min(groups, c)
+    xg = x.reshape(b, g, c // g, h, w)
+    mean = xg.mean(axis=(2, 3, 4), keepdims=True)
+    var = xg.var(axis=(2, 3, 4), keepdims=True)
+    xg = (xg - mean) / jnp.sqrt(var + 1e-5)
+    x = xg.reshape(b, c, h, w)
+    return x * gamma.reshape(1, c, 1, 1) + beta.reshape(1, c, 1, 1)
+
+
+# --------------------------------------------------------------------------
+# parameter specs
+# --------------------------------------------------------------------------
+
+class ParamSpec(NamedTuple):
+    """One parameter tensor: stable name + shape."""
+
+    name: str
+    shape: tuple
+
+
+def _conv_spec(name, kh, kw, cin, cout):
+    return ParamSpec(name, (kh, kw, cin, cout))
+
+
+def _gn_spec(name, c):
+    return [ParamSpec(f"{name}.gamma", (c,)), ParamSpec(f"{name}.beta", (c,))]
+
+
+def _block_specs(name: str, cin: int, cout: int, stride: int):
+    """Residual block: conv-gn-relu-conv-gn + (projection if shape changes)."""
+    specs = [
+        _conv_spec(f"{name}.conv1", 3, 3, cin, cout),
+        *_gn_spec(f"{name}.gn1", cout),
+        _conv_spec(f"{name}.conv2", 3, 3, cout, cout),
+        *_gn_spec(f"{name}.gn2", cout),
+    ]
+    if stride != 1 or cin != cout:
+        specs.append(_conv_spec(f"{name}.proj", 1, 1, cin, cout))
+    return specs
+
+
+class ModelConfig(NamedTuple):
+    """Architecture + workload description for one dataset preset."""
+
+    name: str
+    in_channels: int
+    image_hw: int
+    num_classes: int
+    base_width: int
+    batch_size: int
+
+    @property
+    def cut_hw(self) -> int:
+        """Spatial size of the cut-layer activations (stem stride 2)."""
+        return self.image_hw // 2
+
+    @property
+    def cut_channels(self) -> int:
+        return self.base_width
+
+    def activation_shape(self):
+        """Shape of the smashed data: (B, C, M, N)."""
+        return (self.batch_size, self.cut_channels, self.cut_hw, self.cut_hw)
+
+
+MNIST = ModelConfig("mnist", 1, 28, 10, 16, 32)
+HAM = ModelConfig("ham", 3, 32, 7, 16, 32)
+PRESETS = {"mnist": MNIST, "ham": HAM}
+
+
+def client_specs(cfg: ModelConfig):
+    """Client sub-model: stem conv (stride 2) + first residual block."""
+    w = cfg.base_width
+    return [
+        _conv_spec("stem.conv", 3, 3, cfg.in_channels, w),
+        *_gn_spec("stem.gn", w),
+        *_block_specs("cblock", w, w, 1),
+    ]
+
+
+def server_specs(cfg: ModelConfig):
+    """Server sub-model: two down-sampling stages + classifier head."""
+    w = cfg.base_width
+    return [
+        *_block_specs("sblock1", w, 2 * w, 2),
+        *_block_specs("sblock2", 2 * w, 4 * w, 2),
+        ParamSpec("fc.w", (4 * w, cfg.num_classes)),
+        ParamSpec("fc.b", (cfg.num_classes,)),
+    ]
+
+
+def init_params(specs, key):
+    """He-normal conv init, unit gamma / zero beta, zero fc bias."""
+    params = []
+    for spec in specs:
+        key, sub = jax.random.split(key)
+        if spec.name.endswith(".gamma"):
+            params.append(jnp.ones(spec.shape, jnp.float32))
+        elif spec.name.endswith((".beta", ".b")):
+            params.append(jnp.zeros(spec.shape, jnp.float32))
+        elif spec.name.endswith(".w"):  # fc
+            fan_in = spec.shape[0]
+            params.append(
+                jax.random.normal(sub, spec.shape, jnp.float32)
+                * np.sqrt(2.0 / fan_in)
+            )
+        else:  # conv HWIO
+            fan_in = spec.shape[0] * spec.shape[1] * spec.shape[2]
+            params.append(
+                jax.random.normal(sub, spec.shape, jnp.float32)
+                * np.sqrt(2.0 / fan_in)
+            )
+    return params
+
+
+# --------------------------------------------------------------------------
+# forward passes (params consumed positionally from flat lists)
+# --------------------------------------------------------------------------
+
+class _P:
+    """Sequential reader over a flat parameter list."""
+
+    def __init__(self, params):
+        self.params = list(params)
+        self.i = 0
+
+    def take(self, n=1):
+        out = self.params[self.i : self.i + n]
+        self.i += n
+        return out[0] if n == 1 else out
+
+    def done(self):
+        assert self.i == len(self.params), f"consumed {self.i}/{len(self.params)}"
+
+
+def _block_fwd(p: _P, x, cin, cout, stride):
+    w1 = p.take()
+    g1, b1 = p.take(2)
+    w2 = p.take()
+    g2, b2 = p.take(2)
+    h = jax.nn.relu(group_norm(conv(x, w1, stride), g1, b1))
+    h = group_norm(conv(h, w2, 1), g2, b2)
+    if stride != 1 or cin != cout:
+        x = conv(x, p.take(), stride)
+    return jax.nn.relu(x + h)
+
+
+def client_forward(cfg: ModelConfig, client_params, x):
+    """Client sub-model: image batch -> cut-layer activations (B,C,M,N)."""
+    p = _P(client_params)
+    w = cfg.base_width
+    h = jax.nn.relu(group_norm(conv(x, p.take(), 2), *p.take(2)))
+    h = _block_fwd(p, h, w, w, 1)
+    p.done()
+    return h
+
+
+def server_forward(cfg: ModelConfig, server_params, act):
+    """Server sub-model: activations -> logits."""
+    p = _P(server_params)
+    w = cfg.base_width
+    h = _block_fwd(p, act, w, 2 * w, 2)
+    h = _block_fwd(p, h, 2 * w, 4 * w, 2)
+    h = h.mean(axis=(2, 3))  # global average pool
+    fw, fb = p.take(2)
+    p.done()
+    return h @ fw + fb
+
+
+def cross_entropy(logits, labels):
+    """Mean softmax cross-entropy; labels are int32 class ids."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+
+
+def correct_count(logits, labels):
+    """Number of correct top-1 predictions (int32)."""
+    return (jnp.argmax(logits, axis=-1) == labels).sum().astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# optimizer (SGD + momentum over flat lists)
+# --------------------------------------------------------------------------
+
+def sgd_momentum(params, moms, grads, lr, mu=0.9):
+    """m' = mu m + g ; p' = p - lr m'. Returns (new_params, new_moms)."""
+    new_moms = [mu * m + g for m, g in zip(moms, grads)]
+    new_params = [p - lr * m for p, m in zip(params, new_moms)]
+    return new_params, new_moms
+
+
+# --------------------------------------------------------------------------
+# AOT entry points (each lowered to one HLO artifact by aot.py)
+# --------------------------------------------------------------------------
+
+def entry_client_fwd(cfg: ModelConfig, client_params, x):
+    """-> (activations, dct_coeffs). The DCT runs in-graph via the Pallas
+    kernel so the wire path never recomputes it host-side."""
+    act = client_forward(cfg, client_params, x)
+    return act, dct_kernel.dct2_pallas(act)
+
+
+def entry_server_step(cfg: ModelConfig, server_params, server_moms, act, labels, lr):
+    """Server training step on (decompressed) activations.
+
+    -> (new_server_params..., new_moms..., loss, correct, grad_act,
+        grad_act_dct). The gradient w.r.t. the activations is returned in
+    both domains: spatial (for spatial-domain baseline codecs) and DCT (for
+    SL-FAC's FQC on the downlink), computed by the same Pallas kernel.
+    """
+
+    def loss_fn(sp, a):
+        logits = server_forward(cfg, sp, a)
+        return cross_entropy(logits, labels), logits
+
+    (loss, logits), grads = jax.value_and_grad(loss_fn, argnums=(0, 1), has_aux=True)(
+        server_params, act
+    )
+    gsp, gact = grads
+    new_sp, new_sm = sgd_momentum(server_params, server_moms, gsp, lr)
+    return (
+        new_sp,
+        new_sm,
+        loss,
+        correct_count(logits, labels),
+        gact,
+        dct_kernel.dct2_pallas(gact),
+    )
+
+
+def entry_client_step(cfg: ModelConfig, client_params, client_moms, x, grad_act, lr):
+    """Client backward + update given the (decompressed) activation gradient.
+
+    Recomputes the client forward (standard SL: the client kept no
+    intermediate state between the two phases of a step) and pulls the
+    cotangent through with vjp. -> (new_client_params..., new_moms...).
+    """
+
+    def fwd(cp):
+        return client_forward(cfg, cp, x)
+
+    _, vjp = jax.vjp(fwd, client_params)
+    (gcp,) = vjp(grad_act)
+    new_cp, new_cm = sgd_momentum(client_params, client_moms, gcp, lr)
+    return new_cp, new_cm
+
+
+def entry_idct(coeffs):
+    """Decompression tail: coefficient planes -> spatial tensor."""
+    return dct_kernel.idct2_pallas(coeffs)
+
+
+def entry_eval(cfg: ModelConfig, client_params, server_params, x, labels):
+    """Full-model evaluation on one batch -> (mean loss, correct count)."""
+    act = client_forward(cfg, client_params, x)
+    logits = server_forward(cfg, server_params, act)
+    return cross_entropy(logits, labels), correct_count(logits, labels)
+
+
+def entry_init(cfg: ModelConfig, seed: int = 0):
+    """-> (client_params..., server_params...). Momenta start at zero and
+    are materialized Rust-side (manifest carries the shapes)."""
+    key = jax.random.PRNGKey(seed)
+    kc, ks = jax.random.split(key)
+    return init_params(client_specs(cfg), kc), init_params(server_specs(cfg), ks)

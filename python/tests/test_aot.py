@@ -1,0 +1,82 @@
+"""AOT path tests: the HLO-text lowering contract the Rust runtime relies on."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+def test_to_hlo_text_has_full_constants():
+    """print_large_constants must be in effect: elided '{...}' placeholders
+    parse back as ZEROS in xla_extension 0.5.1 and silently zero the DCT
+    bases (the root cause of a real bug during bring-up)."""
+    lowered = jax.jit(model.entry_idct).lower(
+        jax.ShapeDtypeStruct((2, 2, 8, 8), jnp.float32)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "{...}" not in text
+    # the 8x8 orthonormal DCT basis contains 1/sqrt(8) = 0.35355...
+    assert "0.35" in text
+
+
+def test_lowered_entry_is_tuple_rooted():
+    lowered = jax.jit(model.entry_idct).lower(
+        jax.ShapeDtypeStruct((1, 1, 4, 4), jnp.float32)
+    )
+    text = aot.to_hlo_text(lowered)
+    # return_tuple=True ⇒ the entry root is a tuple
+    assert "ROOT tuple" in text
+
+
+def test_lower_preset_writes_all_artifacts(tmp_path):
+    cfg = model.ModelConfig("tiny", 1, 8, 3, 4, 4)  # small & fast
+    section = aot.lower_preset(cfg, str(tmp_path))
+    expected = {"init", "client_fwd", "server_step", "client_step", "idct", "eval_step"}
+    assert set(section["artifacts"].keys()) == expected
+    for name, sig in section["artifacts"].items():
+        path = tmp_path / sig["file"]
+        assert path.exists(), name
+        text = path.read_text()
+        assert "{...}" not in text, f"{name} has elided constants"
+    # manifest shape info consistent with the config
+    assert section["activation_shape"] == [4, 4, 4, 4]
+    assert len(section["client_params"]) == len(model.client_specs(cfg))
+    assert len(section["server_params"]) == len(model.server_specs(cfg))
+    # io signatures: client_fwd takes params + x, returns act + dct
+    cf = section["artifacts"]["client_fwd"]
+    assert len(cf["inputs"]) == len(model.client_specs(cfg)) + 1
+    assert len(cf["outputs"]) == 2
+    assert cf["outputs"][0]["shape"] == section["activation_shape"]
+
+
+def test_write_golden_is_deterministic(tmp_path):
+    d1 = tmp_path / "g1"
+    d2 = tmp_path / "g2"
+    aot.write_golden(str(d1), seed=7)
+    aot.write_golden(str(d2), seed=7)
+    assert (d1 / "golden.json").read_text() == (d2 / "golden.json").read_text()
+    g = json.loads((d1 / "golden.json").read_text())
+    assert g["dct_cases"] and g["zigzag"] and g["afd_cases"]
+    for case in g["dct_cases"]:
+        assert case["idct_roundtrip_max_err"] < 1e-3
+
+
+def test_server_step_signature_order(tmp_path):
+    """The Rust trainer slices server_step outputs positionally:
+    [sp' x n][sm' x n][loss][correct][gact][gact_dct]."""
+    cfg = model.ModelConfig("tiny2", 1, 8, 3, 4, 4)
+    section = aot.lower_preset(cfg, str(tmp_path))
+    ss = section["artifacts"]["server_step"]
+    n = len(model.server_specs(cfg))
+    outs = ss["outputs"]
+    assert len(outs) == 2 * n + 4
+    assert outs[2 * n]["shape"] == []          # loss scalar
+    assert outs[2 * n + 1]["dtype"] == "int32"  # correct count
+    assert outs[2 * n + 2]["shape"] == section["activation_shape"]  # gact
+    assert outs[2 * n + 3]["shape"] == section["activation_shape"]  # gact_dct

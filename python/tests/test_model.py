@@ -1,0 +1,156 @@
+"""L2 tests: split-model shapes, gradient flow, optimizer semantics, and a
+short end-to-end training sanity check through the *exact* entry points the
+AOT artifacts freeze."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+
+
+@pytest.fixture(scope="module", params=["mnist", "ham"])
+def cfg(request):
+    return model.PRESETS[request.param]
+
+
+def _data(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(
+        rng.standard_normal(
+            (cfg.batch_size, cfg.in_channels, cfg.image_hw, cfg.image_hw)
+        ),
+        dtype=jnp.float32,
+    )
+    y = jnp.asarray(rng.integers(0, cfg.num_classes, cfg.batch_size), dtype=jnp.int32)
+    return x, y
+
+
+def _init(cfg, seed=0):
+    return model.entry_init(cfg, seed)
+
+
+def test_param_specs_match_init_shapes(cfg):
+    cp, sp = _init(cfg)
+    cspecs, sspecs = model.client_specs(cfg), model.server_specs(cfg)
+    assert len(cp) == len(cspecs)
+    assert len(sp) == len(sspecs)
+    for p, s in zip(cp + sp, cspecs + sspecs):
+        assert p.shape == s.shape, s.name
+
+
+def test_client_forward_shape(cfg):
+    cp, _ = _init(cfg)
+    x, _ = _data(cfg)
+    act = model.client_forward(cfg, cp, x)
+    assert act.shape == cfg.activation_shape()
+    assert bool(jnp.all(jnp.isfinite(act)))
+
+
+def test_client_fwd_entry_returns_act_and_dct(cfg):
+    from compile.kernels import ref
+
+    cp, _ = _init(cfg)
+    x, _ = _data(cfg)
+    act, act_dct = model.entry_client_fwd(cfg, cp, x)
+    np.testing.assert_allclose(
+        np.asarray(act_dct), np.asarray(ref.dct2(act)), atol=1e-3
+    )
+
+
+def test_server_forward_logits(cfg):
+    cp, sp = _init(cfg)
+    x, _ = _data(cfg)
+    act = model.client_forward(cfg, cp, x)
+    logits = model.server_forward(cfg, sp, act)
+    assert logits.shape == (cfg.batch_size, cfg.num_classes)
+
+
+def test_server_step_updates_and_grad_shapes(cfg):
+    cp, sp = _init(cfg)
+    sm = [jnp.zeros_like(p) for p in sp]
+    x, y = _data(cfg)
+    act = model.client_forward(cfg, cp, x)
+    new_sp, new_sm, loss, correct, gact, gact_dct = model.entry_server_step(
+        cfg, sp, sm, act, y, jnp.float32(0.05)
+    )
+    assert gact.shape == act.shape
+    assert gact_dct.shape == act.shape
+    assert float(loss) > 0
+    assert 0 <= int(correct) <= cfg.batch_size
+    # parameters actually moved
+    deltas = [float(jnp.abs(a - b).max()) for a, b in zip(sp, new_sp)]
+    assert max(deltas) > 0
+    # momentum buffers now hold the gradients
+    assert all(m.shape == p.shape for m, p in zip(new_sm, new_sp))
+
+
+def test_client_step_moves_params(cfg):
+    cp, sp = _init(cfg)
+    cm = [jnp.zeros_like(p) for p in cp]
+    sm = [jnp.zeros_like(p) for p in sp]
+    x, y = _data(cfg)
+    act = model.client_forward(cfg, cp, x)
+    _, _, _, _, gact, _ = model.entry_server_step(cfg, sp, sm, act, y, jnp.float32(0.05))
+    new_cp, new_cm = model.entry_client_step(cfg, cp, cm, x, gact, jnp.float32(0.05))
+    deltas = [float(jnp.abs(a - b).max()) for a, b in zip(cp, new_cp)]
+    assert max(deltas) > 0
+    assert len(new_cm) == len(cp)
+
+
+def test_eval_entry_consistent_with_manual(cfg):
+    cp, sp = _init(cfg)
+    x, y = _data(cfg)
+    loss, correct = model.entry_eval(cfg, cp, sp, x, y)
+    act = model.client_forward(cfg, cp, x)
+    logits = model.server_forward(cfg, sp, act)
+    np.testing.assert_allclose(
+        float(loss), float(model.cross_entropy(logits, y)), atol=1e-6
+    )
+    assert int(correct) == int(model.correct_count(logits, y))
+
+
+def test_sgd_momentum_semantics():
+    p = [jnp.asarray([1.0, 2.0])]
+    m = [jnp.asarray([0.5, 0.0])]
+    g = [jnp.asarray([1.0, -1.0])]
+    new_p, new_m = model.sgd_momentum(p, m, g, lr=0.1, mu=0.9)
+    np.testing.assert_allclose(np.asarray(new_m[0]), [1.45, -1.0], atol=1e-6)
+    np.testing.assert_allclose(np.asarray(new_p[0]), [1.0 - 0.145, 2.0 + 0.1], atol=1e-6)
+
+
+def test_short_training_reduces_loss():
+    """A few full split steps on a tiny learnable problem must reduce loss —
+    this is the L2 gradient-flow smoke test that guards the artifacts."""
+    cfg = model.MNIST
+    cp, sp = _init(cfg, seed=1)
+    cm = [jnp.zeros_like(p) for p in cp]
+    sm = [jnp.zeros_like(p) for p in sp]
+    # one fixed batch, overfit it
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(
+        rng.standard_normal((cfg.batch_size, 1, 28, 28)), dtype=jnp.float32
+    )
+    y = jnp.asarray(rng.integers(0, 10, cfg.batch_size), dtype=jnp.int32)
+    lr = jnp.float32(0.05)
+
+    losses = []
+    for _ in range(8):
+        act = model.client_forward(cfg, cp, x)
+        sp, sm, loss, _, gact, _ = model.entry_server_step(cfg, sp, sm, act, y, lr)
+        cp, cm = model.entry_client_step(cfg, cp, cm, x, gact, lr)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.9, losses
+
+
+def test_group_norm_normalizes():
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal((2, 8, 6, 6)) * 10 + 5, dtype=jnp.float32)
+    gamma = jnp.ones(8)
+    beta = jnp.zeros(8)
+    out = model.group_norm(x, gamma, beta, groups=4)
+    # per-(sample, group) stats ~ (0, 1)
+    g = np.asarray(out).reshape(2, 4, 2, 6, 6)
+    np.testing.assert_allclose(g.mean(axis=(2, 3, 4)), 0.0, atol=1e-4)
+    np.testing.assert_allclose(g.std(axis=(2, 3, 4)), 1.0, atol=1e-2)

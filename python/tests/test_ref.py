@@ -1,0 +1,75 @@
+"""Oracle self-tests: the pure-jnp reference must satisfy the mathematical
+properties the paper relies on before it can judge the Pallas kernel."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import ref
+
+
+@pytest.mark.parametrize("n", [1, 2, 4, 7, 14, 16, 28])
+def test_dct_matrix_orthonormal(n):
+    d = np.asarray(ref.dct_matrix(n), dtype=np.float64)
+    np.testing.assert_allclose(d @ d.T, np.eye(n), atol=1e-5)
+
+
+def test_dct2_constant_concentrates_at_dc():
+    x = jnp.full((1, 1, 8, 8), 3.0)
+    y = np.asarray(ref.dct2(x))[0, 0]
+    assert abs(y[0, 0] - 3.0 * 8.0) < 1e-4  # c * sqrt(M*N)
+    assert np.abs(y).sum() - abs(y[0, 0]) < 1e-4
+
+
+@pytest.mark.parametrize("shape", [(1, 1, 4, 4), (2, 3, 8, 8), (1, 2, 14, 10)])
+def test_dct2_idct2_roundtrip(shape):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+    back = ref.idct2(ref.dct2(x))
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x), atol=1e-4)
+
+
+def test_dct2_preserves_energy():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((2, 4, 8, 8)), dtype=jnp.float32)
+    ex = float((x * x).sum())
+    y = ref.dct2(x)
+    ey = float((y * y).sum())
+    assert abs(ex - ey) / ex < 1e-5
+
+
+@pytest.mark.parametrize("m,n", [(1, 1), (4, 4), (8, 8), (3, 5), (5, 3), (14, 14)])
+def test_zigzag_is_permutation(m, n):
+    idx = ref.zigzag_indices(m, n)
+    assert sorted(idx.tolist()) == list(range(m * n))
+
+
+def test_zigzag_8x8_matches_jpeg_prefix():
+    idx = ref.zigzag_indices(8, 8)
+    assert idx[:10].tolist() == [0, 1, 8, 16, 9, 2, 3, 10, 17, 24]
+
+
+def test_cumulative_ratio_monotone_and_bounded():
+    rng = np.random.default_rng(3)
+    seq = rng.standard_normal(32)
+    r = ref.cumulative_energy_ratio(seq)
+    assert np.all(np.diff(r) >= -1e-12)
+    assert abs(r[-1] - 1.0) < 1e-9
+
+
+def test_afd_split_point_threshold_semantics():
+    seq = np.array([10.0, 1.0, 0.5, 0.1, 0.01])
+    k = ref.afd_split_point(seq, 0.9)
+    r = ref.cumulative_energy_ratio(seq)
+    assert r[k - 1] >= 0.9
+    if k > 1:
+        assert r[k - 2] < 0.9
+
+
+def test_afd_zero_plane_defaults_to_one():
+    assert ref.afd_split_point(np.zeros(16), 0.9) == 1
+
+
+def test_afd_theta_one_takes_all():
+    seq = np.ones(9)
+    assert ref.afd_split_point(seq, 1.0) == 9

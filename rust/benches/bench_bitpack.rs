@@ -1,0 +1,52 @@
+//! Bit-packing micro-benchmark — the innermost loop of every codec.
+//! §Perf (L3) target: well above 100 MB/s so packing never gates the wire.
+
+use slfac::bench::{black_box, Bencher};
+use slfac::quant::{pack_uniform, unpack_uniform, BitReader, BitWriter};
+use slfac::rng::Pcg32;
+
+fn main() {
+    let mut b = Bencher::new();
+    let n = 100_352; // one (32,16,14,14) tensor's element count
+    let mut rng = Pcg32::seeded(3);
+
+    for bits in [2u32, 4, 8, 12] {
+        let vals: Vec<u32> = (0..n).map(|_| rng.next_u32() & ((1 << bits) - 1)).collect();
+        let packed = pack_uniform(&vals, bits);
+        b.section(&format!("{bits}-bit, {n} values ({} B packed)", packed.len()));
+        b.bench_items(&format!("pack/{bits}bit"), n, || {
+            black_box(pack_uniform(black_box(&vals), bits));
+        });
+        b.bench_items(&format!("unpack/{bits}bit"), n, || {
+            black_box(unpack_uniform(black_box(&packed), bits, n));
+        });
+    }
+
+    // mixed-width stream (the FQC case: per-channel widths differ)
+    b.section("mixed widths (FQC-style interleaving)");
+    let widths: Vec<u32> = (0..n).map(|i| if i % 196 < 20 { 8 } else { 2 }).collect();
+    let vals: Vec<u32> = widths
+        .iter()
+        .map(|&w| rng.next_u32() & ((1 << w) - 1))
+        .collect();
+    b.bench_items("pack/mixed", n, || {
+        let mut w = BitWriter::with_capacity(n);
+        for (&v, &bits) in vals.iter().zip(&widths) {
+            w.put(v, bits);
+        }
+        black_box(w.finish());
+    });
+    let mut w = BitWriter::new();
+    for (&v, &bits) in vals.iter().zip(&widths) {
+        w.put(v, bits);
+    }
+    let buf = w.finish();
+    b.bench_items("unpack/mixed", n, || {
+        let mut r = BitReader::new(black_box(&buf));
+        let mut acc = 0u32;
+        for &bits in &widths {
+            acc ^= r.get(bits);
+        }
+        black_box(acc);
+    });
+}

@@ -1,0 +1,64 @@
+//! Codec benchmark — the paper's communication-efficiency table, measured.
+//!
+//! For every codec: compression + decompression throughput on cut-layer
+//! tensors (the L3 wire-path hot spot), wire bytes, compression ratio, and
+//! reconstruction fidelity. These rows back EXPERIMENTS.md §Comm-volume
+//! and §Perf (L3).
+//!
+//! Run: `cargo bench --bench bench_codec` (SLFAC_BENCH_MS trims time).
+
+use slfac::bench::{black_box, Bencher};
+use slfac::codec::{self, CodecParams};
+use slfac::dct::Dct2d;
+
+fn main() {
+    let mut b = Bencher::new();
+    let params = CodecParams::default();
+
+    for shape in [[32usize, 16, 14, 14], [32, 16, 16, 16]] {
+        let raw_bytes = shape.iter().product::<usize>() * 4;
+        let x = codec::smooth_activations(&shape, 42);
+        let coeffs = Dct2d::forward_tensor(&x);
+        b.section(&format!(
+            "codec compress+decompress, activations {shape:?} ({} KiB raw)",
+            raw_bytes / 1024
+        ));
+        println!(
+            "{:<44} {:>12} {:>8} {:>9}",
+            "", "wire bytes", "ratio", "rel err"
+        );
+        for name in codec::ALL_CODECS {
+            let c = codec::by_name(name, &params).unwrap();
+            let input = if c.frequency_domain() { &coeffs } else { &x };
+            let payload = c.compress(input).unwrap();
+            let back = c.decompress(&payload).unwrap();
+            let err = if c.frequency_domain() {
+                Dct2d::inverse_tensor(&back).rel_l2_error(&x)
+            } else {
+                back.rel_l2_error(&x)
+            };
+
+            b.bench_bytes(&format!("{name}/compress"), raw_bytes, || {
+                black_box(c.compress(black_box(input)).unwrap());
+            });
+            b.bench_bytes(&format!("{name}/decompress"), raw_bytes, || {
+                black_box(c.decompress(black_box(&payload)).unwrap());
+            });
+            println!(
+                "{:<44} {:>12} {:>7.1}x {:>9.4}",
+                format!("  -> {name} wire stats"),
+                payload.wire_bytes(),
+                payload.compression_ratio(),
+                err
+            );
+        }
+    }
+
+    // end-to-end spatial round trip for the paper's method (includes DCT)
+    b.section("slfac full spatial roundtrip (incl. Rust DCT, standalone mode)");
+    let x = codec::smooth_activations(&[32, 16, 14, 14], 1);
+    let c = codec::by_name("slfac", &params).unwrap();
+    b.bench_bytes("slfac/spatial-roundtrip", x.numel() * 4, || {
+        black_box(codec::roundtrip_spatial(c.as_ref(), black_box(&x)).unwrap());
+    });
+}

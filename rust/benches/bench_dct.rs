@@ -1,0 +1,37 @@
+//! Rust DCT benchmark (the standalone-codec / golden-test path; the wire
+//! path runs the transform inside XLA via the Pallas kernel).
+//! §Perf (L1/L3 comparison): Rust matrix DCT vs plane sizes.
+
+use slfac::bench::{black_box, Bencher};
+use slfac::dct::Dct2d;
+use slfac::rng::Pcg32;
+use slfac::tensor::Tensor;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Pcg32::seeded(5);
+
+    for (m, n) in [(8usize, 8usize), (14, 14), (16, 16), (28, 28)] {
+        let x: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+        let mut t = Dct2d::new(m, n);
+        let mut out = vec![0.0f32; m * n];
+        b.section(&format!("single plane {m}x{n}"));
+        b.bench_items(&format!("forward/{m}x{n}"), m * n, || {
+            t.forward(black_box(&x), &mut out);
+            black_box(&out);
+        });
+        b.bench_items(&format!("inverse/{m}x{n}"), m * n, || {
+            t.inverse(black_box(&x), &mut out);
+            black_box(&out);
+        });
+    }
+
+    b.section("full activation tensor (32,16,14,14)");
+    let x = Tensor::randn(&[32, 16, 14, 14], 1.0, &mut rng);
+    b.bench_bytes("forward_tensor", x.numel() * 4, || {
+        black_box(Dct2d::forward_tensor(black_box(&x)));
+    });
+    b.bench_bytes("inverse_tensor", x.numel() * 4, || {
+        black_box(Dct2d::inverse_tensor(black_box(&x)));
+    });
+}

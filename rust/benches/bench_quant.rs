@@ -1,0 +1,51 @@
+//! Quantizer benchmark: linear (Eq. 8/9) vs PowerQuant vs EasyQuant —
+//! fit + quantize + dequantize over a cut-layer-sized buffer.
+
+use slfac::bench::{black_box, Bencher};
+use slfac::quant::{EasyQuant, LinearQuantizer, PowerQuant};
+use slfac::rng::Pcg32;
+
+fn main() {
+    let mut b = Bencher::new();
+    let n = 100_352;
+    let mut rng = Pcg32::seeded(7);
+    let data: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+    let bytes = n * 4;
+
+    b.section("fit (range/exponent/clip search)");
+    b.bench_bytes("linear/fit", bytes, || {
+        black_box(LinearQuantizer::fit(4, black_box(&data)));
+    });
+    b.bench_bytes("powerquant/fit", bytes, || {
+        black_box(PowerQuant::fit(4, black_box(&data)));
+    });
+    b.bench_bytes("easyquant/fit", bytes, || {
+        black_box(EasyQuant::fit(4, black_box(&data)));
+    });
+
+    b.section("quantize + dequantize (4-bit)");
+    let lq = LinearQuantizer::fit(4, &data);
+    b.bench_items("linear/roundtrip", n, || {
+        let mut acc = 0.0f32;
+        for &x in &data {
+            acc += lq.dequantize(lq.quantize(black_box(x)));
+        }
+        black_box(acc);
+    });
+    let pq = PowerQuant::fit(4, &data);
+    b.bench_items("powerquant/roundtrip", n, || {
+        let mut acc = 0.0f32;
+        for &x in &data {
+            acc += pq.dequantize(pq.quantize(black_box(x)));
+        }
+        black_box(acc);
+    });
+    let eq = EasyQuant::fit(4, &data);
+    b.bench_items("easyquant/roundtrip", n, || {
+        let mut acc = 0.0f32;
+        for &x in &data {
+            acc += eq.dequantize(eq.quantize(black_box(x)));
+        }
+        black_box(acc);
+    });
+}

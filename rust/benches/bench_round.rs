@@ -1,0 +1,62 @@
+//! End-to-end round benchmark over real artifacts (the headline L3 number):
+//! one full split-learning communication round — client_fwd, compress,
+//! uplink, idct, server_step, compress, downlink, client_step — per codec.
+//!
+//! Requires `make artifacts`; exits with a notice otherwise.
+
+use slfac::bench::Bencher;
+use slfac::config::ExperimentConfig;
+use slfac::coordinator::Trainer;
+use slfac::runtime::ExecutorHandle;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP bench_round: run `make artifacts` first");
+        return;
+    }
+    let mut b = Bencher::new();
+    // executor shared across codecs: compile once
+    let exec = ExecutorHandle::spawn("artifacts", &["mnist".to_string()]).unwrap();
+
+    b.section("one communication round (5 devices x 2 batches, mnist)");
+    for codec in ["identity", "slfac", "pq-sl", "tk-sl", "fc-sl"] {
+        let cfg = ExperimentConfig {
+            name: format!("bench_{codec}"),
+            codec: codec.into(),
+            rounds: 1,
+            batches_per_round: 2,
+            train_samples: 1000,
+            test_samples: 64,
+            ..Default::default()
+        };
+        let mut trainer = Trainer::new(cfg, exec.clone()).unwrap();
+        // warm once to amortize first-execution copies, then measure rounds.
+        let _ = trainer.run().unwrap();
+        let mut trainer = Trainer::new(
+            ExperimentConfig {
+                name: format!("bench_{codec}"),
+                codec: codec.into(),
+                rounds: 1,
+                batches_per_round: 2,
+                train_samples: 1000,
+                test_samples: 64,
+                ..Default::default()
+            },
+            exec.clone(),
+        )
+        .unwrap();
+        b.bench(&format!("round/{codec}"), || {
+            let _ = trainer.run().unwrap();
+        });
+    }
+
+    println!("\nexecutor totals:");
+    let stats = exec.stats().unwrap();
+    for (key, (n, t)) in &stats.per_artifact {
+        println!(
+            "  {key:<22} {n:>6} execs  {:>9.3}s  ({:>7.2}ms mean)",
+            t.as_secs_f64(),
+            t.as_secs_f64() * 1e3 / (*n as f64).max(1.0)
+        );
+    }
+}

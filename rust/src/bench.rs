@@ -1,0 +1,222 @@
+//! In-tree micro/meso benchmark harness (no `criterion` offline).
+//!
+//! Provides warmup + repeated timed runs with median / p10 / p90 and
+//! throughput reporting, and a tiny table printer the `cargo bench` targets
+//! (`rust/benches/*.rs`, `harness = false`) share. Results print in a stable
+//! plain-text format that EXPERIMENTS.md quotes directly.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's collected statistics.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark label.
+    pub name: String,
+    /// Number of timed iterations.
+    pub iters: usize,
+    /// Median iteration time.
+    pub median: Duration,
+    /// 10th percentile.
+    pub p10: Duration,
+    /// 90th percentile.
+    pub p90: Duration,
+    /// Optional bytes processed per iteration (enables MB/s reporting).
+    pub bytes_per_iter: Option<usize>,
+    /// Optional items processed per iteration (enables Mitem/s reporting).
+    pub items_per_iter: Option<usize>,
+}
+
+impl BenchResult {
+    /// Throughput in MB/s if bytes were declared.
+    pub fn mb_per_s(&self) -> Option<f64> {
+        self.bytes_per_iter.map(|b| {
+            b as f64 / (1024.0 * 1024.0) / self.median.as_secs_f64()
+        })
+    }
+
+    /// One formatted report line.
+    pub fn line(&self) -> String {
+        let mut s = format!(
+            "{:<44} {:>10} median  [{:>10} .. {:>10}]",
+            self.name,
+            fmt_dur(self.median),
+            fmt_dur(self.p10),
+            fmt_dur(self.p90),
+        );
+        if let Some(mbs) = self.mb_per_s() {
+            s.push_str(&format!("  {mbs:9.1} MB/s"));
+        }
+        if let Some(items) = self.items_per_iter {
+            let ips = items as f64 / self.median.as_secs_f64();
+            s.push_str(&format!("  {:9.2} Mitem/s", ips / 1e6));
+        }
+        s
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Benchmark runner with a fixed time budget per benchmark.
+pub struct Bencher {
+    /// Target wall time spent measuring each benchmark.
+    pub measure_time: Duration,
+    /// Warmup time before measuring.
+    pub warmup_time: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            measure_time: Duration::from_millis(800),
+            warmup_time: Duration::from_millis(150),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    /// Default-configured bencher. Honors `SLFAC_BENCH_MS` for CI speedups.
+    pub fn new() -> Self {
+        let mut b = Bencher::default();
+        if let Ok(ms) = std::env::var("SLFAC_BENCH_MS") {
+            if let Ok(ms) = ms.parse::<u64>() {
+                b.measure_time = Duration::from_millis(ms);
+                b.warmup_time = Duration::from_millis(ms / 4);
+            }
+        }
+        b
+    }
+
+    /// Time `f` repeatedly; returns the recorded result.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        self.bench_full(name, None, None, &mut f)
+    }
+
+    /// Time `f`, declaring bytes processed per iteration (for MB/s).
+    pub fn bench_bytes<F: FnMut()>(
+        &mut self,
+        name: &str,
+        bytes: usize,
+        mut f: F,
+    ) -> &BenchResult {
+        self.bench_full(name, Some(bytes), None, &mut f)
+    }
+
+    /// Time `f`, declaring items processed per iteration.
+    pub fn bench_items<F: FnMut()>(
+        &mut self,
+        name: &str,
+        items: usize,
+        mut f: F,
+    ) -> &BenchResult {
+        self.bench_full(name, None, Some(items), &mut f)
+    }
+
+    fn bench_full(
+        &mut self,
+        name: &str,
+        bytes_per_iter: Option<usize>,
+        items_per_iter: Option<usize>,
+        f: &mut dyn FnMut(),
+    ) -> &BenchResult {
+        // Warmup.
+        let t0 = Instant::now();
+        while t0.elapsed() < self.warmup_time {
+            f();
+        }
+        // Measure.
+        let mut samples: Vec<Duration> = Vec::with_capacity(256);
+        let t1 = Instant::now();
+        while t1.elapsed() < self.measure_time || samples.len() < 5 {
+            let s = Instant::now();
+            f();
+            samples.push(s.elapsed());
+            if samples.len() >= 100_000 {
+                break;
+            }
+        }
+        samples.sort_unstable();
+        let pct = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            median: pct(0.5),
+            p10: pct(0.1),
+            p90: pct(0.9),
+            bytes_per_iter,
+            items_per_iter,
+        };
+        println!("{}", result.line());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// All recorded results.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Print a section header.
+    pub fn section(&self, title: &str) {
+        println!("\n=== {title} ===");
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records_sane_stats() {
+        let mut b = Bencher {
+            measure_time: Duration::from_millis(20),
+            warmup_time: Duration::from_millis(2),
+            results: Vec::new(),
+        };
+        let r = b
+            .bench("spin", || {
+                black_box((0..100).sum::<u64>());
+            })
+            .clone();
+        assert!(r.iters >= 5);
+        assert!(r.p10 <= r.median && r.median <= r.p90);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            median: Duration::from_secs(1),
+            p10: Duration::from_secs(1),
+            p90: Duration::from_secs(1),
+            bytes_per_iter: Some(2 * 1024 * 1024),
+            items_per_iter: None,
+        };
+        assert!((r.mb_per_s().unwrap() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500 ns");
+        assert!(fmt_dur(Duration::from_micros(1500)).contains("ms"));
+    }
+}

@@ -1,0 +1,324 @@
+//! Hand-rolled command-line parser (no `clap` offline).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options,
+//! positional arguments, defaults, and generated `--help` text. Declarative
+//! enough for the `slfac` binary and the experiment drivers:
+//!
+//! ```
+//! use slfac::cli::Command;
+//! let cmd = Command::new("demo", "demo tool")
+//!     .opt("config", "PATH", "config file", Some("configs/mnist_iid.json"))
+//!     .flag("verbose", "chatty output");
+//! let m = cmd.parse_from(&["--verbose".into()]).unwrap();
+//! assert!(m.flag("verbose"));
+//! assert_eq!(m.get("config").unwrap(), "configs/mnist_iid.json");
+//! ```
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: String,
+    value_name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// A declarative command/subcommand definition.
+#[derive(Debug, Clone)]
+pub struct Command {
+    /// Command name (binary or subcommand).
+    pub name: String,
+    /// One-line description for help.
+    pub about: String,
+    opts: Vec<OptSpec>,
+    positionals: Vec<(String, String)>,
+    subcommands: Vec<Command>,
+}
+
+/// Parse result: option values, set flags, positionals, chosen subcommand.
+#[derive(Debug, Clone, Default)]
+pub struct Matches {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// Positional arguments, in order.
+    pub positionals: Vec<String>,
+    /// `Some((name, matches))` when a subcommand was invoked.
+    pub subcommand: Option<(String, Box<Matches>)>,
+}
+
+impl Matches {
+    /// Option value (or its default).
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// Required option value, with a readable error.
+    pub fn req(&self, name: &str) -> Result<&str, String> {
+        self.get(name)
+            .ok_or_else(|| format!("missing required option --{name}"))
+    }
+
+    /// Parse an option as any `FromStr` type.
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| format!("option --{name}: cannot parse '{s}'")),
+        }
+    }
+
+    /// Whether a flag was passed.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// Parse error (already formatted; includes usage on bad input).
+#[derive(Debug)]
+pub enum CliError {
+    /// `--help` was requested; payload is the help text.
+    Help(String),
+    /// Malformed invocation.
+    Bad(String),
+}
+
+impl Command {
+    /// New command with no options.
+    pub fn new(name: &str, about: &str) -> Self {
+        Command {
+            name: name.into(),
+            about: about.into(),
+            opts: Vec::new(),
+            positionals: Vec::new(),
+            subcommands: Vec::new(),
+        }
+    }
+
+    /// Add a value option (optionally with a default).
+    pub fn opt(
+        mut self,
+        name: &str,
+        value_name: &str,
+        help: &str,
+        default: Option<&str>,
+    ) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            value_name: value_name.into(),
+            help: help.into(),
+            default: default.map(|s| s.into()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Add a boolean flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            value_name: String::new(),
+            help: help.into(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Declare a positional argument (for help text only; extra positionals
+    /// are always collected).
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positionals.push((name.into(), help.into()));
+        self
+    }
+
+    /// Attach a subcommand.
+    pub fn subcommand(mut self, sub: Command) -> Self {
+        self.subcommands.push(sub);
+        self
+    }
+
+    /// Render help text.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about, self.name);
+        if !self.subcommands.is_empty() {
+            s.push_str(" <SUBCOMMAND>");
+        }
+        if !self.opts.is_empty() {
+            s.push_str(" [OPTIONS]");
+        }
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push('\n');
+        if !self.opts.is_empty() {
+            s.push_str("\nOPTIONS:\n");
+            for o in &self.opts {
+                let head = if o.is_flag {
+                    format!("  --{}", o.name)
+                } else {
+                    format!("  --{} <{}>", o.name, o.value_name)
+                };
+                s.push_str(&format!("{head:<34} {}", o.help));
+                if let Some(d) = &o.default {
+                    s.push_str(&format!(" [default: {d}]"));
+                }
+                s.push('\n');
+            }
+        }
+        if !self.positionals.is_empty() {
+            s.push_str("\nARGS:\n");
+            for (p, h) in &self.positionals {
+                s.push_str(&format!("  <{p:<12}> {h}\n"));
+            }
+        }
+        if !self.subcommands.is_empty() {
+            s.push_str("\nSUBCOMMANDS:\n");
+            for sub in &self.subcommands {
+                s.push_str(&format!("  {:<14} {}\n", sub.name, sub.about));
+            }
+        }
+        s
+    }
+
+    /// Parse `std::env::args()` (skipping argv[0]).
+    pub fn parse(&self) -> Result<Matches, CliError> {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        self.parse_from(&args)
+    }
+
+    /// Parse an explicit argument vector.
+    pub fn parse_from(&self, args: &[String]) -> Result<Matches, CliError> {
+        let mut m = Matches::default();
+        // Seed defaults.
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                m.values.insert(o.name.clone(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(CliError::Help(self.help()));
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| CliError::Bad(format!("unknown option --{name}")))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(CliError::Bad(format!("flag --{name} takes no value")));
+                    }
+                    m.flags.push(name.to_string());
+                } else {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| {
+                                    CliError::Bad(format!("option --{name} needs a value"))
+                                })?
+                        }
+                    };
+                    m.values.insert(name.to_string(), v);
+                }
+            } else if m.positionals.is_empty() && m.subcommand.is_none() {
+                // First bare word: subcommand if one matches, else positional.
+                if let Some(sub) = self.subcommands.iter().find(|s| s.name == *a) {
+                    let rest = args[i + 1..].to_vec();
+                    let sub_m = sub.parse_from(&rest)?;
+                    m.subcommand = Some((sub.name.clone(), Box::new(sub_m)));
+                    return Ok(m);
+                }
+                m.positionals.push(a.clone());
+            } else {
+                m.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let c = Command::new("t", "test").opt("theta", "F", "threshold", Some("0.9"));
+        let m = c.parse_from(&args(&[])).unwrap();
+        assert_eq!(m.get("theta"), Some("0.9"));
+        let m = c.parse_from(&args(&["--theta", "0.7"])).unwrap();
+        assert_eq!(m.get("theta"), Some("0.7"));
+        let m = c.parse_from(&args(&["--theta=0.8"])).unwrap();
+        assert_eq!(m.get("theta"), Some("0.8"));
+    }
+
+    #[test]
+    fn flags() {
+        let c = Command::new("t", "test").flag("fast", "go fast");
+        assert!(!c.parse_from(&args(&[])).unwrap().flag("fast"));
+        assert!(c.parse_from(&args(&["--fast"])).unwrap().flag("fast"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let c = Command::new("t", "test");
+        assert!(matches!(
+            c.parse_from(&args(&["--nope"])),
+            Err(CliError::Bad(_))
+        ));
+    }
+
+    #[test]
+    fn subcommands_route() {
+        let c = Command::new("slfac", "x")
+            .subcommand(Command::new("train", "train").opt("rounds", "N", "rounds", Some("10")));
+        let m = c.parse_from(&args(&["train", "--rounds", "5"])).unwrap();
+        let (name, sub) = m.subcommand.unwrap();
+        assert_eq!(name, "train");
+        assert_eq!(sub.get("rounds"), Some("5"));
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let c = Command::new("t", "test").positional("file", "input");
+        let m = c.parse_from(&args(&["a.txt", "b.txt"])).unwrap();
+        assert_eq!(m.positionals, vec!["a.txt", "b.txt"]);
+    }
+
+    #[test]
+    fn help_requested() {
+        let c = Command::new("t", "test").flag("x", "y");
+        match c.parse_from(&args(&["--help"])) {
+            Err(CliError::Help(h)) => assert!(h.contains("USAGE")),
+            other => panic!("expected help, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parsed_typed_values() {
+        let c = Command::new("t", "test").opt("n", "N", "count", Some("3"));
+        let m = c.parse_from(&args(&[])).unwrap();
+        assert_eq!(m.get_parsed::<usize>("n").unwrap(), Some(3));
+        let m = c.parse_from(&args(&["--n", "xyz"])).unwrap();
+        assert!(m.get_parsed::<usize>("n").is_err());
+    }
+}

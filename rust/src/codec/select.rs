@@ -1,0 +1,247 @@
+//! Fig. 4 row-1 ablation codecs: spatial-domain element selection by
+//! magnitude or by deviation-from-mean, with the *same* downstream
+//! quantization as SL-FAC's kept set.
+//!
+//! These isolate AFD's contribution: identical bit budget machinery, but
+//! the "informative subset" is chosen in the spatial domain — the selection
+//! strategy the paper argues retains high-magnitude noise and discards
+//! low-magnitude informative features (§III-D.1).
+
+use super::wire::{BodyReader, BodyWriter, Payload};
+use super::{ActivationCodec, CodecKind};
+use crate::quant::{pack_levels_into, unpack_levels, LinearQuantizer};
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// Selection ablation parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SelectConfig {
+    /// Fraction of elements kept per channel.
+    pub keep_fraction: f64,
+    /// Bit width for kept elements.
+    pub bits: u32,
+}
+
+impl Default for SelectConfig {
+    fn default() -> Self {
+        SelectConfig {
+            keep_fraction: 0.25,
+            bits: 6,
+        }
+    }
+}
+
+/// Scoring strategy for selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Score {
+    Magnitude,
+    StdDeviation,
+}
+
+/// Shared implementation: keep the top-scoring fraction of each channel,
+/// transmit a bitmap + quantized kept values.
+#[derive(Debug, Clone)]
+struct SelectCodec {
+    cfg: SelectConfig,
+    score: Score,
+}
+
+impl SelectCodec {
+    fn compress_impl(&self, x: &Tensor, kind: CodecKind) -> Result<Payload> {
+        let (b, c, m, n) = x.as_bchw();
+        let plane = m * n;
+        let keep = ((plane as f64 * self.cfg.keep_fraction).ceil() as usize).clamp(1, plane);
+        let mut w = BodyWriter::new();
+        for bi in 0..b {
+            for ci in 0..c {
+                let ch = x.channel(bi, ci);
+                let mean = ch.iter().sum::<f32>() / plane as f32;
+                let score = |v: f32| match self.score {
+                    Score::Magnitude => v.abs(),
+                    Score::StdDeviation => (v - mean).abs(),
+                };
+                let mut idx: Vec<u32> = (0..plane as u32).collect();
+                idx.select_nth_unstable_by(keep - 1, |&a, &b| {
+                    score(ch[b as usize])
+                        .partial_cmp(&score(ch[a as usize]))
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                });
+                let mut kept = idx[..keep].to_vec();
+                kept.sort_unstable();
+                // bitmap of kept positions
+                let mut bitmap = vec![0u8; (plane + 7) / 8];
+                for &i in &kept {
+                    bitmap[i as usize / 8] |= 1 << (i % 8);
+                }
+                w.bytes(&bitmap);
+                // quantize kept values with their own min/max
+                let vals: Vec<f32> = kept.iter().map(|&i| ch[i as usize]).collect();
+                let q = LinearQuantizer::fit(self.cfg.bits, &vals);
+                w.f32(q.min);
+                w.f32(q.max);
+                pack_levels_into(&vals, &q, &mut w);
+            }
+        }
+        Ok(Payload {
+            kind: kind as u8,
+            shape: [b, c, m, n],
+            body: w.finish(),
+        })
+    }
+
+    fn decompress_impl(&self, p: &Payload) -> Result<Tensor> {
+        let [b, c, m, n] = p.shape;
+        let plane = m * n;
+        let mut out = Tensor::zeros(&[b, c, m, n]);
+        let mut r = BodyReader::new(&p.body);
+        for bi in 0..b {
+            for ci in 0..c {
+                let bitmap = r.bytes((plane + 7) / 8)?.to_vec();
+                let kept: Vec<usize> = (0..plane)
+                    .filter(|i| bitmap[i / 8] & (1 << (i % 8)) != 0)
+                    .collect();
+                ensure!(!kept.is_empty(), "corrupt selection bitmap");
+                let q = LinearQuantizer {
+                    bits: self.cfg.bits,
+                    min: r.f32()?,
+                    max: r.f32()?,
+                };
+                let mut vals = vec![0.0f32; kept.len()];
+                unpack_levels(&mut r, &q, kept.len(), &mut vals)?;
+                let ch = out.channel_mut(bi, ci);
+                for (&i, &v) in kept.iter().zip(&vals) {
+                    ch[i] = v;
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Magnitude-based selection ablation ("Magnitude" curve in Fig. 4 row 1).
+#[derive(Debug, Clone)]
+pub struct MagnitudeSelectCodec(SelectCodec);
+
+impl MagnitudeSelectCodec {
+    /// Build from config.
+    pub fn new(cfg: SelectConfig) -> Self {
+        assert!(cfg.keep_fraction > 0.0 && cfg.keep_fraction <= 1.0);
+        MagnitudeSelectCodec(SelectCodec {
+            cfg,
+            score: Score::Magnitude,
+        })
+    }
+}
+
+impl ActivationCodec for MagnitudeSelectCodec {
+    fn name(&self) -> &'static str {
+        "magnitude"
+    }
+    fn kind(&self) -> CodecKind {
+        CodecKind::MagnitudeSelect
+    }
+    fn compress(&self, x: &Tensor) -> Result<Payload> {
+        self.0.compress_impl(x, CodecKind::MagnitudeSelect)
+    }
+    fn decompress(&self, p: &Payload) -> Result<Tensor> {
+        self.0.decompress_impl(p)
+    }
+}
+
+/// STD-based selection ablation ("STD" curve in Fig. 4 row 1).
+#[derive(Debug, Clone)]
+pub struct StdSelectCodec(SelectCodec);
+
+impl StdSelectCodec {
+    /// Build from config.
+    pub fn new(cfg: SelectConfig) -> Self {
+        assert!(cfg.keep_fraction > 0.0 && cfg.keep_fraction <= 1.0);
+        StdSelectCodec(SelectCodec {
+            cfg,
+            score: Score::StdDeviation,
+        })
+    }
+}
+
+impl ActivationCodec for StdSelectCodec {
+    fn name(&self) -> &'static str {
+        "std"
+    }
+    fn kind(&self) -> CodecKind {
+        CodecKind::StdSelect
+    }
+    fn compress(&self, x: &Tensor) -> Result<Payload> {
+        self.0.compress_impl(x, CodecKind::StdSelect)
+    }
+    fn decompress(&self, p: &Payload) -> Result<Tensor> {
+        self.0.decompress_impl(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::smooth_activations;
+
+    #[test]
+    fn magnitude_keeps_largest() {
+        let mut x = Tensor::zeros(&[1, 1, 4, 4]);
+        x.data_mut()[7] = 9.0;
+        x.data_mut()[2] = -6.0;
+        let c = MagnitudeSelectCodec::new(SelectConfig {
+            keep_fraction: 2.0 / 16.0,
+            bits: 8,
+        });
+        let back = c.decompress(&c.compress(&x).unwrap()).unwrap();
+        assert!((back.data()[7] - 9.0).abs() < 0.1);
+        assert!((back.data()[2] + 6.0).abs() < 0.1);
+        assert_eq!(back.data()[0], 0.0);
+    }
+
+    #[test]
+    fn std_select_prefers_deviation_not_magnitude() {
+        // Channel with large mean: magnitude keeps everything near the mean,
+        // STD-based keeps the deviants.
+        let mut x = Tensor::full(&[1, 1, 4, 4], 10.0);
+        x.data_mut()[5] = 10.5; // biggest |x - mean|
+        x.data_mut()[11] = 9.4;
+        let c = StdSelectCodec::new(SelectConfig {
+            keep_fraction: 2.0 / 16.0,
+            bits: 8,
+        });
+        let p = c.compress(&x).unwrap();
+        let back = c.decompress(&p).unwrap();
+        assert!((back.data()[5] - 10.5).abs() < 0.05);
+        assert!((back.data()[11] - 9.4).abs() < 0.05);
+    }
+
+    #[test]
+    fn roundtrip_bounded_error_full_keep() {
+        let x = smooth_activations(&[2, 3, 8, 8], 41);
+        for codec in [
+            Box::new(MagnitudeSelectCodec::new(SelectConfig {
+                keep_fraction: 1.0,
+                bits: 8,
+            })) as Box<dyn ActivationCodec>,
+            Box::new(StdSelectCodec::new(SelectConfig {
+                keep_fraction: 1.0,
+                bits: 8,
+            })),
+        ] {
+            let back = codec.decompress(&codec.compress(&x).unwrap()).unwrap();
+            assert!(back.rel_l2_error(&x) < 0.02, "{}", codec.name());
+        }
+    }
+
+    #[test]
+    fn corrupt_bitmap_rejected() {
+        let x = smooth_activations(&[1, 1, 4, 4], 42);
+        let c = MagnitudeSelectCodec::new(SelectConfig::default());
+        let mut p = c.compress(&x).unwrap();
+        // zero the bitmap → "nothing kept" must error
+        for b in p.body.iter_mut().take(2) {
+            *b = 0;
+        }
+        assert!(c.decompress(&p).is_err());
+    }
+}

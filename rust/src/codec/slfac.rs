@@ -1,0 +1,442 @@
+//! The SL-FAC codec — Algorithm 1 of the paper (AFD + FQC).
+//!
+//! Input: per-channel DCT coefficient planes of the smashed data (produced
+//! by the L1 Pallas kernel inside the HLO graph on the wire path, or by the
+//! Rust [`crate::dct`] module in standalone mode).
+//!
+//! Per channel `(b, c)`:
+//! 1. **AFD** — zig-zag scan; spectral energy `E = X²` (Eq. 3); cumulative
+//!    energy ratio (Eq. 4); split at the smallest `k*` with ratio ≥ θ.
+//! 2. **FQC** — group mean energies (Eq. 5), log map (Eq. 6), bit widths
+//!    via `tanh` scaling (Eq. 7), then min-max linear quantization of each
+//!    group with its own range (Eq. 8), bit-packed.
+//!
+//! Decompression inverts Eq. 9, inverse zig-zag, and (on the wire path)
+//! hands the coefficient planes to the `idct` HLO artifact.
+//!
+//! ### Wire body layout (after the common payload header)
+//!
+//! ```text
+//! per channel (B·C times, in NCHW order):
+//!   u16  k*          (low-frequency count)
+//!   u8   b_low       u8 b_high
+//!   f32  min_low     f32 max_low
+//!   f32  min_high    f32 max_high    (present only if k* < M·N)
+//!   then ⌈(k*·b_low + (MN−k*)·b_high) / 8⌉ packed bytes
+//! ```
+//!
+//! The 12–20 byte per-channel header is the "metadata overhead" the paper's
+//! communication accounting includes; with MNIST-scale planes (14×14) and
+//! the default bounds it is ≈6% of the payload.
+
+use super::wire::{BodyReader, BodyWriter, Payload};
+use super::{ActivationCodec, CodecKind};
+use crate::freq::zigzag;
+use crate::quant::{allocate_bits, AllocationConfig, BitReader, BitWriter, LinearQuantizer};
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// SL-FAC hyper-parameters (paper §III-A.4: θ=0.9, bits ∈ [2, 8]).
+#[derive(Debug, Clone, Copy)]
+pub struct SlFacConfig {
+    /// Energy threshold θ for the AFD split.
+    pub theta: f64,
+    /// FQC bit-width bounds.
+    pub alloc: AllocationConfig,
+}
+
+impl Default for SlFacConfig {
+    fn default() -> Self {
+        SlFacConfig {
+            theta: 0.9,
+            alloc: AllocationConfig::default(),
+        }
+    }
+}
+
+/// The paper's codec. See module docs.
+#[derive(Debug, Clone)]
+pub struct SlFacCodec {
+    cfg: SlFacConfig,
+}
+
+impl SlFacCodec {
+    /// Build with the given config (validated).
+    pub fn new(cfg: SlFacConfig) -> Self {
+        cfg.alloc.validate().expect("invalid FQC bit bounds");
+        assert!(
+            cfg.theta > 0.0 && cfg.theta <= 1.0,
+            "theta must be in (0, 1], got {}",
+            cfg.theta
+        );
+        SlFacCodec { cfg }
+    }
+
+    /// Access the config.
+    pub fn config(&self) -> &SlFacConfig {
+        &self.cfg
+    }
+
+    /// Compress one channel plane into the body writer, reusing `scratch`
+    /// for the zig-zag sequence (zero per-channel allocations on the hot
+    /// path — §Perf L3 iteration 1). Returns `(k*, b_low, b_high)`.
+    fn compress_channel(
+        &self,
+        zz: &crate::freq::ZigZag,
+        plane: &[f32],
+        scratch: &mut Vec<f32>,
+        w: &mut BodyWriter,
+    ) -> (usize, u32, u32) {
+        let split = crate::freq::afd_channel_into(zz, plane, self.cfg.theta, scratch);
+        let k = split.k;
+        let len = plane.len();
+        let (b_low, b_high) =
+            allocate_bits(&self.cfg.alloc, split.mean_energy_low, split.mean_energy_high);
+
+        let low = &scratch[..k];
+        let high = &scratch[k..];
+        let q_low = LinearQuantizer::fit(b_low, low);
+        w.u16(k as u16);
+        w.u8(b_low as u8);
+        w.u8(b_high as u8);
+        w.f32(q_low.min);
+        w.f32(q_low.max);
+        let q_high = if k < len {
+            let q = LinearQuantizer::fit(b_high, high);
+            w.f32(q.min);
+            w.f32(q.max);
+            Some(q)
+        } else {
+            None
+        };
+
+        let mut bits = BitWriter::with_capacity((len * b_low as usize + 7) / 8);
+        for &x in low {
+            bits.put(q_low.quantize(x), b_low);
+        }
+        if let Some(q) = &q_high {
+            for &x in high {
+                bits.put(q.quantize(x), b_high);
+            }
+        }
+        w.bytes(&bits.finish());
+        (k, b_low, b_high)
+    }
+
+    fn decompress_channel(
+        zz: &crate::freq::ZigZag,
+        r: &mut BodyReader,
+        seq: &mut Vec<f32>,
+        out_plane: &mut [f32],
+    ) -> Result<()> {
+        let len = out_plane.len();
+        let k = r.u16()? as usize;
+        ensure!(k >= 1 && k <= len, "corrupt k*={k} for plane of {len}");
+        let b_low = r.u8()? as u32;
+        let b_high = r.u8()? as u32;
+        ensure!(
+            (1..=16).contains(&b_low) && b_high <= 16,
+            "corrupt bit widths ({b_low}, {b_high})"
+        );
+        let min_low = r.f32()?;
+        let max_low = r.f32()?;
+        let q_low = LinearQuantizer {
+            bits: b_low,
+            min: min_low,
+            max: max_low,
+        };
+        let q_high = if k < len {
+            let min_high = r.f32()?;
+            let max_high = r.f32()?;
+            Some(LinearQuantizer {
+                bits: b_high.max(1),
+                min: min_high,
+                max: max_high,
+            })
+        } else {
+            None
+        };
+        let packed_bits = k * b_low as usize + (len - k) * b_high as usize;
+        let packed_bytes = (packed_bits + 7) / 8;
+        let packed = r.bytes(packed_bytes)?;
+        let mut bits = BitReader::new(packed);
+        // zig-zag sequence reconstruction into the reusable scratch
+        seq.resize(len, 0.0);
+        for s in seq.iter_mut().take(k) {
+            *s = q_low.dequantize(bits.get(b_low));
+        }
+        if let Some(q) = &q_high {
+            for s in seq.iter_mut().skip(k) {
+                *s = q.dequantize(bits.get(b_high));
+            }
+        }
+        zz.invert(seq, out_plane);
+        Ok(())
+    }
+}
+
+impl ActivationCodec for SlFacCodec {
+    fn name(&self) -> &'static str {
+        "slfac"
+    }
+
+    fn kind(&self) -> CodecKind {
+        CodecKind::SlFac
+    }
+
+    fn frequency_domain(&self) -> bool {
+        true
+    }
+
+    fn compress(&self, x: &Tensor) -> Result<Payload> {
+        let (b, c, m, n) = x.as_bchw();
+        let zz = zigzag(m, n);
+        // rough capacity guess: headers + ~mid bits per coefficient
+        let mid_bits = (self.cfg.alloc.b_min + self.cfg.alloc.b_max) as usize / 2;
+        let mut w =
+            BodyWriter::with_capacity(b * c * (20 + (m * n * mid_bits + 7) / 8));
+        let mut scratch = Vec::with_capacity(m * n);
+        for bi in 0..b {
+            for ci in 0..c {
+                self.compress_channel(&zz, x.channel(bi, ci), &mut scratch, &mut w);
+            }
+        }
+        Ok(Payload {
+            kind: CodecKind::SlFac as u8,
+            shape: [b, c, m, n],
+            body: w.finish(),
+        })
+    }
+
+    fn decompress(&self, p: &Payload) -> Result<Tensor> {
+        let [b, c, m, n] = p.shape;
+        let zz = zigzag(m, n);
+        let mut out = Tensor::zeros(&[b, c, m, n]);
+        let mut r = BodyReader::new(&p.body);
+        let mut seq = Vec::with_capacity(m * n);
+        for bi in 0..b {
+            for ci in 0..c {
+                Self::decompress_channel(&zz, &mut r, &mut seq, out.channel_mut(bi, ci))?;
+            }
+        }
+        ensure!(r.remaining() == 0, "trailing bytes in SL-FAC payload");
+        Ok(out)
+    }
+}
+
+/// Ablation codec: AFD split retained, but both groups get the same mid bit
+/// width — isolates FQC's contribution ("SL-FAC w/o FQC", Fig. 4 row 2).
+#[derive(Debug, Clone)]
+pub struct AfdUniformCodec {
+    inner: SlFacCodec,
+}
+
+impl AfdUniformCodec {
+    /// θ for the split; `bits` for both groups.
+    pub fn new(theta: f64, bits: u32) -> Self {
+        AfdUniformCodec {
+            inner: SlFacCodec::new(SlFacConfig {
+                theta,
+                alloc: AllocationConfig {
+                    b_min: bits,
+                    b_max: bits,
+                },
+            }),
+        }
+    }
+}
+
+impl ActivationCodec for AfdUniformCodec {
+    fn name(&self) -> &'static str {
+        "afd-uniform"
+    }
+
+    fn kind(&self) -> CodecKind {
+        CodecKind::AfdUniform
+    }
+
+    fn frequency_domain(&self) -> bool {
+        true
+    }
+
+    fn compress(&self, x: &Tensor) -> Result<Payload> {
+        let mut p = self.inner.compress(x)?;
+        p.kind = CodecKind::AfdUniform as u8;
+        Ok(p)
+    }
+
+    fn decompress(&self, p: &Payload) -> Result<Tensor> {
+        self.inner.decompress(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::smooth_activations;
+    use crate::dct::Dct2d;
+
+    fn coeffs_of(shape: &[usize], seed: u64) -> Tensor {
+        Dct2d::forward_tensor(&smooth_activations(shape, seed))
+    }
+
+    #[test]
+    fn roundtrip_preserves_shape_and_low_error() {
+        let x = coeffs_of(&[2, 6, 14, 14], 1);
+        let codec = SlFacCodec::new(SlFacConfig::default());
+        let p = codec.compress(&x).unwrap();
+        let back = codec.decompress(&p).unwrap();
+        assert_eq!(back.shape(), x.shape());
+        // θ=0.9 bounds the *retained* energy: reconstruction error is at
+        // most ~sqrt(1-θ) of the signal (F_h is coarsely quantized).
+        let err = back.rel_l2_error(&x);
+        assert!(err < (1.0f64 - 0.9).sqrt() + 0.05, "rel err {err}");
+    }
+
+    #[test]
+    fn compresses_smooth_data_well() {
+        let x = coeffs_of(&[4, 8, 14, 14], 2);
+        let codec = SlFacCodec::new(SlFacConfig::default());
+        let p = codec.compress(&x).unwrap();
+        assert!(
+            p.compression_ratio() > 3.0,
+            "ratio {}",
+            p.compression_ratio()
+        );
+    }
+
+    #[test]
+    fn higher_theta_higher_fidelity() {
+        // Fig. 3's mechanism at codec level: raising θ moves more energy
+        // into the finely-quantized F_l, so fidelity at the endpoints must
+        // improve markedly (local non-monotonicity between neighboring θ is
+        // possible because the F_h range shifts with the split point).
+        let x = coeffs_of(&[2, 4, 14, 14], 3);
+        let err_at = |theta: f64| {
+            let codec = SlFacCodec::new(SlFacConfig {
+                theta,
+                ..Default::default()
+            });
+            codec
+                .decompress(&codec.compress(&x).unwrap())
+                .unwrap()
+                .rel_l2_error(&x)
+        };
+        let lo = err_at(0.5);
+        let hi = err_at(0.99);
+        assert!(hi < lo, "err(0.99)={hi} should beat err(0.5)={lo}");
+        assert!(hi < 0.12, "err at theta=0.99 is {hi}");
+    }
+
+    #[test]
+    fn low_group_gets_more_bits_than_high() {
+        // Parse the wire body of a single-channel payload and check Eq. 7's
+        // intent: the informative group is quantized more finely.
+        let x = coeffs_of(&[1, 1, 14, 14], 4);
+        let codec = SlFacCodec::new(SlFacConfig::default());
+        let p = codec.compress(&x).unwrap();
+        let mut r = BodyReader::new(&p.body);
+        let _k = r.u16().unwrap();
+        let b_low = r.u8().unwrap();
+        let b_high = r.u8().unwrap();
+        assert!(b_low > b_high, "b_low={b_low} b_high={b_high}");
+        assert!(b_low <= 8 && b_high >= 2);
+    }
+
+    #[test]
+    fn all_low_group_when_theta_one() {
+        let x = coeffs_of(&[1, 2, 8, 8], 5);
+        let codec = SlFacCodec::new(SlFacConfig {
+            theta: 1.0,
+            ..Default::default()
+        });
+        let p = codec.compress(&x).unwrap();
+        let back = codec.decompress(&p).unwrap();
+        // With everything in F_l at b_max the reconstruction is very tight.
+        assert!(back.rel_l2_error(&x) < 0.01);
+    }
+
+    #[test]
+    fn zero_tensor_roundtrips() {
+        let x = Tensor::zeros(&[1, 3, 7, 9]);
+        let codec = SlFacCodec::new(SlFacConfig::default());
+        let back = codec.decompress(&codec.compress(&x).unwrap()).unwrap();
+        assert_eq!(back.data(), x.data());
+    }
+
+    #[test]
+    fn corrupt_payload_is_rejected_not_panicking() {
+        let x = coeffs_of(&[1, 2, 6, 6], 6);
+        let codec = SlFacCodec::new(SlFacConfig::default());
+        let mut p = codec.compress(&x).unwrap();
+        p.body.truncate(p.body.len() / 2);
+        assert!(codec.decompress(&p).is_err());
+        // corrupt k*
+        let mut p2 = codec.compress(&x).unwrap();
+        p2.body[0] = 0xFF;
+        p2.body[1] = 0xFF;
+        assert!(codec.decompress(&p2).is_err());
+    }
+
+    #[test]
+    fn afd_uniform_is_worse_or_equal_at_same_budget() {
+        // FQC's adaptive allocation should not lose to flat allocation when
+        // both use the same mean bit count on energy-skewed data.
+        let x = coeffs_of(&[4, 6, 14, 14], 7);
+        let slfac = SlFacCodec::new(SlFacConfig::default());
+        let p_s = slfac.compress(&x).unwrap();
+        let err_s = slfac.decompress(&p_s).unwrap().rel_l2_error(&x);
+
+        // flat codec sized to at least slfac's bytes
+        let mut err_flat = f64::INFINITY;
+        for bits in 2..=8 {
+            let flat = AfdUniformCodec::new(0.9, bits);
+            let p_f = flat.compress(&x).unwrap();
+            if p_f.wire_bytes() >= p_s.wire_bytes() {
+                err_flat = flat.decompress(&p_f).unwrap().rel_l2_error(&x);
+                break;
+            }
+        }
+        assert!(
+            err_s <= err_flat * 1.05,
+            "slfac {err_s} vs flat {err_flat}"
+        );
+    }
+
+    #[test]
+    fn property_roundtrip_arbitrary_shapes_and_thetas() {
+        crate::testing::prop("slfac roundtrip", 60, |g| {
+            let shape = g.bchw_shape();
+            let theta = *g.choose(&[0.5f64, 0.7, 0.8, 0.9, 0.95, 1.0]);
+            let x = g.tensor(&shape, 2.0);
+            let coeffs = Dct2d::forward_tensor(&x);
+            let codec = SlFacCodec::new(SlFacConfig {
+                theta,
+                ..Default::default()
+            });
+            let p = codec.compress(&coeffs).unwrap();
+            let back = codec.decompress(&p).unwrap();
+            assert_eq!(back.shape(), coeffs.shape());
+            for v in back.data() {
+                assert!(v.is_finite());
+            }
+            // wire-format determinism
+            let p2 = codec.compress(&coeffs).unwrap();
+            assert_eq!(p.body, p2.body, "compression must be deterministic");
+        });
+    }
+
+    #[test]
+    fn metadata_overhead_is_modest() {
+        let x = coeffs_of(&[1, 16, 14, 14], 8);
+        let codec = SlFacCodec::new(SlFacConfig::default());
+        let p = codec.compress(&x).unwrap();
+        // per-channel header is 20 bytes; body must be dominated by packed bits
+        let header_bytes = 16 * 20;
+        assert!(
+            (header_bytes as f64) < 0.3 * p.body.len() as f64,
+            "headers {header_bytes} vs body {}",
+            p.body.len()
+        );
+    }
+}

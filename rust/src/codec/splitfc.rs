@@ -1,0 +1,207 @@
+//! FC-SL — the SplitFC baseline (Oh et al., IEEE TNNLS 2025 [27]).
+//!
+//! SplitFC compresses smashed data feature-wise: features (channels) with
+//! low dispersion carry little task information and are dropped; the
+//! remaining features are quantized. Our implementation per sample:
+//!
+//! 1. rank channels by their standard deviation;
+//! 2. keep the top `keep_fraction`, drop the rest (each dropped channel is
+//!    summarized by its mean — one f16 — so the server reconstructs a DC
+//!    approximation rather than zeros, matching the reference's
+//!    mean-preserving dropout);
+//! 3. min-max linear quantization of each kept channel at `bits` with a
+//!    per-channel range (SplitFC's "adaptive feature-wise quantization").
+
+use super::wire::{BodyReader, BodyWriter, Payload};
+use super::{ActivationCodec, CodecKind};
+use crate::quant::{pack_levels_into, unpack_levels, LinearQuantizer};
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// FC-SL parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SplitFcConfig {
+    /// Fraction of channels kept (by std rank).
+    pub keep_fraction: f64,
+    /// Bit width for kept channels.
+    pub bits: u32,
+}
+
+impl Default for SplitFcConfig {
+    fn default() -> Self {
+        SplitFcConfig {
+            keep_fraction: 0.25,
+            bits: 4,
+        }
+    }
+}
+
+/// SplitFC codec. Spatial domain.
+#[derive(Debug, Clone)]
+pub struct SplitFcCodec {
+    cfg: SplitFcConfig,
+}
+
+impl SplitFcCodec {
+    /// Build from config.
+    pub fn new(cfg: SplitFcConfig) -> Self {
+        assert!(cfg.keep_fraction > 0.0 && cfg.keep_fraction <= 1.0);
+        assert!((1..=16).contains(&cfg.bits));
+        SplitFcCodec { cfg }
+    }
+}
+
+impl ActivationCodec for SplitFcCodec {
+    fn name(&self) -> &'static str {
+        "fc-sl"
+    }
+
+    fn kind(&self) -> CodecKind {
+        CodecKind::SplitFc
+    }
+
+    fn compress(&self, x: &Tensor) -> Result<Payload> {
+        let (b, c, m, n) = x.as_bchw();
+        let keep = ((c as f64 * self.cfg.keep_fraction).ceil() as usize).clamp(1, c);
+        let mut w = BodyWriter::new();
+        for bi in 0..b {
+            // rank channels by std
+            let mut stds: Vec<(usize, f32)> = (0..c)
+                .map(|ci| (ci, crate::tensor::std_dev(x.channel(bi, ci))))
+                .collect();
+            stds.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+            let mut kept: Vec<usize> = stds[..keep].iter().map(|&(i, _)| i).collect();
+            kept.sort_unstable();
+
+            // channel bitmap: 1 bit per channel
+            let mut bitmap = vec![0u8; (c + 7) / 8];
+            for &ci in &kept {
+                bitmap[ci / 8] |= 1 << (ci % 8);
+            }
+            w.bytes(&bitmap);
+            // dropped channel means
+            for ci in 0..c {
+                if !kept.contains(&ci) {
+                    let ch = x.channel(bi, ci);
+                    let mean = ch.iter().sum::<f32>() / ch.len() as f32;
+                    w.f16(mean);
+                }
+            }
+            // kept channels: per-channel min/max + packed levels
+            for &ci in &kept {
+                let ch = x.channel(bi, ci);
+                let q = LinearQuantizer::fit(self.cfg.bits, ch);
+                w.f32(q.min);
+                w.f32(q.max);
+                pack_levels_into(ch, &q, &mut w);
+            }
+        }
+        Ok(Payload {
+            kind: CodecKind::SplitFc as u8,
+            shape: [b, c, m, n],
+            body: w.finish(),
+        })
+    }
+
+    fn decompress(&self, p: &Payload) -> Result<Tensor> {
+        let [b, c, m, n] = p.shape;
+        let plane = m * n;
+        let mut out = Tensor::zeros(&[b, c, m, n]);
+        let mut r = BodyReader::new(&p.body);
+        for bi in 0..b {
+            let bitmap = r.bytes((c + 7) / 8)?.to_vec();
+            let kept: Vec<usize> = (0..c)
+                .filter(|ci| bitmap[ci / 8] & (1 << (ci % 8)) != 0)
+                .collect();
+            ensure!(!kept.is_empty(), "corrupt SplitFC bitmap: nothing kept");
+            for ci in 0..c {
+                if bitmap[ci / 8] & (1 << (ci % 8)) == 0 {
+                    let mean = r.f16()?;
+                    out.channel_mut(bi, ci).fill(mean);
+                }
+            }
+            for &ci in &kept {
+                let min = r.f32()?;
+                let max = r.f32()?;
+                let q = LinearQuantizer {
+                    bits: self.cfg.bits,
+                    min,
+                    max,
+                };
+                unpack_levels(&mut r, &q, plane, out.channel_mut(bi, ci))?;
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::smooth_activations;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn high_variance_channels_survive() {
+        let mut rng = Pcg32::seeded(21);
+        let mut x = Tensor::zeros(&[1, 4, 6, 6]);
+        // channel 2 has high variance, others near-constant
+        for (i, v) in x.channel_mut(0, 2).iter_mut().enumerate() {
+            *v = if i % 2 == 0 { 5.0 } else { -5.0 } + rng.normal() * 0.1;
+        }
+        for ci in [0usize, 1, 3] {
+            x.channel_mut(0, ci).fill(1.0);
+        }
+        let codec = SplitFcCodec::new(SplitFcConfig {
+            keep_fraction: 0.25,
+            bits: 8,
+        });
+        let back = codec.decompress(&codec.compress(&x).unwrap()).unwrap();
+        // kept channel reconstructs well
+        let err2 = crate::tensor::Tensor::new(&[36], back.channel(0, 2).to_vec())
+            .rel_l2_error(&Tensor::new(&[36], x.channel(0, 2).to_vec()));
+        assert!(err2 < 0.05, "kept channel err {err2}");
+        // dropped channels reconstruct as their mean (exactly 1.0 here)
+        for ci in [0usize, 1, 3] {
+            for &v in back.channel(0, ci) {
+                assert!((v - 1.0).abs() < 0.01);
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_all_channels_kept() {
+        let x = smooth_activations(&[2, 3, 8, 8], 22);
+        let codec = SplitFcCodec::new(SplitFcConfig {
+            keep_fraction: 1.0,
+            bits: 8,
+        });
+        let back = codec.decompress(&codec.compress(&x).unwrap()).unwrap();
+        assert!(back.rel_l2_error(&x) < 0.02);
+    }
+
+    #[test]
+    fn wire_size_tracks_keep_fraction() {
+        let x = smooth_activations(&[2, 8, 10, 10], 23);
+        let sizes: Vec<usize> = [0.25, 0.5, 1.0]
+            .iter()
+            .map(|&f| {
+                let c = SplitFcCodec::new(SplitFcConfig {
+                    keep_fraction: f,
+                    bits: 4,
+                });
+                c.compress(&x).unwrap().wire_bytes()
+            })
+            .collect();
+        assert!(sizes[0] < sizes[1] && sizes[1] < sizes[2]);
+    }
+
+    #[test]
+    fn truncated_payload_rejected() {
+        let x = smooth_activations(&[1, 4, 6, 6], 24);
+        let codec = SplitFcCodec::new(SplitFcConfig::default());
+        let mut p = codec.compress(&x).unwrap();
+        p.body.truncate(p.body.len() - 3);
+        assert!(codec.decompress(&p).is_err());
+    }
+}

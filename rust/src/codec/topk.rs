@@ -1,0 +1,224 @@
+//! TK-SL — randomized top-k sparsification (Zheng et al., IJCAI 2023 [25]).
+//!
+//! Retains the `keep_fraction` largest-magnitude elements of each sample's
+//! smashed data plus a small random subset (`random_fraction`) of the rest
+//! (the "randomized" part, which de-biases the estimator and was shown to
+//! help convergence vs plain top-k). Retained values travel as f16 with u32
+//! flat indices; everything else reconstructs as zero.
+//!
+//! The paper's Fig. 2 shows this baseline degrading most under non-IID —
+//! magnitude selection keeps high-magnitude noise and drops low-magnitude
+//! informative features (§III-B).
+
+use super::wire::{BodyReader, BodyWriter, Payload};
+use super::{ActivationCodec, CodecKind};
+use crate::rng::Pcg32;
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+use std::sync::Mutex;
+
+/// TK-SL parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct TopKConfig {
+    /// Fraction of elements kept by magnitude (the paper's top-k).
+    pub keep_fraction: f64,
+    /// Additional fraction kept uniformly at random from the remainder.
+    pub random_fraction: f64,
+    /// Seed for the random subset.
+    pub seed: u64,
+}
+
+impl Default for TopKConfig {
+    fn default() -> Self {
+        TopKConfig {
+            keep_fraction: 0.25,
+            random_fraction: 0.05,
+            seed: 7,
+        }
+    }
+}
+
+/// Randomized top-k codec. Spatial domain.
+#[derive(Debug)]
+pub struct TopKCodec {
+    cfg: TopKConfig,
+    // RNG state advances per compression so successive batches sample
+    // different random subsets (as in the reference implementation).
+    rng: Mutex<Pcg32>,
+}
+
+impl TopKCodec {
+    /// Build from config.
+    pub fn new(cfg: TopKConfig) -> Self {
+        assert!(
+            cfg.keep_fraction > 0.0 && cfg.keep_fraction <= 1.0,
+            "keep_fraction out of range"
+        );
+        assert!((0.0..=1.0).contains(&cfg.random_fraction));
+        TopKCodec {
+            cfg,
+            rng: Mutex::new(Pcg32::seeded(cfg.seed)),
+        }
+    }
+}
+
+impl ActivationCodec for TopKCodec {
+    fn name(&self) -> &'static str {
+        "tk-sl"
+    }
+
+    fn kind(&self) -> CodecKind {
+        CodecKind::TopK
+    }
+
+    fn compress(&self, x: &Tensor) -> Result<Payload> {
+        let (b, c, m, n) = x.as_bchw();
+        let per_sample = c * m * n;
+        let k_top = ((per_sample as f64 * self.cfg.keep_fraction).ceil() as usize)
+            .clamp(1, per_sample);
+        let k_rand = (per_sample as f64 * self.cfg.random_fraction).floor() as usize;
+
+        let mut w = BodyWriter::with_capacity(b * (4 + (k_top + k_rand) * 6));
+        let mut rng = self.rng.lock().unwrap();
+        for bi in 0..b {
+            let sample = &x.data()[bi * per_sample..(bi + 1) * per_sample];
+            // top-k by |x| via partial sort of indices
+            let mut idx: Vec<u32> = (0..per_sample as u32).collect();
+            idx.select_nth_unstable_by(k_top - 1, |&a, &b| {
+                sample[b as usize]
+                    .abs()
+                    .partial_cmp(&sample[a as usize].abs())
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+            let mut kept: Vec<u32> = idx[..k_top].to_vec();
+            // random extras from the remainder
+            if k_rand > 0 && k_top < per_sample {
+                let rest = &idx[k_top..];
+                for _ in 0..k_rand {
+                    kept.push(rest[rng.below(rest.len() as u32) as usize]);
+                }
+                kept.sort_unstable();
+                kept.dedup();
+            } else {
+                kept.sort_unstable();
+            }
+            w.u32(kept.len() as u32);
+            for &i in &kept {
+                w.u32(i);
+                w.f16(sample[i as usize]);
+            }
+        }
+        Ok(Payload {
+            kind: CodecKind::TopK as u8,
+            shape: [b, c, m, n],
+            body: w.finish(),
+        })
+    }
+
+    fn decompress(&self, p: &Payload) -> Result<Tensor> {
+        let [b, c, m, n] = p.shape;
+        let per_sample = c * m * n;
+        let mut out = Tensor::zeros(&[b, c, m, n]);
+        let mut r = BodyReader::new(&p.body);
+        for bi in 0..b {
+            let count = r.u32()? as usize;
+            ensure!(count <= per_sample, "corrupt top-k count {count}");
+            let dst =
+                &mut out.data_mut()[bi * per_sample..(bi + 1) * per_sample];
+            for _ in 0..count {
+                let i = r.u32()? as usize;
+                ensure!(i < per_sample, "corrupt top-k index {i}");
+                dst[i] = r.f16()?;
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::smooth_activations;
+
+    #[test]
+    fn keeps_largest_magnitudes_exactly() {
+        let mut x = Tensor::zeros(&[1, 1, 4, 4]);
+        x.data_mut()[3] = 10.0;
+        x.data_mut()[9] = -8.0;
+        x.data_mut()[12] = 0.01;
+        let codec = TopKCodec::new(TopKConfig {
+            keep_fraction: 2.0 / 16.0,
+            random_fraction: 0.0,
+            seed: 1,
+        });
+        let back = codec.decompress(&codec.compress(&x).unwrap()).unwrap();
+        assert!((back.data()[3] - 10.0).abs() < 0.01);
+        assert!((back.data()[9] + 8.0).abs() < 0.01);
+        assert_eq!(back.data()[12], 0.0, "small value dropped");
+    }
+
+    #[test]
+    fn wire_size_scales_with_keep_fraction() {
+        let x = smooth_activations(&[2, 4, 8, 8], 11);
+        let small = TopKCodec::new(TopKConfig {
+            keep_fraction: 0.1,
+            random_fraction: 0.0,
+            seed: 1,
+        });
+        let large = TopKCodec::new(TopKConfig {
+            keep_fraction: 0.5,
+            random_fraction: 0.0,
+            seed: 1,
+        });
+        let ps = small.compress(&x).unwrap();
+        let pl = large.compress(&x).unwrap();
+        assert!(pl.wire_bytes() > 3 * ps.wire_bytes() / 2);
+    }
+
+    #[test]
+    fn randomized_extras_add_coverage() {
+        let x = smooth_activations(&[1, 2, 8, 8], 12);
+        let plain = TopKCodec::new(TopKConfig {
+            keep_fraction: 0.2,
+            random_fraction: 0.0,
+            seed: 3,
+        });
+        let rand = TopKCodec::new(TopKConfig {
+            keep_fraction: 0.2,
+            random_fraction: 0.2,
+            seed: 3,
+        });
+        let nz = |t: &Tensor| t.data().iter().filter(|&&v| v != 0.0).count();
+        let b_plain = plain.decompress(&plain.compress(&x).unwrap()).unwrap();
+        let b_rand = rand.decompress(&rand.compress(&x).unwrap()).unwrap();
+        assert!(nz(&b_rand) > nz(&b_plain));
+    }
+
+    #[test]
+    fn error_decreases_with_keep_fraction() {
+        let x = smooth_activations(&[2, 4, 10, 10], 13);
+        let mut last = f64::INFINITY;
+        for f in [0.1, 0.3, 0.6, 1.0] {
+            let c = TopKCodec::new(TopKConfig {
+                keep_fraction: f,
+                random_fraction: 0.0,
+                seed: 5,
+            });
+            let back = c.decompress(&c.compress(&x).unwrap()).unwrap();
+            let err = back.rel_l2_error(&x);
+            assert!(err <= last + 1e-9, "f={f}");
+            last = err;
+        }
+        assert!(last < 0.01, "full keep should be ~f16-exact, err={last}");
+    }
+
+    #[test]
+    fn corrupt_index_rejected() {
+        let x = smooth_activations(&[1, 1, 4, 4], 14);
+        let codec = TopKCodec::new(TopKConfig::default());
+        let mut p = codec.compress(&x).unwrap();
+        // overwrite first index with an out-of-range value
+        p.body[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(codec.decompress(&p).is_err());
+    }
+}

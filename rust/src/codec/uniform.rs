@@ -1,0 +1,326 @@
+//! Uniform-strategy codecs: PQ-SL (PowerQuant), EasyQuant, plain linear
+//! quantization, and the FP32 identity reference.
+//!
+//! These are the "uniform compression strategy" family the paper contrasts
+//! with (§I): every element of the smashed data receives the same bit
+//! width, regardless of informativeness.
+
+use super::wire::{BodyReader, BodyWriter, Payload};
+use super::{ActivationCodec, CodecKind};
+use crate::quant::{BitReader, BitWriter, EasyQuant, LinearQuantizer, PowerQuant};
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// PQ-SL: PowerQuant [39] applied to the whole tensor at a fixed bit width.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerQuantCodec {
+    /// Bit width (sign + magnitude grid).
+    pub bits: u32,
+}
+
+impl PowerQuantCodec {
+    /// Build with the given bit width (2..=16).
+    pub fn new(bits: u32) -> Self {
+        assert!((2..=16).contains(&bits));
+        PowerQuantCodec { bits }
+    }
+}
+
+impl ActivationCodec for PowerQuantCodec {
+    fn name(&self) -> &'static str {
+        "pq-sl"
+    }
+
+    fn kind(&self) -> CodecKind {
+        CodecKind::PowerQuant
+    }
+
+    fn compress(&self, x: &Tensor) -> Result<Payload> {
+        let (b, c, m, n) = x.as_bchw();
+        let q = PowerQuant::fit(self.bits, x.data());
+        let mut w = BodyWriter::with_capacity(12 + x.numel() * self.bits as usize / 8);
+        w.f32(q.scale);
+        w.f32(q.exponent);
+        let mut bits = BitWriter::with_capacity((x.numel() * self.bits as usize + 7) / 8);
+        for &v in x.data() {
+            bits.put(q.quantize(v), self.bits);
+        }
+        w.bytes(&bits.finish());
+        Ok(Payload {
+            kind: CodecKind::PowerQuant as u8,
+            shape: [b, c, m, n],
+            body: w.finish(),
+        })
+    }
+
+    fn decompress(&self, p: &Payload) -> Result<Tensor> {
+        let [b, c, m, n] = p.shape;
+        let count = b * c * m * n;
+        let mut r = BodyReader::new(&p.body);
+        let scale = r.f32()?;
+        let exponent = r.f32()?;
+        ensure!(
+            exponent > 0.0 && scale >= 0.0,
+            "corrupt PowerQuant header (scale={scale}, a={exponent})"
+        );
+        let q = PowerQuant {
+            bits: self.bits,
+            scale,
+            exponent,
+        };
+        // §Perf L3 iteration 2: dequantization calls powf per element; with
+        // ≤ 2^bits distinct levels a lookup table removes it from the loop
+        // (≈4× decompress speedup at 4 bits, see EXPERIMENTS.md §Perf).
+        let levels = 1usize << self.bits;
+        let table: Vec<f32> = (0..levels as u32).map(|l| q.dequantize(l)).collect();
+        let packed = r.bytes((count * self.bits as usize + 7) / 8)?;
+        let mut bits = BitReader::new(packed);
+        let data: Vec<f32> = (0..count)
+            .map(|_| table[bits.get(self.bits) as usize])
+            .collect();
+        Ok(Tensor::new(&[b, c, m, n], data))
+    }
+}
+
+/// EasyQuant [40]: outlier isolation + optimized clip range, fixed bit width.
+#[derive(Debug, Clone, Copy)]
+pub struct EasyQuantCodec {
+    /// Bit width for the inlier grid.
+    pub bits: u32,
+}
+
+impl EasyQuantCodec {
+    /// Build with the given bit width (2..=16).
+    pub fn new(bits: u32) -> Self {
+        assert!((2..=16).contains(&bits));
+        EasyQuantCodec { bits }
+    }
+}
+
+impl ActivationCodec for EasyQuantCodec {
+    fn name(&self) -> &'static str {
+        "easyquant"
+    }
+
+    fn kind(&self) -> CodecKind {
+        CodecKind::EasyQuant
+    }
+
+    fn compress(&self, x: &Tensor) -> Result<Payload> {
+        let (b, c, m, n) = x.as_bchw();
+        let q = EasyQuant::fit(self.bits, x.data());
+        let mut w = BodyWriter::new();
+        w.f32(q.clip);
+        w.u32(q.outliers.len() as u32);
+        for &(i, v) in &q.outliers {
+            w.u32(i);
+            w.f32(v);
+        }
+        let mut bits = BitWriter::with_capacity((x.numel() * self.bits as usize + 7) / 8);
+        for &v in x.data() {
+            bits.put(q.quantize(v), self.bits);
+        }
+        w.bytes(&bits.finish());
+        Ok(Payload {
+            kind: CodecKind::EasyQuant as u8,
+            shape: [b, c, m, n],
+            body: w.finish(),
+        })
+    }
+
+    fn decompress(&self, p: &Payload) -> Result<Tensor> {
+        let [b, c, m, n] = p.shape;
+        let count = b * c * m * n;
+        let mut r = BodyReader::new(&p.body);
+        let clip = r.f32()?;
+        let n_out = r.u32()? as usize;
+        ensure!(n_out <= count, "corrupt EasyQuant outlier count {n_out}");
+        let mut outliers = Vec::with_capacity(n_out);
+        for _ in 0..n_out {
+            let i = r.u32()?;
+            ensure!((i as usize) < count, "corrupt outlier index {i}");
+            let v = r.f32()?;
+            outliers.push((i, v));
+        }
+        let q = EasyQuant {
+            bits: self.bits,
+            clip,
+            threshold: 0.0,
+            outliers,
+        };
+        let packed = r.bytes((count * self.bits as usize + 7) / 8)?;
+        let mut bits = BitReader::new(packed);
+        let levels: Vec<u32> = (0..count).map(|_| bits.get(self.bits)).collect();
+        Ok(Tensor::new(&[b, c, m, n], q.reconstruct(&levels)))
+    }
+}
+
+/// Plain per-tensor min-max linear quantization at a fixed bit width — the
+/// simplest uniform baseline, and the Fig. 4 "EasyQuant/PowerQuant vs FQC"
+/// control.
+#[derive(Debug, Clone, Copy)]
+pub struct UniformLinearCodec {
+    /// Bit width.
+    pub bits: u32,
+}
+
+impl UniformLinearCodec {
+    /// Build with the given bit width (1..=16).
+    pub fn new(bits: u32) -> Self {
+        assert!((1..=16).contains(&bits));
+        UniformLinearCodec { bits }
+    }
+}
+
+impl ActivationCodec for UniformLinearCodec {
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+
+    fn kind(&self) -> CodecKind {
+        CodecKind::UniformLinear
+    }
+
+    fn compress(&self, x: &Tensor) -> Result<Payload> {
+        let (b, c, m, n) = x.as_bchw();
+        let q = LinearQuantizer::fit(self.bits, x.data());
+        let mut w = BodyWriter::new();
+        w.f32(q.min);
+        w.f32(q.max);
+        let mut bits = BitWriter::with_capacity((x.numel() * self.bits as usize + 7) / 8);
+        for &v in x.data() {
+            bits.put(q.quantize(v), self.bits);
+        }
+        w.bytes(&bits.finish());
+        Ok(Payload {
+            kind: CodecKind::UniformLinear as u8,
+            shape: [b, c, m, n],
+            body: w.finish(),
+        })
+    }
+
+    fn decompress(&self, p: &Payload) -> Result<Tensor> {
+        let [b, c, m, n] = p.shape;
+        let count = b * c * m * n;
+        let mut r = BodyReader::new(&p.body);
+        let q = LinearQuantizer {
+            bits: self.bits,
+            min: r.f32()?,
+            max: r.f32()?,
+        };
+        let packed = r.bytes((count * self.bits as usize + 7) / 8)?;
+        let mut bits = BitReader::new(packed);
+        let data: Vec<f32> = (0..count).map(|_| q.dequantize(bits.get(self.bits))).collect();
+        Ok(Tensor::new(&[b, c, m, n], data))
+    }
+}
+
+/// FP32 passthrough — the no-compression reference for ratio accounting.
+#[derive(Debug, Clone, Copy)]
+pub struct IdentityCodec;
+
+impl ActivationCodec for IdentityCodec {
+    fn name(&self) -> &'static str {
+        "identity"
+    }
+
+    fn kind(&self) -> CodecKind {
+        CodecKind::Identity
+    }
+
+    fn compress(&self, x: &Tensor) -> Result<Payload> {
+        let (b, c, m, n) = x.as_bchw();
+        let mut body = Vec::with_capacity(x.numel() * 4);
+        for &v in x.data() {
+            body.extend_from_slice(&v.to_le_bytes());
+        }
+        Ok(Payload {
+            kind: CodecKind::Identity as u8,
+            shape: [b, c, m, n],
+            body,
+        })
+    }
+
+    fn decompress(&self, p: &Payload) -> Result<Tensor> {
+        let [b, c, m, n] = p.shape;
+        let count = b * c * m * n;
+        ensure!(
+            p.body.len() == count * 4,
+            "identity payload length mismatch"
+        );
+        let data: Vec<f32> = p
+            .body
+            .chunks_exact(4)
+            .map(|ch| f32::from_le_bytes(ch.try_into().unwrap()))
+            .collect();
+        Ok(Tensor::new(&[b, c, m, n], data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::smooth_activations;
+
+    #[test]
+    fn powerquant_roundtrip() {
+        let x = smooth_activations(&[2, 4, 8, 8], 31);
+        let codec = PowerQuantCodec::new(6);
+        let back = codec.decompress(&codec.compress(&x).unwrap()).unwrap();
+        assert!(back.rel_l2_error(&x) < 0.1);
+    }
+
+    #[test]
+    fn easyquant_roundtrip_with_outliers() {
+        let mut x = smooth_activations(&[1, 4, 8, 8], 32);
+        x.data_mut()[5] = 100.0; // hard outlier
+        let codec = EasyQuantCodec::new(6);
+        let back = codec.decompress(&codec.compress(&x).unwrap()).unwrap();
+        assert_eq!(back.data()[5], 100.0, "outlier must be exact");
+        assert!(back.rel_l2_error(&x) < 0.1);
+    }
+
+    #[test]
+    fn uniform_linear_roundtrip_err_bounded_by_step() {
+        let x = smooth_activations(&[2, 2, 6, 6], 33);
+        let codec = UniformLinearCodec::new(8);
+        let back = codec.decompress(&codec.compress(&x).unwrap()).unwrap();
+        let (lo, hi) = x.min_max();
+        let step = (hi - lo) / 255.0;
+        assert!(back.max_abs_diff(&x) <= step / 2.0 + 1e-6);
+    }
+
+    #[test]
+    fn identity_is_exact() {
+        let x = smooth_activations(&[2, 3, 5, 5], 34);
+        let codec = IdentityCodec;
+        let p = codec.compress(&x).unwrap();
+        let back = codec.decompress(&p).unwrap();
+        assert_eq!(back.data(), x.data());
+        // wire cost = raw cost + header
+        assert_eq!(p.body.len(), x.numel() * 4);
+    }
+
+    #[test]
+    fn wire_sizes_ordered_by_bits() {
+        let x = smooth_activations(&[2, 4, 10, 10], 35);
+        let b4 = UniformLinearCodec::new(4).compress(&x).unwrap().wire_bytes();
+        let b8 = UniformLinearCodec::new(8).compress(&x).unwrap().wire_bytes();
+        assert!(b4 < b8);
+    }
+
+    #[test]
+    fn corrupt_headers_rejected() {
+        let x = smooth_activations(&[1, 2, 4, 4], 36);
+        let pq = PowerQuantCodec::new(4);
+        let mut p = pq.compress(&x).unwrap();
+        // exponent ← -1
+        p.body[4..8].copy_from_slice(&(-1.0f32).to_le_bytes());
+        assert!(pq.decompress(&p).is_err());
+
+        let eq = EasyQuantCodec::new(4);
+        let mut p = eq.compress(&x).unwrap();
+        p.body[4..8].copy_from_slice(&u32::MAX.to_le_bytes()); // outlier count
+        assert!(eq.decompress(&p).is_err());
+    }
+}

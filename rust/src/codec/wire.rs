@@ -1,0 +1,386 @@
+//! Wire format for compressed smashed data.
+//!
+//! A [`Payload`] is what travels over the (simulated) network: a small
+//! self-describing header plus the codec-specific body. `to_bytes` /
+//! `from_bytes` define the exact octet layout so the network simulator
+//! charges true byte counts, and so corrupted payloads fail loudly.
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! 0    4  magic "SLFC"
+//! 4    1  version (1)
+//! 5    1  codec kind tag
+//! 6    2  reserved
+//! 8   16  shape (4 × u32: B, C, M, N)
+//! 24   4  body length (u32)
+//! 28   n  codec-specific body
+//! ```
+
+use anyhow::{bail, Result};
+
+/// Magic prefix of every payload.
+pub const MAGIC: &[u8; 4] = b"SLFC";
+/// Current wire version.
+pub const VERSION: u8 = 1;
+/// Fixed header size in bytes.
+pub const HEADER_BYTES: usize = 28;
+
+/// A compressed tensor en route between device and server.
+#[derive(Debug, Clone)]
+pub struct Payload {
+    /// Codec tag (see `CodecKind as u8`).
+    pub kind: u8,
+    /// Original tensor shape (B, C, M, N).
+    pub shape: [usize; 4],
+    /// Codec-specific body.
+    pub body: Vec<u8>,
+}
+
+impl Payload {
+    /// Total wire size in bytes (header + body).
+    pub fn wire_bytes(&self) -> usize {
+        HEADER_BYTES + self.body.len()
+    }
+
+    /// Uncompressed f32 size of the carried tensor.
+    pub fn raw_bytes(&self) -> usize {
+        self.shape.iter().product::<usize>() * 4
+    }
+
+    /// Compression ratio `raw / wire` (>1 means smaller on the wire).
+    pub fn compression_ratio(&self) -> f64 {
+        self.raw_bytes() as f64 / self.wire_bytes() as f64
+    }
+
+    /// Serialize to the octet layout above.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(HEADER_BYTES + self.body.len());
+        out.extend_from_slice(MAGIC);
+        out.push(VERSION);
+        out.push(self.kind);
+        out.extend_from_slice(&[0u8; 2]);
+        for d in self.shape {
+            out.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        out.extend_from_slice(&(self.body.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.body);
+        out
+    }
+
+    /// Parse from octets, validating magic/version/length.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Payload> {
+        if bytes.len() < HEADER_BYTES {
+            bail!("payload too short: {} bytes", bytes.len());
+        }
+        if &bytes[0..4] != MAGIC {
+            bail!("bad payload magic");
+        }
+        if bytes[4] != VERSION {
+            bail!("unsupported payload version {}", bytes[4]);
+        }
+        let kind = bytes[5];
+        let mut shape = [0usize; 4];
+        for (i, d) in shape.iter_mut().enumerate() {
+            let off = 8 + i * 4;
+            *d = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+        }
+        let body_len =
+            u32::from_le_bytes(bytes[24..28].try_into().unwrap()) as usize;
+        if bytes.len() != HEADER_BYTES + body_len {
+            bail!(
+                "payload length mismatch: header says {body_len}, have {}",
+                bytes.len() - HEADER_BYTES
+            );
+        }
+        Ok(Payload {
+            kind,
+            shape,
+            body: bytes[HEADER_BYTES..].to_vec(),
+        })
+    }
+}
+
+/// Little-endian body writer.
+#[derive(Debug, Default)]
+pub struct BodyWriter {
+    buf: Vec<u8>,
+}
+
+impl BodyWriter {
+    /// Empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// With reserved capacity.
+    pub fn with_capacity(n: usize) -> Self {
+        BodyWriter {
+            buf: Vec::with_capacity(n),
+        }
+    }
+
+    /// Append a u8.
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    /// Append a u16.
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    /// Append a u32.
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    /// Append an f32.
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    /// Append an f16 (IEEE half, see [`f32_to_f16`]).
+    pub fn f16(&mut self, v: f32) {
+        self.buf.extend_from_slice(&f32_to_f16(v).to_le_bytes());
+    }
+    /// Append raw bytes.
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+    /// Current length.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+    /// Whether empty.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+    /// Finish, returning the buffer.
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Little-endian body reader with bounds checking.
+#[derive(Debug)]
+pub struct BodyReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BodyReader<'a> {
+    /// Reader over a body slice.
+    pub fn new(buf: &'a [u8]) -> Self {
+        BodyReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!(
+                "truncated payload body: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Read a u8.
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    /// Read a u16.
+    pub fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    /// Read a u32.
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    /// Read an f32.
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    /// Read an f16 into f32.
+    pub fn f16(&mut self) -> Result<f32> {
+        Ok(f16_to_f32(u16::from_le_bytes(
+            self.take(2)?.try_into().unwrap(),
+        )))
+    }
+    /// Read `n` raw bytes.
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.take(n)
+    }
+    /// Remaining unread bytes.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+/// f32 → IEEE 754 binary16 bits (round-to-nearest-even, with overflow→inf).
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x7F_FFFF;
+    if exp == 0xFF {
+        // inf / nan
+        return sign | 0x7C00 | if mant != 0 { 0x200 } else { 0 };
+    }
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7C00; // overflow → inf
+    }
+    if unbiased >= -14 {
+        // normal half
+        let half_exp = (unbiased + 15) as u32;
+        let mut half_mant = mant >> 13;
+        // round to nearest even
+        let round_bits = mant & 0x1FFF;
+        if round_bits > 0x1000 || (round_bits == 0x1000 && (half_mant & 1) == 1) {
+            half_mant += 1;
+        }
+        let out = (half_exp << 10) + half_mant; // mantissa carry rolls into exp
+        return sign | out as u16;
+    }
+    if unbiased >= -24 {
+        // subnormal half: half_mant = round(x / 2^-24) = full >> (-unbiased-1)
+        let shift = (-unbiased - 1) as u32;
+        let full = mant | 0x80_0000;
+        let mut half_mant = full >> shift;
+        let rem = full & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        if rem > halfway || (rem == halfway && (half_mant & 1) == 1) {
+            half_mant += 1;
+        }
+        return sign | half_mant as u16;
+    }
+    sign // underflow → ±0
+}
+
+/// IEEE 754 binary16 bits → f32.
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x3FF) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // subnormal: normalize (value = mant × 2^-24 = 1.f × 2^(-14-s))
+            let mut e = 0i32;
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x3FF;
+            sign | (((112 + e + 1) as u32) << 23) | (m << 13)
+        }
+    } else if exp == 0x1F {
+        sign | 0x7F80_0000 | (mant << 13)
+    } else {
+        sign | ((exp + 112) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_roundtrip() {
+        let p = Payload {
+            kind: 3,
+            shape: [2, 16, 14, 14],
+            body: vec![1, 2, 3, 4, 5],
+        };
+        let bytes = p.to_bytes();
+        assert_eq!(bytes.len(), p.wire_bytes());
+        let q = Payload::from_bytes(&bytes).unwrap();
+        assert_eq!(q.kind, 3);
+        assert_eq!(q.shape, [2, 16, 14, 14]);
+        assert_eq!(q.body, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn payload_rejects_corruption() {
+        let p = Payload {
+            kind: 1,
+            shape: [1, 1, 2, 2],
+            body: vec![0; 8],
+        };
+        let mut bytes = p.to_bytes();
+        bytes[0] = b'X';
+        assert!(Payload::from_bytes(&bytes).is_err());
+        let mut bytes = p.to_bytes();
+        bytes.truncate(bytes.len() - 1);
+        assert!(Payload::from_bytes(&bytes).is_err());
+        let mut bytes = p.to_bytes();
+        bytes[4] = 99; // version
+        assert!(Payload::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn body_writer_reader_roundtrip() {
+        let mut w = BodyWriter::new();
+        w.u8(7);
+        w.u16(65535);
+        w.u32(123456789);
+        w.f32(-2.5);
+        w.f16(1.5);
+        w.bytes(&[9, 9]);
+        let buf = w.finish();
+        let mut r = BodyReader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u16().unwrap(), 65535);
+        assert_eq!(r.u32().unwrap(), 123456789);
+        assert_eq!(r.f32().unwrap(), -2.5);
+        assert_eq!(r.f16().unwrap(), 1.5);
+        assert_eq!(r.bytes(2).unwrap(), &[9, 9]);
+        assert_eq!(r.remaining(), 0);
+        assert!(r.u8().is_err());
+    }
+
+    #[test]
+    fn f16_exact_values() {
+        for &v in &[0.0f32, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 1.5, 0.25] {
+            assert_eq!(f16_to_f32(f32_to_f16(v)), v, "v={v}");
+        }
+    }
+
+    #[test]
+    fn f16_relative_error_bounded() {
+        let mut rng = crate::rng::Pcg32::seeded(55);
+        for _ in 0..2000 {
+            let v = rng.normal() * 100.0;
+            let back = f16_to_f32(f32_to_f16(v));
+            let rel = ((back - v) / v.abs().max(1e-3)).abs();
+            assert!(rel < 1e-3, "v={v} back={back}");
+        }
+    }
+
+    #[test]
+    fn f16_specials() {
+        assert_eq!(f16_to_f32(f32_to_f16(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(f16_to_f32(f32_to_f16(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        assert_eq!(f16_to_f32(f32_to_f16(1e9)), f32::INFINITY); // overflow
+        assert_eq!(f16_to_f32(f32_to_f16(1e-12)), 0.0); // underflow
+        // subnormal half survives approximately
+        let v = 3.0e-6f32;
+        let back = f16_to_f32(f32_to_f16(v));
+        assert!((back - v).abs() / v < 0.05, "v={v} back={back}");
+    }
+
+    #[test]
+    fn compression_ratio_math() {
+        let p = Payload {
+            kind: 0,
+            shape: [1, 1, 10, 10],
+            body: vec![0; 72],
+        };
+        // raw = 400, wire = 100 ⇒ 4×
+        assert!((p.compression_ratio() - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,362 @@
+//! Experiment configuration: typed schema + JSON loading + validation.
+//!
+//! Config files live in `configs/` (see the presets there). Everything an
+//! experiment needs is in one file — dataset, partition, codec and its
+//! hyper-parameters, training schedule, link model, seeds — so a result CSV
+//! can always be traced back to an exact configuration.
+
+use crate::codec::CodecParams;
+use crate::json::Json;
+use crate::net::LinkConfig;
+use anyhow::{bail, Context, Result};
+
+/// Which dataset preset to use (selects the artifact set too).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DatasetKind {
+    /// MNIST-like 1×28×28, 10 classes.
+    Mnist,
+    /// HAM10000-like 3×32×32, 7 classes.
+    Ham,
+}
+
+impl DatasetKind {
+    /// Parse from a config string.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "mnist" | "mnist_like" => Ok(DatasetKind::Mnist),
+            "ham" | "ham10000" | "ham_like" => Ok(DatasetKind::Ham),
+            other => bail!("unknown dataset '{other}'"),
+        }
+    }
+
+    /// Stable name (artifact subdirectory).
+    pub fn name(&self) -> &'static str {
+        match self {
+            DatasetKind::Mnist => "mnist",
+            DatasetKind::Ham => "ham",
+        }
+    }
+}
+
+/// Device data distribution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Partition {
+    /// Shuffle + even split.
+    Iid,
+    /// Dirichlet with concentration β.
+    Dirichlet(f64),
+}
+
+/// Client sub-model synchronization protocol across devices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncMode {
+    /// SplitFed-style: devices train in parallel each round, client-side
+    /// weights are FedAvg'd at round end (default).
+    ParallelFedAvg,
+    /// Vanilla sequential SL: devices take turns within a round, weights
+    /// hand off from one device to the next.
+    Sequential,
+}
+
+/// Full experiment configuration.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Experiment name (used for the results directory).
+    pub name: String,
+    /// Dataset preset.
+    pub dataset: DatasetKind,
+    /// Train/test sample counts and noise for the synthetic generators.
+    pub train_samples: usize,
+    /// Test split size.
+    pub test_samples: usize,
+    /// Pixel noise std.
+    pub noise: f32,
+    /// Number of edge devices (paper: 5).
+    pub devices: usize,
+    /// IID or Dirichlet(β).
+    pub partition: Partition,
+    /// Client weight sync protocol.
+    pub sync: SyncMode,
+    /// Codec name (see [`crate::codec::by_name`]).
+    pub codec: String,
+    /// Codec hyper-parameters.
+    pub codec_params: CodecParams,
+    /// Communication rounds to run.
+    pub rounds: usize,
+    /// Local batches per device per round.
+    pub batches_per_round: usize,
+    /// Batch size (must match the AOT artifacts).
+    pub batch_size: usize,
+    /// SGD learning rate.
+    pub lr: f32,
+    /// SGD momentum.
+    pub momentum: f32,
+    /// Link model shared by all device links.
+    pub link: LinkConfig,
+    /// Master seed.
+    pub seed: u64,
+    /// Directory holding the AOT artifacts.
+    pub artifacts_dir: String,
+    /// Whether gradients (downlink) are compressed too (paper: yes).
+    pub compress_gradients: bool,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "default".into(),
+            dataset: DatasetKind::Mnist,
+            train_samples: 4000,
+            test_samples: 800,
+            noise: 0.20,
+            devices: 5,
+            partition: Partition::Iid,
+            sync: SyncMode::ParallelFedAvg,
+            codec: "slfac".into(),
+            codec_params: CodecParams::default(),
+            rounds: 15,
+            batches_per_round: 10,
+            batch_size: 32,
+            lr: 0.05,
+            momentum: 0.9,
+            link: LinkConfig::default(),
+            seed: 1234,
+            artifacts_dir: "artifacts".into(),
+            compress_gradients: true,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a JSON file. Unknown keys are rejected (typo safety).
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        let json = Json::parse(&text).with_context(|| format!("parsing config {path}"))?;
+        Self::from_json(&json).with_context(|| format!("validating config {path}"))
+    }
+
+    /// Build from parsed JSON (defaults fill missing keys).
+    pub fn from_json(json: &Json) -> Result<Self> {
+        let obj = json.as_obj().context("config root must be an object")?;
+        let mut cfg = ExperimentConfig::default();
+        for (key, v) in obj {
+            match key.as_str() {
+                "name" => cfg.name = v.as_str().context("name: string")?.to_string(),
+                "dataset" => {
+                    cfg.dataset = DatasetKind::parse(v.as_str().context("dataset: string")?)?
+                }
+                "train_samples" => cfg.train_samples = v.as_usize().context("train_samples")?,
+                "test_samples" => cfg.test_samples = v.as_usize().context("test_samples")?,
+                "noise" => cfg.noise = v.as_f64().context("noise")? as f32,
+                "devices" => cfg.devices = v.as_usize().context("devices")?,
+                "partition" => {
+                    let s = v.as_str().context("partition: string")?;
+                    cfg.partition = match s.to_ascii_lowercase().as_str() {
+                        "iid" => Partition::Iid,
+                        "dirichlet" | "non-iid" | "noniid" => Partition::Dirichlet(0.5),
+                        other => bail!("unknown partition '{other}'"),
+                    };
+                }
+                "dirichlet_beta" => {
+                    let beta = v.as_f64().context("dirichlet_beta")?;
+                    cfg.partition = Partition::Dirichlet(beta);
+                }
+                "sync" => {
+                    let s = v.as_str().context("sync: string")?;
+                    cfg.sync = match s.to_ascii_lowercase().as_str() {
+                        "parallel" | "fedavg" | "splitfed" => SyncMode::ParallelFedAvg,
+                        "sequential" | "vanilla" => SyncMode::Sequential,
+                        other => bail!("unknown sync mode '{other}'"),
+                    };
+                }
+                "codec" => cfg.codec = v.as_str().context("codec: string")?.to_string(),
+                "theta" => cfg.codec_params.theta = v.as_f64().context("theta")?,
+                "b_min" => cfg.codec_params.b_min = v.as_usize().context("b_min")? as u32,
+                "b_max" => cfg.codec_params.b_max = v.as_usize().context("b_max")? as u32,
+                "uniform_bits" => {
+                    cfg.codec_params.uniform_bits = v.as_usize().context("uniform_bits")? as u32
+                }
+                "keep_fraction" => {
+                    cfg.codec_params.keep_fraction = v.as_f64().context("keep_fraction")?
+                }
+                "random_fraction" => {
+                    cfg.codec_params.random_fraction = v.as_f64().context("random_fraction")?
+                }
+                "rounds" => cfg.rounds = v.as_usize().context("rounds")?,
+                "batches_per_round" => {
+                    cfg.batches_per_round = v.as_usize().context("batches_per_round")?
+                }
+                "batch_size" => cfg.batch_size = v.as_usize().context("batch_size")?,
+                "lr" => cfg.lr = v.as_f64().context("lr")? as f32,
+                "momentum" => cfg.momentum = v.as_f64().context("momentum")? as f32,
+                "uplink_mbps" => {
+                    cfg.link.uplink_bps = v.as_f64().context("uplink_mbps")? * 1e6
+                }
+                "downlink_mbps" => {
+                    cfg.link.downlink_bps = v.as_f64().context("downlink_mbps")? * 1e6
+                }
+                "latency_ms" => {
+                    cfg.link.latency_s = v.as_f64().context("latency_ms")? / 1000.0
+                }
+                "jitter" => cfg.link.jitter = v.as_f64().context("jitter")?,
+                "seed" => cfg.seed = v.as_f64().context("seed")? as u64,
+                "artifacts_dir" => {
+                    cfg.artifacts_dir = v.as_str().context("artifacts_dir")?.to_string()
+                }
+                "compress_gradients" => {
+                    cfg.compress_gradients = v.as_bool().context("compress_gradients")?
+                }
+                other => bail!("unknown config key '{other}'"),
+            }
+        }
+        cfg.codec_params.seed = cfg.seed;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity-check ranges.
+    pub fn validate(&self) -> Result<()> {
+        if self.devices == 0 {
+            bail!("devices must be > 0");
+        }
+        if self.rounds == 0 || self.batches_per_round == 0 || self.batch_size == 0 {
+            bail!("rounds, batches_per_round, batch_size must be > 0");
+        }
+        if !(self.codec_params.theta > 0.0 && self.codec_params.theta <= 1.0) {
+            bail!("theta must be in (0, 1]");
+        }
+        crate::quant::AllocationConfig {
+            b_min: self.codec_params.b_min,
+            b_max: self.codec_params.b_max,
+        }
+        .validate()
+        .map_err(|e| anyhow::anyhow!(e))?;
+        if self.train_samples < self.devices {
+            bail!("fewer training samples than devices");
+        }
+        if self.lr <= 0.0 || self.lr > 10.0 {
+            bail!("implausible learning rate {}", self.lr);
+        }
+        Ok(())
+    }
+
+    /// Serialize (for embedding into result files).
+    pub fn to_json(&self) -> Json {
+        use std::collections::BTreeMap;
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Json::Str(self.name.clone()));
+        m.insert("dataset".into(), Json::Str(self.dataset.name().into()));
+        m.insert("train_samples".into(), Json::Num(self.train_samples as f64));
+        m.insert("test_samples".into(), Json::Num(self.test_samples as f64));
+        m.insert("noise".into(), Json::Num(self.noise as f64));
+        m.insert("devices".into(), Json::Num(self.devices as f64));
+        match self.partition {
+            Partition::Iid => {
+                m.insert("partition".into(), Json::Str("iid".into()));
+            }
+            Partition::Dirichlet(beta) => {
+                m.insert("partition".into(), Json::Str("dirichlet".into()));
+                m.insert("dirichlet_beta".into(), Json::Num(beta));
+            }
+        }
+        m.insert(
+            "sync".into(),
+            Json::Str(
+                match self.sync {
+                    SyncMode::ParallelFedAvg => "parallel",
+                    SyncMode::Sequential => "sequential",
+                }
+                .into(),
+            ),
+        );
+        m.insert("codec".into(), Json::Str(self.codec.clone()));
+        m.insert("theta".into(), Json::Num(self.codec_params.theta));
+        m.insert("b_min".into(), Json::Num(self.codec_params.b_min as f64));
+        m.insert("b_max".into(), Json::Num(self.codec_params.b_max as f64));
+        m.insert(
+            "uniform_bits".into(),
+            Json::Num(self.codec_params.uniform_bits as f64),
+        );
+        m.insert(
+            "keep_fraction".into(),
+            Json::Num(self.codec_params.keep_fraction),
+        );
+        m.insert("rounds".into(), Json::Num(self.rounds as f64));
+        m.insert(
+            "batches_per_round".into(),
+            Json::Num(self.batches_per_round as f64),
+        );
+        m.insert("batch_size".into(), Json::Num(self.batch_size as f64));
+        m.insert("lr".into(), Json::Num(self.lr as f64));
+        m.insert("momentum".into(), Json::Num(self.momentum as f64));
+        m.insert("seed".into(), Json::Num(self.seed as f64));
+        m.insert(
+            "compress_gradients".into(),
+            Json::Bool(self.compress_gradients),
+        );
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip_keeps_fields() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.codec = "tk-sl".into();
+        cfg.rounds = 30;
+        cfg.partition = Partition::Dirichlet(0.5);
+        let json = cfg.to_json();
+        let back = ExperimentConfig::from_json(&json).unwrap();
+        assert_eq!(back.codec, "tk-sl");
+        assert_eq!(back.rounds, 30);
+        assert_eq!(back.partition, Partition::Dirichlet(0.5));
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let json = Json::parse(r#"{"codek": "slfac"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&json).is_err());
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        for bad in [
+            r#"{"devices": 0}"#,
+            r#"{"theta": 1.5}"#,
+            r#"{"b_min": 9, "b_max": 8}"#,
+            r#"{"partition": "weird"}"#,
+            r#"{"lr": -1}"#,
+        ] {
+            let json = Json::parse(bad).unwrap();
+            assert!(
+                ExperimentConfig::from_json(&json).is_err(),
+                "should reject {bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn partition_aliases() {
+        let json = Json::parse(r#"{"partition": "non-iid"}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&json).unwrap();
+        assert_eq!(cfg.partition, Partition::Dirichlet(0.5));
+    }
+
+    #[test]
+    fn link_units_convert() {
+        let json =
+            Json::parse(r#"{"uplink_mbps": 50, "latency_ms": 20}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&json).unwrap();
+        assert!((cfg.link.uplink_bps - 50e6).abs() < 1.0);
+        assert!((cfg.link.latency_s - 0.02).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,106 @@
+//! FedAvg aggregation of client-side sub-models (SplitFed protocol).
+//!
+//! The paper runs 5 devices but does not spell out the client-weight sync;
+//! SplitFed-style FedAvg each round is the standard multi-device SL
+//! protocol (DESIGN.md §3). Weights are averaged proportionally to shard
+//! sizes so unbalanced non-IID partitions do not bias toward small shards.
+
+use crate::runtime::HostTensor;
+use anyhow::{ensure, Result};
+
+/// Weighted average of per-device flat parameter lists.
+///
+/// `per_device[d]` is device `d`'s parameter list; `weights[d]` its
+/// aggregation weight (e.g. shard size). All lists must be congruent.
+pub fn fedavg(per_device: &[Vec<HostTensor>], weights: &[f64]) -> Result<Vec<HostTensor>> {
+    ensure!(!per_device.is_empty(), "fedavg over zero devices");
+    ensure!(per_device.len() == weights.len(), "weights/devices mismatch");
+    let total: f64 = weights.iter().sum();
+    ensure!(total > 0.0, "fedavg with zero total weight");
+    let n_params = per_device[0].len();
+    for (d, params) in per_device.iter().enumerate() {
+        ensure!(
+            params.len() == n_params,
+            "device {d} has {} params, expected {n_params}",
+            params.len()
+        );
+    }
+
+    let mut out = Vec::with_capacity(n_params);
+    for i in 0..n_params {
+        let dims = per_device[0][i].dims().to_vec();
+        let mut acc = vec![0.0f64; per_device[0][i].numel()];
+        for (params, &w) in per_device.iter().zip(weights) {
+            ensure!(
+                params[i].dims() == dims.as_slice(),
+                "param {i} shape mismatch across devices"
+            );
+            let frac = w / total;
+            for (a, &v) in acc.iter_mut().zip(params[i].as_f32()) {
+                *a += frac * v as f64;
+            }
+        }
+        out.push(HostTensor::f32(
+            &dims,
+            acc.into_iter().map(|v| v as f32).collect(),
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(vals: &[f32]) -> Vec<HostTensor> {
+        vec![HostTensor::f32(&[vals.len()], vals.to_vec())]
+    }
+
+    #[test]
+    fn equal_weights_is_plain_mean() {
+        let avg = fedavg(&[p(&[1.0, 2.0]), p(&[3.0, 4.0])], &[1.0, 1.0]).unwrap();
+        assert_eq!(avg[0].as_f32(), &[2.0, 3.0]);
+    }
+
+    #[test]
+    fn weighted_mean() {
+        let avg = fedavg(&[p(&[0.0]), p(&[10.0])], &[3.0, 1.0]).unwrap();
+        assert!((avg[0].as_f32()[0] - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn single_device_identity() {
+        let avg = fedavg(&[p(&[5.0, -1.0])], &[7.0]).unwrap();
+        assert_eq!(avg[0].as_f32(), &[5.0, -1.0]);
+    }
+
+    #[test]
+    fn rejects_mismatches() {
+        assert!(fedavg(&[], &[]).is_err());
+        assert!(fedavg(&[p(&[1.0])], &[1.0, 2.0]).is_err());
+        assert!(fedavg(&[p(&[1.0]), p(&[1.0, 2.0])], &[1.0, 1.0]).is_err());
+        assert!(fedavg(&[p(&[1.0]), p(&[2.0])], &[0.0, 0.0]).is_err());
+    }
+
+    #[test]
+    fn property_average_within_bounds() {
+        crate::testing::prop("fedavg bounds", 50, |g| {
+            let devices = g.usize_in(1, 6);
+            let n = g.usize_in(1, 20);
+            let per: Vec<Vec<HostTensor>> = (0..devices)
+                .map(|_| vec![HostTensor::f32(&[n], g.normal_vec(n))])
+                .collect();
+            let weights: Vec<f64> = (0..devices)
+                .map(|_| 0.1 + g.f32_in(0.0, 5.0) as f64)
+                .collect();
+            let avg = fedavg(&per, &weights).unwrap();
+            for i in 0..n {
+                let vals: Vec<f32> = per.iter().map(|d| d[0].as_f32()[i]).collect();
+                let lo = vals.iter().cloned().fold(f32::INFINITY, f32::min);
+                let hi = vals.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let a = avg[0].as_f32()[i];
+                assert!(a >= lo - 1e-4 && a <= hi + 1e-4);
+            }
+        });
+    }
+}

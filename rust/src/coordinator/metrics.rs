@@ -1,0 +1,175 @@
+//! Per-round training metrics and history (the data behind Fig. 2–4).
+
+use std::fmt::Write as _;
+
+/// Everything measured in one communication round.
+#[derive(Debug, Clone)]
+pub struct RoundMetrics {
+    /// 1-based round index.
+    pub round: usize,
+    /// Mean training loss across devices/batches this round.
+    pub train_loss: f64,
+    /// Training accuracy across devices/batches this round.
+    pub train_acc: f64,
+    /// Test accuracy of the aggregated model after this round.
+    pub test_acc: f64,
+    /// Test loss.
+    pub test_loss: f64,
+    /// Uplink bytes this round (all devices).
+    pub uplink_bytes: u64,
+    /// Downlink bytes this round (all devices).
+    pub downlink_bytes: u64,
+    /// Simulated communication makespan this round (parallel links), s.
+    pub comm_time_s: f64,
+    /// Wall-clock compute time this round, s.
+    pub wall_time_s: f64,
+}
+
+impl RoundMetrics {
+    /// Total bytes both directions.
+    pub fn total_bytes(&self) -> u64 {
+        self.uplink_bytes + self.downlink_bytes
+    }
+}
+
+/// Full history of a run plus identifying metadata.
+#[derive(Debug, Clone, Default)]
+pub struct TrainingHistory {
+    /// Experiment name.
+    pub name: String,
+    /// Codec name.
+    pub codec: String,
+    /// Rounds, in order.
+    pub rounds: Vec<RoundMetrics>,
+}
+
+impl TrainingHistory {
+    /// Best test accuracy seen.
+    pub fn best_test_acc(&self) -> f64 {
+        self.rounds.iter().map(|r| r.test_acc).fold(0.0, f64::max)
+    }
+
+    /// Final test accuracy.
+    pub fn final_test_acc(&self) -> f64 {
+        self.rounds.last().map(|r| r.test_acc).unwrap_or(0.0)
+    }
+
+    /// First round whose test accuracy reaches `target`, if any.
+    pub fn rounds_to_accuracy(&self, target: f64) -> Option<usize> {
+        self.rounds.iter().find(|r| r.test_acc >= target).map(|r| r.round)
+    }
+
+    /// Cumulative bytes transmitted up to and including round `i` (0-based).
+    pub fn cumulative_bytes(&self, i: usize) -> u64 {
+        self.rounds[..=i].iter().map(|r| r.total_bytes()).sum()
+    }
+
+    /// Total bytes for the whole run.
+    pub fn total_bytes(&self) -> u64 {
+        self.rounds.iter().map(|r| r.total_bytes()).sum()
+    }
+
+    /// Render as CSV (header + one row per round).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "round,train_loss,train_acc,test_loss,test_acc,uplink_bytes,downlink_bytes,cum_bytes,comm_time_s,wall_time_s\n",
+        );
+        let mut cum = 0u64;
+        for r in &self.rounds {
+            cum += r.total_bytes();
+            let _ = writeln!(
+                s,
+                "{},{:.5},{:.4},{:.5},{:.4},{},{},{},{:.4},{:.3}",
+                r.round,
+                r.train_loss,
+                r.train_acc,
+                r.test_loss,
+                r.test_acc,
+                r.uplink_bytes,
+                r.downlink_bytes,
+                cum,
+                r.comm_time_s,
+                r.wall_time_s
+            );
+        }
+        s
+    }
+
+    /// Write the CSV to `path` (creating parent dirs).
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_csv())
+    }
+
+    /// One-line summary for logs/tables.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<12} {:<10} final acc {:.2}%  best {:.2}%  total {:.2} MB  comm {:.2}s",
+            self.name,
+            self.codec,
+            self.final_test_acc() * 100.0,
+            self.best_test_acc() * 100.0,
+            self.total_bytes() as f64 / 1e6,
+            self.rounds.iter().map(|r| r.comm_time_s).sum::<f64>(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(round: usize, acc: f64, bytes: u64) -> RoundMetrics {
+        RoundMetrics {
+            round,
+            train_loss: 1.0,
+            train_acc: acc,
+            test_acc: acc,
+            test_loss: 1.0,
+            uplink_bytes: bytes,
+            downlink_bytes: bytes / 2,
+            comm_time_s: 0.1,
+            wall_time_s: 0.5,
+        }
+    }
+
+    #[test]
+    fn accuracy_queries() {
+        let h = TrainingHistory {
+            name: "t".into(),
+            codec: "slfac".into(),
+            rounds: vec![mk(1, 0.5, 100), mk(2, 0.8, 100), mk(3, 0.7, 100)],
+        };
+        assert_eq!(h.best_test_acc(), 0.8);
+        assert_eq!(h.final_test_acc(), 0.7);
+        assert_eq!(h.rounds_to_accuracy(0.75), Some(2));
+        assert_eq!(h.rounds_to_accuracy(0.95), None);
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let h = TrainingHistory {
+            name: "t".into(),
+            codec: "x".into(),
+            rounds: vec![mk(1, 0.1, 100), mk(2, 0.2, 200)],
+        };
+        assert_eq!(h.cumulative_bytes(0), 150);
+        assert_eq!(h.cumulative_bytes(1), 450);
+        assert_eq!(h.total_bytes(), 450);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let h = TrainingHistory {
+            name: "t".into(),
+            codec: "x".into(),
+            rounds: vec![mk(1, 0.5, 64)],
+        };
+        let csv = h.to_csv();
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0].split(',').count(), lines[1].split(',').count());
+    }
+}

@@ -1,0 +1,31 @@
+//! L3 coordinator: the split-learning system.
+//!
+//! * [`trainer`] — the training orchestrator: device workers, lockstep
+//!   round phases, SplitFed client-weight aggregation, sequential-SL mode,
+//!   evaluation, and the wire path (codec ↔ network simulator ↔ runtime).
+//! * [`aggregate`] — FedAvg over flat parameter lists.
+//! * [`metrics`] — per-round metrics, history, CSV output.
+//!
+//! One communication round (parallel mode) runs in three deterministic
+//! phases per local batch:
+//!
+//! 1. **fan-out (parallel)** — every device runs `client_fwd` through the
+//!    executor, compresses the smashed data (L3 codec, device thread), and
+//!    "uplinks" it through its simulated link;
+//! 2. **server (serialized, device order)** — decompress (+ `idct` for
+//!    frequency codecs), `server_step` (updates server params, returns the
+//!    activation gradient in both domains), compress the gradient,
+//!    "downlink" it;
+//! 3. **fan-in (parallel)** — every device decompresses its gradient and
+//!    runs `client_step`.
+//!
+//! Phase 2's fixed ordering makes runs bit-reproducible while codec work
+//! still parallelizes across device threads.
+
+pub mod aggregate;
+pub mod metrics;
+pub mod trainer;
+
+pub use aggregate::fedavg;
+pub use metrics::{RoundMetrics, TrainingHistory};
+pub use trainer::{TrainOutcome, Trainer};

@@ -1,0 +1,587 @@
+//! The training orchestrator: devices, rounds, the wire path, aggregation,
+//! evaluation. See the module docs in [`super`] for the phase structure.
+
+use crate::codec::{self, ActivationCodec, Payload};
+use crate::config::{DatasetKind, ExperimentConfig, Partition, SyncMode};
+use crate::data::{
+    partition_dirichlet, partition_iid, synthetic, BatchLoader, Dataset,
+};
+use crate::net::{CommStats, Direction, Link};
+use crate::runtime::{ExecutorHandle, ExecutorStats, HostTensor};
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::metrics::{RoundMetrics, TrainingHistory};
+
+/// Per-device state owned by the trainer across rounds.
+struct DeviceCtx {
+    id: usize,
+    loader: BatchLoader,
+    link: Link,
+    /// Device's client-side parameters (SplitFed: reset to the aggregate at
+    /// round start; sequential: handed off device-to-device).
+    cp: Vec<HostTensor>,
+    /// Device's client-side momenta.
+    cm: Vec<HostTensor>,
+    shard_len: usize,
+    /// Set by phase 1, consumed by phases 2–3.
+    pending: Option<StepCtx>,
+    /// Link busy time at round start (for per-round makespan).
+    busy_at_round_start: f64,
+}
+
+/// One in-flight batch between phases.
+struct StepCtx {
+    x: HostTensor,
+    y: HostTensor,
+    uplink: Payload,
+    /// Filled by phase 2.
+    grad: Option<GradMsg>,
+}
+
+/// Gradient travelling server→device.
+enum GradMsg {
+    /// Compressed (codec wire path).
+    Compressed(Payload),
+    /// Raw tensor (when `compress_gradients = false`).
+    Raw(HostTensor),
+}
+
+/// Final result of a training run.
+pub struct TrainOutcome {
+    /// Per-round metrics.
+    pub history: TrainingHistory,
+    /// Aggregate communication statistics.
+    pub comm: CommStats,
+    /// Executor-side statistics (per-artifact exec counts/times).
+    pub exec_stats: ExecutorStats,
+}
+
+/// The split-learning trainer (one experiment run).
+pub struct Trainer {
+    cfg: ExperimentConfig,
+    exec: ExecutorHandle,
+    codec: Arc<dyn ActivationCodec>,
+    preset: String,
+    train: Dataset,
+    test: Dataset,
+    devices: Vec<DeviceCtx>,
+    /// Server-side parameters + momenta (updated in phase 2 only; the Mutex
+    /// documents the sharing discipline for future parallel-server modes).
+    server: Mutex<(Vec<HostTensor>, Vec<HostTensor>)>,
+    /// Aggregated client params/momenta between rounds.
+    client: (Vec<HostTensor>, Vec<HostTensor>),
+    n_client_params: usize,
+}
+
+impl Trainer {
+    /// Build a trainer: datasets, partition, executor, initial parameters.
+    pub fn new(cfg: ExperimentConfig, exec: ExecutorHandle) -> Result<Self> {
+        cfg.validate()?;
+        let preset = cfg.dataset.name().to_string();
+        let manifest = crate::runtime::ArtifactManifest::load(&cfg.artifacts_dir)?;
+        let pm = manifest.preset(&preset)?.clone();
+        anyhow::ensure!(
+            pm.batch_size == cfg.batch_size,
+            "config batch_size {} != artifact batch_size {} — re-run `make artifacts`",
+            cfg.batch_size,
+            pm.batch_size
+        );
+
+        let spec = synthetic::DatasetSpec {
+            train_samples: cfg.train_samples,
+            test_samples: cfg.test_samples,
+            noise: cfg.noise,
+            seed: cfg.seed,
+        };
+        let (train, test) = match cfg.dataset {
+            DatasetKind::Mnist => synthetic::mnist_like(&spec),
+            DatasetKind::Ham => synthetic::ham_like(&spec),
+        };
+
+        let parts = match cfg.partition {
+            Partition::Iid => partition_iid(&train, cfg.devices, cfg.seed),
+            Partition::Dirichlet(beta) => {
+                partition_dirichlet(&train, cfg.devices, beta, cfg.seed)
+            }
+        };
+        crate::info!(
+            "partition: {} devices, skew {:.3}",
+            cfg.devices,
+            crate::data::partition::label_skew(&train, &parts)
+        );
+
+        // initial parameters from the init artifact
+        let init_out = exec.execute(&preset, "init", vec![])?;
+        let n_client = pm.client_params.len();
+        let n_server = pm.server_params.len();
+        anyhow::ensure!(
+            init_out.len() == n_client + n_server,
+            "init artifact returned {} tensors, manifest says {}",
+            init_out.len(),
+            n_client + n_server
+        );
+        let mut it = init_out.into_iter();
+        let cp: Vec<HostTensor> = (&mut it).take(n_client).collect();
+        let sp: Vec<HostTensor> = it.collect();
+        let zeros =
+            |ps: &[HostTensor]| -> Vec<HostTensor> {
+                ps.iter()
+                    .map(|p| HostTensor::f32(p.dims(), vec![0.0; p.numel()]))
+                    .collect()
+            };
+        let cm = zeros(&cp);
+        let sm = zeros(&sp);
+
+        let codec: Arc<dyn ActivationCodec> =
+            Arc::from(codec::by_name(&cfg.codec, &cfg.codec_params)?);
+
+        let devices = parts
+            .into_iter()
+            .enumerate()
+            .map(|(id, shard)| DeviceCtx {
+                id,
+                shard_len: shard.len(),
+                loader: BatchLoader::new(shard, cfg.batch_size, cfg.seed ^ (id as u64) << 16),
+                link: Link::new(cfg.link, cfg.seed.wrapping_add(id as u64)),
+                cp: cp.clone(),
+                cm: cm.clone(),
+                pending: None,
+                busy_at_round_start: 0.0,
+            })
+            .collect();
+
+        Ok(Trainer {
+            cfg,
+            exec,
+            codec,
+            preset,
+            train,
+            test,
+            devices,
+            server: Mutex::new((sp, sm)),
+            client: (cp, cm),
+            n_client_params: n_client,
+        })
+    }
+
+    /// The experiment configuration.
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    /// Run all configured rounds; returns the full outcome.
+    pub fn run(&mut self) -> Result<TrainOutcome> {
+        let mut history = TrainingHistory {
+            name: self.cfg.name.clone(),
+            codec: self.cfg.codec.clone(),
+            rounds: Vec::new(),
+        };
+        for round in 1..=self.cfg.rounds {
+            let m = self.run_round(round)?;
+            crate::info!(
+                "round {:>3}: loss {:.4} train {:.1}% test {:.1}%  {:.2} MB  comm {:.3}s",
+                round,
+                m.train_loss,
+                m.train_acc * 100.0,
+                m.test_acc * 100.0,
+                m.total_bytes() as f64 / 1e6,
+                m.comm_time_s
+            );
+            history.rounds.push(m);
+        }
+        let links: Vec<&Link> = self.devices.iter().map(|d| &d.link).collect();
+        let mut comm = CommStats::default();
+        for l in links {
+            comm.uplink_bytes += l.uplink_bytes;
+            comm.downlink_bytes += l.downlink_bytes;
+            comm.total_busy_s += l.busy_s;
+            comm.makespan_s = comm.makespan_s.max(l.busy_s);
+        }
+        Ok(TrainOutcome {
+            history,
+            comm,
+            exec_stats: self.exec.stats()?,
+        })
+    }
+
+    /// One communication round.
+    fn run_round(&mut self, round: usize) -> Result<RoundMetrics> {
+        let t0 = Instant::now();
+        match self.cfg.sync {
+            SyncMode::ParallelFedAvg => self.round_parallel(round, t0),
+            SyncMode::Sequential => self.round_sequential(round, t0),
+        }
+    }
+
+    fn round_parallel(&mut self, round: usize, t0: Instant) -> Result<RoundMetrics> {
+        // reset device copies to the aggregate
+        for d in self.devices.iter_mut() {
+            d.cp = self.client.0.clone();
+            d.cm = self.client.1.clone();
+            d.busy_at_round_start = d.link.busy_s;
+        }
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0u64;
+        let mut samples = 0u64;
+        let (mut up0, mut down0) = (0u64, 0u64);
+        for d in &self.devices {
+            up0 += d.link.uplink_bytes;
+            down0 += d.link.downlink_bytes;
+        }
+
+        for _step in 0..self.cfg.batches_per_round {
+            self.phase_fanout()?;
+            let (l, c, n) = self.phase_server()?;
+            loss_sum += l;
+            correct += c;
+            samples += n;
+            self.phase_fanin()?;
+        }
+
+        // SplitFed aggregation, weighted by shard sizes
+        let weights: Vec<f64> = self.devices.iter().map(|d| d.shard_len as f64).collect();
+        let cps: Vec<Vec<HostTensor>> =
+            self.devices.iter().map(|d| d.cp.clone()).collect();
+        let cms: Vec<Vec<HostTensor>> =
+            self.devices.iter().map(|d| d.cm.clone()).collect();
+        self.client = (
+            super::aggregate::fedavg(&cps, &weights)?,
+            super::aggregate::fedavg(&cms, &weights)?,
+        );
+
+        self.finish_round(round, t0, loss_sum, correct, samples, up0, down0)
+    }
+
+    fn round_sequential(&mut self, round: usize, t0: Instant) -> Result<RoundMetrics> {
+        // vanilla SL: client weights hand off device→device within the round
+        for d in self.devices.iter_mut() {
+            d.busy_at_round_start = d.link.busy_s;
+        }
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0u64;
+        let mut samples = 0u64;
+        let (mut up0, mut down0) = (0u64, 0u64);
+        for d in &self.devices {
+            up0 += d.link.uplink_bytes;
+            down0 += d.link.downlink_bytes;
+        }
+
+        let (mut cp, mut cm) = (self.client.0.clone(), self.client.1.clone());
+        for di in 0..self.devices.len() {
+            self.devices[di].cp = cp.clone();
+            self.devices[di].cm = cm.clone();
+            for _ in 0..self.cfg.batches_per_round {
+                self.device_fanout(di)?;
+                let (l, c, n) = self.server_step_for(di)?;
+                loss_sum += l;
+                correct += c;
+                samples += n;
+                self.device_fanin(di)?;
+            }
+            cp = self.devices[di].cp.clone();
+            cm = self.devices[di].cm.clone();
+        }
+        self.client = (cp, cm);
+        self.finish_round(round, t0, loss_sum, correct, samples, up0, down0)
+    }
+
+    /// Phase 1 over all devices, codec work parallel across device threads.
+    fn phase_fanout(&mut self) -> Result<()> {
+        let exec = &self.exec;
+        let codec = &self.codec;
+        let cfg = &self.cfg;
+        let preset = &self.preset;
+        let train = &self.train;
+        let results: Vec<Result<()>> = std::thread::scope(|s| {
+            let handles: Vec<_> = self
+                .devices
+                .iter_mut()
+                .map(|dev| {
+                    let exec = exec.clone();
+                    let codec = Arc::clone(codec);
+                    s.spawn(move || {
+                        device_fanout_impl(dev, &exec, codec.as_ref(), cfg, preset, train)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+        });
+        results.into_iter().collect()
+    }
+
+    fn device_fanout(&mut self, di: usize) -> Result<()> {
+        device_fanout_impl(
+            &mut self.devices[di],
+            &self.exec,
+            self.codec.as_ref(),
+            &self.cfg,
+            &self.preset,
+            &self.train,
+        )
+    }
+
+    /// Phase 2: serialized server updates in device order.
+    fn phase_server(&mut self) -> Result<(f64, u64, u64)> {
+        let mut loss = 0.0;
+        let mut correct = 0u64;
+        let mut n = 0u64;
+        for di in 0..self.devices.len() {
+            let (l, c, b) = self.server_step_for(di)?;
+            loss += l;
+            correct += c;
+            n += b;
+        }
+        Ok((loss, correct, n))
+    }
+
+    fn server_step_for(&mut self, di: usize) -> Result<(f64, u64, u64)> {
+        let cfg = &self.cfg;
+        let freq = self.codec.frequency_domain();
+        let dev = &mut self.devices[di];
+        let step = dev.pending.as_mut().context("phase order violation")?;
+
+        // decompress uplink → activations
+        let decoded = self.codec.decompress(&step.uplink)?;
+        let act = if freq {
+            let out = self.exec.execute(
+                &self.preset,
+                "idct",
+                vec![HostTensor::from_tensor(&decoded)],
+            )?;
+            out.into_iter().next().context("idct output")?
+        } else {
+            HostTensor::from_tensor(&decoded)
+        };
+
+        // server training step
+        let mut server = self.server.lock().unwrap();
+        let (sp, sm) = &mut *server;
+        let n_s = sp.len();
+        let mut inputs = Vec::with_capacity(2 * n_s + 3);
+        inputs.extend(sp.iter().cloned());
+        inputs.extend(sm.iter().cloned());
+        inputs.push(act);
+        inputs.push(step.y.clone());
+        inputs.push(HostTensor::scalar_f32(cfg.lr));
+        let mut out = self
+            .exec
+            .execute(&self.preset, "server_step", inputs)?
+            .into_iter();
+        let new_sp: Vec<HostTensor> = (&mut out).take(n_s).collect();
+        let new_sm: Vec<HostTensor> = (&mut out).take(n_s).collect();
+        let loss = out.next().context("loss output")?.first();
+        let correct = out.next().context("correct output")?.first() as u64;
+        let gact = out.next().context("gact output")?;
+        let gact_dct = out.next().context("gact_dct output")?;
+        *sp = new_sp;
+        *sm = new_sm;
+        drop(server);
+
+        // downlink gradient
+        let batch = step.y.numel() as u64;
+        if cfg.compress_gradients {
+            let g = if freq { gact_dct } else { gact };
+            let payload = self.codec.compress(&g.into_tensor())?;
+            dev.link
+                .transfer(Direction::Downlink, payload.wire_bytes());
+            step.grad = Some(GradMsg::Compressed(payload));
+        } else {
+            dev.link.transfer(Direction::Downlink, gact.raw_bytes());
+            step.grad = Some(GradMsg::Raw(gact));
+        }
+        Ok((loss, correct, batch))
+    }
+
+    /// Phase 3 over all devices, parallel.
+    fn phase_fanin(&mut self) -> Result<()> {
+        let exec = &self.exec;
+        let codec = &self.codec;
+        let cfg = &self.cfg;
+        let preset = &self.preset;
+        let results: Vec<Result<()>> = std::thread::scope(|s| {
+            let handles: Vec<_> = self
+                .devices
+                .iter_mut()
+                .map(|dev| {
+                    let exec = exec.clone();
+                    let codec = Arc::clone(codec);
+                    s.spawn(move || device_fanin_impl(dev, &exec, codec.as_ref(), cfg, preset))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+        });
+        results.into_iter().collect()
+    }
+
+    fn device_fanin(&mut self, di: usize) -> Result<()> {
+        device_fanin_impl(
+            &mut self.devices[di],
+            &self.exec,
+            self.codec.as_ref(),
+            &self.cfg,
+            &self.preset,
+        )
+    }
+
+    fn finish_round(
+        &mut self,
+        round: usize,
+        t0: Instant,
+        loss_sum: f64,
+        correct: u64,
+        samples: u64,
+        up0: u64,
+        down0: u64,
+    ) -> Result<RoundMetrics> {
+        let (test_loss, test_acc) = self.evaluate()?;
+        let batches = (self.cfg.batches_per_round * self.cfg.devices) as f64;
+        let (mut up1, mut down1) = (0u64, 0u64);
+        let mut makespan = 0.0f64;
+        for d in &self.devices {
+            up1 += d.link.uplink_bytes;
+            down1 += d.link.downlink_bytes;
+            makespan = makespan.max(d.link.busy_s - d.busy_at_round_start);
+        }
+        Ok(RoundMetrics {
+            round,
+            train_loss: loss_sum / batches,
+            train_acc: correct as f64 / samples.max(1) as f64,
+            test_acc,
+            test_loss,
+            uplink_bytes: up1 - up0,
+            downlink_bytes: down1 - down0,
+            comm_time_s: makespan,
+            wall_time_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Evaluate the aggregated model on the test split (full batches only).
+    pub fn evaluate(&self) -> Result<(f64, f64)> {
+        let b = self.cfg.batch_size;
+        let n_batches = self.test.len() / b;
+        anyhow::ensure!(n_batches > 0, "test set smaller than one batch");
+        let server = self.server.lock().unwrap();
+        let (sp, _) = &*server;
+        let mut loss = 0.0;
+        let mut correct = 0u64;
+        for i in 0..n_batches {
+            let mut images = Vec::with_capacity(b * self.test.sample_size());
+            let mut labels = Vec::with_capacity(b);
+            for j in i * b..(i + 1) * b {
+                images.extend_from_slice(self.test.image(j));
+                labels.push(self.test.labels[j] as i32);
+            }
+            let x = HostTensor::f32(
+                &[
+                    b,
+                    self.test.channels,
+                    self.test.height,
+                    self.test.width,
+                ],
+                images,
+            );
+            let y = HostTensor::i32(&[b], labels);
+            let mut inputs = Vec::with_capacity(self.n_client_params + sp.len() + 2);
+            inputs.extend(self.client.0.iter().cloned());
+            inputs.extend(sp.iter().cloned());
+            inputs.push(x);
+            inputs.push(y);
+            let out = self.exec.execute(&self.preset, "eval_step", inputs)?;
+            loss += out[0].first();
+            correct += out[1].first() as u64;
+        }
+        Ok((
+            loss / n_batches as f64,
+            correct as f64 / (n_batches * b) as f64,
+        ))
+    }
+
+    /// Immutable view of per-device link stats (for reports).
+    pub fn link_stats(&self) -> Vec<(usize, u64, u64, f64)> {
+        self.devices
+            .iter()
+            .map(|d| (d.id, d.link.uplink_bytes, d.link.downlink_bytes, d.link.busy_s))
+            .collect()
+    }
+}
+
+/// Phase-1 body (shared by parallel and sequential modes).
+fn device_fanout_impl(
+    dev: &mut DeviceCtx,
+    exec: &ExecutorHandle,
+    codec: &dyn ActivationCodec,
+    cfg: &ExperimentConfig,
+    preset: &str,
+    train: &Dataset,
+) -> Result<()> {
+    let (images, labels) = dev.loader.next_batch(train);
+    let x = HostTensor::f32(
+        &[cfg.batch_size, train.channels, train.height, train.width],
+        images,
+    );
+    let y = HostTensor::i32(
+        &[cfg.batch_size],
+        labels.into_iter().map(|l| l as i32).collect(),
+    );
+    let mut inputs: Vec<HostTensor> = dev.cp.iter().cloned().collect();
+    inputs.push(x.clone());
+    let mut out = exec.execute(preset, "client_fwd", inputs)?.into_iter();
+    let act = out.next().context("act output")?;
+    let act_dct = out.next().context("act_dct output")?;
+
+    let wire_input: Tensor = if codec.frequency_domain() {
+        act_dct.into_tensor()
+    } else {
+        act.into_tensor()
+    };
+    let payload = codec.compress(&wire_input)?;
+    dev.link.transfer(Direction::Uplink, payload.wire_bytes());
+    dev.pending = Some(StepCtx {
+        x,
+        y,
+        uplink: payload,
+        grad: None,
+    });
+    Ok(())
+}
+
+/// Phase-3 body (shared by parallel and sequential modes).
+fn device_fanin_impl(
+    dev: &mut DeviceCtx,
+    exec: &ExecutorHandle,
+    codec: &dyn ActivationCodec,
+    cfg: &ExperimentConfig,
+    preset: &str,
+) -> Result<()> {
+    let step = dev.pending.take().context("phase order violation")?;
+    let grad = step.grad.context("phase 2 did not run")?;
+    let gact = match grad {
+        GradMsg::Raw(g) => g,
+        GradMsg::Compressed(p) => {
+            let decoded = codec.decompress(&p)?;
+            if codec.frequency_domain() {
+                exec.execute(preset, "idct", vec![HostTensor::from_tensor(&decoded)])?
+                    .into_iter()
+                    .next()
+                    .context("idct output")?
+            } else {
+                HostTensor::from_tensor(&decoded)
+            }
+        }
+    };
+    let n_c = dev.cp.len();
+    let mut inputs = Vec::with_capacity(2 * n_c + 3);
+    inputs.extend(dev.cp.iter().cloned());
+    inputs.extend(dev.cm.iter().cloned());
+    inputs.push(step.x);
+    inputs.push(gact);
+    inputs.push(HostTensor::scalar_f32(cfg.lr));
+    let mut out = exec.execute(preset, "client_step", inputs)?.into_iter();
+    dev.cp = (&mut out).take(n_c).collect();
+    dev.cm = out.collect();
+    anyhow::ensure!(dev.cm.len() == n_c, "client_step output arity");
+    Ok(())
+}

@@ -1,0 +1,128 @@
+//! Mini-batch iteration over a device's shard.
+//!
+//! Fixed batch size (HLO artifacts are shape-specialized), per-epoch
+//! reshuffling, and wrap-around so every round can draw a full batch even
+//! from small non-IID shards (sampling with replacement across epoch
+//! boundaries, standard for SL/FL simulators).
+
+use super::Dataset;
+use crate::rng::Pcg32;
+
+/// Cycling, reshuffling batch iterator over a subset of a dataset.
+#[derive(Debug)]
+pub struct BatchLoader {
+    indices: Vec<usize>,
+    cursor: usize,
+    rng: Pcg32,
+    /// Batch size every `next_batch` returns.
+    pub batch_size: usize,
+    /// Epochs completed (full passes over the shard).
+    pub epochs: usize,
+}
+
+impl BatchLoader {
+    /// Loader over `indices` into some dataset.
+    pub fn new(indices: Vec<usize>, batch_size: usize, seed: u64) -> Self {
+        assert!(batch_size > 0);
+        assert!(!indices.is_empty(), "empty shard");
+        let mut rng = Pcg32::new(seed, 211);
+        let mut indices = indices;
+        rng.shuffle(&mut indices);
+        BatchLoader {
+            indices,
+            cursor: 0,
+            rng,
+            batch_size,
+            epochs: 0,
+        }
+    }
+
+    /// Number of batches per full pass (rounded up).
+    pub fn batches_per_epoch(&self) -> usize {
+        (self.indices.len() + self.batch_size - 1) / self.batch_size
+    }
+
+    /// Next batch of `(images, labels)` copied out of `dataset`.
+    /// Images are a flat `[batch, C, H, W]` buffer; labels are u32.
+    pub fn next_batch(&mut self, dataset: &Dataset) -> (Vec<f32>, Vec<u32>) {
+        let sz = dataset.sample_size();
+        let mut images = Vec::with_capacity(self.batch_size * sz);
+        let mut labels = Vec::with_capacity(self.batch_size);
+        for _ in 0..self.batch_size {
+            if self.cursor >= self.indices.len() {
+                self.cursor = 0;
+                self.epochs += 1;
+                self.rng.shuffle(&mut self.indices);
+            }
+            let i = self.indices[self.cursor];
+            self.cursor += 1;
+            images.extend_from_slice(dataset.image(i));
+            labels.push(dataset.labels[i]);
+        }
+        (images, labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{mnist_like, DatasetSpec};
+
+    fn dataset() -> Dataset {
+        let (train, _) = mnist_like(&DatasetSpec {
+            train_samples: 50,
+            test_samples: 0,
+            ..Default::default()
+        });
+        train
+    }
+
+    #[test]
+    fn batches_have_right_shape() {
+        let d = dataset();
+        let mut l = BatchLoader::new((0..d.len()).collect(), 8, 1);
+        let (x, y) = l.next_batch(&d);
+        assert_eq!(x.len(), 8 * 28 * 28);
+        assert_eq!(y.len(), 8);
+    }
+
+    #[test]
+    fn wraps_and_counts_epochs() {
+        let d = dataset();
+        let mut l = BatchLoader::new((0..10).collect(), 8, 2);
+        assert_eq!(l.batches_per_epoch(), 2);
+        for _ in 0..4 {
+            l.next_batch(&d);
+        }
+        assert!(l.epochs >= 2);
+    }
+
+    #[test]
+    fn covers_shard_within_epoch() {
+        let d = dataset();
+        let shard: Vec<usize> = (5..15).collect();
+        let mut l = BatchLoader::new(shard.clone(), 5, 3);
+        let mut seen = std::collections::HashSet::new();
+        // first two batches = one epoch = all 10 distinct indices' labels
+        for _ in 0..2 {
+            let (_, labels) = l.next_batch(&d);
+            for lab in labels {
+                seen.insert(lab);
+            }
+        }
+        // can't check indices directly (loader hides them), so check volume:
+        // 10 samples drawn, epoch counter still <= 1
+        assert!(l.epochs <= 1);
+        assert!(!seen.is_empty());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let d = dataset();
+        let mut a = BatchLoader::new((0..d.len()).collect(), 4, 9);
+        let mut b = BatchLoader::new((0..d.len()).collect(), 4, 9);
+        for _ in 0..5 {
+            assert_eq!(a.next_batch(&d).1, b.next_batch(&d).1);
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! Datasets, partitioning, batching.
+//!
+//! The paper trains on MNIST and HAM10000; this environment has no network
+//! access, so [`synthetic`] provides procedurally generated stand-ins with
+//! genuinely learnable class structure (documented in DESIGN.md §3). The
+//! partitioners reproduce the paper's IID (shuffle + even split) and
+//! non-IID (Dirichlet β = 0.5) device distributions.
+
+pub mod loader;
+pub mod partition;
+pub mod synthetic;
+
+pub use loader::BatchLoader;
+pub use partition::{partition_dirichlet, partition_iid};
+pub use synthetic::{ham_like, mnist_like, DatasetSpec};
+
+/// An in-memory labeled image dataset (NCHW f32 images).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Flat image buffer, `len = n * c * h * w`.
+    pub images: Vec<f32>,
+    /// One label per image.
+    pub labels: Vec<u32>,
+    /// Channels per image.
+    pub channels: usize,
+    /// Image height.
+    pub height: usize,
+    /// Image width.
+    pub width: usize,
+    /// Number of classes.
+    pub num_classes: usize,
+}
+
+impl Dataset {
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// Whether empty.
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Elements per image.
+    pub fn sample_size(&self) -> usize {
+        self.channels * self.height * self.width
+    }
+
+    /// Borrow image `i` as a flat slice.
+    pub fn image(&self, i: usize) -> &[f32] {
+        let sz = self.sample_size();
+        &self.images[i * sz..(i + 1) * sz]
+    }
+
+    /// Subset by indices (copies).
+    pub fn subset(&self, indices: &[usize]) -> Dataset {
+        let sz = self.sample_size();
+        let mut images = Vec::with_capacity(indices.len() * sz);
+        let mut labels = Vec::with_capacity(indices.len());
+        for &i in indices {
+            images.extend_from_slice(self.image(i));
+            labels.push(self.labels[i]);
+        }
+        Dataset {
+            images,
+            labels,
+            ..*self
+        }
+    }
+
+    /// Class histogram (for partition diagnostics).
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.num_classes];
+        for &l in &self.labels {
+            counts[l as usize] += 1;
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset {
+            images: (0..4 * 2 * 3 * 3).map(|i| i as f32).collect(),
+            labels: vec![0, 1, 0, 1],
+            channels: 2,
+            height: 3,
+            width: 3,
+            num_classes: 2,
+        }
+    }
+
+    #[test]
+    fn image_slices() {
+        let d = tiny();
+        assert_eq!(d.sample_size(), 18);
+        assert_eq!(d.image(1)[0], 18.0);
+    }
+
+    #[test]
+    fn subset_copies_right_samples() {
+        let d = tiny();
+        let s = d.subset(&[2, 0]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.labels, vec![0, 0]);
+        assert_eq!(s.image(0), d.image(2));
+    }
+
+    #[test]
+    fn class_counts_sum() {
+        let d = tiny();
+        assert_eq!(d.class_counts(), vec![2, 2]);
+    }
+}

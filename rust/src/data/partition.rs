@@ -1,0 +1,186 @@
+//! Device data partitioning: IID and Dirichlet non-IID (paper §III-A.2).
+//!
+//! * IID — shuffle all samples, split evenly across devices.
+//! * non-IID — the standard Dirichlet partition: for each class, draw class
+//!   proportions `p ~ Dir(β·1)` over devices (β = 0.5 in the paper) and
+//!   deal that class's samples accordingly. Smaller β ⇒ more skew.
+
+use super::Dataset;
+use crate::rng::Pcg32;
+
+/// Evenly split shuffled indices across `devices`. Every device receives
+/// `⌊n/devices⌋` or `⌈n/devices⌉` samples.
+pub fn partition_iid(dataset: &Dataset, devices: usize, seed: u64) -> Vec<Vec<usize>> {
+    assert!(devices > 0);
+    let mut rng = Pcg32::new(seed, 101);
+    let mut idx: Vec<usize> = (0..dataset.len()).collect();
+    rng.shuffle(&mut idx);
+    let mut parts = vec![Vec::new(); devices];
+    for (i, sample) in idx.into_iter().enumerate() {
+        parts[i % devices].push(sample);
+    }
+    parts
+}
+
+/// Dirichlet non-IID partition with concentration `beta` (paper: 0.5).
+///
+/// Guarantees every device ends up non-empty by rebalancing from the
+/// largest shard if the draw starved anyone (rare at realistic sizes, but
+/// the trainer must never see an empty device).
+pub fn partition_dirichlet(
+    dataset: &Dataset,
+    devices: usize,
+    beta: f64,
+    seed: u64,
+) -> Vec<Vec<usize>> {
+    assert!(devices > 0);
+    assert!(beta > 0.0);
+    let mut rng = Pcg32::new(seed, 103);
+    let mut parts: Vec<Vec<usize>> = vec![Vec::new(); devices];
+
+    // per-class index pools
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); dataset.num_classes];
+    for (i, &l) in dataset.labels.iter().enumerate() {
+        by_class[l as usize].push(i);
+    }
+
+    for pool in by_class.iter_mut() {
+        if pool.is_empty() {
+            continue;
+        }
+        rng.shuffle(pool);
+        let props = rng.dirichlet(beta, devices);
+        // convert proportions to integer cut points
+        let n = pool.len();
+        let mut cuts = Vec::with_capacity(devices);
+        let mut acc = 0.0f64;
+        for &p in &props[..devices - 1] {
+            acc += p;
+            cuts.push((acc * n as f64).round() as usize);
+        }
+        cuts.push(n);
+        let mut start = 0;
+        for (d, &end) in cuts.iter().enumerate() {
+            let end = end.clamp(start, n);
+            parts[d].extend_from_slice(&pool[start..end]);
+            start = end;
+        }
+    }
+
+    // rebalance empties
+    loop {
+        let empty = parts.iter().position(|p| p.is_empty());
+        let Some(e) = empty else { break };
+        let largest = {
+            let lens: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+            (0..devices).max_by_key(|&d| lens[d]).expect("devices > 0")
+        };
+        if parts[largest].len() <= 1 {
+            break; // dataset smaller than device count; leave as-is
+        }
+        let half = parts[largest].len() / 2;
+        let moved = parts[largest].split_off(half);
+        parts[e] = moved;
+    }
+
+    for p in parts.iter_mut() {
+        rng.shuffle(p);
+    }
+    parts
+}
+
+/// Skew diagnostic: mean total-variation distance between each device's
+/// class distribution and the global one (0 = perfectly IID).
+pub fn label_skew(dataset: &Dataset, parts: &[Vec<usize>]) -> f64 {
+    let global = dataset.class_counts();
+    let total: usize = global.iter().sum();
+    let gdist: Vec<f64> = global.iter().map(|&c| c as f64 / total as f64).collect();
+    let mut skew = 0.0;
+    for p in parts {
+        let mut counts = vec![0usize; dataset.num_classes];
+        for &i in p {
+            counts[dataset.labels[i] as usize] += 1;
+        }
+        let n: usize = counts.iter().sum();
+        if n == 0 {
+            continue;
+        }
+        let tv: f64 = counts
+            .iter()
+            .zip(&gdist)
+            .map(|(&c, &g)| (c as f64 / n as f64 - g).abs())
+            .sum::<f64>()
+            / 2.0;
+        skew += tv;
+    }
+    skew / parts.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{mnist_like, DatasetSpec};
+
+    fn dataset() -> Dataset {
+        let (train, _) = mnist_like(&DatasetSpec {
+            train_samples: 1000,
+            test_samples: 0,
+            ..Default::default()
+        });
+        train
+    }
+
+    #[test]
+    fn iid_covers_everything_once() {
+        let d = dataset();
+        let parts = partition_iid(&d, 5, 42);
+        let mut all: Vec<usize> = parts.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..d.len()).collect::<Vec<_>>());
+        for p in &parts {
+            assert_eq!(p.len(), 200);
+        }
+    }
+
+    #[test]
+    fn dirichlet_covers_everything_once() {
+        let d = dataset();
+        let parts = partition_dirichlet(&d, 5, 0.5, 42);
+        let mut all: Vec<usize> = parts.iter().flatten().copied().collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), d.len());
+        assert!(parts.iter().all(|p| !p.is_empty()));
+    }
+
+    #[test]
+    fn dirichlet_is_more_skewed_than_iid() {
+        let d = dataset();
+        let iid = partition_iid(&d, 5, 7);
+        let noniid = partition_dirichlet(&d, 5, 0.5, 7);
+        let s_iid = label_skew(&d, &iid);
+        let s_non = label_skew(&d, &noniid);
+        assert!(
+            s_non > s_iid + 0.05,
+            "non-IID skew {s_non} vs IID {s_iid}"
+        );
+    }
+
+    #[test]
+    fn smaller_beta_more_skew() {
+        let d = dataset();
+        let mild = partition_dirichlet(&d, 5, 10.0, 11);
+        let harsh = partition_dirichlet(&d, 5, 0.1, 11);
+        assert!(label_skew(&d, &harsh) > label_skew(&d, &mild));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let d = dataset();
+        let a = partition_dirichlet(&d, 5, 0.5, 33);
+        let b = partition_dirichlet(&d, 5, 0.5, 33);
+        assert_eq!(a, b);
+        let c = partition_dirichlet(&d, 5, 0.5, 34);
+        assert_ne!(a, c);
+    }
+}

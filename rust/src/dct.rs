@@ -1,0 +1,306 @@
+//! Orthonormal DCT-II / DCT-III (inverse) transforms.
+//!
+//! The paper's AFD (Eq. 1–2) applies a per-channel 2-D DCT-II with the
+//! orthonormal scaling `α(u), β(v)`. On the wire path the transform is
+//! produced *inside the HLO graph* by the Pallas kernel (L1); this Rust
+//! implementation exists for
+//!
+//! 1. the standalone/pure-Rust codec mode (unit tests, benches, and tools
+//!    that run without artifacts),
+//! 2. golden-vector cross-validation against the Pallas kernel, and
+//! 3. the L3 perf baseline the benches compare against.
+//!
+//! Implementation: basis-matrix form. `DCT2(X) = D_M · X · D_Nᵀ` with
+//! `D_M[u,m] = α(u)·cos(π/M·(m+½)·u)` (0-based), which is exactly Eq. 1.
+//! Basis matrices are cached per size. The inverse (DCT-III) is `D_Mᵀ · Y · D_N`
+//! because `D` is orthogonal.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+use std::sync::Arc;
+
+/// An `MxM` orthonormal DCT-II basis matrix (row-major).
+#[derive(Debug, Clone)]
+pub struct DctBasis {
+    /// Transform size.
+    pub size: usize,
+    /// Row-major `size*size` matrix; row `u` holds the `u`-th cosine basis.
+    pub mat: Vec<f32>,
+}
+
+impl DctBasis {
+    /// Build the orthonormal DCT-II matrix of the given size.
+    pub fn build(size: usize) -> Self {
+        assert!(size > 0);
+        let m = size as f64;
+        let mut mat = vec![0.0f32; size * size];
+        for u in 0..size {
+            let alpha = if u == 0 {
+                (1.0 / m).sqrt()
+            } else {
+                (2.0 / m).sqrt()
+            };
+            for x in 0..size {
+                let v = alpha
+                    * ((std::f64::consts::PI / m) * (x as f64 + 0.5) * u as f64).cos();
+                mat[u * size + x] = v as f32;
+            }
+        }
+        DctBasis { size, mat }
+    }
+}
+
+fn basis_cache() -> &'static Mutex<HashMap<usize, Arc<DctBasis>>> {
+    static CACHE: OnceLock<Mutex<HashMap<usize, Arc<DctBasis>>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Fetch (building on first use) the cached basis of a given size.
+pub fn basis(size: usize) -> Arc<DctBasis> {
+    let mut cache = basis_cache().lock().unwrap();
+    cache
+        .entry(size)
+        .or_insert_with(|| Arc::new(DctBasis::build(size)))
+        .clone()
+}
+
+/// `out = A(M×K) · B(K×N)` into a caller-provided buffer (row-major, f32
+/// accumulate in f64 for the small sizes used here — fidelity matters more
+/// than speed on this path; the hot codec path never calls this).
+fn matmul_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for p in 0..k {
+                acc += a[i * k + p] as f64 * b[p * n + j] as f64;
+            }
+            out[i * n + j] = acc as f32;
+        }
+    }
+}
+
+/// Scratch buffers for repeated 2-D transforms of a fixed (M, N) size.
+///
+/// Reusing a `Dct2d` avoids per-call allocation on bench/codec loops.
+#[derive(Debug)]
+pub struct Dct2d {
+    /// Spatial height.
+    pub m: usize,
+    /// Spatial width.
+    pub n: usize,
+    dm: Arc<DctBasis>,
+    dn: Arc<DctBasis>,
+    /// transposed D_N (N×N) for the row-transform step
+    dn_t: Vec<f32>,
+    /// transposed D_M
+    dm_t: Vec<f32>,
+    tmp: Vec<f32>,
+}
+
+fn transpose(src: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; src.len()];
+    for r in 0..rows {
+        for c in 0..cols {
+            out[c * rows + r] = src[r * cols + c];
+        }
+    }
+    out
+}
+
+impl Dct2d {
+    /// Create a transformer for `M×N` planes.
+    pub fn new(m: usize, n: usize) -> Self {
+        let dm = basis(m);
+        let dn = basis(n);
+        let dn_t = transpose(&dn.mat, n, n);
+        let dm_t = transpose(&dm.mat, m, m);
+        Dct2d {
+            m,
+            n,
+            dm,
+            dn,
+            dn_t,
+            dm_t,
+            tmp: vec![0.0f32; m * n],
+        }
+    }
+
+    /// Forward 2-D DCT-II: `out = D_M · x · D_Nᵀ`. `x` and `out` are `M*N`.
+    pub fn forward(&mut self, x: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), self.m * self.n);
+        assert_eq!(out.len(), self.m * self.n);
+        // tmp = D_M (M×M) · x (M×N)
+        matmul_into(&self.dm.mat, x, self.m, self.m, self.n, &mut self.tmp);
+        // out = tmp (M×N) · D_Nᵀ (N×N)
+        matmul_into(&self.tmp, &self.dn_t, self.m, self.n, self.n, out);
+    }
+
+    /// Inverse (DCT-III): `out = D_Mᵀ · y · D_N`.
+    pub fn inverse(&mut self, y: &[f32], out: &mut [f32]) {
+        assert_eq!(y.len(), self.m * self.n);
+        assert_eq!(out.len(), self.m * self.n);
+        matmul_into(&self.dm_t, y, self.m, self.m, self.n, &mut self.tmp);
+        matmul_into(&self.tmp, &self.dn.mat, self.m, self.n, self.n, out);
+    }
+
+    /// Convenience: forward transform of every channel of a (B,C,M,N) tensor,
+    /// returning a tensor of identical shape holding coefficients.
+    pub fn forward_tensor(x: &crate::tensor::Tensor) -> crate::tensor::Tensor {
+        let (b, c, m, n) = x.as_bchw();
+        let mut t = Dct2d::new(m, n);
+        let mut out = crate::tensor::Tensor::zeros(x.shape());
+        for bi in 0..b {
+            for ci in 0..c {
+                let src = x.channel(bi, ci).to_vec();
+                t.forward(&src, out.channel_mut(bi, ci));
+            }
+        }
+        out
+    }
+
+    /// Convenience: inverse transform of every channel of a (B,C,M,N) tensor.
+    pub fn inverse_tensor(y: &crate::tensor::Tensor) -> crate::tensor::Tensor {
+        let (b, c, m, n) = y.as_bchw();
+        let mut t = Dct2d::new(m, n);
+        let mut out = crate::tensor::Tensor::zeros(y.shape());
+        for bi in 0..b {
+            for ci in 0..c {
+                let src = y.channel(bi, ci).to_vec();
+                t.inverse(&src, out.channel_mut(bi, ci));
+            }
+        }
+        out
+    }
+}
+
+/// 1-D orthonormal DCT-II of a vector (reference/tests).
+pub fn dct1d(x: &[f32]) -> Vec<f32> {
+    let n = x.len();
+    let b = basis(n);
+    let mut out = vec![0.0f32; n];
+    for u in 0..n {
+        let mut acc = 0.0f64;
+        for i in 0..n {
+            acc += b.mat[u * n + i] as f64 * x[i] as f64;
+        }
+        out[u] = acc as f32;
+    }
+    out
+}
+
+/// 1-D inverse (DCT-III) of a vector (reference/tests).
+pub fn idct1d(y: &[f32]) -> Vec<f32> {
+    let n = y.len();
+    let b = basis(n);
+    let mut out = vec![0.0f32; n];
+    for i in 0..n {
+        let mut acc = 0.0f64;
+        for u in 0..n {
+            acc += b.mat[u * n + i] as f64 * y[u] as f64;
+        }
+        out[i] = acc as f32;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn basis_is_orthonormal() {
+        for &n in &[1usize, 2, 4, 7, 14, 16] {
+            let b = basis(n);
+            // D · Dᵀ = I
+            for r in 0..n {
+                for c in 0..n {
+                    let mut acc = 0.0f64;
+                    for k in 0..n {
+                        acc += b.mat[r * n + k] as f64 * b.mat[c * n + k] as f64;
+                    }
+                    let expect = if r == c { 1.0 } else { 0.0 };
+                    assert!(
+                        (acc - expect).abs() < 1e-5,
+                        "n={n} ({r},{c}) got {acc}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dc_component_of_constant_signal() {
+        // DCT-II of a constant c over n points: X[0] = c*sqrt(n), rest 0.
+        let n = 8;
+        let x = vec![3.0f32; n];
+        let y = dct1d(&x);
+        assert!((y[0] - 3.0 * (n as f32).sqrt()).abs() < 1e-4);
+        for &v in &y[1..] {
+            assert!(v.abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn roundtrip_1d() {
+        let mut rng = Pcg32::seeded(1);
+        let x: Vec<f32> = (0..13).map(|_| rng.normal()).collect();
+        let back = idct1d(&dct1d(&x));
+        for (a, b) in x.iter().zip(&back) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn roundtrip_2d() {
+        let mut rng = Pcg32::seeded(2);
+        let (m, n) = (14, 10);
+        let x: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+        let mut t = Dct2d::new(m, n);
+        let mut y = vec![0.0f32; m * n];
+        let mut back = vec![0.0f32; m * n];
+        t.forward(&x, &mut y);
+        t.inverse(&y, &mut back);
+        for (a, b) in x.iter().zip(&back) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn parseval_energy_preserved() {
+        // Orthonormal transform preserves sum of squares.
+        let mut rng = Pcg32::seeded(3);
+        let (m, n) = (8, 8);
+        let x: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+        let mut t = Dct2d::new(m, n);
+        let mut y = vec![0.0f32; m * n];
+        t.forward(&x, &mut y);
+        let ex: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum();
+        let ey: f64 = y.iter().map(|&v| (v as f64).powi(2)).sum();
+        assert!((ex - ey).abs() / ex < 1e-5);
+    }
+
+    #[test]
+    fn tensor_roundtrip() {
+        let mut rng = Pcg32::seeded(4);
+        let x = Tensor::randn(&[2, 3, 6, 5], 1.0, &mut rng);
+        let y = Dct2d::forward_tensor(&x);
+        let back = Dct2d::inverse_tensor(&y);
+        assert!(x.max_abs_diff(&back) < 1e-4);
+    }
+
+    #[test]
+    fn smooth_signal_concentrates_low_freq() {
+        // A smooth ramp should put most energy into low-index coefficients.
+        let n = 16;
+        let x: Vec<f32> = (0..n).map(|i| i as f32 / n as f32).collect();
+        let y = dct1d(&x);
+        let total: f64 = y.iter().map(|&v| (v as f64).powi(2)).sum();
+        let low: f64 = y[..4].iter().map(|&v| (v as f64).powi(2)).sum();
+        assert!(low / total > 0.99, "low fraction {}", low / total);
+    }
+}

@@ -1,0 +1,319 @@
+//! Frequency-domain utilities: zig-zag scan and AFD (adaptive frequency
+//! decomposition — paper §II-B, Eq. 3–4).
+//!
+//! The zig-zag order walks the `M×N` coefficient plane along anti-diagonals
+//! (JPEG-style), so the scanned sequence goes from low to high spatial
+//! frequency. AFD computes per-coefficient spectral energy `E = X²` (Eq. 3),
+//! the cumulative energy ratio `R_(k)` (Eq. 4) over the scanned sequence,
+//! and splits at the smallest `k*` with `R_(k*) ≥ θ`: prefix = low-frequency
+//! set `F_l`, suffix = high-frequency set `F_h`.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Precomputed zig-zag index table for an `M×N` plane.
+///
+/// `scan[i]` is the row-major index of the `i`-th element in zig-zag order;
+/// `inverse[j]` is the position in the scan of row-major index `j`.
+#[derive(Debug, Clone)]
+pub struct ZigZag {
+    /// Plane height.
+    pub m: usize,
+    /// Plane width.
+    pub n: usize,
+    /// zig-zag position → row-major index.
+    pub scan: Vec<u32>,
+    /// row-major index → zig-zag position.
+    pub inverse: Vec<u32>,
+}
+
+impl ZigZag {
+    /// Build the table for an `M×N` plane.
+    ///
+    /// Anti-diagonal `d = r + c` runs from 0 to `M+N-2`; even diagonals are
+    /// walked bottom-left → top-right, odd ones top-right → bottom-left
+    /// (JPEG convention, generalized to rectangles).
+    pub fn build(m: usize, n: usize) -> Self {
+        assert!(m > 0 && n > 0);
+        let mut scan = Vec::with_capacity(m * n);
+        for d in 0..(m + n - 1) {
+            // cells on diagonal d: r in [max(0, d-n+1), min(d, m-1)]
+            let r_lo = d.saturating_sub(n - 1);
+            let r_hi = d.min(m - 1);
+            if d % 2 == 0 {
+                // up-right: start at highest row
+                for r in (r_lo..=r_hi).rev() {
+                    let c = d - r;
+                    scan.push((r * n + c) as u32);
+                }
+            } else {
+                // down-left: start at lowest row
+                for r in r_lo..=r_hi {
+                    let c = d - r;
+                    scan.push((r * n + c) as u32);
+                }
+            }
+        }
+        let mut inverse = vec![0u32; m * n];
+        for (pos, &rm) in scan.iter().enumerate() {
+            inverse[rm as usize] = pos as u32;
+        }
+        ZigZag {
+            m,
+            n,
+            scan,
+            inverse,
+        }
+    }
+
+    /// Scatter `plane` (row-major, `M*N`) into zig-zag order.
+    pub fn apply(&self, plane: &[f32], out: &mut [f32]) {
+        assert_eq!(plane.len(), self.m * self.n);
+        assert_eq!(out.len(), plane.len());
+        for (pos, &rm) in self.scan.iter().enumerate() {
+            out[pos] = plane[rm as usize];
+        }
+    }
+
+    /// Gather a zig-zag-ordered sequence back into the row-major plane.
+    pub fn invert(&self, seq: &[f32], out: &mut [f32]) {
+        assert_eq!(seq.len(), self.m * self.n);
+        assert_eq!(out.len(), seq.len());
+        for (pos, &rm) in self.scan.iter().enumerate() {
+            out[rm as usize] = seq[pos];
+        }
+    }
+}
+
+fn zigzag_cache() -> &'static Mutex<HashMap<(usize, usize), Arc<ZigZag>>> {
+    static CACHE: OnceLock<Mutex<HashMap<(usize, usize), Arc<ZigZag>>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Fetch (building on first use) the cached zig-zag table for `M×N`.
+pub fn zigzag(m: usize, n: usize) -> Arc<ZigZag> {
+    let mut cache = zigzag_cache().lock().unwrap();
+    cache
+        .entry((m, n))
+        .or_insert_with(|| Arc::new(ZigZag::build(m, n)))
+        .clone()
+}
+
+/// Result of AFD on one channel: zig-zag-ordered coefficients and split point.
+#[derive(Debug, Clone)]
+pub struct AfdSplit {
+    /// Coefficients in zig-zag (low→high frequency) order.
+    /// (With [`afd_channel_into`], this mirrors the caller's scratch buffer.)
+    pub coeffs: Vec<f32>,
+    /// Number of low-frequency coefficients `k*` (Algorithm 1 line 11);
+    /// `coeffs[..k]` is `F_l`, `coeffs[k..]` is `F_h`.
+    pub k: usize,
+    /// Mean spectral energy of `F_l` (Eq. 5).
+    pub mean_energy_low: f64,
+    /// Mean spectral energy of `F_h` (Eq. 5); 0 when `F_h` is empty.
+    pub mean_energy_high: f64,
+}
+
+/// Borrowed-output variant of [`AfdSplit`] for the allocation-free path.
+#[derive(Debug, Clone, Copy)]
+pub struct AfdSplitRef {
+    /// Split index `k*`.
+    pub k: usize,
+    /// Mean spectral energy of `F_l` (Eq. 5).
+    pub mean_energy_low: f64,
+    /// Mean spectral energy of `F_h` (Eq. 5); 0 when `F_h` is empty.
+    pub mean_energy_high: f64,
+}
+
+/// Run AFD (Eq. 3–4) on one channel plane already in the frequency domain.
+///
+/// `coeffs_plane` is the row-major `M×N` DCT coefficient plane. `theta` is
+/// the energy threshold θ ∈ (0, 1]. Returns the zig-zag-ordered sequence,
+/// the split index `k*`, and the per-group mean energies FQC needs.
+///
+/// Edge cases, matching Algorithm 1: if the channel is all-zero the split is
+/// `k* = 1` (the DC term alone, with zero energy everywhere); θ ≥ 1 puts all
+/// coefficients in `F_l`.
+pub fn afd_channel(zz: &ZigZag, coeffs_plane: &[f32], theta: f64) -> AfdSplit {
+    let mut coeffs = vec![0.0f32; coeffs_plane.len()];
+    let r = afd_channel_into(zz, coeffs_plane, theta, &mut coeffs);
+    AfdSplit {
+        coeffs,
+        k: r.k,
+        mean_energy_low: r.mean_energy_low,
+        mean_energy_high: r.mean_energy_high,
+    }
+}
+
+/// Allocation-free variant of [`afd_channel`]: the zig-zag sequence is
+/// written into the caller-provided `coeffs` buffer (resized to the plane)
+/// — the codec hot loop reuses one scratch buffer per tensor (§Perf L3
+/// iteration 1).
+pub fn afd_channel_into(
+    zz: &ZigZag,
+    coeffs_plane: &[f32],
+    theta: f64,
+    coeffs: &mut Vec<f32>,
+) -> AfdSplitRef {
+    let len = coeffs_plane.len();
+    assert_eq!(len, zz.m * zz.n);
+    coeffs.resize(len, 0.0);
+    zz.apply(coeffs_plane, coeffs);
+
+    // Eq. 3 energies + total.
+    let mut total = 0.0f64;
+    for &c in coeffs.iter() {
+        total += (c as f64) * (c as f64);
+    }
+
+    // Eq. 4: find smallest k with cumulative ratio >= theta.
+    let k = if total <= 0.0 {
+        1
+    } else {
+        let target = theta * total;
+        let mut acc = 0.0f64;
+        let mut k = len; // theta > 1 ⇒ everything low-frequency
+        for (i, &c) in coeffs.iter().enumerate() {
+            acc += (c as f64) * (c as f64);
+            if acc >= target {
+                k = i + 1;
+                break;
+            }
+        }
+        k
+    };
+
+    // Eq. 5: group mean energies.
+    let e_low: f64 = coeffs[..k].iter().map(|&c| (c as f64).powi(2)).sum();
+    let n_high = len - k;
+    let e_high: f64 = coeffs[k..].iter().map(|&c| (c as f64).powi(2)).sum();
+    AfdSplitRef {
+        k,
+        mean_energy_low: e_low / k as f64,
+        mean_energy_high: if n_high == 0 {
+            0.0
+        } else {
+            e_high / n_high as f64
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zigzag_8x8_matches_jpeg_prefix() {
+        // First entries of the canonical JPEG 8x8 zig-zag order.
+        let zz = ZigZag::build(8, 8);
+        let expect = [0u32, 1, 8, 16, 9, 2, 3, 10, 17, 24, 32, 25, 18, 11, 4];
+        assert_eq!(&zz.scan[..expect.len()], &expect);
+        assert_eq!(zz.scan.len(), 64);
+    }
+
+    #[test]
+    fn zigzag_is_permutation_for_rectangles() {
+        for &(m, n) in &[(1usize, 1usize), (1, 7), (7, 1), (3, 5), (14, 14), (16, 9)] {
+            let zz = ZigZag::build(m, n);
+            let mut seen = vec![false; m * n];
+            for &i in &zz.scan {
+                assert!(!seen[i as usize], "dup in {m}x{n}");
+                seen[i as usize] = true;
+            }
+            assert!(seen.iter().all(|&s| s));
+            // inverse consistency
+            for (pos, &rm) in zz.scan.iter().enumerate() {
+                assert_eq!(zz.inverse[rm as usize] as usize, pos);
+            }
+        }
+    }
+
+    #[test]
+    fn apply_invert_roundtrip() {
+        let zz = ZigZag::build(5, 7);
+        let plane: Vec<f32> = (0..35).map(|i| i as f32).collect();
+        let mut seq = vec![0.0; 35];
+        let mut back = vec![0.0; 35];
+        zz.apply(&plane, &mut seq);
+        zz.invert(&seq, &mut back);
+        assert_eq!(plane, back);
+    }
+
+    #[test]
+    fn zigzag_orders_by_diagonal() {
+        // positions of row-major indices along increasing diagonal number
+        // must be non-decreasing in scan position.
+        let zz = ZigZag::build(6, 4);
+        let diag = |rm: usize| (rm / 4) + (rm % 4);
+        let mut last_diag = 0;
+        for &rm in &zz.scan {
+            let d = diag(rm as usize);
+            assert!(d >= last_diag || d + 1 == last_diag + 1);
+            last_diag = last_diag.max(d);
+        }
+    }
+
+    #[test]
+    fn afd_split_respects_theta() {
+        // Plane with energy concentrated at DC.
+        let zz = ZigZag::build(4, 4);
+        let mut plane = vec![0.1f32; 16];
+        plane[0] = 10.0; // DC in row-major = first in zig-zag
+        let split = afd_channel(&zz, &plane, 0.9);
+        assert_eq!(split.k, 1, "DC alone carries >90% of energy");
+        assert!(split.mean_energy_low > split.mean_energy_high);
+    }
+
+    #[test]
+    fn afd_theta_one_takes_everything() {
+        let zz = ZigZag::build(3, 3);
+        let plane = vec![1.0f32; 9];
+        let split = afd_channel(&zz, &plane, 1.0);
+        assert_eq!(split.k, 9);
+        assert_eq!(split.mean_energy_high, 0.0);
+    }
+
+    #[test]
+    fn afd_zero_plane_defaults_to_dc() {
+        let zz = ZigZag::build(4, 4);
+        let plane = vec![0.0f32; 16];
+        let split = afd_channel(&zz, &plane, 0.9);
+        assert_eq!(split.k, 1);
+        assert_eq!(split.mean_energy_low, 0.0);
+    }
+
+    #[test]
+    fn afd_monotone_in_theta() {
+        let zz = ZigZag::build(8, 8);
+        let mut rng = crate::rng::Pcg32::seeded(9);
+        // decaying spectrum
+        let plane: Vec<f32> = (0..64)
+            .map(|i| rng.normal() / (1.0 + i as f32 * 0.5))
+            .collect();
+        let mut last_k = 0;
+        for &theta in &[0.5, 0.7, 0.8, 0.9, 0.95, 0.99] {
+            let s = afd_channel(&zz, &plane, theta);
+            assert!(s.k >= last_k, "k must grow with theta");
+            last_k = s.k;
+        }
+    }
+
+    #[test]
+    fn cumulative_ratio_at_k_meets_threshold() {
+        let zz = ZigZag::build(6, 6);
+        let mut rng = crate::rng::Pcg32::seeded(10);
+        let plane: Vec<f32> = (0..36).map(|_| rng.normal()).collect();
+        let theta = 0.8;
+        let s = afd_channel(&zz, &plane, theta);
+        let total: f64 = s.coeffs.iter().map(|&c| (c as f64).powi(2)).sum();
+        let low: f64 = s.coeffs[..s.k].iter().map(|&c| (c as f64).powi(2)).sum();
+        assert!(low / total >= theta - 1e-9);
+        if s.k > 1 {
+            let low_m1: f64 = s.coeffs[..s.k - 1]
+                .iter()
+                .map(|&c| (c as f64).powi(2))
+                .sum();
+            assert!(low_m1 / total < theta, "k* must be minimal");
+        }
+    }
+}

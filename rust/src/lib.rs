@@ -1,0 +1,47 @@
+//! # SL-FAC — Communication-Efficient Split Learning with Frequency-Aware Compression
+//!
+//! Reproduction of *"SL-FAC: A Communication-Efficient Split Learning Framework
+//! with Frequency-Aware Compression"* (CS.LG 2026) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the split-learning coordinator: device manager,
+//!   round scheduler, the AFD+FQC codec on the wire path, baseline codecs,
+//!   network simulator, metrics, config and CLI. Python never runs here.
+//! * **L2** — the split ResNet written in JAX (`python/compile/model.py`),
+//!   AOT-lowered to HLO text artifacts loaded by [`runtime`].
+//! * **L1** — the batched 2-D DCT Pallas kernel
+//!   (`python/compile/kernels/dct_kernel.py`) lowered inside the L2 graphs.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod bench;
+pub mod cli;
+pub mod codec;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dct;
+pub mod experiments;
+pub mod freq;
+pub mod json;
+pub mod logging;
+pub mod net;
+pub mod quant;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+pub mod testing;
+
+/// Crate version string (mirrors `Cargo.toml`).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn version_is_semver_like() {
+        let v = super::version();
+        assert_eq!(v.split('.').count(), 3);
+    }
+}

@@ -1,0 +1,141 @@
+//! Minimal leveled stderr logger.
+//!
+//! The offline build environment has no `log`/`env_logger` wiring on the
+//! request path, so the coordinator uses this tiny logger: global level set
+//! once (from the CLI or `SLFAC_LOG`), macro-free call sites, timestamps in
+//! seconds since process start so runs are diffable.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+/// Log severity, ordered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Fine-grained wire-path tracing (per message).
+    Trace = 0,
+    /// Per-step diagnostics.
+    Debug = 1,
+    /// Per-round progress (default).
+    Info = 2,
+    /// Recoverable anomalies.
+    Warn = 3,
+    /// Failures.
+    Error = 4,
+}
+
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Trace => "TRACE",
+            Level::Debug => "DEBUG",
+            Level::Info => "INFO ",
+            Level::Warn => "WARN ",
+            Level::Error => "ERROR",
+        }
+    }
+
+    /// Parse a level name (case-insensitive). Unknown names yield `None`.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "trace" => Some(Level::Trace),
+            "debug" => Some(Level::Debug),
+            "info" => Some(Level::Info),
+            "warn" | "warning" => Some(Level::Warn),
+            "error" => Some(Level::Error),
+            _ => None,
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+fn start() -> Instant {
+    use std::sync::OnceLock;
+    static START: OnceLock<Instant> = OnceLock::new();
+    *START.get_or_init(Instant::now)
+}
+
+/// Set the global log level.
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+    start(); // pin t=0 at init
+}
+
+/// Initialise from the `SLFAC_LOG` environment variable if present.
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("SLFAC_LOG") {
+        if let Some(l) = Level::parse(&v) {
+            set_level(l);
+        }
+    }
+    start();
+}
+
+/// Current global level.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Trace,
+        1 => Level::Debug,
+        2 => Level::Info,
+        3 => Level::Warn,
+        _ => Level::Error,
+    }
+}
+
+/// True if `l` would be emitted.
+pub fn enabled(l: Level) -> bool {
+    l >= level()
+}
+
+/// Emit a log line at level `l`. Prefer the [`crate::info!`]-style macros.
+pub fn log(l: Level, module: &str, msg: &str) {
+    if !enabled(l) {
+        return;
+    }
+    let t = start().elapsed().as_secs_f64();
+    eprintln!("[{t:9.3}s {} {module}] {msg}", l.tag());
+}
+
+/// Log at INFO.
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::logging::log($crate::logging::Level::Info, module_path!(), &format!($($arg)*)) };
+}
+/// Log at DEBUG.
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::logging::log($crate::logging::Level::Debug, module_path!(), &format!($($arg)*)) };
+}
+/// Log at TRACE.
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => { $crate::logging::log($crate::logging::Level::Trace, module_path!(), &format!($($arg)*)) };
+}
+/// Log at WARN.
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::logging::log($crate::logging::Level::Warn, module_path!(), &format!($($arg)*)) };
+}
+/// Log at ERROR.
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::logging::log($crate::logging::Level::Error, module_path!(), &format!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(Level::parse("info"), Some(Level::Info));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("bogus"), None);
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(Level::Trace < Level::Error);
+        assert!(Level::Info < Level::Warn);
+    }
+}

@@ -1,0 +1,222 @@
+//! `slfac` — the SL-FAC coordinator CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!
+//! * `train`       — run one split-learning experiment from a config file
+//!                   (plus CLI overrides), writing a metrics CSV.
+//! * `inspect`     — print the artifact manifest and codec wire diagnostics.
+//! * `bench-codec` — quick codec throughput/ratio table (the full harness
+//!                   is `cargo bench`).
+//!
+//! Examples:
+//!
+//! ```text
+//! slfac train --config configs/mnist_iid.json --codec slfac --rounds 15
+//! slfac train --codec tk-sl --partition non-iid --out results/tk_noniid.csv
+//! slfac inspect --artifacts artifacts
+//! slfac bench-codec --shape 32x16x14x14
+//! ```
+
+use anyhow::{Context, Result};
+use slfac::cli::{CliError, Command, Matches};
+use slfac::codec;
+use slfac::config::{DatasetKind, ExperimentConfig, Partition, SyncMode};
+
+fn cli() -> Command {
+    Command::new("slfac", "SL-FAC: communication-efficient split learning")
+        .subcommand(
+            Command::new("train", "run a split-learning experiment")
+                .opt("config", "PATH", "JSON experiment config", None)
+                .opt("codec", "NAME", "codec override (slfac, pq-sl, tk-sl, fc-sl, ...)", None)
+                .opt("dataset", "NAME", "dataset override (mnist, ham)", None)
+                .opt("partition", "KIND", "iid | non-iid", None)
+                .opt("rounds", "N", "communication rounds", None)
+                .opt("theta", "F", "AFD energy threshold", None)
+                .opt("devices", "N", "edge devices", None)
+                .opt("seed", "N", "master seed", None)
+                .opt("sync", "MODE", "parallel | sequential", None)
+                .opt("artifacts", "DIR", "artifacts directory", None)
+                .opt("out", "PATH", "metrics CSV output path", None)
+                .flag("quiet", "suppress per-round logs"),
+        )
+        .subcommand(
+            Command::new("inspect", "print manifest + codec diagnostics")
+                .opt("artifacts", "DIR", "artifacts directory", Some("artifacts")),
+        )
+        .subcommand(
+            Command::new("bench-codec", "quick codec ratio/fidelity table")
+                .opt("shape", "BxCxMxN", "activation shape", Some("32x16x14x14"))
+                .opt("theta", "F", "AFD energy threshold", Some("0.9")),
+        )
+}
+
+fn main() {
+    slfac::logging::init_from_env();
+    let cmd = cli();
+    let matches = match cmd.parse() {
+        Ok(m) => m,
+        Err(CliError::Help(h)) => {
+            println!("{h}");
+            return;
+        }
+        Err(CliError::Bad(msg)) => {
+            eprintln!("error: {msg}\n\n{}", cmd.help());
+            std::process::exit(2);
+        }
+    };
+    let result = match &matches.subcommand {
+        Some((name, sub)) => match name.as_str() {
+            "train" => cmd_train(sub),
+            "inspect" => cmd_inspect(sub),
+            "bench-codec" => cmd_bench_codec(sub),
+            _ => unreachable!(),
+        },
+        None => {
+            println!("{}", cmd.help());
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Apply CLI overrides on top of a (possibly loaded) config.
+fn build_config(m: &Matches) -> Result<ExperimentConfig> {
+    let mut cfg = match m.get("config") {
+        Some(path) => ExperimentConfig::load(path)?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(c) = m.get("codec") {
+        cfg.codec = c.to_string();
+    }
+    if let Some(d) = m.get("dataset") {
+        cfg.dataset = DatasetKind::parse(d)?;
+    }
+    if let Some(p) = m.get("partition") {
+        cfg.partition = match p.to_ascii_lowercase().as_str() {
+            "iid" => Partition::Iid,
+            "non-iid" | "noniid" | "dirichlet" => Partition::Dirichlet(0.5),
+            other => anyhow::bail!("unknown partition '{other}'"),
+        };
+    }
+    if let Some(r) = m.get_parsed::<usize>("rounds").map_err(anyhow::Error::msg)? {
+        cfg.rounds = r;
+    }
+    if let Some(t) = m.get_parsed::<f64>("theta").map_err(anyhow::Error::msg)? {
+        cfg.codec_params.theta = t;
+    }
+    if let Some(d) = m.get_parsed::<usize>("devices").map_err(anyhow::Error::msg)? {
+        cfg.devices = d;
+    }
+    if let Some(s) = m.get_parsed::<u64>("seed").map_err(anyhow::Error::msg)? {
+        cfg.seed = s;
+        cfg.codec_params.seed = s;
+    }
+    if let Some(s) = m.get("sync") {
+        cfg.sync = match s {
+            "parallel" => SyncMode::ParallelFedAvg,
+            "sequential" => SyncMode::Sequential,
+            other => anyhow::bail!("unknown sync '{other}'"),
+        };
+    }
+    if let Some(a) = m.get("artifacts") {
+        cfg.artifacts_dir = a.to_string();
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(m: &Matches) -> Result<()> {
+    if m.flag("quiet") {
+        slfac::logging::set_level(slfac::logging::Level::Warn);
+    }
+    let cfg = build_config(m)?;
+    let exec = slfac::runtime::ExecutorHandle::spawn(
+        &cfg.artifacts_dir,
+        &[cfg.dataset.name().to_string()],
+    )?;
+    let name = cfg.name.clone();
+    let codec_name = cfg.codec.clone();
+    let mut trainer = slfac::coordinator::Trainer::new(cfg, exec)?;
+    let outcome = trainer.run()?;
+    println!("{}", outcome.history.summary());
+    println!(
+        "comm: {:.2} MB up, {:.2} MB down, makespan {:.2}s; exec: {} runs, {:.2}s total",
+        outcome.comm.uplink_bytes as f64 / 1e6,
+        outcome.comm.downlink_bytes as f64 / 1e6,
+        outcome.comm.makespan_s,
+        outcome.exec_stats.total_execs(),
+        outcome.exec_stats.total_time().as_secs_f64(),
+    );
+    let out_path = m
+        .get("out")
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| format!("results/{name}_{codec_name}.csv"));
+    outcome.history.write_csv(&out_path)?;
+    println!("metrics -> {out_path}");
+    Ok(())
+}
+
+fn cmd_inspect(m: &Matches) -> Result<()> {
+    let root = m.req("artifacts").map_err(anyhow::Error::msg)?;
+    let manifest = slfac::runtime::ArtifactManifest::load(root)?;
+    for (name, p) in &manifest.presets {
+        println!(
+            "preset {name}: batch {}, act {:?}, {} client + {} server params \
+             ({} + {} elems)",
+            p.batch_size,
+            p.activation_shape,
+            p.client_params.len(),
+            p.server_params.len(),
+            p.client_param_elems(),
+            p.server_param_elems(),
+        );
+        for (aname, a) in &p.artifacts {
+            println!(
+                "  {aname:<12} {:>3} in {:>3} out  {:>6} HLO lines  ({})",
+                a.inputs.len(),
+                a.outputs.len(),
+                a.hlo_lines,
+                a.file
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_bench_codec(m: &Matches) -> Result<()> {
+    let shape: Vec<usize> = m
+        .req("shape")
+        .map_err(anyhow::Error::msg)?
+        .split('x')
+        .map(|d| d.parse::<usize>().context("bad shape"))
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(shape.len() == 4, "shape must be BxCxMxN");
+    let theta: f64 = m
+        .get_parsed("theta")
+        .map_err(anyhow::Error::msg)?
+        .unwrap_or(0.9);
+    let params = codec::CodecParams {
+        theta,
+        ..Default::default()
+    };
+    let x = codec::smooth_activations(&shape, 42);
+    println!(
+        "{:<12} {:>10} {:>8} {:>10}",
+        "codec", "wire bytes", "ratio", "rel L2 err"
+    );
+    for name in codec::ALL_CODECS {
+        let c = codec::by_name(name, &params)?;
+        let (back, payload) = codec::roundtrip_spatial(c.as_ref(), &x)?;
+        println!(
+            "{:<12} {:>10} {:>7.1}x {:>10.4}",
+            name,
+            payload.wire_bytes(),
+            payload.compression_ratio(),
+            back.rel_l2_error(&x)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,147 @@
+//! FQC bit-width allocation (paper Eq. 5–7).
+//!
+//! Given the mean spectral energies of the low/high frequency groups of one
+//! channel, compute each group's quantization bit width:
+//!
+//! ```text
+//! E*   = ln(mean_energy + 1)                       (Eq. 6)
+//! τ_c  = max(E*_l, E*_h)                           (dynamic scaling factor)
+//! b_f  = round(b_min + (b_max-b_min)·tanh(π/2 · E*_f/τ_c))   (Eq. 7)
+//! ```
+//!
+//! The log map compresses the large energy gap between `F_l` and `F_h` so
+//! the high-frequency group is not starved of bits (paper §II-C).
+
+/// Bounds for Eq. 7.
+#[derive(Debug, Clone, Copy)]
+pub struct AllocationConfig {
+    /// Minimum bit width `b_min` (paper: 2).
+    pub b_min: u32,
+    /// Maximum bit width `b_max` (paper: 8).
+    pub b_max: u32,
+}
+
+impl Default for AllocationConfig {
+    fn default() -> Self {
+        AllocationConfig { b_min: 2, b_max: 8 }
+    }
+}
+
+impl AllocationConfig {
+    /// Validate bounds.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.b_min == 0 || self.b_max > 16 || self.b_min > self.b_max {
+            return Err(format!(
+                "invalid bit bounds [{}, {}] (need 1 <= b_min <= b_max <= 16)",
+                self.b_min, self.b_max
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Scaling function φ(x) = tanh(π/2 · x) from Eq. 7.
+#[inline]
+pub fn phi(x: f64) -> f64 {
+    (std::f64::consts::FRAC_PI_2 * x).tanh()
+}
+
+/// Allocate bit widths `(b_low, b_high)` for one channel from the mean
+/// spectral energies of its two groups (Eq. 5 outputs).
+pub fn allocate_bits(
+    cfg: &AllocationConfig,
+    mean_energy_low: f64,
+    mean_energy_high: f64,
+) -> (u32, u32) {
+    // Eq. 6 — log map.
+    let e_low = (mean_energy_low.max(0.0) + 1.0).ln();
+    let e_high = (mean_energy_high.max(0.0) + 1.0).ln();
+    // τ_c — dynamic scaling factor.
+    let tau = e_low.max(e_high);
+    let alloc = |e: f64| -> u32 {
+        let frac = if tau <= 0.0 { 0.0 } else { phi(e / tau) };
+        let b = cfg.b_min as f64 + (cfg.b_max - cfg.b_min) as f64 * frac;
+        // ⌊·⌉ rounding, clamped to the bounds.
+        (b + 0.5).floor().clamp(cfg.b_min as f64, cfg.b_max as f64) as u32
+    };
+    (alloc(e_low), alloc(e_high))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_bounds_match_paper() {
+        let c = AllocationConfig::default();
+        assert_eq!((c.b_min, c.b_max), (2, 8));
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn validation_rejects_bad_bounds() {
+        assert!(AllocationConfig { b_min: 0, b_max: 8 }.validate().is_err());
+        assert!(AllocationConfig { b_min: 9, b_max: 8 }.validate().is_err());
+        assert!(AllocationConfig { b_min: 2, b_max: 17 }.validate().is_err());
+    }
+
+    #[test]
+    fn dominant_group_gets_near_bmax() {
+        // The group holding τ_c gets φ(1) = tanh(π/2) ≈ 0.917 of the range.
+        let cfg = AllocationConfig::default();
+        let (bl, bh) = allocate_bits(&cfg, 1e6, 1e-3);
+        // b_l = round(2 + 6·0.917) = round(7.5) ≈ 8 or 7
+        assert!(bl >= 7, "b_low={bl}");
+        assert!(bh >= cfg.b_min && bh < bl, "b_high={bh}");
+    }
+
+    #[test]
+    fn equal_energies_equal_bits() {
+        let cfg = AllocationConfig::default();
+        let (bl, bh) = allocate_bits(&cfg, 42.0, 42.0);
+        assert_eq!(bl, bh);
+    }
+
+    #[test]
+    fn zero_energy_gets_bmin() {
+        let cfg = AllocationConfig::default();
+        let (bl, bh) = allocate_bits(&cfg, 0.0, 0.0);
+        assert_eq!(bl, cfg.b_min);
+        assert_eq!(bh, cfg.b_min);
+    }
+
+    #[test]
+    fn bits_within_bounds_for_random_energies() {
+        let cfg = AllocationConfig { b_min: 3, b_max: 10 };
+        let mut rng = crate::rng::Pcg32::seeded(21);
+        for _ in 0..500 {
+            let el = rng.uniform_f64() * 1e8;
+            let eh = rng.uniform_f64() * 1e2;
+            let (bl, bh) = allocate_bits(&cfg, el, eh);
+            for b in [bl, bh] {
+                assert!(b >= cfg.b_min && b <= cfg.b_max);
+            }
+        }
+    }
+
+    #[test]
+    fn monotone_in_energy() {
+        // More energetic group never gets fewer bits than a less energetic
+        // one under the same τ.
+        let cfg = AllocationConfig::default();
+        let (bl, bh) = allocate_bits(&cfg, 1000.0, 10.0);
+        assert!(bl >= bh);
+        let (bl2, bh2) = allocate_bits(&cfg, 10.0, 1000.0);
+        assert!(bh2 >= bl2);
+    }
+
+    #[test]
+    fn log_map_reduces_polarization() {
+        // Without the log map a 1e6:1 ratio would drive the small group to
+        // b_min with φ(≈0); with it the small group still gets > b_min when
+        // its absolute energy is non-trivial.
+        let cfg = AllocationConfig::default();
+        let (_, bh) = allocate_bits(&cfg, 1e6, 50.0);
+        assert!(bh > cfg.b_min, "b_high={bh} should exceed b_min");
+    }
+}

@@ -1,0 +1,214 @@
+//! Arbitrary-width bit packing.
+//!
+//! FQC emits per-group bit widths anywhere in `[b_min, b_max]` (2..=8 in the
+//! paper, up to 16 supported here). The wire payload packs the quantized
+//! levels back-to-back with no padding between values; this module is the
+//! hot inner loop of the codec (see benches/bench_bitpack.rs), so both the
+//! writer and reader work through a 64-bit accumulator and avoid per-value
+//! branching beyond the flush check.
+
+/// Streaming MSB-first bit writer over a growable byte buffer.
+#[derive(Debug, Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// bit accumulator; highest `fill` bits are pending
+    acc: u64,
+    /// number of valid bits in `acc`
+    fill: u32,
+}
+
+impl BitWriter {
+    /// Empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Writer with pre-reserved capacity (in bytes).
+    pub fn with_capacity(bytes: usize) -> Self {
+        BitWriter {
+            buf: Vec::with_capacity(bytes),
+            acc: 0,
+            fill: 0,
+        }
+    }
+
+    /// Append the low `bits` bits of `value` (MSB-first). `bits` in 0..=32.
+    #[inline]
+    pub fn put(&mut self, value: u32, bits: u32) {
+        debug_assert!(bits <= 32);
+        if bits == 0 {
+            return;
+        }
+        debug_assert!(bits == 32 || value < (1u32 << bits), "value overflows width");
+        self.acc |= ((value as u64) << (64 - bits)) >> self.fill;
+        self.fill += bits;
+        while self.fill >= 8 {
+            self.buf.push((self.acc >> 56) as u8);
+            self.acc <<= 8;
+            self.fill -= 8;
+        }
+    }
+
+    /// Bits written so far.
+    pub fn bit_len(&self) -> usize {
+        self.buf.len() * 8 + self.fill as usize
+    }
+
+    /// Flush the final partial byte (zero-padded) and return the buffer.
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.fill > 0 {
+            self.buf.push((self.acc >> 56) as u8);
+        }
+        self.buf
+    }
+}
+
+/// MSB-first bit reader over a byte slice.
+#[derive(Debug)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    /// next byte index
+    pos: usize,
+    acc: u64,
+    fill: u32,
+}
+
+impl<'a> BitReader<'a> {
+    /// Reader over `buf` starting at bit 0.
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader {
+            buf,
+            pos: 0,
+            acc: 0,
+            fill: 0,
+        }
+    }
+
+    /// Read `bits` bits (0..=32) MSB-first. Reading past the end yields
+    /// zero bits (callers know exact counts from the payload header, so this
+    /// only matters for corrupted payloads — which fail shape checks later).
+    #[inline]
+    pub fn get(&mut self, bits: u32) -> u32 {
+        debug_assert!(bits <= 32);
+        if bits == 0 {
+            return 0;
+        }
+        while self.fill < bits {
+            let byte = if self.pos < self.buf.len() {
+                let b = self.buf[self.pos];
+                self.pos += 1;
+                b
+            } else {
+                0
+            };
+            self.acc |= (byte as u64) << (56 - self.fill);
+            self.fill += 8;
+        }
+        let out = (self.acc >> (64 - bits)) as u32;
+        self.acc <<= bits;
+        self.fill -= bits;
+        out
+    }
+
+    /// Number of whole bytes consumed from the underlying buffer.
+    pub fn bytes_consumed(&self) -> usize {
+        self.pos
+    }
+}
+
+/// Pack a slice of levels with a uniform width (helper for baselines).
+pub fn pack_uniform(levels: &[u32], bits: u32) -> Vec<u8> {
+    let mut w = BitWriter::with_capacity((levels.len() * bits as usize + 7) / 8);
+    for &v in levels {
+        w.put(v, bits);
+    }
+    w.finish()
+}
+
+/// Unpack `count` levels of a uniform width.
+pub fn unpack_uniform(buf: &[u8], bits: u32, count: usize) -> Vec<u32> {
+    let mut r = BitReader::new(buf);
+    (0..count).map(|_| r.get(bits)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn roundtrip_uniform_widths() {
+        let mut rng = Pcg32::seeded(1);
+        for bits in 1..=16u32 {
+            let vals: Vec<u32> = (0..257)
+                .map(|_| rng.next_u32() & ((1u32 << bits) - 1))
+                .collect();
+            let packed = pack_uniform(&vals, bits);
+            assert_eq!(packed.len(), (vals.len() * bits as usize + 7) / 8);
+            let back = unpack_uniform(&packed, bits, vals.len());
+            assert_eq!(vals, back);
+        }
+    }
+
+    #[test]
+    fn roundtrip_mixed_widths() {
+        // FQC interleaves groups of different widths in one stream.
+        let mut rng = Pcg32::seeded(2);
+        let widths: Vec<u32> = (0..1000).map(|_| 1 + rng.below(16)).collect();
+        let vals: Vec<u32> = widths
+            .iter()
+            .map(|&b| rng.next_u32() & ((1u32 << b) - 1))
+            .collect();
+        let mut w = BitWriter::new();
+        for (&v, &b) in vals.iter().zip(&widths) {
+            w.put(v, b);
+        }
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        for (&v, &b) in vals.iter().zip(&widths) {
+            assert_eq!(r.get(b), v);
+        }
+    }
+
+    #[test]
+    fn zero_width_writes_nothing() {
+        let mut w = BitWriter::new();
+        w.put(0, 0);
+        assert_eq!(w.bit_len(), 0);
+        assert!(w.finish().is_empty());
+    }
+
+    #[test]
+    fn bit_len_tracks_exactly() {
+        let mut w = BitWriter::new();
+        w.put(1, 3);
+        w.put(5, 7);
+        assert_eq!(w.bit_len(), 10);
+        let buf = w.finish();
+        assert_eq!(buf.len(), 2);
+    }
+
+    #[test]
+    fn read_past_end_yields_zeros() {
+        let buf = vec![0xFFu8];
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.get(8), 0xFF);
+        assert_eq!(r.get(8), 0);
+    }
+
+    #[test]
+    fn msb_first_layout() {
+        let mut w = BitWriter::new();
+        w.put(0b101, 3);
+        w.put(0b11, 2);
+        // stream: 1 0 1 1 1 … → byte 0b10111000
+        assert_eq!(w.finish(), vec![0b1011_1000]);
+    }
+
+    #[test]
+    fn full_32bit_values() {
+        let vals = [u32::MAX, 0, 0xDEADBEEF];
+        let packed = pack_uniform(&vals, 32);
+        assert_eq!(unpack_uniform(&packed, 32, 3), vals);
+    }
+}

@@ -1,0 +1,193 @@
+//! EasyQuant (Tang et al., EMNLP 2023 [40]) — outlier-isolating uniform
+//! quantization, used in the Fig. 4 row-2 ablation.
+//!
+//! EasyQuant's two ingredients, adapted from weight quantization to the
+//! smashed-data setting:
+//!
+//! 1. **Outlier isolation** — elements with `|x| > k·σ` are kept in full
+//!    precision (stored sparsely as (index, f32)) because a handful of
+//!    outliers otherwise stretches the quantization range.
+//! 2. **Range optimization** — the clip range `[-c, c]` for the remaining
+//!    inliers is chosen by a golden-section-style grid search minimizing
+//!    reconstruction MSE (the paper optimizes the reciprocal scale by
+//!    gradient; a direct search is equivalent at this scale).
+
+/// A fitted EasyQuant transform for one tensor/group.
+#[derive(Debug, Clone)]
+pub struct EasyQuant {
+    /// Bit width for the inlier grid.
+    pub bits: u32,
+    /// Clip magnitude for inliers.
+    pub clip: f32,
+    /// Outlier threshold used at fit time.
+    pub threshold: f32,
+    /// Sparse outliers: (flat index, original value).
+    pub outliers: Vec<(u32, f32)>,
+}
+
+/// σ-multiplier for outlier detection (EasyQuant keeps ≤ ~1% outliers).
+pub const OUTLIER_SIGMA: f32 = 3.0;
+
+impl EasyQuant {
+    /// Fit on `data`: detect outliers, then grid-search the clip range.
+    pub fn fit(bits: u32, data: &[f32]) -> Self {
+        let sigma = crate::tensor::std_dev(data);
+        let mean = if data.is_empty() {
+            0.0
+        } else {
+            data.iter().sum::<f32>() / data.len() as f32
+        };
+        let threshold = OUTLIER_SIGMA * sigma;
+        let mut outliers = Vec::new();
+        let mut inlier_max = 0.0f32;
+        for (i, &x) in data.iter().enumerate() {
+            if (x - mean).abs() > threshold && sigma > 0.0 {
+                outliers.push((i as u32, x));
+            } else {
+                inlier_max = inlier_max.max(x.abs());
+            }
+        }
+        let inlier_max = inlier_max.max(1e-12);
+
+        // Range search: candidate clips as fractions of the inlier max.
+        let qmax = ((1u32 << (bits.max(2) - 1)) - 1) as f32;
+        let mut best = (f64::INFINITY, inlier_max);
+        for frac in [0.5f32, 0.65, 0.8, 0.9, 1.0] {
+            let c = inlier_max * frac;
+            let mut err = 0.0f64;
+            let stride = (data.len() / 4096).max(1);
+            let mut i = 0;
+            while i < data.len() {
+                let x = data[i];
+                if (x - mean).abs() <= threshold || sigma <= 0.0 {
+                    let t = (x / c).clamp(-1.0, 1.0);
+                    let lvl = (t * qmax).round();
+                    let back = lvl / qmax * c;
+                    err += ((back - x) as f64).powi(2);
+                }
+                i += stride;
+            }
+            if err < best.0 {
+                best = (err, c);
+            }
+        }
+
+        EasyQuant {
+            bits,
+            clip: best.1,
+            threshold,
+            outliers,
+        }
+    }
+
+    #[inline]
+    fn qmax(&self) -> f32 {
+        ((1u32 << (self.bits.max(2) - 1)) - 1) as f32
+    }
+
+    /// Quantize one inlier value to a signed level (two's-complement-free:
+    /// sign bit + magnitude, like [`crate::quant::PowerQuant`]).
+    #[inline]
+    pub fn quantize(&self, x: f32) -> u32 {
+        let t = (x / self.clip).clamp(-1.0, 1.0);
+        let mag = (t.abs() * self.qmax() + 0.5) as u32;
+        let sign = if t < 0.0 { 1u32 } else { 0 };
+        (sign << (self.bits.max(2) - 1)) | mag.min(self.qmax() as u32)
+    }
+
+    /// Invert [`Self::quantize`].
+    #[inline]
+    pub fn dequantize(&self, level: u32) -> f32 {
+        let b = self.bits.max(2);
+        let sign = if level >> (b - 1) != 0 { -1.0f32 } else { 1.0 };
+        let mag = (level & ((1u32 << (b - 1)) - 1)) as f32;
+        sign * mag / self.qmax() * self.clip
+    }
+
+    /// Reconstruct a full tensor: dequantized inliers with outliers patched
+    /// back at full precision.
+    pub fn reconstruct(&self, levels: &[u32]) -> Vec<f32> {
+        let mut out: Vec<f32> = levels.iter().map(|&l| self.dequantize(l)).collect();
+        for &(i, v) in &self.outliers {
+            if (i as usize) < out.len() {
+                out[i as usize] = v;
+            }
+        }
+        out
+    }
+
+    /// Wire cost of the sparse outlier side-channel, in bits.
+    pub fn outlier_bits(&self) -> usize {
+        // u32 index + f32 value per outlier
+        self.outliers.len() * 64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn outliers_survive_exactly() {
+        let mut rng = Pcg32::seeded(41);
+        let mut data: Vec<f32> = (0..1000).map(|_| rng.normal() * 0.1).collect();
+        data[17] = 50.0;
+        data[503] = -42.0;
+        let q = EasyQuant::fit(4, &data);
+        assert!(q.outliers.len() >= 2);
+        let levels: Vec<u32> = data.iter().map(|&x| q.quantize(x)).collect();
+        let back = q.reconstruct(&levels);
+        assert_eq!(back[17], 50.0);
+        assert_eq!(back[503], -42.0);
+    }
+
+    #[test]
+    fn inlier_error_bounded() {
+        let mut rng = Pcg32::seeded(42);
+        let data: Vec<f32> = (0..2000).map(|_| rng.normal()).collect();
+        let q = EasyQuant::fit(8, &data);
+        let levels: Vec<u32> = data.iter().map(|&x| q.quantize(x)).collect();
+        let back = q.reconstruct(&levels);
+        let mse: f64 = data
+            .iter()
+            .zip(&back)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / data.len() as f64;
+        assert!(mse < 5e-3, "mse={mse}");
+    }
+
+    #[test]
+    fn few_outliers_on_gaussian() {
+        let mut rng = Pcg32::seeded(43);
+        let data: Vec<f32> = (0..5000).map(|_| rng.normal()).collect();
+        let q = EasyQuant::fit(4, &data);
+        // 3σ two-sided ⇒ ~0.27% expected
+        assert!(
+            q.outliers.len() < data.len() / 50,
+            "outliers={}",
+            q.outliers.len()
+        );
+    }
+
+    #[test]
+    fn constant_data_roundtrips() {
+        let data = vec![2.5f32; 64];
+        let q = EasyQuant::fit(4, &data);
+        let levels: Vec<u32> = data.iter().map(|&x| q.quantize(x)).collect();
+        let back = q.reconstruct(&levels);
+        for &b in &back {
+            assert!((b - 2.5).abs() < 0.3, "b={b}");
+        }
+    }
+
+    #[test]
+    fn sign_symmetry() {
+        let data: Vec<f32> = (-50..=50).map(|i| i as f32 / 25.0).collect();
+        let q = EasyQuant::fit(6, &data);
+        let back_pos = q.dequantize(q.quantize(0.8));
+        let back_neg = q.dequantize(q.quantize(-0.8));
+        assert!((back_pos + back_neg).abs() < 1e-6);
+    }
+}

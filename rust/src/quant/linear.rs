@@ -1,0 +1,157 @@
+//! Min-max linear quantization (paper Eq. 8/9).
+//!
+//! FQC quantizes each frequency group `F_{c,f}` with its own `[min, max]`
+//! range: `x̂ = round((x - min)/(max - min) · (2^b - 1))` and the inverse
+//! `x̃ = x̂/(2^b - 1) · (max - min) + min`.
+//!
+//! Note on Eq. 9: the paper typesets the denominator as `2^{b}−1` in Eq. 8
+//! and `2^{b_{c,f}-1}` in Eq. 9; the only self-consistent reading (and the
+//! only one that round-trips) is `2^b − 1` on both sides, which is what we
+//! implement and what the reference implementation of min-max quantization
+//! uses.
+
+/// A min-max linear quantizer for a fixed bit width and value range.
+#[derive(Debug, Clone, Copy)]
+pub struct LinearQuantizer {
+    /// Bit width `b` (1..=16 here).
+    pub bits: u32,
+    /// Range minimum.
+    pub min: f32,
+    /// Range maximum.
+    pub max: f32,
+}
+
+impl LinearQuantizer {
+    /// Build from a data slice's observed range.
+    pub fn fit(bits: u32, data: &[f32]) -> Self {
+        let (min, max) = crate::tensor::min_max(data);
+        LinearQuantizer { bits, min, max }
+    }
+
+    /// Number of levels minus one (`2^b - 1`).
+    #[inline]
+    pub fn qmax(&self) -> u32 {
+        if self.bits >= 32 {
+            u32::MAX
+        } else {
+            (1u32 << self.bits) - 1
+        }
+    }
+
+    /// Quantize one value to a level in `[0, 2^b - 1]` (Eq. 8).
+    #[inline]
+    pub fn quantize(&self, x: f32) -> u32 {
+        let range = self.max - self.min;
+        if range <= 0.0 || !range.is_finite() {
+            return 0; // degenerate range: everything maps to min
+        }
+        let t = ((x - self.min) / range).clamp(0.0, 1.0);
+        // round-half-away-from-zero is fine here; values are >= 0
+        (t * self.qmax() as f32 + 0.5) as u32
+    }
+
+    /// Dequantize a level back to a float (Eq. 9).
+    #[inline]
+    pub fn dequantize(&self, level: u32) -> f32 {
+        let range = self.max - self.min;
+        if range <= 0.0 || !range.is_finite() {
+            return self.min;
+        }
+        self.min + (level as f32 / self.qmax() as f32) * range
+    }
+
+    /// Quantize a slice into levels.
+    pub fn quantize_all(&self, xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|&x| self.quantize(x)).collect()
+    }
+
+    /// Dequantize levels into floats.
+    pub fn dequantize_all(&self, levels: &[u32]) -> Vec<f32> {
+        levels.iter().map(|&l| self.dequantize(l)).collect()
+    }
+
+    /// Worst-case absolute reconstruction error (half a step).
+    pub fn step(&self) -> f32 {
+        let range = self.max - self.min;
+        if range <= 0.0 {
+            0.0
+        } else {
+            range / self.qmax() as f32
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn endpoints_are_exact() {
+        let q = LinearQuantizer {
+            bits: 4,
+            min: -2.0,
+            max: 6.0,
+        };
+        assert_eq!(q.quantize(-2.0), 0);
+        assert_eq!(q.quantize(6.0), q.qmax());
+        assert_eq!(q.dequantize(0), -2.0);
+        assert_eq!(q.dequantize(q.qmax()), 6.0);
+    }
+
+    #[test]
+    fn error_bounded_by_half_step() {
+        let mut rng = Pcg32::seeded(3);
+        for bits in [2u32, 4, 8, 12] {
+            let data: Vec<f32> = (0..500).map(|_| rng.normal() * 3.0).collect();
+            let q = LinearQuantizer::fit(bits, &data);
+            let half = q.step() / 2.0 + 1e-6;
+            for &x in &data {
+                let back = q.dequantize(q.quantize(x));
+                assert!(
+                    (back - x).abs() <= half,
+                    "bits={bits} x={x} back={back} half={half}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_range_maps_to_min() {
+        let q = LinearQuantizer {
+            bits: 8,
+            min: 1.5,
+            max: 1.5,
+        };
+        assert_eq!(q.quantize(1.5), 0);
+        assert_eq!(q.dequantize(0), 1.5);
+        assert_eq!(q.dequantize(200), 1.5);
+    }
+
+    #[test]
+    fn out_of_range_clamps() {
+        let q = LinearQuantizer {
+            bits: 3,
+            min: 0.0,
+            max: 1.0,
+        };
+        assert_eq!(q.quantize(-10.0), 0);
+        assert_eq!(q.quantize(10.0), 7);
+    }
+
+    #[test]
+    fn higher_bits_reduce_error() {
+        let mut rng = Pcg32::seeded(4);
+        let data: Vec<f32> = (0..1000).map(|_| rng.normal()).collect();
+        let mut last_err = f64::INFINITY;
+        for bits in [2u32, 4, 6, 8] {
+            let q = LinearQuantizer::fit(bits, &data);
+            let err: f64 = data
+                .iter()
+                .map(|&x| ((q.dequantize(q.quantize(x)) - x) as f64).powi(2))
+                .sum();
+            assert!(err < last_err, "bits={bits}");
+            last_err = err;
+        }
+    }
+}

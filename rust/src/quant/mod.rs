@@ -1,0 +1,66 @@
+//! Quantization substrate: bit packing, min-max linear quantization
+//! (paper Eq. 8/9), FQC bit-width allocation (Eq. 5–7), and the two
+//! published quantizers used as baselines/ablations — PowerQuant [39]
+//! and EasyQuant [40].
+
+pub mod allocation;
+pub mod bitpack;
+pub mod easy;
+pub mod linear;
+pub mod power;
+
+pub use allocation::{allocate_bits, AllocationConfig};
+pub use bitpack::{pack_uniform, unpack_uniform, BitReader, BitWriter};
+pub use easy::EasyQuant;
+pub use linear::LinearQuantizer;
+pub use power::PowerQuant;
+
+use crate::codec::wire::{BodyReader, BodyWriter};
+use anyhow::Result;
+
+/// Quantize `xs` with `q` and append the bit-packed levels to a body writer
+/// (shared by the channel-wise codecs).
+pub fn pack_levels_into(xs: &[f32], q: &LinearQuantizer, w: &mut BodyWriter) {
+    let mut bits = BitWriter::with_capacity((xs.len() * q.bits as usize + 7) / 8);
+    for &x in xs {
+        bits.put(q.quantize(x), q.bits);
+    }
+    w.bytes(&bits.finish());
+}
+
+/// Read `count` levels packed at `q.bits` wide and dequantize into `out`.
+pub fn unpack_levels(
+    r: &mut BodyReader,
+    q: &LinearQuantizer,
+    count: usize,
+    out: &mut [f32],
+) -> Result<()> {
+    assert_eq!(out.len(), count);
+    let bytes = (count * q.bits as usize + 7) / 8;
+    let packed = r.bytes(bytes)?;
+    let mut br = BitReader::new(packed);
+    for o in out.iter_mut() {
+        *o = q.dequantize(br.get(q.bits));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod pack_tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_levels_roundtrip() {
+        let xs: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) / 10.0).collect();
+        let q = LinearQuantizer::fit(5, &xs);
+        let mut w = BodyWriter::new();
+        pack_levels_into(&xs, &q, &mut w);
+        let buf = w.finish();
+        let mut r = BodyReader::new(&buf);
+        let mut out = vec![0.0f32; 100];
+        unpack_levels(&mut r, &q, 100, &mut out).unwrap();
+        for (&a, &b) in xs.iter().zip(&out) {
+            assert!((a - b).abs() <= q.step() / 2.0 + 1e-6);
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! PowerQuant (Yvinec et al., ICLR 2023 [39]) — non-uniform quantization via
+//! a power automorphism, used by the PQ-SL baseline and the Fig. 4 row-2
+//! ablation.
+//!
+//! The idea: instead of quantizing `x` on a uniform grid, quantize
+//! `sign(x)·|x/s|^a` (a power re-mapping of the normalized magnitude) on a
+//! uniform grid and invert with the `1/a` power on dequantization. The
+//! exponent `a` is found by a data-free automorphism search; here we do the
+//! search directly on the tensor being compressed (a strictly stronger
+//! variant — it can only flatter the baseline) by grid-searching `a` to
+//! minimize reconstruction MSE.
+
+/// A fitted PowerQuant transform.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerQuant {
+    /// Bit width (one sign-carrying grid over [-1, 1]).
+    pub bits: u32,
+    /// Scale `s = max|x|`.
+    pub scale: f32,
+    /// Exponent `a` of the automorphism.
+    pub exponent: f32,
+}
+
+impl PowerQuant {
+    /// Candidate exponents searched (log-spaced around 1.0, as in the paper's
+    /// automorphism family `x ↦ x^a`).
+    pub const EXPONENT_GRID: [f32; 9] = [0.25, 0.35, 0.5, 0.7, 1.0, 1.4, 2.0, 2.8, 4.0];
+
+    /// Fit scale + exponent on the data by minimizing reconstruction MSE.
+    pub fn fit(bits: u32, data: &[f32]) -> Self {
+        let scale = data.iter().fold(0.0f32, |a, &x| a.max(x.abs())).max(1e-12);
+        let mut best = (f64::INFINITY, 1.0f32);
+        // Subsample for the search: error is a smooth function of `a`, and
+        // the grid search is O(|grid|·n).
+        let stride = (data.len() / 4096).max(1);
+        for &a in &Self::EXPONENT_GRID {
+            let q = PowerQuant {
+                bits,
+                scale,
+                exponent: a,
+            };
+            let mut err = 0.0f64;
+            let mut i = 0;
+            while i < data.len() {
+                let x = data[i];
+                let back = q.dequantize(q.quantize(x));
+                err += ((back - x) as f64).powi(2);
+                i += stride;
+            }
+            if err < best.0 {
+                best = (err, a);
+            }
+        }
+        PowerQuant {
+            bits,
+            scale,
+            exponent: best.1,
+        }
+    }
+
+    /// Number of positive levels (`2^(b-1) - 1`; one bit carries the sign).
+    #[inline]
+    fn qmax(&self) -> u32 {
+        (1u32 << (self.bits.max(2) - 1)) - 1
+    }
+
+    /// Quantize into a signed level encoded as `sign bit | magnitude`.
+    #[inline]
+    pub fn quantize(&self, x: f32) -> u32 {
+        let t = (x.abs() / self.scale).clamp(0.0, 1.0).powf(self.exponent);
+        let mag = (t * self.qmax() as f32 + 0.5) as u32;
+        let sign = if x < 0.0 { 1u32 } else { 0 };
+        (sign << (self.bits.max(2) - 1)) | mag.min(self.qmax())
+    }
+
+    /// Invert [`Self::quantize`].
+    #[inline]
+    pub fn dequantize(&self, level: u32) -> f32 {
+        let b = self.bits.max(2);
+        let sign = if level >> (b - 1) != 0 { -1.0f32 } else { 1.0 };
+        let mag = level & self.qmax();
+        let t = mag as f32 / self.qmax() as f32;
+        sign * t.powf(1.0 / self.exponent) * self.scale
+    }
+
+    /// Quantize a slice.
+    pub fn quantize_all(&self, xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|&x| self.quantize(x)).collect()
+    }
+
+    /// Dequantize a slice of levels.
+    pub fn dequantize_all(&self, levels: &[u32]) -> Vec<f32> {
+        levels.iter().map(|&l| self.dequantize(l)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn roundtrip_error_small_at_8_bits() {
+        let mut rng = Pcg32::seeded(31);
+        let data: Vec<f32> = (0..2000).map(|_| rng.normal()).collect();
+        let q = PowerQuant::fit(8, &data);
+        let mse: f64 = data
+            .iter()
+            .map(|&x| ((q.dequantize(q.quantize(x)) - x) as f64).powi(2))
+            .sum::<f64>()
+            / data.len() as f64;
+        assert!(mse < 1e-3, "mse={mse}");
+    }
+
+    #[test]
+    fn sign_preserved() {
+        let q = PowerQuant {
+            bits: 4,
+            scale: 1.0,
+            exponent: 0.5,
+        };
+        assert!(q.dequantize(q.quantize(-0.7)) < 0.0);
+        assert!(q.dequantize(q.quantize(0.7)) > 0.0);
+    }
+
+    #[test]
+    fn zero_maps_to_zero() {
+        let q = PowerQuant {
+            bits: 6,
+            scale: 2.0,
+            exponent: 2.0,
+        };
+        assert_eq!(q.dequantize(q.quantize(0.0)), 0.0);
+    }
+
+    #[test]
+    fn laplacian_data_prefers_sub_unit_exponent() {
+        // Heavy-tailed (Laplace-like) data is PowerQuant's motivating case:
+        // the fitted exponent should deviate from the uniform a=1.
+        let mut rng = Pcg32::seeded(33);
+        let data: Vec<f32> = (0..4000)
+            .map(|_| {
+                // Laplace via difference of exponentials
+                let u = rng.uniform_f64().max(1e-9);
+                let v = rng.uniform_f64().max(1e-9);
+                ((-u.ln()) - (-v.ln())) as f32
+            })
+            .collect();
+        let q = PowerQuant::fit(3, &data);
+        assert!(
+            q.exponent != 1.0,
+            "expected non-uniform exponent, got {}",
+            q.exponent
+        );
+    }
+
+    #[test]
+    fn fit_beats_or_matches_plain_uniform() {
+        let mut rng = Pcg32::seeded(34);
+        let data: Vec<f32> = (0..3000).map(|_| rng.normal() * 2.0).collect();
+        let fitted = PowerQuant::fit(4, &data);
+        let uniform = PowerQuant {
+            exponent: 1.0,
+            ..fitted
+        };
+        let mse = |q: &PowerQuant| -> f64 {
+            data.iter()
+                .map(|&x| ((q.dequantize(q.quantize(x)) - x) as f64).powi(2))
+                .sum()
+        };
+        assert!(mse(&fitted) <= mse(&uniform) * 1.0001);
+    }
+}

@@ -1,0 +1,136 @@
+//! Host-side tensors: the `Send`-able currency between coordinator threads
+//! and the executor actor.
+
+use crate::tensor::Tensor;
+
+/// A dense host tensor (f32 or i32), row-major.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    /// 32-bit float tensor.
+    F32 {
+        /// Dimensions.
+        dims: Vec<usize>,
+        /// Row-major data.
+        data: Vec<f32>,
+    },
+    /// 32-bit signed integer tensor (labels, counts).
+    I32 {
+        /// Dimensions.
+        dims: Vec<usize>,
+        /// Row-major data.
+        data: Vec<i32>,
+    },
+}
+
+impl HostTensor {
+    /// f32 tensor from parts.
+    pub fn f32(dims: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        HostTensor::F32 {
+            dims: dims.to_vec(),
+            data,
+        }
+    }
+
+    /// i32 tensor from parts.
+    pub fn i32(dims: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        HostTensor::I32 {
+            dims: dims.to_vec(),
+            data,
+        }
+    }
+
+    /// Scalar f32.
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::F32 {
+            dims: vec![],
+            data: vec![v],
+        }
+    }
+
+    /// Dimensions.
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { dims, .. } | HostTensor::I32 { dims, .. } => dims,
+        }
+    }
+
+    /// Element count.
+    pub fn numel(&self) -> usize {
+        self.dims().iter().product()
+    }
+
+    /// Borrow f32 data (panics on i32 tensors).
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            HostTensor::F32 { data, .. } => data,
+            HostTensor::I32 { .. } => panic!("expected f32 tensor, got i32"),
+        }
+    }
+
+    /// Borrow i32 data (panics on f32 tensors).
+    pub fn as_i32(&self) -> &[i32] {
+        match self {
+            HostTensor::I32 { data, .. } => data,
+            HostTensor::F32 { .. } => panic!("expected i32 tensor, got f32"),
+        }
+    }
+
+    /// First element as f64 (for scalar outputs like loss/correct).
+    pub fn first(&self) -> f64 {
+        match self {
+            HostTensor::F32 { data, .. } => data[0] as f64,
+            HostTensor::I32 { data, .. } => data[0] as f64,
+        }
+    }
+
+    /// Convert into the codec [`Tensor`] type (f32 only).
+    pub fn into_tensor(self) -> Tensor {
+        match self {
+            HostTensor::F32 { dims, data } => Tensor::new(&dims, data),
+            HostTensor::I32 { .. } => panic!("cannot convert i32 tensor to codec Tensor"),
+        }
+    }
+
+    /// Build from a codec [`Tensor`].
+    pub fn from_tensor(t: &Tensor) -> Self {
+        HostTensor::f32(t.shape(), t.data().to_vec())
+    }
+
+    /// Approximate wire size if transmitted raw (for accounting baselines).
+    pub fn raw_bytes(&self) -> usize {
+        self.numel() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_check_lengths() {
+        let t = HostTensor::f32(&[2, 3], vec![0.0; 6]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.dims(), &[2, 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_length_panics() {
+        HostTensor::f32(&[2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn scalar_and_first() {
+        assert_eq!(HostTensor::scalar_f32(2.5).first(), 2.5);
+        assert_eq!(HostTensor::i32(&[], vec![7]).first(), 7.0);
+    }
+
+    #[test]
+    fn tensor_roundtrip() {
+        let t = Tensor::new(&[1, 2, 2, 2], (0..8).map(|i| i as f32).collect());
+        let h = HostTensor::from_tensor(&t);
+        assert_eq!(h.into_tensor(), t);
+    }
+}

@@ -1,0 +1,306 @@
+//! Parse `artifacts/manifest.json` (written by `python/compile/aot.py`).
+//!
+//! The manifest is the contract between the build-time Python layer and the
+//! runtime: artifact file names, input/output signatures (shape + dtype in
+//! flattened pytree order), parameter specs, and the activation shape the
+//! codec operates on.
+
+use crate::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Shape + dtype of one HLO parameter or result leaf.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSig {
+    /// Dimensions.
+    pub shape: Vec<usize>,
+    /// Dtype string (`"float32"`, `"int32"`).
+    pub dtype: String,
+}
+
+impl TensorSig {
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .context("sig.shape")?
+            .iter()
+            .map(|d| d.as_usize().context("shape dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .unwrap_or("float32")
+            .to_string();
+        Ok(TensorSig { shape, dtype })
+    }
+}
+
+/// One named parameter tensor (e.g. `stem.conv`).
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    /// Stable name.
+    pub name: String,
+    /// Shape.
+    pub shape: Vec<usize>,
+}
+
+/// One lowered entry point.
+#[derive(Debug, Clone)]
+pub struct ArtifactSig {
+    /// HLO text file, relative to the preset directory.
+    pub file: String,
+    /// Input signatures in HLO parameter order.
+    pub inputs: Vec<TensorSig>,
+    /// Output signatures in result-tuple order.
+    pub outputs: Vec<TensorSig>,
+    /// HLO line count (L2 size diagnostic).
+    pub hlo_lines: usize,
+}
+
+/// Everything about one dataset preset.
+#[derive(Debug, Clone)]
+pub struct PresetManifest {
+    /// Preset name (`mnist` / `ham`).
+    pub name: String,
+    /// Batch size the artifacts are specialized for.
+    pub batch_size: usize,
+    /// Image channels.
+    pub in_channels: usize,
+    /// Image height/width.
+    pub image_hw: usize,
+    /// Classes.
+    pub num_classes: usize,
+    /// Cut-layer activation shape (B, C, M, N).
+    pub activation_shape: [usize; 4],
+    /// Client-side parameter specs (flat lowering order).
+    pub client_params: Vec<ParamSpec>,
+    /// Server-side parameter specs.
+    pub server_params: Vec<ParamSpec>,
+    /// Entry points by name.
+    pub artifacts: BTreeMap<String, ArtifactSig>,
+}
+
+impl PresetManifest {
+    /// Artifact lookup with a readable error.
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSig> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("preset '{}' has no artifact '{name}'", self.name))
+    }
+
+    /// Total client parameter count (elements).
+    pub fn client_param_elems(&self) -> usize {
+        self.client_params
+            .iter()
+            .map(|p| p.shape.iter().product::<usize>())
+            .sum()
+    }
+
+    /// Total server parameter count (elements).
+    pub fn server_param_elems(&self) -> usize {
+        self.server_params
+            .iter()
+            .map(|p| p.shape.iter().product::<usize>())
+            .sum()
+    }
+}
+
+/// The parsed manifest (all presets).
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    /// Root directory the file was loaded from.
+    pub root: String,
+    /// Presets by name.
+    pub presets: BTreeMap<String, PresetManifest>,
+}
+
+fn parse_params(j: &Json) -> Result<Vec<ParamSpec>> {
+    j.as_arr()
+        .context("params must be an array")?
+        .iter()
+        .map(|p| {
+            Ok(ParamSpec {
+                name: p
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .context("param.name")?
+                    .to_string(),
+                shape: p
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .context("param.shape")?
+                    .iter()
+                    .map(|d| d.as_usize().context("param dim"))
+                    .collect::<Result<Vec<_>>>()?,
+            })
+        })
+        .collect()
+}
+
+impl ArtifactManifest {
+    /// Load `<root>/manifest.json`.
+    pub fn load(root: &str) -> Result<Self> {
+        let path = format!("{root}/manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path} — run `make artifacts` first"))?;
+        let json = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
+        Self::from_json(root, &json)
+    }
+
+    /// Parse from JSON.
+    pub fn from_json(root: &str, json: &Json) -> Result<Self> {
+        let version = json
+            .get("version")
+            .and_then(Json::as_usize)
+            .context("manifest.version")?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut presets = BTreeMap::new();
+        for (name, p) in json
+            .get("presets")
+            .and_then(Json::as_obj)
+            .context("manifest.presets")?
+        {
+            let act: Vec<usize> = p
+                .get("activation_shape")
+                .and_then(Json::as_arr)
+                .context("activation_shape")?
+                .iter()
+                .map(|d| d.as_usize().context("act dim"))
+                .collect::<Result<Vec<_>>>()?;
+            if act.len() != 4 {
+                bail!("activation_shape must be rank 4");
+            }
+            let mut artifacts = BTreeMap::new();
+            for (aname, a) in p
+                .get("artifacts")
+                .and_then(Json::as_obj)
+                .context("artifacts")?
+            {
+                let sigs = |key: &str| -> Result<Vec<TensorSig>> {
+                    a.get(key)
+                        .and_then(Json::as_arr)
+                        .with_context(|| format!("{aname}.{key}"))?
+                        .iter()
+                        .map(TensorSig::from_json)
+                        .collect()
+                };
+                artifacts.insert(
+                    aname.clone(),
+                    ArtifactSig {
+                        file: a
+                            .get("file")
+                            .and_then(Json::as_str)
+                            .context("artifact.file")?
+                            .to_string(),
+                        inputs: sigs("inputs")?,
+                        outputs: sigs("outputs")?,
+                        hlo_lines: a
+                            .get("hlo_lines")
+                            .and_then(Json::as_usize)
+                            .unwrap_or(0),
+                    },
+                );
+            }
+            presets.insert(
+                name.clone(),
+                PresetManifest {
+                    name: name.clone(),
+                    batch_size: p
+                        .get("batch_size")
+                        .and_then(Json::as_usize)
+                        .context("batch_size")?,
+                    in_channels: p
+                        .get("in_channels")
+                        .and_then(Json::as_usize)
+                        .context("in_channels")?,
+                    image_hw: p.get("image_hw").and_then(Json::as_usize).context("image_hw")?,
+                    num_classes: p
+                        .get("num_classes")
+                        .and_then(Json::as_usize)
+                        .context("num_classes")?,
+                    activation_shape: [act[0], act[1], act[2], act[3]],
+                    client_params: parse_params(
+                        p.get("client_params").context("client_params")?,
+                    )?,
+                    server_params: parse_params(
+                        p.get("server_params").context("server_params")?,
+                    )?,
+                    artifacts,
+                },
+            );
+        }
+        Ok(ArtifactManifest {
+            root: root.to_string(),
+            presets,
+        })
+    }
+
+    /// Preset lookup with a readable error.
+    pub fn preset(&self, name: &str) -> Result<&PresetManifest> {
+        self.presets
+            .get(name)
+            .with_context(|| format!("manifest has no preset '{name}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "presets": {
+        "mnist": {
+          "batch_size": 32, "in_channels": 1, "image_hw": 28, "num_classes": 10,
+          "activation_shape": [32, 16, 14, 14],
+          "client_params": [{"name": "stem.conv", "shape": [3,3,1,16]}],
+          "server_params": [{"name": "fc.w", "shape": [64,10]}],
+          "artifacts": {
+            "idct": {"file": "idct.hlo.txt",
+                     "inputs": [{"shape": [32,16,14,14], "dtype": "float32"}],
+                     "outputs": [{"shape": [32,16,14,14], "dtype": "float32"}],
+                     "hlo_lines": 83}
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let json = Json::parse(SAMPLE).unwrap();
+        let m = ArtifactManifest::from_json("artifacts", &json).unwrap();
+        let p = m.preset("mnist").unwrap();
+        assert_eq!(p.batch_size, 32);
+        assert_eq!(p.activation_shape, [32, 16, 14, 14]);
+        assert_eq!(p.client_params[0].name, "stem.conv");
+        let a = p.artifact("idct").unwrap();
+        assert_eq!(a.inputs.len(), 1);
+        assert_eq!(a.hlo_lines, 83);
+    }
+
+    #[test]
+    fn missing_preset_errors() {
+        let json = Json::parse(SAMPLE).unwrap();
+        let m = ArtifactManifest::from_json("artifacts", &json).unwrap();
+        assert!(m.preset("cifar").is_err());
+        assert!(m.preset("mnist").unwrap().artifact("nope").is_err());
+    }
+
+    #[test]
+    fn version_check() {
+        let json = Json::parse(r#"{"version": 2, "presets": {}}"#).unwrap();
+        assert!(ArtifactManifest::from_json("x", &json).is_err());
+    }
+
+    #[test]
+    fn param_elem_counts() {
+        let json = Json::parse(SAMPLE).unwrap();
+        let m = ArtifactManifest::from_json("artifacts", &json).unwrap();
+        let p = m.preset("mnist").unwrap();
+        assert_eq!(p.client_param_elems(), 3 * 3 * 16);
+        assert_eq!(p.server_param_elems(), 640);
+    }
+}

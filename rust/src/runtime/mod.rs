@@ -1,0 +1,21 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
+//! the coordinator's hot path.
+//!
+//! XLA handles (`PjRtClient`, executables, `Literal`) wrap raw C++ pointers
+//! and are not `Send`, so all of them are **confined to one executor actor
+//! thread** ([`executor`]). The rest of the system talks to it through a
+//! channel protocol carrying [`HostTensor`]s (plain `Vec<f32>`/`Vec<i32>` +
+//! dims) — cheap relative to model execution, and it keeps every other
+//! thread free of FFI state.
+//!
+//! Python never runs here: artifacts are produced once by
+//! `python/compile/aot.py` (`make artifacts`) and described by
+//! `artifacts/manifest.json` ([`manifest`]).
+
+pub mod executor;
+pub mod host;
+pub mod manifest;
+
+pub use executor::{ExecutorHandle, ExecutorStats};
+pub use host::HostTensor;
+pub use manifest::{ArtifactManifest, PresetManifest};

@@ -1,0 +1,296 @@
+//! Dense f32 tensors in row-major (NCHW) layout.
+//!
+//! The coordinator moves cut-layer activations and gradients between the
+//! PJRT runtime and the codecs as plain contiguous buffers; this module is
+//! the shared container: shape bookkeeping, per-channel views, and the
+//! simple statistics (mean/std/min/max per channel) the baseline codecs
+//! (FC-SL, magnitude/STD selection) need.
+
+use std::fmt;
+
+/// Shape of a dense tensor (up to rank 4 in practice: N,C,H,W).
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct Shape(pub Vec<usize>);
+
+impl Shape {
+    /// Total element count.
+    pub fn numel(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    /// Rank.
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    /// Dimensions slice.
+    pub fn dims(&self) -> &[usize] {
+        &self.0
+    }
+}
+
+impl fmt::Debug for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[")?;
+        for (i, d) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, "x")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl From<&[usize]> for Shape {
+    fn from(d: &[usize]) -> Self {
+        Shape(d.to_vec())
+    }
+}
+
+/// A dense row-major f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Shape,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)
+    }
+}
+
+impl Tensor {
+    /// Build from parts; panics if `data.len() != product(shape)`.
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Self {
+        let shape = Shape(shape.to_vec());
+        assert_eq!(
+            shape.numel(),
+            data.len(),
+            "shape {shape:?} does not match data length {}",
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor::new(shape, vec![0.0; n])
+    }
+
+    /// Filled with a constant.
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor::new(shape, vec![v; n])
+    }
+
+    /// Tensor with elements drawn from N(0, std) using the given RNG.
+    pub fn randn(shape: &[usize], std: f32, rng: &mut crate::rng::Pcg32) -> Self {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| rng.normal() * std).collect();
+        Tensor::new(shape, data)
+    }
+
+    /// Shape dims.
+    pub fn shape(&self) -> &[usize] {
+        self.shape.dims()
+    }
+
+    /// Element count.
+    pub fn numel(&self) -> usize {
+        self.shape.numel()
+    }
+
+    /// Immutable data slice.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable data slice.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the backing vec.
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, self.data.len(), "reshape element count mismatch");
+        self.shape = Shape(shape.to_vec());
+        self
+    }
+
+    /// Interpret as (B, C, M, N); panics unless rank is 3 (C,M,N → B=1) or 4.
+    pub fn as_bchw(&self) -> (usize, usize, usize, usize) {
+        match self.shape.dims() {
+            [c, m, n] => (1, *c, *m, *n),
+            [b, c, m, n] => (*b, *c, *m, *n),
+            other => panic!("expected rank 3/4 tensor, got {other:?}"),
+        }
+    }
+
+    /// Borrow channel (b, c) as a contiguous `M*N` slice (NCHW layout).
+    pub fn channel(&self, b: usize, c: usize) -> &[f32] {
+        let (bs, cs, m, n) = self.as_bchw();
+        assert!(b < bs && c < cs);
+        let sz = m * n;
+        let off = (b * cs + c) * sz;
+        &self.data[off..off + sz]
+    }
+
+    /// Mutable channel slice.
+    pub fn channel_mut(&mut self, b: usize, c: usize) -> &mut [f32] {
+        let (bs, cs, m, n) = self.as_bchw();
+        assert!(b < bs && c < cs);
+        let sz = m * n;
+        let off = (b * cs + c) * sz;
+        &mut self.data[off..off + sz]
+    }
+
+    /// Min and max over all elements (NaNs ignored; empty → (0,0)).
+    pub fn min_max(&self) -> (f32, f32) {
+        min_max(&self.data)
+    }
+
+    /// Mean over all elements.
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|&x| x as f64).sum::<f64>() as f32 / self.data.len() as f32
+    }
+
+    /// Population standard deviation over all elements.
+    pub fn std(&self) -> f32 {
+        std_dev(&self.data)
+    }
+
+    /// Sum of squared elements (spectral energy of the whole tensor).
+    pub fn energy(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    /// Max |x| over all elements.
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()))
+    }
+
+    /// Elementwise maximum absolute difference against another tensor.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |a, (&x, &y)| a.max((x - y).abs()))
+    }
+
+    /// Relative L2 error `||a-b|| / (||b|| + eps)` — the codec fidelity metric.
+    pub fn rel_l2_error(&self, reference: &Tensor) -> f64 {
+        assert_eq!(self.shape(), reference.shape());
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (&a, &b) in self.data.iter().zip(&reference.data) {
+            num += ((a - b) as f64).powi(2);
+            den += (b as f64).powi(2);
+        }
+        (num.sqrt()) / (den.sqrt() + 1e-12)
+    }
+}
+
+/// Min/max of a slice, NaN-tolerant. Empty → (0, 0).
+pub fn min_max(xs: &[f32]) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in xs {
+        if x.is_nan() {
+            continue;
+        }
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if lo > hi {
+        (0.0, 0.0)
+    } else {
+        (lo, hi)
+    }
+}
+
+/// Population standard deviation of a slice.
+pub fn std_dev(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let var = xs.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+    var.sqrt() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn new_checks_len() {
+        let t = Tensor::new(&[2, 3], vec![0.0; 6]);
+        assert_eq!(t.numel(), 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn new_rejects_bad_len() {
+        Tensor::new(&[2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn channel_views_are_disjoint_and_ordered() {
+        // NCHW layout: channel (b,c) starts at (b*C+c)*H*W.
+        let data: Vec<f32> = (0..2 * 3 * 2 * 2).map(|i| i as f32).collect();
+        let t = Tensor::new(&[2, 3, 2, 2], data);
+        assert_eq!(t.channel(0, 0), &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(t.channel(0, 2), &[8.0, 9.0, 10.0, 11.0]);
+        assert_eq!(t.channel(1, 0), &[12.0, 13.0, 14.0, 15.0]);
+    }
+
+    #[test]
+    fn rank3_is_batch_one() {
+        let t = Tensor::zeros(&[3, 4, 5]);
+        assert_eq!(t.as_bchw(), (1, 3, 4, 5));
+    }
+
+    #[test]
+    fn stats() {
+        let t = Tensor::new(&[4], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.min_max(), (1.0, 4.0));
+        assert!((t.mean() - 2.5).abs() < 1e-6);
+        assert!((t.std() - (1.25f32).sqrt()).abs() < 1e-6);
+        assert!((t.energy() - 30.0).abs() < 1e-9);
+        assert_eq!(t.abs_max(), 4.0);
+    }
+
+    #[test]
+    fn min_max_handles_nan_and_empty() {
+        assert_eq!(min_max(&[]), (0.0, 0.0));
+        assert_eq!(min_max(&[f32::NAN, 2.0, -1.0]), (-1.0, 2.0));
+    }
+
+    #[test]
+    fn rel_l2_error_zero_for_identical() {
+        let mut rng = Pcg32::seeded(5);
+        let t = Tensor::randn(&[2, 3, 4, 4], 1.0, &mut rng);
+        assert!(t.rel_l2_error(&t) < 1e-12);
+    }
+
+    #[test]
+    fn reshape_roundtrip() {
+        let t = Tensor::zeros(&[2, 8]).reshape(&[4, 4]);
+        assert_eq!(t.shape(), &[4, 4]);
+    }
+}

@@ -1,0 +1,176 @@
+//! Mini property-testing framework (no `proptest` offline).
+//!
+//! Runs a property over many seeded-random cases and reports the first
+//! failing seed so the case reproduces exactly. Used by codec/coordinator
+//! invariant tests:
+//!
+//! ```
+//! use slfac::testing::{prop, Gen};
+//! prop("abs is non-negative", 200, |g: &mut Gen| {
+//!     let x = g.f32_in(-100.0, 100.0);
+//!     assert!(x.abs() >= 0.0);
+//! });
+//! ```
+
+use crate::rng::Pcg32;
+
+/// Random case generator handed to properties.
+pub struct Gen {
+    rng: Pcg32,
+    /// Case index (0-based) — handy for size scaling.
+    pub case: usize,
+}
+
+impl Gen {
+    /// Underlying RNG access.
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform_in(lo, hi)
+    }
+
+    /// Uniform usize in `[lo, hi]` inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below((hi - lo + 1) as u32) as usize
+    }
+
+    /// Standard normal f32.
+    pub fn normal(&mut self) -> f32 {
+        self.rng.normal()
+    }
+
+    /// Vec of standard normals.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.rng.normal()).collect()
+    }
+
+    /// Vec of normals with occasional large outliers — stresses quantizers.
+    pub fn spiky_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                let base = self.rng.normal();
+                if self.rng.uniform() < 0.02 {
+                    base * 100.0
+                } else {
+                    base
+                }
+            })
+            .collect()
+    }
+
+    /// A random small (B, C, M, N) activation-like shape.
+    pub fn bchw_shape(&mut self) -> [usize; 4] {
+        [
+            self.usize_in(1, 4),
+            self.usize_in(1, 8),
+            self.usize_in(1, 16),
+            self.usize_in(1, 16),
+        ]
+    }
+
+    /// Random tensor of the given shape, N(0, std).
+    pub fn tensor(&mut self, shape: &[usize], std: f32) -> crate::tensor::Tensor {
+        crate::tensor::Tensor::randn(shape, std, &mut self.rng)
+    }
+
+    /// Pick an element uniformly from a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u32) as usize]
+    }
+
+    /// Bernoulli(p).
+    pub fn bool(&mut self, p: f32) -> bool {
+        self.rng.uniform() < p
+    }
+}
+
+/// Base seed: override with `SLFAC_PROP_SEED` to replay a failure campaign.
+fn base_seed() -> u64 {
+    std::env::var("SLFAC_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED_CAFE)
+}
+
+/// Run `cases` random cases of a property. On panic, re-raises with the
+/// failing case seed in the message.
+pub fn prop<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, cases: usize, f: F) {
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen {
+                rng: Pcg32::seeded(seed),
+                case,
+            };
+            f(&mut g);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}, \
+                 set SLFAC_PROP_SEED={base} to replay): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two slices are elementwise close.
+#[track_caller]
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32) {
+    assert_eq!(a.len(), b.len(), "length mismatch");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= atol,
+            "index {i}: {x} vs {y} (atol {atol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prop_runs_all_cases() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static COUNT: AtomicUsize = AtomicUsize::new(0);
+        prop("counter", 25, |_g| {
+            COUNT.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(COUNT.load(Ordering::Relaxed), 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn prop_reports_failure_with_seed() {
+        prop("always-fails", 10, |_g| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn gen_ranges() {
+        prop("gen ranges", 50, |g| {
+            let x = g.usize_in(3, 7);
+            assert!((3..=7).contains(&x));
+            let f = g.f32_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+            let s = g.bchw_shape();
+            assert!(s.iter().all(|&d| d >= 1));
+        });
+    }
+
+    #[test]
+    fn assert_close_passes_and_lengths_checked() {
+        assert_close(&[1.0, 2.0], &[1.0001, 1.9999], 1e-3);
+    }
+}

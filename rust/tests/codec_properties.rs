@@ -1,0 +1,176 @@
+//! Cross-codec property and robustness tests (no XLA required).
+//!
+//! These go beyond the per-module unit tests: wire-format fuzzing,
+//! FQC invariants read back from real payload headers, f16 lattice
+//! round-trip, and determinism under concurrency.
+
+use slfac::codec::wire::{f16_to_f32, f32_to_f16, BodyReader, Payload};
+use slfac::codec::{self, ActivationCodec, CodecParams, SlFacCodec, SlFacConfig};
+use slfac::dct::Dct2d;
+use slfac::rng::Pcg32;
+use slfac::testing::prop;
+
+#[test]
+fn payload_fuzz_never_panics() {
+    // Random byte strings must be rejected gracefully, never panic.
+    let mut rng = Pcg32::seeded(0xF022);
+    for _ in 0..2000 {
+        let len = rng.below(200) as usize;
+        let bytes: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+        let _ = Payload::from_bytes(&bytes); // Result either way
+    }
+}
+
+#[test]
+fn truncated_and_bitflipped_payloads_fail_closed() {
+    let params = CodecParams::default();
+    let x = codec::smooth_activations(&[2, 4, 8, 8], 5);
+    let mut rng = Pcg32::seeded(0xBADC);
+    for name in codec::ALL_CODECS {
+        let c = codec::by_name(name, &params).unwrap();
+        let input = if c.frequency_domain() {
+            Dct2d::forward_tensor(&x)
+        } else {
+            x.clone()
+        };
+        let p = c.compress(&input).unwrap();
+        // truncation at random points: decompress must error or return the
+        // right shape — never panic, never return a wrong-shaped tensor.
+        for _ in 0..20 {
+            let cut = rng.below(p.body.len().max(1) as u32) as usize;
+            let mut t = p.clone();
+            t.body.truncate(cut);
+            if let Ok(out) = c.decompress(&t) {
+                assert_eq!(out.shape(), &[2, 4, 8, 8], "{name}");
+            }
+        }
+        // single random bit flips: same contract, and all outputs finite
+        // or an error (quantized formats cannot produce NaN from levels,
+        // but header floats can — codecs must still return *something*
+        // sane or an error).
+        for _ in 0..20 {
+            let mut t = p.clone();
+            if t.body.is_empty() {
+                continue;
+            }
+            let i = rng.below(t.body.len() as u32) as usize;
+            t.body[i] ^= 1 << rng.below(8);
+            let _ = c.decompress(&t);
+        }
+    }
+}
+
+#[test]
+fn fqc_bit_widths_respect_bounds_in_real_payloads() {
+    prop("fqc header invariants", 40, |g| {
+        let shape = g.bchw_shape();
+        let x = g.tensor(&shape, 1.5);
+        let coeffs = Dct2d::forward_tensor(&x);
+        let cfg = SlFacConfig {
+            theta: *g.choose(&[0.6f64, 0.8, 0.9, 0.95]),
+            ..Default::default()
+        };
+        let c = SlFacCodec::new(cfg);
+        let p = c.compress(&coeffs).unwrap();
+        let [b, ch, m, n] = p.shape;
+        let plane = m * n;
+        let mut r = BodyReader::new(&p.body);
+        for _ in 0..b * ch {
+            let k = r.u16().unwrap() as usize;
+            let b_low = r.u8().unwrap() as u32;
+            let b_high = r.u8().unwrap() as u32;
+            assert!(k >= 1 && k <= plane, "k*={k}");
+            assert!((cfg.alloc.b_min..=cfg.alloc.b_max).contains(&b_low));
+            assert!((cfg.alloc.b_min..=cfg.alloc.b_max).contains(&b_high));
+            // NOTE: b_low >= b_high is NOT an invariant of Eq. 7 — on
+            // near-flat spectra (k/len > θ) F_h's *mean* energy can exceed
+            // F_l's; only the [b_min, b_max] bounds are guaranteed.
+            let min_low = r.f32().unwrap();
+            let max_low = r.f32().unwrap();
+            assert!(min_low <= max_low);
+            let mut bits = k * b_low as usize;
+            if k < plane {
+                let min_high = r.f32().unwrap();
+                let max_high = r.f32().unwrap();
+                assert!(min_high <= max_high);
+                bits += (plane - k) * b_high as usize;
+            }
+            r.bytes((bits + 7) / 8).unwrap();
+        }
+        assert_eq!(r.remaining(), 0);
+    });
+}
+
+#[test]
+fn f16_lattice_roundtrip_exact() {
+    // Every representable finite half value must round-trip bit-exactly
+    // through f32 (f16 -> f32 -> f16).
+    let mut checked = 0u32;
+    for h in 0..=u16::MAX {
+        let exp = (h >> 10) & 0x1F;
+        if exp == 0x1F {
+            continue; // inf/nan
+        }
+        let f = f16_to_f32(h);
+        let back = f32_to_f16(f);
+        // -0.0 and 0.0 both fine but must preserve bits exactly
+        assert_eq!(back, h, "h={h:#06x} f={f}");
+        checked += 1;
+    }
+    assert!(checked > 60_000);
+}
+
+#[test]
+fn slfac_is_threadsafe_and_deterministic() {
+    let x = Dct2d::forward_tensor(&codec::smooth_activations(&[4, 8, 14, 14], 9));
+    let c = std::sync::Arc::new(SlFacCodec::new(SlFacConfig::default()));
+    let reference = c.compress(&x).unwrap().to_bytes();
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let c = c.clone();
+            let x = x.clone();
+            let reference = reference.clone();
+            std::thread::spawn(move || {
+                for _ in 0..10 {
+                    assert_eq!(c.compress(&x).unwrap().to_bytes(), reference);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn wire_bytes_equals_serialized_length_for_all_codecs() {
+    let params = CodecParams::default();
+    let x = codec::smooth_activations(&[1, 3, 10, 12], 21);
+    for name in codec::ALL_CODECS {
+        let c = codec::by_name(name, &params).unwrap();
+        let input = if c.frequency_domain() {
+            Dct2d::forward_tensor(&x)
+        } else {
+            x.clone()
+        };
+        let p = c.compress(&input).unwrap();
+        assert_eq!(p.wire_bytes(), p.to_bytes().len(), "{name}");
+    }
+}
+
+#[test]
+fn slfac_ratio_improves_on_smoother_data() {
+    // Smoother input (energy more concentrated) ⇒ smaller k* ⇒ fewer bits.
+    let smooth = codec::smooth_activations(&[4, 8, 14, 14], 30);
+    let mut rng = Pcg32::seeded(31);
+    let noisy = slfac::tensor::Tensor::randn(&[4, 8, 14, 14], 1.0, &mut rng);
+    let c = SlFacCodec::new(SlFacConfig::default());
+    let p_smooth = c.compress(&Dct2d::forward_tensor(&smooth)).unwrap();
+    let p_noisy = c.compress(&Dct2d::forward_tensor(&noisy)).unwrap();
+    assert!(
+        p_smooth.wire_bytes() < p_noisy.wire_bytes(),
+        "smooth {} vs noisy {}",
+        p_smooth.wire_bytes(),
+        p_noisy.wire_bytes()
+    );
+}

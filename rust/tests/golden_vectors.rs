@@ -1,0 +1,110 @@
+//! Cross-language golden tests: the Rust frequency stack (DCT, zig-zag,
+//! AFD) must agree bit-for-bit in semantics with the Python/Pallas side.
+//! Vectors are emitted by `python/compile/aot.py` (`make artifacts`).
+//!
+//! Skipped (with a notice) when `artifacts/golden/golden.json` is absent.
+
+use slfac::dct::Dct2d;
+use slfac::freq::{afd_channel, zigzag};
+use slfac::json::Json;
+use slfac::tensor::Tensor;
+
+fn load_golden() -> Option<Json> {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/golden/golden.json");
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(_) => {
+            eprintln!("SKIP: {path} missing — run `make artifacts`");
+            return None;
+        }
+    };
+    Some(Json::parse(&text).expect("golden.json must parse"))
+}
+
+#[test]
+fn rust_dct_matches_pallas_kernel() {
+    let Some(g) = load_golden() else { return };
+    let cases = g.get("dct_cases").unwrap().as_arr().unwrap();
+    assert!(!cases.is_empty());
+    for case in cases {
+        let shape: Vec<usize> = case
+            .get("shape")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|d| d.as_usize().unwrap())
+            .collect();
+        let input: Vec<f32> = case
+            .get("input")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        let expect: Vec<f32> = case
+            .get("dct")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        let x = Tensor::new(&shape, input);
+        let got = Dct2d::forward_tensor(&x);
+        let want = Tensor::new(&shape, expect);
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 2e-4, "shape {shape:?}: max diff {diff}");
+        // and python's own roundtrip error was tiny
+        let rt = case
+            .get("idct_roundtrip_max_err")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!(rt < 1e-3, "python roundtrip err {rt}");
+    }
+}
+
+#[test]
+fn rust_zigzag_matches_python() {
+    let Some(g) = load_golden() else { return };
+    let zz_obj = g.get("zigzag").unwrap().as_obj().unwrap();
+    assert!(!zz_obj.is_empty());
+    for (key, order) in zz_obj {
+        let (m, n) = key.split_once('x').unwrap();
+        let (m, n): (usize, usize) = (m.parse().unwrap(), n.parse().unwrap());
+        let want: Vec<u32> = order
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().unwrap() as u32)
+            .collect();
+        let got = zigzag(m, n);
+        assert_eq!(got.scan, want, "zigzag {m}x{n}");
+    }
+}
+
+#[test]
+fn rust_afd_split_matches_python() {
+    let Some(g) = load_golden() else { return };
+    let cases = g.get("afd_cases").unwrap().as_arr().unwrap();
+    assert!(!cases.is_empty());
+    for case in cases {
+        let m = case.get("m").unwrap().as_usize().unwrap();
+        let n = case.get("n").unwrap().as_usize().unwrap();
+        let plane: Vec<f32> = case
+            .get("plane")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        let theta = case.get("theta").unwrap().as_f64().unwrap();
+        let want_k = case.get("k_star").unwrap().as_usize().unwrap();
+        let zz = zigzag(m, n);
+        let split = afd_channel(&zz, &plane, theta);
+        assert_eq!(split.k, want_k, "{m}x{n} theta={theta}");
+    }
+}

@@ -1,0 +1,121 @@
+//! Full-system integration: the Trainer over real artifacts — one tiny run
+//! per scenario, asserting learning progress and communication accounting.
+//! Skipped when artifacts are missing.
+
+use slfac::config::{ExperimentConfig, Partition, SyncMode};
+use slfac::coordinator::Trainer;
+use slfac::runtime::ExecutorHandle;
+use std::sync::{Mutex, OnceLock};
+
+fn artifacts_root() -> &'static str {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")
+}
+
+fn executor() -> Option<&'static Mutex<ExecutorHandle>> {
+    static EXEC: OnceLock<Option<Mutex<ExecutorHandle>>> = OnceLock::new();
+    EXEC.get_or_init(|| {
+        if !std::path::Path::new(&format!("{}/manifest.json", artifacts_root())).exists() {
+            eprintln!("SKIP: artifacts missing — run `make artifacts`");
+            return None;
+        }
+        Some(Mutex::new(
+            ExecutorHandle::spawn(artifacts_root(), &["mnist".to_string()])
+                .expect("executor spawn"),
+        ))
+    })
+    .as_ref()
+}
+
+fn tiny_cfg(codec: &str) -> ExperimentConfig {
+    ExperimentConfig {
+        name: format!("it_{codec}"),
+        codec: codec.into(),
+        train_samples: 600,
+        test_samples: 64,
+        devices: 3,
+        rounds: 2,
+        batches_per_round: 4,
+        artifacts_dir: artifacts_root().into(),
+        seed: 7,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn slfac_codec_trains_end_to_end() {
+    let Some(exec) = executor() else { return };
+    let exec = exec.lock().unwrap().clone();
+    let mut t = Trainer::new(tiny_cfg("slfac"), exec).unwrap();
+    let out = t.run().unwrap();
+    assert_eq!(out.history.rounds.len(), 2);
+    let r1 = &out.history.rounds[0];
+    let r2 = &out.history.rounds[1];
+    assert!(r2.train_loss < r1.train_loss, "loss must drop");
+    assert!(r2.test_acc > 0.2, "better than chance: {}", r2.test_acc);
+    // bytes were charged both ways
+    assert!(r1.uplink_bytes > 0 && r1.downlink_bytes > 0);
+    // slfac compresses well below fp32 (raw act = 32*16*14*14*4 per batch)
+    let raw_per_round = (32 * 16 * 14 * 14 * 4) as u64 * 4 * 3; // batches*devices
+    assert!(r1.uplink_bytes < raw_per_round / 2);
+    assert!(out.exec_stats.total_execs() > 0);
+}
+
+#[test]
+fn sequential_mode_also_learns() {
+    let Some(exec) = executor() else { return };
+    let exec = exec.lock().unwrap().clone();
+    let mut cfg = tiny_cfg("slfac");
+    cfg.sync = SyncMode::Sequential;
+    let mut t = Trainer::new(cfg, exec).unwrap();
+    let out = t.run().unwrap();
+    let last = out.history.rounds.last().unwrap();
+    assert!(last.train_loss < 2.3);
+    assert!(last.test_acc > 0.2);
+}
+
+#[test]
+fn noniid_partition_runs_and_accounts() {
+    let Some(exec) = executor() else { return };
+    let exec = exec.lock().unwrap().clone();
+    let mut cfg = tiny_cfg("pq-sl");
+    cfg.partition = Partition::Dirichlet(0.5);
+    let mut t = Trainer::new(cfg, exec).unwrap();
+    let out = t.run().unwrap();
+    assert_eq!(out.history.rounds.len(), 2);
+    assert!(out.comm.total_bytes() > 0);
+    assert!(out.comm.makespan_s > 0.0);
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let Some(exec) = executor() else { return };
+    let exec1 = exec.lock().unwrap().clone();
+    let exec2 = exec1.clone();
+    let mut cfg = tiny_cfg("slfac");
+    cfg.rounds = 1;
+    let out1 = Trainer::new(cfg.clone(), exec1).unwrap().run().unwrap();
+    let out2 = Trainer::new(cfg, exec2).unwrap().run().unwrap();
+    let (a, b) = (&out1.history.rounds[0], &out2.history.rounds[0]);
+    assert_eq!(a.uplink_bytes, b.uplink_bytes);
+    assert!((a.train_loss - b.train_loss).abs() < 1e-9);
+    assert!((a.test_acc - b.test_acc).abs() < 1e-9);
+}
+
+#[test]
+fn gradient_compression_toggle_halves_downlink() {
+    let Some(exec) = executor() else { return };
+    let exec1 = exec.lock().unwrap().clone();
+    let exec2 = exec1.clone();
+    let mut on = tiny_cfg("slfac");
+    on.rounds = 1;
+    let mut off = on.clone();
+    off.compress_gradients = false;
+    let o1 = Trainer::new(on, exec1).unwrap().run().unwrap();
+    let o2 = Trainer::new(off, exec2).unwrap().run().unwrap();
+    assert!(
+        o1.history.rounds[0].downlink_bytes * 2 < o2.history.rounds[0].downlink_bytes,
+        "compressed downlink {} vs raw {}",
+        o1.history.rounds[0].downlink_bytes,
+        o2.history.rounds[0].downlink_bytes
+    );
+}
