@@ -1,26 +1,106 @@
-//! End-to-end round benchmark over real artifacts (the headline L3 number):
-//! one full split-learning communication round — client_fwd, compress,
-//! uplink, idct, server_step, compress, downlink, client_step — per codec.
+//! End-to-end round benchmarks.
 //!
-//! Requires `make artifacts`; exits with a notice otherwise.
+//! Section 1 (always runs): the **sequential-vs-parallel round engine**
+//! comparison on the sim executor backend at 1/4/16 devices — the headline
+//! number for the `workers` knob. Parallelism is bit-transparent, so this
+//! measures pure wall-clock.
+//!
+//! Section 2 (requires `make artifacts`): one full split-learning round
+//! over real PJRT artifacts per codec — client_fwd, compress, uplink,
+//! idct, server_step, compress, downlink, client_step.
 
-use slfac::bench::Bencher;
+use slfac::bench::{BenchResult, Bencher};
 use slfac::config::ExperimentConfig;
 use slfac::coordinator::Trainer;
-use slfac::runtime::ExecutorHandle;
+use slfac::runtime::{write_sim_manifest, ExecutorHandle, SimManifestSpec};
 
-fn main() {
+const SIM_BATCH: usize = 8;
+
+fn sim_cfg(dir: &str, codec: &str, devices: usize, workers: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        name: format!("bench_sim_{codec}_{devices}d_{workers}w"),
+        codec: codec.into(),
+        devices,
+        workers,
+        rounds: 1,
+        batches_per_round: 2,
+        batch_size: SIM_BATCH,
+        train_samples: 40 * devices,
+        test_samples: SIM_BATCH,
+        artifacts_dir: dir.into(),
+        ..Default::default()
+    }
+}
+
+fn bench_sim_engine(b: &mut Bencher) {
+    let dir = format!(
+        "{}/slfac_bench_sim_{}",
+        std::env::temp_dir().display(),
+        std::process::id()
+    );
+    // heavier cut layer than the tests use, so per-device work dominates
+    // thread handoff: act 8x14x14 = 1568 features
+    write_sim_manifest(
+        &dir,
+        &[SimManifestSpec {
+            preset: "mnist".into(),
+            batch_size: SIM_BATCH,
+            act_channels: 8,
+            act_hw: 14,
+        }],
+    )
+    .unwrap();
+    let exec = ExecutorHandle::spawn_sim(&dir, &["mnist".to_string()]).unwrap();
+
+    b.section("round engine: sequential (workers=1) vs parallel (workers=4), sim backend");
+    for codec in ["identity", "slfac"] {
+        for devices in [1usize, 4, 16] {
+            let mut seq: Option<BenchResult> = None;
+            for workers in [1usize, 4] {
+                if workers > devices {
+                    continue;
+                }
+                let mut trainer =
+                    Trainer::new(sim_cfg(&dir, codec, devices, workers), exec.clone())
+                        .unwrap();
+                // warm once (first-touch allocations), then measure rounds
+                let _ = trainer.run().unwrap();
+                let r = b
+                    .bench(
+                        &format!("sim round/{codec}/devices={devices}/workers={workers}"),
+                        || {
+                            let _ = trainer.run().unwrap();
+                        },
+                    )
+                    .clone();
+                match workers {
+                    1 => seq = Some(r),
+                    _ => {
+                        if let Some(seq) = &seq {
+                            println!(
+                                "    -> parallel speedup x{:.2} ({codec}, {devices} devices)",
+                                r.speedup_vs(seq)
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn bench_xla_round(b: &mut Bencher) {
     if !std::path::Path::new("artifacts/manifest.json").exists() {
-        eprintln!("SKIP bench_round: run `make artifacts` first");
+        eprintln!("SKIP xla round bench: run `make artifacts` first");
         return;
     }
-    let mut b = Bencher::new();
     // executor shared across codecs: compile once
     let exec = ExecutorHandle::spawn("artifacts", &["mnist".to_string()]).unwrap();
 
-    b.section("one communication round (5 devices x 2 batches, mnist)");
+    b.section("one communication round (5 devices x 2 batches, mnist, xla backend)");
     for codec in ["identity", "slfac", "pq-sl", "tk-sl", "fc-sl"] {
-        let cfg = ExperimentConfig {
+        let mk = || ExperimentConfig {
             name: format!("bench_{codec}"),
             codec: codec.into(),
             rounds: 1,
@@ -29,22 +109,10 @@ fn main() {
             test_samples: 64,
             ..Default::default()
         };
-        let mut trainer = Trainer::new(cfg, exec.clone()).unwrap();
         // warm once to amortize first-execution copies, then measure rounds.
+        let mut trainer = Trainer::new(mk(), exec.clone()).unwrap();
         let _ = trainer.run().unwrap();
-        let mut trainer = Trainer::new(
-            ExperimentConfig {
-                name: format!("bench_{codec}"),
-                codec: codec.into(),
-                rounds: 1,
-                batches_per_round: 2,
-                train_samples: 1000,
-                test_samples: 64,
-                ..Default::default()
-            },
-            exec.clone(),
-        )
-        .unwrap();
+        let mut trainer = Trainer::new(mk(), exec.clone()).unwrap();
         b.bench(&format!("round/{codec}"), || {
             let _ = trainer.run().unwrap();
         });
@@ -59,4 +127,10 @@ fn main() {
             t.as_secs_f64() * 1e3 / (*n as f64).max(1.0)
         );
     }
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    bench_sim_engine(&mut b);
+    bench_xla_round(&mut b);
 }

@@ -34,6 +34,12 @@ impl BenchResult {
         })
     }
 
+    /// Median-time speedup of `self` over `baseline` (> 1 ⇒ `self` is
+    /// faster). Used by the sequential-vs-parallel round benchmarks.
+    pub fn speedup_vs(&self, baseline: &BenchResult) -> f64 {
+        baseline.median.as_secs_f64() / self.median.as_secs_f64().max(1e-12)
+    }
+
     /// One formatted report line.
     pub fn line(&self) -> String {
         let mut s = format!(
@@ -212,6 +218,23 @@ mod tests {
             items_per_iter: None,
         };
         assert!((r.mb_per_s().unwrap() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let mk = |ms: u64| BenchResult {
+            name: "x".into(),
+            iters: 1,
+            median: Duration::from_millis(ms),
+            p10: Duration::from_millis(ms),
+            p90: Duration::from_millis(ms),
+            bytes_per_iter: None,
+            items_per_iter: None,
+        };
+        let fast = mk(100);
+        let slow = mk(400);
+        assert!((fast.speedup_vs(&slow) - 4.0).abs() < 1e-9);
+        assert!((slow.speedup_vs(&fast) - 0.25).abs() < 1e-9);
     }
 
     #[test]

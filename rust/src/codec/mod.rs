@@ -31,6 +31,7 @@ pub use topk::{TopKCodec, TopKConfig};
 pub use uniform::{EasyQuantCodec, IdentityCodec, PowerQuantCodec, UniformLinearCodec};
 pub use wire::Payload;
 
+use crate::rng::Pcg32;
 use crate::tensor::Tensor;
 use anyhow::Result;
 
@@ -76,6 +77,19 @@ pub trait ActivationCodec: Send + Sync {
 
     /// Compress a (B,C,M,N) tensor into a payload.
     fn compress(&self, x: &Tensor) -> Result<Payload>;
+
+    /// Compress drawing any randomized decisions from the **caller's** RNG
+    /// stream instead of codec-internal state.
+    ///
+    /// The parallel round engine calls this with a per-device stream
+    /// derived from the root seed ([`crate::rng::derive_seed`]), so
+    /// compression results are a function of `(seed, device, call index)`
+    /// alone — never of thread scheduling across devices. Deterministic
+    /// codecs ignore the stream (this default just forwards to
+    /// [`Self::compress`]); randomized codecs (TK-SL) must override it.
+    fn compress_with_rng(&self, x: &Tensor, _rng: &mut Pcg32) -> Result<Payload> {
+        self.compress(x)
+    }
 
     /// Reconstruct the tensor (same domain as `compress` input).
     fn decompress(&self, p: &Payload) -> Result<Tensor>;

@@ -60,18 +60,9 @@ impl TopKCodec {
             rng: Mutex::new(Pcg32::seeded(cfg.seed)),
         }
     }
-}
 
-impl ActivationCodec for TopKCodec {
-    fn name(&self) -> &'static str {
-        "tk-sl"
-    }
-
-    fn kind(&self) -> CodecKind {
-        CodecKind::TopK
-    }
-
-    fn compress(&self, x: &Tensor) -> Result<Payload> {
+    /// Shared compression body; `rng` supplies the random-extra draws.
+    fn compress_impl(&self, x: &Tensor, rng: &mut Pcg32) -> Result<Payload> {
         let (b, c, m, n) = x.as_bchw();
         let per_sample = c * m * n;
         let k_top = ((per_sample as f64 * self.cfg.keep_fraction).ceil() as usize)
@@ -79,7 +70,6 @@ impl ActivationCodec for TopKCodec {
         let k_rand = (per_sample as f64 * self.cfg.random_fraction).floor() as usize;
 
         let mut w = BodyWriter::with_capacity(b * (4 + (k_top + k_rand) * 6));
-        let mut rng = self.rng.lock().unwrap();
         for bi in 0..b {
             let sample = &x.data()[bi * per_sample..(bi + 1) * per_sample];
             // top-k by |x| via partial sort of indices
@@ -113,6 +103,29 @@ impl ActivationCodec for TopKCodec {
             shape: [b, c, m, n],
             body: w.finish(),
         })
+    }
+}
+
+impl ActivationCodec for TopKCodec {
+    fn name(&self) -> &'static str {
+        "tk-sl"
+    }
+
+    fn kind(&self) -> CodecKind {
+        CodecKind::TopK
+    }
+
+    fn compress(&self, x: &Tensor) -> Result<Payload> {
+        // Standalone path: draws from the codec's own advancing stream.
+        // NOT schedule-independent when one codec instance is shared by
+        // concurrent devices — the coordinator uses `compress_with_rng`
+        // with per-device streams instead.
+        let mut rng = self.rng.lock().unwrap();
+        self.compress_impl(x, &mut rng)
+    }
+
+    fn compress_with_rng(&self, x: &Tensor, rng: &mut Pcg32) -> Result<Payload> {
+        self.compress_impl(x, rng)
     }
 
     fn decompress(&self, p: &Payload) -> Result<Tensor> {
@@ -210,6 +223,27 @@ mod tests {
             last = err;
         }
         assert!(last < 0.01, "full keep should be ~f16-exact, err={last}");
+    }
+
+    #[test]
+    fn compress_with_rng_is_schedule_independent() {
+        // same per-device stream ⇒ same payload, no matter how many other
+        // compressions happened on the shared codec in between
+        let x = smooth_activations(&[2, 4, 8, 8], 15);
+        let codec = TopKCodec::new(TopKConfig::default());
+        let mut stream_a = crate::rng::Pcg32::derived(99, crate::rng::stream::CODEC, 0);
+        let p1 = codec.compress_with_rng(&x, &mut stream_a).unwrap();
+        // interleave unrelated work on the codec's internal stream
+        for _ in 0..5 {
+            let _ = codec.compress(&x).unwrap();
+        }
+        let mut stream_b = crate::rng::Pcg32::derived(99, crate::rng::stream::CODEC, 0);
+        let p2 = codec.compress_with_rng(&x, &mut stream_b).unwrap();
+        assert_eq!(p1.to_bytes(), p2.to_bytes());
+        // and a different device stream samples different extras
+        let mut stream_c = crate::rng::Pcg32::derived(99, crate::rng::stream::CODEC, 1);
+        let p3 = codec.compress_with_rng(&x, &mut stream_c).unwrap();
+        assert_ne!(p1.to_bytes(), p3.to_bytes());
     }
 
     #[test]

@@ -73,6 +73,10 @@ pub struct ExperimentConfig {
     pub noise: f32,
     /// Number of edge devices (paper: 5).
     pub devices: usize,
+    /// Worker threads for the device-parallel round phases (`0` = one per
+    /// available CPU). Affects wall-clock only: results are bit-identical
+    /// for every value (see `coordinator::engine`).
+    pub workers: usize,
     /// IID or Dirichlet(β).
     pub partition: Partition,
     /// Client weight sync protocol.
@@ -110,6 +114,7 @@ impl Default for ExperimentConfig {
             test_samples: 800,
             noise: 0.20,
             devices: 5,
+            workers: 0,
             partition: Partition::Iid,
             sync: SyncMode::ParallelFedAvg,
             codec: "slfac".into(),
@@ -150,6 +155,7 @@ impl ExperimentConfig {
                 "test_samples" => cfg.test_samples = v.as_usize().context("test_samples")?,
                 "noise" => cfg.noise = v.as_f64().context("noise")? as f32,
                 "devices" => cfg.devices = v.as_usize().context("devices")?,
+                "workers" => cfg.workers = v.as_usize().context("workers")?,
                 "partition" => {
                     let s = v.as_str().context("partition: string")?;
                     cfg.partition = match s.to_ascii_lowercase().as_str() {
@@ -251,6 +257,7 @@ impl ExperimentConfig {
         m.insert("test_samples".into(), Json::Num(self.test_samples as f64));
         m.insert("noise".into(), Json::Num(self.noise as f64));
         m.insert("devices".into(), Json::Num(self.devices as f64));
+        m.insert("workers".into(), Json::Num(self.workers as f64));
         match self.partition {
             Partition::Iid => {
                 m.insert("partition".into(), Json::Str("iid".into()));
@@ -313,12 +320,23 @@ mod tests {
         let mut cfg = ExperimentConfig::default();
         cfg.codec = "tk-sl".into();
         cfg.rounds = 30;
+        cfg.workers = 6;
         cfg.partition = Partition::Dirichlet(0.5);
         let json = cfg.to_json();
         let back = ExperimentConfig::from_json(&json).unwrap();
         assert_eq!(back.codec, "tk-sl");
         assert_eq!(back.rounds, 30);
+        assert_eq!(back.workers, 6);
         assert_eq!(back.partition, Partition::Dirichlet(0.5));
+    }
+
+    #[test]
+    fn workers_key_parses() {
+        let json = Json::parse(r#"{"workers": 4}"#).unwrap();
+        assert_eq!(ExperimentConfig::from_json(&json).unwrap().workers, 4);
+        // 0 = auto is accepted
+        let json = Json::parse(r#"{"workers": 0}"#).unwrap();
+        assert_eq!(ExperimentConfig::from_json(&json).unwrap().workers, 0);
     }
 
     #[test]

@@ -4,7 +4,13 @@
 //! SplitFed-style FedAvg each round is the standard multi-device SL
 //! protocol (DESIGN.md §3). Weights are averaged proportionally to shard
 //! sizes so unbalanced non-IID partitions do not bias toward small shards.
+//!
+//! **Order-stable reduction:** each parameter's accumulator always folds
+//! devices in id order (`d0, d1, …`), so the f64 sums — and therefore the
+//! rounded f32 results — are bit-identical no matter how many worker
+//! threads [`fedavg_sharded`] spreads the *parameters* across.
 
+use super::engine;
 use crate::runtime::HostTensor;
 use anyhow::{ensure, Result};
 
@@ -13,6 +19,18 @@ use anyhow::{ensure, Result};
 /// `per_device[d]` is device `d`'s parameter list; `weights[d]` its
 /// aggregation weight (e.g. shard size). All lists must be congruent.
 pub fn fedavg(per_device: &[Vec<HostTensor>], weights: &[f64]) -> Result<Vec<HostTensor>> {
+    fedavg_sharded(per_device, weights, 1)
+}
+
+/// [`fedavg`], sharding independent parameter tensors across up to
+/// `workers` threads. Bit-identical to `workers = 1` for every worker
+/// count (each parameter is computed independently with a fixed
+/// device-order fold).
+pub fn fedavg_sharded(
+    per_device: &[Vec<HostTensor>],
+    weights: &[f64],
+    workers: usize,
+) -> Result<Vec<HostTensor>> {
     ensure!(!per_device.is_empty(), "fedavg over zero devices");
     ensure!(per_device.len() == weights.len(), "weights/devices mismatch");
     let total: f64 = weights.iter().sum();
@@ -26,8 +44,8 @@ pub fn fedavg(per_device: &[Vec<HostTensor>], weights: &[f64]) -> Result<Vec<Hos
         );
     }
 
-    let mut out = Vec::with_capacity(n_params);
-    for i in 0..n_params {
+    let mut out: Vec<Option<HostTensor>> = (0..n_params).map(|_| None).collect();
+    engine::run_sharded(&mut out, workers, |i, slot| {
         let dims = per_device[0][i].dims().to_vec();
         let mut acc = vec![0.0f64; per_device[0][i].numel()];
         for (params, &w) in per_device.iter().zip(weights) {
@@ -40,12 +58,16 @@ pub fn fedavg(per_device: &[Vec<HostTensor>], weights: &[f64]) -> Result<Vec<Hos
                 *a += frac * v as f64;
             }
         }
-        out.push(HostTensor::f32(
+        *slot = Some(HostTensor::f32(
             &dims,
             acc.into_iter().map(|v| v as f32).collect(),
         ));
-    }
-    Ok(out)
+        Ok(())
+    })?;
+    Ok(out
+        .into_iter()
+        .map(|t| t.expect("every param slot filled"))
+        .collect())
 }
 
 #[cfg(test)]
@@ -80,6 +102,34 @@ mod tests {
         assert!(fedavg(&[p(&[1.0])], &[1.0, 2.0]).is_err());
         assert!(fedavg(&[p(&[1.0]), p(&[1.0, 2.0])], &[1.0, 1.0]).is_err());
         assert!(fedavg(&[p(&[1.0]), p(&[2.0])], &[0.0, 0.0]).is_err());
+    }
+
+    #[test]
+    fn sharded_is_bit_identical_to_sequential() {
+        let mut g = crate::rng::Pcg32::seeded(314);
+        let devices = 5;
+        let n_params = 9;
+        let per: Vec<Vec<HostTensor>> = (0..devices)
+            .map(|_| {
+                (0..n_params)
+                    .map(|p| {
+                        let n = 3 + p;
+                        HostTensor::f32(&[n], (0..n).map(|_| g.normal()).collect())
+                    })
+                    .collect()
+            })
+            .collect();
+        let weights: Vec<f64> = (1..=devices).map(|d| d as f64).collect();
+        let reference = fedavg_sharded(&per, &weights, 1).unwrap();
+        for workers in [2, 3, 8] {
+            let got = fedavg_sharded(&per, &weights, workers).unwrap();
+            assert_eq!(got.len(), reference.len());
+            for (a, b) in got.iter().zip(&reference) {
+                let ab: Vec<u32> = a.as_f32().iter().map(|v| v.to_bits()).collect();
+                let bb: Vec<u32> = b.as_f32().iter().map(|v| v.to_bits()).collect();
+                assert_eq!(ab, bb, "workers={workers}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,265 @@
+//! The sharded, thread-parallel round engine.
+//!
+//! Device state (`DeviceCtx` in [`super::trainer`]) is split into
+//! contiguous shards across a small pool of **scoped worker threads** (no
+//! external thread-pool dependency): with `W` workers and `N` devices,
+//! worker `w` owns devices `[w·⌈N/W⌉, (w+1)·⌈N/W⌉)` exclusively for the
+//! duration of one phase. Phases that are embarrassingly parallel across
+//! devices (client forward + encode + uplink; gradient decode + client
+//! backward) run through [`run_sharded`]; the server step and aggregation
+//! remain explicit barriers executed in device-id order by the caller.
+//!
+//! # Determinism contract
+//!
+//! A parallel run must be **bit-identical** to the sequential run at the
+//! same seed. The engine guarantees its part of that contract by
+//! construction:
+//!
+//! * each device's mutable state (loader RNG, link accounting, codec RNG
+//!   stream, pending step) is owned by exactly one worker per phase — no
+//!   shared mutable state, so no interleaving effects;
+//! * all randomness consumed inside a phase comes from per-device streams
+//!   derived from the root seed ([`crate::rng::derive_seed`]), never from
+//!   a generator shared across devices;
+//! * error reporting is order-stable: the failure surfaced to the caller
+//!   is always the one from the lowest device id, regardless of which
+//!   worker hit an error first.
+//!
+//! Reductions over per-device results (loss sums, byte counts, FedAvg)
+//! are performed by the caller *after* the phase barrier, iterating in
+//! device-id order — see [`super::aggregate`] and the trainer's
+//! round-metrics accounting.
+
+use anyhow::Result;
+
+/// Resolve a configured worker count: `0` means "one worker per available
+/// CPU", and the result is clamped to `[1, devices]`. The resolved value
+/// affects wall-clock only, never results.
+pub fn effective_workers(configured: usize, devices: usize) -> usize {
+    let auto = || {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    };
+    let w = if configured == 0 { auto() } else { configured };
+    w.clamp(1, devices.max(1))
+}
+
+/// Run `f(index, &mut item)` over every item, sharded across at most
+/// `workers` scoped threads. Barrier semantics: returns only after every
+/// item has been processed. With `workers <= 1` (or a single item) the
+/// loop runs inline on the caller's thread — zero spawn overhead, and the
+/// exact code path a sequential run takes.
+///
+/// Errors: every item is still visited regardless of the worker count (a
+/// failing item does not poison its shard-mates, and side effects — RNG
+/// advances, link accounting — stay identical across worker counts even
+/// on failure paths); the error returned is the one with the **lowest
+/// index**, so failure reporting does not depend on scheduling. Items are
+/// domain-neutral (the trainer shards devices, FedAvg shards parameters),
+/// so the context label is `item {i}`.
+pub fn run_sharded<T, F>(items: &mut [T], workers: usize, f: F) -> Result<()>
+where
+    T: Send,
+    F: Fn(usize, &mut T) -> Result<()> + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Ok(());
+    }
+    let w = workers.clamp(1, n);
+    if w == 1 {
+        let mut first_err: Option<(usize, anyhow::Error)> = None;
+        for (i, item) in items.iter_mut().enumerate() {
+            if let Err(e) = f(i, item) {
+                first_err.get_or_insert((i, e));
+            }
+        }
+        return match first_err {
+            Some((i, e)) => Err(e.context(format!("item {i}"))),
+            None => Ok(()),
+        };
+    }
+
+    let chunk = (n + w - 1) / w;
+    let f = &f;
+    let mut failures: Vec<(usize, anyhow::Error)> = std::thread::scope(|s| {
+        let handles: Vec<_> = items
+            .chunks_mut(chunk)
+            .enumerate()
+            .map(|(ci, shard)| {
+                s.spawn(move || {
+                    let base = ci * chunk;
+                    let mut errs = Vec::new();
+                    for (j, item) in shard.iter_mut().enumerate() {
+                        if let Err(e) = f(base + j, item) {
+                            errs.push((base + j, e));
+                        }
+                    }
+                    errs
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("round-engine worker panicked"))
+            .collect()
+    });
+    failures.sort_by_key(|(i, _)| *i);
+    match failures.into_iter().next() {
+        Some((i, e)) => Err(e.context(format!("item {i}"))),
+        None => Ok(()),
+    }
+}
+
+/// Compile-time guard: types crossing the engine's thread boundary. The
+/// phase closures are shared by reference across workers, so the executor
+/// handle must be `Sync` too (true since Rust 1.72, where
+/// `mpsc::Sender: Sync`).
+#[allow(dead_code)]
+fn assert_engine_types_are_send() {
+    fn is_send<T: Send>() {}
+    fn is_sync<T: Sync>() {}
+    is_send::<crate::net::Link>();
+    is_send::<crate::codec::Payload>();
+    is_send::<crate::runtime::HostTensor>();
+    is_send::<crate::runtime::ExecutorHandle>();
+    is_sync::<crate::runtime::ExecutorHandle>();
+    is_send::<crate::data::BatchLoader>();
+    is_send::<crate::rng::Pcg32>();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn visits_every_item_exactly_once_any_worker_count() {
+        for workers in [1, 2, 3, 4, 7, 16] {
+            let mut items: Vec<usize> = vec![0; 11];
+            run_sharded(&mut items, workers, |i, item| {
+                *item += i + 1;
+                Ok(())
+            })
+            .unwrap();
+            let want: Vec<usize> = (1..=11).collect();
+            assert_eq!(items, want, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn ids_match_slice_positions() {
+        let mut items: Vec<usize> = (0..23).collect();
+        run_sharded(&mut items, 4, |i, item| {
+            assert_eq!(i, *item);
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn empty_and_single_item_work() {
+        let mut none: Vec<u8> = vec![];
+        run_sharded(&mut none, 4, |_, _| Ok(())).unwrap();
+        let mut one = vec![5u8];
+        run_sharded(&mut one, 4, |_, v| {
+            *v = 9;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(one, vec![9]);
+    }
+
+    #[test]
+    fn lowest_item_error_wins_regardless_of_workers() {
+        for workers in [1, 2, 4, 8] {
+            let mut items = vec![(); 8];
+            let err = run_sharded(&mut items, workers, |i, _| {
+                if i == 2 || i == 6 {
+                    anyhow::bail!("boom {i}")
+                }
+                Ok(())
+            })
+            .unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("item 2"), "workers={workers}: {msg}");
+            assert!(msg.contains("boom 2"), "workers={workers}: {msg}");
+        }
+    }
+
+    #[test]
+    fn all_items_visited_even_when_some_fail() {
+        // identical visit counts sequential and parallel: error paths must
+        // not make side effects depend on the worker count
+        for workers in [1, 3] {
+            let count = AtomicUsize::new(0);
+            let mut items = vec![(); 10];
+            let _ = run_sharded(&mut items, workers, |i, _| {
+                count.fetch_add(1, Ordering::Relaxed);
+                if i % 2 == 0 {
+                    anyhow::bail!("even")
+                }
+                Ok(())
+            });
+            assert_eq!(count.load(Ordering::Relaxed), 10, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn really_runs_concurrently_with_multiple_workers() {
+        use std::sync::atomic::AtomicBool;
+        use std::time::{Duration, Instant};
+        // two workers must overlap: each item waits until *both* shards
+        // have started (with a timeout so a regression fails, not hangs)
+        static STARTED: AtomicUsize = AtomicUsize::new(0);
+        static OVERLAPPED: AtomicBool = AtomicBool::new(false);
+        STARTED.store(0, Ordering::SeqCst);
+        let mut items = vec![(); 2];
+        run_sharded(&mut items, 2, |_, _| {
+            STARTED.fetch_add(1, Ordering::SeqCst);
+            let t0 = Instant::now();
+            while t0.elapsed() < Duration::from_secs(5) {
+                if STARTED.load(Ordering::SeqCst) == 2 {
+                    OVERLAPPED.store(true, Ordering::SeqCst);
+                    return Ok(());
+                }
+                std::thread::yield_now();
+            }
+            Ok(())
+        })
+        .unwrap();
+        assert!(OVERLAPPED.load(Ordering::SeqCst), "workers never overlapped");
+    }
+
+    #[test]
+    fn effective_workers_resolution() {
+        assert_eq!(effective_workers(1, 10), 1);
+        assert_eq!(effective_workers(4, 10), 4);
+        assert_eq!(effective_workers(100, 10), 10);
+        assert_eq!(effective_workers(3, 0), 1);
+        assert!(effective_workers(0, 64) >= 1);
+    }
+
+    #[test]
+    fn sequential_and_parallel_mutations_are_identical() {
+        // the core differential property at the engine level: same final
+        // state for any worker count, even though work interleaves
+        let run = |workers: usize| -> Vec<u64> {
+            let mut items: Vec<u64> = (0..17).map(|i| i * 31 + 7).collect();
+            run_sharded(&mut items, workers, |i, item| {
+                let mut rng = crate::rng::Pcg32::derived(42, 0xE2E, i as u64);
+                for _ in 0..50 {
+                    *item = item.wrapping_add(rng.next_u32() as u64);
+                }
+                Ok(())
+            })
+            .unwrap();
+            items
+        };
+        let reference = run(1);
+        for workers in [2, 4, 16] {
+            assert_eq!(run(workers), reference, "workers={workers}");
+        }
+    }
+}

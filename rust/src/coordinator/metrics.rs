@@ -30,6 +30,25 @@ impl RoundMetrics {
     pub fn total_bytes(&self) -> u64 {
         self.uplink_bytes + self.downlink_bytes
     }
+
+    /// Bit-exact equality of everything *deterministic* in a round.
+    ///
+    /// All simulated quantities (losses, accuracies, bytes, simulated comm
+    /// time) must reproduce bit-for-bit at a fixed seed regardless of the
+    /// worker count; `wall_time_s` is host wall-clock and is deliberately
+    /// excluded. Float fields compare by bit pattern — the reductions
+    /// feeding them are order-stable (see `coordinator::engine`), so even
+    /// the f64 sums must match exactly.
+    pub fn bit_eq(&self, other: &RoundMetrics) -> bool {
+        self.round == other.round
+            && self.train_loss.to_bits() == other.train_loss.to_bits()
+            && self.train_acc.to_bits() == other.train_acc.to_bits()
+            && self.test_acc.to_bits() == other.test_acc.to_bits()
+            && self.test_loss.to_bits() == other.test_loss.to_bits()
+            && self.uplink_bytes == other.uplink_bytes
+            && self.downlink_bytes == other.downlink_bytes
+            && self.comm_time_s.to_bits() == other.comm_time_s.to_bits()
+    }
 }
 
 /// Full history of a run plus identifying metadata.
@@ -103,6 +122,18 @@ impl TrainingHistory {
         std::fs::write(path, self.to_csv())
     }
 
+    /// Bit-exact equality over all rounds (see [`RoundMetrics::bit_eq`];
+    /// wall-clock excluded). Used by the differential determinism tests to
+    /// compare `workers = 1` against `workers = N` runs.
+    pub fn bit_eq(&self, other: &TrainingHistory) -> bool {
+        self.rounds.len() == other.rounds.len()
+            && self
+                .rounds
+                .iter()
+                .zip(&other.rounds)
+                .all(|(a, b)| a.bit_eq(b))
+    }
+
     /// One-line summary for logs/tables.
     pub fn summary(&self) -> String {
         format!(
@@ -158,6 +189,34 @@ mod tests {
         assert_eq!(h.cumulative_bytes(0), 150);
         assert_eq!(h.cumulative_bytes(1), 450);
         assert_eq!(h.total_bytes(), 450);
+    }
+
+    #[test]
+    fn bit_eq_ignores_wall_clock_only() {
+        let a = mk(1, 0.5, 100);
+        let mut b = a.clone();
+        b.wall_time_s = 99.0;
+        assert!(a.bit_eq(&b), "wall clock must not affect bit_eq");
+        let mut c = a.clone();
+        c.train_loss = f64::from_bits(a.train_loss.to_bits() + 1);
+        assert!(!a.bit_eq(&c), "1-ulp loss drift must be detected");
+        let ha = TrainingHistory {
+            name: "x".into(),
+            codec: "y".into(),
+            rounds: vec![a.clone(), b],
+        };
+        let hb = TrainingHistory {
+            name: "x".into(),
+            codec: "y".into(),
+            rounds: vec![a.clone(), a.clone()],
+        };
+        assert!(ha.bit_eq(&hb));
+        let short = TrainingHistory {
+            name: "x".into(),
+            codec: "y".into(),
+            rounds: vec![a],
+        };
+        assert!(!ha.bit_eq(&short));
     }
 
     #[test]

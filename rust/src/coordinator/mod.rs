@@ -1,31 +1,50 @@
 //! L3 coordinator: the split-learning system.
 //!
+//! * [`engine`] — the sharded, thread-parallel round engine: a scoped
+//!   worker pool that splits device state into contiguous shards and runs
+//!   the embarrassingly-parallel phases concurrently, sized by the
+//!   `workers` config knob (`0` = one worker per CPU).
 //! * [`trainer`] — the training orchestrator: device workers, lockstep
 //!   round phases, SplitFed client-weight aggregation, sequential-SL mode,
 //!   evaluation, and the wire path (codec ↔ network simulator ↔ runtime).
-//! * [`aggregate`] — FedAvg over flat parameter lists.
-//! * [`metrics`] — per-round metrics, history, CSV output.
+//! * [`aggregate`] — FedAvg over flat parameter lists (parameter-sharded,
+//!   order-stable).
+//! * [`metrics`] — per-round metrics, history, CSV output, and bit-exact
+//!   comparison helpers for the differential determinism tests.
 //!
 //! One communication round (parallel mode) runs in three deterministic
 //! phases per local batch:
 //!
-//! 1. **fan-out (parallel)** — every device runs `client_fwd` through the
-//!    executor, compresses the smashed data (L3 codec, device thread), and
-//!    "uplinks" it through its simulated link;
-//! 2. **server (serialized, device order)** — decompress (+ `idct` for
-//!    frequency codecs), `server_step` (updates server params, returns the
-//!    activation gradient in both domains), compress the gradient,
-//!    "downlink" it;
-//! 3. **fan-in (parallel)** — every device decompresses its gradient and
-//!    runs `client_step`.
+//! 1. **fan-out (device-parallel)** — every device runs `client_fwd`
+//!    through the executor, compresses the smashed data (L3 codec, worker
+//!    thread), and "uplinks" it through its simulated link;
+//! 2. **server (barrier; serialized in device-id order)** — decompress
+//!    (+ `idct` for frequency codecs), `server_step` (updates server
+//!    params, returns the activation gradient in both domains), compress
+//!    the gradient, "downlink" it;
+//! 3. **fan-in (device-parallel)** — every device decompresses its
+//!    gradient and runs `client_step`.
 //!
-//! Phase 2's fixed ordering makes runs bit-reproducible while codec work
-//! still parallelizes across device threads.
+//! # Determinism
+//!
+//! A run is a function of its seed alone — never of the worker count or
+//! thread scheduling. Three mechanisms enforce this (and the
+//! `parallel_determinism` integration test checks it bit-for-bit):
+//!
+//! * every device owns **derived RNG streams** (`rng::derive_seed`) for
+//!   its loader, link jitter, and codec sampling;
+//! * phases 1/3 share no mutable state across devices; phase 2 and
+//!   round-end aggregation are barriers executed in device-id order;
+//! * all floating-point reductions (loss sums, comm stats, FedAvg) fold
+//!   in device-id order after the barrier — order-stable, hence
+//!   bit-stable.
 
 pub mod aggregate;
+pub mod engine;
 pub mod metrics;
 pub mod trainer;
 
-pub use aggregate::fedavg;
+pub use aggregate::{fedavg, fedavg_sharded};
+pub use engine::{effective_workers, run_sharded};
 pub use metrics::{RoundMetrics, TrainingHistory};
 pub use trainer::{TrainOutcome, Trainer};

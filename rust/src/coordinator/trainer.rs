@@ -1,5 +1,6 @@
 //! The training orchestrator: devices, rounds, the wire path, aggregation,
-//! evaluation. See the module docs in [`super`] for the phase structure.
+//! evaluation. See the module docs in [`super`] for the phase structure and
+//! [`super::engine`] for the worker pool + determinism contract.
 
 use crate::codec::{self, ActivationCodec, Payload};
 use crate::config::{DatasetKind, ExperimentConfig, Partition, SyncMode};
@@ -7,19 +8,29 @@ use crate::data::{
     partition_dirichlet, partition_iid, synthetic, BatchLoader, Dataset,
 };
 use crate::net::{CommStats, Direction, Link};
+use crate::rng::{derive_seed, stream, Pcg32};
 use crate::runtime::{ExecutorHandle, ExecutorStats, HostTensor};
 use crate::tensor::Tensor;
 use anyhow::{Context, Result};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use super::engine;
 use super::metrics::{RoundMetrics, TrainingHistory};
 
-/// Per-device state owned by the trainer across rounds.
+/// Per-device state owned by the trainer across rounds. Everything a
+/// worker thread needs for phases 1 and 3 lives here (own loader + link +
+/// codec RNG stream), which is what makes the sharded engine's
+/// no-shared-mutable-state determinism argument hold — see
+/// [`super::engine`].
 struct DeviceCtx {
     id: usize,
     loader: BatchLoader,
     link: Link,
+    /// Per-device codec sampling stream (randomized codecs draw from this
+    /// through [`ActivationCodec::compress_with_rng`], so payloads do not
+    /// depend on cross-device scheduling).
+    codec_rng: Pcg32,
     /// Device's client-side parameters (SplitFed: reset to the aggregate at
     /// round start; sequential: handed off device-to-device).
     cp: Vec<HostTensor>,
@@ -138,14 +149,23 @@ impl Trainer {
         let codec: Arc<dyn ActivationCodec> =
             Arc::from(codec::by_name(&cfg.codec, &cfg.codec_params)?);
 
+        // Per-device randomness: every stream derives from (root seed,
+        // purpose, device id), so no device's draws depend on any other
+        // device's progress — a prerequisite for schedule-independent
+        // parallel rounds.
         let devices = parts
             .into_iter()
             .enumerate()
             .map(|(id, shard)| DeviceCtx {
                 id,
                 shard_len: shard.len(),
-                loader: BatchLoader::new(shard, cfg.batch_size, cfg.seed ^ (id as u64) << 16),
-                link: Link::new(cfg.link, cfg.seed.wrapping_add(id as u64)),
+                loader: BatchLoader::new(
+                    shard,
+                    cfg.batch_size,
+                    derive_seed(cfg.seed, stream::LOADER, id as u64),
+                ),
+                link: Link::new(cfg.link, derive_seed(cfg.seed, stream::LINK, id as u64)),
+                codec_rng: Pcg32::derived(cfg.seed, stream::CODEC, id as u64),
                 cp: cp.clone(),
                 cm: cm.clone(),
                 pending: None,
@@ -192,13 +212,11 @@ impl Trainer {
             );
             history.rounds.push(m);
         }
-        let links: Vec<&Link> = self.devices.iter().map(|d| &d.link).collect();
+        // Order-stable reduction: fold in device-id order so f64 sums are
+        // bit-identical no matter how many workers ran the phases.
         let mut comm = CommStats::default();
-        for l in links {
-            comm.uplink_bytes += l.uplink_bytes;
-            comm.downlink_bytes += l.downlink_bytes;
-            comm.total_busy_s += l.busy_s;
-            comm.makespan_s = comm.makespan_s.max(l.busy_s);
+        for d in &self.devices {
+            comm.accumulate(&d.link);
         }
         Ok(TrainOutcome {
             history,
@@ -241,15 +259,19 @@ impl Trainer {
             self.phase_fanin()?;
         }
 
-        // SplitFed aggregation, weighted by shard sizes
+        // SplitFed aggregation, weighted by shard sizes. Sharded across
+        // workers by *parameter index* — each parameter still folds its
+        // devices in id order, so the result is bit-identical to the
+        // sequential fold (see `aggregate::fedavg_sharded`).
+        let workers = self.workers();
         let weights: Vec<f64> = self.devices.iter().map(|d| d.shard_len as f64).collect();
         let cps: Vec<Vec<HostTensor>> =
             self.devices.iter().map(|d| d.cp.clone()).collect();
         let cms: Vec<Vec<HostTensor>> =
             self.devices.iter().map(|d| d.cm.clone()).collect();
         self.client = (
-            super::aggregate::fedavg(&cps, &weights)?,
-            super::aggregate::fedavg(&cms, &weights)?,
+            super::aggregate::fedavg_sharded(&cps, &weights, workers)?,
+            super::aggregate::fedavg_sharded(&cms, &weights, workers)?,
         );
 
         self.finish_round(round, t0, loss_sum, correct, samples, up0, down0)
@@ -288,28 +310,23 @@ impl Trainer {
         self.finish_round(round, t0, loss_sum, correct, samples, up0, down0)
     }
 
-    /// Phase 1 over all devices, codec work parallel across device threads.
+    /// Effective worker-pool width for the parallel phases.
+    fn workers(&self) -> usize {
+        engine::effective_workers(self.cfg.workers, self.cfg.devices)
+    }
+
+    /// Phase 1 over all devices: client forward + codec encode + uplink,
+    /// sharded across the worker pool.
     fn phase_fanout(&mut self) -> Result<()> {
         let exec = &self.exec;
         let codec = &self.codec;
         let cfg = &self.cfg;
         let preset = &self.preset;
         let train = &self.train;
-        let results: Vec<Result<()>> = std::thread::scope(|s| {
-            let handles: Vec<_> = self
-                .devices
-                .iter_mut()
-                .map(|dev| {
-                    let exec = exec.clone();
-                    let codec = Arc::clone(codec);
-                    s.spawn(move || {
-                        device_fanout_impl(dev, &exec, codec.as_ref(), cfg, preset, train)
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
-        });
-        results.into_iter().collect()
+        let workers = self.workers();
+        engine::run_sharded(&mut self.devices, workers, |_, dev| {
+            device_fanout_impl(dev, exec, codec.as_ref(), cfg, preset, train)
+        })
     }
 
     fn device_fanout(&mut self, di: usize) -> Result<()> {
@@ -384,7 +401,9 @@ impl Trainer {
         let batch = step.y.numel() as u64;
         if cfg.compress_gradients {
             let g = if freq { gact_dct } else { gact };
-            let payload = self.codec.compress(&g.into_tensor())?;
+            let payload = self
+                .codec
+                .compress_with_rng(&g.into_tensor(), &mut dev.codec_rng)?;
             dev.link
                 .transfer(Direction::Downlink, payload.wire_bytes());
             step.grad = Some(GradMsg::Compressed(payload));
@@ -395,25 +414,17 @@ impl Trainer {
         Ok((loss, correct, batch))
     }
 
-    /// Phase 3 over all devices, parallel.
+    /// Phase 3 over all devices: gradient decode + client backward,
+    /// sharded across the worker pool.
     fn phase_fanin(&mut self) -> Result<()> {
         let exec = &self.exec;
         let codec = &self.codec;
         let cfg = &self.cfg;
         let preset = &self.preset;
-        let results: Vec<Result<()>> = std::thread::scope(|s| {
-            let handles: Vec<_> = self
-                .devices
-                .iter_mut()
-                .map(|dev| {
-                    let exec = exec.clone();
-                    let codec = Arc::clone(codec);
-                    s.spawn(move || device_fanin_impl(dev, &exec, codec.as_ref(), cfg, preset))
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
-        });
-        results.into_iter().collect()
+        let workers = self.workers();
+        engine::run_sharded(&mut self.devices, workers, |_, dev| {
+            device_fanin_impl(dev, exec, codec.as_ref(), cfg, preset)
+        })
     }
 
     fn device_fanin(&mut self, di: usize) -> Result<()> {
@@ -506,6 +517,18 @@ impl Trainer {
             .map(|d| (d.id, d.link.uplink_bytes, d.link.downlink_bytes, d.link.busy_s))
             .collect()
     }
+
+    /// Snapshot of the aggregated client-side parameters (for the
+    /// differential determinism tests: parallel and sequential runs must
+    /// end bit-identical here).
+    pub fn client_params(&self) -> Vec<HostTensor> {
+        self.client.0.clone()
+    }
+
+    /// Snapshot of the server-side parameters.
+    pub fn server_params(&self) -> Vec<HostTensor> {
+        self.server.lock().unwrap().0.clone()
+    }
 }
 
 /// Phase-1 body (shared by parallel and sequential modes).
@@ -537,7 +560,7 @@ fn device_fanout_impl(
     } else {
         act.into_tensor()
     };
-    let payload = codec.compress(&wire_input)?;
+    let payload = codec.compress_with_rng(&wire_input, &mut dev.codec_rng)?;
     dev.link.transfer(Direction::Uplink, payload.wire_bytes());
     dev.pending = Some(StepCtx {
         x,

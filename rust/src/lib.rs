@@ -5,12 +5,36 @@
 //! Rust + JAX + Pallas system:
 //!
 //! * **L3 (this crate)** — the split-learning coordinator: device manager,
-//!   round scheduler, the AFD+FQC codec on the wire path, baseline codecs,
-//!   network simulator, metrics, config and CLI. Python never runs here.
+//!   thread-parallel round engine, the AFD+FQC codec on the wire path,
+//!   baseline codecs, network simulator, metrics, config and CLI. Python
+//!   never runs here.
 //! * **L2** — the split ResNet written in JAX (`python/compile/model.py`),
 //!   AOT-lowered to HLO text artifacts loaded by [`runtime`].
 //! * **L1** — the batched 2-D DCT Pallas kernel
 //!   (`python/compile/kernels/dct_kernel.py`) lowered inside the L2 graphs.
+//!
+//! # The parallel round engine
+//!
+//! Rounds are **device-parallel**: the fan-out phase (client forward +
+//! codec encode + uplink) and the fan-in phase (gradient decode + client
+//! backward) run concurrently across devices on a sharded worker pool
+//! ([`coordinator::engine`]), while the server step and aggregation stay
+//! explicit barriers. The pool width is the `workers` config key /
+//! `--workers` CLI flag (`0` = one worker per CPU). Parallelism is
+//! **bit-transparent**: at a fixed seed, `workers = N` produces the exact
+//! same `TrainingHistory`, `CommStats`, and parameters as `workers = 1` —
+//! every random draw comes from a per-device stream derived from the root
+//! seed ([`rng::derive_seed`]) and every floating-point reduction folds in
+//! device-id order. The `parallel_determinism` integration test enforces
+//! this differentially.
+//!
+//! # Executor backends
+//!
+//! The model executor ([`runtime`]) serves two backends behind one actor:
+//! **xla** (PJRT over AOT HLO artifacts — requires `make artifacts` and a
+//! real `xla` crate in place of the vendored stub) and **sim** (a small
+//! deterministic pure-Rust split model driven by `manifest.json` alone),
+//! so the full coordinator stack runs and tests offline.
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index.
 

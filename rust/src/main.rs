@@ -33,8 +33,10 @@ fn cli() -> Command {
                 .opt("rounds", "N", "communication rounds", None)
                 .opt("theta", "F", "AFD energy threshold", None)
                 .opt("devices", "N", "edge devices", None)
+                .opt("workers", "N", "round-engine worker threads (0 = auto)", None)
                 .opt("seed", "N", "master seed", None)
                 .opt("sync", "MODE", "parallel | sequential", None)
+                .opt("backend", "KIND", "executor backend: xla | sim", Some("xla"))
                 .opt("artifacts", "DIR", "artifacts directory", None)
                 .opt("out", "PATH", "metrics CSV output path", None)
                 .flag("quiet", "suppress per-round logs"),
@@ -110,6 +112,9 @@ fn build_config(m: &Matches) -> Result<ExperimentConfig> {
     if let Some(d) = m.get_parsed::<usize>("devices").map_err(anyhow::Error::msg)? {
         cfg.devices = d;
     }
+    if let Some(w) = m.get_parsed::<usize>("workers").map_err(anyhow::Error::msg)? {
+        cfg.workers = w;
+    }
     if let Some(s) = m.get_parsed::<u64>("seed").map_err(anyhow::Error::msg)? {
         cfg.seed = s;
         cfg.codec_params.seed = s;
@@ -133,9 +138,15 @@ fn cmd_train(m: &Matches) -> Result<()> {
         slfac::logging::set_level(slfac::logging::Level::Warn);
     }
     let cfg = build_config(m)?;
-    let exec = slfac::runtime::ExecutorHandle::spawn(
+    let backend = match m.get("backend").unwrap_or("xla") {
+        "xla" => slfac::runtime::BackendKind::Xla,
+        "sim" => slfac::runtime::BackendKind::Sim,
+        other => anyhow::bail!("unknown backend '{other}' (expected xla | sim)"),
+    };
+    let exec = slfac::runtime::ExecutorHandle::spawn_backend(
         &cfg.artifacts_dir,
         &[cfg.dataset.name().to_string()],
+        backend,
     )?;
     let name = cfg.name.clone();
     let codec_name = cfg.codec.clone();

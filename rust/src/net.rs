@@ -118,24 +118,54 @@ pub struct CommStats {
 }
 
 impl CommStats {
-    /// Gather stats from links.
+    /// Gather stats from links. Accumulation is in slice order — callers
+    /// that need bit-reproducible `total_busy_s` across runs must pass
+    /// links in device-id order (the trainer does), never in thread
+    /// completion order.
     pub fn from_links(links: &[Link]) -> Self {
         let mut s = CommStats::default();
         for l in links {
-            s.uplink_bytes += l.uplink_bytes;
-            s.downlink_bytes += l.downlink_bytes;
-            s.total_busy_s += l.busy_s;
-            if l.busy_s > s.makespan_s {
-                s.makespan_s = l.busy_s;
-            }
+            s.accumulate(l);
         }
         s
+    }
+
+    /// Fold one link into the aggregate (order-stable f64 summation: the
+    /// caller fixes the fold order, so the parallel round engine reduces
+    /// after its phase barrier in device-id order and gets bytes *and*
+    /// times bit-identical to a sequential run).
+    pub fn accumulate(&mut self, l: &Link) {
+        self.uplink_bytes += l.uplink_bytes;
+        self.downlink_bytes += l.downlink_bytes;
+        self.total_busy_s += l.busy_s;
+        if l.busy_s > self.makespan_s {
+            self.makespan_s = l.busy_s;
+        }
     }
 
     /// Total bytes both directions.
     pub fn total_bytes(&self) -> u64 {
         self.uplink_bytes + self.downlink_bytes
     }
+
+    /// Bit-exact equality (f64 fields compared by bit pattern, so `-0.0 !=
+    /// 0.0` and NaNs compare by payload — exactly what the differential
+    /// determinism tests need).
+    pub fn bit_eq(&self, other: &CommStats) -> bool {
+        self.uplink_bytes == other.uplink_bytes
+            && self.downlink_bytes == other.downlink_bytes
+            && self.makespan_s.to_bits() == other.makespan_s.to_bits()
+            && self.total_busy_s.to_bits() == other.total_busy_s.to_bits()
+    }
+}
+
+/// Compile-time guard: links (and their RNG streams) migrate into the
+/// round engine's worker threads.
+#[allow(dead_code)]
+fn assert_link_is_send() {
+    fn is_send<T: Send>() {}
+    is_send::<Link>();
+    is_send::<CommStats>();
 }
 
 #[cfg(test)]
@@ -196,6 +226,28 @@ mod tests {
         assert_eq!(s.uplink_bytes, 10_001_000);
         assert_eq!(s.downlink_bytes, 2_000);
         assert!(s.makespan_s < s.total_busy_s);
+    }
+
+    #[test]
+    fn accumulate_matches_from_links_and_bit_eq() {
+        let mut l1 = Link::new(LinkConfig::default(), 1);
+        let mut l2 = Link::new(LinkConfig::default(), 2);
+        l1.transfer(Direction::Uplink, 5_000);
+        l2.transfer(Direction::Downlink, 7_000);
+        let batch = CommStats::from_links(&[l1, l2]);
+        // re-create the same traffic and fold incrementally
+        let mut a = Link::new(LinkConfig::default(), 1);
+        let mut b = Link::new(LinkConfig::default(), 2);
+        a.transfer(Direction::Uplink, 5_000);
+        b.transfer(Direction::Downlink, 7_000);
+        let mut inc = CommStats::default();
+        inc.accumulate(&a);
+        inc.accumulate(&b);
+        assert!(batch.bit_eq(&inc));
+        // any field difference breaks bit equality
+        let mut other = inc.clone();
+        other.total_busy_s += 1e-12;
+        assert!(!inc.bit_eq(&other));
     }
 
     #[test]

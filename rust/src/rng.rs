@@ -19,6 +19,34 @@ pub struct Pcg32 {
 
 const PCG_MULT: u64 = 6364136223846793005;
 
+/// SplitMix64 finalizer — a strong 64-bit bit mixer used for seed derivation.
+pub fn mix64(z: u64) -> u64 {
+    let mut z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Derive an independent sub-seed from a root seed, a purpose tag, and an
+/// index. Every consumer of randomness in the coordinator (per-device batch
+/// loaders, link jitter, codec sampling, …) gets its own stream via this
+/// function, so results are a function of `(root seed, purpose, device)`
+/// alone — never of thread scheduling or the number of parallel workers.
+pub fn derive_seed(root: u64, tag: u64, index: u64) -> u64 {
+    mix64(root ^ mix64(tag ^ mix64(index)))
+}
+
+/// Purpose tags for [`derive_seed`] (stable across releases — changing one
+/// changes every derived stream).
+pub mod stream {
+    /// Per-device batch loader shuffling.
+    pub const LOADER: u64 = 0x4C4F_4144;
+    /// Per-device link jitter.
+    pub const LINK: u64 = 0x4C49_4E4B;
+    /// Per-device codec sampling (randomized codecs, e.g. TK-SL).
+    pub const CODEC: u64 = 0x434F_4443;
+}
+
 impl Pcg32 {
     /// Seed with a state seed and stream id (any values are fine).
     pub fn new(seed: u64, stream: u64) -> Self {
@@ -33,6 +61,12 @@ impl Pcg32 {
     /// Convenience single-seed constructor (stream 54).
     pub fn seeded(seed: u64) -> Self {
         Self::new(seed, 54)
+    }
+
+    /// Independent per-entity generator: state and stream id both derived
+    /// from `(root, tag, index)` via [`derive_seed`]/[`mix64`].
+    pub fn derived(root: u64, tag: u64, index: u64) -> Self {
+        Self::new(derive_seed(root, tag, index), mix64(tag).wrapping_add(index))
     }
 
     /// Next raw 32 random bits.
@@ -183,6 +217,38 @@ impl Pcg32 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn derived_streams_are_deterministic_and_distinct() {
+        let mut a = Pcg32::derived(42, stream::LOADER, 3);
+        let mut b = Pcg32::derived(42, stream::LOADER, 3);
+        for _ in 0..50 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+        // different index, tag, or root ⇒ decorrelated streams
+        for (root, tag, idx) in [
+            (42u64, stream::LOADER, 4u64),
+            (42, stream::LINK, 3),
+            (43, stream::LOADER, 3),
+        ] {
+            let mut a = Pcg32::derived(42, stream::LOADER, 3);
+            let mut c = Pcg32::derived(root, tag, idx);
+            let same = (0..64).filter(|_| a.next_u32() == c.next_u32()).count();
+            assert!(same < 4, "stream ({root},{tag:#x},{idx}) correlates");
+        }
+    }
+
+    #[test]
+    fn derive_seed_avalanches() {
+        // flipping one input bit flips ~half the output bits on average
+        let base = derive_seed(0xDEAD_BEEF, 1, 2);
+        let mut total = 0u32;
+        for bit in 0..64 {
+            total += (base ^ derive_seed(0xDEAD_BEEF ^ (1 << bit), 1, 2)).count_ones();
+        }
+        let avg = total as f64 / 64.0;
+        assert!((avg - 32.0).abs() < 8.0, "avg flipped bits {avg}");
+    }
 
     #[test]
     fn deterministic_for_same_seed() {

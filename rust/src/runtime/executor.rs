@@ -1,21 +1,31 @@
-//! The executor actor: one thread owning the PJRT client and every compiled
-//! executable, serving execution requests over a channel.
+//! The model executor behind one cloneable, thread-safe handle.
 //!
-//! Why an actor: the `xla` crate's handles wrap raw pointers without `Send`,
-//! so they cannot migrate across the coordinator's device-worker threads.
-//! Confining them to one thread is both sound and representative — the
-//! paper's edge server is a single accelerator endpoint that serializes
-//! model execution while codec work happens on device CPUs (our worker
-//! threads).
+//! Two backends, two execution disciplines:
 //!
-//! Requests and replies carry [`HostTensor`]s. Executables are compiled
-//! once at startup from `artifacts/<preset>/*.hlo.txt`.
+//! * **xla** — the PJRT path: compiles `artifacts/<preset>/*.hlo.txt` once
+//!   at startup and executes on the accelerator. The `xla` crate's handles
+//!   wrap raw pointers without `Send`, so they are confined to one
+//!   **actor thread** and requests serialize over a channel. That is also
+//!   representative: the paper's edge server is a single accelerator
+//!   endpoint that serializes model execution while codec work happens on
+//!   device CPUs (our worker threads).
+//! * **sim** — [`super::sim::SimBackend`], a pure-Rust deterministic split
+//!   model that needs only `manifest.json`. It is `Send + Sync` and free
+//!   of shared mutable state, so it executes **inline on the calling
+//!   thread**: the parallel round engine's workers run client-side model
+//!   compute truly concurrently. Per-artifact statistics are kept behind
+//!   a mutex (thread-safe accounting; counts are schedule-independent,
+//!   only the wall-time fields vary).
+//!
+//! Requests and replies carry [`HostTensor`]s either way, so the
+//! coordinator is backend-agnostic.
 
 use super::host::HostTensor;
 use super::manifest::ArtifactManifest;
+use super::sim::SimBackend;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Cumulative execution statistics (per artifact).
@@ -37,6 +47,21 @@ impl ExecutorStats {
     pub fn total_time(&self) -> Duration {
         self.per_artifact.values().map(|(_, t)| *t).sum()
     }
+
+    fn record(&mut self, key: String, elapsed: Duration) {
+        let e = self.per_artifact.entry(key).or_default();
+        e.0 += 1;
+        e.1 += elapsed;
+    }
+}
+
+/// Which model backend an executor serves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// PJRT/XLA over compiled HLO artifacts (actor thread).
+    Xla,
+    /// Pure-Rust deterministic sim model (inline, parallel-safe).
+    Sim,
 }
 
 enum Request {
@@ -51,18 +76,67 @@ enum Request {
     Shutdown,
 }
 
-/// Cloneable handle to the executor actor. Dropping all handles shuts the
-/// actor down (via `Shutdown` or channel disconnect).
+/// Sim backend + its thread-safe statistics.
+struct SimState {
+    backend: SimBackend,
+    stats: Mutex<ExecutorStats>,
+}
+
+#[derive(Clone)]
+enum HandleInner {
+    /// Channel to the XLA actor thread.
+    Actor(mpsc::Sender<Request>),
+    /// Shared inline sim backend.
+    Sim(Arc<SimState>),
+}
+
+/// Cloneable handle to the executor. Cloning is cheap; every round-engine
+/// worker uses the same handle concurrently. For the XLA backend,
+/// dropping all handles shuts the actor down (via `Shutdown` or channel
+/// disconnect).
 #[derive(Clone)]
 pub struct ExecutorHandle {
-    tx: mpsc::Sender<Request>,
+    inner: HandleInner,
 }
 
 impl ExecutorHandle {
-    /// Spawn the actor: loads the manifest at `artifacts_root`, compiles all
-    /// artifacts of the named presets, and returns once ready (or with the
-    /// startup error).
+    /// Spawn an XLA-backed actor: loads the manifest at `artifacts_root`,
+    /// compiles all artifacts of the named presets, and returns once ready
+    /// (or with the startup error).
     pub fn spawn(artifacts_root: &str, presets: &[String]) -> Result<ExecutorHandle> {
+        Self::spawn_backend(artifacts_root, presets, BackendKind::Xla)
+    }
+
+    /// Build a sim-backed executor: needs only `manifest.json` under
+    /// `artifacts_root` (see [`super::sim::write_sim_manifest`]).
+    pub fn spawn_sim(artifacts_root: &str, presets: &[String]) -> Result<ExecutorHandle> {
+        Self::spawn_backend(artifacts_root, presets, BackendKind::Sim)
+    }
+
+    /// Build an executor with an explicit backend choice.
+    pub fn spawn_backend(
+        artifacts_root: &str,
+        presets: &[String],
+        kind: BackendKind,
+    ) -> Result<ExecutorHandle> {
+        match kind {
+            BackendKind::Xla => Self::spawn_actor(artifacts_root, presets),
+            BackendKind::Sim => {
+                let started = Instant::now();
+                let manifest = ArtifactManifest::load(artifacts_root)?;
+                let backend = SimBackend::from_manifest(&manifest, presets)?;
+                let stats = Mutex::new(ExecutorStats {
+                    compile_time: started.elapsed(),
+                    ..Default::default()
+                });
+                Ok(ExecutorHandle {
+                    inner: HandleInner::Sim(Arc::new(SimState { backend, stats })),
+                })
+            }
+        }
+    }
+
+    fn spawn_actor(artifacts_root: &str, presets: &[String]) -> Result<ExecutorHandle> {
         let (tx, rx) = mpsc::channel::<Request>();
         let (init_tx, init_rx) = mpsc::channel::<Result<()>>();
         let root = artifacts_root.to_string();
@@ -74,7 +148,9 @@ impl ExecutorHandle {
         init_rx
             .recv()
             .context("executor thread died during startup")??;
-        Ok(ExecutorHandle { tx })
+        Ok(ExecutorHandle {
+            inner: HandleInner::Actor(tx),
+        })
     }
 
     /// Execute artifact `preset/name` with the given inputs; blocks for the
@@ -85,29 +161,42 @@ impl ExecutorHandle {
         artifact: &str,
         inputs: Vec<HostTensor>,
     ) -> Result<Vec<HostTensor>> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request::Execute {
-                key: format!("{preset}/{artifact}"),
-                inputs,
-                reply,
-            })
-            .map_err(|_| anyhow!("executor is gone"))?;
-        rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+        let key = format!("{preset}/{artifact}");
+        match &self.inner {
+            HandleInner::Actor(tx) => {
+                let (reply, rx) = mpsc::channel();
+                tx.send(Request::Execute { key, inputs, reply })
+                    .map_err(|_| anyhow!("executor is gone"))?;
+                rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+            }
+            HandleInner::Sim(sim) => {
+                let t0 = Instant::now();
+                let result = sim.backend.execute(&key, inputs);
+                sim.stats.lock().unwrap().record(key, t0.elapsed());
+                result
+            }
+        }
     }
 
     /// Snapshot execution statistics.
     pub fn stats(&self) -> Result<ExecutorStats> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request::Stats { reply })
-            .map_err(|_| anyhow!("executor is gone"))?;
-        rx.recv().context("executor dropped stats reply")
+        match &self.inner {
+            HandleInner::Actor(tx) => {
+                let (reply, rx) = mpsc::channel();
+                tx.send(Request::Stats { reply })
+                    .map_err(|_| anyhow!("executor is gone"))?;
+                rx.recv().context("executor dropped stats reply")
+            }
+            HandleInner::Sim(sim) => Ok(sim.stats.lock().unwrap().clone()),
+        }
     }
 
-    /// Ask the actor to exit (idempotent; happens anyway when handles drop).
+    /// Ask an actor-backed executor to exit (idempotent; happens anyway
+    /// when handles drop). No-op for the inline sim backend.
     pub fn shutdown(&self) {
-        let _ = self.tx.send(Request::Shutdown);
+        if let HandleInner::Actor(tx) = &self.inner {
+            let _ = tx.send(Request::Shutdown);
+        }
     }
 }
 
@@ -117,11 +206,12 @@ fn actor_main(
     rx: mpsc::Receiver<Request>,
     init_tx: mpsc::Sender<Result<()>>,
 ) {
-    // --- startup: client + compile everything ---
+    // --- startup: manifest first (its error message carries the `make
+    // artifacts` hint), then client + compile everything ---
     let started = Instant::now();
     let setup = (|| -> Result<(xla::PjRtClient, BTreeMap<String, xla::PjRtLoadedExecutable>)> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         let manifest = ArtifactManifest::load(&root)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         let mut exes = BTreeMap::new();
         for preset in &presets {
             let p = manifest.preset(preset)?;
@@ -172,9 +262,7 @@ fn actor_main(
             Request::Execute { key, inputs, reply } => {
                 let t0 = Instant::now();
                 let result = run_one(&exes, &key, inputs);
-                let e = stats.per_artifact.entry(key).or_default();
-                e.0 += 1;
-                e.1 += t0.elapsed();
+                stats.record(key, t0.elapsed());
                 let _ = reply.send(result);
             }
         }
@@ -261,8 +349,10 @@ fn from_literal(l: xla::Literal) -> Result<HostTensor> {
 #[cfg(test)]
 mod tests {
     // Executor tests that need real artifacts live in rust/tests/ (they are
-    // skipped when artifacts/ is absent). Here: handle-level error paths.
+    // skipped when artifacts/ is absent). Here: handle-level error paths
+    // and the inline sim backend, including concurrent accounting.
     use super::*;
+    use crate::runtime::sim::{write_sim_manifest, SimManifestSpec};
 
     #[test]
     fn spawn_fails_cleanly_without_artifacts() {
@@ -271,5 +361,66 @@ mod tests {
             .expect("must fail");
         let msg = format!("{err:#}");
         assert!(msg.contains("make artifacts"), "msg: {msg}");
+        // same contract for the sim backend
+        let err = ExecutorHandle::spawn_sim("/nonexistent-path", &["mnist".into()])
+            .err()
+            .expect("must fail");
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    fn sim_exec() -> (ExecutorHandle, String) {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static NEXT: AtomicUsize = AtomicUsize::new(0);
+        let dir = format!(
+            "{}/slfac_exec_sim_{}_{}",
+            std::env::temp_dir().display(),
+            std::process::id(),
+            NEXT.fetch_add(1, Ordering::Relaxed)
+        );
+        write_sim_manifest(
+            &dir,
+            &[SimManifestSpec {
+                preset: "mnist".into(),
+                batch_size: 2,
+                act_channels: 2,
+                act_hw: 4,
+            }],
+        )
+        .unwrap();
+        let exec = ExecutorHandle::spawn_sim(&dir, &["mnist".into()]).unwrap();
+        (exec, dir)
+    }
+
+    #[test]
+    fn sim_backend_serves_and_accounts() {
+        let (exec, dir) = sim_exec();
+        let params = exec.execute("mnist", "init", vec![]).unwrap();
+        assert_eq!(params.len(), 2);
+        let stats = exec.stats().unwrap();
+        assert_eq!(stats.total_execs(), 1);
+        assert!(stats.per_artifact.contains_key("mnist/init"));
+        // unknown artifact errors but the handle stays usable
+        assert!(exec.execute("mnist", "nope", vec![]).is_err());
+        assert_eq!(exec.stats().unwrap().total_execs(), 2);
+        exec.shutdown(); // no-op for sim
+        assert!(exec.execute("mnist", "init", vec![]).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sim_stats_are_thread_safe_under_concurrent_execution() {
+        let (exec, dir) = sim_exec();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let exec = exec.clone();
+                s.spawn(move || {
+                    for _ in 0..25 {
+                        exec.execute("mnist", "init", vec![]).unwrap();
+                    }
+                });
+            }
+        });
+        assert_eq!(exec.stats().unwrap().total_execs(), 100);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,4 +1,4 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
+//! Model runtime: load AOT HLO-text artifacts, compile once, execute from
 //! the coordinator's hot path.
 //!
 //! XLA handles (`PjRtClient`, executables, `Literal`) wrap raw C++ pointers
@@ -11,11 +11,21 @@
 //! Python never runs here: artifacts are produced once by
 //! `python/compile/aot.py` (`make artifacts`) and described by
 //! `artifacts/manifest.json` ([`manifest`]).
+//!
+//! When no XLA runtime or HLO artifacts are available (offline CI), the
+//! [`sim`] backend serves the same artifact names with a small
+//! deterministic pure-Rust split model — see
+//! [`ExecutorHandle::spawn_sim`]. Being `Send + Sync` and pure, it runs
+//! **inline on the calling thread** with mutex-guarded statistics, so the
+//! parallel round engine's workers execute client-side model compute
+//! genuinely concurrently.
 
 pub mod executor;
 pub mod host;
 pub mod manifest;
+pub mod sim;
 
-pub use executor::{ExecutorHandle, ExecutorStats};
+pub use executor::{BackendKind, ExecutorHandle, ExecutorStats};
 pub use host::HostTensor;
 pub use manifest::{ArtifactManifest, PresetManifest};
+pub use sim::{write_sim_manifest, SimBackend, SimManifestSpec};

@@ -1,0 +1,638 @@
+//! Pure-Rust deterministic executor backend ("sim").
+//!
+//! The PJRT backend needs AOT HLO artifacts and a linked XLA runtime;
+//! neither exists in offline CI, which would leave the coordinator's round
+//! engine untestable end-to-end. The sim backend fills that gap: it serves
+//! the same artifact names (`init`, `client_fwd`, `idct`, `server_step`,
+//! `client_step`, `eval_step`) with a tiny real split model —
+//!
+//! * client: `act = tanh(x_flat · W_c)`, reshaped to the manifest's
+//!   cut-layer activation shape, plus its 2-D DCT (via [`crate::dct`], the
+//!   same transform the Pallas kernel computes in the HLO graphs);
+//! * server: linear softmax classifier `logits = act_flat · W_s` with
+//!   cross-entropy loss and SGD+momentum, returning the activation
+//!   gradient in both domains exactly like the real `server_step`.
+//!
+//! Every operation is a pure function of its inputs with fixed loop order,
+//! so results are **bit-deterministic and independent of request order** —
+//! the property the differential determinism tests lean on. It is a
+//! stand-in model (one linear layer per side, momentum fixed at
+//! [`SIM_MOMENTUM`]), not the paper's ResNet; fidelity experiments still
+//! require real artifacts.
+//!
+//! Shape contract read from `manifest.json`: exactly one client parameter
+//! `[in_dim, act_feat]` and one server parameter `[act_feat, num_classes]`,
+//! where `in_dim = in_channels · image_hw²` and `act_feat` is the per-sample
+//! activation size. [`write_sim_manifest`] emits a conforming manifest so
+//! tests and benches can run from a temp directory.
+
+use super::host::HostTensor;
+use super::manifest::ArtifactManifest;
+use crate::dct::Dct2d;
+use crate::json::Json;
+use crate::rng::Pcg32;
+use crate::tensor::Tensor;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeMap;
+
+/// SGD momentum baked into the sim model (the real value lives in the HLO
+/// graphs at lowering time, so it is likewise not a runtime input).
+pub const SIM_MOMENTUM: f32 = 0.9;
+
+/// Root seed for deterministic parameter init (per-preset streams derive
+/// from it).
+const SIM_INIT_SEED: u64 = 0x51AC_0515;
+
+/// One preset's resolved sim-model dimensions.
+#[derive(Debug, Clone)]
+struct SimPreset {
+    in_dim: usize,
+    act_shape: [usize; 4],
+    act_feat: usize,
+    classes: usize,
+    /// Stable per-preset init stream index.
+    init_index: u64,
+}
+
+/// The sim backend: preset dimensions resolved once from the manifest.
+#[derive(Debug, Clone)]
+pub struct SimBackend {
+    presets: BTreeMap<String, SimPreset>,
+}
+
+impl SimBackend {
+    /// Resolve and validate the named presets against the sim shape
+    /// contract.
+    pub fn from_manifest(manifest: &ArtifactManifest, presets: &[String]) -> Result<Self> {
+        let mut out = BTreeMap::new();
+        for (pi, name) in presets.iter().enumerate() {
+            let p = manifest.preset(name)?;
+            let in_dim = p.in_channels * p.image_hw * p.image_hw;
+            let act_shape = p.activation_shape;
+            let act_feat = act_shape[1] * act_shape[2] * act_shape[3];
+            ensure!(
+                act_shape[0] == p.batch_size,
+                "sim preset '{name}': activation batch {} != batch_size {}",
+                act_shape[0],
+                p.batch_size
+            );
+            ensure!(
+                p.client_params.len() == 1
+                    && p.client_params[0].shape == vec![in_dim, act_feat],
+                "sim preset '{name}' needs one client param [{in_dim}, {act_feat}], got {:?}",
+                p.client_params
+                    .iter()
+                    .map(|s| s.shape.clone())
+                    .collect::<Vec<_>>()
+            );
+            ensure!(
+                p.server_params.len() == 1
+                    && p.server_params[0].shape == vec![act_feat, p.num_classes],
+                "sim preset '{name}' needs one server param [{act_feat}, {}], got {:?}",
+                p.num_classes,
+                p.server_params
+                    .iter()
+                    .map(|s| s.shape.clone())
+                    .collect::<Vec<_>>()
+            );
+            out.insert(
+                name.clone(),
+                SimPreset {
+                    in_dim,
+                    act_shape,
+                    act_feat,
+                    classes: p.num_classes,
+                    init_index: pi as u64,
+                },
+            );
+        }
+        Ok(SimBackend { presets: out })
+    }
+
+    /// Execute artifact `preset/name` (same key format as the PJRT backend).
+    pub fn execute(&self, key: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        let (preset, name) = key
+            .split_once('/')
+            .with_context(|| format!("malformed artifact key '{key}'"))?;
+        let p = self
+            .presets
+            .get(preset)
+            .with_context(|| format!("sim backend has no preset '{preset}'"))?;
+        match name {
+            "init" => p.init(),
+            "client_fwd" => p.client_fwd(inputs),
+            "idct" => idct(inputs),
+            "server_step" => p.server_step(inputs),
+            "client_step" => p.client_step(inputs),
+            "eval_step" => p.eval_step(inputs),
+            other => bail!("sim backend has no artifact '{other}'"),
+        }
+    }
+}
+
+/// `out[b, j] = sum_i x[b, i] * w[i, j]` — fixed loop order, f32
+/// accumulation (bit-deterministic).
+fn matmul(x: &[f32], w: &[f32], b: usize, i_dim: usize, j_dim: usize) -> Vec<f32> {
+    assert_eq!(x.len(), b * i_dim);
+    assert_eq!(w.len(), i_dim * j_dim);
+    let mut out = vec![0.0f32; b * j_dim];
+    for bi in 0..b {
+        let row = &x[bi * i_dim..(bi + 1) * i_dim];
+        let orow = &mut out[bi * j_dim..(bi + 1) * j_dim];
+        for (i, &xv) in row.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[i * j_dim..(i + 1) * j_dim];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+    }
+    out
+}
+
+/// Momentum-SGD update: `m' = mu·m + g`, `w' = w − lr·m'`.
+fn sgd_momentum(w: &[f32], m: &[f32], g: &[f32], lr: f32) -> (Vec<f32>, Vec<f32>) {
+    let mut new_m = Vec::with_capacity(m.len());
+    let mut new_w = Vec::with_capacity(w.len());
+    for ((&wv, &mv), &gv) in w.iter().zip(m).zip(g) {
+        let nm = SIM_MOMENTUM * mv + gv;
+        new_m.push(nm);
+        new_w.push(wv - lr * nm);
+    }
+    (new_w, new_m)
+}
+
+/// Softmax cross-entropy forward: returns (mean loss, correct count,
+/// per-element `(p − onehot)/B` logit gradients).
+fn softmax_xent(
+    logits: &[f32],
+    labels: &[i32],
+    b: usize,
+    classes: usize,
+) -> (f64, u64, Vec<f32>) {
+    let mut loss = 0.0f64;
+    let mut correct = 0u64;
+    let mut dlogits = vec![0.0f32; b * classes];
+    for bi in 0..b {
+        let row = &logits[bi * classes..(bi + 1) * classes];
+        let y = labels[bi] as usize;
+        let mut max = f32::NEG_INFINITY;
+        let mut argmax = 0usize;
+        for (k, &v) in row.iter().enumerate() {
+            if v > max {
+                max = v;
+                argmax = k;
+            }
+        }
+        if argmax == y {
+            correct += 1;
+        }
+        let mut denom = 0.0f32;
+        for &v in row {
+            denom += (v - max).exp();
+        }
+        let log_denom = denom.ln();
+        loss += (log_denom - (row[y] - max)) as f64;
+        let drow = &mut dlogits[bi * classes..(bi + 1) * classes];
+        for (k, &v) in row.iter().enumerate() {
+            let p = (v - max).exp() / denom;
+            drow[k] = (p - if k == y { 1.0 } else { 0.0 }) / b as f32;
+        }
+    }
+    (loss / b as f64, correct, dlogits)
+}
+
+fn idct(inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+    ensure!(inputs.len() == 1, "idct takes 1 input, got {}", inputs.len());
+    let coeffs = inputs.into_iter().next().unwrap().into_tensor();
+    Ok(vec![HostTensor::from_tensor(&Dct2d::inverse_tensor(
+        &coeffs,
+    ))])
+}
+
+impl SimPreset {
+    /// Flatten an image batch `[B, C, H, W]` and check the per-sample size.
+    fn flat_batch<'a>(&self, x: &'a HostTensor) -> Result<(usize, &'a [f32])> {
+        let dims = x.dims();
+        ensure!(!dims.is_empty(), "sim: rank-0 image batch");
+        let b = dims[0];
+        ensure!(
+            x.numel() == b * self.in_dim,
+            "sim: batch numel {} != {} × in_dim {}",
+            x.numel(),
+            b,
+            self.in_dim
+        );
+        Ok((b, x.as_f32()))
+    }
+
+    /// `act = tanh(x_flat · W_c)` as a `[B, C, M, N]` tensor.
+    fn forward_client(&self, w_c: &[f32], x: &HostTensor) -> Result<Tensor> {
+        let (b, xf) = self.flat_batch(x)?;
+        let mut z = matmul(xf, w_c, b, self.in_dim, self.act_feat);
+        for v in &mut z {
+            *v = v.tanh();
+        }
+        let shape = [
+            b,
+            self.act_shape[1],
+            self.act_shape[2],
+            self.act_shape[3],
+        ];
+        Ok(Tensor::new(&shape, z))
+    }
+
+    fn init(&self) -> Result<Vec<HostTensor>> {
+        let mut rng_c = Pcg32::derived(SIM_INIT_SEED, 0xC0DE, self.init_index);
+        let mut rng_s = Pcg32::derived(SIM_INIT_SEED, 0x5E0F, self.init_index);
+        let sc = 1.0 / (self.in_dim as f32).sqrt();
+        let ss = 1.0 / (self.act_feat as f32).sqrt();
+        let w_c: Vec<f32> = (0..self.in_dim * self.act_feat)
+            .map(|_| rng_c.normal() * sc)
+            .collect();
+        let w_s: Vec<f32> = (0..self.act_feat * self.classes)
+            .map(|_| rng_s.normal() * ss)
+            .collect();
+        Ok(vec![
+            HostTensor::f32(&[self.in_dim, self.act_feat], w_c),
+            HostTensor::f32(&[self.act_feat, self.classes], w_s),
+        ])
+    }
+
+    fn client_fwd(&self, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        ensure!(inputs.len() == 2, "client_fwd takes [W_c, x]");
+        let act = self.forward_client(inputs[0].as_f32(), &inputs[1])?;
+        let act_dct = Dct2d::forward_tensor(&act);
+        Ok(vec![
+            HostTensor::from_tensor(&act),
+            HostTensor::from_tensor(&act_dct),
+        ])
+    }
+
+    fn server_step(&self, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        ensure!(inputs.len() == 5, "server_step takes [W_s, M_s, act, y, lr]");
+        let w_s = inputs[0].as_f32();
+        let m_s = inputs[1].as_f32();
+        let act = &inputs[2];
+        let labels = inputs[3].as_i32();
+        let lr = inputs[4].as_f32()[0];
+        let b = act.dims()[0];
+        ensure!(
+            act.numel() == b * self.act_feat,
+            "server_step: act numel {} != {} × act_feat {}",
+            act.numel(),
+            b,
+            self.act_feat
+        );
+        ensure!(labels.len() == b, "server_step: labels/batch mismatch");
+        let a = act.as_f32();
+
+        let logits = matmul(a, w_s, b, self.act_feat, self.classes);
+        let (loss, correct, dlogits) = softmax_xent(&logits, labels, b, self.classes);
+
+        // gW_s[j, k] = sum_b a[b, j] · dlogits[b, k]
+        let mut g_ws = vec![0.0f32; self.act_feat * self.classes];
+        for bi in 0..b {
+            let arow = &a[bi * self.act_feat..(bi + 1) * self.act_feat];
+            let drow = &dlogits[bi * self.classes..(bi + 1) * self.classes];
+            for (j, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let grow = &mut g_ws[j * self.classes..(j + 1) * self.classes];
+                for (g, &dv) in grow.iter_mut().zip(drow) {
+                    *g += av * dv;
+                }
+            }
+        }
+        // gact[b, j] = sum_k dlogits[b, k] · W_s[j, k]
+        let mut gact = vec![0.0f32; b * self.act_feat];
+        for bi in 0..b {
+            let drow = &dlogits[bi * self.classes..(bi + 1) * self.classes];
+            let grow = &mut gact[bi * self.act_feat..(bi + 1) * self.act_feat];
+            for (j, g) in grow.iter_mut().enumerate() {
+                let wrow = &w_s[j * self.classes..(j + 1) * self.classes];
+                let mut acc = 0.0f32;
+                for (&dv, &wv) in drow.iter().zip(wrow) {
+                    acc += dv * wv;
+                }
+                *g = acc;
+            }
+        }
+        let (new_w, new_m) = sgd_momentum(w_s, m_s, &g_ws, lr);
+        let gact_t = Tensor::new(
+            &[b, self.act_shape[1], self.act_shape[2], self.act_shape[3]],
+            gact,
+        );
+        let gact_dct = Dct2d::forward_tensor(&gact_t);
+        Ok(vec![
+            HostTensor::f32(&[self.act_feat, self.classes], new_w),
+            HostTensor::f32(&[self.act_feat, self.classes], new_m),
+            HostTensor::scalar_f32(loss as f32),
+            HostTensor::i32(&[], vec![correct as i32]),
+            HostTensor::from_tensor(&gact_t),
+            HostTensor::from_tensor(&gact_dct),
+        ])
+    }
+
+    fn client_step(&self, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        ensure!(inputs.len() == 5, "client_step takes [W_c, M_c, x, gact, lr]");
+        let w_c = inputs[0].as_f32();
+        let m_c = inputs[1].as_f32();
+        let x = &inputs[2];
+        let gact = &inputs[3];
+        let lr = inputs[4].as_f32()[0];
+        let (b, xf) = self.flat_batch(x)?;
+        ensure!(
+            gact.numel() == b * self.act_feat,
+            "client_step: gact numel {} != {} × act_feat {}",
+            gact.numel(),
+            b,
+            self.act_feat
+        );
+
+        // recompute act = tanh(z), then dz = gact ⊙ (1 − act²)
+        let mut z = matmul(xf, w_c, b, self.in_dim, self.act_feat);
+        for (zv, &gv) in z.iter_mut().zip(gact.as_f32()) {
+            let a = zv.tanh();
+            *zv = gv * (1.0 - a * a);
+        }
+        let dz = z;
+        // gW_c[i, j] = sum_b x[b, i] · dz[b, j]
+        let mut g_wc = vec![0.0f32; self.in_dim * self.act_feat];
+        for bi in 0..b {
+            let xrow = &xf[bi * self.in_dim..(bi + 1) * self.in_dim];
+            let drow = &dz[bi * self.act_feat..(bi + 1) * self.act_feat];
+            for (i, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let grow = &mut g_wc[i * self.act_feat..(i + 1) * self.act_feat];
+                for (g, &dv) in grow.iter_mut().zip(drow) {
+                    *g += xv * dv;
+                }
+            }
+        }
+        let (new_w, new_m) = sgd_momentum(w_c, m_c, &g_wc, lr);
+        Ok(vec![
+            HostTensor::f32(&[self.in_dim, self.act_feat], new_w),
+            HostTensor::f32(&[self.in_dim, self.act_feat], new_m),
+        ])
+    }
+
+    fn eval_step(&self, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        ensure!(inputs.len() == 4, "eval_step takes [W_c, W_s, x, y]");
+        let w_s = inputs[1].as_f32();
+        let labels = inputs[3].as_i32();
+        let act = self.forward_client(inputs[0].as_f32(), &inputs[2])?;
+        let b = act.shape()[0];
+        ensure!(labels.len() == b, "eval_step: labels/batch mismatch");
+        let logits = matmul(act.data(), w_s, b, self.act_feat, self.classes);
+        let (loss, correct, _) = softmax_xent(&logits, labels, b, self.classes);
+        Ok(vec![
+            HostTensor::scalar_f32(loss as f32),
+            HostTensor::i32(&[], vec![correct as i32]),
+        ])
+    }
+}
+
+/// Dataset geometry per preset name (matches `data::synthetic`).
+fn preset_geometry(preset: &str) -> Result<(usize, usize, usize)> {
+    match preset {
+        "mnist" => Ok((1, 28, 10)),
+        "ham" => Ok((3, 32, 7)),
+        other => bail!("unknown sim preset '{other}' (expected mnist|ham)"),
+    }
+}
+
+/// One preset's sim manifest parameters.
+#[derive(Debug, Clone)]
+pub struct SimManifestSpec {
+    /// Preset name (`mnist` / `ham`) — fixes image geometry and classes.
+    pub preset: String,
+    /// Batch size the run will use.
+    pub batch_size: usize,
+    /// Cut-layer activation channels.
+    pub act_channels: usize,
+    /// Cut-layer activation height/width.
+    pub act_hw: usize,
+}
+
+/// Write a `manifest.json` under `dir` conforming to the sim shape
+/// contract, so [`SimBackend`] (and the `Trainer` above it) can run from a
+/// scratch directory with no Python/XLA step. Returns the manifest path.
+pub fn write_sim_manifest(dir: &str, specs: &[SimManifestSpec]) -> Result<String> {
+    let mut presets = BTreeMap::new();
+    for s in specs {
+        let (in_c, hw, classes) = preset_geometry(&s.preset)?;
+        let in_dim = in_c * hw * hw;
+        let act_feat = s.act_channels * s.act_hw * s.act_hw;
+        let num = |v: usize| Json::Num(v as f64);
+        let shape = |dims: &[usize]| Json::Arr(dims.iter().map(|&d| num(d)).collect());
+        let param = |name: &str, dims: &[usize]| {
+            let mut m = BTreeMap::new();
+            m.insert("name".to_string(), Json::Str(name.to_string()));
+            m.insert("shape".to_string(), shape(dims));
+            Json::Obj(m)
+        };
+        let mut p = BTreeMap::new();
+        p.insert("batch_size".to_string(), num(s.batch_size));
+        p.insert("in_channels".to_string(), num(in_c));
+        p.insert("image_hw".to_string(), num(hw));
+        p.insert("num_classes".to_string(), num(classes));
+        p.insert(
+            "activation_shape".to_string(),
+            shape(&[s.batch_size, s.act_channels, s.act_hw, s.act_hw]),
+        );
+        p.insert(
+            "client_params".to_string(),
+            Json::Arr(vec![param("sim.w_c", &[in_dim, act_feat])]),
+        );
+        p.insert(
+            "server_params".to_string(),
+            Json::Arr(vec![param("sim.w_s", &[act_feat, classes])]),
+        );
+        p.insert("artifacts".to_string(), Json::Obj(BTreeMap::new()));
+        presets.insert(s.preset.clone(), Json::Obj(p));
+    }
+    let mut root = BTreeMap::new();
+    root.insert("version".to_string(), Json::Num(1.0));
+    root.insert("presets".to_string(), Json::Obj(presets));
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {dir}"))?;
+    let path = format!("{dir}/manifest.json");
+    std::fs::write(&path, Json::Obj(root).to_string())
+        .with_context(|| format!("writing {path}"))?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch_dir(label: &str) -> String {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static NEXT: AtomicUsize = AtomicUsize::new(0);
+        format!(
+            "{}/slfac_sim_{label}_{}_{}",
+            std::env::temp_dir().display(),
+            std::process::id(),
+            NEXT.fetch_add(1, Ordering::Relaxed)
+        )
+    }
+
+    fn backend() -> SimBackend {
+        let dir = scratch_dir("unit");
+        write_sim_manifest(
+            &dir,
+            &[SimManifestSpec {
+                preset: "mnist".into(),
+                batch_size: 4,
+                act_channels: 2,
+                act_hw: 4,
+            }],
+        )
+        .unwrap();
+        let manifest = ArtifactManifest::load(&dir).unwrap();
+        let b = SimBackend::from_manifest(&manifest, &["mnist".into()]).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+        b
+    }
+
+    fn batch(seed: u64) -> (HostTensor, HostTensor) {
+        let mut rng = Pcg32::seeded(seed);
+        let x: Vec<f32> = (0..4 * 784).map(|_| rng.normal() * 0.5).collect();
+        let y: Vec<i32> = (0..4).map(|_| rng.below(10) as i32).collect();
+        (HostTensor::f32(&[4, 1, 28, 28], x), HostTensor::i32(&[4], y))
+    }
+
+    #[test]
+    fn init_is_deterministic_and_correctly_shaped() {
+        let b = backend();
+        let a = b.execute("mnist/init", vec![]).unwrap();
+        let c = b.execute("mnist/init", vec![]).unwrap();
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[0].dims(), &[784, 32]);
+        assert_eq!(a[1].dims(), &[32, 10]);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn fwd_dct_idct_roundtrip() {
+        let b = backend();
+        let params = b.execute("mnist/init", vec![]).unwrap();
+        let (x, _) = batch(1);
+        let out = b
+            .execute("mnist/client_fwd", vec![params[0].clone(), x])
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].dims(), &[4, 2, 4, 4]);
+        // idct(dct(act)) ≈ act
+        let back = b
+            .execute("mnist/idct", vec![out[1].clone()])
+            .unwrap()
+            .remove(0);
+        let diff = back
+            .as_f32()
+            .iter()
+            .zip(out[0].as_f32())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(diff < 1e-4, "idct roundtrip diff {diff}");
+        // tanh bounds
+        assert!(out[0].as_f32().iter().all(|v| v.abs() <= 1.0));
+    }
+
+    #[test]
+    fn training_steps_reduce_loss() {
+        let b = backend();
+        let mut params = b.execute("mnist/init", vec![]).unwrap();
+        let mut w_c = params.remove(0);
+        let mut w_s = params.remove(0);
+        let zeros = |t: &HostTensor| HostTensor::f32(t.dims(), vec![0.0; t.numel()]);
+        let (mut m_c, mut m_s) = (zeros(&w_c), zeros(&w_s));
+        let (x, y) = batch(2);
+        let lr = HostTensor::scalar_f32(0.1);
+        let mut losses = Vec::new();
+        for _ in 0..30 {
+            let fwd = b
+                .execute("mnist/client_fwd", vec![w_c.clone(), x.clone()])
+                .unwrap();
+            let out = b
+                .execute(
+                    "mnist/server_step",
+                    vec![w_s, m_s, fwd[0].clone(), y.clone(), lr.clone()],
+                )
+                .unwrap();
+            let mut it = out.into_iter();
+            w_s = it.next().unwrap();
+            m_s = it.next().unwrap();
+            losses.push(it.next().unwrap().first());
+            let _correct = it.next().unwrap();
+            let gact = it.next().unwrap();
+            let back = b
+                .execute(
+                    "mnist/client_step",
+                    vec![w_c, m_c, x.clone(), gact, lr.clone()],
+                )
+                .unwrap();
+            let mut it = back.into_iter();
+            w_c = it.next().unwrap();
+            m_c = it.next().unwrap();
+        }
+        let first = losses[0];
+        let last = *losses.last().unwrap();
+        assert!(
+            last < first * 0.8,
+            "loss should drop: first {first} last {last}"
+        );
+        assert!(last.is_finite());
+    }
+
+    #[test]
+    fn eval_matches_forward_pass() {
+        let b = backend();
+        let params = b.execute("mnist/init", vec![]).unwrap();
+        let (x, y) = batch(3);
+        let out = b
+            .execute(
+                "mnist/eval_step",
+                vec![params[0].clone(), params[1].clone(), x, y],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        assert!(out[0].first().is_finite());
+        let correct = out[1].first();
+        assert!((0.0..=4.0).contains(&correct));
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        let b = backend();
+        assert!(b.execute("mnist/init", vec![]).is_ok());
+        assert!(b.execute("nope/init", vec![]).is_err());
+        assert!(b.execute("mnist/unknown", vec![]).is_err());
+        assert!(b.execute("bad-key", vec![]).is_err());
+        assert!(b.execute("mnist/client_fwd", vec![]).is_err());
+    }
+
+    #[test]
+    fn manifest_contract_validated() {
+        let dir = scratch_dir("bad");
+        write_sim_manifest(
+            &dir,
+            &[SimManifestSpec {
+                preset: "mnist".into(),
+                batch_size: 4,
+                act_channels: 2,
+                act_hw: 4,
+            }],
+        )
+        .unwrap();
+        let manifest = ArtifactManifest::load(&dir).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+        // asking for a preset the manifest lacks
+        assert!(SimBackend::from_manifest(&manifest, &["ham".into()]).is_err());
+    }
+}

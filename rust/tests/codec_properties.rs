@@ -5,10 +5,34 @@
 //! round-trip, and determinism under concurrency.
 
 use slfac::codec::wire::{f16_to_f32, f32_to_f16, BodyReader, Payload};
-use slfac::codec::{self, ActivationCodec, CodecParams, SlFacCodec, SlFacConfig};
+use slfac::codec::{
+    self, ActivationCodec, AfdUniformCodec, CodecParams, EasyQuantCodec, IdentityCodec,
+    MagnitudeSelectCodec, PowerQuantCodec, SlFacCodec, SlFacConfig, SplitFcCodec,
+    SplitFcConfig, StdSelectCodec, TopKCodec, TopKConfig, UniformLinearCodec,
+};
 use slfac::dct::Dct2d;
 use slfac::rng::Pcg32;
 use slfac::testing::prop;
+
+/// Compile-time assertion: every registered codec type (and the boxed
+/// trait object the factory hands out) is `Send + Sync`, i.e. safe to
+/// share across the parallel round engine's worker threads.
+#[allow(dead_code)]
+fn every_registered_codec_is_send_sync() {
+    fn check<T: Send + Sync>() {}
+    check::<SlFacCodec>();
+    check::<AfdUniformCodec>();
+    check::<TopKCodec>();
+    check::<SplitFcCodec>();
+    check::<PowerQuantCodec>();
+    check::<EasyQuantCodec>();
+    check::<MagnitudeSelectCodec>();
+    check::<StdSelectCodec>();
+    check::<UniformLinearCodec>();
+    check::<IdentityCodec>();
+    check::<Box<dyn ActivationCodec>>();
+    check::<std::sync::Arc<dyn ActivationCodec>>();
+}
 
 #[test]
 fn payload_fuzz_never_panics() {
@@ -155,6 +179,122 @@ fn wire_bytes_equals_serialized_length_for_all_codecs() {
         };
         let p = c.compress(&input).unwrap();
         assert_eq!(p.wire_bytes(), p.to_bytes().len(), "{name}");
+    }
+}
+
+#[test]
+fn property_uniform_roundtrip_bounds_error_by_step() {
+    // min-max linear quantization at b bits: every element reconstructs
+    // within half a quantization step of the clamped input
+    prop("uniform roundtrip step bound", 60, |g| {
+        let shape = g.bchw_shape();
+        let x = g.tensor(&shape, *g.choose(&[0.3f32, 1.0, 5.0]));
+        let bits = g.usize_in(2, 12) as u32;
+        let c = UniformLinearCodec::new(bits);
+        let p = c.compress(&x).unwrap();
+        let back = c.decompress(&p).unwrap();
+        assert_eq!(back.shape(), x.shape());
+        let (lo, hi) = x.min_max();
+        let levels = (1u32 << bits) - 1;
+        let step = (hi - lo).max(1e-12) / levels as f32;
+        let worst = back.max_abs_diff(&x);
+        assert!(
+            worst <= step / 2.0 + step * 1e-3 + 1e-6,
+            "bits={bits} worst={worst} step={step}"
+        );
+    });
+}
+
+#[test]
+fn property_topk_keeps_exactly_the_heavy_mass() {
+    prop("topk keeps heavy mass", 60, |g| {
+        let shape = g.bchw_shape();
+        let x = g.tensor(&shape, 1.0);
+        let keep = *g.choose(&[0.1f64, 0.25, 0.5, 1.0]);
+        let c = TopKCodec::new(TopKConfig {
+            keep_fraction: keep,
+            random_fraction: 0.0,
+            seed: 3,
+        });
+        let p = c.compress(&x).unwrap();
+        let back = c.decompress(&p).unwrap();
+        assert_eq!(back.shape(), x.shape());
+        let per_sample: usize = shape[1] * shape[2] * shape[3];
+        let k_top = ((per_sample as f64 * keep).ceil() as usize).clamp(1, per_sample);
+        for bi in 0..shape[0] {
+            let sample = &x.data()[bi * per_sample..(bi + 1) * per_sample];
+            let rec = &back.data()[bi * per_sample..(bi + 1) * per_sample];
+            let nonzero = rec.iter().filter(|&&v| v != 0.0).count();
+            // f16 rounding can zero a tiny kept value, never add one
+            assert!(nonzero <= k_top, "kept {nonzero} > k_top {k_top}");
+            // every reconstructed element matches its source in f16
+            for (r, s) in rec.iter().zip(sample) {
+                if *r != 0.0 {
+                    assert!((r - s).abs() <= s.abs() * 0.01 + 1e-3);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn property_splitfc_roundtrip_and_channel_budget() {
+    prop("splitfc roundtrip", 60, |g| {
+        let shape = g.bchw_shape();
+        let x = g.tensor(&shape, 1.0);
+        let keep = *g.choose(&[0.25f64, 0.5, 1.0]);
+        let bits = g.usize_in(2, 8) as u32;
+        let c = SplitFcCodec::new(SplitFcConfig {
+            keep_fraction: keep,
+            bits,
+        });
+        let p = c.compress(&x).unwrap();
+        let back = c.decompress(&p).unwrap();
+        assert_eq!(back.shape(), x.shape());
+        for v in back.data() {
+            assert!(v.is_finite());
+        }
+        // serialized form is stable through the wire
+        let p2 = Payload::from_bytes(&p.to_bytes()).unwrap();
+        assert_eq!(c.decompress(&p2).unwrap().data(), back.data());
+    });
+}
+
+#[test]
+fn fuzz_uniform_topk_splitfc_reject_corruption_without_panicking() {
+    // truncations and random byte stomps on real payloads: must error or
+    // return a correctly-shaped finite-or-error tensor, never panic
+    let mut rng = Pcg32::seeded(0xFA22);
+    let x = codec::smooth_activations(&[2, 4, 8, 8], 55);
+    let codecs: Vec<Box<dyn ActivationCodec>> = vec![
+        Box::new(UniformLinearCodec::new(4)),
+        Box::new(TopKCodec::new(TopKConfig::default())),
+        Box::new(SplitFcCodec::new(SplitFcConfig::default())),
+    ];
+    for c in &codecs {
+        let p = c.compress(&x).unwrap();
+        for _ in 0..60 {
+            let mut t = p.clone();
+            match rng.below(3) {
+                0 => {
+                    let cut = rng.below(t.body.len().max(1) as u32) as usize;
+                    t.body.truncate(cut);
+                }
+                1 => {
+                    if !t.body.is_empty() {
+                        let i = rng.below(t.body.len() as u32) as usize;
+                        t.body[i] = rng.next_u32() as u8;
+                    }
+                }
+                _ => {
+                    let extra = rng.below(16) as usize;
+                    t.body.resize(t.body.len() + extra, 0xAB);
+                }
+            }
+            if let Ok(out) = c.decompress(&t) {
+                assert_eq!(out.shape(), &[2, 4, 8, 8], "{}", c.name());
+            }
+        }
     }
 }
 

@@ -3,11 +3,19 @@
 //! Vectors are emitted by `python/compile/aot.py` (`make artifacts`).
 //!
 //! Skipped (with a notice) when `artifacts/golden/golden.json` is absent.
+//!
+//! Additionally: **wire-format golden vectors** pin the exact serialized
+//! bytes of one payload per registered codec
+//! (`tests/golden/codec_wire.json`, self-blessing — see
+//! [`codec_wire_bytes_match_golden_vectors`]), so refactors of the codec
+//! or threading layers cannot silently change what goes on the wire.
 
+use slfac::codec::{self, CodecParams, Payload};
 use slfac::dct::Dct2d;
 use slfac::freq::{afd_channel, zigzag};
 use slfac::json::Json;
 use slfac::tensor::Tensor;
+use std::collections::BTreeMap;
 
 fn load_golden() -> Option<Json> {
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/golden/golden.json");
@@ -82,6 +90,101 @@ fn rust_zigzag_matches_python() {
             .collect();
         let got = zigzag(m, n);
         assert_eq!(got.scan, want, "zigzag {m}x{n}");
+    }
+}
+
+// --- codec wire-format golden vectors -----------------------------------
+
+/// Deterministic input for the wire vectors (fixed shape + seed).
+const WIRE_SHAPE: [usize; 4] = [1, 3, 6, 6];
+const WIRE_SEED: u64 = 0x601D;
+
+fn hex(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+/// Serialized wire bytes for one payload per registered codec, as
+/// `name -> hex` (BTreeMap: stable file ordering).
+fn current_wire_vectors() -> BTreeMap<String, String> {
+    let params = CodecParams::default();
+    let x = codec::smooth_activations(&WIRE_SHAPE, WIRE_SEED);
+    let coeffs = Dct2d::forward_tensor(&x);
+    codec::ALL_CODECS
+        .iter()
+        .map(|name| {
+            // fresh codec per case: randomized codecs start from their
+            // configured seed, so bytes are reproducible
+            let c = codec::by_name(name, &params).unwrap();
+            let input = if c.frequency_domain() { &coeffs } else { &x };
+            let p = c.compress(input).unwrap();
+            // structural invariants hold for every codec, golden or not
+            assert_eq!(p.wire_bytes(), p.to_bytes().len(), "{name}");
+            let back = Payload::from_bytes(&p.to_bytes()).unwrap();
+            assert_eq!(back.to_bytes(), p.to_bytes(), "{name}");
+            (name.to_string(), hex(&p.to_bytes()))
+        })
+        .collect()
+}
+
+fn golden_wire_path() -> String {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/codec_wire.json").to_string()
+}
+
+#[test]
+fn codec_wire_bytes_match_golden_vectors() {
+    let current = current_wire_vectors();
+    let path = golden_wire_path();
+    let bless = !std::path::Path::new(&path).exists()
+        || std::env::var("SLFAC_BLESS").is_ok();
+    if bless {
+        // first run (or explicit re-bless): write the vectors; commit the
+        // file to lock the wire format
+        let mut m = BTreeMap::new();
+        for (k, v) in &current {
+            m.insert(k.clone(), Json::Str(v.clone()));
+        }
+        let mut root = BTreeMap::new();
+        root.insert(
+            "shape".to_string(),
+            Json::Arr(WIRE_SHAPE.iter().map(|&d| Json::Num(d as f64)).collect()),
+        );
+        root.insert("seed".to_string(), Json::Num(WIRE_SEED as f64));
+        root.insert("payloads".to_string(), Json::Obj(m));
+        std::fs::create_dir_all(concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden"))
+            .unwrap();
+        std::fs::write(&path, Json::Obj(root).to_string()).unwrap();
+        // the blessed file must parse and reproduce the vectors we hold
+        let reread = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let payloads = reread.get("payloads").unwrap().as_obj().unwrap();
+        assert_eq!(payloads.len(), current.len());
+        for (name, hexv) in &current {
+            assert_eq!(payloads.get(name).unwrap().as_str().unwrap(), hexv, "{name}");
+        }
+        eprintln!("BLESSED wire golden vectors -> {path} (commit this file to lock the format)");
+        return;
+    }
+    let text = std::fs::read_to_string(&path).unwrap();
+    let g = Json::parse(&text).expect("codec_wire.json must parse");
+    let payloads = g.get("payloads").unwrap().as_obj().unwrap();
+    // every registered codec has a pinned payload, and vice versa
+    let golden_names: Vec<&str> = payloads.keys().map(|s| s.as_str()).collect();
+    let current_names: Vec<&str> = current.keys().map(|s| s.as_str()).collect();
+    assert_eq!(
+        golden_names, current_names,
+        "codec set changed — rerun with SLFAC_BLESS=1 and review the diff"
+    );
+    for (name, want) in payloads {
+        let got = &current[name];
+        assert_eq!(
+            got,
+            want.as_str().unwrap(),
+            "codec '{name}' changed its wire bytes — if intentional, \
+             re-bless with SLFAC_BLESS=1 and bump the payload version"
+        );
     }
 }
 

@@ -1,0 +1,180 @@
+//! Differential determinism: the thread-parallel round engine must be
+//! **bit-transparent**. For multiple seeds, both sync modes, and both a
+//! deterministic frequency codec (slfac) and a randomized spatial codec
+//! (tk-sl), a run with `workers = 4` (and `workers = 0` = auto) must
+//! reproduce the `workers = 1` run exactly: `TrainingHistory`, `CommStats`,
+//! and final client/server parameters, all compared bit-for-bit.
+//!
+//! Runs on the sim executor backend (pure Rust, manifest only), so this
+//! test needs no XLA runtime and no `make artifacts` — it always runs.
+
+use slfac::config::{ExperimentConfig, SyncMode};
+use slfac::coordinator::{TrainOutcome, Trainer};
+use slfac::net::CommStats;
+use slfac::runtime::{write_sim_manifest, ExecutorHandle, HostTensor, SimManifestSpec};
+
+const BATCH: usize = 8;
+
+fn sim_dir(label: &str) -> String {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    let dir = format!(
+        "{}/slfac_pardet_{label}_{}_{}",
+        std::env::temp_dir().display(),
+        std::process::id(),
+        NEXT.fetch_add(1, Ordering::Relaxed)
+    );
+    write_sim_manifest(
+        &dir,
+        &[SimManifestSpec {
+            preset: "mnist".into(),
+            batch_size: BATCH,
+            act_channels: 2,
+            act_hw: 4,
+        }],
+    )
+    .unwrap();
+    dir
+}
+
+fn cfg(dir: &str, codec: &str, sync: SyncMode, seed: u64, workers: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        name: format!("pardet_{codec}_{seed}_{workers}"),
+        codec: codec.into(),
+        devices: 4,
+        workers,
+        sync,
+        rounds: 2,
+        batches_per_round: 2,
+        batch_size: BATCH,
+        train_samples: 160,
+        test_samples: 2 * BATCH,
+        seed,
+        artifacts_dir: dir.into(),
+        ..Default::default()
+    }
+}
+
+struct RunResult {
+    outcome: TrainOutcome,
+    client: Vec<HostTensor>,
+    server: Vec<HostTensor>,
+}
+
+fn run(cfg: ExperimentConfig) -> RunResult {
+    let exec = ExecutorHandle::spawn_sim(&cfg.artifacts_dir, &["mnist".into()])
+        .expect("sim executor");
+    let mut trainer = Trainer::new(cfg, exec).expect("trainer");
+    let outcome = trainer.run().expect("run");
+    RunResult {
+        outcome,
+        client: trainer.client_params(),
+        server: trainer.server_params(),
+    }
+}
+
+fn param_bits(params: &[HostTensor]) -> Vec<Vec<u32>> {
+    params
+        .iter()
+        .map(|t| t.as_f32().iter().map(|v| v.to_bits()).collect())
+        .collect()
+}
+
+fn assert_bit_identical(a: &RunResult, b: &RunResult, label: &str) {
+    assert!(
+        a.outcome.history.bit_eq(&b.outcome.history),
+        "{label}: TrainingHistory diverged"
+    );
+    assert!(
+        a.outcome.comm.bit_eq(&b.outcome.comm),
+        "{label}: CommStats diverged: {:?} vs {:?}",
+        a.outcome.comm,
+        b.outcome.comm
+    );
+    assert_eq!(
+        param_bits(&a.client),
+        param_bits(&b.client),
+        "{label}: client params diverged"
+    );
+    assert_eq!(
+        param_bits(&a.server),
+        param_bits(&b.server),
+        "{label}: server params diverged"
+    );
+}
+
+#[test]
+fn parallel_workers_match_sequential_bitwise() {
+    let dir = sim_dir("main");
+    for &seed in &[7u64, 1234] {
+        for (sync, sync_name) in [
+            (SyncMode::ParallelFedAvg, "parallel"),
+            (SyncMode::Sequential, "sequential"),
+        ] {
+            for codec in ["slfac", "tk-sl"] {
+                let reference = run(cfg(&dir, codec, sync, seed, 1));
+                for workers in [4usize, 0] {
+                    let got = run(cfg(&dir, codec, sync, seed, workers));
+                    assert_bit_identical(
+                        &reference,
+                        &got,
+                        &format!("seed={seed} sync={sync_name} codec={codec} workers={workers}"),
+                    );
+                }
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn repeated_parallel_runs_are_self_consistent() {
+    // same seed + same workers, run twice: scheduling noise between the
+    // two runs must not leak into any result
+    let dir = sim_dir("repeat");
+    let a = run(cfg(&dir, "tk-sl", SyncMode::ParallelFedAvg, 42, 4));
+    let b = run(cfg(&dir, "tk-sl", SyncMode::ParallelFedAvg, 42, 4));
+    assert_bit_identical(&a, &b, "repeat tk-sl workers=4");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn different_seeds_actually_diverge() {
+    // guards against the comparison being vacuous (e.g. everything zero)
+    let dir = sim_dir("diverge");
+    let a = run(cfg(&dir, "slfac", SyncMode::ParallelFedAvg, 1, 2));
+    let b = run(cfg(&dir, "slfac", SyncMode::ParallelFedAvg, 2, 2));
+    assert_ne!(
+        param_bits(&a.client),
+        param_bits(&b.client),
+        "different seeds produced identical client params"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sim_training_makes_progress_and_accounts_bytes() {
+    // the differential tests above would pass on a broken-but-deterministic
+    // trainer; pin basic sanity of the sim path too
+    let dir = sim_dir("sanity");
+    // identity codec: no compression noise, so learning progress is clean
+    let mut c = cfg(&dir, "identity", SyncMode::ParallelFedAvg, 7, 0);
+    c.rounds = 4;
+    c.batches_per_round = 4;
+    let r = run(c);
+    let rounds = &r.outcome.history.rounds;
+    assert_eq!(rounds.len(), 4);
+    let first = rounds.first().unwrap();
+    let last = rounds.last().unwrap();
+    assert!(
+        last.train_loss < first.train_loss,
+        "sim loss should drop: {} -> {}",
+        first.train_loss,
+        last.train_loss
+    );
+    assert!(first.uplink_bytes > 0 && first.downlink_bytes > 0);
+    assert!(r.outcome.comm.total_bytes() > 0);
+    assert!(r.outcome.comm.makespan_s > 0.0);
+    assert!(CommStats::from_links(&[]).total_bytes() == 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}

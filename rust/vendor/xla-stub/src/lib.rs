@@ -1,0 +1,219 @@
+//! Offline stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! This container has no PJRT/XLA shared library, so the real bindings
+//! cannot build here. This crate mirrors the exact API surface
+//! `slfac::runtime::executor` uses and fails at **runtime** (from
+//! [`PjRtClient::cpu`]) with a clear message. Swapping this path
+//! dependency for the real `xla-rs` crate restores the hardware-backed
+//! executor without any source change in `slfac`; the in-tree `sim`
+//! backend covers tests and benches meanwhile.
+
+use std::fmt;
+
+/// Error type mirroring xla-rs's error (message-only here).
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn stub_err<T>(what: &str) -> Result<T, XlaError> {
+    Err(XlaError(format!(
+        "{what}: built against the offline xla stub — no PJRT runtime is \
+         linked (use the sim executor backend, or replace \
+         rust/vendor/xla-stub with the real xla-rs crate)"
+    )))
+}
+
+/// Element dtypes of literals/buffers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    /// 1-bit predicate.
+    Pred,
+    /// Signed 32-bit integer.
+    S32,
+    /// Signed 64-bit integer.
+    S64,
+    /// IEEE half float.
+    F16,
+    /// IEEE single float.
+    F32,
+    /// IEEE double float.
+    F64,
+}
+
+/// Scalar types storable in a [`Literal`].
+pub trait NativeType: Copy {
+    /// The XLA element type tag for this native type.
+    const TY: ElementType;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+}
+
+/// Array shape: dims + element type.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    /// Dimension extents.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Element type.
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Host literal (opaque in the stub).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    shape: ArrayShape,
+}
+
+impl Literal {
+    /// Scalar literal.
+    pub fn scalar<T: NativeType>(_v: T) -> Literal {
+        Literal {
+            shape: ArrayShape {
+                dims: vec![],
+                ty: T::TY,
+            },
+        }
+    }
+
+    /// Literal from a shape and raw bytes.
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal, XlaError> {
+        Ok(Literal {
+            shape: ArrayShape {
+                dims: dims.iter().map(|&d| d as i64).collect(),
+                ty,
+            },
+        })
+    }
+
+    /// Decompose a tuple literal.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, XlaError> {
+        stub_err("Literal::to_tuple")
+    }
+
+    /// The literal's array shape.
+    pub fn array_shape(&self) -> Result<ArrayShape, XlaError> {
+        Ok(self.shape.clone())
+    }
+
+    /// Copy out typed host data.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, XlaError> {
+        stub_err("Literal::to_vec")
+    }
+}
+
+/// Parsed HLO module (opaque).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse HLO text from a file.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, XlaError> {
+        stub_err("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation wrapper (opaque).
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle (opaque).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Fetch the buffer to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        stub_err("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable handle (opaque).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Run the executable over argument literals.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        stub_err("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client handle (opaque). In the stub, construction always fails.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Create a CPU PJRT client. Always errors in the stub build.
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        stub_err("PjRtClient::cpu")
+    }
+
+    /// Compile a computation for this client.
+    pub fn compile(
+        &self,
+        _comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable, XlaError> {
+        stub_err("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_fails_with_guidance() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("xla stub"));
+    }
+
+    #[test]
+    fn literal_shape_plumbing_works() {
+        let l = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2, 3],
+            &[0u8; 24],
+        )
+        .unwrap();
+        let s = l.array_shape().unwrap();
+        assert_eq!(s.dims(), &[2, 3]);
+        assert_eq!(s.ty(), ElementType::F32);
+        assert_eq!(Literal::scalar(1i32).array_shape().unwrap().ty(), ElementType::S32);
+    }
+}
