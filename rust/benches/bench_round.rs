@@ -1,18 +1,28 @@
 //! End-to-end round benchmarks.
 //!
-//! Section 1 (always runs): the **sequential-vs-parallel round engine**
-//! comparison on the sim executor backend at 1/4/16 devices — the headline
-//! number for the `workers` knob. Parallelism is bit-transparent, so this
-//! measures pure wall-clock.
+//! Section 1 (`engine`; always runs): the **sequential-vs-parallel round
+//! engine** comparison on the sim executor backend at 1/4/16 devices —
+//! the headline number for the `workers` knob. Parallelism is
+//! bit-transparent, so this measures pure wall-clock.
 //!
-//! Section 2 (requires `make artifacts`): one full split-learning round
-//! over real PJRT artifacts per codec — client_fwd, compress, uplink,
-//! idct, server_step, compress, downlink, client_step.
+//! Section 2 (`async`; always runs): **transport scheduler scenarios** at
+//! 64–256 devices — sync lockstep vs event-driven async under
+//! heterogeneous `wifi/lte` fleets with `wait-all`, `deadline-drop`, and
+//! `quorum` straggler policies. This is the CI smoke surface for the
+//! async scheduler.
+//!
+//! Section 3 (`xla`; requires `make artifacts`): one full split-learning
+//! round over real PJRT artifacts per codec — client_fwd, compress,
+//! uplink, idct, server_step, compress, downlink, client_step.
+//!
+//! `SLFAC_BENCH_ONLY=engine|async|xla` restricts the run to one section
+//! (CI uses this to smoke the async scenarios in isolation).
 
 use slfac::bench::{BenchResult, Bencher};
 use slfac::config::ExperimentConfig;
 use slfac::coordinator::Trainer;
 use slfac::runtime::{write_sim_manifest, ExecutorHandle, SimManifestSpec};
+use slfac::transport::{SchedulerKind, StragglerPolicy};
 
 const SIM_BATCH: usize = 8;
 
@@ -129,8 +139,76 @@ fn bench_xla_round(b: &mut Bencher) {
     }
 }
 
+fn bench_async_scenarios(b: &mut Bencher) {
+    let dir = format!(
+        "{}/slfac_bench_async_{}",
+        std::env::temp_dir().display(),
+        std::process::id()
+    );
+    write_sim_manifest(
+        &dir,
+        &[SimManifestSpec {
+            preset: "mnist".into(),
+            batch_size: SIM_BATCH,
+            act_channels: 2,
+            act_hw: 4,
+        }],
+    )
+    .unwrap();
+    let exec = ExecutorHandle::spawn_sim(&dir, &["mnist".to_string()]).unwrap();
+
+    b.section("transport schedulers: 64-256 devices, wifi/lte mix, straggler policies");
+    for devices in [64usize, 128, 256] {
+        let scenarios: [(&str, SchedulerKind, StragglerPolicy); 4] = [
+            ("sync", SchedulerKind::Sync, StragglerPolicy::WaitAll),
+            ("async/wait-all", SchedulerKind::Async, StragglerPolicy::WaitAll),
+            (
+                "async/deadline-drop",
+                SchedulerKind::Async,
+                // generous enough for the wifi half, drops most lte
+                // stragglers mid-round
+                StragglerPolicy::DeadlineDrop { deadline_s: 0.05 },
+            ),
+            (
+                "async/quorum",
+                SchedulerKind::Async,
+                StragglerPolicy::Quorum { k: devices / 2 },
+            ),
+        ];
+        for (label, kind, policy) in scenarios {
+            let mut cfg = sim_cfg(&dir, "slfac", devices, 0);
+            cfg.name = format!("bench_{}_{}d", label.replace('/', "_"), devices);
+            cfg.batches_per_round = 1;
+            cfg.train_samples = 16 * devices;
+            cfg.scheduler = kind;
+            cfg.profile = "wifi/lte".into();
+            cfg.straggler = policy;
+            let mut trainer = Trainer::new(cfg, exec.clone()).unwrap();
+            let _ = trainer.run().unwrap(); // warm
+            b.bench(&format!("round/{label}/devices={devices}"), || {
+                let _ = trainer.run().unwrap();
+            });
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 fn main() {
     let mut b = Bencher::new();
-    bench_sim_engine(&mut b);
-    bench_xla_round(&mut b);
+    let only = std::env::var("SLFAC_BENCH_ONLY").unwrap_or_default();
+    if !only.is_empty() && !["engine", "async", "xla"].contains(&only.as_str()) {
+        // a CI typo must fail loudly, not silently run zero sections
+        eprintln!("SLFAC_BENCH_ONLY='{only}' is not one of engine|async|xla");
+        std::process::exit(2);
+    }
+    let want = |section: &str| only.is_empty() || only == section;
+    if want("engine") {
+        bench_sim_engine(&mut b);
+    }
+    if want("async") {
+        bench_async_scenarios(&mut b);
+    }
+    if want("xla") {
+        bench_xla_round(&mut b);
+    }
 }

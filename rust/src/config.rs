@@ -7,7 +7,7 @@
 
 use crate::codec::CodecParams;
 use crate::json::Json;
-use crate::net::LinkConfig;
+use crate::transport::{LinkConfig, SchedulerKind, StragglerPolicy};
 use anyhow::{bail, Context, Result};
 
 /// Which dataset preset to use (selects the artifact set too).
@@ -95,8 +95,21 @@ pub struct ExperimentConfig {
     pub lr: f32,
     /// SGD momentum.
     pub momentum: f32,
-    /// Link model shared by all device links.
+    /// Link model shared by all device links (the `"config"` profile; a
+    /// non-default `profile` spec overrides bandwidth/latency per device
+    /// but keeps this `jitter`).
     pub link: LinkConfig,
+    /// Round scheduler: barriered `sync` (default) or event-driven
+    /// `async` (server consumes uplinks as they land).
+    pub scheduler: SchedulerKind,
+    /// Device profile spec: `"config"` (homogeneous, default) or a link
+    /// class mix like `"wifi/lte"` — see [`crate::transport::profile`].
+    pub profile: String,
+    /// Straggler policy for async rounds (`wait-all` default).
+    pub straggler: StragglerPolicy,
+    /// Simulated client compute seconds per fan-out/fan-in phase on a
+    /// reference (multiplier 1.0) device.
+    pub base_compute_s: f64,
     /// Master seed.
     pub seed: u64,
     /// Directory holding the AOT artifacts.
@@ -125,6 +138,10 @@ impl Default for ExperimentConfig {
             lr: 0.05,
             momentum: 0.9,
             link: LinkConfig::default(),
+            scheduler: SchedulerKind::Sync,
+            profile: "config".into(),
+            straggler: StragglerPolicy::WaitAll,
+            base_compute_s: 0.002,
             seed: 1234,
             artifacts_dir: "artifacts".into(),
             compress_gradients: true,
@@ -145,6 +162,11 @@ impl ExperimentConfig {
     pub fn from_json(json: &Json) -> Result<Self> {
         let obj = json.as_obj().context("config root must be an object")?;
         let mut cfg = ExperimentConfig::default();
+        // straggler policy parts may arrive in any key order; build after
+        // the loop
+        let mut straggler_name: Option<String> = None;
+        let mut deadline_s: Option<f64> = None;
+        let mut quorum_k: Option<usize> = None;
         for (key, v) in obj {
             match key.as_str() {
                 "name" => cfg.name = v.as_str().context("name: string")?.to_string(),
@@ -206,6 +228,18 @@ impl ExperimentConfig {
                     cfg.link.latency_s = v.as_f64().context("latency_ms")? / 1000.0
                 }
                 "jitter" => cfg.link.jitter = v.as_f64().context("jitter")?,
+                "scheduler" => {
+                    cfg.scheduler = SchedulerKind::parse(v.as_str().context("scheduler: string")?)?
+                }
+                "profile" => cfg.profile = v.as_str().context("profile: string")?.to_string(),
+                "straggler" => {
+                    straggler_name = Some(v.as_str().context("straggler: string")?.to_string())
+                }
+                "deadline_s" => deadline_s = Some(v.as_f64().context("deadline_s")?),
+                "quorum_k" => quorum_k = Some(v.as_usize().context("quorum_k")?),
+                "base_compute_s" => {
+                    cfg.base_compute_s = v.as_f64().context("base_compute_s")?
+                }
                 "seed" => cfg.seed = v.as_f64().context("seed")? as u64,
                 "artifacts_dir" => {
                     cfg.artifacts_dir = v.as_str().context("artifacts_dir")?.to_string()
@@ -215,6 +249,11 @@ impl ExperimentConfig {
                 }
                 other => bail!("unknown config key '{other}'"),
             }
+        }
+        if let Some(name) = straggler_name {
+            cfg.straggler = StragglerPolicy::from_parts(&name, deadline_s, quorum_k)?;
+        } else if deadline_s.is_some() || quorum_k.is_some() {
+            bail!("deadline_s/quorum_k given without a 'straggler' policy");
         }
         cfg.codec_params.seed = cfg.seed;
         cfg.validate()?;
@@ -244,6 +283,18 @@ impl ExperimentConfig {
         if self.lr <= 0.0 || self.lr > 10.0 {
             bail!("implausible learning rate {}", self.lr);
         }
+        if self.scheduler == SchedulerKind::Async && self.sync == SyncMode::Sequential {
+            bail!("the async scheduler requires parallel (SplitFed) sync mode");
+        }
+        if self.scheduler == SchedulerKind::Sync && self.straggler != StragglerPolicy::WaitAll {
+            bail!("straggler policies require scheduler = async");
+        }
+        self.straggler.validate(self.devices)?;
+        if !(self.base_compute_s.is_finite() && self.base_compute_s >= 0.0) {
+            bail!("base_compute_s must be finite and >= 0, got {}", self.base_compute_s);
+        }
+        // profile spec must parse and assign cleanly at this device count
+        crate::transport::assign_profiles(&self.profile, self.devices, self.link)?;
         Ok(())
     }
 
@@ -297,6 +348,19 @@ impl ExperimentConfig {
         m.insert("batch_size".into(), Json::Num(self.batch_size as f64));
         m.insert("lr".into(), Json::Num(self.lr as f64));
         m.insert("momentum".into(), Json::Num(self.momentum as f64));
+        m.insert("scheduler".into(), Json::Str(self.scheduler.name().into()));
+        m.insert("profile".into(), Json::Str(self.profile.clone()));
+        m.insert("straggler".into(), Json::Str(self.straggler.name().into()));
+        match self.straggler {
+            StragglerPolicy::WaitAll => {}
+            StragglerPolicy::DeadlineDrop { deadline_s } => {
+                m.insert("deadline_s".into(), Json::Num(deadline_s));
+            }
+            StragglerPolicy::Quorum { k } => {
+                m.insert("quorum_k".into(), Json::Num(k as f64));
+            }
+        }
+        m.insert("base_compute_s".into(), Json::Num(self.base_compute_s));
         m.insert("seed".into(), Json::Num(self.seed as f64));
         m.insert(
             "compress_gradients".into(),
@@ -367,6 +431,55 @@ mod tests {
         let json = Json::parse(r#"{"partition": "non-iid"}"#).unwrap();
         let cfg = ExperimentConfig::from_json(&json).unwrap();
         assert_eq!(cfg.partition, Partition::Dirichlet(0.5));
+    }
+
+    #[test]
+    fn transport_keys_parse_and_roundtrip() {
+        let json = Json::parse(
+            r#"{"scheduler": "async", "profile": "wifi/lte",
+                "straggler": "deadline-drop", "deadline_s": 0.75,
+                "base_compute_s": 0.004}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&json).unwrap();
+        assert_eq!(cfg.scheduler, SchedulerKind::Async);
+        assert_eq!(cfg.profile, "wifi/lte");
+        assert_eq!(cfg.straggler, StragglerPolicy::DeadlineDrop { deadline_s: 0.75 });
+        assert!((cfg.base_compute_s - 0.004).abs() < 1e-12);
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.scheduler, cfg.scheduler);
+        assert_eq!(back.profile, cfg.profile);
+        assert_eq!(back.straggler, cfg.straggler);
+
+        let json = Json::parse(r#"{"scheduler": "async", "straggler": "quorum", "quorum_k": 3}"#)
+            .unwrap();
+        let cfg = ExperimentConfig::from_json(&json).unwrap();
+        assert_eq!(cfg.straggler, StragglerPolicy::Quorum { k: 3 });
+    }
+
+    #[test]
+    fn transport_misconfigurations_rejected() {
+        for bad in [
+            // straggler policy on the sync scheduler
+            r#"{"straggler": "quorum", "quorum_k": 2}"#,
+            // async cannot drive sequential SL
+            r#"{"scheduler": "async", "sync": "sequential"}"#,
+            // deadline-drop without a deadline
+            r#"{"scheduler": "async", "straggler": "deadline-drop"}"#,
+            // quorum larger than the fleet (default 5 devices)
+            r#"{"scheduler": "async", "straggler": "quorum", "quorum_k": 6}"#,
+            // policy parameter without a policy
+            r#"{"deadline_s": 1.0}"#,
+            // unknown link class in the profile mix
+            r#"{"profile": "wifi/adsl"}"#,
+            r#"{"base_compute_s": -1.0}"#,
+        ] {
+            let json = Json::parse(bad).unwrap();
+            assert!(
+                ExperimentConfig::from_json(&json).is_err(),
+                "should reject {bad}"
+            );
+        }
     }
 
     #[test]

@@ -28,7 +28,11 @@
 //! Reductions over per-device results (loss sums, byte counts, FedAvg)
 //! are performed by the caller *after* the phase barrier, iterating in
 //! device-id order — see [`super::aggregate`] and the trainer's
-//! round-metrics accounting.
+//! round-metrics accounting. The transport-layer round schedulers
+//! ([`crate::transport::scheduler`]) dispatch their device batches through
+//! [`run_sharded`] too, so the same bit-transparency argument covers the
+//! event-driven async mode: batch *composition* comes from deterministic
+//! event order, batch *execution* from this pool.
 
 use anyhow::Result;
 

@@ -19,8 +19,16 @@ pub struct RoundMetrics {
     pub uplink_bytes: u64,
     /// Downlink bytes this round (all devices).
     pub downlink_bytes: u64,
-    /// Simulated communication makespan this round (parallel links), s.
+    /// Simulated communication makespan this round: max per-device link
+    /// busy time within the round (parallel links), s.
     pub comm_time_s: f64,
+    /// Simulated event-clock duration of the round (compute + transfers +
+    /// queueing under the round scheduler; capped at the deadline for
+    /// `deadline-drop` rounds), s.
+    pub sim_time_s: f64,
+    /// Devices dropped by the straggler policy this round (0 under the
+    /// sync scheduler and `wait-all`).
+    pub dropped_devices: u64,
     /// Wall-clock compute time this round, s.
     pub wall_time_s: f64,
 }
@@ -48,6 +56,8 @@ impl RoundMetrics {
             && self.uplink_bytes == other.uplink_bytes
             && self.downlink_bytes == other.downlink_bytes
             && self.comm_time_s.to_bits() == other.comm_time_s.to_bits()
+            && self.sim_time_s.to_bits() == other.sim_time_s.to_bits()
+            && self.dropped_devices == other.dropped_devices
     }
 }
 
@@ -91,14 +101,14 @@ impl TrainingHistory {
     /// Render as CSV (header + one row per round).
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "round,train_loss,train_acc,test_loss,test_acc,uplink_bytes,downlink_bytes,cum_bytes,comm_time_s,wall_time_s\n",
+            "round,train_loss,train_acc,test_loss,test_acc,uplink_bytes,downlink_bytes,cum_bytes,comm_time_s,sim_time_s,dropped,wall_time_s\n",
         );
         let mut cum = 0u64;
         for r in &self.rounds {
             cum += r.total_bytes();
             let _ = writeln!(
                 s,
-                "{},{:.5},{:.4},{:.5},{:.4},{},{},{},{:.4},{:.3}",
+                "{},{:.5},{:.4},{:.5},{:.4},{},{},{},{:.4},{:.4},{},{:.3}",
                 r.round,
                 r.train_loss,
                 r.train_acc,
@@ -108,6 +118,8 @@ impl TrainingHistory {
                 r.downlink_bytes,
                 cum,
                 r.comm_time_s,
+                r.sim_time_s,
+                r.dropped_devices,
                 r.wall_time_s
             );
         }
@@ -162,6 +174,8 @@ mod tests {
             uplink_bytes: bytes,
             downlink_bytes: bytes / 2,
             comm_time_s: 0.1,
+            sim_time_s: 0.2,
+            dropped_devices: 0,
             wall_time_s: 0.5,
         }
     }
@@ -200,6 +214,12 @@ mod tests {
         let mut c = a.clone();
         c.train_loss = f64::from_bits(a.train_loss.to_bits() + 1);
         assert!(!a.bit_eq(&c), "1-ulp loss drift must be detected");
+        let mut d = a.clone();
+        d.sim_time_s = f64::from_bits(a.sim_time_s.to_bits() + 1);
+        assert!(!a.bit_eq(&d), "1-ulp sim-time drift must be detected");
+        let mut e = a.clone();
+        e.dropped_devices = 1;
+        assert!(!a.bit_eq(&e), "straggler drops must affect bit_eq");
         let ha = TrainingHistory {
             name: "x".into(),
             codec: "y".into(),

@@ -4,16 +4,18 @@
 //!   worker pool that splits device state into contiguous shards and runs
 //!   the embarrassingly-parallel phases concurrently, sized by the
 //!   `workers` config knob (`0` = one worker per CPU).
-//! * [`trainer`] — the training orchestrator: device workers, lockstep
-//!   round phases, SplitFed client-weight aggregation, sequential-SL mode,
-//!   evaluation, and the wire path (codec ↔ network simulator ↔ runtime).
+//! * [`trainer`] — the training orchestrator: device workers, the wire
+//!   path (codec ↔ transport ↔ runtime), SplitFed client-weight
+//!   aggregation (straggler-aware), sequential-SL mode, evaluation. Round
+//!   *control flow* is delegated to the [`crate::transport`] schedulers
+//!   through the trainer's `RoundOps` implementation.
 //! * [`aggregate`] — FedAvg over flat parameter lists (parameter-sharded,
-//!   order-stable).
+//!   order-stable; dropped stragglers carry zero weight).
 //! * [`metrics`] — per-round metrics, history, CSV output, and bit-exact
 //!   comparison helpers for the differential determinism tests.
 //!
-//! One communication round (parallel mode) runs in three deterministic
-//! phases per local batch:
+//! One communication round under the **sync scheduler** (the default)
+//! runs in three deterministic phases per local batch:
 //!
 //! 1. **fan-out (device-parallel)** — every device runs `client_fwd`
 //!    through the executor, compresses the smashed data (L3 codec, worker
@@ -25,19 +27,31 @@
 //! 3. **fan-in (device-parallel)** — every device decompresses its
 //!    gradient and runs `client_step`.
 //!
+//! Under the **async scheduler** (`scheduler = "async"`) the barrier
+//! disappears: devices pipeline their local steps independently on the
+//! simulated clock, the server consumes uplinks in arrival order, and a
+//! straggler policy (`wait-all` / `deadline-drop` / `quorum`) decides
+//! when the round closes and which devices are dropped from that round's
+//! aggregation. See [`crate::transport`] and `ARCHITECTURE.md`.
+//!
 //! # Determinism
 //!
 //! A run is a function of its seed alone — never of the worker count or
-//! thread scheduling. Three mechanisms enforce this (and the
-//! `parallel_determinism` integration test checks it bit-for-bit):
+//! thread scheduling. Four mechanisms enforce this (and the
+//! `parallel_determinism` integration test checks it bit-for-bit, for
+//! both schedulers):
 //!
 //! * every device owns **derived RNG streams** (`rng::derive_seed`) for
 //!   its loader, link jitter, and codec sampling;
-//! * phases 1/3 share no mutable state across devices; phase 2 and
-//!   round-end aggregation are barriers executed in device-id order;
+//! * device-parallel phases share no mutable state across devices; server
+//!   steps serialize (device-id order under sync, simulated-arrival order
+//!   under async);
 //! * all floating-point reductions (loss sums, comm stats, FedAvg) fold
-//!   in device-id order after the barrier — order-stable, hence
-//!   bit-stable.
+//!   in a fixed order — device-id order for barriers, event order for
+//!   async — order-stable, hence bit-stable;
+//! * everything the async scheduler decides (server order, batches,
+//!   drops) derives from the `(sim_time, seq)` event order, a pure
+//!   function of the configuration ([`crate::transport::event`]).
 
 pub mod aggregate;
 pub mod engine;

@@ -1,16 +1,21 @@
 //! The training orchestrator: devices, rounds, the wire path, aggregation,
-//! evaluation. See the module docs in [`super`] for the phase structure and
-//! [`super::engine`] for the worker pool + determinism contract.
+//! evaluation. See the module docs in [`super`] for the phase structure,
+//! [`super::engine`] for the worker pool + determinism contract, and
+//! [`crate::transport`] for the round schedulers this trainer delegates
+//! round control flow to.
 
 use crate::codec::{self, ActivationCodec, Payload};
 use crate::config::{DatasetKind, ExperimentConfig, Partition, SyncMode};
 use crate::data::{
     partition_dirichlet, partition_iid, synthetic, BatchLoader, Dataset,
 };
-use crate::net::{CommStats, Direction, Link};
 use crate::rng::{derive_seed, stream, Pcg32};
 use crate::runtime::{ExecutorHandle, ExecutorStats, HostTensor};
 use crate::tensor::Tensor;
+use crate::transport::{
+    assign_profiles, build_scheduler, CommStats, DeviceId, DeviceProfile, Direction, Link,
+    RoundOps, RoundReport, RoundScheduler, ServerOut,
+};
 use anyhow::{Context, Result};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -19,12 +24,14 @@ use super::engine;
 use super::metrics::{RoundMetrics, TrainingHistory};
 
 /// Per-device state owned by the trainer across rounds. Everything a
-/// worker thread needs for phases 1 and 3 lives here (own loader + link +
-/// codec RNG stream), which is what makes the sharded engine's
-/// no-shared-mutable-state determinism argument hold — see
+/// worker thread needs for the fan-out/fan-in phases lives here (own
+/// loader + link + codec RNG stream), which is what makes the sharded
+/// engine's no-shared-mutable-state determinism argument hold — see
 /// [`super::engine`].
 struct DeviceCtx {
     id: usize,
+    /// Link class / compute-speed profile (heterogeneous fleets).
+    profile: DeviceProfile,
     loader: BatchLoader,
     link: Link,
     /// Per-device codec sampling stream (randomized codecs draw from this
@@ -37,10 +44,8 @@ struct DeviceCtx {
     /// Device's client-side momenta.
     cm: Vec<HostTensor>,
     shard_len: usize,
-    /// Set by phase 1, consumed by phases 2–3.
+    /// Set by fan-out, consumed by the server step and fan-in.
     pending: Option<StepCtx>,
-    /// Link busy time at round start (for per-round makespan).
-    busy_at_round_start: f64,
 }
 
 /// One in-flight batch between phases.
@@ -48,7 +53,7 @@ struct StepCtx {
     x: HostTensor,
     y: HostTensor,
     uplink: Payload,
-    /// Filled by phase 2.
+    /// Filled by the server step.
     grad: Option<GradMsg>,
 }
 
@@ -64,7 +69,8 @@ enum GradMsg {
 pub struct TrainOutcome {
     /// Per-round metrics.
     pub history: TrainingHistory,
-    /// Aggregate communication statistics.
+    /// Aggregate communication statistics (`makespan_s` is the sum of
+    /// per-round makespans — see [`CommStats`]).
     pub comm: CommStats,
     /// Executor-side statistics (per-artifact exec counts/times).
     pub exec_stats: ExecutorStats,
@@ -75,20 +81,28 @@ pub struct Trainer {
     cfg: ExperimentConfig,
     exec: ExecutorHandle,
     codec: Arc<dyn ActivationCodec>,
+    /// Round scheduler for the parallel (SplitFed) mode — sync lockstep or
+    /// event-driven async with a straggler policy.
+    scheduler: Box<dyn RoundScheduler>,
     preset: String,
     train: Dataset,
     test: Dataset,
     devices: Vec<DeviceCtx>,
-    /// Server-side parameters + momenta (updated in phase 2 only; the Mutex
-    /// documents the sharing discipline for future parallel-server modes).
+    /// Server-side parameters + momenta (updated in the server step only;
+    /// the Mutex documents the sharing discipline for future
+    /// parallel-server modes).
     server: Mutex<(Vec<HostTensor>, Vec<HostTensor>)>,
     /// Aggregated client params/momenta between rounds.
     client: (Vec<HostTensor>, Vec<HostTensor>),
     n_client_params: usize,
+    /// Sum of per-round communication makespans (the satellite fix: the
+    /// run-level makespan is per-round accounting, not a lifetime max).
+    makespan_total_s: f64,
 }
 
 impl Trainer {
-    /// Build a trainer: datasets, partition, executor, initial parameters.
+    /// Build a trainer: datasets, partition, executor, profiles, initial
+    /// parameters.
     pub fn new(cfg: ExperimentConfig, exec: ExecutorHandle) -> Result<Self> {
         cfg.validate()?;
         let preset = cfg.dataset.name().to_string();
@@ -149,14 +163,20 @@ impl Trainer {
         let codec: Arc<dyn ActivationCodec> =
             Arc::from(codec::by_name(&cfg.codec, &cfg.codec_params)?);
 
+        // Per-device heterogeneity (link class + compute multiplier) from
+        // the profile spec; "config" keeps the pre-transport homogeneous
+        // behavior.
+        let profiles = assign_profiles(&cfg.profile, cfg.devices, cfg.link)?;
+
         // Per-device randomness: every stream derives from (root seed,
         // purpose, device id), so no device's draws depend on any other
         // device's progress — a prerequisite for schedule-independent
         // parallel rounds.
         let devices = parts
             .into_iter()
+            .zip(profiles)
             .enumerate()
-            .map(|(id, shard)| DeviceCtx {
+            .map(|(id, (shard, profile))| DeviceCtx {
                 id,
                 shard_len: shard.len(),
                 loader: BatchLoader::new(
@@ -164,19 +184,21 @@ impl Trainer {
                     cfg.batch_size,
                     derive_seed(cfg.seed, stream::LOADER, id as u64),
                 ),
-                link: Link::new(cfg.link, derive_seed(cfg.seed, stream::LINK, id as u64)),
+                link: Link::new(profile.link, derive_seed(cfg.seed, stream::LINK, id as u64)),
+                profile,
                 codec_rng: Pcg32::derived(cfg.seed, stream::CODEC, id as u64),
                 cp: cp.clone(),
                 cm: cm.clone(),
                 pending: None,
-                busy_at_round_start: 0.0,
             })
             .collect();
 
+        let scheduler = build_scheduler(cfg.scheduler, cfg.straggler);
         Ok(Trainer {
             cfg,
             exec,
             codec,
+            scheduler,
             preset,
             train,
             test,
@@ -184,6 +206,7 @@ impl Trainer {
             server: Mutex::new((sp, sm)),
             client: (cp, cm),
             n_client_params: n_client,
+            makespan_total_s: 0.0,
         })
     }
 
@@ -199,25 +222,35 @@ impl Trainer {
             codec: self.cfg.codec.clone(),
             rounds: Vec::new(),
         };
+        self.makespan_total_s = 0.0;
         for round in 1..=self.cfg.rounds {
             let m = self.run_round(round)?;
             crate::info!(
-                "round {:>3}: loss {:.4} train {:.1}% test {:.1}%  {:.2} MB  comm {:.3}s",
+                "round {:>3}: loss {:.4} train {:.1}% test {:.1}%  {:.2} MB  comm {:.3}s  sim {:.3}s{}",
                 round,
                 m.train_loss,
                 m.train_acc * 100.0,
                 m.test_acc * 100.0,
                 m.total_bytes() as f64 / 1e6,
-                m.comm_time_s
+                m.comm_time_s,
+                m.sim_time_s,
+                if m.dropped_devices > 0 {
+                    format!("  dropped {}", m.dropped_devices)
+                } else {
+                    String::new()
+                }
             );
             history.rounds.push(m);
         }
         // Order-stable reduction: fold in device-id order so f64 sums are
-        // bit-identical no matter how many workers ran the phases.
+        // bit-identical no matter how many workers ran the phases. The
+        // run-level makespan is the accumulated per-round makespan — not
+        // any link's lifetime busy maximum.
         let mut comm = CommStats::default();
         for d in &self.devices {
             comm.accumulate(&d.link);
         }
+        comm.makespan_s = self.makespan_total_s;
         Ok(TrainOutcome {
             history,
             comm,
@@ -235,56 +268,78 @@ impl Trainer {
     }
 
     fn round_parallel(&mut self, round: usize, t0: Instant) -> Result<RoundMetrics> {
-        // reset device copies to the aggregate
+        // reset device copies to the aggregate + fresh round accounting
         for d in self.devices.iter_mut() {
             d.cp = self.client.0.clone();
             d.cm = self.client.1.clone();
-            d.busy_at_round_start = d.link.busy_s;
+            d.link.begin_round();
         }
-        let mut loss_sum = 0.0f64;
-        let mut correct = 0u64;
-        let mut samples = 0u64;
         let (mut up0, mut down0) = (0u64, 0u64);
         for d in &self.devices {
             up0 += d.link.uplink_bytes;
             down0 += d.link.downlink_bytes;
         }
 
-        for _step in 0..self.cfg.batches_per_round {
-            self.phase_fanout()?;
-            let (l, c, n) = self.phase_server()?;
-            loss_sum += l;
-            correct += c;
-            samples += n;
-            self.phase_fanin()?;
+        // The scheduler drives the round through the RoundOps interface;
+        // disjoint-field borrows let it run against the device table while
+        // the scheduler itself stays borrowed from self.
+        let workers = self.workers();
+        let report = {
+            let mut ops = TrainerRoundOps {
+                devices: &mut self.devices[..],
+                exec: &self.exec,
+                codec: self.codec.as_ref(),
+                cfg: &self.cfg,
+                preset: &self.preset,
+                train: &self.train,
+                server: &self.server,
+                workers,
+            };
+            self.scheduler.run_round(&mut ops)?
+        };
+
+        // SplitFed aggregation, weighted by shard sizes, over devices that
+        // completed the round (stragglers dropped by the policy sit this
+        // aggregation out and rejoin from the aggregate next round).
+        // Sharded across workers by *parameter index* — each parameter
+        // still folds its devices in id order, so the result is
+        // bit-identical to the sequential fold (see
+        // `aggregate::fedavg_sharded`).
+        let weights: Vec<f64> = self
+            .devices
+            .iter()
+            .enumerate()
+            .map(|(i, d)| if report.completed[i] { d.shard_len as f64 } else { 0.0 })
+            .collect();
+        if weights.iter().sum::<f64>() > 0.0 {
+            let cps: Vec<Vec<HostTensor>> =
+                self.devices.iter().map(|d| d.cp.clone()).collect();
+            let cms: Vec<Vec<HostTensor>> =
+                self.devices.iter().map(|d| d.cm.clone()).collect();
+            self.client = (
+                super::aggregate::fedavg_sharded(&cps, &weights, workers)?,
+                super::aggregate::fedavg_sharded(&cms, &weights, workers)?,
+            );
+        } else {
+            crate::warn!(
+                "round {round}: every device was dropped (policy {}) — keeping previous aggregate",
+                self.cfg.straggler.name()
+            );
         }
 
-        // SplitFed aggregation, weighted by shard sizes. Sharded across
-        // workers by *parameter index* — each parameter still folds its
-        // devices in id order, so the result is bit-identical to the
-        // sequential fold (see `aggregate::fedavg_sharded`).
-        let workers = self.workers();
-        let weights: Vec<f64> = self.devices.iter().map(|d| d.shard_len as f64).collect();
-        let cps: Vec<Vec<HostTensor>> =
-            self.devices.iter().map(|d| d.cp.clone()).collect();
-        let cms: Vec<Vec<HostTensor>> =
-            self.devices.iter().map(|d| d.cm.clone()).collect();
-        self.client = (
-            super::aggregate::fedavg_sharded(&cps, &weights, workers)?,
-            super::aggregate::fedavg_sharded(&cms, &weights, workers)?,
-        );
-
-        self.finish_round(round, t0, loss_sum, correct, samples, up0, down0)
+        self.finish_round(round, t0, &report, up0, down0)
     }
 
     fn round_sequential(&mut self, round: usize, t0: Instant) -> Result<RoundMetrics> {
-        // vanilla SL: client weights hand off device→device within the round
+        // vanilla SL: client weights hand off device→device within the
+        // round — inherently serial, so the round schedulers don't apply
         for d in self.devices.iter_mut() {
-            d.busy_at_round_start = d.link.busy_s;
+            d.link.begin_round();
         }
         let mut loss_sum = 0.0f64;
         let mut correct = 0u64;
         let mut samples = 0u64;
+        let mut server_steps = 0u64;
         let (mut up0, mut down0) = (0u64, 0u64);
         for d in &self.devices {
             up0 += d.link.uplink_bytes;
@@ -296,18 +351,59 @@ impl Trainer {
             self.devices[di].cp = cp.clone();
             self.devices[di].cm = cm.clone();
             for _ in 0..self.cfg.batches_per_round {
-                self.device_fanout(di)?;
-                let (l, c, n) = self.server_step_for(di)?;
-                loss_sum += l;
-                correct += c;
-                samples += n;
-                self.device_fanin(di)?;
+                device_fanout_impl(
+                    &mut self.devices[di],
+                    &self.exec,
+                    self.codec.as_ref(),
+                    &self.cfg,
+                    &self.preset,
+                    &self.train,
+                )?;
+                let out = server_step_impl(
+                    &mut self.devices[di],
+                    &self.exec,
+                    self.codec.as_ref(),
+                    &self.cfg,
+                    &self.preset,
+                    &self.server,
+                )?;
+                loss_sum += out.loss;
+                correct += out.correct;
+                samples += out.samples;
+                server_steps += 1;
+                device_fanin_impl(
+                    &mut self.devices[di],
+                    &self.exec,
+                    self.codec.as_ref(),
+                    &self.cfg,
+                    &self.preset,
+                )?;
             }
             cp = self.devices[di].cp.clone();
             cm = self.devices[di].cm.clone();
         }
         self.client = (cp, cm);
-        self.finish_round(round, t0, loss_sum, correct, samples, up0, down0)
+
+        // serial handoff: the round's simulated duration is the sum over
+        // devices of their transfer busy time plus two compute phases per
+        // local step
+        let mut sim_round_s = 0.0f64;
+        for d in &self.devices {
+            sim_round_s += d.link.round_busy_s
+                + 2.0
+                    * self.cfg.base_compute_s
+                    * d.profile.compute_mult
+                    * self.cfg.batches_per_round as f64;
+        }
+        let report = RoundReport {
+            loss_sum,
+            correct,
+            samples,
+            server_steps,
+            sim_round_s,
+            completed: vec![true; self.devices.len()],
+        };
+        self.finish_round(round, t0, &report, up0, down0)
     }
 
     /// Effective worker-pool width for the parallel phases.
@@ -315,156 +411,36 @@ impl Trainer {
         engine::effective_workers(self.cfg.workers, self.cfg.devices)
     }
 
-    /// Phase 1 over all devices: client forward + codec encode + uplink,
-    /// sharded across the worker pool.
-    fn phase_fanout(&mut self) -> Result<()> {
-        let exec = &self.exec;
-        let codec = &self.codec;
-        let cfg = &self.cfg;
-        let preset = &self.preset;
-        let train = &self.train;
-        let workers = self.workers();
-        engine::run_sharded(&mut self.devices, workers, |_, dev| {
-            device_fanout_impl(dev, exec, codec.as_ref(), cfg, preset, train)
-        })
-    }
-
-    fn device_fanout(&mut self, di: usize) -> Result<()> {
-        device_fanout_impl(
-            &mut self.devices[di],
-            &self.exec,
-            self.codec.as_ref(),
-            &self.cfg,
-            &self.preset,
-            &self.train,
-        )
-    }
-
-    /// Phase 2: serialized server updates in device order.
-    fn phase_server(&mut self) -> Result<(f64, u64, u64)> {
-        let mut loss = 0.0;
-        let mut correct = 0u64;
-        let mut n = 0u64;
-        for di in 0..self.devices.len() {
-            let (l, c, b) = self.server_step_for(di)?;
-            loss += l;
-            correct += c;
-            n += b;
-        }
-        Ok((loss, correct, n))
-    }
-
-    fn server_step_for(&mut self, di: usize) -> Result<(f64, u64, u64)> {
-        let cfg = &self.cfg;
-        let freq = self.codec.frequency_domain();
-        let dev = &mut self.devices[di];
-        let step = dev.pending.as_mut().context("phase order violation")?;
-
-        // decompress uplink → activations
-        let decoded = self.codec.decompress(&step.uplink)?;
-        let act = if freq {
-            let out = self.exec.execute(
-                &self.preset,
-                "idct",
-                vec![HostTensor::from_tensor(&decoded)],
-            )?;
-            out.into_iter().next().context("idct output")?
-        } else {
-            HostTensor::from_tensor(&decoded)
-        };
-
-        // server training step
-        let mut server = self.server.lock().unwrap();
-        let (sp, sm) = &mut *server;
-        let n_s = sp.len();
-        let mut inputs = Vec::with_capacity(2 * n_s + 3);
-        inputs.extend(sp.iter().cloned());
-        inputs.extend(sm.iter().cloned());
-        inputs.push(act);
-        inputs.push(step.y.clone());
-        inputs.push(HostTensor::scalar_f32(cfg.lr));
-        let mut out = self
-            .exec
-            .execute(&self.preset, "server_step", inputs)?
-            .into_iter();
-        let new_sp: Vec<HostTensor> = (&mut out).take(n_s).collect();
-        let new_sm: Vec<HostTensor> = (&mut out).take(n_s).collect();
-        let loss = out.next().context("loss output")?.first();
-        let correct = out.next().context("correct output")?.first() as u64;
-        let gact = out.next().context("gact output")?;
-        let gact_dct = out.next().context("gact_dct output")?;
-        *sp = new_sp;
-        *sm = new_sm;
-        drop(server);
-
-        // downlink gradient
-        let batch = step.y.numel() as u64;
-        if cfg.compress_gradients {
-            let g = if freq { gact_dct } else { gact };
-            let payload = self
-                .codec
-                .compress_with_rng(&g.into_tensor(), &mut dev.codec_rng)?;
-            dev.link
-                .transfer(Direction::Downlink, payload.wire_bytes());
-            step.grad = Some(GradMsg::Compressed(payload));
-        } else {
-            dev.link.transfer(Direction::Downlink, gact.raw_bytes());
-            step.grad = Some(GradMsg::Raw(gact));
-        }
-        Ok((loss, correct, batch))
-    }
-
-    /// Phase 3 over all devices: gradient decode + client backward,
-    /// sharded across the worker pool.
-    fn phase_fanin(&mut self) -> Result<()> {
-        let exec = &self.exec;
-        let codec = &self.codec;
-        let cfg = &self.cfg;
-        let preset = &self.preset;
-        let workers = self.workers();
-        engine::run_sharded(&mut self.devices, workers, |_, dev| {
-            device_fanin_impl(dev, exec, codec.as_ref(), cfg, preset)
-        })
-    }
-
-    fn device_fanin(&mut self, di: usize) -> Result<()> {
-        device_fanin_impl(
-            &mut self.devices[di],
-            &self.exec,
-            self.codec.as_ref(),
-            &self.cfg,
-            &self.preset,
-        )
-    }
-
     fn finish_round(
         &mut self,
         round: usize,
         t0: Instant,
-        loss_sum: f64,
-        correct: u64,
-        samples: u64,
+        report: &RoundReport,
         up0: u64,
         down0: u64,
     ) -> Result<RoundMetrics> {
         let (test_loss, test_acc) = self.evaluate()?;
-        let batches = (self.cfg.batches_per_round * self.cfg.devices) as f64;
         let (mut up1, mut down1) = (0u64, 0u64);
+        // per-round makespan from the round-busy snapshot counters (the
+        // CommStats::makespan_s fix: never derived from lifetime busy_s)
         let mut makespan = 0.0f64;
         for d in &self.devices {
             up1 += d.link.uplink_bytes;
             down1 += d.link.downlink_bytes;
-            makespan = makespan.max(d.link.busy_s - d.busy_at_round_start);
+            makespan = makespan.max(d.link.round_busy_s);
         }
+        self.makespan_total_s += makespan;
         Ok(RoundMetrics {
             round,
-            train_loss: loss_sum / batches,
-            train_acc: correct as f64 / samples.max(1) as f64,
+            train_loss: report.loss_sum / report.server_steps.max(1) as f64,
+            train_acc: report.correct as f64 / report.samples.max(1) as f64,
             test_acc,
             test_loss,
             uplink_bytes: up1 - up0,
             downlink_bytes: down1 - down0,
             comm_time_s: makespan,
+            sim_time_s: report.sim_round_s,
+            dropped_devices: report.dropped() as u64,
             wall_time_s: t0.elapsed().as_secs_f64(),
         })
     }
@@ -531,7 +507,91 @@ impl Trainer {
     }
 }
 
-/// Phase-1 body (shared by parallel and sequential modes).
+/// The trainer's implementation of the scheduler-facing [`RoundOps`]
+/// interface: device-local phases dispatch through the sharded worker
+/// pool, the server step serializes on the shared server state.
+struct TrainerRoundOps<'a> {
+    devices: &'a mut [DeviceCtx],
+    exec: &'a ExecutorHandle,
+    codec: &'a dyn ActivationCodec,
+    cfg: &'a ExperimentConfig,
+    preset: &'a str,
+    train: &'a Dataset,
+    server: &'a Mutex<(Vec<HostTensor>, Vec<HostTensor>)>,
+    workers: usize,
+}
+
+impl TrainerRoundOps<'_> {
+    /// Disjoint `&mut` handles for a scheduler-chosen device batch, in
+    /// batch order (panics on duplicates — a scheduler bug).
+    fn batch_refs(&mut self, devs: &[DeviceId]) -> Vec<&mut DeviceCtx> {
+        let mut by_id: Vec<Option<&mut DeviceCtx>> =
+            self.devices.iter_mut().map(Some).collect();
+        devs.iter()
+            .map(|&d| by_id[d].take().expect("duplicate device in scheduler batch"))
+            .collect()
+    }
+}
+
+impl RoundOps for TrainerRoundOps<'_> {
+    fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    fn steps(&self) -> usize {
+        self.cfg.batches_per_round
+    }
+
+    fn compute_s(&self, dev: DeviceId) -> f64 {
+        self.cfg.base_compute_s * self.devices[dev].profile.compute_mult
+    }
+
+    fn fanout(&mut self, devs: &[DeviceId]) -> Result<Vec<f64>> {
+        let exec = self.exec;
+        let codec = self.codec;
+        let cfg = self.cfg;
+        let preset = self.preset;
+        let train = self.train;
+        let workers = self.workers;
+        let mut items: Vec<(&mut DeviceCtx, f64)> =
+            self.batch_refs(devs).into_iter().map(|d| (d, 0.0)).collect();
+        engine::run_sharded(&mut items, workers, |_, item| {
+            item.1 = device_fanout_impl(&mut *item.0, exec, codec, cfg, preset, train)?;
+            Ok(())
+        })?;
+        Ok(items.into_iter().map(|(_, up_s)| up_s).collect())
+    }
+
+    fn server_step(&mut self, dev: DeviceId) -> Result<ServerOut> {
+        server_step_impl(
+            &mut self.devices[dev],
+            self.exec,
+            self.codec,
+            self.cfg,
+            self.preset,
+            self.server,
+        )
+    }
+
+    fn fanin(&mut self, devs: &[DeviceId]) -> Result<()> {
+        let exec = self.exec;
+        let codec = self.codec;
+        let cfg = self.cfg;
+        let preset = self.preset;
+        let workers = self.workers;
+        let mut items = self.batch_refs(devs);
+        engine::run_sharded(&mut items, workers, |_, dev| {
+            device_fanin_impl(&mut **dev, exec, codec, cfg, preset)
+        })
+    }
+
+    fn cancel(&mut self, dev: DeviceId) {
+        self.devices[dev].pending = None;
+    }
+}
+
+/// Fan-out body (shared by all modes): client forward + codec encode +
+/// uplink charge. Returns the uplink transfer seconds.
 fn device_fanout_impl(
     dev: &mut DeviceCtx,
     exec: &ExecutorHandle,
@@ -539,7 +599,7 @@ fn device_fanout_impl(
     cfg: &ExperimentConfig,
     preset: &str,
     train: &Dataset,
-) -> Result<()> {
+) -> Result<f64> {
     let (images, labels) = dev.loader.next_batch(train);
     let x = HostTensor::f32(
         &[cfg.batch_size, train.channels, train.height, train.width],
@@ -561,17 +621,89 @@ fn device_fanout_impl(
         act.into_tensor()
     };
     let payload = codec.compress_with_rng(&wire_input, &mut dev.codec_rng)?;
-    dev.link.transfer(Direction::Uplink, payload.wire_bytes());
+    let up_s = dev.link.transfer(Direction::Uplink, payload.wire_bytes());
     dev.pending = Some(StepCtx {
         x,
         y,
         uplink: payload,
         grad: None,
     });
-    Ok(())
+    Ok(up_s)
 }
 
-/// Phase-3 body (shared by parallel and sequential modes).
+/// Server-step body (shared by all modes): decompress the pending uplink,
+/// run the server training step, compress + charge the downlink gradient.
+fn server_step_impl(
+    dev: &mut DeviceCtx,
+    exec: &ExecutorHandle,
+    codec: &dyn ActivationCodec,
+    cfg: &ExperimentConfig,
+    preset: &str,
+    server: &Mutex<(Vec<HostTensor>, Vec<HostTensor>)>,
+) -> Result<ServerOut> {
+    let freq = codec.frequency_domain();
+    let step = dev.pending.as_mut().context("phase order violation")?;
+
+    // decompress uplink → activations
+    let decoded = codec.decompress(&step.uplink)?;
+    let act = if freq {
+        let out = exec.execute(
+            preset,
+            "idct",
+            vec![HostTensor::from_tensor(&decoded)],
+        )?;
+        out.into_iter().next().context("idct output")?
+    } else {
+        HostTensor::from_tensor(&decoded)
+    };
+
+    // server training step
+    let mut guard = server.lock().unwrap();
+    let (sp, sm) = &mut *guard;
+    let n_s = sp.len();
+    let mut inputs = Vec::with_capacity(2 * n_s + 3);
+    inputs.extend(sp.iter().cloned());
+    inputs.extend(sm.iter().cloned());
+    inputs.push(act);
+    inputs.push(step.y.clone());
+    inputs.push(HostTensor::scalar_f32(cfg.lr));
+    let mut out = exec
+        .execute(preset, "server_step", inputs)?
+        .into_iter();
+    let new_sp: Vec<HostTensor> = (&mut out).take(n_s).collect();
+    let new_sm: Vec<HostTensor> = (&mut out).take(n_s).collect();
+    let loss = out.next().context("loss output")?.first();
+    let correct = out.next().context("correct output")?.first() as u64;
+    let gact = out.next().context("gact output")?;
+    let gact_dct = out.next().context("gact_dct output")?;
+    *sp = new_sp;
+    *sm = new_sm;
+    drop(guard);
+
+    // downlink gradient
+    let batch = step.y.numel() as u64;
+    let downlink_s = if cfg.compress_gradients {
+        let g = if freq { gact_dct } else { gact };
+        let payload = codec.compress_with_rng(&g.into_tensor(), &mut dev.codec_rng)?;
+        let t = dev
+            .link
+            .transfer(Direction::Downlink, payload.wire_bytes());
+        step.grad = Some(GradMsg::Compressed(payload));
+        t
+    } else {
+        let t = dev.link.transfer(Direction::Downlink, gact.raw_bytes());
+        step.grad = Some(GradMsg::Raw(gact));
+        t
+    };
+    Ok(ServerOut {
+        downlink_s,
+        loss,
+        correct,
+        samples: batch,
+    })
+}
+
+/// Fan-in body (shared by all modes): gradient decode + client backward.
 fn device_fanin_impl(
     dev: &mut DeviceCtx,
     exec: &ExecutorHandle,
@@ -580,7 +712,7 @@ fn device_fanin_impl(
     preset: &str,
 ) -> Result<()> {
     let step = dev.pending.take().context("phase order violation")?;
-    let grad = step.grad.context("phase 2 did not run")?;
+    let grad = step.grad.context("server step did not run")?;
     let gact = match grad {
         GradMsg::Raw(g) => g,
         GradMsg::Compressed(p) => {

@@ -28,6 +28,20 @@
 //! device-id order. The `parallel_determinism` integration test enforces
 //! this differentially.
 //!
+//! # The transport layer
+//!
+//! Communication runs through the [`transport`] API: a deterministic
+//! simulated-time event scheduler (`transport::EventQueue`, ordered by
+//! `(sim_time, seq)` so event order is a pure function of the seed), a
+//! per-link cost model (`transport::link`, the old `net.rs`), per-device
+//! heterogeneous profiles (`wifi`/`lte`/`5g`/`ethernet` mixes via the
+//! `profile` config key), and two round schedulers behind the
+//! `RoundScheduler` trait: barriered **sync** (bit-identical to the
+//! legacy lockstep engine) and event-driven **async**, where the server
+//! consumes uplinks as they land and a straggler policy (`wait-all`,
+//! `deadline-drop`, `quorum`) decides when the round closes. See
+//! `ARCHITECTURE.md`.
+//!
 //! # Executor backends
 //!
 //! The model executor ([`runtime`]) serves two backends behind one actor:
@@ -55,6 +69,7 @@ pub mod rng;
 pub mod runtime;
 pub mod tensor;
 pub mod testing;
+pub mod transport;
 
 /// Crate version string (mirrors `Cargo.toml`).
 pub fn version() -> &'static str {

@@ -13,6 +13,8 @@
 //! ```text
 //! slfac train --config configs/mnist_iid.json --codec slfac --rounds 15
 //! slfac train --codec tk-sl --partition non-iid --out results/tk_noniid.csv
+//! slfac train --scheduler async --profile wifi/lte --straggler deadline-drop \
+//!     --deadline-s 0.5 --devices 64
 //! slfac inspect --artifacts artifacts
 //! slfac bench-codec --shape 32x16x14x14
 //! ```
@@ -21,6 +23,7 @@ use anyhow::{Context, Result};
 use slfac::cli::{CliError, Command, Matches};
 use slfac::codec;
 use slfac::config::{DatasetKind, ExperimentConfig, Partition, SyncMode};
+use slfac::transport::{SchedulerKind, StragglerPolicy};
 
 fn cli() -> Command {
     Command::new("slfac", "SL-FAC: communication-efficient split learning")
@@ -36,6 +39,17 @@ fn cli() -> Command {
                 .opt("workers", "N", "round-engine worker threads (0 = auto)", None)
                 .opt("seed", "N", "master seed", None)
                 .opt("sync", "MODE", "parallel | sequential", None)
+                .opt("scheduler", "KIND", "round scheduler: sync | async", None)
+                .opt(
+                    "profile",
+                    "SPEC",
+                    "device profiles: config | wifi | lte | 5g | ethernet | mixes (wifi/lte)",
+                    None,
+                )
+                .opt("straggler", "POLICY", "async policy: wait-all | deadline-drop | quorum", None)
+                .opt("deadline-s", "SECS", "simulated round deadline (deadline-drop)", None)
+                .opt("quorum-k", "N", "devices that must finish (quorum)", None)
+                .opt("base-compute-s", "SECS", "simulated client compute per phase", None)
                 .opt("backend", "KIND", "executor backend: xla | sim", Some("xla"))
                 .opt("artifacts", "DIR", "artifacts directory", None)
                 .opt("out", "PATH", "metrics CSV output path", None)
@@ -125,6 +139,29 @@ fn build_config(m: &Matches) -> Result<ExperimentConfig> {
             "sequential" => SyncMode::Sequential,
             other => anyhow::bail!("unknown sync '{other}'"),
         };
+    }
+    if let Some(s) = m.get("scheduler") {
+        cfg.scheduler = SchedulerKind::parse(s)?;
+    }
+    if let Some(p) = m.get("profile") {
+        cfg.profile = p.to_string();
+    }
+    let deadline_s = m
+        .get_parsed::<f64>("deadline-s")
+        .map_err(anyhow::Error::msg)?;
+    let quorum_k = m
+        .get_parsed::<usize>("quorum-k")
+        .map_err(anyhow::Error::msg)?;
+    if let Some(s) = m.get("straggler") {
+        cfg.straggler = StragglerPolicy::from_parts(s, deadline_s, quorum_k)?;
+    } else if deadline_s.is_some() || quorum_k.is_some() {
+        anyhow::bail!("--deadline-s/--quorum-k need --straggler");
+    }
+    if let Some(c) = m
+        .get_parsed::<f64>("base-compute-s")
+        .map_err(anyhow::Error::msg)?
+    {
+        cfg.base_compute_s = c;
     }
     if let Some(a) = m.get("artifacts") {
         cfg.artifacts_dir = a.to_string();

@@ -1,269 +1,7 @@
-//! Network simulator: per-link bandwidth/latency model + byte accounting.
-//!
-//! The paper's testbed moves smashed data between GPUs over real links; here
-//! the transfer is a function call, so communication cost is *modeled*:
-//! each device↔server link has a bandwidth (bits/s), a propagation latency,
-//! and optional jitter. The simulator charges every payload's exact wire
-//! bytes and accumulates per-device and global statistics — these numbers
-//! are what Fig. 2's x-axis ("communication rounds" at a fixed per-round
-//! budget) and the comm-volume tables in EXPERIMENTS.md come from.
-//!
-//! Time is simulated (a deterministic clock), independent of wall time, so
-//! experiments reproduce exactly regardless of host load.
+//! Legacy path for the network simulator — the implementation moved to
+//! [`crate::transport::link`] when the transport API landed (event-driven
+//! schedulers, device profiles, straggler policies live in
+//! [`crate::transport`]). This re-export keeps `slfac::net::{Link, …}`
+//! working for existing callers and tests.
 
-use crate::rng::Pcg32;
-
-/// Direction of a transfer (device→server or server→device).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Direction {
-    /// Device → server (activations).
-    Uplink,
-    /// Server → device (gradients).
-    Downlink,
-}
-
-/// Configuration of one device↔server link.
-#[derive(Debug, Clone, Copy)]
-pub struct LinkConfig {
-    /// Uplink bandwidth in bits per second.
-    pub uplink_bps: f64,
-    /// Downlink bandwidth in bits per second.
-    pub downlink_bps: f64,
-    /// One-way propagation latency in seconds.
-    pub latency_s: f64,
-    /// Multiplicative jitter amplitude (0 = deterministic; 0.1 ⇒ ±10%).
-    pub jitter: f64,
-}
-
-impl Default for LinkConfig {
-    fn default() -> Self {
-        // A WiFi-class edge link: 100 Mbit/s symmetric, 5 ms.
-        LinkConfig {
-            uplink_bps: 100e6,
-            downlink_bps: 100e6,
-            latency_s: 0.005,
-            jitter: 0.0,
-        }
-    }
-}
-
-/// One simulated link with cumulative accounting.
-#[derive(Debug)]
-pub struct Link {
-    /// Configuration.
-    pub cfg: LinkConfig,
-    rng: Pcg32,
-    /// Total bytes sent device→server.
-    pub uplink_bytes: u64,
-    /// Total bytes sent server→device.
-    pub downlink_bytes: u64,
-    /// Total simulated transfer seconds (both directions).
-    pub busy_s: f64,
-    /// Number of transfers.
-    pub transfers: u64,
-}
-
-impl Link {
-    /// New link with deterministic per-link jitter stream.
-    pub fn new(cfg: LinkConfig, seed: u64) -> Self {
-        Link {
-            cfg,
-            rng: Pcg32::new(seed, 911),
-            uplink_bytes: 0,
-            downlink_bytes: 0,
-            busy_s: 0.0,
-            transfers: 0,
-        }
-    }
-
-    /// Charge a transfer of `bytes` in `dir`; returns the simulated transfer
-    /// time in seconds (latency + serialization, with jitter applied).
-    pub fn transfer(&mut self, dir: Direction, bytes: usize) -> f64 {
-        let bps = match dir {
-            Direction::Uplink => self.cfg.uplink_bps,
-            Direction::Downlink => self.cfg.downlink_bps,
-        };
-        let mut t = self.cfg.latency_s + (bytes as f64 * 8.0) / bps;
-        if self.cfg.jitter > 0.0 {
-            let j = 1.0 + self.cfg.jitter * (2.0 * self.rng.uniform_f64() - 1.0);
-            t *= j.max(0.0);
-        }
-        match dir {
-            Direction::Uplink => self.uplink_bytes += bytes as u64,
-            Direction::Downlink => self.downlink_bytes += bytes as u64,
-        }
-        self.busy_s += t;
-        self.transfers += 1;
-        t
-    }
-
-    /// Total bytes both directions.
-    pub fn total_bytes(&self) -> u64 {
-        self.uplink_bytes + self.downlink_bytes
-    }
-}
-
-/// Aggregated communication statistics for a set of links (one per device).
-#[derive(Debug, Default, Clone)]
-pub struct CommStats {
-    /// Sum of uplink bytes across devices.
-    pub uplink_bytes: u64,
-    /// Sum of downlink bytes across devices.
-    pub downlink_bytes: u64,
-    /// Max per-device busy time — the round's communication makespan when
-    /// devices transfer in parallel.
-    pub makespan_s: f64,
-    /// Sum of busy times — total network occupancy.
-    pub total_busy_s: f64,
-}
-
-impl CommStats {
-    /// Gather stats from links. Accumulation is in slice order — callers
-    /// that need bit-reproducible `total_busy_s` across runs must pass
-    /// links in device-id order (the trainer does), never in thread
-    /// completion order.
-    pub fn from_links(links: &[Link]) -> Self {
-        let mut s = CommStats::default();
-        for l in links {
-            s.accumulate(l);
-        }
-        s
-    }
-
-    /// Fold one link into the aggregate (order-stable f64 summation: the
-    /// caller fixes the fold order, so the parallel round engine reduces
-    /// after its phase barrier in device-id order and gets bytes *and*
-    /// times bit-identical to a sequential run).
-    pub fn accumulate(&mut self, l: &Link) {
-        self.uplink_bytes += l.uplink_bytes;
-        self.downlink_bytes += l.downlink_bytes;
-        self.total_busy_s += l.busy_s;
-        if l.busy_s > self.makespan_s {
-            self.makespan_s = l.busy_s;
-        }
-    }
-
-    /// Total bytes both directions.
-    pub fn total_bytes(&self) -> u64 {
-        self.uplink_bytes + self.downlink_bytes
-    }
-
-    /// Bit-exact equality (f64 fields compared by bit pattern, so `-0.0 !=
-    /// 0.0` and NaNs compare by payload — exactly what the differential
-    /// determinism tests need).
-    pub fn bit_eq(&self, other: &CommStats) -> bool {
-        self.uplink_bytes == other.uplink_bytes
-            && self.downlink_bytes == other.downlink_bytes
-            && self.makespan_s.to_bits() == other.makespan_s.to_bits()
-            && self.total_busy_s.to_bits() == other.total_busy_s.to_bits()
-    }
-}
-
-/// Compile-time guard: links (and their RNG streams) migrate into the
-/// round engine's worker threads.
-#[allow(dead_code)]
-fn assert_link_is_send() {
-    fn is_send<T: Send>() {}
-    is_send::<Link>();
-    is_send::<CommStats>();
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn transfer_time_is_latency_plus_serialization() {
-        let mut l = Link::new(
-            LinkConfig {
-                uplink_bps: 8e6, // 1 MB/s
-                downlink_bps: 8e6,
-                latency_s: 0.01,
-                jitter: 0.0,
-            },
-            1,
-        );
-        let t = l.transfer(Direction::Uplink, 1_000_000);
-        assert!((t - 1.01).abs() < 1e-9, "t={t}");
-        assert_eq!(l.uplink_bytes, 1_000_000);
-        assert_eq!(l.downlink_bytes, 0);
-    }
-
-    #[test]
-    fn deterministic_without_jitter() {
-        let mk = || Link::new(LinkConfig::default(), 42);
-        let (mut a, mut b) = (mk(), mk());
-        for i in 0..10 {
-            assert_eq!(
-                a.transfer(Direction::Uplink, 1000 * i),
-                b.transfer(Direction::Uplink, 1000 * i)
-            );
-        }
-    }
-
-    #[test]
-    fn jitter_bounded() {
-        let cfg = LinkConfig {
-            jitter: 0.1,
-            ..Default::default()
-        };
-        let mut l = Link::new(cfg, 7);
-        let base = cfg.latency_s + 8.0 * 1e6 / cfg.uplink_bps;
-        for _ in 0..100 {
-            let t = l.transfer(Direction::Uplink, 1_000_000);
-            assert!(t >= base * 0.89 && t <= base * 1.11, "t={t} base={base}");
-        }
-    }
-
-    #[test]
-    fn stats_aggregate_and_makespan() {
-        let mut l1 = Link::new(LinkConfig::default(), 1);
-        let mut l2 = Link::new(LinkConfig::default(), 2);
-        l1.transfer(Direction::Uplink, 10_000_000);
-        l2.transfer(Direction::Uplink, 1_000);
-        l2.transfer(Direction::Downlink, 2_000);
-        let s = CommStats::from_links(&[l1, l2]);
-        assert_eq!(s.uplink_bytes, 10_001_000);
-        assert_eq!(s.downlink_bytes, 2_000);
-        assert!(s.makespan_s < s.total_busy_s);
-    }
-
-    #[test]
-    fn accumulate_matches_from_links_and_bit_eq() {
-        let mut l1 = Link::new(LinkConfig::default(), 1);
-        let mut l2 = Link::new(LinkConfig::default(), 2);
-        l1.transfer(Direction::Uplink, 5_000);
-        l2.transfer(Direction::Downlink, 7_000);
-        let batch = CommStats::from_links(&[l1, l2]);
-        // re-create the same traffic and fold incrementally
-        let mut a = Link::new(LinkConfig::default(), 1);
-        let mut b = Link::new(LinkConfig::default(), 2);
-        a.transfer(Direction::Uplink, 5_000);
-        b.transfer(Direction::Downlink, 7_000);
-        let mut inc = CommStats::default();
-        inc.accumulate(&a);
-        inc.accumulate(&b);
-        assert!(batch.bit_eq(&inc));
-        // any field difference breaks bit equality
-        let mut other = inc.clone();
-        other.total_busy_s += 1e-12;
-        assert!(!inc.bit_eq(&other));
-    }
-
-    #[test]
-    fn asymmetric_links() {
-        let mut l = Link::new(
-            LinkConfig {
-                uplink_bps: 1e6,
-                downlink_bps: 10e6,
-                latency_s: 0.0,
-                jitter: 0.0,
-            },
-            3,
-        );
-        let up = l.transfer(Direction::Uplink, 125_000); // 1 s at 1 Mb/s
-        let down = l.transfer(Direction::Downlink, 125_000); // 0.1 s
-        assert!((up - 1.0).abs() < 1e-9);
-        assert!((down - 0.1).abs() < 1e-9);
-    }
-}
+pub use crate::transport::link::{CommStats, Direction, Link, LinkConfig};

@@ -1,0 +1,231 @@
+//! Deterministic simulated-time event scheduler.
+//!
+//! The transport layer orders everything that happens "on the network" —
+//! uplink arrivals, downlink arrivals, device completions — through one
+//! [`EventQueue`]: a binary min-heap of [`Scheduled`] entries keyed by
+//! `(sim_time, seq)`. The sequence number is assigned at push time, so ties
+//! at the same simulated instant resolve in **push order** — a pure
+//! function of the program's deterministic control flow, never of thread
+//! scheduling. This is the determinism backbone of the async round
+//! scheduler: event *order* (and therefore server processing order, loss
+//! fold order, and straggler decisions) is identical for every worker
+//! count and every host.
+//!
+//! Simulated time is an `f64` in seconds. Times must be finite and are
+//! compared with `f64::total_cmp`, so the ordering is total even in the
+//! presence of `-0.0`. The queue clock (`now`) is monotone: it advances to
+//! each popped event's time and never runs backwards.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Index of a device in the trainer's device table.
+pub type DeviceId = usize;
+
+/// What happened at a simulated instant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Event {
+    /// A device's compressed activations finished arriving at the server
+    /// (for local step `step` of the round).
+    UplinkArrived {
+        /// 0-based local step within the round.
+        step: usize,
+    },
+    /// The server's (possibly compressed) gradient finished arriving at the
+    /// device for local step `step`.
+    DownlinkArrived {
+        /// 0-based local step within the round.
+        step: usize,
+    },
+    /// The device finished the client-backward of its last local step —
+    /// its round participation is complete.
+    DeviceDone,
+}
+
+/// One scheduled event: `(time, seq)` is the total order.
+#[derive(Debug, Clone, Copy)]
+pub struct Scheduled {
+    /// Simulated time in seconds.
+    pub time: f64,
+    /// Push sequence number — the deterministic tie-breaker.
+    pub seq: u64,
+    /// Device the event concerns.
+    pub device: DeviceId,
+    /// Event payload.
+    pub event: Event,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.time.total_cmp(&other.time).is_eq() && self.seq == other.seq
+    }
+}
+
+impl Eq for Scheduled {}
+
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.time
+            .total_cmp(&other.time)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Deterministic simulated-time event queue (min-heap on `(time, seq)`).
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<std::cmp::Reverse<Scheduled>>,
+    next_seq: u64,
+    now: f64,
+}
+
+impl EventQueue {
+    /// Empty queue at simulated time 0.
+    pub fn new() -> Self {
+        EventQueue::default()
+    }
+
+    /// Schedule `event` for `device` at absolute simulated `time`.
+    /// Returns the assigned sequence number. Panics on non-finite times —
+    /// a NaN deadline would silently scramble the ordering contract.
+    pub fn push(&mut self, time: f64, device: DeviceId, event: Event) -> u64 {
+        assert!(time.is_finite(), "event time must be finite, got {time}");
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(std::cmp::Reverse(Scheduled {
+            time,
+            seq,
+            device,
+            event,
+        }));
+        seq
+    }
+
+    /// Pop the earliest event (ties in push order) and advance the clock.
+    pub fn pop(&mut self) -> Option<Scheduled> {
+        let ev = self.heap.pop()?.0;
+        if ev.time > self.now {
+            self.now = ev.time;
+        }
+        Some(ev)
+    }
+
+    /// Earliest pending event without popping it.
+    pub fn peek(&self) -> Option<&Scheduled> {
+        self.heap.peek().map(|r| &r.0)
+    }
+
+    /// Current simulated time (time of the latest popped event).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Number of pending events.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Whether no events are pending.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Discard all pending events (straggler policies close a round by
+    /// abandoning in-flight work). The clock and seq counter keep going.
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, 0, Event::DeviceDone);
+        q.push(1.0, 1, Event::DeviceDone);
+        q.push(2.0, 2, Event::DeviceDone);
+        let order: Vec<DeviceId> = std::iter::from_fn(|| q.pop()).map(|e| e.device).collect();
+        assert_eq!(order, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn ties_resolve_in_push_order() {
+        let mut q = EventQueue::new();
+        for d in 0..8 {
+            q.push(0.5, d, Event::UplinkArrived { step: 0 });
+        }
+        let order: Vec<DeviceId> = std::iter::from_fn(|| q.pop()).map(|e| e.device).collect();
+        assert_eq!(order, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn interleaved_pushes_keep_total_order() {
+        let mut q = EventQueue::new();
+        q.push(1.0, 0, Event::DeviceDone);
+        assert_eq!(q.pop().unwrap().device, 0);
+        // push an event earlier than one already consumed: clock still
+        // monotone, ordering among *pending* events intact
+        q.push(0.5, 1, Event::DeviceDone);
+        q.push(0.5, 2, Event::DeviceDone);
+        assert_eq!(q.pop().unwrap().device, 1);
+        assert_eq!(q.pop().unwrap().device, 2);
+        assert_eq!(q.now(), 1.0, "clock never runs backwards");
+    }
+
+    #[test]
+    fn clock_advances_with_pops() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.now(), 0.0);
+        q.push(2.5, 0, Event::DeviceDone);
+        q.push(4.0, 1, Event::DeviceDone);
+        q.pop();
+        assert_eq!(q.now(), 2.5);
+        q.pop();
+        assert_eq!(q.now(), 4.0);
+    }
+
+    #[test]
+    fn peek_len_clear() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        q.push(1.0, 3, Event::DownlinkArrived { step: 2 });
+        q.push(0.25, 7, Event::UplinkArrived { step: 1 });
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.peek().unwrap().device, 7);
+        q.clear();
+        assert!(q.is_empty() && q.pop().is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn non_finite_time_rejected() {
+        let mut q = EventQueue::new();
+        q.push(f64::NAN, 0, Event::DeviceDone);
+    }
+
+    #[test]
+    fn identical_push_sequences_give_identical_pop_sequences() {
+        // determinism is the whole point: the pop order is a pure function
+        // of the push sequence
+        let run = || {
+            let mut q = EventQueue::new();
+            let times = [0.5, 0.125, 0.5, 2.0, 0.125, 0.5];
+            for (d, &t) in times.iter().enumerate() {
+                q.push(t, d, Event::UplinkArrived { step: d });
+            }
+            std::iter::from_fn(move || q.pop())
+                .map(|e| (e.time.to_bits(), e.seq, e.device))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+}

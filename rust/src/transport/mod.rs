@@ -1,0 +1,40 @@
+//! The coordinator↔device transport API.
+//!
+//! This module replaces the old direct `Link::transfer()` call-and-charge
+//! model (`net.rs`) with a layered design (see `ARCHITECTURE.md` for the
+//! full picture):
+//!
+//! * [`link`] — the low-level **cost model**: per-link bandwidth / latency
+//!   / jitter, exact wire-byte accounting, per-round busy snapshots.
+//! * [`event`] — the deterministic **simulated-time event scheduler**: a
+//!   binary heap of `(sim_time, seq, device, event)` with sequence-number
+//!   tie-breaking, so event order is a pure function of the seed — never
+//!   of thread scheduling.
+//! * [`profile`] — per-device heterogeneity: link classes
+//!   (`wifi`/`lte`/`5g`/`ethernet`), compute-speed multipliers, and
+//!   config/CLI-selectable mix specs (`"wifi/lte"`).
+//! * [`policy`] — straggler policies for async rounds: `wait-all`,
+//!   `deadline-drop`, `k`-of-`n` `quorum`.
+//! * [`scheduler`] — the [`RoundScheduler`] trait plus both
+//!   implementations: barriered lockstep re-expressed as events
+//!   ([`SyncEventScheduler`], bit-identical to the pre-transport engine)
+//!   and event-driven async ([`AsyncEventScheduler`], the server consumes
+//!   uplinks as they land).
+//!
+//! The old `crate::net` path re-exports [`link`]'s types for backward
+//! compatibility.
+
+pub mod event;
+pub mod link;
+pub mod policy;
+pub mod profile;
+pub mod scheduler;
+
+pub use event::{DeviceId, Event, EventQueue, Scheduled};
+pub use link::{CommStats, Direction, Link, LinkConfig};
+pub use policy::StragglerPolicy;
+pub use profile::{assign_profiles, DeviceProfile, LinkClass};
+pub use scheduler::{
+    build_scheduler, AsyncEventScheduler, RoundOps, RoundReport, RoundScheduler, SchedulerKind,
+    ServerOut, SyncEventScheduler,
+};

@@ -1,0 +1,176 @@
+//! Straggler policies: when does an async round stop waiting?
+//!
+//! The async scheduler consumes uplinks as they land; the policy decides
+//! when the round *closes* and what happens to devices still in flight:
+//!
+//! * [`StragglerPolicy::WaitAll`] — the round closes when every device has
+//!   finished all its local steps (no drops; the async analogue of the
+//!   sync barrier, and the mode that matches sync-mode byte totals under
+//!   homogeneous profiles).
+//! * [`StragglerPolicy::DeadlineDrop`] — the round closes at a fixed
+//!   simulated deadline; devices that have not completed by then are
+//!   dropped from this round's aggregation and their in-flight work is
+//!   abandoned (bytes already on the wire stay charged — they were
+//!   transmitted).
+//! * [`StragglerPolicy::Quorum`] — the round closes the moment the `k`-th
+//!   device completes; the remaining `n − k` are dropped. Ties at the same
+//!   simulated instant resolve in event (seq) order, deterministically.
+//!
+//! Dropped devices still rejoin at the next round start (SplitFed resets
+//! client weights to the aggregate), so a straggler is excluded per-round,
+//! never evicted.
+
+use anyhow::{bail, Result};
+
+/// Round-close policy for the async scheduler.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StragglerPolicy {
+    /// Wait for every device to finish all its steps.
+    WaitAll,
+    /// Close the round at `deadline_s` of simulated time; drop devices
+    /// that have not completed by then.
+    DeadlineDrop {
+        /// Simulated round deadline in seconds (> 0).
+        deadline_s: f64,
+    },
+    /// Close the round when `k` devices have completed; drop the rest.
+    Quorum {
+        /// Number of devices that must complete (1 ≤ k ≤ devices).
+        k: usize,
+    },
+}
+
+impl StragglerPolicy {
+    /// Build from config/CLI parts: a policy name plus the optional
+    /// `deadline_s` / `quorum_k` parameters it needs. Parameters the named
+    /// policy does not consume are rejected (typo safety — mirrors the
+    /// config layer's unknown-key strictness).
+    pub fn from_parts(name: &str, deadline_s: Option<f64>, k: Option<usize>) -> Result<Self> {
+        let policy = match name.to_ascii_lowercase().as_str() {
+            "wait-all" | "waitall" | "all" => StragglerPolicy::WaitAll,
+            "deadline-drop" | "deadline" => {
+                let Some(d) = deadline_s else {
+                    bail!("straggler policy 'deadline-drop' needs deadline_s")
+                };
+                StragglerPolicy::DeadlineDrop { deadline_s: d }
+            }
+            "quorum" | "k-of-n" => {
+                let Some(k) = k else {
+                    bail!("straggler policy 'quorum' needs quorum_k")
+                };
+                StragglerPolicy::Quorum { k }
+            }
+            other => bail!("unknown straggler policy '{other}' (wait-all|deadline-drop|quorum)"),
+        };
+        match policy {
+            StragglerPolicy::WaitAll if deadline_s.is_some() || k.is_some() => {
+                bail!("straggler policy 'wait-all' takes no deadline_s/quorum_k")
+            }
+            StragglerPolicy::DeadlineDrop { .. } if k.is_some() => {
+                bail!("straggler policy 'deadline-drop' does not take quorum_k")
+            }
+            StragglerPolicy::Quorum { .. } if deadline_s.is_some() => {
+                bail!("straggler policy 'quorum' does not take deadline_s")
+            }
+            _ => {}
+        }
+        Ok(policy)
+    }
+
+    /// Stable display name (config key value).
+    pub fn name(&self) -> &'static str {
+        match self {
+            StragglerPolicy::WaitAll => "wait-all",
+            StragglerPolicy::DeadlineDrop { .. } => "deadline-drop",
+            StragglerPolicy::Quorum { .. } => "quorum",
+        }
+    }
+
+    /// Validate parameters against the device count.
+    pub fn validate(&self, devices: usize) -> Result<()> {
+        match *self {
+            StragglerPolicy::WaitAll => {}
+            StragglerPolicy::DeadlineDrop { deadline_s } => {
+                if !(deadline_s.is_finite() && deadline_s > 0.0) {
+                    bail!("deadline_s must be a positive finite number, got {deadline_s}");
+                }
+            }
+            StragglerPolicy::Quorum { k } => {
+                if k == 0 || k > devices {
+                    bail!("quorum_k must be in [1, devices={devices}], got {k}");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_names() {
+        assert_eq!(
+            StragglerPolicy::from_parts("wait-all", None, None).unwrap(),
+            StragglerPolicy::WaitAll
+        );
+        assert_eq!(
+            StragglerPolicy::from_parts("deadline-drop", Some(0.5), None).unwrap(),
+            StragglerPolicy::DeadlineDrop { deadline_s: 0.5 }
+        );
+        assert_eq!(
+            StragglerPolicy::from_parts("quorum", None, Some(3)).unwrap(),
+            StragglerPolicy::Quorum { k: 3 }
+        );
+        assert!(StragglerPolicy::from_parts("bogus", None, None).is_err());
+    }
+
+    #[test]
+    fn missing_parameters_rejected() {
+        assert!(StragglerPolicy::from_parts("deadline-drop", None, None).is_err());
+        assert!(StragglerPolicy::from_parts("quorum", Some(1.0), None).is_err());
+    }
+
+    #[test]
+    fn extraneous_parameters_rejected() {
+        // a parameter the named policy does not consume is a config typo,
+        // not something to drop on the floor
+        assert!(StragglerPolicy::from_parts("wait-all", Some(1.0), None).is_err());
+        assert!(StragglerPolicy::from_parts("wait-all", None, Some(2)).is_err());
+        assert!(StragglerPolicy::from_parts("deadline-drop", Some(1.0), Some(2)).is_err());
+        assert!(StragglerPolicy::from_parts("quorum", Some(1.0), Some(2)).is_err());
+    }
+
+    #[test]
+    fn validation_bounds() {
+        assert!(StragglerPolicy::WaitAll.validate(1).is_ok());
+        assert!(StragglerPolicy::DeadlineDrop { deadline_s: 0.1 }.validate(4).is_ok());
+        assert!(StragglerPolicy::DeadlineDrop { deadline_s: 0.0 }.validate(4).is_err());
+        assert!(StragglerPolicy::DeadlineDrop {
+            deadline_s: f64::NAN
+        }
+        .validate(4)
+        .is_err());
+        assert!(StragglerPolicy::Quorum { k: 4 }.validate(4).is_ok());
+        assert!(StragglerPolicy::Quorum { k: 0 }.validate(4).is_err());
+        assert!(StragglerPolicy::Quorum { k: 5 }.validate(4).is_err());
+    }
+
+    #[test]
+    fn names_roundtrip_through_from_parts() {
+        for p in [
+            StragglerPolicy::WaitAll,
+            StragglerPolicy::DeadlineDrop { deadline_s: 1.0 },
+            StragglerPolicy::Quorum { k: 2 },
+        ] {
+            let (d, k) = match p {
+                StragglerPolicy::WaitAll => (None, None),
+                StragglerPolicy::DeadlineDrop { deadline_s } => (Some(deadline_s), None),
+                StragglerPolicy::Quorum { k } => (None, Some(k)),
+            };
+            let back = StragglerPolicy::from_parts(p.name(), d, k).unwrap();
+            assert_eq!(back, p);
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Per-device heterogeneity: link classes and compute-speed profiles.
+//!
+//! The paper's motivating bottleneck is many *heterogeneous* edge devices
+//! contending to ship smashed data. A [`DeviceProfile`] captures what
+//! differs between them: the link class (bandwidth/latency of its
+//! device↔server pipe) and a compute-speed multiplier (how much slower
+//! than the reference device its client-side forward/backward runs).
+//!
+//! Profiles are selected by a **spec string** in the config/CLI
+//! (`profile` key / `--profile` flag):
+//!
+//! * `"config"` (default) — every device uses the experiment's base
+//!   `link` settings with multiplier 1.0: exactly the pre-transport
+//!   homogeneous behavior.
+//! * a single class name (`"wifi"`, `"lte"`, `"5g"`, `"ethernet"`) —
+//!   every device gets that class;
+//! * a slash-separated mix (`"wifi/lte"`, `"ethernet/5g/lte"`) — device
+//!   `d` gets class `d % len` (round-robin), giving deterministic
+//!   heterogeneous fleets at any device count.
+//!
+//! Class presets keep the experiment config's `jitter` setting so jittered
+//! runs stay available under heterogeneous fleets; bandwidth and latency
+//! come from the class table below.
+
+use super::link::LinkConfig;
+use anyhow::{bail, Result};
+
+/// A link technology class with canonical bandwidth/latency numbers and a
+/// compute-speed multiplier for the device class that typically sits
+/// behind it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkClass {
+    /// Wall-powered edge box on wired ethernet: 1 Gbit/s, 0.2 ms.
+    Ethernet,
+    /// 5G handset: 100 Mbit/s up / 400 Mbit/s down, 10 ms.
+    FiveG,
+    /// WiFi-class edge device: 100 Mbit/s symmetric, 5 ms.
+    Wifi,
+    /// LTE handset: 10 Mbit/s up / 40 Mbit/s down, 40 ms.
+    Lte,
+}
+
+impl LinkClass {
+    /// Parse a class name (case-insensitive).
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "ethernet" | "eth" | "wired" => LinkClass::Ethernet,
+            "5g" | "fiveg" => LinkClass::FiveG,
+            "wifi" => LinkClass::Wifi,
+            "lte" | "4g" => LinkClass::Lte,
+            other => bail!("unknown link class '{other}' (ethernet|5g|wifi|lte)"),
+        })
+    }
+
+    /// Stable display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            LinkClass::Ethernet => "ethernet",
+            LinkClass::FiveG => "5g",
+            LinkClass::Wifi => "wifi",
+            LinkClass::Lte => "lte",
+        }
+    }
+
+    /// Canonical link parameters for the class (`jitter` comes from the
+    /// experiment config, passed in by the caller).
+    pub fn link_config(&self, jitter: f64) -> LinkConfig {
+        let (up, down, lat) = match self {
+            LinkClass::Ethernet => (1e9, 1e9, 0.0002),
+            LinkClass::FiveG => (100e6, 400e6, 0.010),
+            LinkClass::Wifi => (100e6, 100e6, 0.005),
+            LinkClass::Lte => (10e6, 40e6, 0.040),
+        };
+        LinkConfig {
+            uplink_bps: up,
+            downlink_bps: down,
+            latency_s: lat,
+            jitter,
+        }
+    }
+
+    /// Compute-speed multiplier of the device class typically behind this
+    /// link (1.0 = reference; larger = slower client compute).
+    pub fn compute_mult(&self) -> f64 {
+        match self {
+            LinkClass::Ethernet => 0.5,
+            LinkClass::FiveG => 1.0,
+            LinkClass::Wifi => 1.0,
+            LinkClass::Lte => 2.0,
+        }
+    }
+}
+
+/// What one device looks like to the transport layer.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceProfile {
+    /// The class this profile came from (`None` = homogeneous `"config"`).
+    pub class: Option<LinkClass>,
+    /// Link cost-model parameters.
+    pub link: LinkConfig,
+    /// Client compute-speed multiplier (scales `base_compute_s`).
+    pub compute_mult: f64,
+}
+
+impl DeviceProfile {
+    /// The homogeneous profile: the experiment's base link, multiplier 1.0.
+    pub fn homogeneous(link: LinkConfig) -> Self {
+        DeviceProfile {
+            class: None,
+            link,
+            compute_mult: 1.0,
+        }
+    }
+}
+
+/// Parse a profile spec (see module docs) and assign one profile per
+/// device. `fallback` is the experiment's base `link` config; its `jitter`
+/// also applies to class presets.
+pub fn assign_profiles(
+    spec: &str,
+    devices: usize,
+    fallback: LinkConfig,
+) -> Result<Vec<DeviceProfile>> {
+    let spec = spec.trim();
+    let homogeneous = spec.is_empty()
+        || spec.eq_ignore_ascii_case("config")
+        || spec.eq_ignore_ascii_case("uniform");
+    if homogeneous {
+        return Ok(vec![DeviceProfile::homogeneous(fallback); devices]);
+    }
+    let classes: Vec<LinkClass> = spec
+        .split('/')
+        .map(|part| LinkClass::parse(part.trim()))
+        .collect::<Result<_>>()?;
+    if classes.is_empty() {
+        bail!("empty profile spec");
+    }
+    Ok((0..devices)
+        .map(|d| {
+            let class = classes[d % classes.len()];
+            DeviceProfile {
+                class: Some(class),
+                link: class.link_config(fallback.jitter),
+                compute_mult: class.compute_mult(),
+            }
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_spec_is_homogeneous_fallback() {
+        let base = LinkConfig {
+            uplink_bps: 42e6,
+            downlink_bps: 7e6,
+            latency_s: 0.001,
+            jitter: 0.2,
+        };
+        for spec in ["config", "", "  ", "uniform"] {
+            let ps = assign_profiles(spec, 3, base).unwrap();
+            assert_eq!(ps.len(), 3);
+            for p in &ps {
+                assert!(p.class.is_none());
+                assert_eq!(p.link.uplink_bps, 42e6);
+                assert_eq!(p.compute_mult, 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn single_class_applies_to_all() {
+        let ps = assign_profiles("lte", 4, LinkConfig::default()).unwrap();
+        for p in &ps {
+            assert_eq!(p.class, Some(LinkClass::Lte));
+            assert_eq!(p.link.uplink_bps, 10e6);
+            assert_eq!(p.compute_mult, 2.0);
+        }
+    }
+
+    #[test]
+    fn mixes_round_robin() {
+        let ps = assign_profiles("wifi/lte", 5, LinkConfig::default()).unwrap();
+        let classes: Vec<_> = ps.iter().map(|p| p.class.unwrap()).collect();
+        assert_eq!(
+            classes,
+            vec![
+                LinkClass::Wifi,
+                LinkClass::Lte,
+                LinkClass::Wifi,
+                LinkClass::Lte,
+                LinkClass::Wifi
+            ]
+        );
+    }
+
+    #[test]
+    fn presets_inherit_config_jitter() {
+        let base = LinkConfig {
+            jitter: 0.15,
+            ..Default::default()
+        };
+        let ps = assign_profiles("ethernet/5g", 2, base).unwrap();
+        assert_eq!(ps[0].link.jitter, 0.15);
+        assert_eq!(ps[1].link.jitter, 0.15);
+        // but bandwidth/latency are the class's, not the fallback's
+        assert_eq!(ps[0].link.uplink_bps, 1e9);
+        assert_eq!(ps[1].link.downlink_bps, 400e6);
+    }
+
+    #[test]
+    fn unknown_class_rejected() {
+        assert!(assign_profiles("wifi/bogus", 2, LinkConfig::default()).is_err());
+        assert!(LinkClass::parse("dialup").is_err());
+    }
+
+    #[test]
+    fn class_names_roundtrip() {
+        for c in [
+            LinkClass::Ethernet,
+            LinkClass::FiveG,
+            LinkClass::Wifi,
+            LinkClass::Lte,
+        ] {
+            assert_eq!(LinkClass::parse(c.name()).unwrap(), c);
+        }
+    }
+}

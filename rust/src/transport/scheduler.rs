@@ -1,0 +1,642 @@
+//! Round schedulers: barriered lockstep and event-driven async, behind one
+//! [`RoundScheduler`] trait.
+//!
+//! A scheduler decides *when* device work happens inside one communication
+//! round — it never touches model state itself. The training side exposes
+//! a narrow [`RoundOps`] interface (the trainer implements it over its
+//! device table and executor); the scheduler drives that interface through
+//! the deterministic [`EventQueue`].
+//!
+//! * [`SyncEventScheduler`] — the classic lockstep round re-expressed as
+//!   events: every local step is fan-out over all devices, a barrier
+//!   (every uplink must land), server steps in **device-id order**, then
+//!   fan-in over all devices. The event queue supplies the timing
+//!   (barrier time = last arrival), and because the op sequence is
+//!   identical to the pre-transport engine, results are bit-identical to
+//!   it.
+//! * [`AsyncEventScheduler`] — the server consumes uplinks **as they
+//!   land** (event order, i.e. simulated arrival time with deterministic
+//!   seq tie-breaking), devices pipeline their local steps independently,
+//!   and a [`StragglerPolicy`] decides when the round closes and which
+//!   devices get dropped.
+//!
+//! # Determinism contract
+//!
+//! Everything a scheduler decides — server processing order, batch
+//! composition, straggler drops, round close time — derives from the
+//! `(time, seq)` event order, which is a pure function of the experiment
+//! seed and configuration. Worker counts and thread scheduling never
+//! enter: device-local work dispatched in batches goes through the
+//! engine's sharded pool, whose bit-transparency is established
+//! separately (`coordinator::engine`). The `parallel_determinism`
+//! integration test pins this end to end for both schedulers.
+//!
+//! The compute model is deliberately simple: each fan-out and each fan-in
+//! on device `d` costs `compute_s(d)` simulated seconds (the config's
+//! `base_compute_s` × the device profile's multiplier); server processing
+//! is instantaneous. Transfer times come from the link cost model
+//! ([`super::link`]).
+
+use super::event::{DeviceId, Event, EventQueue};
+use super::policy::StragglerPolicy;
+use anyhow::{bail, Result};
+
+/// Which round scheduler to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// Barriered lockstep phases (the default; pre-transport behavior).
+    Sync,
+    /// Event-driven: server consumes uplinks as they land.
+    Async,
+}
+
+impl SchedulerKind {
+    /// Parse from a config/CLI string.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "sync" | "barrier" | "lockstep" => SchedulerKind::Sync,
+            "async" | "event" | "event-driven" => SchedulerKind::Async,
+            other => bail!("unknown scheduler '{other}' (sync | async)"),
+        })
+    }
+
+    /// Stable display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulerKind::Sync => "sync",
+            SchedulerKind::Async => "async",
+        }
+    }
+}
+
+/// What one server step produced (returned by [`RoundOps::server_step`]).
+#[derive(Debug, Clone, Copy)]
+pub struct ServerOut {
+    /// Simulated seconds the downlink transfer took.
+    pub downlink_s: f64,
+    /// Batch loss.
+    pub loss: f64,
+    /// Correct predictions in the batch.
+    pub correct: u64,
+    /// Samples in the batch.
+    pub samples: u64,
+}
+
+/// The training-side operations a scheduler drives. Implemented by the
+/// trainer; all methods are device-local except `server_step`, which
+/// mutates shared server state and must be called serially (schedulers
+/// guarantee that).
+pub trait RoundOps {
+    /// Number of devices in the round.
+    fn n_devices(&self) -> usize;
+
+    /// Local steps each device runs per round (`batches_per_round`).
+    fn steps(&self) -> usize;
+
+    /// Simulated client compute seconds for one fan-out *or* one fan-in
+    /// phase on `dev` (profile-scaled).
+    fn compute_s(&self, dev: DeviceId) -> f64;
+
+    /// Client forward + codec encode + uplink charge for each listed
+    /// device (the implementation may fan work across its thread pool).
+    /// Returns each device's uplink transfer seconds, in `devs` order.
+    fn fanout(&mut self, devs: &[DeviceId]) -> Result<Vec<f64>>;
+
+    /// Server decode + train step + downlink charge for one device's
+    /// pending uplink.
+    fn server_step(&mut self, dev: DeviceId) -> Result<ServerOut>;
+
+    /// Gradient decode + client backward for each listed device.
+    fn fanin(&mut self, devs: &[DeviceId]) -> Result<()>;
+
+    /// Straggler drop: discard any in-flight state for `dev` so the next
+    /// round starts clean.
+    fn cancel(&mut self, dev: DeviceId);
+}
+
+/// What one round produced, scheduler-agnostic.
+#[derive(Debug, Clone)]
+pub struct RoundReport {
+    /// Sum of batch losses over executed server steps (event order).
+    pub loss_sum: f64,
+    /// Correct predictions over executed server steps.
+    pub correct: u64,
+    /// Samples over executed server steps.
+    pub samples: u64,
+    /// Server steps actually executed (dropped uplinks never run).
+    pub server_steps: u64,
+    /// Event-clock duration of the round (compute + transfers + queueing;
+    /// for deadline rounds, capped at the deadline).
+    pub sim_round_s: f64,
+    /// `completed[d]`: device `d` finished all its steps and participates
+    /// in this round's aggregation.
+    pub completed: Vec<bool>,
+}
+
+impl RoundReport {
+    /// Devices dropped by the straggler policy this round.
+    pub fn dropped(&self) -> usize {
+        self.completed.iter().filter(|&&c| !c).count()
+    }
+}
+
+/// One communication round's control flow.
+pub trait RoundScheduler: Send + Sync {
+    /// Stable display name.
+    fn name(&self) -> &'static str;
+
+    /// Drive one round over `ops`.
+    fn run_round(&self, ops: &mut dyn RoundOps) -> Result<RoundReport>;
+}
+
+/// Build the configured scheduler. Sync ignores the policy (it is
+/// inherently wait-all; the config layer rejects other combinations).
+pub fn build_scheduler(kind: SchedulerKind, policy: StragglerPolicy) -> Box<dyn RoundScheduler> {
+    match kind {
+        SchedulerKind::Sync => Box::new(SyncEventScheduler),
+        SchedulerKind::Async => Box::new(AsyncEventScheduler { policy }),
+    }
+}
+
+/// Lockstep phases on the event queue — bit-identical op sequence to the
+/// pre-transport engine (fan-out all → server in device-id order → fan-in
+/// all, per local step).
+pub struct SyncEventScheduler;
+
+impl RoundScheduler for SyncEventScheduler {
+    fn name(&self) -> &'static str {
+        "sync"
+    }
+
+    fn run_round(&self, ops: &mut dyn RoundOps) -> Result<RoundReport> {
+        let n = ops.n_devices();
+        let steps = ops.steps();
+        let all: Vec<DeviceId> = (0..n).collect();
+        let mut q = EventQueue::new();
+        let mut t = 0.0f64;
+        let (mut loss_sum, mut correct, mut samples, mut server_steps) = (0.0f64, 0u64, 0u64, 0u64);
+        for step in 0..steps {
+            let ups = ops.fanout(&all)?;
+            for d in 0..n {
+                q.push(t + ops.compute_s(d) + ups[d], d, Event::UplinkArrived { step });
+            }
+            // Barrier: every uplink lands before the server phase starts.
+            // The queue fixes the arrival order; lockstep mode then serves
+            // in device-id order regardless (legacy semantics).
+            let mut barrier_t = t;
+            while let Some(ev) = q.pop() {
+                barrier_t = barrier_t.max(ev.time);
+            }
+            let mut downs = vec![0.0f64; n];
+            // per-step partial sum, folded into the round total afterwards —
+            // the exact f64 fold order of the pre-transport engine, so
+            // reported losses stay bit-identical to it
+            let mut step_loss = 0.0f64;
+            for (d, down) in downs.iter_mut().enumerate() {
+                let out = ops.server_step(d)?;
+                step_loss += out.loss;
+                correct += out.correct;
+                samples += out.samples;
+                server_steps += 1;
+                *down = out.downlink_s;
+            }
+            loss_sum += step_loss;
+            for d in 0..n {
+                q.push(barrier_t + downs[d], d, Event::DownlinkArrived { step });
+            }
+            // Step ends when the slowest device has its gradient applied.
+            let mut ready_t = barrier_t;
+            while let Some(ev) = q.pop() {
+                ready_t = ready_t.max(ev.time + ops.compute_s(ev.device));
+            }
+            ops.fanin(&all)?;
+            t = ready_t;
+        }
+        Ok(RoundReport {
+            loss_sum,
+            correct,
+            samples,
+            server_steps,
+            sim_round_s: t,
+            completed: vec![true; n],
+        })
+    }
+}
+
+/// Event-driven rounds: devices pipeline local steps independently, the
+/// server consumes uplinks in arrival order, and the straggler policy
+/// closes the round.
+pub struct AsyncEventScheduler {
+    /// Round-close policy.
+    pub policy: StragglerPolicy,
+}
+
+impl RoundScheduler for AsyncEventScheduler {
+    fn name(&self) -> &'static str {
+        "async"
+    }
+
+    fn run_round(&self, ops: &mut dyn RoundOps) -> Result<RoundReport> {
+        let n = ops.n_devices();
+        let steps = ops.steps();
+        let mut completed = vec![false; n];
+        if n == 0 || steps == 0 {
+            return Ok(RoundReport {
+                loss_sum: 0.0,
+                correct: 0,
+                samples: 0,
+                server_steps: 0,
+                sim_round_s: 0.0,
+                completed: vec![true; n],
+            });
+        }
+        let deadline = match self.policy {
+            StragglerPolicy::DeadlineDrop { deadline_s } => Some(deadline_s),
+            _ => None,
+        };
+        let quorum = match self.policy {
+            StragglerPolicy::Quorum { k } => Some(k),
+            _ => None,
+        };
+
+        let mut q = EventQueue::new();
+        let (mut loss_sum, mut correct, mut samples, mut server_steps) = (0.0f64, 0u64, 0u64, 0u64);
+        let mut done = 0usize;
+        let mut close_t: Option<f64> = None;
+        let mut last_t = 0.0f64;
+
+        // Kick-off: every device starts its first local step at t = 0
+        // (one thread-parallel fan-out batch).
+        let all: Vec<DeviceId> = (0..n).collect();
+        let ups = ops.fanout(&all)?;
+        for d in 0..n {
+            q.push(ops.compute_s(d) + ups[d], d, Event::UplinkArrived { step: 0 });
+        }
+
+        while let Some(ev) = q.pop() {
+            if let Some(t_max) = deadline {
+                if ev.time > t_max {
+                    close_t = Some(t_max);
+                    break;
+                }
+            }
+            last_t = ev.time;
+            match ev.event {
+                Event::UplinkArrived { step } => {
+                    let out = ops.server_step(ev.device)?;
+                    loss_sum += out.loss;
+                    correct += out.correct;
+                    samples += out.samples;
+                    server_steps += 1;
+                    q.push(ev.time + out.downlink_s, ev.device, Event::DownlinkArrived { step });
+                }
+                Event::DownlinkArrived { step } => {
+                    // Batch ties: downlinks landing at the bit-same instant
+                    // run fan-in/fan-out through one worker-pool dispatch
+                    // (homogeneous fleets stay as parallel as lockstep mode).
+                    // Batch composition is event order — deterministic.
+                    let mut batch: Vec<(DeviceId, usize)> = vec![(ev.device, step)];
+                    loop {
+                        let tie = matches!(
+                            q.peek(),
+                            Some(next) if matches!(next.event, Event::DownlinkArrived { .. })
+                                && next.time.to_bits() == ev.time.to_bits()
+                        );
+                        if !tie {
+                            break;
+                        }
+                        let nev = q.pop().expect("peeked event");
+                        let Event::DownlinkArrived { step: s2 } = nev.event else {
+                            unreachable!("tie check admits only downlinks")
+                        };
+                        batch.push((nev.device, s2));
+                    }
+                    let devs: Vec<DeviceId> = batch.iter().map(|&(d, _)| d).collect();
+                    ops.fanin(&devs)?;
+                    let continuing: Vec<(DeviceId, usize)> = batch
+                        .iter()
+                        .filter(|&&(_, s)| s + 1 < steps)
+                        .copied()
+                        .collect();
+                    if !continuing.is_empty() {
+                        let cont_devs: Vec<DeviceId> =
+                            continuing.iter().map(|&(d, _)| d).collect();
+                        let ups = ops.fanout(&cont_devs)?;
+                        for (i, &(d, s)) in continuing.iter().enumerate() {
+                            // fan-in compute + next fan-out compute + uplink
+                            q.push(
+                                ev.time + 2.0 * ops.compute_s(d) + ups[i],
+                                d,
+                                Event::UplinkArrived { step: s + 1 },
+                            );
+                        }
+                    }
+                    for &(d, s) in &batch {
+                        if s + 1 == steps {
+                            q.push(ev.time + ops.compute_s(d), d, Event::DeviceDone);
+                        }
+                    }
+                }
+                Event::DeviceDone => {
+                    completed[ev.device] = true;
+                    done += 1;
+                    if let Some(k) = quorum {
+                        if done >= k {
+                            close_t = Some(ev.time);
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        q.clear();
+        for (d, &c) in completed.iter().enumerate() {
+            if !c {
+                ops.cancel(d);
+            }
+        }
+        Ok(RoundReport {
+            loss_sum,
+            correct,
+            samples,
+            server_steps,
+            sim_round_s: close_t.unwrap_or(last_t),
+            completed,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Pure-timing mock: per-device compute/uplink/downlink costs, plus an
+    /// op log so tests can pin exact scheduling decisions.
+    struct MockOps {
+        steps: usize,
+        compute: Vec<f64>,
+        up_s: Vec<f64>,
+        down_s: Vec<f64>,
+        log: Vec<String>,
+        cancelled: Vec<DeviceId>,
+    }
+
+    impl MockOps {
+        fn uniform(n: usize, steps: usize, c: f64, up: f64, down: f64) -> Self {
+            MockOps {
+                steps,
+                compute: vec![c; n],
+                up_s: vec![up; n],
+                down_s: vec![down; n],
+                log: Vec::new(),
+                cancelled: Vec::new(),
+            }
+        }
+
+        fn server_order(&self) -> Vec<DeviceId> {
+            self.log
+                .iter()
+                .filter_map(|l| l.strip_prefix("server:").map(|d| d.parse().unwrap()))
+                .collect()
+        }
+    }
+
+    impl RoundOps for MockOps {
+        fn n_devices(&self) -> usize {
+            self.compute.len()
+        }
+        fn steps(&self) -> usize {
+            self.steps
+        }
+        fn compute_s(&self, dev: DeviceId) -> f64 {
+            self.compute[dev]
+        }
+        fn fanout(&mut self, devs: &[DeviceId]) -> Result<Vec<f64>> {
+            self.log.push(format!("fanout:{devs:?}"));
+            Ok(devs.iter().map(|&d| self.up_s[d]).collect())
+        }
+        fn server_step(&mut self, dev: DeviceId) -> Result<ServerOut> {
+            self.log.push(format!("server:{dev}"));
+            Ok(ServerOut {
+                downlink_s: self.down_s[dev],
+                loss: 1.0 + dev as f64,
+                correct: 1,
+                samples: 2,
+            })
+        }
+        fn fanin(&mut self, devs: &[DeviceId]) -> Result<()> {
+            self.log.push(format!("fanin:{devs:?}"));
+            Ok(())
+        }
+        fn cancel(&mut self, dev: DeviceId) {
+            self.cancelled.push(dev);
+        }
+    }
+
+    #[test]
+    fn scheduler_kind_parses() {
+        assert_eq!(SchedulerKind::parse("sync").unwrap(), SchedulerKind::Sync);
+        assert_eq!(SchedulerKind::parse("ASYNC").unwrap(), SchedulerKind::Async);
+        assert!(SchedulerKind::parse("warp").is_err());
+        assert_eq!(SchedulerKind::Async.name(), "async");
+    }
+
+    #[test]
+    fn sync_runs_lockstep_phases_in_device_order() {
+        let mut ops = MockOps::uniform(2, 2, 1.0, 2.0, 4.0);
+        let report = SyncEventScheduler.run_round(&mut ops).unwrap();
+        assert_eq!(
+            ops.log,
+            vec![
+                "fanout:[0, 1]",
+                "server:0",
+                "server:1",
+                "fanin:[0, 1]",
+                "fanout:[0, 1]",
+                "server:0",
+                "server:1",
+                "fanin:[0, 1]",
+            ]
+        );
+        assert_eq!(report.server_steps, 4);
+        assert_eq!(report.completed, vec![true, true]);
+        assert_eq!(report.dropped(), 0);
+        // per step: fanout compute 1 + up 2 (barrier 3), down 4 + fanin 1
+        // => 8 per step, 2 steps = 16 (integers: exact in f64)
+        assert_eq!(report.sim_round_s, 16.0);
+        // loss fold order: (1 + 2) per step-phase
+        assert_eq!(report.loss_sum, 6.0);
+    }
+
+    #[test]
+    fn async_server_consumes_in_arrival_order() {
+        // arrival = compute + up: dev2 lands first, then dev0, then dev1
+        let mut ops = MockOps {
+            steps: 1,
+            compute: vec![1.0, 1.0, 1.0],
+            up_s: vec![2.0, 5.0, 0.5],
+            down_s: vec![1.0; 3],
+            log: Vec::new(),
+            cancelled: Vec::new(),
+        };
+        let report = AsyncEventScheduler {
+            policy: StragglerPolicy::WaitAll,
+        }
+        .run_round(&mut ops)
+        .unwrap();
+        assert_eq!(ops.server_order(), vec![2, 0, 1]);
+        assert_eq!(report.completed, vec![true, true, true]);
+        // slowest chain: dev1 done at 1 + 5 (up) + 1 (down) + 1 (fanin) = 8
+        assert_eq!(report.sim_round_s, 8.0);
+        assert!(ops.cancelled.is_empty());
+    }
+
+    #[test]
+    fn async_wait_all_pipeline_timing() {
+        // single device, 2 steps: up@3, down@7, next up@11, down@15, done@16
+        let mut ops = MockOps::uniform(1, 2, 1.0, 2.0, 4.0);
+        let report = AsyncEventScheduler {
+            policy: StragglerPolicy::WaitAll,
+        }
+        .run_round(&mut ops)
+        .unwrap();
+        assert_eq!(report.server_steps, 2);
+        assert_eq!(report.sim_round_s, 16.0);
+        assert_eq!(report.completed, vec![true]);
+    }
+
+    #[test]
+    fn async_deadline_drops_unfinished_devices() {
+        let mut ops = MockOps {
+            steps: 1,
+            compute: vec![1.0, 10.0],
+            up_s: vec![1.0, 10.0],
+            down_s: vec![1.0, 10.0],
+            log: Vec::new(),
+            cancelled: Vec::new(),
+        };
+        let report = AsyncEventScheduler {
+            policy: StragglerPolicy::DeadlineDrop { deadline_s: 5.0 },
+        }
+        .run_round(&mut ops)
+        .unwrap();
+        // dev0: up@2, down@3, done@4 — inside the deadline
+        // dev1: up@20 — never processed
+        assert_eq!(report.completed, vec![true, false]);
+        assert_eq!(report.dropped(), 1);
+        assert_eq!(report.server_steps, 1, "dropped uplink never hits the server");
+        assert_eq!(ops.server_order(), vec![0]);
+        assert_eq!(ops.cancelled, vec![1]);
+        assert_eq!(report.sim_round_s, 5.0, "round closes at the deadline");
+    }
+
+    #[test]
+    fn async_deadline_everyone_drops_when_too_tight() {
+        let mut ops = MockOps::uniform(3, 1, 1.0, 1.0, 1.0);
+        let report = AsyncEventScheduler {
+            policy: StragglerPolicy::DeadlineDrop { deadline_s: 1e-6 },
+        }
+        .run_round(&mut ops)
+        .unwrap();
+        assert_eq!(report.completed, vec![false; 3]);
+        assert_eq!(report.server_steps, 0);
+        assert_eq!(ops.cancelled, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn async_quorum_closes_on_kth_completion_with_seq_ties() {
+        // identical devices: completions tie at the same instant; the
+        // deterministic seq order makes devices 0 and 1 the quorum
+        let mut ops = MockOps::uniform(4, 1, 1.0, 1.0, 1.0);
+        let report = AsyncEventScheduler {
+            policy: StragglerPolicy::Quorum { k: 2 },
+        }
+        .run_round(&mut ops)
+        .unwrap();
+        assert_eq!(report.completed, vec![true, true, false, false]);
+        assert_eq!(ops.cancelled, vec![2, 3]);
+        // done at fanout 1 + up 1 + down 1 + fanin 1 = 4
+        assert_eq!(report.sim_round_s, 4.0);
+    }
+
+    #[test]
+    fn async_quorum_equal_to_n_is_wait_all() {
+        let mk = || MockOps::uniform(3, 2, 0.5, 1.0, 1.0);
+        let mut a = mk();
+        let ra = AsyncEventScheduler {
+            policy: StragglerPolicy::Quorum { k: 3 },
+        }
+        .run_round(&mut a)
+        .unwrap();
+        let mut b = mk();
+        let rb = AsyncEventScheduler {
+            policy: StragglerPolicy::WaitAll,
+        }
+        .run_round(&mut b)
+        .unwrap();
+        assert_eq!(ra.completed, rb.completed);
+        assert_eq!(ra.server_steps, rb.server_steps);
+        assert_eq!(ra.sim_round_s.to_bits(), rb.sim_round_s.to_bits());
+        assert_eq!(a.log, b.log);
+    }
+
+    #[test]
+    fn async_homogeneous_ties_batch_but_keep_server_id_order() {
+        // homogeneous fleet: every uplink of a step lands at the same
+        // instant, so the server sees device-id order — the property that
+        // makes async wait-all match sync byte-for-byte
+        let mut ops = MockOps::uniform(3, 2, 1.0, 2.0, 3.0);
+        let report = AsyncEventScheduler {
+            policy: StragglerPolicy::WaitAll,
+        }
+        .run_round(&mut ops)
+        .unwrap();
+        assert_eq!(ops.server_order(), vec![0, 1, 2, 0, 1, 2]);
+        // tie-batched fan-in/fan-out: one dispatch for all three devices
+        assert!(ops.log.contains(&"fanin:[0, 1, 2]".to_string()));
+        assert_eq!(report.completed, vec![true; 3]);
+    }
+
+    #[test]
+    fn async_is_deterministic_across_runs() {
+        let mk = || MockOps {
+            steps: 3,
+            compute: vec![0.25, 1.0, 0.5, 2.0],
+            up_s: vec![0.125, 0.5, 2.0, 0.0625],
+            down_s: vec![0.5, 0.25, 1.0, 0.125],
+            log: Vec::new(),
+            cancelled: Vec::new(),
+        };
+        let run = |policy: StragglerPolicy| {
+            let mut ops = mk();
+            let r = AsyncEventScheduler { policy }.run_round(&mut ops).unwrap();
+            (
+                ops.log.clone(),
+                ops.cancelled.clone(),
+                r.completed.clone(),
+                r.loss_sum.to_bits(),
+                r.sim_round_s.to_bits(),
+                r.server_steps,
+            )
+        };
+        for policy in [
+            StragglerPolicy::WaitAll,
+            StragglerPolicy::DeadlineDrop { deadline_s: 6.0 },
+            StragglerPolicy::Quorum { k: 2 },
+        ] {
+            assert_eq!(run(policy), run(policy), "{}", policy.name());
+        }
+    }
+
+    #[test]
+    fn build_scheduler_routes_kinds() {
+        assert_eq!(
+            build_scheduler(SchedulerKind::Sync, StragglerPolicy::WaitAll).name(),
+            "sync"
+        );
+        assert_eq!(
+            build_scheduler(SchedulerKind::Async, StragglerPolicy::Quorum { k: 1 }).name(),
+            "async"
+        );
+    }
+}

@@ -5,6 +5,15 @@
 //! reproduce the `workers = 1` run exactly: `TrainingHistory`, `CommStats`,
 //! and final client/server parameters, all compared bit-for-bit.
 //!
+//! The same contract covers the **async round scheduler**: for multiple
+//! seeds, codecs, and straggler policies over a heterogeneous `wifi/lte`
+//! fleet, simulated-time event ordering — not thread ordering — is the
+//! source of truth, so every worker count reproduces the `workers = 1`
+//! run exactly. Additionally, async with homogeneous profiles and the
+//! `wait-all` policy must match sync-mode byte totals (and parameters)
+//! exactly for fixed-rate codecs, and round-1 uplink totals for the
+//! content-adaptive ones.
+//!
 //! Runs on the sim executor backend (pure Rust, manifest only), so this
 //! test needs no XLA runtime and no `make artifacts` — it always runs.
 
@@ -12,6 +21,7 @@ use slfac::config::{ExperimentConfig, SyncMode};
 use slfac::coordinator::{TrainOutcome, Trainer};
 use slfac::net::CommStats;
 use slfac::runtime::{write_sim_manifest, ExecutorHandle, HostTensor, SimManifestSpec};
+use slfac::transport::{SchedulerKind, StragglerPolicy};
 
 const BATCH: usize = 8;
 
@@ -149,6 +159,159 @@ fn different_seeds_actually_diverge() {
         param_bits(&b.client),
         "different seeds produced identical client params"
     );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// --- async scheduler -----------------------------------------------------
+
+fn async_cfg(
+    dir: &str,
+    codec: &str,
+    seed: u64,
+    workers: usize,
+    profile: &str,
+    policy: StragglerPolicy,
+) -> ExperimentConfig {
+    let mut c = cfg(dir, codec, SyncMode::ParallelFedAvg, seed, workers);
+    c.name = format!("pardet_async_{codec}_{seed}_{workers}_{}", policy.name());
+    c.scheduler = SchedulerKind::Async;
+    c.profile = profile.into();
+    c.straggler = policy;
+    c
+}
+
+#[test]
+fn async_scheduler_is_bit_transparent() {
+    // ≥2 seeds × ≥2 codecs × ≥3 straggler policies on a heterogeneous
+    // wifi/lte fleet: workers = 4 and workers = 0 must reproduce the
+    // workers = 1 run bit-for-bit (history, comm stats, parameters)
+    let dir = sim_dir("async");
+    for &seed in &[7u64, 1234] {
+        for codec in ["slfac", "tk-sl"] {
+            for policy in [
+                StragglerPolicy::WaitAll,
+                // drops the lte half of the fleet mid-flight (wifi
+                // completes in ~0.03 s sim, lte needs ~0.2 s)
+                StragglerPolicy::DeadlineDrop { deadline_s: 0.05 },
+                StragglerPolicy::Quorum { k: 3 },
+            ] {
+                let reference = run(async_cfg(&dir, codec, seed, 1, "wifi/lte", policy));
+                for workers in [4usize, 0] {
+                    let got = run(async_cfg(&dir, codec, seed, workers, "wifi/lte", policy));
+                    assert_bit_identical(
+                        &reference,
+                        &got,
+                        &format!(
+                            "async seed={seed} codec={codec} policy={} workers={workers}",
+                            policy.name()
+                        ),
+                    );
+                }
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn async_wait_all_homogeneous_matches_sync_exactly() {
+    // Fixed-rate codecs (payload size a pure function of the shape):
+    // with homogeneous profiles every uplink of a step lands at the same
+    // simulated instant, ties resolve to device-id order, and async
+    // wait-all must match the sync scheduler exactly — byte totals,
+    // per-round bytes, AND final parameters. (Content-adaptive codecs
+    // like slfac have content-dependent payload sizes, so arrival order —
+    // and hence server order — legitimately diverges; they are covered by
+    // the round-1 uplink check below and the bit-transparency test.)
+    let dir = sim_dir("async_vs_sync");
+    for codec in ["identity", "uniform"] {
+        let sync = run(cfg(&dir, codec, SyncMode::ParallelFedAvg, 99, 2));
+        let mut ac = cfg(&dir, codec, SyncMode::ParallelFedAvg, 99, 2);
+        ac.scheduler = SchedulerKind::Async;
+        let asy = run(ac);
+        assert_eq!(
+            sync.outcome.comm.uplink_bytes, asy.outcome.comm.uplink_bytes,
+            "{codec}: uplink totals"
+        );
+        assert_eq!(
+            sync.outcome.comm.downlink_bytes, asy.outcome.comm.downlink_bytes,
+            "{codec}: downlink totals"
+        );
+        for (a, b) in sync
+            .outcome
+            .history
+            .rounds
+            .iter()
+            .zip(&asy.outcome.history.rounds)
+        {
+            assert_eq!(a.uplink_bytes, b.uplink_bytes, "{codec}: per-round uplink");
+            assert_eq!(a.downlink_bytes, b.downlink_bytes, "{codec}: per-round downlink");
+            assert_eq!(b.dropped_devices, 0, "{codec}: wait-all never drops");
+        }
+        assert_eq!(
+            param_bits(&sync.client),
+            param_bits(&asy.client),
+            "{codec}: client params"
+        );
+        assert_eq!(
+            param_bits(&sync.server),
+            param_bits(&asy.server),
+            "{codec}: server params"
+        );
+    }
+    // Adaptive codecs: round-1 uplink bytes are device-local (client
+    // state is the shared init aggregate), so they must still agree.
+    for codec in ["slfac", "tk-sl"] {
+        let mk = |sched: SchedulerKind| {
+            let mut c = cfg(&dir, codec, SyncMode::ParallelFedAvg, 99, 2);
+            c.rounds = 1;
+            c.scheduler = sched;
+            c
+        };
+        let sync = run(mk(SchedulerKind::Sync));
+        let asy = run(mk(SchedulerKind::Async));
+        assert_eq!(
+            sync.outcome.history.rounds[0].uplink_bytes,
+            asy.outcome.history.rounds[0].uplink_bytes,
+            "{codec}: round-1 uplink bytes"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn async_quorum_drops_deterministic_count() {
+    // homogeneous fleet + quorum 2-of-4: completions tie, the seq order
+    // resolves them, so exactly 2 devices drop every round
+    let dir = sim_dir("quorum");
+    let mut c = cfg(&dir, "slfac", SyncMode::ParallelFedAvg, 11, 2);
+    c.scheduler = SchedulerKind::Async;
+    c.straggler = StragglerPolicy::Quorum { k: 2 };
+    let r = run(c);
+    assert_eq!(r.outcome.history.rounds.len(), 2);
+    for m in &r.outcome.history.rounds {
+        assert_eq!(m.dropped_devices, 2, "round {}", m.round);
+        assert!(m.sim_time_s > 0.0);
+        assert!(m.uplink_bytes > 0);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn async_deadline_all_dropped_is_graceful() {
+    // a deadline tighter than any uplink: every device drops, no server
+    // step runs, the aggregate is kept, and the run still completes
+    let dir = sim_dir("deadline_all");
+    let mut c = cfg(&dir, "slfac", SyncMode::ParallelFedAvg, 5, 2);
+    c.scheduler = SchedulerKind::Async;
+    c.straggler = StragglerPolicy::DeadlineDrop { deadline_s: 1e-9 };
+    let r = run(c);
+    for m in &r.outcome.history.rounds {
+        assert_eq!(m.dropped_devices, 4, "all devices drop");
+        assert!(m.uplink_bytes > 0, "fan-out bytes were already on the wire");
+        assert_eq!(m.downlink_bytes, 0, "no server step ⇒ no downlink");
+        assert_eq!(m.train_loss, 0.0, "no executed server steps");
+    }
     let _ = std::fs::remove_dir_all(&dir);
 }
 
