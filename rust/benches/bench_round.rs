@@ -22,7 +22,7 @@ use slfac::bench::{BenchResult, Bencher};
 use slfac::config::ExperimentConfig;
 use slfac::coordinator::Trainer;
 use slfac::runtime::{write_sim_manifest, ExecutorHandle, SimManifestSpec};
-use slfac::transport::{SchedulerKind, StragglerPolicy};
+use slfac::transport::{ClientSampling, SchedulerKind, StragglerPolicy, UplinkMode};
 
 const SIM_BATCH: usize = 8;
 
@@ -183,6 +183,38 @@ fn bench_async_scenarios(b: &mut Bencher) {
             cfg.scheduler = kind;
             cfg.profile = "wifi/lte".into();
             cfg.straggler = policy;
+            let mut trainer = Trainer::new(cfg, exec.clone()).unwrap();
+            let _ = trainer.run().unwrap(); // warm
+            b.bench(&format!("round/{label}/devices={devices}"), || {
+                let _ = trainer.run().unwrap();
+            });
+        }
+    }
+
+    b.section("contention model: shared uplink, server service, client sampling");
+    for devices in [64usize, 256] {
+        let contention: [(&str, UplinkMode, f64, ClientSampling); 3] = [
+            // every uplink contends for one 100 Mbit/s cell + a busy server
+            ("shared+service", UplinkMode::Shared, 0.001, ClientSampling::Full),
+            // classic FedAvg-style 25% participation
+            ("sampled-25pct", UplinkMode::Private, 0.0, ClientSampling::Fraction(0.25)),
+            // the full congestion stack
+            (
+                "shared+service+sampled",
+                UplinkMode::Shared,
+                0.001,
+                ClientSampling::Fraction(0.25),
+            ),
+        ];
+        for (label, uplink, service_s, sampling) in contention {
+            let mut cfg = sim_cfg(&dir, "slfac", devices, 0);
+            cfg.name = format!("bench_{}_{}d", label.replace('+', "_"), devices);
+            cfg.batches_per_round = 1;
+            cfg.train_samples = 16 * devices;
+            cfg.scheduler = SchedulerKind::Async;
+            cfg.uplink = uplink;
+            cfg.server_service_s = service_s;
+            cfg.sampling = sampling;
             let mut trainer = Trainer::new(cfg, exec.clone()).unwrap();
             let _ = trainer.run().unwrap(); // warm
             b.bench(&format!("round/{label}/devices={devices}"), || {

@@ -7,7 +7,7 @@
 
 use crate::codec::CodecParams;
 use crate::json::Json;
-use crate::transport::{LinkConfig, SchedulerKind, StragglerPolicy};
+use crate::transport::{ClientSampling, LinkConfig, SchedulerKind, StragglerPolicy, UplinkMode};
 use anyhow::{bail, Context, Result};
 
 /// Which dataset preset to use (selects the artifact set too).
@@ -107,6 +107,18 @@ pub struct ExperimentConfig {
     pub profile: String,
     /// Straggler policy for async rounds (`wait-all` default).
     pub straggler: StragglerPolicy,
+    /// Uplink contention model: `private` per-device pipes (default) or
+    /// one `shared` pipe concurrent transfers split fairly.
+    pub uplink: UplinkMode,
+    /// Capacity of the shared uplink pipe in bits/s; `None` inherits the
+    /// base link's `uplink_mbps`. Only meaningful with `uplink = shared`.
+    pub shared_uplink_bps: Option<f64>,
+    /// Simulated seconds one batch occupies the server (uplinks queue for
+    /// this serial resource; `0` = infinitely fast server, the default).
+    pub server_service_s: f64,
+    /// Per-round client sampling (`sample_fraction` / `sample_k` keys;
+    /// default: every device participates every round).
+    pub sampling: ClientSampling,
     /// Simulated client compute seconds per fan-out/fan-in phase on a
     /// reference (multiplier 1.0) device.
     pub base_compute_s: f64,
@@ -141,6 +153,10 @@ impl Default for ExperimentConfig {
             scheduler: SchedulerKind::Sync,
             profile: "config".into(),
             straggler: StragglerPolicy::WaitAll,
+            uplink: UplinkMode::Private,
+            shared_uplink_bps: None,
+            server_service_s: 0.0,
+            sampling: ClientSampling::Full,
             base_compute_s: 0.002,
             seed: 1234,
             artifacts_dir: "artifacts".into(),
@@ -162,11 +178,13 @@ impl ExperimentConfig {
     pub fn from_json(json: &Json) -> Result<Self> {
         let obj = json.as_obj().context("config root must be an object")?;
         let mut cfg = ExperimentConfig::default();
-        // straggler policy parts may arrive in any key order; build after
-        // the loop
+        // straggler/sampling parts may arrive in any key order; build
+        // after the loop
         let mut straggler_name: Option<String> = None;
         let mut deadline_s: Option<f64> = None;
         let mut quorum_k: Option<usize> = None;
+        let mut sample_fraction: Option<f64> = None;
+        let mut sample_k: Option<usize> = None;
         for (key, v) in obj {
             match key.as_str() {
                 "name" => cfg.name = v.as_str().context("name: string")?.to_string(),
@@ -237,6 +255,20 @@ impl ExperimentConfig {
                 }
                 "deadline_s" => deadline_s = Some(v.as_f64().context("deadline_s")?),
                 "quorum_k" => quorum_k = Some(v.as_usize().context("quorum_k")?),
+                "uplink" => {
+                    cfg.uplink = UplinkMode::parse(v.as_str().context("uplink: string")?)?
+                }
+                "shared_uplink_mbps" => {
+                    cfg.shared_uplink_bps =
+                        Some(v.as_f64().context("shared_uplink_mbps")? * 1e6)
+                }
+                "server_service_s" => {
+                    cfg.server_service_s = v.as_f64().context("server_service_s")?
+                }
+                "sample_fraction" => {
+                    sample_fraction = Some(v.as_f64().context("sample_fraction")?)
+                }
+                "sample_k" => sample_k = Some(v.as_usize().context("sample_k")?),
                 "base_compute_s" => {
                     cfg.base_compute_s = v.as_f64().context("base_compute_s")?
                 }
@@ -255,21 +287,35 @@ impl ExperimentConfig {
         } else if deadline_s.is_some() || quorum_k.is_some() {
             bail!("deadline_s/quorum_k given without a 'straggler' policy");
         }
+        cfg.sampling = ClientSampling::from_parts(sample_fraction, sample_k)?;
         cfg.codec_params.seed = cfg.seed;
         cfg.validate()?;
         Ok(cfg)
     }
 
-    /// Sanity-check ranges.
+    /// Capacity of the shared uplink pipe: the explicit
+    /// `shared_uplink_mbps` key, else the base link's uplink bandwidth.
+    pub fn shared_capacity_bps(&self) -> f64 {
+        self.shared_uplink_bps.unwrap_or(self.link.uplink_bps)
+    }
+
+    /// Sanity-check ranges and key combinations. Every rejection names
+    /// the offending key(s) and the value(s) that tripped it.
     pub fn validate(&self) -> Result<()> {
         if self.devices == 0 {
-            bail!("devices must be > 0");
+            bail!("devices must be > 0, got 0");
         }
-        if self.rounds == 0 || self.batches_per_round == 0 || self.batch_size == 0 {
-            bail!("rounds, batches_per_round, batch_size must be > 0");
+        if self.rounds == 0 {
+            bail!("rounds must be > 0, got 0");
+        }
+        if self.batches_per_round == 0 {
+            bail!("batches_per_round must be > 0, got 0");
+        }
+        if self.batch_size == 0 {
+            bail!("batch_size must be > 0, got 0");
         }
         if !(self.codec_params.theta > 0.0 && self.codec_params.theta <= 1.0) {
-            bail!("theta must be in (0, 1]");
+            bail!("theta must be in (0, 1], got {}", self.codec_params.theta);
         }
         crate::quant::AllocationConfig {
             b_min: self.codec_params.b_min,
@@ -278,20 +324,102 @@ impl ExperimentConfig {
         .validate()
         .map_err(|e| anyhow::anyhow!(e))?;
         if self.train_samples < self.devices {
-            bail!("fewer training samples than devices");
+            bail!(
+                "train_samples = {} is smaller than devices = {} — every device needs data",
+                self.train_samples,
+                self.devices
+            );
         }
         if self.lr <= 0.0 || self.lr > 10.0 {
-            bail!("implausible learning rate {}", self.lr);
+            bail!("lr must be in (0, 10], got {}", self.lr);
         }
         if self.scheduler == SchedulerKind::Async && self.sync == SyncMode::Sequential {
-            bail!("the async scheduler requires parallel (SplitFed) sync mode");
+            bail!(
+                "scheduler = \"async\" requires sync = \"parallel\" (SplitFed), got \
+                 sync = \"sequential\" — sequential SL is inherently serial"
+            );
         }
         if self.scheduler == SchedulerKind::Sync && self.straggler != StragglerPolicy::WaitAll {
-            bail!("straggler policies require scheduler = async");
+            bail!(
+                "straggler = \"{}\" requires scheduler = \"async\", got \
+                 scheduler = \"sync\" (lockstep rounds are inherently wait-all)",
+                self.straggler.name()
+            );
         }
         self.straggler.validate(self.devices)?;
         if !(self.base_compute_s.is_finite() && self.base_compute_s >= 0.0) {
             bail!("base_compute_s must be finite and >= 0, got {}", self.base_compute_s);
+        }
+        if !(self.server_service_s.is_finite() && self.server_service_s >= 0.0) {
+            bail!(
+                "server_service_s must be finite and >= 0, got {}",
+                self.server_service_s
+            );
+        }
+        match self.uplink {
+            UplinkMode::Private => {
+                if let Some(bps) = self.shared_uplink_bps {
+                    bail!(
+                        "shared_uplink_mbps = {} requires uplink = \"shared\", got \
+                         uplink = \"private\"",
+                        bps / 1e6
+                    );
+                }
+            }
+            UplinkMode::Shared => {
+                let cap = self.shared_capacity_bps();
+                if !(cap.is_finite() && cap > 0.0) {
+                    // name the key the capacity actually came from
+                    match self.shared_uplink_bps {
+                        Some(_) => bail!(
+                            "uplink = \"shared\" needs a positive finite capacity, \
+                             got shared_uplink_mbps = {}",
+                            cap / 1e6
+                        ),
+                        None => bail!(
+                            "uplink = \"shared\" needs a positive finite capacity, \
+                             got uplink_mbps = {} (shared_uplink_mbps is unset, so \
+                             the capacity inherits uplink_mbps)",
+                            cap / 1e6
+                        ),
+                    }
+                }
+                if self.link.jitter > 0.0 {
+                    bail!(
+                        "uplink = \"shared\" does not compose with link jitter \
+                         (jitter = {}) — the fair-share pipe is jitter-free",
+                        self.link.jitter
+                    );
+                }
+                if self.sync == SyncMode::Sequential {
+                    bail!(
+                        "uplink = \"shared\" requires sync = \"parallel\", got \
+                         sync = \"sequential\" — serial hand-off never contends \
+                         for the pipe"
+                    );
+                }
+            }
+        }
+        self.sampling.validate(self.devices)?;
+        if let StragglerPolicy::Quorum { k } = self.straggler {
+            // straggler.validate already bounded k by the fleet size; only
+            // sampling can shrink the per-round participant count below it
+            let sampled_value = match self.sampling {
+                ClientSampling::Full => None,
+                ClientSampling::Fraction(f) => Some(f.to_string()),
+                ClientSampling::Count(c) => Some(c.to_string()),
+            };
+            if let Some(value) = sampled_value {
+                let participants = self.sampling.effective_k(self.devices);
+                if k > participants {
+                    bail!(
+                        "quorum_k = {k} exceeds the {participants} devices that \
+                         {} = {value} samples per round — the quorum could never \
+                         be reached",
+                        self.sampling.name(),
+                    );
+                }
+            }
         }
         // profile spec must parse and assign cleanly at this device count
         crate::transport::assign_profiles(&self.profile, self.devices, self.link)?;
@@ -358,6 +486,23 @@ impl ExperimentConfig {
             }
             StragglerPolicy::Quorum { k } => {
                 m.insert("quorum_k".into(), Json::Num(k as f64));
+            }
+        }
+        m.insert("uplink".into(), Json::Str(self.uplink.name().into()));
+        if let Some(bps) = self.shared_uplink_bps {
+            m.insert("shared_uplink_mbps".into(), Json::Num(bps / 1e6));
+        }
+        m.insert(
+            "server_service_s".into(),
+            Json::Num(self.server_service_s),
+        );
+        match self.sampling {
+            ClientSampling::Full => {}
+            ClientSampling::Fraction(f) => {
+                m.insert("sample_fraction".into(), Json::Num(f));
+            }
+            ClientSampling::Count(k) => {
+                m.insert("sample_k".into(), Json::Num(k as f64));
             }
         }
         m.insert("base_compute_s".into(), Json::Num(self.base_compute_s));
@@ -480,6 +625,120 @@ mod tests {
                 "should reject {bad}"
             );
         }
+    }
+
+    #[test]
+    fn contention_keys_parse_and_roundtrip() {
+        let json = Json::parse(
+            r#"{"uplink": "shared", "shared_uplink_mbps": 40,
+                "server_service_s": 0.003, "sample_fraction": 0.5}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&json).unwrap();
+        assert_eq!(cfg.uplink, UplinkMode::Shared);
+        assert!((cfg.shared_capacity_bps() - 40e6).abs() < 1.0);
+        assert!((cfg.server_service_s - 0.003).abs() < 1e-12);
+        assert_eq!(cfg.sampling, ClientSampling::Fraction(0.5));
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.uplink, cfg.uplink);
+        assert_eq!(back.shared_uplink_bps, cfg.shared_uplink_bps);
+        assert_eq!(back.server_service_s, cfg.server_service_s);
+        assert_eq!(back.sampling, cfg.sampling);
+
+        // shared capacity inherits uplink_mbps when not given
+        let json = Json::parse(r#"{"uplink": "shared", "uplink_mbps": 25}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&json).unwrap();
+        assert_eq!(cfg.shared_uplink_bps, None);
+        assert!((cfg.shared_capacity_bps() - 25e6).abs() < 1.0);
+
+        let json = Json::parse(r#"{"sample_k": 3}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&json).unwrap();
+        assert_eq!(cfg.sampling, ClientSampling::Count(3));
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.sampling, cfg.sampling);
+    }
+
+    #[test]
+    fn contention_misconfigurations_rejected() {
+        for bad in [
+            // shared capacity without shared mode
+            r#"{"shared_uplink_mbps": 40}"#,
+            // shared pipe is jitter-free
+            r#"{"uplink": "shared", "jitter": 0.1}"#,
+            // sequential SL never contends
+            r#"{"uplink": "shared", "sync": "sequential"}"#,
+            // zero capacity
+            r#"{"uplink": "shared", "shared_uplink_mbps": 0}"#,
+            // unknown mode
+            r#"{"uplink": "token-ring"}"#,
+            // service time must be finite and non-negative
+            r#"{"server_service_s": -0.5}"#,
+            // sample_fraction outside (0, 1]
+            r#"{"sample_fraction": 0.0}"#,
+            r#"{"sample_fraction": 1.5}"#,
+            r#"{"sample_fraction": -0.25}"#,
+            // sample_k = 0
+            r#"{"sample_k": 0}"#,
+            // two spellings of one knob
+            r#"{"sample_fraction": 0.5, "sample_k": 2}"#,
+            // quorum larger than the sampled participant count (5 devices
+            // * 0.4 = 2 participants < quorum 3)
+            r#"{"scheduler": "async", "straggler": "quorum", "quorum_k": 3,
+                "sample_fraction": 0.4}"#,
+        ] {
+            let json = Json::parse(bad).unwrap();
+            assert!(
+                ExperimentConfig::from_json(&json).is_err(),
+                "should reject {bad}"
+            );
+        }
+        // sample_k >= devices is NOT an error: it degrades to full
+        // participation
+        let json = Json::parse(r#"{"sample_k": 64}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&json).is_ok());
+    }
+
+    #[test]
+    fn validation_errors_name_the_offending_key() {
+        let cases = [
+            (r#"{"rounds": 0}"#, "rounds"),
+            (r#"{"batches_per_round": 0}"#, "batches_per_round"),
+            (r#"{"theta": 1.5}"#, "theta"),
+            (r#"{"lr": -1}"#, "lr"),
+            (r#"{"scheduler": "async", "sync": "sequential"}"#, "scheduler"),
+            (r#"{"straggler": "quorum", "quorum_k": 2}"#, "straggler"),
+            (r#"{"sample_fraction": 1.5}"#, "sample_fraction"),
+            (r#"{"uplink": "shared", "jitter": 0.2}"#, "jitter"),
+            (r#"{"shared_uplink_mbps": 10}"#, "shared_uplink_mbps"),
+            // a bad *inherited* capacity must blame the key the user set
+            // (uplink_mbps), not the one they never wrote
+            (r#"{"uplink": "shared", "uplink_mbps": 0}"#, "uplink_mbps"),
+            (r#"{"server_service_s": -1}"#, "server_service_s"),
+            (r#"{"train_samples": 3, "devices": 5}"#, "train_samples"),
+        ];
+        for (bad, key) in cases {
+            let json = Json::parse(bad).unwrap();
+            let err = format!("{:#}", ExperimentConfig::from_json(&json).unwrap_err());
+            assert!(
+                err.contains(key),
+                "error for {bad} should name '{key}', got: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn shipped_configs_validate() {
+        // every preset in configs/ must load and cross-validate cleanly
+        let mut seen = 0;
+        for entry in std::fs::read_dir("configs").expect("configs/ exists") {
+            let p = entry.unwrap().path();
+            if p.extension().is_some_and(|e| e == "json") {
+                ExperimentConfig::load(p.to_str().unwrap())
+                    .unwrap_or_else(|e| panic!("{}: {e:#}", p.display()));
+                seen += 1;
+            }
+        }
+        assert!(seen >= 3, "expected the shipped presets, found {seen}");
     }
 
     #[test]

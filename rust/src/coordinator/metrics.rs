@@ -26,9 +26,15 @@ pub struct RoundMetrics {
     /// queueing under the round scheduler; capped at the deadline for
     /// `deadline-drop` rounds), s.
     pub sim_time_s: f64,
+    /// Total simulated seconds uplinks spent queued for the server busy
+    /// resource this round (0 when `server_service_s = 0`), s.
+    pub queue_wait_s: f64,
     /// Devices dropped by the straggler policy this round (0 under the
-    /// sync scheduler and `wait-all`).
+    /// sync scheduler and `wait-all`). Counts sampled participants only —
+    /// devices left out by client sampling are not "dropped".
     pub dropped_devices: u64,
+    /// Devices sampled into this round (`devices` when sampling is off).
+    pub sampled_devices: u64,
     /// Wall-clock compute time this round, s.
     pub wall_time_s: f64,
 }
@@ -57,7 +63,9 @@ impl RoundMetrics {
             && self.downlink_bytes == other.downlink_bytes
             && self.comm_time_s.to_bits() == other.comm_time_s.to_bits()
             && self.sim_time_s.to_bits() == other.sim_time_s.to_bits()
+            && self.queue_wait_s.to_bits() == other.queue_wait_s.to_bits()
             && self.dropped_devices == other.dropped_devices
+            && self.sampled_devices == other.sampled_devices
     }
 }
 
@@ -101,14 +109,14 @@ impl TrainingHistory {
     /// Render as CSV (header + one row per round).
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "round,train_loss,train_acc,test_loss,test_acc,uplink_bytes,downlink_bytes,cum_bytes,comm_time_s,sim_time_s,dropped,wall_time_s\n",
+            "round,train_loss,train_acc,test_loss,test_acc,uplink_bytes,downlink_bytes,cum_bytes,comm_time_s,sim_time_s,queue_wait_s,dropped,sampled,wall_time_s\n",
         );
         let mut cum = 0u64;
         for r in &self.rounds {
             cum += r.total_bytes();
             let _ = writeln!(
                 s,
-                "{},{:.5},{:.4},{:.5},{:.4},{},{},{},{:.4},{:.4},{},{:.3}",
+                "{},{:.5},{:.4},{:.5},{:.4},{},{},{},{:.4},{:.4},{:.4},{},{},{:.3}",
                 r.round,
                 r.train_loss,
                 r.train_acc,
@@ -119,7 +127,9 @@ impl TrainingHistory {
                 cum,
                 r.comm_time_s,
                 r.sim_time_s,
+                r.queue_wait_s,
                 r.dropped_devices,
+                r.sampled_devices,
                 r.wall_time_s
             );
         }
@@ -175,7 +185,9 @@ mod tests {
             downlink_bytes: bytes / 2,
             comm_time_s: 0.1,
             sim_time_s: 0.2,
+            queue_wait_s: 0.0,
             dropped_devices: 0,
+            sampled_devices: 5,
             wall_time_s: 0.5,
         }
     }
@@ -220,6 +232,12 @@ mod tests {
         let mut e = a.clone();
         e.dropped_devices = 1;
         assert!(!a.bit_eq(&e), "straggler drops must affect bit_eq");
+        let mut f = a.clone();
+        f.queue_wait_s = f64::from_bits(a.queue_wait_s.to_bits() + 1);
+        assert!(!a.bit_eq(&f), "1-ulp queue-wait drift must be detected");
+        let mut g = a.clone();
+        g.sampled_devices = 4;
+        assert!(!a.bit_eq(&g), "sampling membership must affect bit_eq");
         let ha = TrainingHistory {
             name: "x".into(),
             codec: "y".into(),

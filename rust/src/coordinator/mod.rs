@@ -34,6 +34,15 @@
 //! when the round closes and which devices are dropped from that round's
 //! aggregation. See [`crate::transport`] and `ARCHITECTURE.md`.
 //!
+//! Both schedulers run under the **contention model**: the server is a
+//! serial busy resource (`server_service_s` per batch — uplinks queue,
+//! surfaced as `RoundMetrics::queue_wait_s`), and with
+//! `uplink = "shared"` concurrent uplinks split one pipe's capacity
+//! fairly. **Client sampling** (`sample_fraction` / `sample_k`) picks a
+//! per-round participant subset from a seed-derived stream; unsampled
+//! devices transfer nothing, carry zero FedAvg weight, and rejoin from
+//! the aggregate next round.
+//!
 //! # Determinism
 //!
 //! A run is a function of its seed alone — never of the worker count or

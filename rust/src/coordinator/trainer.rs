@@ -14,7 +14,7 @@ use crate::runtime::{ExecutorHandle, ExecutorStats, HostTensor};
 use crate::tensor::Tensor;
 use crate::transport::{
     assign_profiles, build_scheduler, CommStats, DeviceId, DeviceProfile, Direction, Link,
-    RoundOps, RoundReport, RoundScheduler, ServerOut,
+    RoundOps, RoundReport, RoundScheduler, ServerOut, UplinkMode, UplinkMsg,
 };
 use anyhow::{Context, Result};
 use std::sync::{Arc, Mutex};
@@ -225,6 +225,19 @@ impl Trainer {
         self.makespan_total_s = 0.0;
         for round in 1..=self.cfg.rounds {
             let m = self.run_round(round)?;
+            let mut extras = String::new();
+            if m.queue_wait_s > 0.0 {
+                extras.push_str(&format!("  wait {:.3}s", m.queue_wait_s));
+            }
+            if m.dropped_devices > 0 {
+                extras.push_str(&format!("  dropped {}", m.dropped_devices));
+            }
+            if (m.sampled_devices as usize) < self.cfg.devices {
+                extras.push_str(&format!(
+                    "  sampled {}/{}",
+                    m.sampled_devices, self.cfg.devices
+                ));
+            }
             crate::info!(
                 "round {:>3}: loss {:.4} train {:.1}% test {:.1}%  {:.2} MB  comm {:.3}s  sim {:.3}s{}",
                 round,
@@ -234,11 +247,7 @@ impl Trainer {
                 m.total_bytes() as f64 / 1e6,
                 m.comm_time_s,
                 m.sim_time_s,
-                if m.dropped_devices > 0 {
-                    format!("  dropped {}", m.dropped_devices)
-                } else {
-                    String::new()
-                }
+                extras
             );
             history.rounds.push(m);
         }
@@ -280,6 +289,16 @@ impl Trainer {
             down0 += d.link.downlink_bytes;
         }
 
+        // Per-round client sampling: the participant subset is a pure
+        // function of (seed, round), drawn before any scheduling. Devices
+        // left out transfer nothing this round and rejoin from the
+        // aggregate next round (the straggler rejoin path, minus the
+        // wasted bytes).
+        let participants = self
+            .cfg
+            .sampling
+            .draw(self.cfg.seed, round, self.cfg.devices);
+
         // The scheduler drives the round through the RoundOps interface;
         // disjoint-field borrows let it run against the device table while
         // the scheduler itself stays borrowed from self.
@@ -287,6 +306,7 @@ impl Trainer {
         let report = {
             let mut ops = TrainerRoundOps {
                 devices: &mut self.devices[..],
+                participants: &participants,
                 exec: &self.exec,
                 codec: self.codec.as_ref(),
                 cfg: &self.cfg,
@@ -298,18 +318,25 @@ impl Trainer {
             self.scheduler.run_round(&mut ops)?
         };
 
+        // Expand the scheduler's participant-local completion vector back
+        // to the full fleet: unsampled devices carry zero FedAvg weight.
+        let mut completed = vec![false; self.devices.len()];
+        for (local, &global) in participants.iter().enumerate() {
+            completed[global] = report.completed[local];
+        }
+
         // SplitFed aggregation, weighted by shard sizes, over devices that
-        // completed the round (stragglers dropped by the policy sit this
-        // aggregation out and rejoin from the aggregate next round).
-        // Sharded across workers by *parameter index* — each parameter
-        // still folds its devices in id order, so the result is
-        // bit-identical to the sequential fold (see
-        // `aggregate::fedavg_sharded`).
+        // completed the round (stragglers dropped by the policy — and
+        // devices not sampled into the round — sit this aggregation out
+        // and rejoin from the aggregate next round). Sharded across
+        // workers by *parameter index* — each parameter still folds its
+        // devices in id order, so the result is bit-identical to the
+        // sequential fold (see `aggregate::fedavg_sharded`).
         let weights: Vec<f64> = self
             .devices
             .iter()
             .enumerate()
-            .map(|(i, d)| if report.completed[i] { d.shard_len as f64 } else { 0.0 })
+            .map(|(i, d)| if completed[i] { d.shard_len as f64 } else { 0.0 })
             .collect();
         if weights.iter().sum::<f64>() > 0.0 {
             let cps: Vec<Vec<HostTensor>> =
@@ -322,20 +349,27 @@ impl Trainer {
             );
         } else {
             crate::warn!(
-                "round {round}: every device was dropped (policy {}) — keeping previous aggregate",
+                "round {round}: every participant was dropped (policy {}) — \
+                 keeping previous aggregate",
                 self.cfg.straggler.name()
             );
         }
 
-        self.finish_round(round, t0, &report, up0, down0)
+        self.finish_round(round, t0, &report, up0, down0, participants.len() as u64)
     }
 
     fn round_sequential(&mut self, round: usize, t0: Instant) -> Result<RoundMetrics> {
         // vanilla SL: client weights hand off device→device within the
-        // round — inherently serial, so the round schedulers don't apply
+        // round — inherently serial, so the round schedulers don't apply.
+        // Client sampling still does: only sampled devices take part in
+        // the relay (ascending id order), everyone else sits out.
         for d in self.devices.iter_mut() {
             d.link.begin_round();
         }
+        let participants = self
+            .cfg
+            .sampling
+            .draw(self.cfg.seed, round, self.cfg.devices);
         let mut loss_sum = 0.0f64;
         let mut correct = 0u64;
         let mut samples = 0u64;
@@ -347,7 +381,7 @@ impl Trainer {
         }
 
         let (mut cp, mut cm) = (self.client.0.clone(), self.client.1.clone());
-        for di in 0..self.devices.len() {
+        for &di in &participants {
             self.devices[di].cp = cp.clone();
             self.devices[di].cm = cm.clone();
             for _ in 0..self.cfg.batches_per_round {
@@ -385,25 +419,31 @@ impl Trainer {
         self.client = (cp, cm);
 
         // serial handoff: the round's simulated duration is the sum over
-        // devices of their transfer busy time plus two compute phases per
-        // local step
+        // participants of their transfer busy time, two compute phases per
+        // local step, and the server's per-batch service time (the server
+        // never queues here — one device talks to it at a time)
         let mut sim_round_s = 0.0f64;
-        for d in &self.devices {
+        for &di in &participants {
+            let d = &self.devices[di];
             sim_round_s += d.link.round_busy_s
                 + 2.0
                     * self.cfg.base_compute_s
                     * d.profile.compute_mult
-                    * self.cfg.batches_per_round as f64;
+                    * self.cfg.batches_per_round as f64
+                + self.cfg.server_service_s * self.cfg.batches_per_round as f64;
         }
+        // participant-local, like the scheduler reports: sequential never
+        // drops anyone, and sampled-out devices are not "dropped"
         let report = RoundReport {
             loss_sum,
             correct,
             samples,
             server_steps,
             sim_round_s,
-            completed: vec![true; self.devices.len()],
+            queue_wait_s: 0.0,
+            completed: vec![true; participants.len()],
         };
-        self.finish_round(round, t0, &report, up0, down0)
+        self.finish_round(round, t0, &report, up0, down0, participants.len() as u64)
     }
 
     /// Effective worker-pool width for the parallel phases.
@@ -418,6 +458,7 @@ impl Trainer {
         report: &RoundReport,
         up0: u64,
         down0: u64,
+        sampled_devices: u64,
     ) -> Result<RoundMetrics> {
         let (test_loss, test_acc) = self.evaluate()?;
         let (mut up1, mut down1) = (0u64, 0u64);
@@ -440,7 +481,9 @@ impl Trainer {
             downlink_bytes: down1 - down0,
             comm_time_s: makespan,
             sim_time_s: report.sim_round_s,
+            queue_wait_s: report.queue_wait_s,
             dropped_devices: report.dropped() as u64,
+            sampled_devices,
             wall_time_s: t0.elapsed().as_secs_f64(),
         })
     }
@@ -510,8 +553,15 @@ impl Trainer {
 /// The trainer's implementation of the scheduler-facing [`RoundOps`]
 /// interface: device-local phases dispatch through the sharded worker
 /// pool, the server step serializes on the shared server state.
+///
+/// Scheduler-side device ids are **participant-local** (`0..k` over this
+/// round's sampled subset, in ascending global-id order); the mapping to
+/// the trainer's device table goes through `participants`. With sampling
+/// off, `participants` is the identity and the mapping disappears.
 struct TrainerRoundOps<'a> {
     devices: &'a mut [DeviceCtx],
+    /// Global device ids participating this round, ascending.
+    participants: &'a [usize],
     exec: &'a ExecutorHandle,
     codec: &'a dyn ActivationCodec,
     cfg: &'a ExperimentConfig,
@@ -522,20 +572,31 @@ struct TrainerRoundOps<'a> {
 }
 
 impl TrainerRoundOps<'_> {
-    /// Disjoint `&mut` handles for a scheduler-chosen device batch, in
-    /// batch order (panics on duplicates — a scheduler bug).
+    /// Disjoint `&mut` handles for a scheduler-chosen device batch
+    /// (participant-local ids), in batch order (panics on duplicates — a
+    /// scheduler bug).
     fn batch_refs(&mut self, devs: &[DeviceId]) -> Vec<&mut DeviceCtx> {
+        let participants = self.participants;
         let mut by_id: Vec<Option<&mut DeviceCtx>> =
             self.devices.iter_mut().map(Some).collect();
         devs.iter()
-            .map(|&d| by_id[d].take().expect("duplicate device in scheduler batch"))
+            .map(|&d| {
+                by_id[participants[d]]
+                    .take()
+                    .expect("duplicate device in scheduler batch")
+            })
             .collect()
+    }
+
+    /// The device behind a participant-local id.
+    fn dev(&self, local: DeviceId) -> &DeviceCtx {
+        &self.devices[self.participants[local]]
     }
 }
 
 impl RoundOps for TrainerRoundOps<'_> {
     fn n_devices(&self) -> usize {
-        self.devices.len()
+        self.participants.len()
     }
 
     fn steps(&self) -> usize {
@@ -543,28 +604,53 @@ impl RoundOps for TrainerRoundOps<'_> {
     }
 
     fn compute_s(&self, dev: DeviceId) -> f64 {
-        self.cfg.base_compute_s * self.devices[dev].profile.compute_mult
+        self.cfg.base_compute_s * self.dev(dev).profile.compute_mult
     }
 
-    fn fanout(&mut self, devs: &[DeviceId]) -> Result<Vec<f64>> {
+    fn server_service_s(&self) -> f64 {
+        self.cfg.server_service_s
+    }
+
+    fn shared_uplink_bps(&self) -> Option<f64> {
+        match self.cfg.uplink {
+            UplinkMode::Private => None,
+            UplinkMode::Shared => Some(self.cfg.shared_capacity_bps()),
+        }
+    }
+
+    fn uplink_latency_s(&self, dev: DeviceId) -> f64 {
+        self.dev(dev).profile.link.latency_s
+    }
+
+    fn charge_uplink(&mut self, dev: DeviceId, busy_s: f64) {
+        self.devices[self.participants[dev]]
+            .link
+            .charge(Direction::Uplink, 0, busy_s);
+    }
+
+    fn fanout(&mut self, devs: &[DeviceId]) -> Result<Vec<UplinkMsg>> {
         let exec = self.exec;
         let codec = self.codec;
         let cfg = self.cfg;
         let preset = self.preset;
         let train = self.train;
         let workers = self.workers;
-        let mut items: Vec<(&mut DeviceCtx, f64)> =
-            self.batch_refs(devs).into_iter().map(|d| (d, 0.0)).collect();
+        let zero = UplinkMsg {
+            wire_bytes: 0,
+            cost_s: 0.0,
+        };
+        let mut items: Vec<(&mut DeviceCtx, UplinkMsg)> =
+            self.batch_refs(devs).into_iter().map(|d| (d, zero)).collect();
         engine::run_sharded(&mut items, workers, |_, item| {
             item.1 = device_fanout_impl(&mut *item.0, exec, codec, cfg, preset, train)?;
             Ok(())
         })?;
-        Ok(items.into_iter().map(|(_, up_s)| up_s).collect())
+        Ok(items.into_iter().map(|(_, msg)| msg).collect())
     }
 
     fn server_step(&mut self, dev: DeviceId) -> Result<ServerOut> {
         server_step_impl(
-            &mut self.devices[dev],
+            &mut self.devices[self.participants[dev]],
             self.exec,
             self.codec,
             self.cfg,
@@ -586,12 +672,14 @@ impl RoundOps for TrainerRoundOps<'_> {
     }
 
     fn cancel(&mut self, dev: DeviceId) {
-        self.devices[dev].pending = None;
+        self.devices[self.participants[dev]].pending = None;
     }
 }
 
 /// Fan-out body (shared by all modes): client forward + codec encode +
-/// uplink charge. Returns the uplink transfer seconds.
+/// uplink charge (private mode only — in shared-uplink mode the scheduler
+/// charges the link once the fair-share model decides the duration).
+/// Returns the payload's wire size and the private-mode transfer seconds.
 fn device_fanout_impl(
     dev: &mut DeviceCtx,
     exec: &ExecutorHandle,
@@ -599,7 +687,7 @@ fn device_fanout_impl(
     cfg: &ExperimentConfig,
     preset: &str,
     train: &Dataset,
-) -> Result<f64> {
+) -> Result<UplinkMsg> {
     let (images, labels) = dev.loader.next_batch(train);
     let x = HostTensor::f32(
         &[cfg.batch_size, train.channels, train.height, train.width],
@@ -621,14 +709,25 @@ fn device_fanout_impl(
         act.into_tensor()
     };
     let payload = codec.compress_with_rng(&wire_input, &mut dev.codec_rng)?;
-    let up_s = dev.link.transfer(Direction::Uplink, payload.wire_bytes());
+    let wire_bytes = payload.wire_bytes();
+    let cost_s = match cfg.uplink {
+        UplinkMode::Private => dev.link.transfer(Direction::Uplink, wire_bytes),
+        UplinkMode::Shared => {
+            // charge-at-send, exactly like the private path: the bytes
+            // count even if a deadline later abandons the flow mid-pipe.
+            // Occupancy seconds are charged when the fair-share model
+            // drains the flow (RoundOps::charge_uplink).
+            dev.link.charge(Direction::Uplink, wire_bytes, 0.0);
+            0.0
+        }
+    };
     dev.pending = Some(StepCtx {
         x,
         y,
         uplink: payload,
         grad: None,
     });
-    Ok(up_s)
+    Ok(UplinkMsg { wire_bytes, cost_s })
 }
 
 /// Server-step body (shared by all modes): decompress the pending uplink,

@@ -39,8 +39,13 @@
 //! `RoundScheduler` trait: barriered **sync** (bit-identical to the
 //! legacy lockstep engine) and event-driven **async**, where the server
 //! consumes uplinks as they land and a straggler policy (`wait-all`,
-//! `deadline-drop`, `quorum`) decides when the round closes. See
-//! `ARCHITECTURE.md`.
+//! `deadline-drop`, `quorum`) decides when the round closes. On top sits
+//! the **contention model**: a serial server busy resource
+//! (`server_service_s` — uplinks queue, reported as `queue_wait_s`), a
+//! fair-share **shared uplink** (`uplink = "shared"`: concurrent
+//! transfers split one pipe's capacity), and per-round **client
+//! sampling** (`sample_fraction` / `sample_k`). See `ARCHITECTURE.md`
+//! and `CONFIGS.md`.
 //!
 //! # Executor backends
 //!

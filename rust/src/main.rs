@@ -15,6 +15,8 @@
 //! slfac train --codec tk-sl --partition non-iid --out results/tk_noniid.csv
 //! slfac train --scheduler async --profile wifi/lte --straggler deadline-drop \
 //!     --deadline-s 0.5 --devices 64
+//! slfac train --scheduler async --devices 128 --uplink shared \
+//!     --shared-uplink-mbps 100 --server-service-s 0.002 --sample-fraction 0.25
 //! slfac inspect --artifacts artifacts
 //! slfac bench-codec --shape 32x16x14x14
 //! ```
@@ -23,7 +25,7 @@ use anyhow::{Context, Result};
 use slfac::cli::{CliError, Command, Matches};
 use slfac::codec;
 use slfac::config::{DatasetKind, ExperimentConfig, Partition, SyncMode};
-use slfac::transport::{SchedulerKind, StragglerPolicy};
+use slfac::transport::{ClientSampling, SchedulerKind, StragglerPolicy, UplinkMode};
 
 fn cli() -> Command {
     Command::new("slfac", "SL-FAC: communication-efficient split learning")
@@ -50,6 +52,16 @@ fn cli() -> Command {
                 .opt("deadline-s", "SECS", "simulated round deadline (deadline-drop)", None)
                 .opt("quorum-k", "N", "devices that must finish (quorum)", None)
                 .opt("base-compute-s", "SECS", "simulated client compute per phase", None)
+                .opt("uplink", "MODE", "uplink contention: private | shared", None)
+                .opt(
+                    "shared-uplink-mbps",
+                    "MBPS",
+                    "shared pipe capacity (default: uplink_mbps)",
+                    None,
+                )
+                .opt("server-service-s", "SECS", "simulated server time per batch", None)
+                .opt("sample-fraction", "F", "fraction of devices per round, (0, 1]", None)
+                .opt("sample-k", "N", "devices sampled per round", None)
                 .opt("backend", "KIND", "executor backend: xla | sim", Some("xla"))
                 .opt("artifacts", "DIR", "artifacts directory", None)
                 .opt("out", "PATH", "metrics CSV output path", None)
@@ -162,6 +174,30 @@ fn build_config(m: &Matches) -> Result<ExperimentConfig> {
         .map_err(anyhow::Error::msg)?
     {
         cfg.base_compute_s = c;
+    }
+    if let Some(u) = m.get("uplink") {
+        cfg.uplink = UplinkMode::parse(u)?;
+    }
+    if let Some(mbps) = m
+        .get_parsed::<f64>("shared-uplink-mbps")
+        .map_err(anyhow::Error::msg)?
+    {
+        cfg.shared_uplink_bps = Some(mbps * 1e6);
+    }
+    if let Some(s) = m
+        .get_parsed::<f64>("server-service-s")
+        .map_err(anyhow::Error::msg)?
+    {
+        cfg.server_service_s = s;
+    }
+    let sample_fraction = m
+        .get_parsed::<f64>("sample-fraction")
+        .map_err(anyhow::Error::msg)?;
+    let sample_k = m
+        .get_parsed::<usize>("sample-k")
+        .map_err(anyhow::Error::msg)?;
+    if sample_fraction.is_some() || sample_k.is_some() {
+        cfg.sampling = ClientSampling::from_parts(sample_fraction, sample_k)?;
     }
     if let Some(a) = m.get("artifacts") {
         cfg.artifacts_dir = a.to_string();

@@ -45,6 +45,9 @@ pub mod stream {
     pub const LINK: u64 = 0x4C49_4E4B;
     /// Per-device codec sampling (randomized codecs, e.g. TK-SL).
     pub const CODEC: u64 = 0x434F_4443;
+    /// Per-round client sampling (which devices participate in a round);
+    /// indexed by round number, not device id.
+    pub const SAMPLE: u64 = 0x5341_4D50;
 }
 
 impl Pcg32 {

@@ -1,7 +1,8 @@
 //! Deterministic simulated-time event scheduler.
 //!
 //! The transport layer orders everything that happens "on the network" —
-//! uplink arrivals, downlink arrivals, device completions — through one
+//! uplink starts and arrivals, shared-pipe drains, downlink arrivals,
+//! device completions — through one
 //! [`EventQueue`]: a binary min-heap of [`Scheduled`] entries keyed by
 //! `(sim_time, seq)`. The sequence number is assigned at push time, so ties
 //! at the same simulated instant resolve in **push order** — a pure
@@ -15,6 +16,11 @@
 //! compared with `f64::total_cmp`, so the ordering is total even in the
 //! presence of `-0.0`. The queue clock (`now`) is monotone: it advances to
 //! each popped event's time and never runs backwards.
+//!
+//! Besides the queue itself, this module hosts [`ServerResource`] — the
+//! server modeled as a serial busy resource with a per-batch
+//! `server_service_s` cost, so uplink fan-in queues deterministically
+//! instead of completing instantaneously.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -25,6 +31,27 @@ pub type DeviceId = usize;
 /// What happened at a simulated instant.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Event {
+    /// A device begins transmitting `bytes` of compressed activations on
+    /// the **shared** uplink (for local step `step`). Only emitted in
+    /// `uplink = "shared"` mode; the scheduler folds the new flow into the
+    /// fair-share model ([`super::link::SharedUplink`]) when this pops.
+    UplinkStart {
+        /// 0-based local step within the round.
+        step: usize,
+        /// Exact wire bytes of the payload entering the shared pipe.
+        bytes: usize,
+    },
+    /// The shared uplink's earliest in-flight transfer is predicted to
+    /// drain at this instant, assuming the active-flow set as of
+    /// `generation`. Stale generations (a flow started or finished in the
+    /// meantime) are skipped on pop — the lazy-invalidation pattern that
+    /// keeps fair-share recomputation inside the deterministic
+    /// `(sim_time, seq)` order.
+    SharedDrain {
+        /// [`super::link::SharedUplink`] generation this prediction was
+        /// made under.
+        generation: u64,
+    },
     /// A device's compressed activations finished arriving at the server
     /// (for local step `step` of the round).
     UplinkArrived {
@@ -143,6 +170,57 @@ impl EventQueue {
     }
 }
 
+/// The server as a busy resource: uplinks queue for a serial, per-batch
+/// service of `service_s` simulated seconds.
+///
+/// Service is strict FIFO in *offer order* — the order `acquire` is
+/// called, which for both schedulers is the deterministic event-pop order
+/// (arrival time, then push seq). A batch offered at `ready_t` starts at
+/// `max(ready_t, free_t)` (the server may still be busy with an earlier
+/// batch) and occupies the server for `service_s`; the difference between
+/// start and `ready_t` is the **queue wait**, the congestion signal
+/// surfaced as `RoundMetrics::queue_wait_s`.
+///
+/// With `service_s = 0` every acquire starts exactly at `ready_t` and
+/// waits zero seconds — the pre-contention "infinitely fast server"
+/// behavior, bit-for-bit (`x + 0.0 == x` for every non-negative time).
+#[derive(Debug, Default)]
+pub struct ServerResource {
+    /// Per-batch service cost in simulated seconds (≥ 0, finite).
+    service_s: f64,
+    /// Instant the server finishes its last accepted batch.
+    free_t: f64,
+}
+
+impl ServerResource {
+    /// New idle server with the given per-batch service cost.
+    pub fn new(service_s: f64) -> Self {
+        assert!(
+            service_s.is_finite() && service_s >= 0.0,
+            "server service time must be finite and >= 0, got {service_s}"
+        );
+        ServerResource {
+            service_s,
+            free_t: 0.0,
+        }
+    }
+
+    /// Offer one batch that became ready at `ready_t`; returns
+    /// `(start_t, end_t)` of its service slot and marks the server busy
+    /// until `end_t`.
+    pub fn acquire(&mut self, ready_t: f64) -> (f64, f64) {
+        let start = ready_t.max(self.free_t);
+        let end = start + self.service_s;
+        self.free_t = end;
+        (start, end)
+    }
+
+    /// Instant the server next becomes idle.
+    pub fn free_t(&self) -> f64 {
+        self.free_t
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -210,6 +288,34 @@ mod tests {
     fn non_finite_time_rejected() {
         let mut q = EventQueue::new();
         q.push(f64::NAN, 0, Event::DeviceDone);
+    }
+
+    #[test]
+    fn server_resource_serializes_in_offer_order() {
+        let mut s = ServerResource::new(2.0);
+        // three batches ready at the same instant: strict FIFO back-off
+        assert_eq!(s.acquire(1.0), (1.0, 3.0));
+        assert_eq!(s.acquire(1.0), (3.0, 5.0));
+        assert_eq!(s.acquire(1.0), (5.0, 7.0));
+        // a late batch past the busy window starts immediately
+        assert_eq!(s.acquire(10.0), (10.0, 12.0));
+        assert_eq!(s.free_t(), 12.0);
+    }
+
+    #[test]
+    fn server_resource_zero_service_is_transparent() {
+        let mut s = ServerResource::new(0.0);
+        for &t in &[0.0, 0.5, 0.5, 3.25] {
+            let (start, end) = s.acquire(t);
+            assert_eq!(start.to_bits(), t.to_bits(), "no queue wait at zero service");
+            assert_eq!(end.to_bits(), t.to_bits());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "service time")]
+    fn server_resource_rejects_nan_service() {
+        ServerResource::new(f64::NAN);
     }
 
     #[test]

@@ -16,6 +16,16 @@
 //! Time is simulated (a deterministic clock), independent of wall time, so
 //! experiments reproduce exactly regardless of host load.
 //!
+//! # Uplink contention
+//!
+//! Links are private pipes by default ([`UplinkMode::Private`]). In
+//! [`UplinkMode::Shared`] every device's uplink contends for one
+//! [`SharedUplink`] pipe whose capacity concurrent transfers split fairly
+//! — the fluid model the round schedulers drive through start/drain
+//! events. Per-device accounting stays on the [`Link`] (via
+//! [`Link::charge`]); only the *duration* computation moves to the shared
+//! model. Downlinks remain private in either mode.
+//!
 //! # Round accounting
 //!
 //! Besides lifetime totals, every link tracks `round_busy_s` — transfer
@@ -26,6 +36,7 @@
 //! `CommStats::makespan_s` bug).
 
 use crate::rng::Pcg32;
+use anyhow::{bail, Result};
 
 /// Direction of a transfer (device→server or server→device).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -34,6 +45,40 @@ pub enum Direction {
     Uplink,
     /// Server → device (gradients).
     Downlink,
+}
+
+/// Uplink contention model: does every device get its own pipe, or do
+/// concurrent uplinks contend for one shared medium?
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum UplinkMode {
+    /// Each device↔server uplink is an independent pipe at the device's
+    /// profile bandwidth (the pre-contention behavior; default).
+    #[default]
+    Private,
+    /// All uplinks share one pipe of `shared_uplink_mbps` capacity;
+    /// concurrent transfers split it fairly ([`SharedUplink`]). Per-device
+    /// propagation latency still applies per flow; per-device uplink
+    /// bandwidth is ignored.
+    Shared,
+}
+
+impl UplinkMode {
+    /// Parse from a config/CLI string.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "private" | "per-device" => UplinkMode::Private,
+            "shared" | "contended" => UplinkMode::Shared,
+            other => bail!("unknown uplink mode '{other}' (private | shared)"),
+        })
+    }
+
+    /// Stable display name (config key value).
+    pub fn name(&self) -> &'static str {
+        match self {
+            UplinkMode::Private => "private",
+            UplinkMode::Shared => "shared",
+        }
+    }
 }
 
 /// Configuration of one device↔server link.
@@ -112,19 +157,252 @@ impl Link {
             let j = 1.0 + self.cfg.jitter * (2.0 * self.rng.uniform_f64() - 1.0);
             t *= j.max(0.0);
         }
+        self.charge(dir, bytes, t);
+        t
+    }
+
+    /// Record a transfer whose duration was decided elsewhere (the shared
+    /// uplink's fair-share model): `bytes` into the byte counters, `busy_s`
+    /// into the occupancy counters. The shared-mode wire path calls this
+    /// twice per transfer — `(bytes, 0.0)` at fan-out (charge-at-send,
+    /// identical to the private path, so bytes count even if a deadline
+    /// later abandons the flow mid-pipe) and `(0, seconds)` when the flow
+    /// drains — so `busy_s` adds are exact no-ops until the duration is
+    /// known.
+    pub fn charge(&mut self, dir: Direction, bytes: usize, busy_s: f64) {
         match dir {
             Direction::Uplink => self.uplink_bytes += bytes as u64,
             Direction::Downlink => self.downlink_bytes += bytes as u64,
         }
-        self.busy_s += t;
-        self.round_busy_s += t;
-        self.transfers += 1;
-        t
+        self.busy_s += busy_s;
+        self.round_busy_s += busy_s;
+        if bytes > 0 {
+            self.transfers += 1;
+        }
     }
 
     /// Total bytes both directions.
     pub fn total_bytes(&self) -> u64 {
         self.uplink_bytes + self.downlink_bytes
+    }
+}
+
+/// One in-flight transfer on the shared uplink.
+#[derive(Debug, Clone)]
+struct SharedFlow {
+    device: usize,
+    step: usize,
+    bytes: usize,
+    /// Per-flow propagation latency, added once on delivery.
+    latency_s: f64,
+    /// Instant the flow began transmitting.
+    start_t: f64,
+    /// Bits still to drain.
+    remaining_bits: f64,
+    /// Serialization seconds accumulated over past fair-share segments.
+    ser_s: f64,
+    /// Insertion order — the deterministic tie-break when several flows
+    /// would drain at the same instant.
+    seq: u64,
+}
+
+/// A transfer that finished draining from the shared uplink.
+#[derive(Debug, Clone, Copy)]
+pub struct CompletedFlow {
+    /// Device whose uplink finished.
+    pub device: usize,
+    /// 0-based local step the payload belongs to.
+    pub step: usize,
+    /// Wire bytes transferred.
+    pub bytes: usize,
+    /// Instant the payload is available at the server
+    /// (`start + latency + serialization`).
+    pub arrival_t: f64,
+    /// Total transfer seconds (latency + fair-share serialization) — what
+    /// the private path's [`Link::transfer`] would have returned, under
+    /// contention.
+    pub busy_s: f64,
+}
+
+/// Fair-share fluid model of one shared uplink pipe.
+///
+/// At any instant, each of the `n` active flows drains at
+/// `capacity_bps / n` bits per second. The active-flow set only changes at
+/// transfer **start** and **finish** instants, which the round scheduler
+/// totally orders through the event queue's `(sim_time, seq)`; between two
+/// consecutive such instants every drain is linear, so each flow's
+/// remaining bits — and therefore every completion time — is a pure
+/// function of the event order. No wall clock, no thread scheduling.
+///
+/// # Protocol
+///
+/// The scheduler drives the model with two calls, both keyed to popped
+/// events:
+///
+/// * [`SharedUplink::start`] — a flow begins transmitting; returns the new
+///   predicted `(drain_t, generation)` to schedule as an
+///   [`super::event::Event::SharedDrain`].
+/// * [`SharedUplink::complete`] — a `SharedDrain` event fired; if its
+///   generation is stale (the flow set changed since the prediction) it
+///   returns `None` and the event is discarded. Otherwise the earliest
+///   flow (minimum remaining bits, ties by insertion order) completes, the
+///   survivors' remaining bits advance, and a fresh prediction is returned
+///   for rescheduling.
+///
+/// Every mutation bumps `generation`, so at most one scheduled drain
+/// prediction is ever live — the lazy-invalidation pattern that keeps the
+/// heap free of retractions.
+///
+/// # Single-flow exactness
+///
+/// A flow that never shares the pipe drains in one segment of
+/// `bits / capacity` seconds and is delivered at
+/// `start + (latency + bits / capacity)` — operation-for-operation the
+/// same f64 arithmetic as the private path (`Link::transfer` followed by
+/// the scheduler's `start + cost` push), so a single device on a shared
+/// uplink costs bit-for-bit what a private link does. The contention test
+/// suite pins this.
+#[derive(Debug)]
+pub struct SharedUplink {
+    capacity_bps: f64,
+    flows: Vec<SharedFlow>,
+    /// Fluid-state timestamp: all `remaining_bits` are exact as of this
+    /// instant.
+    last_t: f64,
+    generation: u64,
+    next_seq: u64,
+}
+
+impl SharedUplink {
+    /// New idle pipe. Panics on a non-finite or non-positive capacity (the
+    /// config layer validates first; this is the last line of defense
+    /// against a NaN poisoning every completion time).
+    pub fn new(capacity_bps: f64) -> Self {
+        assert!(
+            capacity_bps.is_finite() && capacity_bps > 0.0,
+            "shared uplink capacity must be finite and > 0, got {capacity_bps}"
+        );
+        SharedUplink {
+            capacity_bps,
+            flows: Vec::new(),
+            last_t: 0.0,
+            generation: 0,
+            next_seq: 0,
+        }
+    }
+
+    /// Currently active flows.
+    pub fn active(&self) -> usize {
+        self.flows.len()
+    }
+
+    /// Current generation: a scheduled drain prediction carrying any other
+    /// value is stale (the flow set changed since it was made).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Advance every active flow's drained bits to instant `t`. Instants
+    /// at or before `last_t` are no-ops (an ulp-early prediction must not
+    /// rewind the fluid state and double-drain a segment).
+    fn advance(&mut self, t: f64) {
+        if t <= self.last_t {
+            return;
+        }
+        let dt = t - self.last_t;
+        if !self.flows.is_empty() {
+            let share = self.capacity_bps / self.flows.len() as f64;
+            for f in &mut self.flows {
+                f.remaining_bits -= dt * share;
+                f.ser_s += dt;
+            }
+        }
+        self.last_t = t;
+    }
+
+    /// Index of the flow that drains next: minimum remaining bits, ties by
+    /// insertion seq (total order via `total_cmp`, mirroring the queue).
+    fn next_idx(&self) -> Option<usize> {
+        self.flows
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                a.remaining_bits
+                    .total_cmp(&b.remaining_bits)
+                    .then(a.seq.cmp(&b.seq))
+            })
+            .map(|(i, _)| i)
+    }
+
+    /// Predicted instant the next flow drains, assuming no further starts.
+    fn predict(&self) -> Option<f64> {
+        let i = self.next_idx()?;
+        let n = self.flows.len() as f64;
+        Some(self.last_t + self.flows[i].remaining_bits * n / self.capacity_bps)
+    }
+
+    /// A flow begins transmitting `bytes` at instant `t`. Returns the new
+    /// `(drain_t, generation)` prediction to schedule (always `Some`: the
+    /// pipe now has at least this flow).
+    pub fn start(
+        &mut self,
+        t: f64,
+        device: usize,
+        step: usize,
+        bytes: usize,
+        latency_s: f64,
+    ) -> (f64, u64) {
+        self.advance(t);
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.flows.push(SharedFlow {
+            device,
+            step,
+            bytes,
+            latency_s,
+            start_t: t,
+            remaining_bits: bytes as f64 * 8.0,
+            ser_s: 0.0,
+            seq,
+        });
+        self.generation += 1;
+        (self.predict().expect("just pushed a flow"), self.generation)
+    }
+
+    /// A scheduled drain prediction fired. Stale generation ⇒ `None`
+    /// (discard the event). Otherwise returns the completed flow plus, if
+    /// flows remain, the next `(drain_t, generation)` to schedule.
+    pub fn complete(&mut self, generation: u64) -> Option<(CompletedFlow, Option<(f64, u64)>)> {
+        if generation != self.generation {
+            return None;
+        }
+        let i = self.next_idx().expect("live generation implies a flow");
+        let n = self.flows.len() as f64;
+        // The final segment's length, recomputed with the exact expression
+        // the prediction used — never `event_time - last_t`, whose f64
+        // rounding would leak into the delivered duration. Clamped at zero
+        // for the ulp-negative residue a same-instant start can leave on
+        // an already-drained flow (`max` returns the positive value
+        // unchanged, so the normal path is bit-exact).
+        let dt = (self.flows[i].remaining_bits * n / self.capacity_bps).max(0.0);
+        let share = self.capacity_bps / n;
+        for f in &mut self.flows {
+            f.remaining_bits -= dt * share;
+            f.ser_s += dt;
+        }
+        self.last_t += dt;
+        let f = self.flows.remove(i);
+        self.generation += 1;
+        let busy_s = f.latency_s + f.ser_s;
+        let done = CompletedFlow {
+            device: f.device,
+            step: f.step,
+            bytes: f.bytes,
+            arrival_t: f.start_t + busy_s,
+            busy_s,
+        };
+        let next = self.predict().map(|t| (t, self.generation));
+        Some((done, next))
     }
 }
 
@@ -312,6 +590,127 @@ mod tests {
         let mut other = inc.clone();
         other.total_busy_s += 1e-12;
         assert!(!inc.bit_eq(&other));
+    }
+
+    #[test]
+    fn uplink_mode_parses_and_names() {
+        assert_eq!(UplinkMode::parse("private").unwrap(), UplinkMode::Private);
+        assert_eq!(UplinkMode::parse("SHARED").unwrap(), UplinkMode::Shared);
+        assert_eq!(UplinkMode::parse("contended").unwrap(), UplinkMode::Shared);
+        assert!(UplinkMode::parse("token-ring").is_err());
+        assert_eq!(UplinkMode::default(), UplinkMode::Private);
+        for m in [UplinkMode::Private, UplinkMode::Shared] {
+            assert_eq!(UplinkMode::parse(m.name()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn charge_matches_transfer_accounting() {
+        let cfg = LinkConfig {
+            uplink_bps: 8e6,
+            downlink_bps: 8e6,
+            latency_s: 0.01,
+            jitter: 0.0,
+        };
+        let mut via_transfer = Link::new(cfg, 1);
+        let t = via_transfer.transfer(Direction::Uplink, 1_000_000);
+        let mut via_charge = Link::new(cfg, 1);
+        via_charge.charge(Direction::Uplink, 1_000_000, 0.0);
+        via_charge.charge(Direction::Uplink, 0, t);
+        assert_eq!(via_charge.uplink_bytes, via_transfer.uplink_bytes);
+        assert_eq!(via_charge.transfers, via_transfer.transfers, "split charge counts once");
+        assert_eq!(via_charge.busy_s.to_bits(), via_transfer.busy_s.to_bits());
+        assert_eq!(
+            via_charge.round_busy_s.to_bits(),
+            via_transfer.round_busy_s.to_bits()
+        );
+    }
+
+    #[test]
+    fn shared_single_flow_is_bitwise_private_cost() {
+        // one flow never shares the pipe: its delivered cost must be the
+        // exact f64 arithmetic of Link::transfer (latency + bits/capacity)
+        let cfg = LinkConfig {
+            uplink_bps: 8e6,
+            downlink_bps: 8e6,
+            latency_s: 0.013,
+            jitter: 0.0,
+        };
+        let mut private = Link::new(cfg, 1);
+        let want = private.transfer(Direction::Uplink, 777_001);
+        let mut pipe = SharedUplink::new(cfg.uplink_bps);
+        let (t_drain, gen) = pipe.start(0.25, 3, 0, 777_001, cfg.latency_s);
+        let (done, next) = pipe.complete(gen).expect("live generation");
+        assert!(next.is_none(), "pipe drained");
+        assert_eq!(done.device, 3);
+        assert_eq!(done.bytes, 777_001);
+        assert_eq!(done.busy_s.to_bits(), want.to_bits(), "single flow == private cost");
+        assert_eq!(done.arrival_t.to_bits(), (0.25 + want).to_bits());
+        assert!(t_drain <= done.arrival_t, "drain precedes delivery (latency)");
+    }
+
+    #[test]
+    fn shared_concurrent_flows_split_capacity_fairly() {
+        // two equal flows from t=0 on a 1 MB/s pipe: each serializes in
+        // 2 s (half capacity), not the 1 s a private pipe would take
+        let mut pipe = SharedUplink::new(8e6);
+        let (_stale, _g1) = pipe.start(0.0, 0, 0, 1_000_000, 0.0);
+        let (t2, g2) = pipe.start(0.0, 1, 0, 1_000_000, 0.0);
+        assert_eq!(pipe.active(), 2);
+        assert!((t2 - 2.0).abs() < 1e-12, "both finish at 2 s, got {t2}");
+        assert!(pipe.complete(_g1).is_none(), "stale generation discarded");
+        let (first, next) = pipe.complete(g2).expect("live");
+        assert_eq!(first.device, 0, "equal remaining ties resolve by insertion order");
+        assert!((first.busy_s - 2.0).abs() < 1e-12);
+        let (t3, g3) = next.expect("one flow left");
+        assert!((t3 - 2.0).abs() < 1e-9, "second drains at the same instant");
+        let (second, none) = pipe.complete(g3).expect("live");
+        assert_eq!(second.device, 1);
+        assert!((second.busy_s - 2.0).abs() < 1e-9);
+        assert!(none.is_none());
+    }
+
+    #[test]
+    fn shared_unequal_flows_release_capacity_on_finish() {
+        // A: 1 MB, B: 2 MB, both from t=0 on 1 MB/s. Fair share: A done at
+        // 2 s; B then gets the full pipe and finishes at 3 s.
+        let mut pipe = SharedUplink::new(8e6);
+        pipe.start(0.0, 0, 0, 1_000_000, 0.0);
+        let (ta, ga) = pipe.start(0.0, 1, 0, 2_000_000, 0.0);
+        assert!((ta - 2.0).abs() < 1e-12);
+        let (a, next) = pipe.complete(ga).expect("live");
+        assert_eq!(a.device, 0);
+        let (tb, gb) = next.expect("B still draining");
+        assert!((tb - 3.0).abs() < 1e-9, "B finishes at 3 s, got {tb}");
+        let (b, _) = pipe.complete(gb).expect("live");
+        assert_eq!(b.device, 1);
+        assert!((b.busy_s - 3.0).abs() < 1e-9, "B occupied the pipe 3 s total");
+    }
+
+    #[test]
+    fn shared_late_joiner_slows_the_leader() {
+        // A (1 MB) starts at 0; B (1 MB) joins at 0.5 s. A drained 0.5 MB
+        // alone, shares the rest: done at 0.5 + 1.0/1 ... fair share from
+        // 0.5 with 0.5 MB left at 0.5 MB/s => +1.0 s => 1.5 s total.
+        let mut pipe = SharedUplink::new(8e6);
+        pipe.start(0.0, 0, 0, 1_000_000, 0.0);
+        let (ta, ga) = pipe.start(0.5, 1, 0, 1_000_000, 0.0);
+        assert!((ta - 1.5).abs() < 1e-9, "leader at 1.5 s, got {ta}");
+        let (a, next) = pipe.complete(ga).expect("live");
+        assert_eq!(a.device, 0);
+        assert!((a.busy_s - 1.5).abs() < 1e-9);
+        // B: 0.5 MB drained while sharing, 0.5 MB at full rate => 2.0 s
+        let (tb, gb) = next.expect("B remains");
+        assert!((tb - 2.0).abs() < 1e-9, "B done at 2.0 s, got {tb}");
+        let (b, _) = pipe.complete(gb).expect("live");
+        assert!((b.busy_s - 1.5).abs() < 1e-9, "B transmitted from 0.5 to 2.0");
+        assert!((b.arrival_t - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity")]
+    fn shared_rejects_zero_capacity() {
+        SharedUplink::new(0.0);
     }
 
     #[test]

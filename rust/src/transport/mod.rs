@@ -5,21 +5,25 @@
 //! full picture):
 //!
 //! * [`link`] — the low-level **cost model**: per-link bandwidth / latency
-//!   / jitter, exact wire-byte accounting, per-round busy snapshots.
+//!   / jitter, exact wire-byte accounting, per-round busy snapshots, and
+//!   the shared-uplink fair-share fluid model ([`SharedUplink`]) used when
+//!   `uplink = "shared"`.
 //! * [`event`] — the deterministic **simulated-time event scheduler**: a
 //!   binary heap of `(sim_time, seq, device, event)` with sequence-number
 //!   tie-breaking, so event order is a pure function of the seed — never
-//!   of thread scheduling.
+//!   of thread scheduling. Also hosts [`ServerResource`], the server as a
+//!   serial busy resource (`server_service_s` per batch).
 //! * [`profile`] — per-device heterogeneity: link classes
 //!   (`wifi`/`lte`/`5g`/`ethernet`), compute-speed multipliers, and
 //!   config/CLI-selectable mix specs (`"wifi/lte"`).
-//! * [`policy`] — straggler policies for async rounds: `wait-all`,
-//!   `deadline-drop`, `k`-of-`n` `quorum`.
+//! * [`policy`] — straggler policies for async rounds (`wait-all`,
+//!   `deadline-drop`, `k`-of-`n` `quorum`) and per-round client sampling
+//!   ([`ClientSampling`]: `sample_fraction` / `sample_k`).
 //! * [`scheduler`] — the [`RoundScheduler`] trait plus both
 //!   implementations: barriered lockstep re-expressed as events
-//!   ([`SyncEventScheduler`], bit-identical to the pre-transport engine)
-//!   and event-driven async ([`AsyncEventScheduler`], the server consumes
-//!   uplinks as they land).
+//!   ([`SyncEventScheduler`], bit-identical to the pre-transport engine
+//!   when the contention model is off) and event-driven async
+//!   ([`AsyncEventScheduler`], the server consumes uplinks as they land).
 //!
 //! The old `crate::net` path re-exports [`link`]'s types for backward
 //! compatibility.
@@ -30,11 +34,11 @@ pub mod policy;
 pub mod profile;
 pub mod scheduler;
 
-pub use event::{DeviceId, Event, EventQueue, Scheduled};
-pub use link::{CommStats, Direction, Link, LinkConfig};
-pub use policy::StragglerPolicy;
+pub use event::{DeviceId, Event, EventQueue, Scheduled, ServerResource};
+pub use link::{CommStats, CompletedFlow, Direction, Link, LinkConfig, SharedUplink, UplinkMode};
+pub use policy::{ClientSampling, StragglerPolicy};
 pub use profile::{assign_profiles, DeviceProfile, LinkClass};
 pub use scheduler::{
     build_scheduler, AsyncEventScheduler, RoundOps, RoundReport, RoundScheduler, SchedulerKind,
-    ServerOut, SyncEventScheduler,
+    ServerOut, SyncEventScheduler, UplinkMsg,
 };

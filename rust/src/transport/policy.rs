@@ -19,7 +19,12 @@
 //! Dropped devices still rejoin at the next round start (SplitFed resets
 //! client weights to the aggregate), so a straggler is excluded per-round,
 //! never evicted.
+//!
+//! This module also hosts [`ClientSampling`] — *who participates* in a
+//! round, drawn per-round from a seed-derived stream — which composes with
+//! the straggler policies (*when the round closes* over the sampled set).
 
+use crate::rng::{stream, Pcg32};
 use anyhow::{bail, Result};
 
 /// Round-close policy for the async scheduler.
@@ -105,6 +110,102 @@ impl StragglerPolicy {
     }
 }
 
+/// Per-round client sampling: which devices participate in a round.
+///
+/// Large fleets rarely run every device every round (FedAvg-style client
+/// sampling); the sampled subset is drawn from a stream derived from
+/// `(seed, stream::SAMPLE, round)`, so membership is a pure function of
+/// the experiment seed and the round index — independent of worker count,
+/// scheduler, or any other RNG consumer. Devices left out of a round
+/// transfer nothing, carry zero FedAvg weight, and rejoin from the
+/// aggregate at the next round start (exactly the straggler rejoin path,
+/// minus the wasted bytes).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum ClientSampling {
+    /// Every device participates every round (default).
+    #[default]
+    Full,
+    /// A fraction in `(0, 1]` of the fleet participates each round
+    /// (`max(1, round(fraction × devices))`).
+    Fraction(f64),
+    /// Exactly `k` devices participate each round (`k ≥ devices` degrades
+    /// to full participation).
+    Count(usize),
+}
+
+impl ClientSampling {
+    /// Build from the optional `sample_fraction` / `sample_k` config keys.
+    /// Setting both is rejected — they are two spellings of one knob.
+    pub fn from_parts(fraction: Option<f64>, k: Option<usize>) -> Result<Self> {
+        match (fraction, k) {
+            (None, None) => Ok(ClientSampling::Full),
+            (Some(f), None) => Ok(ClientSampling::Fraction(f)),
+            (None, Some(k)) => Ok(ClientSampling::Count(k)),
+            (Some(f), Some(k)) => {
+                bail!("sample_fraction = {f} and sample_k = {k} are mutually exclusive — set one")
+            }
+        }
+    }
+
+    /// Stable display name (config key family).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ClientSampling::Full => "full",
+            ClientSampling::Fraction(_) => "sample_fraction",
+            ClientSampling::Count(_) => "sample_k",
+        }
+    }
+
+    /// Validate parameters: `sample_fraction` must lie in `(0, 1]`,
+    /// `sample_k` must be ≥ 1. The upper bound is soft — `sample_k`
+    /// beyond the fleet size degrades to full participation, so it takes
+    /// no device count here (mirroring that asymmetry on purpose).
+    pub fn validate(&self, _devices: usize) -> Result<()> {
+        match *self {
+            ClientSampling::Full => {}
+            ClientSampling::Fraction(f) => {
+                if !(f.is_finite() && f > 0.0 && f <= 1.0) {
+                    bail!("sample_fraction must be in (0, 1], got {f}");
+                }
+            }
+            ClientSampling::Count(k) => {
+                if k == 0 {
+                    bail!("sample_k must be >= 1, got 0");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of devices that participate each round, for a fleet of
+    /// `devices` (always in `[1, devices]` after validation).
+    pub fn effective_k(&self, devices: usize) -> usize {
+        match *self {
+            ClientSampling::Full => devices,
+            ClientSampling::Fraction(f) => {
+                (((f * devices as f64).round() as usize).max(1)).min(devices)
+            }
+            ClientSampling::Count(k) => k.min(devices),
+        }
+    }
+
+    /// Draw the round's participant set: `effective_k` distinct device ids
+    /// in **ascending order** (so every device-id-ordered convention —
+    /// event seq ties, reductions, server order under the sync scheduler —
+    /// holds within the sampled subset exactly as it does for the full
+    /// fleet). `Full` never touches the RNG stream.
+    pub fn draw(&self, seed: u64, round: usize, devices: usize) -> Vec<usize> {
+        let k = self.effective_k(devices);
+        if k == devices {
+            return (0..devices).collect();
+        }
+        let mut rng = Pcg32::derived(seed, stream::SAMPLE, round as u64);
+        let mut picked = rng.sample_indices(devices, k);
+        picked.sort_unstable();
+        picked
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -155,6 +256,69 @@ mod tests {
         assert!(StragglerPolicy::Quorum { k: 4 }.validate(4).is_ok());
         assert!(StragglerPolicy::Quorum { k: 0 }.validate(4).is_err());
         assert!(StragglerPolicy::Quorum { k: 5 }.validate(4).is_err());
+    }
+
+    #[test]
+    fn sampling_from_parts_and_validation() {
+        assert_eq!(
+            ClientSampling::from_parts(None, None).unwrap(),
+            ClientSampling::Full
+        );
+        assert_eq!(
+            ClientSampling::from_parts(Some(0.25), None).unwrap(),
+            ClientSampling::Fraction(0.25)
+        );
+        assert_eq!(
+            ClientSampling::from_parts(None, Some(8)).unwrap(),
+            ClientSampling::Count(8)
+        );
+        assert!(ClientSampling::from_parts(Some(0.5), Some(2)).is_err());
+        // fraction must be in (0, 1]
+        for bad in [0.0, -0.1, 1.5, f64::NAN] {
+            assert!(
+                ClientSampling::Fraction(bad).validate(8).is_err(),
+                "fraction {bad} should be rejected"
+            );
+        }
+        assert!(ClientSampling::Fraction(1.0).validate(8).is_ok());
+        assert!(ClientSampling::Count(0).validate(8).is_err());
+        assert!(ClientSampling::Count(100).validate(8).is_ok(), "k > devices degrades");
+    }
+
+    #[test]
+    fn sampling_effective_k() {
+        assert_eq!(ClientSampling::Full.effective_k(10), 10);
+        assert_eq!(ClientSampling::Fraction(0.5).effective_k(10), 5);
+        assert_eq!(ClientSampling::Fraction(0.01).effective_k(10), 1, "at least one");
+        assert_eq!(ClientSampling::Fraction(1.0).effective_k(10), 10);
+        assert_eq!(ClientSampling::Count(3).effective_k(10), 3);
+        assert_eq!(ClientSampling::Count(99).effective_k(10), 10, "clamped to fleet");
+    }
+
+    #[test]
+    fn sampling_draw_is_sorted_distinct_and_round_deterministic() {
+        let s = ClientSampling::Fraction(0.5);
+        let a = s.draw(42, 3, 16);
+        let b = s.draw(42, 3, 16);
+        assert_eq!(a, b, "same (seed, round) => same participants");
+        assert_eq!(a.len(), 8);
+        assert!(a.windows(2).all(|w| w[0] < w[1]), "ascending & distinct: {a:?}");
+        assert!(a.iter().all(|&d| d < 16));
+        // different rounds draw different subsets (overwhelmingly likely
+        // for 16-choose-8; equality would indicate a broken stream)
+        let rounds: Vec<Vec<usize>> = (1..=6).map(|r| s.draw(42, r, 16)).collect();
+        assert!(
+            rounds.windows(2).any(|w| w[0] != w[1]),
+            "six rounds drew identical subsets"
+        );
+    }
+
+    #[test]
+    fn sampling_full_participation_shapes() {
+        assert_eq!(ClientSampling::Full.draw(1, 1, 4), vec![0, 1, 2, 3]);
+        // k >= devices degrades to full participation, identical vector
+        assert_eq!(ClientSampling::Count(9).draw(1, 1, 4), vec![0, 1, 2, 3]);
+        assert_eq!(ClientSampling::Fraction(1.0).draw(1, 1, 4), vec![0, 1, 2, 3]);
     }
 
     #[test]

@@ -21,6 +21,11 @@
 //! Class presets keep the experiment config's `jitter` setting so jittered
 //! runs stay available under heterogeneous fleets; bandwidth and latency
 //! come from the class table below.
+//!
+//! Under `uplink = "shared"` the per-device **uplink bandwidth** is
+//! superseded by the shared pipe's capacity (concurrent transfers split it
+//! fairly); the profile's propagation latency still applies per flow, and
+//! downlinks keep using the profile's private downlink bandwidth.
 
 use super::link::LinkConfig;
 use anyhow::{bail, Result};

@@ -31,13 +31,18 @@
 //! separately (`coordinator::engine`). The `parallel_determinism`
 //! integration test pins this end to end for both schedulers.
 //!
-//! The compute model is deliberately simple: each fan-out and each fan-in
-//! on device `d` costs `compute_s(d)` simulated seconds (the config's
-//! `base_compute_s` × the device profile's multiplier); server processing
-//! is instantaneous. Transfer times come from the link cost model
-//! ([`super::link`]).
+//! The compute model: each fan-out and each fan-in on device `d` costs
+//! `compute_s(d)` simulated seconds (the config's `base_compute_s` × the
+//! device profile's multiplier). Server processing occupies a serial
+//! busy resource for `server_service_s` per batch
+//! ([`super::event::ServerResource`]; `0` = the historical instantaneous
+//! server), and uplink transfer times come either from the private link
+//! cost model ([`super::link`]) or, in `uplink = "shared"` mode, from the
+//! fair-share fluid model ([`super::link::SharedUplink`]) that both
+//! schedulers drive through `UplinkStart`/`SharedDrain` events.
 
-use super::event::{DeviceId, Event, EventQueue};
+use super::event::{DeviceId, Event, EventQueue, ServerResource};
+use super::link::SharedUplink;
 use super::policy::StragglerPolicy;
 use anyhow::{bail, Result};
 
@@ -82,10 +87,29 @@ pub struct ServerOut {
     pub samples: u64,
 }
 
+/// What one fan-out produced for one device: the payload's exact wire
+/// size plus, in private-uplink mode, the already-charged transfer cost.
+#[derive(Debug, Clone, Copy)]
+pub struct UplinkMsg {
+    /// Exact wire bytes of the compressed payload.
+    pub wire_bytes: usize,
+    /// Private-mode transfer seconds (latency + serialization + jitter),
+    /// charged to the device link inside `fanout`. `0.0` in shared-uplink
+    /// mode, where the fair-share model decides the duration and the
+    /// scheduler charges it via [`RoundOps::charge_uplink`].
+    pub cost_s: f64,
+}
+
 /// The training-side operations a scheduler drives. Implemented by the
 /// trainer; all methods are device-local except `server_step`, which
 /// mutates shared server state and must be called serially (schedulers
 /// guarantee that).
+///
+/// The contention-model accessors (`server_service_s`,
+/// `shared_uplink_bps`, `uplink_latency_s`, `charge_uplink`) default to
+/// the pre-contention behavior — instantaneous server, private links — so
+/// simple implementations (mocks, sequential mode) need not override
+/// them.
 pub trait RoundOps {
     /// Number of devices in the round.
     fn n_devices(&self) -> usize;
@@ -97,10 +121,34 @@ pub trait RoundOps {
     /// phase on `dev` (profile-scaled).
     fn compute_s(&self, dev: DeviceId) -> f64;
 
-    /// Client forward + codec encode + uplink charge for each listed
-    /// device (the implementation may fan work across its thread pool).
-    /// Returns each device's uplink transfer seconds, in `devs` order.
-    fn fanout(&mut self, devs: &[DeviceId]) -> Result<Vec<f64>>;
+    /// Simulated seconds one server batch occupies the server resource
+    /// (`server_service_s`; `0` = infinitely fast server).
+    fn server_service_s(&self) -> f64 {
+        0.0
+    }
+
+    /// `Some(capacity_bps)` when all uplinks contend for one shared pipe
+    /// (`uplink = "shared"`); `None` for private per-device uplinks.
+    fn shared_uplink_bps(&self) -> Option<f64> {
+        None
+    }
+
+    /// Per-flow propagation latency for `dev`'s uplink in shared mode
+    /// (private mode folds latency into the `fanout` cost).
+    fn uplink_latency_s(&self, _dev: DeviceId) -> f64 {
+        0.0
+    }
+
+    /// Shared-mode accounting hook: record a drained flow's occupancy
+    /// seconds against `dev`'s link. (Bytes are charged at fan-out time,
+    /// charge-at-send, exactly like the private path — so a flow the
+    /// deadline abandons mid-pipe still counts its transmitted bytes.)
+    fn charge_uplink(&mut self, _dev: DeviceId, _busy_s: f64) {}
+
+    /// Client forward + codec encode (+ uplink charge in private mode)
+    /// for each listed device (the implementation may fan work across its
+    /// thread pool). Returns each device's [`UplinkMsg`], in `devs` order.
+    fn fanout(&mut self, devs: &[DeviceId]) -> Result<Vec<UplinkMsg>>;
 
     /// Server decode + train step + downlink charge for one device's
     /// pending uplink.
@@ -128,6 +176,10 @@ pub struct RoundReport {
     /// Event-clock duration of the round (compute + transfers + queueing;
     /// for deadline rounds, capped at the deadline).
     pub sim_round_s: f64,
+    /// Total simulated seconds uplinks spent queued for the server busy
+    /// resource this round (summed over executed server steps; `0` when
+    /// `server_service_s = 0`).
+    pub queue_wait_s: f64,
     /// `completed[d]`: device `d` finished all its steps and participates
     /// in this round's aggregation.
     pub completed: Vec<bool>,
@@ -158,9 +210,71 @@ pub fn build_scheduler(kind: SchedulerKind, policy: StragglerPolicy) -> Box<dyn 
     }
 }
 
+/// Push one device's uplink into the round's timeline: private mode
+/// schedules the arrival directly (cost already known); shared mode
+/// schedules a flow start for the fair-share pipe.
+fn submit_uplink(
+    q: &mut EventQueue,
+    shared: bool,
+    start_t: f64,
+    dev: DeviceId,
+    step: usize,
+    msg: &UplinkMsg,
+) {
+    if shared {
+        q.push(
+            start_t,
+            dev,
+            Event::UplinkStart {
+                step,
+                bytes: msg.wire_bytes,
+            },
+        );
+    } else {
+        q.push(start_t + msg.cost_s, dev, Event::UplinkArrived { step });
+    }
+}
+
+/// Drive the shared-uplink fluid model for one popped event. Returns
+/// `true` when the event belonged to the pipe (flow start or drain
+/// prediction) and was consumed; delivery is re-entered into the queue as
+/// a plain [`Event::UplinkArrived`], so scheduler control flow only ever
+/// reacts to arrivals.
+///
+/// The device id on a rescheduled [`Event::SharedDrain`] is the device
+/// that triggered the recompute — the flow actually draining is resolved
+/// inside [`SharedUplink::complete`], deterministically.
+fn pipe_event(
+    pipe: &mut SharedUplink,
+    q: &mut EventQueue,
+    ops: &mut dyn RoundOps,
+    ev: &super::event::Scheduled,
+) -> bool {
+    match ev.event {
+        Event::UplinkStart { step, bytes } => {
+            let (t_drain, gen) =
+                pipe.start(ev.time, ev.device, step, bytes, ops.uplink_latency_s(ev.device));
+            q.push(t_drain, ev.device, Event::SharedDrain { generation: gen });
+            true
+        }
+        Event::SharedDrain { generation } => {
+            if let Some((done, next)) = pipe.complete(generation) {
+                ops.charge_uplink(done.device, done.busy_s);
+                q.push(done.arrival_t, done.device, Event::UplinkArrived { step: done.step });
+                if let Some((t_next, gen)) = next {
+                    q.push(t_next, done.device, Event::SharedDrain { generation: gen });
+                }
+            }
+            true
+        }
+        _ => false,
+    }
+}
+
 /// Lockstep phases on the event queue — bit-identical op sequence to the
 /// pre-transport engine (fan-out all → server in device-id order → fan-in
-/// all, per local step).
+/// all, per local step) when the contention model is off
+/// (`uplink = private`, `server_service_s = 0`).
 pub struct SyncEventScheduler;
 
 impl RoundScheduler for SyncEventScheduler {
@@ -173,41 +287,58 @@ impl RoundScheduler for SyncEventScheduler {
         let steps = ops.steps();
         let all: Vec<DeviceId> = (0..n).collect();
         let mut q = EventQueue::new();
+        let mut pipe = ops.shared_uplink_bps().map(SharedUplink::new);
+        let mut server = ServerResource::new(ops.server_service_s());
         let mut t = 0.0f64;
         let (mut loss_sum, mut correct, mut samples, mut server_steps) = (0.0f64, 0u64, 0u64, 0u64);
+        let mut queue_wait_s = 0.0f64;
         for step in 0..steps {
             let ups = ops.fanout(&all)?;
             for d in 0..n {
-                q.push(t + ops.compute_s(d) + ups[d], d, Event::UplinkArrived { step });
+                submit_uplink(&mut q, pipe.is_some(), t + ops.compute_s(d), d, step, &ups[d]);
             }
             // Barrier: every uplink lands before the server phase starts.
             // The queue fixes the arrival order; lockstep mode then serves
-            // in device-id order regardless (legacy semantics).
+            // in device-id order regardless (legacy semantics). Shared-pipe
+            // bookkeeping events are consumed in-line.
             let mut barrier_t = t;
-            while let Some(ev) = q.pop() {
+            let mut landed = 0usize;
+            while landed < n {
+                let ev = q.pop().expect("uplinks still in flight");
+                if let Some(p) = pipe.as_mut() {
+                    if pipe_event(p, &mut q, ops, &ev) {
+                        continue;
+                    }
+                }
+                debug_assert!(matches!(ev.event, Event::UplinkArrived { .. }));
                 barrier_t = barrier_t.max(ev.time);
+                landed += 1;
             }
-            let mut downs = vec![0.0f64; n];
+            // Server phase: device-id order; uplinks all became ready at
+            // the barrier and queue for the serial server resource.
             // per-step partial sum, folded into the round total afterwards —
             // the exact f64 fold order of the pre-transport engine, so
             // reported losses stay bit-identical to it
             let mut step_loss = 0.0f64;
-            for (d, down) in downs.iter_mut().enumerate() {
+            for d in 0..n {
+                let (start, end) = server.acquire(barrier_t);
+                queue_wait_s += start - barrier_t;
                 let out = ops.server_step(d)?;
                 step_loss += out.loss;
                 correct += out.correct;
                 samples += out.samples;
                 server_steps += 1;
-                *down = out.downlink_s;
+                q.push(end + out.downlink_s, d, Event::DownlinkArrived { step });
             }
             loss_sum += step_loss;
-            for d in 0..n {
-                q.push(barrier_t + downs[d], d, Event::DownlinkArrived { step });
-            }
             // Step ends when the slowest device has its gradient applied.
+            // (Only downlinks count: a stale shared-drain prediction may
+            // still be queued at the same instant as the last arrival.)
             let mut ready_t = barrier_t;
             while let Some(ev) = q.pop() {
-                ready_t = ready_t.max(ev.time + ops.compute_s(ev.device));
+                if matches!(ev.event, Event::DownlinkArrived { .. }) {
+                    ready_t = ready_t.max(ev.time + ops.compute_s(ev.device));
+                }
             }
             ops.fanin(&all)?;
             t = ready_t;
@@ -218,6 +349,7 @@ impl RoundScheduler for SyncEventScheduler {
             samples,
             server_steps,
             sim_round_s: t,
+            queue_wait_s,
             completed: vec![true; n],
         })
     }
@@ -247,6 +379,7 @@ impl RoundScheduler for AsyncEventScheduler {
                 samples: 0,
                 server_steps: 0,
                 sim_round_s: 0.0,
+                queue_wait_s: 0.0,
                 completed: vec![true; n],
             });
         }
@@ -260,7 +393,10 @@ impl RoundScheduler for AsyncEventScheduler {
         };
 
         let mut q = EventQueue::new();
+        let mut pipe = ops.shared_uplink_bps().map(SharedUplink::new);
+        let mut server = ServerResource::new(ops.server_service_s());
         let (mut loss_sum, mut correct, mut samples, mut server_steps) = (0.0f64, 0u64, 0u64, 0u64);
+        let mut queue_wait_s = 0.0f64;
         let mut done = 0usize;
         let mut close_t: Option<f64> = None;
         let mut last_t = 0.0f64;
@@ -270,25 +406,43 @@ impl RoundScheduler for AsyncEventScheduler {
         let all: Vec<DeviceId> = (0..n).collect();
         let ups = ops.fanout(&all)?;
         for d in 0..n {
-            q.push(ops.compute_s(d) + ups[d], d, Event::UplinkArrived { step: 0 });
+            submit_uplink(&mut q, pipe.is_some(), ops.compute_s(d), d, 0, &ups[d]);
         }
 
         while let Some(ev) = q.pop() {
+            // A stale drain prediction is bookkeeping noise, not network
+            // activity — discard it before the deadline check so a
+            // long-superseded prediction cannot close a round whose real
+            // events all finished in time.
+            if let (Some(p), Event::SharedDrain { generation }) = (pipe.as_ref(), ev.event) {
+                if generation != p.generation() {
+                    continue;
+                }
+            }
             if let Some(t_max) = deadline {
                 if ev.time > t_max {
                     close_t = Some(t_max);
                     break;
                 }
             }
+            if let Some(p) = pipe.as_mut() {
+                if pipe_event(p, &mut q, ops, &ev) {
+                    continue;
+                }
+            }
             last_t = ev.time;
             match ev.event {
                 Event::UplinkArrived { step } => {
+                    // The uplink queues for the serial server resource;
+                    // fan-in order is arrival order, service back-to-back.
+                    let (start, end) = server.acquire(ev.time);
+                    queue_wait_s += start - ev.time;
                     let out = ops.server_step(ev.device)?;
                     loss_sum += out.loss;
                     correct += out.correct;
                     samples += out.samples;
                     server_steps += 1;
-                    q.push(ev.time + out.downlink_s, ev.device, Event::DownlinkArrived { step });
+                    q.push(end + out.downlink_s, ev.device, Event::DownlinkArrived { step });
                 }
                 Event::DownlinkArrived { step } => {
                     // Batch ties: downlinks landing at the bit-same instant
@@ -323,11 +477,15 @@ impl RoundScheduler for AsyncEventScheduler {
                             continuing.iter().map(|&(d, _)| d).collect();
                         let ups = ops.fanout(&cont_devs)?;
                         for (i, &(d, s)) in continuing.iter().enumerate() {
-                            // fan-in compute + next fan-out compute + uplink
-                            q.push(
-                                ev.time + 2.0 * ops.compute_s(d) + ups[i],
+                            // fan-in compute + next fan-out compute, then
+                            // the uplink (direct arrival or shared flow)
+                            submit_uplink(
+                                &mut q,
+                                pipe.is_some(),
+                                ev.time + 2.0 * ops.compute_s(d),
                                 d,
-                                Event::UplinkArrived { step: s + 1 },
+                                s + 1,
+                                &ups[i],
                             );
                         }
                     }
@@ -347,6 +505,9 @@ impl RoundScheduler for AsyncEventScheduler {
                         }
                     }
                 }
+                Event::UplinkStart { .. } | Event::SharedDrain { .. } => {
+                    unreachable!("pipe events are consumed before dispatch")
+                }
             }
         }
         q.clear();
@@ -361,6 +522,7 @@ impl RoundScheduler for AsyncEventScheduler {
             samples,
             server_steps,
             sim_round_s: close_t.unwrap_or(last_t),
+            queue_wait_s,
             completed,
         })
     }
@@ -371,14 +533,21 @@ mod tests {
     use super::*;
 
     /// Pure-timing mock: per-device compute/uplink/downlink costs, plus an
-    /// op log so tests can pin exact scheduling decisions.
+    /// op log so tests can pin exact scheduling decisions. The contention
+    /// knobs (`service_s`, `shared_bps`, per-device `bytes`/`latency`)
+    /// default to the pre-contention behavior.
     struct MockOps {
         steps: usize,
         compute: Vec<f64>,
         up_s: Vec<f64>,
         down_s: Vec<f64>,
+        bytes: Vec<usize>,
+        latency: Vec<f64>,
+        service_s: f64,
+        shared_bps: Option<f64>,
         log: Vec<String>,
         cancelled: Vec<DeviceId>,
+        charges: Vec<(DeviceId, u64)>,
     }
 
     impl MockOps {
@@ -388,8 +557,13 @@ mod tests {
                 compute: vec![c; n],
                 up_s: vec![up; n],
                 down_s: vec![down; n],
+                bytes: vec![0; n],
+                latency: vec![0.0; n],
+                service_s: 0.0,
+                shared_bps: None,
                 log: Vec::new(),
                 cancelled: Vec::new(),
+                charges: Vec::new(),
             }
         }
 
@@ -411,9 +585,27 @@ mod tests {
         fn compute_s(&self, dev: DeviceId) -> f64 {
             self.compute[dev]
         }
-        fn fanout(&mut self, devs: &[DeviceId]) -> Result<Vec<f64>> {
+        fn server_service_s(&self) -> f64 {
+            self.service_s
+        }
+        fn shared_uplink_bps(&self) -> Option<f64> {
+            self.shared_bps
+        }
+        fn uplink_latency_s(&self, dev: DeviceId) -> f64 {
+            self.latency[dev]
+        }
+        fn charge_uplink(&mut self, dev: DeviceId, busy_s: f64) {
+            self.charges.push((dev, busy_s.to_bits()));
+        }
+        fn fanout(&mut self, devs: &[DeviceId]) -> Result<Vec<UplinkMsg>> {
             self.log.push(format!("fanout:{devs:?}"));
-            Ok(devs.iter().map(|&d| self.up_s[d]).collect())
+            Ok(devs
+                .iter()
+                .map(|&d| UplinkMsg {
+                    wire_bytes: self.bytes[d],
+                    cost_s: self.up_s[d],
+                })
+                .collect())
         }
         fn server_step(&mut self, dev: DeviceId) -> Result<ServerOut> {
             self.log.push(format!("server:{dev}"));
@@ -472,12 +664,8 @@ mod tests {
     fn async_server_consumes_in_arrival_order() {
         // arrival = compute + up: dev2 lands first, then dev0, then dev1
         let mut ops = MockOps {
-            steps: 1,
-            compute: vec![1.0, 1.0, 1.0],
             up_s: vec![2.0, 5.0, 0.5],
-            down_s: vec![1.0; 3],
-            log: Vec::new(),
-            cancelled: Vec::new(),
+            ..MockOps::uniform(3, 1, 1.0, 0.0, 1.0)
         };
         let report = AsyncEventScheduler {
             policy: StragglerPolicy::WaitAll,
@@ -508,12 +696,10 @@ mod tests {
     #[test]
     fn async_deadline_drops_unfinished_devices() {
         let mut ops = MockOps {
-            steps: 1,
             compute: vec![1.0, 10.0],
             up_s: vec![1.0, 10.0],
             down_s: vec![1.0, 10.0],
-            log: Vec::new(),
-            cancelled: Vec::new(),
+            ..MockOps::uniform(2, 1, 0.0, 0.0, 0.0)
         };
         let report = AsyncEventScheduler {
             policy: StragglerPolicy::DeadlineDrop { deadline_s: 5.0 },
@@ -600,12 +786,10 @@ mod tests {
     #[test]
     fn async_is_deterministic_across_runs() {
         let mk = || MockOps {
-            steps: 3,
             compute: vec![0.25, 1.0, 0.5, 2.0],
             up_s: vec![0.125, 0.5, 2.0, 0.0625],
             down_s: vec![0.5, 0.25, 1.0, 0.125],
-            log: Vec::new(),
-            cancelled: Vec::new(),
+            ..MockOps::uniform(4, 3, 0.0, 0.0, 0.0)
         };
         let run = |policy: StragglerPolicy| {
             let mut ops = mk();
@@ -622,6 +806,183 @@ mod tests {
         for policy in [
             StragglerPolicy::WaitAll,
             StragglerPolicy::DeadlineDrop { deadline_s: 6.0 },
+            StragglerPolicy::Quorum { k: 2 },
+        ] {
+            assert_eq!(run(policy), run(policy), "{}", policy.name());
+        }
+    }
+
+    #[test]
+    fn server_service_serializes_tied_arrivals_in_seq_order() {
+        // homogeneous fleet, async: all three uplinks land at t=2 (tie),
+        // seq order = device order; the 1 s server service then fans in
+        // back-to-back at 2, 3, 4 — and queue wait is 0 + 1 + 2 = 3 s
+        let mut ops = MockOps {
+            service_s: 1.0,
+            ..MockOps::uniform(3, 1, 1.0, 1.0, 0.5)
+        };
+        let report = AsyncEventScheduler {
+            policy: StragglerPolicy::WaitAll,
+        }
+        .run_round(&mut ops)
+        .unwrap();
+        assert_eq!(ops.server_order(), vec![0, 1, 2], "FIFO under ties");
+        assert_eq!(report.queue_wait_s, 3.0);
+        // dev2: service ends 5.0, downlink 0.5, fanin compute 1.0 => 6.5
+        assert_eq!(report.sim_round_s, 6.5);
+        assert_eq!(report.completed, vec![true; 3]);
+    }
+
+    #[test]
+    fn sync_server_service_queues_after_barrier() {
+        // sync, 2 devices, 1 step: barrier at 3.0, service 2 s each =>
+        // dev0 waits 0, dev1 waits 2; downlinks at 5+4, 7+4
+        let mut ops = MockOps {
+            service_s: 2.0,
+            ..MockOps::uniform(2, 1, 1.0, 2.0, 4.0)
+        };
+        let report = SyncEventScheduler.run_round(&mut ops).unwrap();
+        assert_eq!(report.queue_wait_s, 2.0);
+        // dev1 gradient lands at 7 + 4 = 11, fanin compute 1 => 12
+        assert_eq!(report.sim_round_s, 12.0);
+    }
+
+    #[test]
+    fn zero_service_time_reports_zero_queue_wait() {
+        for scheduler in [SchedulerKind::Sync, SchedulerKind::Async] {
+            let mut ops = MockOps::uniform(3, 2, 1.0, 2.0, 3.0);
+            let report = build_scheduler(scheduler, StragglerPolicy::WaitAll)
+                .run_round(&mut ops)
+                .unwrap();
+            assert_eq!(
+                report.queue_wait_s.to_bits(),
+                0.0f64.to_bits(),
+                "{}: instantaneous server never queues",
+                scheduler.name()
+            );
+        }
+    }
+
+    #[test]
+    fn shared_uplink_single_device_is_bitwise_private() {
+        // one device on the shared pipe: fair share of 1 is the whole
+        // pipe, so timings must be bit-for-bit the private-link run
+        let capacity = 8e6;
+        let latency = 0.013;
+        let bytes = 750_000usize;
+        let private_cost = latency + (bytes as f64 * 8.0) / capacity;
+        let run = |shared: bool| {
+            let mut ops = MockOps {
+                bytes: vec![bytes],
+                latency: vec![latency],
+                up_s: vec![if shared { 0.0 } else { private_cost }],
+                shared_bps: if shared { Some(capacity) } else { None },
+                ..MockOps::uniform(1, 2, 0.5, 0.0, 0.25)
+            };
+            let r = AsyncEventScheduler {
+                policy: StragglerPolicy::WaitAll,
+            }
+            .run_round(&mut ops)
+            .unwrap();
+            (r.sim_round_s.to_bits(), r.loss_sum.to_bits(), ops.server_order())
+        };
+        assert_eq!(run(true), run(false), "single shared flow == private cost");
+    }
+
+    #[test]
+    fn shared_uplink_concurrent_transfers_contend() {
+        // two identical devices, shared pipe the size of one private
+        // link: both uplinks serialize in 2x the solo time (fair share),
+        // and the round is correspondingly longer than private mode
+        let capacity = 8e6;
+        let bytes = 1_000_000usize; // 1 s solo at 8 Mbit/s
+        let solo = (bytes as f64 * 8.0) / capacity;
+        let mk = |shared: bool| MockOps {
+            bytes: vec![bytes; 2],
+            up_s: vec![if shared { 0.0 } else { solo }; 2],
+            shared_bps: if shared { Some(capacity) } else { None },
+            ..MockOps::uniform(2, 1, 0.0, 0.0, 0.0)
+        };
+        let shared = AsyncEventScheduler {
+            policy: StragglerPolicy::WaitAll,
+        }
+        .run_round(&mut mk(true))
+        .unwrap();
+        let private = AsyncEventScheduler {
+            policy: StragglerPolicy::WaitAll,
+        }
+        .run_round(&mut mk(false))
+        .unwrap();
+        assert!((private.sim_round_s - 1.0).abs() < 1e-9, "private: both in 1 s");
+        assert!(
+            (shared.sim_round_s - 2.0).abs() < 1e-9,
+            "shared: fair-share halves the rate, got {}",
+            shared.sim_round_s
+        );
+        assert_eq!(shared.server_steps, 2);
+        assert_eq!(shared.completed, vec![true; 2]);
+    }
+
+    #[test]
+    fn shared_uplink_charges_occupancy_at_drain() {
+        // bytes are charged at fan-out (trainer side, charge-at-send);
+        // the scheduler's hook carries only drained occupancy seconds
+        let mut ops = MockOps {
+            bytes: vec![1_000_000; 2],
+            shared_bps: Some(8e6),
+            ..MockOps::uniform(2, 1, 0.0, 0.0, 0.0)
+        };
+        AsyncEventScheduler {
+            policy: StragglerPolicy::WaitAll,
+        }
+        .run_round(&mut ops)
+        .unwrap();
+        assert_eq!(ops.charges.len(), 2, "one occupancy charge per drained flow");
+        for &(_, t) in &ops.charges {
+            assert!((f64::from_bits(t) - 2.0).abs() < 1e-9, "each flow took 2 s fair-share");
+        }
+    }
+
+    #[test]
+    fn shared_uplink_works_under_sync_scheduler() {
+        // sync + shared: the barrier is the last fair-share drain
+        let mut ops = MockOps {
+            bytes: vec![1_000_000; 2],
+            shared_bps: Some(8e6),
+            ..MockOps::uniform(2, 1, 0.0, 0.0, 0.0)
+        };
+        let report = SyncEventScheduler.run_round(&mut ops).unwrap();
+        assert_eq!(ops.server_order(), vec![0, 1], "lockstep stays device-id order");
+        assert!((report.sim_round_s - 2.0).abs() < 1e-9, "barrier at the 2 s drain");
+        assert_eq!(report.server_steps, 2);
+    }
+
+    #[test]
+    fn shared_uplink_async_deterministic_across_runs() {
+        let mk = || MockOps {
+            compute: vec![0.25, 1.0, 0.5, 2.0],
+            down_s: vec![0.5, 0.25, 1.0, 0.125],
+            bytes: vec![300_000, 1_000_000, 650_000, 125_000],
+            latency: vec![0.005, 0.04, 0.005, 0.04],
+            shared_bps: Some(10e6),
+            service_s: 0.01,
+            ..MockOps::uniform(4, 3, 0.0, 0.0, 0.0)
+        };
+        let run = |policy: StragglerPolicy| {
+            let mut ops = mk();
+            let r = AsyncEventScheduler { policy }.run_round(&mut ops).unwrap();
+            (
+                ops.log.clone(),
+                ops.charges.clone(),
+                r.completed.clone(),
+                r.sim_round_s.to_bits(),
+                r.queue_wait_s.to_bits(),
+                r.server_steps,
+            )
+        };
+        for policy in [
+            StragglerPolicy::WaitAll,
+            StragglerPolicy::DeadlineDrop { deadline_s: 4.0 },
             StragglerPolicy::Quorum { k: 2 },
         ] {
             assert_eq!(run(policy), run(policy), "{}", policy.name());

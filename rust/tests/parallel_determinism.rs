@@ -21,7 +21,7 @@ use slfac::config::{ExperimentConfig, SyncMode};
 use slfac::coordinator::{TrainOutcome, Trainer};
 use slfac::net::CommStats;
 use slfac::runtime::{write_sim_manifest, ExecutorHandle, HostTensor, SimManifestSpec};
-use slfac::transport::{SchedulerKind, StragglerPolicy};
+use slfac::transport::{ClientSampling, SchedulerKind, StragglerPolicy, UplinkMode};
 
 const BATCH: usize = 8;
 
@@ -311,6 +311,246 @@ fn async_deadline_all_dropped_is_graceful() {
         assert!(m.uplink_bytes > 0, "fan-out bytes were already on the wire");
         assert_eq!(m.downlink_bytes, 0, "no server step ⇒ no downlink");
         assert_eq!(m.train_loss, 0.0, "no executed server steps");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// --- contention model (server service + shared uplink) -------------------
+
+#[test]
+fn contention_model_is_bit_transparent() {
+    // shared uplink + server service + client sampling, both schedulers:
+    // workers = 4 and workers = 0 must reproduce the workers = 1 run
+    // bit-for-bit — contention timing comes from event order, never from
+    // thread scheduling
+    let dir = sim_dir("contention");
+    for &seed in &[7u64, 1234] {
+        for scheduler in [SchedulerKind::Sync, SchedulerKind::Async] {
+            for codec in ["slfac", "tk-sl"] {
+                let mk = |workers: usize| {
+                    let mut c = cfg(&dir, codec, SyncMode::ParallelFedAvg, seed, workers);
+                    c.name = format!("contention_{codec}_{seed}_{workers}");
+                    c.scheduler = scheduler;
+                    c.uplink = UplinkMode::Shared;
+                    c.shared_uplink_bps = Some(20e6);
+                    c.server_service_s = 0.001;
+                    c.sampling = ClientSampling::Count(3);
+                    c
+                };
+                let reference = run(mk(1));
+                for workers in [4usize, 0] {
+                    let got = run(mk(workers));
+                    assert_bit_identical(
+                        &reference,
+                        &got,
+                        &format!(
+                            "contention seed={seed} sched={} codec={codec} workers={workers}",
+                            scheduler.name()
+                        ),
+                    );
+                }
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn shared_uplink_single_device_matches_private_bitwise() {
+    // the contention acceptance edge: one device on a shared pipe of the
+    // same capacity as its private link costs bit-for-bit the same —
+    // history, comm stats, and parameters
+    let dir = sim_dir("shared_single");
+    for scheduler in [SchedulerKind::Sync, SchedulerKind::Async] {
+        let mk = |uplink: UplinkMode| {
+            let mut c = cfg(&dir, "slfac", SyncMode::ParallelFedAvg, 17, 2);
+            c.name = format!("shared_single_{}", uplink.name());
+            c.devices = 1;
+            c.train_samples = 80;
+            c.scheduler = scheduler;
+            c.uplink = uplink;
+            c
+        };
+        let private = run(mk(UplinkMode::Private));
+        let shared = run(mk(UplinkMode::Shared));
+        assert_bit_identical(
+            &private,
+            &shared,
+            &format!("single device shared-vs-private, scheduler={}", scheduler.name()),
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn shared_uplink_contention_stretches_rounds_but_not_bytes() {
+    // 4 devices on one pipe vs 4 private pipes of the same per-link rate:
+    // identical bytes (compression is orthogonal to contention), strictly
+    // longer simulated rounds (fair-share quarters the rate)
+    let dir = sim_dir("shared_slow");
+    let mk = |uplink: UplinkMode| {
+        let mut c = cfg(&dir, "identity", SyncMode::ParallelFedAvg, 3, 2);
+        c.name = format!("shared_slow_{}", uplink.name());
+        c.scheduler = SchedulerKind::Async;
+        c.uplink = uplink;
+        // serialization-dominated regime so the fair-share split shows
+        c.link.uplink_bps = 1e6;
+        c.link.latency_s = 0.0;
+        c
+    };
+    let private = run(mk(UplinkMode::Private));
+    let shared = run(mk(UplinkMode::Shared));
+    assert_eq!(
+        private.outcome.comm.uplink_bytes, shared.outcome.comm.uplink_bytes,
+        "contention must not change what is transmitted"
+    );
+    assert_eq!(
+        param_bits(&private.client),
+        param_bits(&shared.client),
+        "contention is timing-only: training math identical"
+    );
+    for (p, s) in private
+        .outcome
+        .history
+        .rounds
+        .iter()
+        .zip(&shared.outcome.history.rounds)
+    {
+        assert!(
+            s.sim_time_s > 1.5 * p.sim_time_s,
+            "round {}: shared {} should be well beyond private {}",
+            p.round,
+            s.sim_time_s,
+            p.sim_time_s
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn server_service_time_queues_uplinks() {
+    // service on: queue wait appears and rounds stretch; service off:
+    // queue wait is exactly zero
+    let dir = sim_dir("service");
+    let mk = |service_s: f64| {
+        let mut c = cfg(&dir, "identity", SyncMode::ParallelFedAvg, 9, 2);
+        c.name = format!("service_{}", (service_s * 1e6) as u64);
+        c.scheduler = SchedulerKind::Async;
+        c.server_service_s = service_s;
+        c
+    };
+    let instant = run(mk(0.0));
+    let busy = run(mk(0.05));
+    for m in &instant.outcome.history.rounds {
+        assert_eq!(m.queue_wait_s.to_bits(), 0.0f64.to_bits(), "round {}", m.round);
+    }
+    for (i, m) in busy.outcome.history.rounds.iter().enumerate() {
+        assert!(m.queue_wait_s > 0.0, "4 tied arrivals must queue (round {})", m.round);
+        assert!(
+            m.sim_time_s > instant.outcome.history.rounds[i].sim_time_s,
+            "service time lengthens the round"
+        );
+    }
+    // timing-only: same bytes, same parameters
+    assert_eq!(
+        param_bits(&instant.client),
+        param_bits(&busy.client),
+        "server service must not change training math"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn shared_uplink_deadline_still_charges_sent_bytes() {
+    // charge-at-send must hold in shared mode too: a deadline that
+    // abandons every flow mid-pipe (or before its start event pops)
+    // still counts the bytes that went out — same convention as the
+    // private path, so uplink totals never depend on the contention mode
+    let dir = sim_dir("shared_deadline");
+    let mut c = cfg(&dir, "slfac", SyncMode::ParallelFedAvg, 5, 2);
+    c.scheduler = SchedulerKind::Async;
+    c.uplink = UplinkMode::Shared;
+    c.straggler = StragglerPolicy::DeadlineDrop { deadline_s: 1e-9 };
+    let r = run(c);
+    for m in &r.outcome.history.rounds {
+        assert_eq!(m.dropped_devices, 4, "all devices drop");
+        assert!(m.uplink_bytes > 0, "fan-out bytes were already on the wire");
+        assert_eq!(m.downlink_bytes, 0, "no server step => no downlink");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// --- client sampling ------------------------------------------------------
+
+#[test]
+fn sample_k_at_least_fleet_size_is_full_participation() {
+    // sample_k >= devices degrades to the unsampled run, bit-for-bit
+    let dir = sim_dir("sample_full");
+    let baseline = run(cfg(&dir, "slfac", SyncMode::ParallelFedAvg, 21, 2));
+    let mut c = cfg(&dir, "slfac", SyncMode::ParallelFedAvg, 21, 2);
+    c.sampling = ClientSampling::Count(64); // fleet is 4
+    let sampled = run(c);
+    assert_bit_identical(&baseline, &sampled, "sample_k >= devices");
+    for m in &sampled.outcome.history.rounds {
+        assert_eq!(m.sampled_devices, 4);
+        assert_eq!(m.dropped_devices, 0);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sampling_cuts_traffic_and_reports_membership() {
+    let dir = sim_dir("sample_half");
+    let full = run(cfg(&dir, "identity", SyncMode::ParallelFedAvg, 33, 2));
+    let mut c = cfg(&dir, "identity", SyncMode::ParallelFedAvg, 33, 2);
+    c.sampling = ClientSampling::Fraction(0.5);
+    let half = run(c);
+    for (f, h) in full
+        .outcome
+        .history
+        .rounds
+        .iter()
+        .zip(&half.outcome.history.rounds)
+    {
+        assert_eq!(h.sampled_devices, 2, "round(0.5 * 4) participants");
+        assert_eq!(h.dropped_devices, 0, "sampling is not dropping");
+        // identity codec: per-device payloads are constant, so half the
+        // fleet transmits exactly half the bytes
+        assert_eq!(h.uplink_bytes * 2, f.uplink_bytes, "round {}", f.round);
+        assert_eq!(h.downlink_bytes * 2, f.downlink_bytes);
+    }
+    // sampling must also be bit-transparent across worker counts
+    let mut c1 = cfg(&dir, "identity", SyncMode::ParallelFedAvg, 33, 1);
+    c1.sampling = ClientSampling::Fraction(0.5);
+    let seq = run(c1);
+    assert_bit_identical(&seq, &half, "sampled run workers=1 vs 2");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sampling_composes_with_straggler_policies() {
+    // quorum over the sampled subset on a heterogeneous fleet: still
+    // deterministic across workers, drops counted within participants
+    let dir = sim_dir("sample_quorum");
+    let mk = |workers: usize| {
+        let mut c = async_cfg(
+            &dir,
+            "slfac",
+            11,
+            workers,
+            "wifi/lte",
+            StragglerPolicy::Quorum { k: 2 },
+        );
+        c.sampling = ClientSampling::Count(3);
+        c
+    };
+    let reference = run(mk(1));
+    for workers in [4usize, 0] {
+        assert_bit_identical(&reference, &run(mk(workers)), "sampled quorum");
+    }
+    for m in &reference.outcome.history.rounds {
+        assert_eq!(m.sampled_devices, 3);
+        assert_eq!(m.dropped_devices, 1, "3 sampled, quorum 2 => 1 dropped");
     }
     let _ = std::fs::remove_dir_all(&dir);
 }
