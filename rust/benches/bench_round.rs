@@ -11,18 +11,32 @@
 //! `quorum` straggler policies. This is the CI smoke surface for the
 //! async scheduler.
 //!
-//! Section 3 (`xla`; requires `make artifacts`): one full split-learning
+//! Section 3 (`codec`; always runs): **codec kernel micro-benches** —
+//! compress+decompress MB/s per codec on an MNIST-scale 14×14 and a
+//! CIFAR-scale 32×32 plane, the slfac fused-vs-reference kernel ratio,
+//! and fast-vs-reference full async rounds at 64/256 devices. Results
+//! additionally land in machine-readable `BENCH_codec.json` so future
+//! PRs get a perf trajectory.
+//!
+//! Section 4 (`xla`; requires `make artifacts`): one full split-learning
 //! round over real PJRT artifacts per codec — client_fwd, compress,
 //! uplink, idct, server_step, compress, downlink, client_step.
 //!
-//! `SLFAC_BENCH_ONLY=engine|async|xla` restricts the run to one section
-//! (CI uses this to smoke the async scenarios in isolation).
+//! `SLFAC_BENCH_ONLY=engine|async|codec|xla` restricts the run to one
+//! section (CI uses this to smoke the async scenarios and the codec
+//! kernels in isolation).
 
-use slfac::bench::{BenchResult, Bencher};
+use slfac::bench::{black_box, BenchResult, Bencher};
+use slfac::codec::{self, CodecParams, CodecScratch, Payload};
 use slfac::config::ExperimentConfig;
 use slfac::coordinator::Trainer;
+use slfac::dct::Dct2d;
+use slfac::json::Json;
+use slfac::rng::Pcg32;
 use slfac::runtime::{write_sim_manifest, ExecutorHandle, SimManifestSpec};
+use slfac::tensor::Tensor;
 use slfac::transport::{ClientSampling, SchedulerKind, StragglerPolicy, UplinkMode};
+use std::collections::BTreeMap;
 
 const SIM_BATCH: usize = 8;
 
@@ -225,12 +239,186 @@ fn bench_async_scenarios(b: &mut Bencher) {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// One micro-bench row destined for `BENCH_codec.json`.
+fn micro_row(label: &str, shape: &[usize], op: &str, r: &BenchResult, payload: &Payload) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("codec".to_string(), Json::Str(label.to_string()));
+    m.insert(
+        "shape".to_string(),
+        Json::Str(
+            shape
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join("x"),
+        ),
+    );
+    m.insert("op".to_string(), Json::Str(op.to_string()));
+    m.insert("median_ns".to_string(), Json::Num(r.median.as_nanos() as f64));
+    m.insert("mb_per_s".to_string(), Json::Num(r.mb_per_s().unwrap_or(0.0)));
+    m.insert("wire_bytes".to_string(), Json::Num(payload.wire_bytes() as f64));
+    m.insert(
+        "compression_ratio".to_string(),
+        Json::Num(payload.compression_ratio()),
+    );
+    Json::Obj(m)
+}
+
+/// Section 3: codec kernel micro-benches + fast-vs-reference rounds, with
+/// machine-readable output (`BENCH_codec.json`).
+fn bench_codec_kernels(b: &mut Bencher) {
+    let mut micro_rows: Vec<Json> = Vec::new();
+    let mut kernel_ratios = BTreeMap::new();
+
+    for shape in [[8usize, 16, 14, 14], [8, 16, 32, 32]] {
+        let raw_bytes = shape.iter().product::<usize>() * 4;
+        let x = codec::smooth_activations(&shape, 42);
+        let coeffs = Dct2d::forward_tensor(&x);
+        b.section(&format!(
+            "codec kernels: compress+decompress, activations {shape:?} ({} KiB raw)",
+            raw_bytes / 1024
+        ));
+
+        // every registered codec on its fused/default path, plus the slfac
+        // reference kernel for the fast-vs-reference ratio
+        let mut variants: Vec<(String, Box<dyn codec::ActivationCodec>)> = codec::ALL_CODECS
+            .iter()
+            .map(|name| {
+                let c = codec::by_name(name, &CodecParams::default()).unwrap();
+                (name.to_string(), c)
+            })
+            .collect();
+        let ref_params = CodecParams {
+            fast_path: false,
+            ..Default::default()
+        };
+        variants.push((
+            "slfac-reference".to_string(),
+            codec::by_name("slfac", &ref_params).unwrap(),
+        ));
+
+        let mut medians: BTreeMap<String, (f64, f64)> = BTreeMap::new();
+        for (label, c) in &variants {
+            let input = if c.frequency_domain() { &coeffs } else { &x };
+            let mut scratch = CodecScratch::new();
+            let mut rng = Pcg32::seeded(7);
+            let mut payload = Payload::empty();
+            c.compress_into(input, &mut rng, &mut scratch, &mut payload)
+                .unwrap();
+            let rc = b
+                .bench_bytes(&format!("{label}/compress"), raw_bytes, || {
+                    // the body buffer recycles through `payload` itself
+                    c.compress_into(black_box(input), &mut rng, &mut scratch, &mut payload)
+                        .unwrap();
+                })
+                .clone();
+            let mut out = Tensor::zeros(&[1]);
+            let rd = b
+                .bench_bytes(&format!("{label}/decompress"), raw_bytes, || {
+                    c.decompress_into(black_box(&payload), &mut scratch, &mut out)
+                        .unwrap();
+                })
+                .clone();
+            micro_rows.push(micro_row(label, &shape, "compress", &rc, &payload));
+            micro_rows.push(micro_row(label, &shape, "decompress", &rd, &payload));
+            medians.insert(
+                label.clone(),
+                (rc.median.as_secs_f64(), rd.median.as_secs_f64()),
+            );
+        }
+        if let (Some(fast), Some(reference)) =
+            (medians.get("slfac"), medians.get("slfac-reference"))
+        {
+            let shape_key = format!("{}x{}", shape[2], shape[3]);
+            println!(
+                "    -> slfac fused-vs-reference: compress x{:.2}, decompress x{:.2} ({shape_key})",
+                reference.0 / fast.0.max(1e-12),
+                reference.1 / fast.1.max(1e-12),
+            );
+            kernel_ratios.insert(
+                format!("compress_{shape_key}"),
+                Json::Num(reference.0 / fast.0.max(1e-12)),
+            );
+            kernel_ratios.insert(
+                format!("decompress_{shape_key}"),
+                Json::Num(reference.1 / fast.1.max(1e-12)),
+            );
+        }
+    }
+
+    // fast vs reference through full async rounds at fleet scale — the
+    // acceptance-criteria numbers for the 64/256-device scenarios
+    b.section("slfac fast vs reference kernels: async wifi/lte rounds, 64/256 devices");
+    let dir = format!(
+        "{}/slfac_bench_codec_{}",
+        std::env::temp_dir().display(),
+        std::process::id()
+    );
+    write_sim_manifest(
+        &dir,
+        &[SimManifestSpec {
+            preset: "mnist".into(),
+            batch_size: SIM_BATCH,
+            act_channels: 8,
+            act_hw: 14,
+        }],
+    )
+    .unwrap();
+    let exec = ExecutorHandle::spawn_sim(&dir, &["mnist".to_string()]).unwrap();
+    let mut round_rows: Vec<Json> = Vec::new();
+    for devices in [64usize, 256] {
+        let mut medians: Vec<f64> = Vec::new();
+        for (label, fast) in [("fast", true), ("reference", false)] {
+            let mut cfg = sim_cfg(&dir, "slfac", devices, 0);
+            cfg.name = format!("bench_codec_{label}_{devices}d");
+            cfg.batches_per_round = 1;
+            cfg.train_samples = 16 * devices;
+            cfg.scheduler = SchedulerKind::Async;
+            cfg.profile = "wifi/lte".into();
+            cfg.codec_params.fast_path = fast;
+            let mut trainer = Trainer::new(cfg, exec.clone()).unwrap();
+            let _ = trainer.run().unwrap(); // warm
+            let r = b
+                .bench(&format!("round/slfac-{label}/devices={devices}"), || {
+                    let _ = trainer.run().unwrap();
+                })
+                .clone();
+            medians.push(r.median.as_secs_f64());
+        }
+        let speedup = medians[1] / medians[0].max(1e-12);
+        println!("    -> fast-path round speedup x{speedup:.2} ({devices} devices)");
+        let mut m = BTreeMap::new();
+        m.insert("devices".to_string(), Json::Num(devices as f64));
+        m.insert("fast_round_s".to_string(), Json::Num(medians[0]));
+        m.insert("reference_round_s".to_string(), Json::Num(medians[1]));
+        m.insert("speedup".to_string(), Json::Num(speedup));
+        round_rows.push(Json::Obj(m));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // machine-readable trajectory file
+    let mut root = BTreeMap::new();
+    root.insert(
+        "schema".to_string(),
+        Json::Str("slfac-bench-codec/1".to_string()),
+    );
+    root.insert("micro".to_string(), Json::Arr(micro_rows));
+    root.insert(
+        "slfac_fast_vs_reference".to_string(),
+        Json::Obj(kernel_ratios),
+    );
+    root.insert("rounds".to_string(), Json::Arr(round_rows));
+    let path = "BENCH_codec.json";
+    std::fs::write(path, Json::Obj(root).to_string()).expect("write BENCH_codec.json");
+    println!("\ncodec bench results -> {path}");
+}
+
 fn main() {
     let mut b = Bencher::new();
     let only = std::env::var("SLFAC_BENCH_ONLY").unwrap_or_default();
-    if !only.is_empty() && !["engine", "async", "xla"].contains(&only.as_str()) {
+    if !only.is_empty() && !["engine", "async", "codec", "xla"].contains(&only.as_str()) {
         // a CI typo must fail loudly, not silently run zero sections
-        eprintln!("SLFAC_BENCH_ONLY='{only}' is not one of engine|async|xla");
+        eprintln!("SLFAC_BENCH_ONLY='{only}' is not one of engine|async|codec|xla");
         std::process::exit(2);
     }
     let want = |section: &str| only.is_empty() || only == section;
@@ -239,6 +427,9 @@ fn main() {
     }
     if want("async") {
         bench_async_scenarios(&mut b);
+    }
+    if want("codec") {
+        bench_codec_kernels(&mut b);
     }
     if want("xla") {
         bench_xla_round(&mut b);

@@ -16,7 +16,17 @@
 //! round trip (using the Rust DCT for frequency codecs) so fidelity and
 //! ratio comparisons are apples-to-apples; the DCT being orthonormal means
 //! coefficient-domain L2 error equals spatial L2 error.
+//!
+//! The hot path is planned and allocation-free: per-shape immutable tables
+//! resolve through the lock-free caches in [`plan`], and the coordinator
+//! threads a per-device [`CodecScratch`] arena through
+//! [`ActivationCodec::compress_into`] /
+//! [`ActivationCodec::decompress_into`]. Both are contractually
+//! **bit-transparent** — identical wire bytes and decoded tensors vs the
+//! allocating reference paths (see ARCHITECTURE.md "Codec hot path &
+//! memory discipline" and `tests/codec_differential.rs`).
 
+pub mod plan;
 pub mod select;
 pub mod slfac;
 pub mod splitfc;
@@ -24,6 +34,7 @@ pub mod topk;
 pub mod uniform;
 pub mod wire;
 
+pub use plan::{CodecPlan, CodecScratch};
 pub use select::{MagnitudeSelectCodec, SelectConfig, StdSelectCodec};
 pub use slfac::{AfdUniformCodec, SlFacCodec, SlFacConfig};
 pub use splitfc::{SplitFcCodec, SplitFcConfig};
@@ -93,6 +104,63 @@ pub trait ActivationCodec: Send + Sync {
 
     /// Reconstruct the tensor (same domain as `compress` input).
     fn decompress(&self, p: &Payload) -> Result<Tensor>;
+
+    /// Buffer-reusing compression: write the payload into `out` (its body
+    /// capacity is recycled) drawing work buffers from `scratch`. The
+    /// coordinator threads one [`CodecScratch`] per device context through
+    /// this, so the steady-state hot path allocates nothing (see
+    /// ARCHITECTURE.md "Codec hot path & memory discipline").
+    ///
+    /// **Contract:** the produced payload is byte-identical to
+    /// [`Self::compress_with_rng`] on the same inputs — scratch reuse is a
+    /// memory optimization, never a semantic one (pinned by
+    /// `tests/codec_differential.rs`). The default forwards to the
+    /// allocating path; hot codecs override it.
+    fn compress_into(
+        &self,
+        x: &Tensor,
+        rng: &mut Pcg32,
+        _scratch: &mut CodecScratch,
+        out: &mut Payload,
+    ) -> Result<()> {
+        *out = self.compress_with_rng(x, rng)?;
+        Ok(())
+    }
+
+    /// Buffer-reusing decompression into `out` (reset in place, allocation
+    /// reused) with work buffers from `scratch`. Same bit-identity contract
+    /// as [`Self::compress_into`]; the default forwards to the allocating
+    /// path.
+    fn decompress_into(
+        &self,
+        p: &Payload,
+        _scratch: &mut CodecScratch,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        *out = self.decompress(p)?;
+        Ok(())
+    }
+}
+
+/// Allocating `compress` expressed through the scratch API with fresh
+/// temporaries. **Only** for codecs that override
+/// [`ActivationCodec::compress_into`] (the default `compress_into` calls
+/// back into `compress`, which would recurse); the RNG argument is a dummy,
+/// so randomized codecs must not route their draws through this.
+pub(crate) fn compress_fresh<C: ActivationCodec + ?Sized>(c: &C, x: &Tensor) -> Result<Payload> {
+    let mut out = Payload::empty();
+    c.compress_into(x, &mut Pcg32::seeded(0), &mut CodecScratch::new(), &mut out)?;
+    Ok(out)
+}
+
+/// Allocating `decompress` expressed through the scratch API with fresh
+/// temporaries. **Only** for codecs that override
+/// [`ActivationCodec::decompress_into`] (same recursion caveat as
+/// [`compress_fresh`]).
+pub(crate) fn decompress_fresh<C: ActivationCodec + ?Sized>(c: &C, p: &Payload) -> Result<Tensor> {
+    let mut out = Tensor::zeros(&[1]);
+    c.decompress_into(p, &mut CodecScratch::new(), &mut out)?;
+    Ok(out)
 }
 
 /// Construct a codec by config name. Accepted names (paper labels):
@@ -106,6 +174,7 @@ pub fn by_name(name: &str, params: &CodecParams) -> Result<Box<dyn ActivationCod
                 b_min: params.b_min,
                 b_max: params.b_max,
             },
+            fast_path: params.fast_path,
         })),
         "pq-sl" | "powerquant" => Box::new(PowerQuantCodec::new(params.uniform_bits)),
         "tk-sl" | "topk" => Box::new(TopKCodec::new(TopKConfig {
@@ -126,9 +195,10 @@ pub fn by_name(name: &str, params: &CodecParams) -> Result<Box<dyn ActivationCod
             keep_fraction: params.keep_fraction,
             bits: params.uniform_bits,
         })),
-        "afd-uniform" => Box::new(AfdUniformCodec::new(
+        "afd-uniform" => Box::new(AfdUniformCodec::with_fast_path(
             params.theta,
             (params.b_min + params.b_max) / 2,
+            params.fast_path,
         )),
         "uniform" => Box::new(UniformLinearCodec::new(params.uniform_bits)),
         "identity" | "fp32" | "none" => Box::new(IdentityCodec),
@@ -154,6 +224,12 @@ pub struct CodecParams {
     pub random_fraction: f64,
     /// Seed for randomized codecs.
     pub seed: u64,
+    /// Use the fused single-pass kernels (default). `false` routes the
+    /// AFD-family codecs through the multi-pass reference kernels — wire
+    /// bytes are bit-identical either way (enforced by
+    /// `tests/codec_differential.rs`); the toggle exists so the reference
+    /// stays reachable for debugging (`codec_fast_path` config key).
+    pub fast_path: bool,
 }
 
 impl Default for CodecParams {
@@ -166,6 +242,7 @@ impl Default for CodecParams {
             keep_fraction: 0.25,
             random_fraction: 0.05,
             seed: 7,
+            fast_path: true,
         }
     }
 }

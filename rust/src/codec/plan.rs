@@ -1,0 +1,259 @@
+//! Per-shape codec plans and per-worker scratch arenas — the memory
+//! discipline layer of the codec hot path (see ARCHITECTURE.md "Codec hot
+//! path & memory discipline").
+//!
+//! The compress/decompress kernels run `B·C` times per device per round;
+//! at fleet scale (64–256 simulated devices) anything per-call shows up.
+//! Two mechanisms keep the steady state allocation- and lock-free:
+//!
+//! * **Plans** ([`CodecPlan`], one per `(M, N)` plane shape) bundle every
+//!   immutable precomputed table a kernel needs — the zig-zag scan and the
+//!   DCT plan (basis matrices, transposes, fast power-of-two twiddles).
+//!   Plans resolve through a [`SnapshotCache`]: readers do one atomic load
+//!   and a `HashMap` lookup — **no lock** — instead of the historical
+//!   `Mutex<HashMap>` acquired on every call.
+//! * **Scratch** ([`CodecScratch`]) owns every mutable work buffer a kernel
+//!   needs (zig-zag sequence, level tables, index/bitmap work, recycled
+//!   payload bodies). One arena lives per device context; the round
+//!   engine's shard ownership (one worker owns a device per phase —
+//!   [`crate::coordinator::engine`]) makes it data-race free without any
+//!   synchronization, and scratch contents never influence results (every
+//!   buffer is fully overwritten before use), so bit-transparency across
+//!   worker counts is preserved.
+
+use crate::freq::ZigZag;
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::atomic::{AtomicPtr, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A lock-free read-mostly cache: readers load an immutable snapshot map
+/// with one `Acquire` atomic load; writers (cache misses only) serialize on
+/// a build mutex, clone the map, insert, and publish the new snapshot.
+///
+/// Superseded snapshots are intentionally **leaked**: a reader may still
+/// hold a reference to the old map, and the key universe (distinct tensor
+/// shapes / transform sizes seen by a process) is tiny and bounded, so the
+/// leak is a few hundred bytes per distinct key ever inserted — the price
+/// of a zero-synchronization steady-state read path without an `ArcSwap`
+/// dependency.
+pub struct SnapshotCache<K, V> {
+    map: AtomicPtr<HashMap<K, Arc<V>>>,
+    build: Mutex<()>,
+}
+
+impl<K: Eq + Hash + Clone, V> SnapshotCache<K, V> {
+    /// Empty cache.
+    pub fn new() -> Self {
+        SnapshotCache {
+            map: AtomicPtr::new(Box::into_raw(Box::new(HashMap::new()))),
+            build: Mutex::new(()),
+        }
+    }
+
+    /// Current published snapshot. Safe because snapshots are never freed.
+    fn snapshot(&self) -> &HashMap<K, Arc<V>> {
+        // SAFETY: the pointer always comes from Box::into_raw of a live
+        // map, and superseded maps are leaked (never dropped), so the
+        // reference cannot dangle.
+        unsafe { &*self.map.load(Ordering::Acquire) }
+    }
+
+    /// Fetch the value for `key`, building (and publishing) it on first use.
+    /// The hot path — key present — is a single atomic load plus a map
+    /// lookup and an `Arc` clone.
+    pub fn get_or_build(&self, key: K, build: impl FnOnce() -> V) -> Arc<V> {
+        if let Some(v) = self.snapshot().get(&key) {
+            return v.clone();
+        }
+        let _guard = self.build.lock().unwrap();
+        // another thread may have built it while we waited
+        if let Some(v) = self.snapshot().get(&key) {
+            return v.clone();
+        }
+        let v = Arc::new(build());
+        let mut next = self.snapshot().clone();
+        next.insert(key, v.clone());
+        // publish; the previous snapshot leaks by design (see type docs)
+        self.map.store(Box::into_raw(Box::new(next)), Ordering::Release);
+        v
+    }
+
+    /// Number of cached entries (diagnostics).
+    pub fn len(&self) -> usize {
+        self.snapshot().len()
+    }
+
+    /// Whether the cache is empty.
+    pub fn is_empty(&self) -> bool {
+        self.snapshot().is_empty()
+    }
+}
+
+impl<K: Eq + Hash + Clone, V> Default for SnapshotCache<K, V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Everything immutable a codec kernel needs for one `(M, N)` plane shape.
+#[derive(Debug)]
+pub struct CodecPlan {
+    /// Plane height.
+    pub m: usize,
+    /// Plane width.
+    pub n: usize,
+    /// Zig-zag scan tables (shared with [`crate::freq::zigzag`]).
+    pub zz: Arc<ZigZag>,
+}
+
+fn plan_cache() -> &'static SnapshotCache<(usize, usize), CodecPlan> {
+    static CACHE: std::sync::OnceLock<SnapshotCache<(usize, usize), CodecPlan>> =
+        std::sync::OnceLock::new();
+    CACHE.get_or_init(SnapshotCache::new)
+}
+
+impl CodecPlan {
+    /// Resolve (building on first use) the plan for an `M×N` plane.
+    pub fn for_shape(m: usize, n: usize) -> Arc<CodecPlan> {
+        plan_cache().get_or_build((m, n), || CodecPlan {
+            m,
+            n,
+            zz: crate::freq::zigzag(m, n),
+        })
+    }
+
+    /// The matching DCT plan (basis matrices, pre-transposed variants,
+    /// fast power-of-two twiddles), fetched **lazily** from the shared
+    /// [`crate::dct::plan`] cache. Lazy because codec kernels themselves
+    /// never transform: on the real wire path the DCT runs inside the HLO
+    /// graph, so building basis tables per codec shape would be pure
+    /// waste. Standalone-mode consumers ([`crate::dct::Dct2d`]) hit the
+    /// same cache, so there is never a duplicate build.
+    pub fn dct(&self) -> Arc<crate::dct::DctPlan> {
+        crate::dct::plan(self.m, self.n)
+    }
+}
+
+/// Reusable mutable work buffers for the codec kernels — one arena per
+/// device context (per worker), threaded through
+/// [`crate::codec::ActivationCodec::compress_into`] /
+/// [`crate::codec::ActivationCodec::decompress_into`].
+///
+/// Every buffer is fully overwritten by its user before being read, so
+/// carrying an arena across calls/rounds can never change results — only
+/// allocation counts. After one warm-up call per shape, the steady state
+/// performs zero heap allocations (pinned by `tests/codec_zero_alloc.rs`).
+#[derive(Debug, Default)]
+pub struct CodecScratch {
+    /// Per-channel f32 sequence work (zig-zag scan order, channel values).
+    pub seq: Vec<f32>,
+    /// Secondary f32 work (kept values, dequantized channel staging).
+    pub vals: Vec<f32>,
+    /// Index work (top-k partial sort, kept-position lists).
+    pub idx: Vec<u32>,
+    /// Kept-index list (sorted subsets).
+    pub kept: Vec<u32>,
+    /// Channel-ranking work `(index, score)` (FC-SL std ranking).
+    pub ranks: Vec<(usize, f32)>,
+    /// Bitmap work (kept-position bitmaps).
+    pub bitmap: Vec<u8>,
+    /// Dequantization lookup table (≤ 2^bits entries, bits ≤ 8 paths).
+    pub lut: Vec<f32>,
+    /// Recycled payload bodies: `take_body` pops one (retaining its
+    /// capacity), `recycle_body` returns one after its payload is decoded.
+    pool: Vec<Vec<u8>>,
+}
+
+impl CodecScratch {
+    /// Fresh, empty arena.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A body buffer for a new payload: recycled (capacity retained,
+    /// cleared) when available, freshly empty otherwise.
+    pub fn take_body(&mut self) -> Vec<u8> {
+        let mut b = self.pool.pop().unwrap_or_default();
+        b.clear();
+        b
+    }
+
+    /// Return a spent payload body to the pool for reuse.
+    pub fn recycle_body(&mut self, body: Vec<u8>) {
+        // bound the pool: the trainer keeps at most two payloads in
+        // flight per device (uplink + gradient)
+        if self.pool.len() < 4 {
+            self.pool.push(body);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_cache_builds_once_and_shares() {
+        use std::sync::atomic::AtomicUsize;
+        let cache: SnapshotCache<usize, u64> = SnapshotCache::new();
+        let built = AtomicUsize::new(0);
+        let a = cache.get_or_build(7, || {
+            built.fetch_add(1, Ordering::Relaxed);
+            42
+        });
+        let b = cache.get_or_build(7, || {
+            built.fetch_add(1, Ordering::Relaxed);
+            99
+        });
+        assert_eq!(*a, 42);
+        assert!(Arc::ptr_eq(&a, &b), "second get must hit the snapshot");
+        assert_eq!(built.load(Ordering::Relaxed), 1);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn snapshot_cache_is_threadsafe() {
+        let cache: Arc<SnapshotCache<usize, usize>> = Arc::new(SnapshotCache::new());
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let cache = cache.clone();
+                std::thread::spawn(move || {
+                    for i in 0..64 {
+                        let key = (t + i) % 16;
+                        let v = cache.get_or_build(key, || key * 10);
+                        assert_eq!(*v, key * 10);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(cache.len(), 16);
+    }
+
+    #[test]
+    fn codec_plan_resolves_and_dedups() {
+        let p1 = CodecPlan::for_shape(14, 14);
+        let p2 = CodecPlan::for_shape(14, 14);
+        assert!(Arc::ptr_eq(&p1, &p2));
+        assert_eq!(p1.zz.scan.len(), 196);
+        assert_eq!((p1.m, p1.n), (14, 14));
+        // plan tables agree with the module-level caches
+        assert!(Arc::ptr_eq(&p1.zz, &crate::freq::zigzag(14, 14)));
+        assert!(Arc::ptr_eq(&p1.dct(), &crate::dct::plan(14, 14)));
+    }
+
+    #[test]
+    fn scratch_body_pool_recycles_capacity() {
+        let mut s = CodecScratch::new();
+        let mut b = s.take_body();
+        b.extend_from_slice(&[1, 2, 3, 4]);
+        let cap = b.capacity();
+        s.recycle_body(b);
+        let b2 = s.take_body();
+        assert!(b2.is_empty());
+        assert!(b2.capacity() >= cap, "recycled body must keep its capacity");
+    }
+}

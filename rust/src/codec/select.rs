@@ -7,9 +7,11 @@
 //! strategy the paper argues retains high-magnitude noise and discards
 //! low-magnitude informative features (§III-D.1).
 
+use super::plan::CodecScratch;
 use super::wire::{BodyReader, BodyWriter, Payload};
 use super::{ActivationCodec, CodecKind};
 use crate::quant::{pack_levels_into, unpack_levels, LinearQuantizer};
+use crate::rng::Pcg32;
 use crate::tensor::Tensor;
 use anyhow::{ensure, Result};
 
@@ -47,11 +49,21 @@ struct SelectCodec {
 }
 
 impl SelectCodec {
-    fn compress_impl(&self, x: &Tensor, kind: CodecKind) -> Result<Payload> {
+    fn compress_impl(
+        &self,
+        x: &Tensor,
+        kind: CodecKind,
+        scratch: &mut CodecScratch,
+        body: Vec<u8>,
+    ) -> Result<Payload> {
         let (b, c, m, n) = x.as_bchw();
         let plane = m * n;
         let keep = ((plane as f64 * self.cfg.keep_fraction).ceil() as usize).clamp(1, plane);
-        let mut w = BodyWriter::new();
+        let mut w = BodyWriter::from_vec(body, 0);
+        let idx = &mut scratch.idx;
+        let kept = &mut scratch.kept;
+        let bitmap = &mut scratch.bitmap;
+        let vals = &mut scratch.vals;
         for bi in 0..b {
             for ci in 0..c {
                 let ch = x.channel(bi, ci);
@@ -60,26 +72,30 @@ impl SelectCodec {
                     Score::Magnitude => v.abs(),
                     Score::StdDeviation => (v - mean).abs(),
                 };
-                let mut idx: Vec<u32> = (0..plane as u32).collect();
+                idx.clear();
+                idx.extend(0..plane as u32);
                 idx.select_nth_unstable_by(keep - 1, |&a, &b| {
                     score(ch[b as usize])
                         .partial_cmp(&score(ch[a as usize]))
                         .unwrap_or(std::cmp::Ordering::Equal)
                 });
-                let mut kept = idx[..keep].to_vec();
+                kept.clear();
+                kept.extend_from_slice(&idx[..keep]);
                 kept.sort_unstable();
                 // bitmap of kept positions
-                let mut bitmap = vec![0u8; (plane + 7) / 8];
-                for &i in &kept {
+                bitmap.clear();
+                bitmap.resize((plane + 7) / 8, 0);
+                for &i in kept.iter() {
                     bitmap[i as usize / 8] |= 1 << (i % 8);
                 }
-                w.bytes(&bitmap);
+                w.bytes(bitmap);
                 // quantize kept values with their own min/max
-                let vals: Vec<f32> = kept.iter().map(|&i| ch[i as usize]).collect();
-                let q = LinearQuantizer::fit(self.cfg.bits, &vals);
+                vals.clear();
+                vals.extend(kept.iter().map(|&i| ch[i as usize]));
+                let q = LinearQuantizer::fit(self.cfg.bits, vals);
                 w.f32(q.min);
                 w.f32(q.max);
-                pack_levels_into(&vals, &q, &mut w);
+                pack_levels_into(vals, &q, &mut w);
             }
         }
         Ok(Payload {
@@ -89,32 +105,43 @@ impl SelectCodec {
         })
     }
 
-    fn decompress_impl(&self, p: &Payload) -> Result<Tensor> {
+    fn decompress_impl(
+        &self,
+        p: &Payload,
+        scratch: &mut CodecScratch,
+        out: &mut Tensor,
+    ) -> Result<()> {
         let [b, c, m, n] = p.shape;
         let plane = m * n;
-        let mut out = Tensor::zeros(&[b, c, m, n]);
+        out.reset(&[b, c, m, n]);
         let mut r = BodyReader::new(&p.body);
+        let bitmap = &mut scratch.bitmap;
+        let kept = &mut scratch.kept;
+        let vals = &mut scratch.vals;
         for bi in 0..b {
             for ci in 0..c {
-                let bitmap = r.bytes((plane + 7) / 8)?.to_vec();
-                let kept: Vec<usize> = (0..plane)
-                    .filter(|i| bitmap[i / 8] & (1 << (i % 8)) != 0)
-                    .collect();
+                bitmap.clear();
+                bitmap.extend_from_slice(r.bytes((plane + 7) / 8)?);
+                kept.clear();
+                kept.extend((0..plane as u32).filter(|&i| {
+                    bitmap[i as usize / 8] & (1 << (i % 8)) != 0
+                }));
                 ensure!(!kept.is_empty(), "corrupt selection bitmap");
                 let q = LinearQuantizer {
                     bits: self.cfg.bits,
                     min: r.f32()?,
                     max: r.f32()?,
                 };
-                let mut vals = vec![0.0f32; kept.len()];
-                unpack_levels(&mut r, &q, kept.len(), &mut vals)?;
+                vals.clear();
+                vals.resize(kept.len(), 0.0);
+                unpack_levels(&mut r, &q, kept.len(), vals)?;
                 let ch = out.channel_mut(bi, ci);
-                for (&i, &v) in kept.iter().zip(&vals) {
-                    ch[i] = v;
+                for (&i, &v) in kept.iter().zip(vals.iter()) {
+                    ch[i as usize] = v;
                 }
             }
         }
-        Ok(out)
+        Ok(())
     }
 }
 
@@ -141,10 +168,29 @@ impl ActivationCodec for MagnitudeSelectCodec {
         CodecKind::MagnitudeSelect
     }
     fn compress(&self, x: &Tensor) -> Result<Payload> {
-        self.0.compress_impl(x, CodecKind::MagnitudeSelect)
+        super::compress_fresh(self, x)
     }
     fn decompress(&self, p: &Payload) -> Result<Tensor> {
-        self.0.decompress_impl(p)
+        super::decompress_fresh(self, p)
+    }
+    fn compress_into(
+        &self,
+        x: &Tensor,
+        _rng: &mut Pcg32,
+        scratch: &mut CodecScratch,
+        out: &mut Payload,
+    ) -> Result<()> {
+        let body = std::mem::take(&mut out.body);
+        *out = self.0.compress_impl(x, CodecKind::MagnitudeSelect, scratch, body)?;
+        Ok(())
+    }
+    fn decompress_into(
+        &self,
+        p: &Payload,
+        scratch: &mut CodecScratch,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        self.0.decompress_impl(p, scratch, out)
     }
 }
 
@@ -171,10 +217,29 @@ impl ActivationCodec for StdSelectCodec {
         CodecKind::StdSelect
     }
     fn compress(&self, x: &Tensor) -> Result<Payload> {
-        self.0.compress_impl(x, CodecKind::StdSelect)
+        super::compress_fresh(self, x)
     }
     fn decompress(&self, p: &Payload) -> Result<Tensor> {
-        self.0.decompress_impl(p)
+        super::decompress_fresh(self, p)
+    }
+    fn compress_into(
+        &self,
+        x: &Tensor,
+        _rng: &mut Pcg32,
+        scratch: &mut CodecScratch,
+        out: &mut Payload,
+    ) -> Result<()> {
+        let body = std::mem::take(&mut out.body);
+        *out = self.0.compress_impl(x, CodecKind::StdSelect, scratch, body)?;
+        Ok(())
+    }
+    fn decompress_into(
+        &self,
+        p: &Payload,
+        scratch: &mut CodecScratch,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        self.0.decompress_impl(p, scratch, out)
     }
 }
 

@@ -14,6 +14,27 @@
 //! Decompression inverts Eq. 9, inverse zig-zag, and (on the wire path)
 //! hands the coefficient planes to the `idct` HLO artifact.
 //!
+//! ### Two compression kernels, one byte stream
+//!
+//! The per-channel compressor exists twice (selected by
+//! [`SlFacConfig::fast_path`], config key `codec_fast_path`):
+//!
+//! * **fused** (default) — one sweep computes the zig-zag scatter and total
+//!   energy, a second sweep finds `k*`, both groups' energies *and* both
+//!   min/max ranges, then a final sweep quantizes and word-packs straight
+//!   into the payload body. Zero heap allocations in steady state (scratch
+//!   arena + recycled body).
+//! * **reference** — the historical multi-pass path
+//!   ([`crate::freq::afd_channel_into`] + separate quantizer fits +
+//!   intermediate bit buffer), kept for debugging and cross-validation.
+//!
+//! The fused kernel folds every f64 sum and every min/max in exactly the
+//! reference's element order, so both kernels are **bit-identical on the
+//! wire** — enforced by `tests/codec_differential.rs` over randomized
+//! shapes, seeds, θ, and bit bounds. Decompression has a single
+//! (scratch-based) implementation. See ARCHITECTURE.md "Codec hot path &
+//! memory discipline".
+//!
 //! ### Wire body layout (after the common payload header)
 //!
 //! ```text
@@ -27,12 +48,16 @@
 //!
 //! The 12–20 byte per-channel header is the "metadata overhead" the paper's
 //! communication accounting includes; with MNIST-scale planes (14×14) and
-//! the default bounds it is ≈6% of the payload.
+//! the default bounds it is ≈6% of the payload. This layout is **frozen**
+//! (wire version 1); any change requires a payload version bump and a
+//! golden-vector re-bless.
 
+use super::plan::{CodecPlan, CodecScratch};
 use super::wire::{BodyReader, BodyWriter, Payload};
 use super::{ActivationCodec, CodecKind};
-use crate::freq::zigzag;
+use crate::freq::ZigZag;
 use crate::quant::{allocate_bits, AllocationConfig, BitReader, BitWriter, LinearQuantizer};
+use crate::rng::Pcg32;
 use crate::tensor::Tensor;
 use anyhow::{ensure, Result};
 
@@ -43,6 +68,9 @@ pub struct SlFacConfig {
     pub theta: f64,
     /// FQC bit-width bounds.
     pub alloc: AllocationConfig,
+    /// Fused single-pass kernel (default) vs multi-pass reference kernel.
+    /// Bit-identical wire bytes either way; see the module docs.
+    pub fast_path: bool,
 }
 
 impl Default for SlFacConfig {
@@ -50,6 +78,7 @@ impl Default for SlFacConfig {
         SlFacConfig {
             theta: 0.9,
             alloc: AllocationConfig::default(),
+            fast_path: true,
         }
     }
 }
@@ -77,24 +106,157 @@ impl SlFacCodec {
         &self.cfg
     }
 
-    /// Compress one channel plane into the body writer, reusing `scratch`
-    /// for the zig-zag sequence (zero per-channel allocations on the hot
-    /// path — §Perf L3 iteration 1). Returns `(k*, b_low, b_high)`.
-    fn compress_channel(
+    /// Fused per-channel kernel: AFD split, FQC allocation, quantizer
+    /// ranges, and word-level packing in three sweeps over the zig-zag
+    /// sequence, allocation-free and bit-identical to
+    /// [`Self::compress_channel_reference`] (same f64 fold order, same
+    /// min/max fold, same quantize arithmetic, same byte layout).
+    fn compress_channel_fused(
         &self,
-        zz: &crate::freq::ZigZag,
+        zz: &ZigZag,
         plane: &[f32],
-        scratch: &mut Vec<f32>,
+        scratch: &mut CodecScratch,
         w: &mut BodyWriter,
-    ) -> (usize, u32, u32) {
-        let split = crate::freq::afd_channel_into(zz, plane, self.cfg.theta, scratch);
+    ) {
+        let len = plane.len();
+        debug_assert_eq!(len, zz.scan.len());
+        let seq = &mut scratch.seq;
+        seq.resize(len, 0.0);
+
+        // sweep 1 — zig-zag scatter + total spectral energy (Eq. 3),
+        // folded in scan order exactly like the reference.
+        let mut total = 0.0f64;
+        for (pos, &rm) in zz.scan.iter().enumerate() {
+            let c = plane[rm as usize];
+            seq[pos] = c;
+            total += (c as f64) * (c as f64);
+        }
+
+        // sweep 2 — k* (Eq. 4) plus both groups' energies (Eq. 5) and
+        // min/max ranges, found online in one pass.
+        let k: usize;
+        let e_low: f64;
+        let lo_low: f32;
+        let hi_low: f32;
+        let (mut e_high, mut lo_high, mut hi_high) = (0.0f64, f32::INFINITY, f32::NEG_INFINITY);
+        if total <= 0.0 {
+            // degenerate all-zero channel: DC alone (Algorithm 1 edge case)
+            k = 1;
+            e_low = (seq[0] as f64) * (seq[0] as f64);
+            let (a, b) = crate::tensor::min_max(&seq[..1]);
+            lo_low = a;
+            hi_low = b;
+            for &c in &seq[1..] {
+                e_high += (c as f64) * (c as f64);
+            }
+            let (a, b) = crate::tensor::min_max(&seq[1..]);
+            lo_high = a;
+            hi_high = b;
+        } else {
+            let target = self.cfg.theta * total;
+            let mut acc = 0.0f64;
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            let mut split = len; // theta > 1 (or NaN energies) ⇒ all low
+            for (i, &c) in seq.iter().enumerate() {
+                acc += (c as f64) * (c as f64);
+                if !c.is_nan() {
+                    lo = lo.min(c);
+                    hi = hi.max(c);
+                }
+                if acc >= target {
+                    split = i + 1;
+                    break;
+                }
+            }
+            k = split;
+            // acc folded seq[..k] in ascending order from 0.0 — the exact
+            // addend sequence of the reference's separate Eq. 5 sum
+            e_low = acc;
+            if lo > hi {
+                // all-NaN group: min_max's empty convention
+                lo_low = 0.0;
+                hi_low = 0.0;
+            } else {
+                lo_low = lo;
+                hi_low = hi;
+            }
+            for &c in &seq[k..] {
+                e_high += (c as f64) * (c as f64);
+                if !c.is_nan() {
+                    lo_high = lo_high.min(c);
+                    hi_high = hi_high.max(c);
+                }
+            }
+        }
+        if lo_high > hi_high {
+            lo_high = 0.0;
+            hi_high = 0.0;
+        }
+        let n_high = len - k;
+        let mean_low = e_low / k as f64;
+        let mean_high = if n_high == 0 {
+            0.0
+        } else {
+            e_high / n_high as f64
+        };
+        let (b_low, b_high) = allocate_bits(&self.cfg.alloc, mean_low, mean_high);
+
+        // header (frozen layout — see module docs)
+        let q_low = LinearQuantizer {
+            bits: b_low,
+            min: lo_low,
+            max: hi_low,
+        };
+        w.u16(k as u16);
+        w.u8(b_low as u8);
+        w.u8(b_high as u8);
+        w.f32(q_low.min);
+        w.f32(q_low.max);
+        let q_high = if k < len {
+            let q = LinearQuantizer {
+                bits: b_high,
+                min: lo_high,
+                max: hi_high,
+            };
+            w.f32(q.min);
+            w.f32(q.max);
+            Some(q)
+        } else {
+            None
+        };
+
+        // sweep 3 — quantize + word-pack straight into the payload body
+        let mut p = w.packer();
+        for &x in &seq[..k] {
+            p.put(q_low.quantize(x), b_low);
+        }
+        if let Some(q) = &q_high {
+            for &x in &seq[k..] {
+                p.put(q.quantize(x), b_high);
+            }
+        }
+        p.finish();
+    }
+
+    /// Reference per-channel kernel: the historical multi-pass path —
+    /// [`crate::freq::afd_channel_into`], separate quantizer fits, and an
+    /// intermediate bit buffer. Kept reachable (`codec_fast_path = false`)
+    /// for debugging and as the differential-test oracle.
+    fn compress_channel_reference(
+        &self,
+        zz: &ZigZag,
+        plane: &[f32],
+        scratch: &mut CodecScratch,
+        w: &mut BodyWriter,
+    ) {
+        let split = crate::freq::afd_channel_into(zz, plane, self.cfg.theta, &mut scratch.seq);
         let k = split.k;
         let len = plane.len();
         let (b_low, b_high) =
             allocate_bits(&self.cfg.alloc, split.mean_energy_low, split.mean_energy_high);
 
-        let low = &scratch[..k];
-        let high = &scratch[k..];
+        let low = &scratch.seq[..k];
+        let high = &scratch.seq[k..];
         let q_low = LinearQuantizer::fit(b_low, low);
         w.u16(k as u16);
         w.u8(b_low as u8);
@@ -120,11 +282,43 @@ impl SlFacCodec {
             }
         }
         w.bytes(&bits.finish());
-        (k, b_low, b_high)
     }
 
+    /// Shared compression body over a (possibly recycled) body buffer.
+    fn compress_impl(
+        &self,
+        x: &Tensor,
+        scratch: &mut CodecScratch,
+        body: Vec<u8>,
+    ) -> Result<Payload> {
+        let (b, c, m, n) = x.as_bchw();
+        let plan = CodecPlan::for_shape(m, n);
+        // rough capacity guess: headers + ~mid bits per coefficient
+        let mid_bits = (self.cfg.alloc.b_min + self.cfg.alloc.b_max) as usize / 2;
+        let cap = b * c * (20 + (m * n * mid_bits + 7) / 8);
+        let mut w = BodyWriter::from_vec(body, cap);
+        for bi in 0..b {
+            for ci in 0..c {
+                let plane = x.channel(bi, ci);
+                if self.cfg.fast_path {
+                    self.compress_channel_fused(&plan.zz, plane, scratch, &mut w);
+                } else {
+                    self.compress_channel_reference(&plan.zz, plane, scratch, &mut w);
+                }
+            }
+        }
+        Ok(Payload {
+            kind: CodecKind::SlFac as u8,
+            shape: [b, c, m, n],
+            body: w.finish(),
+        })
+    }
+
+    /// Per-channel decoder (single implementation for both kernel modes):
+    /// header parse, word-level unpack + dequantize into the scratch
+    /// sequence, inverse zig-zag into the output plane.
     fn decompress_channel(
-        zz: &crate::freq::ZigZag,
+        zz: &ZigZag,
         r: &mut BodyReader,
         seq: &mut Vec<f32>,
         out_plane: &mut [f32],
@@ -173,6 +367,32 @@ impl SlFacCodec {
         zz.invert(seq, out_plane);
         Ok(())
     }
+
+    /// Shared decompression body into a caller-owned tensor.
+    fn decompress_impl(
+        &self,
+        p: &Payload,
+        scratch: &mut CodecScratch,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        let [b, c, m, n] = p.shape;
+        let plan = CodecPlan::for_shape(m, n);
+        // dense decode: zz.invert overwrites every element of every plane
+        out.reset_dense(&[b, c, m, n]);
+        let mut r = BodyReader::new(&p.body);
+        for bi in 0..b {
+            for ci in 0..c {
+                Self::decompress_channel(
+                    &plan.zz,
+                    &mut r,
+                    &mut scratch.seq,
+                    out.channel_mut(bi, ci),
+                )?;
+            }
+        }
+        ensure!(r.remaining() == 0, "trailing bytes in SL-FAC payload");
+        Ok(())
+    }
 }
 
 impl ActivationCodec for SlFacCodec {
@@ -189,38 +409,32 @@ impl ActivationCodec for SlFacCodec {
     }
 
     fn compress(&self, x: &Tensor) -> Result<Payload> {
-        let (b, c, m, n) = x.as_bchw();
-        let zz = zigzag(m, n);
-        // rough capacity guess: headers + ~mid bits per coefficient
-        let mid_bits = (self.cfg.alloc.b_min + self.cfg.alloc.b_max) as usize / 2;
-        let mut w =
-            BodyWriter::with_capacity(b * c * (20 + (m * n * mid_bits + 7) / 8));
-        let mut scratch = Vec::with_capacity(m * n);
-        for bi in 0..b {
-            for ci in 0..c {
-                self.compress_channel(&zz, x.channel(bi, ci), &mut scratch, &mut w);
-            }
-        }
-        Ok(Payload {
-            kind: CodecKind::SlFac as u8,
-            shape: [b, c, m, n],
-            body: w.finish(),
-        })
+        super::compress_fresh(self, x)
     }
 
     fn decompress(&self, p: &Payload) -> Result<Tensor> {
-        let [b, c, m, n] = p.shape;
-        let zz = zigzag(m, n);
-        let mut out = Tensor::zeros(&[b, c, m, n]);
-        let mut r = BodyReader::new(&p.body);
-        let mut seq = Vec::with_capacity(m * n);
-        for bi in 0..b {
-            for ci in 0..c {
-                Self::decompress_channel(&zz, &mut r, &mut seq, out.channel_mut(bi, ci))?;
-            }
-        }
-        ensure!(r.remaining() == 0, "trailing bytes in SL-FAC payload");
-        Ok(out)
+        super::decompress_fresh(self, p)
+    }
+
+    fn compress_into(
+        &self,
+        x: &Tensor,
+        _rng: &mut Pcg32,
+        scratch: &mut CodecScratch,
+        out: &mut Payload,
+    ) -> Result<()> {
+        let body = std::mem::take(&mut out.body);
+        *out = self.compress_impl(x, scratch, body)?;
+        Ok(())
+    }
+
+    fn decompress_into(
+        &self,
+        p: &Payload,
+        scratch: &mut CodecScratch,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        self.decompress_impl(p, scratch, out)
     }
 }
 
@@ -234,6 +448,11 @@ pub struct AfdUniformCodec {
 impl AfdUniformCodec {
     /// θ for the split; `bits` for both groups.
     pub fn new(theta: f64, bits: u32) -> Self {
+        Self::with_fast_path(theta, bits, true)
+    }
+
+    /// As [`AfdUniformCodec::new`] with an explicit kernel-mode choice.
+    pub fn with_fast_path(theta: f64, bits: u32, fast_path: bool) -> Self {
         AfdUniformCodec {
             inner: SlFacCodec::new(SlFacConfig {
                 theta,
@@ -241,6 +460,7 @@ impl AfdUniformCodec {
                     b_min: bits,
                     b_max: bits,
                 },
+                fast_path,
             }),
         }
     }
@@ -260,13 +480,33 @@ impl ActivationCodec for AfdUniformCodec {
     }
 
     fn compress(&self, x: &Tensor) -> Result<Payload> {
-        let mut p = self.inner.compress(x)?;
-        p.kind = CodecKind::AfdUniform as u8;
-        Ok(p)
+        // routes through our compress_into, which restamps the kind tag
+        super::compress_fresh(self, x)
     }
 
     fn decompress(&self, p: &Payload) -> Result<Tensor> {
-        self.inner.decompress(p)
+        super::decompress_fresh(self, p)
+    }
+
+    fn compress_into(
+        &self,
+        x: &Tensor,
+        rng: &mut Pcg32,
+        scratch: &mut CodecScratch,
+        out: &mut Payload,
+    ) -> Result<()> {
+        self.inner.compress_into(x, rng, scratch, out)?;
+        out.kind = CodecKind::AfdUniform as u8;
+        Ok(())
+    }
+
+    fn decompress_into(
+        &self,
+        p: &Payload,
+        scratch: &mut CodecScratch,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        self.inner.decompress_into(p, scratch, out)
     }
 }
 
@@ -291,6 +531,62 @@ mod tests {
         // most ~sqrt(1-θ) of the signal (F_h is coarsely quantized).
         let err = back.rel_l2_error(&x);
         assert!(err < (1.0f64 - 0.9).sqrt() + 0.05, "rel err {err}");
+    }
+
+    #[test]
+    fn fused_and_reference_kernels_are_bit_identical() {
+        // the tentpole invariant, at unit-test granularity (the randomized
+        // campaign lives in tests/codec_differential.rs)
+        for (shape, seed, theta) in [
+            (&[2usize, 4, 14, 14][..], 11u64, 0.9f64),
+            (&[1, 1, 6, 6][..], 12, 0.5),
+            (&[3, 2, 8, 8][..], 13, 1.0),
+            (&[1, 3, 7, 9][..], 14, 0.95),
+        ] {
+            let x = coeffs_of(shape, seed);
+            let fast = SlFacCodec::new(SlFacConfig {
+                theta,
+                fast_path: true,
+                ..Default::default()
+            });
+            let reference = SlFacCodec::new(SlFacConfig {
+                theta,
+                fast_path: false,
+                ..Default::default()
+            });
+            let pf = fast.compress(&x).unwrap();
+            let pr = reference.compress(&x).unwrap();
+            assert_eq!(pf.to_bytes(), pr.to_bytes(), "shape {shape:?} θ={theta}");
+            assert_eq!(
+                fast.decompress(&pf).unwrap().data(),
+                reference.decompress(&pr).unwrap().data()
+            );
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_shapes_is_transparent() {
+        // one arena reused for growing/shrinking planes must not change
+        // bytes vs fresh arenas
+        let codec = SlFacCodec::new(SlFacConfig::default());
+        let mut scratch = CodecScratch::new();
+        let mut rng = crate::rng::Pcg32::seeded(0);
+        let mut out = Payload::empty();
+        for (shape, seed) in [
+            (&[1usize, 2, 14, 14][..], 21u64),
+            (&[1, 2, 4, 4][..], 22),
+            (&[2, 3, 9, 11][..], 23),
+        ] {
+            let x = coeffs_of(shape, seed);
+            codec
+                .compress_into(&x, &mut rng, &mut scratch, &mut out)
+                .unwrap();
+            let fresh = codec.compress(&x).unwrap();
+            assert_eq!(out.to_bytes(), fresh.to_bytes(), "{shape:?}");
+            let mut t = Tensor::zeros(&[1]);
+            codec.decompress_into(&out, &mut scratch, &mut t).unwrap();
+            assert_eq!(t.data(), codec.decompress(&fresh).unwrap().data());
+        }
     }
 
     #[test]

@@ -12,9 +12,11 @@
 //! 3. min-max linear quantization of each kept channel at `bits` with a
 //!    per-channel range (SplitFC's "adaptive feature-wise quantization").
 
+use super::plan::CodecScratch;
 use super::wire::{BodyReader, BodyWriter, Payload};
 use super::{ActivationCodec, CodecKind};
-use crate::quant::{pack_levels_into, unpack_levels, LinearQuantizer};
+use crate::quant::{pack_levels_into, unpack_levels_lut, LinearQuantizer};
+use crate::rng::Pcg32;
 use crate::tensor::Tensor;
 use anyhow::{ensure, Result};
 
@@ -61,58 +63,90 @@ impl ActivationCodec for SplitFcCodec {
     }
 
     fn compress(&self, x: &Tensor) -> Result<Payload> {
+        super::compress_fresh(self, x)
+    }
+
+    fn decompress(&self, p: &Payload) -> Result<Tensor> {
+        super::decompress_fresh(self, p)
+    }
+
+    fn compress_into(
+        &self,
+        x: &Tensor,
+        _rng: &mut Pcg32,
+        scratch: &mut CodecScratch,
+        out: &mut Payload,
+    ) -> Result<()> {
         let (b, c, m, n) = x.as_bchw();
         let keep = ((c as f64 * self.cfg.keep_fraction).ceil() as usize).clamp(1, c);
-        let mut w = BodyWriter::new();
+        let mut w = BodyWriter::from_vec(std::mem::take(&mut out.body), 0);
+        let ranks = &mut scratch.ranks;
+        let kept = &mut scratch.kept;
+        let bitmap = &mut scratch.bitmap;
         for bi in 0..b {
             // rank channels by std
-            let mut stds: Vec<(usize, f32)> = (0..c)
-                .map(|ci| (ci, crate::tensor::std_dev(x.channel(bi, ci))))
-                .collect();
-            stds.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
-            let mut kept: Vec<usize> = stds[..keep].iter().map(|&(i, _)| i).collect();
+            ranks.clear();
+            ranks.extend((0..c).map(|ci| (ci, crate::tensor::std_dev(x.channel(bi, ci)))));
+            ranks.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+            kept.clear();
+            kept.extend(ranks[..keep].iter().map(|&(i, _)| i as u32));
             kept.sort_unstable();
 
             // channel bitmap: 1 bit per channel
-            let mut bitmap = vec![0u8; (c + 7) / 8];
-            for &ci in &kept {
-                bitmap[ci / 8] |= 1 << (ci % 8);
+            bitmap.clear();
+            bitmap.resize((c + 7) / 8, 0);
+            for &ci in kept.iter() {
+                bitmap[ci as usize / 8] |= 1 << (ci % 8);
             }
-            w.bytes(&bitmap);
-            // dropped channel means
+            w.bytes(bitmap);
+            // dropped channel means (bitmap test ≡ the historical
+            // `kept.contains`, same bytes)
             for ci in 0..c {
-                if !kept.contains(&ci) {
+                if bitmap[ci / 8] & (1 << (ci % 8)) == 0 {
                     let ch = x.channel(bi, ci);
                     let mean = ch.iter().sum::<f32>() / ch.len() as f32;
                     w.f16(mean);
                 }
             }
             // kept channels: per-channel min/max + packed levels
-            for &ci in &kept {
-                let ch = x.channel(bi, ci);
+            for &ci in kept.iter() {
+                let ch = x.channel(bi, ci as usize);
                 let q = LinearQuantizer::fit(self.cfg.bits, ch);
                 w.f32(q.min);
                 w.f32(q.max);
                 pack_levels_into(ch, &q, &mut w);
             }
         }
-        Ok(Payload {
+        *out = Payload {
             kind: CodecKind::SplitFc as u8,
             shape: [b, c, m, n],
             body: w.finish(),
-        })
+        };
+        Ok(())
     }
 
-    fn decompress(&self, p: &Payload) -> Result<Tensor> {
+    fn decompress_into(
+        &self,
+        p: &Payload,
+        scratch: &mut CodecScratch,
+        out: &mut Tensor,
+    ) -> Result<()> {
         let [b, c, m, n] = p.shape;
         let plane = m * n;
-        let mut out = Tensor::zeros(&[b, c, m, n]);
+        // dense decode: every channel is either mean-filled or unpacked
+        out.reset_dense(&[b, c, m, n]);
         let mut r = BodyReader::new(&p.body);
+        let bitmap = &mut scratch.bitmap;
+        let kept = &mut scratch.kept;
         for bi in 0..b {
-            let bitmap = r.bytes((c + 7) / 8)?.to_vec();
-            let kept: Vec<usize> = (0..c)
-                .filter(|ci| bitmap[ci / 8] & (1 << (ci % 8)) != 0)
-                .collect();
+            bitmap.clear();
+            bitmap.extend_from_slice(r.bytes((c + 7) / 8)?);
+            kept.clear();
+            kept.extend(
+                (0..c as u32).filter(|&ci| {
+                    bitmap[ci as usize / 8] & (1 << (ci % 8)) != 0
+                }),
+            );
             ensure!(!kept.is_empty(), "corrupt SplitFC bitmap: nothing kept");
             for ci in 0..c {
                 if bitmap[ci / 8] & (1 << (ci % 8)) == 0 {
@@ -120,7 +154,8 @@ impl ActivationCodec for SplitFcCodec {
                     out.channel_mut(bi, ci).fill(mean);
                 }
             }
-            for &ci in &kept {
+            for &ci in kept.iter() {
+                let ci = ci as usize;
                 let min = r.f32()?;
                 let max = r.f32()?;
                 let q = LinearQuantizer {
@@ -128,10 +163,16 @@ impl ActivationCodec for SplitFcCodec {
                     min,
                     max,
                 };
-                unpack_levels(&mut r, &q, plane, out.channel_mut(bi, ci))?;
+                unpack_levels_lut(
+                    &mut r,
+                    &q,
+                    plane,
+                    &mut scratch.lut,
+                    out.channel_mut(bi, ci),
+                )?;
             }
         }
-        Ok(out)
+        Ok(())
     }
 }
 

@@ -10,6 +10,7 @@
 //! magnitude selection keeps high-magnitude noise and drops low-magnitude
 //! informative features (§III-B).
 
+use super::plan::CodecScratch;
 use super::wire::{BodyReader, BodyWriter, Payload};
 use super::{ActivationCodec, CodecKind};
 use crate::rng::Pcg32;
@@ -61,26 +62,39 @@ impl TopKCodec {
         }
     }
 
-    /// Shared compression body; `rng` supplies the random-extra draws.
-    fn compress_impl(&self, x: &Tensor, rng: &mut Pcg32) -> Result<Payload> {
+    /// Shared compression body; `rng` supplies the random-extra draws,
+    /// `scratch` the index work buffers and the recycled body. The byte
+    /// stream and RNG consumption are independent of scratch reuse
+    /// (identical partial-sort inputs, identical draws).
+    fn compress_impl(
+        &self,
+        x: &Tensor,
+        rng: &mut Pcg32,
+        scratch: &mut CodecScratch,
+        body: Vec<u8>,
+    ) -> Result<Payload> {
         let (b, c, m, n) = x.as_bchw();
         let per_sample = c * m * n;
         let k_top = ((per_sample as f64 * self.cfg.keep_fraction).ceil() as usize)
             .clamp(1, per_sample);
         let k_rand = (per_sample as f64 * self.cfg.random_fraction).floor() as usize;
 
-        let mut w = BodyWriter::with_capacity(b * (4 + (k_top + k_rand) * 6));
+        let mut w = BodyWriter::from_vec(body, b * (4 + (k_top + k_rand) * 6));
+        let idx = &mut scratch.idx;
+        let kept = &mut scratch.kept;
         for bi in 0..b {
             let sample = &x.data()[bi * per_sample..(bi + 1) * per_sample];
             // top-k by |x| via partial sort of indices
-            let mut idx: Vec<u32> = (0..per_sample as u32).collect();
+            idx.clear();
+            idx.extend(0..per_sample as u32);
             idx.select_nth_unstable_by(k_top - 1, |&a, &b| {
                 sample[b as usize]
                     .abs()
                     .partial_cmp(&sample[a as usize].abs())
                     .unwrap_or(std::cmp::Ordering::Equal)
             });
-            let mut kept: Vec<u32> = idx[..k_top].to_vec();
+            kept.clear();
+            kept.extend_from_slice(&idx[..k_top]);
             // random extras from the remainder
             if k_rand > 0 && k_top < per_sample {
                 let rest = &idx[k_top..];
@@ -93,7 +107,7 @@ impl TopKCodec {
                 kept.sort_unstable();
             }
             w.u32(kept.len() as u32);
-            for &i in &kept {
+            for &i in kept.iter() {
                 w.u32(i);
                 w.f16(sample[i as usize]);
             }
@@ -121,17 +135,38 @@ impl ActivationCodec for TopKCodec {
         // concurrent devices — the coordinator uses `compress_with_rng`
         // with per-device streams instead.
         let mut rng = self.rng.lock().unwrap();
-        self.compress_impl(x, &mut rng)
+        self.compress_impl(x, &mut rng, &mut CodecScratch::new(), Vec::new())
     }
 
     fn compress_with_rng(&self, x: &Tensor, rng: &mut Pcg32) -> Result<Payload> {
-        self.compress_impl(x, rng)
+        self.compress_impl(x, rng, &mut CodecScratch::new(), Vec::new())
+    }
+
+    fn compress_into(
+        &self,
+        x: &Tensor,
+        rng: &mut Pcg32,
+        scratch: &mut CodecScratch,
+        out: &mut Payload,
+    ) -> Result<()> {
+        let body = std::mem::take(&mut out.body);
+        *out = self.compress_impl(x, rng, scratch, body)?;
+        Ok(())
     }
 
     fn decompress(&self, p: &Payload) -> Result<Tensor> {
+        super::decompress_fresh(self, p)
+    }
+
+    fn decompress_into(
+        &self,
+        p: &Payload,
+        _scratch: &mut CodecScratch,
+        out: &mut Tensor,
+    ) -> Result<()> {
         let [b, c, m, n] = p.shape;
         let per_sample = c * m * n;
-        let mut out = Tensor::zeros(&[b, c, m, n]);
+        out.reset(&[b, c, m, n]);
         let mut r = BodyReader::new(&p.body);
         for bi in 0..b {
             let count = r.u32()? as usize;
@@ -144,7 +179,7 @@ impl ActivationCodec for TopKCodec {
                 dst[i] = r.f16()?;
             }
         }
-        Ok(out)
+        Ok(())
     }
 }
 

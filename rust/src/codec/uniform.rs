@@ -5,9 +5,11 @@
 //! with (§I): every element of the smashed data receives the same bit
 //! width, regardless of informativeness.
 
+use super::plan::CodecScratch;
 use super::wire::{BodyReader, BodyWriter, Payload};
 use super::{ActivationCodec, CodecKind};
-use crate::quant::{BitReader, BitWriter, EasyQuant, LinearQuantizer, PowerQuant};
+use crate::quant::{BitReader, EasyQuant, LinearQuantizer, PowerQuant};
+use crate::rng::Pcg32;
 use crate::tensor::Tensor;
 use anyhow::{ensure, Result};
 
@@ -36,24 +38,45 @@ impl ActivationCodec for PowerQuantCodec {
     }
 
     fn compress(&self, x: &Tensor) -> Result<Payload> {
-        let (b, c, m, n) = x.as_bchw();
-        let q = PowerQuant::fit(self.bits, x.data());
-        let mut w = BodyWriter::with_capacity(12 + x.numel() * self.bits as usize / 8);
-        w.f32(q.scale);
-        w.f32(q.exponent);
-        let mut bits = BitWriter::with_capacity((x.numel() * self.bits as usize + 7) / 8);
-        for &v in x.data() {
-            bits.put(q.quantize(v), self.bits);
-        }
-        w.bytes(&bits.finish());
-        Ok(Payload {
-            kind: CodecKind::PowerQuant as u8,
-            shape: [b, c, m, n],
-            body: w.finish(),
-        })
+        super::compress_fresh(self, x)
     }
 
     fn decompress(&self, p: &Payload) -> Result<Tensor> {
+        super::decompress_fresh(self, p)
+    }
+
+    fn compress_into(
+        &self,
+        x: &Tensor,
+        _rng: &mut Pcg32,
+        _scratch: &mut CodecScratch,
+        out: &mut Payload,
+    ) -> Result<()> {
+        let (b, c, m, n) = x.as_bchw();
+        let q = PowerQuant::fit(self.bits, x.data());
+        let cap = 8 + (x.numel() * self.bits as usize + 7) / 8;
+        let mut w = BodyWriter::from_vec(std::mem::take(&mut out.body), cap);
+        w.f32(q.scale);
+        w.f32(q.exponent);
+        let mut bits = w.packer();
+        for &v in x.data() {
+            bits.put(q.quantize(v), self.bits);
+        }
+        bits.finish();
+        *out = Payload {
+            kind: CodecKind::PowerQuant as u8,
+            shape: [b, c, m, n],
+            body: w.finish(),
+        };
+        Ok(())
+    }
+
+    fn decompress_into(
+        &self,
+        p: &Payload,
+        scratch: &mut CodecScratch,
+        out: &mut Tensor,
+    ) -> Result<()> {
         let [b, c, m, n] = p.shape;
         let count = b * c * m * n;
         let mut r = BodyReader::new(&p.body);
@@ -71,14 +94,19 @@ impl ActivationCodec for PowerQuantCodec {
         // §Perf L3 iteration 2: dequantization calls powf per element; with
         // ≤ 2^bits distinct levels a lookup table removes it from the loop
         // (≈4× decompress speedup at 4 bits, see EXPERIMENTS.md §Perf).
+        // The table lives in the scratch arena (rebuilt in place, no alloc
+        // after warm-up). usize shift: safe for any bits <= 16 invariant
+        // and does not overflow even if a hand-built codec widens it.
         let levels = 1usize << self.bits;
-        let table: Vec<f32> = (0..levels as u32).map(|l| q.dequantize(l)).collect();
+        scratch.lut.clear();
+        scratch.lut.extend((0..levels as u32).map(|l| q.dequantize(l)));
         let packed = r.bytes((count * self.bits as usize + 7) / 8)?;
         let mut bits = BitReader::new(packed);
-        let data: Vec<f32> = (0..count)
-            .map(|_| table[bits.get(self.bits) as usize])
-            .collect();
-        Ok(Tensor::new(&[b, c, m, n], data))
+        out.reset_dense(&[b, c, m, n]); // dense: every element written below
+        for o in out.data_mut() {
+            *o = scratch.lut[bits.get(self.bits) as usize];
+        }
+        Ok(())
     }
 }
 
@@ -107,25 +135,41 @@ impl ActivationCodec for EasyQuantCodec {
     }
 
     fn compress(&self, x: &Tensor) -> Result<Payload> {
+        super::compress_fresh(self, x)
+    }
+
+    /// Body-reusing compression. Note: `EasyQuant::fit` still allocates
+    /// its outlier list internally — this baseline is outside the
+    /// zero-allocation guarantee (which covers the paper codec and the
+    /// uniform/identity baselines; see `tests/codec_zero_alloc.rs`).
+    fn compress_into(
+        &self,
+        x: &Tensor,
+        _rng: &mut Pcg32,
+        _scratch: &mut CodecScratch,
+        out: &mut Payload,
+    ) -> Result<()> {
         let (b, c, m, n) = x.as_bchw();
         let q = EasyQuant::fit(self.bits, x.data());
-        let mut w = BodyWriter::new();
+        let cap = 8 + q.outliers.len() * 8 + (x.numel() * self.bits as usize + 7) / 8;
+        let mut w = BodyWriter::from_vec(std::mem::take(&mut out.body), cap);
         w.f32(q.clip);
         w.u32(q.outliers.len() as u32);
         for &(i, v) in &q.outliers {
             w.u32(i);
             w.f32(v);
         }
-        let mut bits = BitWriter::with_capacity((x.numel() * self.bits as usize + 7) / 8);
+        let mut bits = w.packer();
         for &v in x.data() {
             bits.put(q.quantize(v), self.bits);
         }
-        w.bytes(&bits.finish());
-        Ok(Payload {
+        bits.finish();
+        *out = Payload {
             kind: CodecKind::EasyQuant as u8,
             shape: [b, c, m, n],
             body: w.finish(),
-        })
+        };
+        Ok(())
     }
 
     fn decompress(&self, p: &Payload) -> Result<Tensor> {
@@ -182,24 +226,45 @@ impl ActivationCodec for UniformLinearCodec {
     }
 
     fn compress(&self, x: &Tensor) -> Result<Payload> {
-        let (b, c, m, n) = x.as_bchw();
-        let q = LinearQuantizer::fit(self.bits, x.data());
-        let mut w = BodyWriter::new();
-        w.f32(q.min);
-        w.f32(q.max);
-        let mut bits = BitWriter::with_capacity((x.numel() * self.bits as usize + 7) / 8);
-        for &v in x.data() {
-            bits.put(q.quantize(v), self.bits);
-        }
-        w.bytes(&bits.finish());
-        Ok(Payload {
-            kind: CodecKind::UniformLinear as u8,
-            shape: [b, c, m, n],
-            body: w.finish(),
-        })
+        super::compress_fresh(self, x)
     }
 
     fn decompress(&self, p: &Payload) -> Result<Tensor> {
+        super::decompress_fresh(self, p)
+    }
+
+    fn compress_into(
+        &self,
+        x: &Tensor,
+        _rng: &mut Pcg32,
+        _scratch: &mut CodecScratch,
+        out: &mut Payload,
+    ) -> Result<()> {
+        let (b, c, m, n) = x.as_bchw();
+        let q = LinearQuantizer::fit(self.bits, x.data());
+        let cap = 8 + (x.numel() * self.bits as usize + 7) / 8;
+        let mut w = BodyWriter::from_vec(std::mem::take(&mut out.body), cap);
+        w.f32(q.min);
+        w.f32(q.max);
+        let mut bits = w.packer();
+        for &v in x.data() {
+            bits.put(q.quantize(v), self.bits);
+        }
+        bits.finish();
+        *out = Payload {
+            kind: CodecKind::UniformLinear as u8,
+            shape: [b, c, m, n],
+            body: w.finish(),
+        };
+        Ok(())
+    }
+
+    fn decompress_into(
+        &self,
+        p: &Payload,
+        scratch: &mut CodecScratch,
+        out: &mut Tensor,
+    ) -> Result<()> {
         let [b, c, m, n] = p.shape;
         let count = b * c * m * n;
         let mut r = BodyReader::new(&p.body);
@@ -208,10 +273,8 @@ impl ActivationCodec for UniformLinearCodec {
             min: r.f32()?,
             max: r.f32()?,
         };
-        let packed = r.bytes((count * self.bits as usize + 7) / 8)?;
-        let mut bits = BitReader::new(packed);
-        let data: Vec<f32> = (0..count).map(|_| q.dequantize(bits.get(self.bits))).collect();
-        Ok(Tensor::new(&[b, c, m, n], data))
+        out.reset_dense(&[b, c, m, n]); // dense: every element written below
+        crate::quant::unpack_levels_lut(&mut r, &q, count, &mut scratch.lut, out.data_mut())
     }
 }
 
@@ -229,31 +292,52 @@ impl ActivationCodec for IdentityCodec {
     }
 
     fn compress(&self, x: &Tensor) -> Result<Payload> {
-        let (b, c, m, n) = x.as_bchw();
-        let mut body = Vec::with_capacity(x.numel() * 4);
-        for &v in x.data() {
-            body.extend_from_slice(&v.to_le_bytes());
-        }
-        Ok(Payload {
-            kind: CodecKind::Identity as u8,
-            shape: [b, c, m, n],
-            body,
-        })
+        super::compress_fresh(self, x)
     }
 
     fn decompress(&self, p: &Payload) -> Result<Tensor> {
+        super::decompress_fresh(self, p)
+    }
+
+    fn compress_into(
+        &self,
+        x: &Tensor,
+        _rng: &mut Pcg32,
+        _scratch: &mut CodecScratch,
+        out: &mut Payload,
+    ) -> Result<()> {
+        let (b, c, m, n) = x.as_bchw();
+        let mut body = std::mem::take(&mut out.body);
+        body.clear();
+        body.reserve(x.numel() * 4);
+        for &v in x.data() {
+            body.extend_from_slice(&v.to_le_bytes());
+        }
+        *out = Payload {
+            kind: CodecKind::Identity as u8,
+            shape: [b, c, m, n],
+            body,
+        };
+        Ok(())
+    }
+
+    fn decompress_into(
+        &self,
+        p: &Payload,
+        _scratch: &mut CodecScratch,
+        out: &mut Tensor,
+    ) -> Result<()> {
         let [b, c, m, n] = p.shape;
         let count = b * c * m * n;
         ensure!(
             p.body.len() == count * 4,
             "identity payload length mismatch"
         );
-        let data: Vec<f32> = p
-            .body
-            .chunks_exact(4)
-            .map(|ch| f32::from_le_bytes(ch.try_into().unwrap()))
-            .collect();
-        Ok(Tensor::new(&[b, c, m, n], data))
+        out.reset_dense(&[b, c, m, n]); // dense: every element written below
+        for (o, ch) in out.data_mut().iter_mut().zip(p.body.chunks_exact(4)) {
+            *o = f32::from_le_bytes(ch.try_into().unwrap());
+        }
+        Ok(())
     }
 }
 

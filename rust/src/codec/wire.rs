@@ -38,6 +38,17 @@ pub struct Payload {
 }
 
 impl Payload {
+    /// Placeholder payload for the buffer-reuse API
+    /// ([`crate::codec::ActivationCodec::compress_into`] overwrites every
+    /// field; the body's capacity is what gets recycled).
+    pub fn empty() -> Payload {
+        Payload {
+            kind: 0,
+            shape: [0; 4],
+            body: Vec::new(),
+        }
+    }
+
     /// Total wire size in bytes (header + body).
     pub fn wire_bytes(&self) -> usize {
         HEADER_BYTES + self.body.len()
@@ -118,6 +129,22 @@ impl BodyWriter {
         BodyWriter {
             buf: Vec::with_capacity(n),
         }
+    }
+
+    /// Writer over a recycled buffer: contents are cleared, capacity (plus
+    /// at least `reserve` bytes) is kept — the zero-allocation steady-state
+    /// path (`CodecScratch::take_body` supplies the buffer).
+    pub fn from_vec(mut buf: Vec<u8>, reserve: usize) -> Self {
+        buf.clear();
+        buf.reserve(reserve);
+        BodyWriter { buf }
+    }
+
+    /// Bit-level packer appending MSB-first levels directly to this body —
+    /// no intermediate buffer, no copy. Call
+    /// [`crate::quant::BitPacker::finish`] before writing further bytes.
+    pub fn packer(&mut self) -> crate::quant::BitPacker<'_> {
+        crate::quant::BitPacker::new(&mut self.buf)
     }
 
     /// Append a u8.

@@ -229,6 +229,9 @@ impl ExperimentConfig {
                 "random_fraction" => {
                     cfg.codec_params.random_fraction = v.as_f64().context("random_fraction")?
                 }
+                "codec_fast_path" => {
+                    cfg.codec_params.fast_path = v.as_bool().context("codec_fast_path")?
+                }
                 "rounds" => cfg.rounds = v.as_usize().context("rounds")?,
                 "batches_per_round" => {
                     cfg.batches_per_round = v.as_usize().context("batches_per_round")?
@@ -468,6 +471,10 @@ impl ExperimentConfig {
             "keep_fraction".into(),
             Json::Num(self.codec_params.keep_fraction),
         );
+        m.insert(
+            "codec_fast_path".into(),
+            Json::Bool(self.codec_params.fast_path),
+        );
         m.insert("rounds".into(), Json::Num(self.rounds as f64));
         m.insert(
             "batches_per_round".into(),
@@ -569,6 +576,21 @@ mod tests {
                 "should reject {bad}"
             );
         }
+    }
+
+    #[test]
+    fn codec_fast_path_parses_and_roundtrips() {
+        // default true
+        assert!(ExperimentConfig::default().codec_params.fast_path);
+        let json = Json::parse(r#"{"codec_fast_path": false}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&json).unwrap();
+        assert!(!cfg.codec_params.fast_path);
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert!(!back.codec_params.fast_path);
+        // named-key validation: non-bool value is rejected with the key name
+        let bad = Json::parse(r#"{"codec_fast_path": "yes"}"#).unwrap();
+        let err = format!("{:#}", ExperimentConfig::from_json(&bad).unwrap_err());
+        assert!(err.contains("codec_fast_path"), "{err}");
     }
 
     #[test]

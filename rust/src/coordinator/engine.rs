@@ -33,6 +33,20 @@
 //! [`run_sharded`] too, so the same bit-transparency argument covers the
 //! event-driven async mode: batch *composition* comes from deterministic
 //! event order, batch *execution* from this pool.
+//!
+//! # Scratch-arena ownership
+//!
+//! The codec hot path is allocation-free in steady state because each
+//! `DeviceCtx` owns a [`crate::codec::CodecScratch`] arena (work buffers +
+//! recycled payload bodies) threaded through
+//! `ActivationCodec::{compress_into, decompress_into}`. The arena rides
+//! inside the device item handed to [`run_sharded`], so the exclusive-
+//! ownership guarantee above covers it: one worker per phase, no sharing,
+//! no locks. Arena *contents* are write-before-read by contract (every
+//! buffer fully overwritten before use), so reuse across phases, rounds,
+//! or worker counts can never perturb results — `parallel_determinism.rs`
+//! pins this differentially (same bytes for `workers = 1/4/0` and for
+//! fresh-vs-reused arenas).
 
 use anyhow::Result;
 

@@ -4,7 +4,7 @@
 //! [`crate::transport`] for the round schedulers this trainer delegates
 //! round control flow to.
 
-use crate::codec::{self, ActivationCodec, Payload};
+use crate::codec::{self, ActivationCodec, CodecScratch, Payload};
 use crate::config::{DatasetKind, ExperimentConfig, Partition, SyncMode};
 use crate::data::{
     partition_dirichlet, partition_iid, synthetic, BatchLoader, Dataset,
@@ -38,6 +38,16 @@ struct DeviceCtx {
     /// through [`ActivationCodec::compress_with_rng`], so payloads do not
     /// depend on cross-device scheduling).
     codec_rng: Pcg32,
+    /// Per-device codec scratch arena (work buffers + recycled payload
+    /// bodies). Exactly one worker owns this device per phase, so the
+    /// arena is race-free by construction, and arena contents never
+    /// influence results — the steady-state wire path allocates nothing
+    /// (see `codec::plan`).
+    scratch: CodecScratch,
+    /// Reusable decode target for uplink/gradient payloads (reset in
+    /// place each step; its data is copied into a `HostTensor` for the
+    /// executor).
+    decode: Tensor,
     /// Device's client-side parameters (SplitFed: reset to the aggregate at
     /// round start; sequential: handed off device-to-device).
     cp: Vec<HostTensor>,
@@ -187,6 +197,8 @@ impl Trainer {
                 link: Link::new(profile.link, derive_seed(cfg.seed, stream::LINK, id as u64)),
                 profile,
                 codec_rng: Pcg32::derived(cfg.seed, stream::CODEC, id as u64),
+                scratch: CodecScratch::new(),
+                decode: Tensor::zeros(&[1]),
                 cp: cp.clone(),
                 cm: cm.clone(),
                 pending: None,
@@ -708,7 +720,11 @@ fn device_fanout_impl(
     } else {
         act.into_tensor()
     };
-    let payload = codec.compress_with_rng(&wire_input, &mut dev.codec_rng)?;
+    // zero-allocation steady state: recycled body + per-device scratch
+    // arena (bit-identical to `compress_with_rng` — the codec contract)
+    let mut payload = Payload::empty();
+    payload.body = dev.scratch.take_body();
+    codec.compress_into(&wire_input, &mut dev.codec_rng, &mut dev.scratch, &mut payload)?;
     let wire_bytes = payload.wire_bytes();
     let cost_s = match cfg.uplink {
         UplinkMode::Private => dev.link.transfer(Direction::Uplink, wire_bytes),
@@ -743,17 +759,19 @@ fn server_step_impl(
     let freq = codec.frequency_domain();
     let step = dev.pending.as_mut().context("phase order violation")?;
 
-    // decompress uplink → activations
-    let decoded = codec.decompress(&step.uplink)?;
+    // decompress uplink → activations (into the reusable decode target),
+    // then recycle the payload body for the gradient below
+    codec.decompress_into(&step.uplink, &mut dev.scratch, &mut dev.decode)?;
+    dev.scratch.recycle_body(std::mem::take(&mut step.uplink.body));
     let act = if freq {
         let out = exec.execute(
             preset,
             "idct",
-            vec![HostTensor::from_tensor(&decoded)],
+            vec![HostTensor::from_tensor(&dev.decode)],
         )?;
         out.into_iter().next().context("idct output")?
     } else {
-        HostTensor::from_tensor(&decoded)
+        HostTensor::from_tensor(&dev.decode)
     };
 
     // server training step
@@ -783,7 +801,14 @@ fn server_step_impl(
     let batch = step.y.numel() as u64;
     let downlink_s = if cfg.compress_gradients {
         let g = if freq { gact_dct } else { gact };
-        let payload = codec.compress_with_rng(&g.into_tensor(), &mut dev.codec_rng)?;
+        let mut payload = Payload::empty();
+        payload.body = dev.scratch.take_body();
+        codec.compress_into(
+            &g.into_tensor(),
+            &mut dev.codec_rng,
+            &mut dev.scratch,
+            &mut payload,
+        )?;
         let t = dev
             .link
             .transfer(Direction::Downlink, payload.wire_bytes());
@@ -814,15 +839,16 @@ fn device_fanin_impl(
     let grad = step.grad.context("server step did not run")?;
     let gact = match grad {
         GradMsg::Raw(g) => g,
-        GradMsg::Compressed(p) => {
-            let decoded = codec.decompress(&p)?;
+        GradMsg::Compressed(mut p) => {
+            codec.decompress_into(&p, &mut dev.scratch, &mut dev.decode)?;
+            dev.scratch.recycle_body(std::mem::take(&mut p.body));
             if codec.frequency_domain() {
-                exec.execute(preset, "idct", vec![HostTensor::from_tensor(&decoded)])?
+                exec.execute(preset, "idct", vec![HostTensor::from_tensor(&dev.decode)])?
                     .into_iter()
                     .next()
                     .context("idct output")?
             } else {
-                HostTensor::from_tensor(&decoded)
+                HostTensor::from_tensor(&dev.decode)
             }
         }
     };

@@ -5,19 +5,49 @@
 //! produced *inside the HLO graph* by the Pallas kernel (L1); this Rust
 //! implementation exists for
 //!
-//! 1. the standalone/pure-Rust codec mode (unit tests, benches, and tools
-//!    that run without artifacts),
+//! 1. the standalone/pure-Rust codec mode (unit tests, benches, the sim
+//!    executor backend, and tools that run without artifacts),
 //! 2. golden-vector cross-validation against the Pallas kernel, and
 //! 3. the L3 perf baseline the benches compare against.
 //!
-//! Implementation: basis-matrix form. `DCT2(X) = D_M · X · D_Nᵀ` with
-//! `D_M[u,m] = α(u)·cos(π/M·(m+½)·u)` (0-based), which is exactly Eq. 1.
-//! Basis matrices are cached per size. The inverse (DCT-III) is `D_Mᵀ · Y · D_N`
-//! because `D` is orthogonal.
+//! # Kernel selection (which path computes what)
+//!
+//! [`Dct2d::forward`] / [`Dct2d::inverse`] pick per plan:
+//!
+//! * **Fast path** — when *both* dimensions are powers of two (8×8, 16×16,
+//!   32×32 CIFAR-scale planes, the sim backend's test shapes), a Lee
+//!   recursive DCT-II/III runs in `O(N log N)` with precomputed twiddle
+//!   tables from the shared [`DctPlan`]. All intermediates are f64, so the
+//!   fast path is *more* accurate than the reference's f32 intermediate
+//!   plane, but it is **not bit-identical** to it (different operation
+//!   order). That is fine everywhere it runs: the codec wire-byte identity
+//!   contract covers the codec kernels (which consume coefficient planes —
+//!   the DCT sits in front of them), and every DCT consumer checks
+//!   tolerances, not bits.
+//! * **Planned matmul path** — all other sizes (e.g. MNIST's 14×14) run
+//!   the basis-matrix form `DCT2(X) = D_M · X · D_Nᵀ` with the
+//!   pre-transposed operand from the plan and an i-k-j loop order over f64
+//!   row accumulators: unit-stride inner loops (vectorizable), and — since
+//!   each output element still folds the same addends in ascending-k
+//!   order — **bit-identical** to the historical i-j-k reference.
+//! * **Reference path** — [`Dct2d::forward_ref`] / [`Dct2d::inverse_ref`]
+//!   always run the f64-accumulating basis matmul regardless of size. They
+//!   exist for golden cross-validation (Pallas goldens, the fast-vs-ref
+//!   differential tests below); fidelity, not speed, is their job. Note
+//!   they are selected **programmatically only** — the `codec_fast_path`
+//!   config flag switches the SL-FAC *channel kernels*, not the transform:
+//!   `Dct2d::forward`/`inverse` pick fast-vs-matmul purely by shape. The
+//!   historical comment claiming "the hot codec path never calls this" was
+//!   stale — in standalone mode the transform *is* on the hot path, which
+//!   is exactly why the fast/planned paths above exist.
+//!
+//! Basis matrices, transposes, and twiddle tables are cached per size in a
+//! lock-free [`crate::codec::plan::SnapshotCache`] (one atomic load per
+//! lookup — the historical `Mutex<HashMap>` is gone). The inverse
+//! (DCT-III) is `D_Mᵀ · Y · D_N` because `D` is orthogonal.
 
-use std::collections::HashMap;
-use std::sync::{Mutex, OnceLock};
-use std::sync::Arc;
+use crate::codec::plan::SnapshotCache;
+use std::sync::{Arc, OnceLock};
 
 /// An `MxM` orthonormal DCT-II basis matrix (row-major).
 #[derive(Debug, Clone)]
@@ -50,24 +80,180 @@ impl DctBasis {
     }
 }
 
-fn basis_cache() -> &'static Mutex<HashMap<usize, Arc<DctBasis>>> {
-    static CACHE: OnceLock<Mutex<HashMap<usize, Arc<DctBasis>>>> = OnceLock::new();
-    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+fn basis_cache() -> &'static SnapshotCache<usize, DctBasis> {
+    static CACHE: OnceLock<SnapshotCache<usize, DctBasis>> = OnceLock::new();
+    CACHE.get_or_init(SnapshotCache::new)
 }
 
 /// Fetch (building on first use) the cached basis of a given size.
+/// Lock-free on the hot (cached) path.
 pub fn basis(size: usize) -> Arc<DctBasis> {
-    let mut cache = basis_cache().lock().unwrap();
-    cache
-        .entry(size)
-        .or_insert_with(|| Arc::new(DctBasis::build(size)))
-        .clone()
+    basis_cache().get_or_build(size, || DctBasis::build(size))
 }
 
-/// `out = A(M×K) · B(K×N)` into a caller-provided buffer (row-major, f32
-/// accumulate in f64 for the small sizes used here — fidelity matters more
-/// than speed on this path; the hot codec path never calls this).
-fn matmul_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+/// Twiddle tables for Lee's recursive DCT-II/III at one power-of-two size.
+///
+/// `factors` concatenates, for each recursion level `len = N, N/2, …, 2`,
+/// the `len/2` values `1 / (2·cos((i+½)·π/len))`; the level for `len`
+/// starts at offset `N − len`. `alpha` holds the orthonormal scale
+/// `α(0) = √(1/N)`, `α(k) = √(2/N)`.
+#[derive(Debug)]
+pub struct FastDct {
+    n: usize,
+    factors: Vec<f64>,
+    alpha: Vec<f64>,
+}
+
+impl FastDct {
+    /// Build tables for a power-of-two `n`.
+    fn build(n: usize) -> Self {
+        assert!(n.is_power_of_two());
+        let mut factors = Vec::with_capacity(n.saturating_sub(1));
+        let mut len = n;
+        while len >= 2 {
+            for i in 0..len / 2 {
+                let c = ((i as f64 + 0.5) * std::f64::consts::PI / len as f64).cos();
+                factors.push(1.0 / (2.0 * c));
+            }
+            len /= 2;
+        }
+        let nf = n as f64;
+        let mut alpha = vec![(2.0 / nf).sqrt(); n];
+        alpha[0] = (1.0 / nf).sqrt();
+        FastDct { n, factors, alpha }
+    }
+
+    /// Twiddle slice for recursion size `len` (`len/2` entries).
+    #[inline]
+    fn level(&self, len: usize) -> &[f64] {
+        &self.factors[self.n - len..self.n - len / 2]
+    }
+
+    /// In-place unnormalized DCT-II (Lee):
+    /// `v[k] ← Σ_i v[i]·cos(π/L·(i+½)·k)`. `temp` must be `v.len()` long.
+    fn fwd(&self, v: &mut [f64], temp: &mut [f64]) {
+        let len = v.len();
+        if len == 1 {
+            return;
+        }
+        let half = len / 2;
+        let f = self.level(len);
+        {
+            let (a, b) = temp.split_at_mut(half);
+            for i in 0..half {
+                let x = v[i];
+                let y = v[len - 1 - i];
+                a[i] = x + y;
+                b[i] = (x - y) * f[i];
+            }
+            let (va, vb) = v.split_at_mut(half);
+            self.fwd(a, va);
+            self.fwd(b, vb);
+        }
+        for i in 0..half - 1 {
+            v[2 * i] = temp[i];
+            v[2 * i + 1] = temp[half + i] + temp[half + i + 1];
+        }
+        v[len - 2] = temp[half - 1];
+        v[len - 1] = temp[len - 1];
+    }
+
+    /// In-place unnormalized DCT-III (Lee inverse):
+    /// `v[i] ← Σ_k v[k]·cos(π/L·(i+½)·k)` (full weight on `k = 0`).
+    fn inv(&self, v: &mut [f64], temp: &mut [f64]) {
+        let len = v.len();
+        if len == 1 {
+            return;
+        }
+        let half = len / 2;
+        {
+            let (a, b) = temp.split_at_mut(half);
+            a[0] = v[0];
+            b[0] = v[1];
+            for i in 1..half {
+                a[i] = v[2 * i];
+                b[i] = v[2 * i - 1] + v[2 * i + 1];
+            }
+            let (va, vb) = v.split_at_mut(half);
+            self.inv(a, va);
+            self.inv(b, vb);
+        }
+        let f = self.level(len);
+        for i in 0..half {
+            let x = temp[i];
+            let y = temp[half + i] * f[i];
+            v[i] = x + y;
+            v[len - 1 - i] = x - y;
+        }
+    }
+}
+
+/// Immutable per-`(M, N)` transform plan: basis matrices, pre-transposed
+/// variants for the cache-friendly matmul, and fast power-of-two twiddles.
+/// Shared via the lock-free plan cache ([`plan`]); [`Dct2d`] adds the
+/// mutable scratch on top.
+#[derive(Debug)]
+pub struct DctPlan {
+    /// Plane height.
+    pub m: usize,
+    /// Plane width.
+    pub n: usize,
+    /// Row basis `D_M`.
+    pub dm: Arc<DctBasis>,
+    /// Column basis `D_N`.
+    pub dn: Arc<DctBasis>,
+    /// `D_Mᵀ` (row-major `M×M`).
+    dm_t: Vec<f32>,
+    /// `D_Nᵀ` (row-major `N×N`).
+    dn_t: Vec<f32>,
+    /// Lee twiddles for the row dimension (power-of-two `M` only).
+    fast_m: Option<FastDct>,
+    /// Lee twiddles for the column dimension (power-of-two `N` only).
+    fast_n: Option<FastDct>,
+}
+
+impl DctPlan {
+    fn build(m: usize, n: usize) -> Self {
+        let dm = basis(m);
+        let dn = basis(n);
+        let dm_t = transpose(&dm.mat, m, m);
+        let dn_t = transpose(&dn.mat, n, n);
+        let fast_m = m.is_power_of_two().then(|| FastDct::build(m));
+        let fast_n = n.is_power_of_two().then(|| FastDct::build(n));
+        DctPlan {
+            m,
+            n,
+            dm,
+            dn,
+            dm_t,
+            dn_t,
+            fast_m,
+            fast_n,
+        }
+    }
+
+    /// Whether the `O(N log N)` Lee path covers this shape (both
+    /// dimensions powers of two).
+    pub fn has_fast_path(&self) -> bool {
+        self.fast_m.is_some() && self.fast_n.is_some()
+    }
+}
+
+fn dct_plan_cache() -> &'static SnapshotCache<(usize, usize), DctPlan> {
+    static CACHE: OnceLock<SnapshotCache<(usize, usize), DctPlan>> = OnceLock::new();
+    CACHE.get_or_init(SnapshotCache::new)
+}
+
+/// Fetch (building on first use) the transform plan for `M×N` planes.
+/// Lock-free on the hot (cached) path.
+pub fn plan(m: usize, n: usize) -> Arc<DctPlan> {
+    dct_plan_cache().get_or_build((m, n), || DctPlan::build(m, n))
+}
+
+/// Reference matmul `out = A(M×K) · B(K×N)` (row-major, f64 accumulate,
+/// i-j-k order). Kept verbatim for golden cross-validation — the planned
+/// i-k-j kernel below is bit-identical to it by construction.
+fn matmul_ref(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     assert_eq!(out.len(), m * n);
@@ -82,22 +268,38 @@ fn matmul_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f3
     }
 }
 
-/// Scratch buffers for repeated 2-D transforms of a fixed (M, N) size.
-///
-/// Reusing a `Dct2d` avoids per-call allocation on bench/codec loops.
-#[derive(Debug)]
-pub struct Dct2d {
-    /// Spatial height.
-    pub m: usize,
-    /// Spatial width.
-    pub n: usize,
-    dm: Arc<DctBasis>,
-    dn: Arc<DctBasis>,
-    /// transposed D_N (N×N) for the row-transform step
-    dn_t: Vec<f32>,
-    /// transposed D_M
-    dm_t: Vec<f32>,
-    tmp: Vec<f32>,
+/// Cache-friendly matmul: i-k-j loop order with an f64 accumulator row —
+/// the inner loop walks `b`'s row `p` and `acc` with unit stride
+/// (vectorizable), while each `out[i][j]` still folds its addends in the
+/// same ascending-`p` order as [`matmul_ref`], so the result is
+/// **bit-identical** (f64 addition of the same sequence).
+fn matmul_ikj(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    acc: &mut [f64],
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    assert!(acc.len() >= n);
+    let acc = &mut acc[..n];
+    for i in 0..m {
+        acc.fill(0.0);
+        for p in 0..k {
+            let av = a[i * k + p] as f64;
+            let brow = &b[p * n..(p + 1) * n];
+            for (ac, &bv) in acc.iter_mut().zip(brow) {
+                *ac += av * bv as f64;
+            }
+        }
+        for (o, &ac) in out[i * n..(i + 1) * n].iter_mut().zip(acc.iter()) {
+            *o = ac as f32;
+        }
+    }
 }
 
 fn transpose(src: &[f32], rows: usize, cols: usize) -> Vec<f32> {
@@ -110,40 +312,147 @@ fn transpose(src: &[f32], rows: usize, cols: usize) -> Vec<f32> {
     out
 }
 
+/// Scratch buffers + shared plan for repeated 2-D transforms of a fixed
+/// `(M, N)` size. Reusing a `Dct2d` performs zero allocations per call.
+#[derive(Debug)]
+pub struct Dct2d {
+    /// Spatial height.
+    pub m: usize,
+    /// Spatial width.
+    pub n: usize,
+    plan: Arc<DctPlan>,
+    /// matmul intermediate (M×N, f32)
+    tmp: Vec<f32>,
+    /// f64 accumulator row for the i-k-j matmul
+    acc: Vec<f64>,
+    /// fast-path f64 plane
+    fplane: Vec<f64>,
+    /// fast-path column + recursion scratch (2·max(M, N))
+    fvec: Vec<f64>,
+}
+
 impl Dct2d {
-    /// Create a transformer for `M×N` planes.
+    /// Create a transformer for `M×N` planes (plan fetched from the cache).
+    /// Scratch is sized for the path this shape actually takes: Lee-path
+    /// shapes skip the matmul accumulator, matmul shapes skip the f64
+    /// plane (`tmp` stays — the `_ref` paths need it either way).
     pub fn new(m: usize, n: usize) -> Self {
-        let dm = basis(m);
-        let dn = basis(n);
-        let dn_t = transpose(&dn.mat, n, n);
-        let dm_t = transpose(&dm.mat, m, m);
+        let plan = plan(m, n);
+        let dim = m.max(n);
+        let fast = plan.has_fast_path();
         Dct2d {
             m,
             n,
-            dm,
-            dn,
-            dn_t,
-            dm_t,
+            plan,
             tmp: vec![0.0f32; m * n],
+            acc: if fast { Vec::new() } else { vec![0.0f64; dim] },
+            fplane: if fast { vec![0.0f64; m * n] } else { Vec::new() },
+            fvec: if fast { vec![0.0f64; 2 * dim] } else { Vec::new() },
         }
     }
 
+    /// Whether this shape runs the Lee fast path.
+    pub fn has_fast_path(&self) -> bool {
+        self.plan.has_fast_path()
+    }
+
     /// Forward 2-D DCT-II: `out = D_M · x · D_Nᵀ`. `x` and `out` are `M*N`.
+    /// Fast Lee path for power-of-two shapes, planned matmul otherwise
+    /// (bit-identical to [`Dct2d::forward_ref`] there).
     pub fn forward(&mut self, x: &[f32], out: &mut [f32]) {
         assert_eq!(x.len(), self.m * self.n);
         assert_eq!(out.len(), self.m * self.n);
-        // tmp = D_M (M×M) · x (M×N)
-        matmul_into(&self.dm.mat, x, self.m, self.m, self.n, &mut self.tmp);
-        // out = tmp (M×N) · D_Nᵀ (N×N)
-        matmul_into(&self.tmp, &self.dn_t, self.m, self.n, self.n, out);
+        if self.plan.has_fast_path() {
+            self.fast_forward(x, out);
+            return;
+        }
+        // tmp = D_M (M×M) · x (M×N); out = tmp (M×N) · D_Nᵀ (N×N)
+        matmul_ikj(&self.plan.dm.mat, x, self.m, self.m, self.n, &mut self.acc, &mut self.tmp);
+        matmul_ikj(&self.tmp, &self.plan.dn_t, self.m, self.n, self.n, &mut self.acc, out);
     }
 
-    /// Inverse (DCT-III): `out = D_Mᵀ · y · D_N`.
+    /// Inverse (DCT-III): `out = D_Mᵀ · y · D_N`. Fast Lee path for
+    /// power-of-two shapes, planned matmul otherwise.
     pub fn inverse(&mut self, y: &[f32], out: &mut [f32]) {
         assert_eq!(y.len(), self.m * self.n);
         assert_eq!(out.len(), self.m * self.n);
-        matmul_into(&self.dm_t, y, self.m, self.m, self.n, &mut self.tmp);
-        matmul_into(&self.tmp, &self.dn.mat, self.m, self.n, self.n, out);
+        if self.plan.has_fast_path() {
+            self.fast_inverse(y, out);
+            return;
+        }
+        matmul_ikj(&self.plan.dm_t, y, self.m, self.m, self.n, &mut self.acc, &mut self.tmp);
+        matmul_ikj(&self.tmp, &self.plan.dn.mat, self.m, self.n, self.n, &mut self.acc, out);
+    }
+
+    /// Reference forward: always the f64-accumulating basis matmul,
+    /// regardless of shape. Exported for golden cross-validation and the
+    /// `codec_fast_path = false` debug mode.
+    pub fn forward_ref(&mut self, x: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), self.m * self.n);
+        assert_eq!(out.len(), self.m * self.n);
+        matmul_ref(&self.plan.dm.mat, x, self.m, self.m, self.n, &mut self.tmp);
+        matmul_ref(&self.tmp, &self.plan.dn_t, self.m, self.n, self.n, out);
+    }
+
+    /// Reference inverse (see [`Dct2d::forward_ref`]).
+    pub fn inverse_ref(&mut self, y: &[f32], out: &mut [f32]) {
+        assert_eq!(y.len(), self.m * self.n);
+        assert_eq!(out.len(), self.m * self.n);
+        matmul_ref(&self.plan.dm_t, y, self.m, self.m, self.n, &mut self.tmp);
+        matmul_ref(&self.tmp, &self.plan.dn.mat, self.m, self.n, self.n, out);
+    }
+
+    fn fast_forward(&mut self, x: &[f32], out: &mut [f32]) {
+        let (m, n) = (self.m, self.n);
+        let fm = self.plan.fast_m.as_ref().expect("fast path");
+        let fn_ = self.plan.fast_n.as_ref().expect("fast path");
+        // rows (length n), scaled by α_n, all in f64
+        for r in 0..m {
+            let row = &mut self.fplane[r * n..(r + 1) * n];
+            for (d, &s) in row.iter_mut().zip(&x[r * n..(r + 1) * n]) {
+                *d = s as f64;
+            }
+            fn_.fwd(row, &mut self.fvec[..n]);
+            for (d, &a) in row.iter_mut().zip(&fn_.alpha) {
+                *d *= a;
+            }
+        }
+        // columns (length m), scaled by α_m
+        let (col, temp) = self.fvec.split_at_mut(m);
+        for c in 0..n {
+            for (r, cv) in col.iter_mut().enumerate() {
+                *cv = self.fplane[r * n + c];
+            }
+            fm.fwd(col, &mut temp[..m]);
+            for r in 0..m {
+                out[r * n + c] = (col[r] * fm.alpha[r]) as f32;
+            }
+        }
+    }
+
+    fn fast_inverse(&mut self, y: &[f32], out: &mut [f32]) {
+        let (m, n) = (self.m, self.n);
+        let fm = self.plan.fast_m.as_ref().expect("fast path");
+        let fn_ = self.plan.fast_n.as_ref().expect("fast path");
+        // rows: pre-scale by α_n, inverse-transform
+        for r in 0..m {
+            let row = &mut self.fplane[r * n..(r + 1) * n];
+            for ((d, &s), &a) in row.iter_mut().zip(&y[r * n..(r + 1) * n]).zip(&fn_.alpha) {
+                *d = s as f64 * a;
+            }
+            fn_.inv(row, &mut self.fvec[..n]);
+        }
+        // columns: pre-scale by α_m, inverse-transform
+        let (col, temp) = self.fvec.split_at_mut(m);
+        for c in 0..n {
+            for (r, cv) in col.iter_mut().enumerate() {
+                *cv = self.fplane[r * n + c] * fm.alpha[r];
+            }
+            fm.inv(col, &mut temp[..m]);
+            for r in 0..m {
+                out[r * n + c] = col[r] as f32;
+            }
+        }
     }
 
     /// Convenience: forward transform of every channel of a (B,C,M,N) tensor,
@@ -154,8 +463,7 @@ impl Dct2d {
         let mut out = crate::tensor::Tensor::zeros(x.shape());
         for bi in 0..b {
             for ci in 0..c {
-                let src = x.channel(bi, ci).to_vec();
-                t.forward(&src, out.channel_mut(bi, ci));
+                t.forward(x.channel(bi, ci), out.channel_mut(bi, ci));
             }
         }
         out
@@ -168,8 +476,7 @@ impl Dct2d {
         let mut out = crate::tensor::Tensor::zeros(y.shape());
         for bi in 0..b {
             for ci in 0..c {
-                let src = y.channel(bi, ci).to_vec();
-                t.inverse(&src, out.channel_mut(bi, ci));
+                t.inverse(y.channel(bi, ci), out.channel_mut(bi, ci));
             }
         }
         out
@@ -271,8 +578,76 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_2d_pow2_fast_path() {
+        let mut rng = Pcg32::seeded(12);
+        for &(m, n) in &[(2usize, 2usize), (4, 8), (8, 8), (16, 16), (32, 32), (1, 16)] {
+            let x: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+            let mut t = Dct2d::new(m, n);
+            assert!(t.has_fast_path(), "{m}x{n}");
+            let mut y = vec![0.0f32; m * n];
+            let mut back = vec![0.0f32; m * n];
+            t.forward(&x, &mut y);
+            t.inverse(&y, &mut back);
+            for (a, b) in x.iter().zip(&back) {
+                assert!((a - b).abs() < 1e-4, "{m}x{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn fast_path_matches_reference_within_tolerance() {
+        // The Lee path is a different operation order, not a different
+        // transform: it must agree with the f64 basis matmul to f32
+        // round-off levels.
+        let mut rng = Pcg32::seeded(13);
+        for &(m, n) in &[(4usize, 4usize), (8, 8), (16, 8), (32, 32)] {
+            let x: Vec<f32> = (0..m * n).map(|_| rng.normal() * 3.0).collect();
+            let mut t = Dct2d::new(m, n);
+            let mut fast = vec![0.0f32; m * n];
+            let mut reference = vec![0.0f32; m * n];
+            t.forward(&x, &mut fast);
+            t.forward_ref(&x, &mut reference);
+            for (a, b) in fast.iter().zip(&reference) {
+                assert!((a - b).abs() < 1e-4, "{m}x{n} fwd: {a} vs {b}");
+            }
+            let mut ifast = vec![0.0f32; m * n];
+            let mut iref = vec![0.0f32; m * n];
+            t.inverse(&fast, &mut ifast);
+            t.inverse_ref(&reference, &mut iref);
+            for (a, b) in ifast.iter().zip(&iref) {
+                assert!((a - b).abs() < 1e-4, "{m}x{n} inv: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn planned_matmul_is_bit_identical_to_reference() {
+        // Non-power-of-two shapes take the i-k-j matmul, which must be
+        // bit-for-bit the historical i-j-k reference (same addends, same
+        // fold order per output element) — this is what keeps the wire
+        // golden vectors (6×6) and every 14×14 MNIST byte stream frozen.
+        let mut rng = Pcg32::seeded(14);
+        for &(m, n) in &[(6usize, 6usize), (14, 14), (14, 10), (7, 3), (5, 12)] {
+            let x: Vec<f32> = (0..m * n).map(|_| rng.normal() * 2.0).collect();
+            let mut t = Dct2d::new(m, n);
+            assert!(!t.has_fast_path(), "{m}x{n}");
+            let mut fwd = vec![0.0f32; m * n];
+            let mut fwd_ref = vec![0.0f32; m * n];
+            t.forward(&x, &mut fwd);
+            t.forward_ref(&x, &mut fwd_ref);
+            assert_eq!(fwd, fwd_ref, "{m}x{n} forward must be bit-identical");
+            let mut inv = vec![0.0f32; m * n];
+            let mut inv_ref = vec![0.0f32; m * n];
+            t.inverse(&fwd, &mut inv);
+            t.inverse_ref(&fwd, &mut inv_ref);
+            assert_eq!(inv, inv_ref, "{m}x{n} inverse must be bit-identical");
+        }
+    }
+
+    #[test]
     fn parseval_energy_preserved() {
-        // Orthonormal transform preserves sum of squares.
+        // Orthonormal transform preserves sum of squares (fast path here:
+        // 8×8 is a power of two).
         let mut rng = Pcg32::seeded(3);
         let (m, n) = (8, 8);
         let x: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
@@ -302,5 +677,14 @@ mod tests {
         let total: f64 = y.iter().map(|&v| (v as f64).powi(2)).sum();
         let low: f64 = y[..4].iter().map(|&v| (v as f64).powi(2)).sum();
         assert!(low / total > 0.99, "low fraction {}", low / total);
+    }
+
+    #[test]
+    fn plan_cache_shares_instances() {
+        let a = plan(14, 14);
+        let b = plan(14, 14);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(plan(8, 8).has_fast_path());
+        assert!(!plan(14, 14).has_fast_path());
     }
 }

@@ -8,8 +8,8 @@
 //! and splits at the smallest `k*` with `R_(k*) ≥ θ`: prefix = low-frequency
 //! set `F_l`, suffix = high-frequency set `F_h`.
 
-use std::collections::HashMap;
-use std::sync::{Arc, Mutex, OnceLock};
+use crate::codec::plan::SnapshotCache;
+use std::sync::{Arc, OnceLock};
 
 /// Precomputed zig-zag index table for an `M×N` plane.
 ///
@@ -85,18 +85,16 @@ impl ZigZag {
     }
 }
 
-fn zigzag_cache() -> &'static Mutex<HashMap<(usize, usize), Arc<ZigZag>>> {
-    static CACHE: OnceLock<Mutex<HashMap<(usize, usize), Arc<ZigZag>>>> = OnceLock::new();
-    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+fn zigzag_cache() -> &'static SnapshotCache<(usize, usize), ZigZag> {
+    static CACHE: OnceLock<SnapshotCache<(usize, usize), ZigZag>> = OnceLock::new();
+    CACHE.get_or_init(SnapshotCache::new)
 }
 
 /// Fetch (building on first use) the cached zig-zag table for `M×N`.
+/// Lock-free on the hot (cached) path — see
+/// [`crate::codec::plan::SnapshotCache`].
 pub fn zigzag(m: usize, n: usize) -> Arc<ZigZag> {
-    let mut cache = zigzag_cache().lock().unwrap();
-    cache
-        .entry((m, n))
-        .or_insert_with(|| Arc::new(ZigZag::build(m, n)))
-        .clone()
+    zigzag_cache().get_or_build((m, n), || ZigZag::build(m, n))
 }
 
 /// Result of AFD on one channel: zig-zag-ordered coefficients and split point.

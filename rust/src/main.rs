@@ -37,6 +37,13 @@ fn cli() -> Command {
                 .opt("partition", "KIND", "iid | non-iid", None)
                 .opt("rounds", "N", "communication rounds", None)
                 .opt("theta", "F", "AFD energy threshold", None)
+                .opt(
+                    "codec-fast-path",
+                    "BOOL",
+                    "fused codec kernels (true, default) or reference kernels \
+                     (false); wire bytes are bit-identical either way",
+                    None,
+                )
                 .opt("devices", "N", "edge devices", None)
                 .opt("workers", "N", "round-engine worker threads (0 = auto)", None)
                 .opt("seed", "N", "master seed", None)
@@ -134,6 +141,12 @@ fn build_config(m: &Matches) -> Result<ExperimentConfig> {
     }
     if let Some(t) = m.get_parsed::<f64>("theta").map_err(anyhow::Error::msg)? {
         cfg.codec_params.theta = t;
+    }
+    if let Some(f) = m
+        .get_parsed::<bool>("codec-fast-path")
+        .map_err(anyhow::Error::msg)?
+    {
+        cfg.codec_params.fast_path = f;
     }
     if let Some(d) = m.get_parsed::<usize>("devices").map_err(anyhow::Error::msg)? {
         cfg.devices = d;

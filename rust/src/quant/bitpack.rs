@@ -3,9 +3,55 @@
 //! FQC emits per-group bit widths anywhere in `[b_min, b_max]` (2..=8 in the
 //! paper, up to 16 supported here). The wire payload packs the quantized
 //! levels back-to-back with no padding between values; this module is the
-//! hot inner loop of the codec (see benches/bench_bitpack.rs), so both the
-//! writer and reader work through a 64-bit accumulator and avoid per-value
-//! branching beyond the flush check.
+//! hot inner loop of the codec (see benches/bench_bitpack.rs).
+//!
+//! Both the writer and the reader work through a 64-bit accumulator and
+//! move data **word-at-a-time**: the writer drains 4–7 whole bytes per
+//! flush via one `extend_from_slice` (a memcpy, not a per-byte push), and
+//! the reader refills 32 bits per load via one `u32::from_be_bytes`. Only
+//! the stream tail falls back to byte-at-a-time handling. The byte layout
+//! is MSB-first and **identical** to the historical per-byte loops — the
+//! wire format is frozen (see ARCHITECTURE.md "Codec hot path"), and the
+//! unit tests below pin exact byte sequences.
+//!
+//! [`BitPacker`] is the same writer over a *borrowed* `Vec<u8>`: the codec
+//! hot path packs straight into the payload body, skipping the historical
+//! intermediate buffer + copy (and its per-channel allocation).
+
+/// Append the low `bits` bits of `value` (MSB-first) to `(acc, fill)`,
+/// draining whole bytes into `buf` once a word's worth are pending.
+///
+/// Shared core of [`BitWriter`] / [`BitPacker`]; byte output is identical
+/// to flushing one byte at a time.
+#[inline]
+fn put_bits(buf: &mut Vec<u8>, acc: &mut u64, fill: &mut u32, value: u32, bits: u32) {
+    debug_assert!(bits <= 32);
+    if bits == 0 {
+        return;
+    }
+    debug_assert!(bits == 32 || value < (1u32 << bits), "value overflows width");
+    // top `fill` bits of acc are pending; fill <= 31 on entry, so the
+    // shifted value always fits (31 + 32 < 64).
+    *acc |= ((value as u64) << (64 - bits)) >> *fill;
+    *fill += bits;
+    if *fill >= 32 {
+        // drain whole bytes in one memcpy; to_be_bytes is exactly the
+        // MSB-first byte order of the accumulator
+        let nbytes = (*fill / 8) as usize;
+        buf.extend_from_slice(&acc.to_be_bytes()[..nbytes]);
+        *acc <<= nbytes * 8;
+        *fill -= (nbytes * 8) as u32;
+    }
+}
+
+/// Flush the final partial bytes (zero-padded) of `(acc, fill)` into `buf`.
+#[inline]
+fn flush_tail(buf: &mut Vec<u8>, acc: u64, fill: u32) {
+    if fill > 0 {
+        let nbytes = ((fill + 7) / 8) as usize;
+        buf.extend_from_slice(&acc.to_be_bytes()[..nbytes]);
+    }
+}
 
 /// Streaming MSB-first bit writer over a growable byte buffer.
 #[derive(Debug, Default)]
@@ -13,7 +59,7 @@ pub struct BitWriter {
     buf: Vec<u8>,
     /// bit accumulator; highest `fill` bits are pending
     acc: u64,
-    /// number of valid bits in `acc`
+    /// number of valid bits in `acc` (≤ 31 between calls)
     fill: u32,
 }
 
@@ -35,18 +81,7 @@ impl BitWriter {
     /// Append the low `bits` bits of `value` (MSB-first). `bits` in 0..=32.
     #[inline]
     pub fn put(&mut self, value: u32, bits: u32) {
-        debug_assert!(bits <= 32);
-        if bits == 0 {
-            return;
-        }
-        debug_assert!(bits == 32 || value < (1u32 << bits), "value overflows width");
-        self.acc |= ((value as u64) << (64 - bits)) >> self.fill;
-        self.fill += bits;
-        while self.fill >= 8 {
-            self.buf.push((self.acc >> 56) as u8);
-            self.acc <<= 8;
-            self.fill -= 8;
-        }
+        put_bits(&mut self.buf, &mut self.acc, &mut self.fill, value, bits);
     }
 
     /// Bits written so far.
@@ -54,12 +89,43 @@ impl BitWriter {
         self.buf.len() * 8 + self.fill as usize
     }
 
-    /// Flush the final partial byte (zero-padded) and return the buffer.
+    /// Flush the final partial bytes (zero-padded) and return the buffer.
     pub fn finish(mut self) -> Vec<u8> {
-        if self.fill > 0 {
-            self.buf.push((self.acc >> 56) as u8);
-        }
+        flush_tail(&mut self.buf, self.acc, self.fill);
         self.buf
+    }
+}
+
+/// MSB-first bit writer over a **borrowed** byte buffer — the zero-copy
+/// variant the codec hot path uses to pack levels directly into the
+/// payload body (`BodyWriter::packer`). Dropping a packer without calling
+/// [`BitPacker::finish`] loses the pending tail bits; `finish` consumes it.
+#[derive(Debug)]
+pub struct BitPacker<'a> {
+    buf: &'a mut Vec<u8>,
+    acc: u64,
+    fill: u32,
+}
+
+impl<'a> BitPacker<'a> {
+    /// Packer appending to `buf` (existing contents are kept).
+    pub fn new(buf: &'a mut Vec<u8>) -> Self {
+        BitPacker {
+            buf,
+            acc: 0,
+            fill: 0,
+        }
+    }
+
+    /// Append the low `bits` bits of `value` (MSB-first). `bits` in 0..=32.
+    #[inline]
+    pub fn put(&mut self, value: u32, bits: u32) {
+        put_bits(self.buf, &mut self.acc, &mut self.fill, value, bits);
+    }
+
+    /// Flush the final partial bytes (zero-padded) into the buffer.
+    pub fn finish(self) {
+        flush_tail(self.buf, self.acc, self.fill);
     }
 }
 
@@ -93,16 +159,29 @@ impl<'a> BitReader<'a> {
         if bits == 0 {
             return 0;
         }
-        while self.fill < bits {
-            let byte = if self.pos < self.buf.len() {
-                let b = self.buf[self.pos];
-                self.pos += 1;
-                b
-            } else {
-                0
-            };
-            self.acc |= (byte as u64) << (56 - self.fill);
-            self.fill += 8;
+        if self.fill < bits {
+            // word-level refill: one 32-bit big-endian load while it fits
+            // (fill <= 31 here, so at most two iterations)
+            while self.fill <= 32 && self.pos + 4 <= self.buf.len() {
+                let w = u32::from_be_bytes(
+                    self.buf[self.pos..self.pos + 4].try_into().unwrap(),
+                );
+                self.pos += 4;
+                self.acc |= (w as u64) << (32 - self.fill);
+                self.fill += 32;
+            }
+            // stream tail: byte-at-a-time, zeros past the end
+            while self.fill < bits {
+                let byte = if self.pos < self.buf.len() {
+                    let b = self.buf[self.pos];
+                    self.pos += 1;
+                    b
+                } else {
+                    0
+                };
+                self.acc |= (byte as u64) << (56 - self.fill);
+                self.fill += 8;
+            }
         }
         let out = (self.acc >> (64 - bits)) as u32;
         self.acc <<= bits;
@@ -110,7 +189,10 @@ impl<'a> BitReader<'a> {
         out
     }
 
-    /// Number of whole bytes consumed from the underlying buffer.
+    /// Number of whole bytes consumed from the underlying buffer. The
+    /// word-level refill reads eagerly, so this can run ahead of the bit
+    /// position by up to 7 bytes (diagnostics only — payload framing uses
+    /// exact counts from the header, never this).
     pub fn bytes_consumed(&self) -> usize {
         self.pos
     }
@@ -203,6 +285,60 @@ mod tests {
         w.put(0b11, 2);
         // stream: 1 0 1 1 1 … → byte 0b10111000
         assert_eq!(w.finish(), vec![0b1011_1000]);
+    }
+
+    #[test]
+    fn word_flush_boundaries_preserve_byte_layout() {
+        // Cross the 32-bit flush threshold at every offset: the word-level
+        // writer must emit the exact byte stream of a 1-bit-at-a-time
+        // reference (the frozen wire layout).
+        let mut rng = Pcg32::seeded(77);
+        for lead in 0..16u32 {
+            let vals: Vec<(u32, u32)> = (0..200)
+                .map(|i| {
+                    let b = if i == 0 && lead > 0 { lead } else { 1 + rng.below(16) };
+                    (rng.next_u32() & ((1u64 << b) as u32).wrapping_sub(1), b)
+                })
+                .collect();
+            let mut w = BitWriter::new();
+            // bit-at-a-time reference stream
+            let mut ref_bits: Vec<u8> = Vec::new();
+            for &(v, b) in &vals {
+                w.put(v, b);
+                for k in (0..b).rev() {
+                    ref_bits.push(((v >> k) & 1) as u8);
+                }
+            }
+            let mut ref_bytes = vec![0u8; (ref_bits.len() + 7) / 8];
+            for (i, bit) in ref_bits.iter().enumerate() {
+                ref_bytes[i / 8] |= bit << (7 - (i % 8));
+            }
+            assert_eq!(w.finish(), ref_bytes, "lead={lead}");
+        }
+    }
+
+    #[test]
+    fn packer_into_vec_matches_bitwriter() {
+        // BitPacker appends to an existing body exactly what BitWriter
+        // would have produced standalone.
+        let mut rng = Pcg32::seeded(78);
+        let vals: Vec<(u32, u32)> = (0..500)
+            .map(|_| {
+                let b = 1 + rng.below(16);
+                (rng.next_u32() & ((1u32 << b) - 1), b)
+            })
+            .collect();
+        let mut w = BitWriter::new();
+        let mut body = vec![0xEEu8, 0xFF]; // pre-existing header bytes
+        let mut p = BitPacker::new(&mut body);
+        for &(v, b) in &vals {
+            w.put(v, b);
+            p.put(v, b);
+        }
+        p.finish();
+        let packed = w.finish();
+        assert_eq!(&body[..2], &[0xEE, 0xFF]);
+        assert_eq!(&body[2..], &packed[..]);
     }
 
     #[test]

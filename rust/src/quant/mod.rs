@@ -10,7 +10,7 @@ pub mod linear;
 pub mod power;
 
 pub use allocation::{allocate_bits, AllocationConfig};
-pub use bitpack::{pack_uniform, unpack_uniform, BitReader, BitWriter};
+pub use bitpack::{pack_uniform, unpack_uniform, BitPacker, BitReader, BitWriter};
 pub use easy::EasyQuant;
 pub use linear::LinearQuantizer;
 pub use power::PowerQuant;
@@ -19,13 +19,15 @@ use crate::codec::wire::{BodyReader, BodyWriter};
 use anyhow::Result;
 
 /// Quantize `xs` with `q` and append the bit-packed levels to a body writer
-/// (shared by the channel-wise codecs).
+/// (shared by the channel-wise codecs). Packs straight into the body via
+/// [`BodyWriter::packer`] — no intermediate buffer, no per-call allocation;
+/// the byte stream is identical to the historical buffer-then-copy path.
 pub fn pack_levels_into(xs: &[f32], q: &LinearQuantizer, w: &mut BodyWriter) {
-    let mut bits = BitWriter::with_capacity((xs.len() * q.bits as usize + 7) / 8);
+    let mut p = w.packer();
     for &x in xs {
-        bits.put(q.quantize(x), q.bits);
+        p.put(q.quantize(x), q.bits);
     }
-    w.bytes(&bits.finish());
+    p.finish();
 }
 
 /// Read `count` levels packed at `q.bits` wide and dequantize into `out`.
@@ -41,6 +43,33 @@ pub fn unpack_levels(
     let mut br = BitReader::new(packed);
     for o in out.iter_mut() {
         *o = q.dequantize(br.get(q.bits));
+    }
+    Ok(())
+}
+
+/// [`unpack_levels`] through a dequantization lookup table held in `lut`
+/// (rebuilt in place per call, ≤ `2^bits` entries for `bits ≤ 8`; wider
+/// widths fall back to direct dequantization). Table entries come from the
+/// *same* [`LinearQuantizer::dequantize`], so decoded values are
+/// bit-identical to the direct path.
+pub fn unpack_levels_lut(
+    r: &mut BodyReader,
+    q: &LinearQuantizer,
+    count: usize,
+    lut: &mut Vec<f32>,
+    out: &mut [f32],
+) -> Result<()> {
+    if q.bits > 8 {
+        return unpack_levels(r, q, count, out);
+    }
+    assert_eq!(out.len(), count);
+    let bytes = (count * q.bits as usize + 7) / 8;
+    let packed = r.bytes(bytes)?;
+    lut.clear();
+    lut.extend((0..=q.qmax()).map(|l| q.dequantize(l)));
+    let mut br = BitReader::new(packed);
+    for o in out.iter_mut() {
+        *o = lut[br.get(q.bits) as usize];
     }
     Ok(())
 }

@@ -118,6 +118,30 @@ impl Tensor {
         self.data
     }
 
+    /// Reshape **in place** to `shape`, zero-filling the data and reusing
+    /// the existing allocation when capacity allows — the decompress hot
+    /// path resets one output tensor per call instead of allocating
+    /// (`ActivationCodec::decompress_into`). Sparse decoders rely on the
+    /// zero fill; dense decoders use [`Tensor::reset_dense`].
+    pub fn reset(&mut self, shape: &[usize]) {
+        let n: usize = shape.iter().product();
+        self.data.clear();
+        self.data.resize(n, 0.0);
+        self.shape.0.clear();
+        self.shape.0.extend_from_slice(shape);
+    }
+
+    /// Like [`Tensor::reset`] but **without** the zero fill: retained
+    /// elements keep their stale values (only growth is zeroed). Only for
+    /// callers that overwrite every element before the tensor is read —
+    /// skips a redundant full memset on the dense decode hot path.
+    pub fn reset_dense(&mut self, shape: &[usize]) {
+        let n: usize = shape.iter().product();
+        self.data.resize(n, 0.0);
+        self.shape.0.clear();
+        self.shape.0.extend_from_slice(shape);
+    }
+
     /// Reinterpret with a new shape of identical element count.
     pub fn reshape(mut self, shape: &[usize]) -> Self {
         let n: usize = shape.iter().product();

@@ -1,0 +1,186 @@
+//! Differential tests for the fused codec hot path (the perf refactor's
+//! safety net): the fused single-pass kernels, the word-level bit packing,
+//! and the scratch-arena buffer reuse must be **invisible on the wire** —
+//! bit-identical payload bytes and bit-identical decoded tensors vs the
+//! multi-pass reference kernels and the allocating API, over randomized
+//! shapes, seeds, θ, and bit bounds.
+
+// `ActivationCodec` must be in scope for the trait-method calls on the
+// concrete `SlFacCodec` values below (trait objects wouldn't need it).
+use slfac::codec::{
+    self, ActivationCodec, CodecParams, CodecScratch, Payload, SlFacCodec, SlFacConfig,
+};
+use slfac::dct::Dct2d;
+use slfac::quant::AllocationConfig;
+use slfac::rng::{stream, Pcg32};
+use slfac::tensor::Tensor;
+use slfac::testing::prop;
+
+/// The tentpole acceptance property: fast and reference SL-FAC kernels
+/// produce identical wire bytes and identical decoded tensors for
+/// randomized shapes, input statistics, seeds, θ, and FQC bit bounds.
+#[test]
+fn fast_kernels_bit_identical_to_reference() {
+    prop("slfac fast == reference", 120, |g| {
+        let shape = g.bchw_shape();
+        let theta = *g.choose(&[0.5f64, 0.7, 0.8, 0.9, 0.95, 0.99, 1.0]);
+        let b_min = g.usize_in(1, 6) as u32;
+        let b_max = b_min + g.usize_in(0, 16 - b_min as usize) as u32;
+        // mix of smooth coefficient planes, raw noise, and spiky data
+        let x = match g.usize_in(0, 2) {
+            0 => Dct2d::forward_tensor(&g.tensor(&shape, 2.0)),
+            1 => g.tensor(&shape, *g.choose(&[0.1f32, 1.0, 10.0])),
+            _ => {
+                let n = shape.iter().product();
+                Tensor::new(&shape, g.spiky_vec(n))
+            }
+        };
+        let alloc = AllocationConfig { b_min, b_max };
+        let fast = SlFacCodec::new(SlFacConfig {
+            theta,
+            alloc,
+            fast_path: true,
+        });
+        let reference = SlFacCodec::new(SlFacConfig {
+            theta,
+            alloc,
+            fast_path: false,
+        });
+        let pf = fast.compress(&x).unwrap();
+        let pr = reference.compress(&x).unwrap();
+        assert_eq!(
+            pf.to_bytes(),
+            pr.to_bytes(),
+            "wire bytes diverged: shape {shape:?} θ={theta} bits=[{b_min},{b_max}]"
+        );
+        let df = fast.decompress(&pf).unwrap();
+        let dr = reference.decompress(&pr).unwrap();
+        assert_eq!(df.shape(), dr.shape());
+        // bitwise, not approximate: compare raw f32 bit patterns
+        let bits = |t: &Tensor| -> Vec<u32> { t.data().iter().map(|v| v.to_bits()).collect() };
+        assert_eq!(bits(&df), bits(&dr), "decoded tensors diverged");
+    });
+}
+
+/// Degenerate inputs exercise every edge branch of the fused kernel: the
+/// all-zero channel (k* = 1 path), constant channels (degenerate quantizer
+/// ranges), negative zeros (sign-sensitive min/max bytes), single-element
+/// planes.
+#[test]
+fn fast_kernels_bit_identical_on_degenerate_inputs() {
+    let mk = |fast: bool| {
+        SlFacCodec::new(SlFacConfig {
+            fast_path: fast,
+            ..Default::default()
+        })
+    };
+    let (fast, reference) = (mk(true), mk(false));
+    let cases: Vec<Tensor> = vec![
+        Tensor::zeros(&[1, 2, 5, 5]),
+        Tensor::full(&[2, 1, 4, 4], 3.25),
+        Tensor::full(&[1, 1, 1, 1], -7.5),
+        Tensor::full(&[1, 3, 6, 6], -0.0),
+        {
+            let mut t = Tensor::zeros(&[1, 1, 4, 4]);
+            t.data_mut()[0] = -0.0; // negative zero at DC
+            t.data_mut()[15] = 1e-20; // tiny tail energy
+            t
+        },
+        {
+            let mut t = Tensor::full(&[1, 1, 3, 3], 1.0);
+            t.data_mut()[4] = f32::MAX / 4.0; // huge mid coefficient
+            t
+        },
+    ];
+    for (i, x) in cases.iter().enumerate() {
+        let pf = fast.compress(x).unwrap();
+        let pr = reference.compress(x).unwrap();
+        assert_eq!(pf.to_bytes(), pr.to_bytes(), "case {i}");
+        assert_eq!(
+            fast.decompress(&pf).unwrap().data(),
+            reference.decompress(&pr).unwrap().data(),
+            "case {i}"
+        );
+    }
+}
+
+/// Every registered codec: the scratch-arena API (`compress_into` /
+/// `decompress_into`, with one arena reused across calls and shapes) must
+/// produce byte-identical payloads and bit-identical decodes vs the
+/// allocating API at the same RNG stream position.
+#[test]
+fn scratch_api_matches_allocating_api_for_every_codec() {
+    prop("scratch == allocating", 60, |g| {
+        let params = CodecParams::default();
+        let name = *g.choose(codec::ALL_CODECS);
+        let c = codec::by_name(name, &params).unwrap();
+        let shape = g.bchw_shape();
+        let x = if c.frequency_domain() {
+            Dct2d::forward_tensor(&g.tensor(&shape, 1.5))
+        } else {
+            g.tensor(&shape, 1.5)
+        };
+        // same derived stream for both paths (randomized codecs must draw
+        // identically)
+        let seed = 0xD1FF ^ g.case as u64;
+        let mut rng_a = Pcg32::derived(seed, stream::CODEC, 0);
+        let mut rng_b = Pcg32::derived(seed, stream::CODEC, 0);
+
+        let mut scratch = CodecScratch::new();
+        let mut got = Payload::empty();
+        got.body = scratch.take_body();
+        c.compress_into(&x, &mut rng_a, &mut scratch, &mut got).unwrap();
+        let want = c.compress_with_rng(&x, &mut rng_b).unwrap();
+        assert_eq!(got.to_bytes(), want.to_bytes(), "{name} {shape:?}");
+
+        let mut out = Tensor::zeros(&[1]);
+        c.decompress_into(&got, &mut scratch, &mut out).unwrap();
+        let reference = c.decompress(&want).unwrap();
+        assert_eq!(out.shape(), reference.shape(), "{name}");
+        let bits = |t: &Tensor| -> Vec<u32> { t.data().iter().map(|v| v.to_bits()).collect() };
+        assert_eq!(bits(&out), bits(&reference), "{name} decode");
+
+        // second use of the same arena + payload + output tensor (dirty
+        // buffers, possibly different shape) must be just as transparent
+        let shape2 = g.bchw_shape();
+        let x2 = if c.frequency_domain() {
+            Dct2d::forward_tensor(&g.tensor(&shape2, 0.7))
+        } else {
+            g.tensor(&shape2, 0.7)
+        };
+        c.compress_into(&x2, &mut rng_a, &mut scratch, &mut got).unwrap();
+        let want2 = c.compress_with_rng(&x2, &mut rng_b).unwrap();
+        assert_eq!(got.to_bytes(), want2.to_bytes(), "{name} reuse {shape2:?}");
+        c.decompress_into(&got, &mut scratch, &mut out).unwrap();
+        assert_eq!(
+            bits(&out),
+            bits(&c.decompress(&want2).unwrap()),
+            "{name} reuse decode"
+        );
+    });
+}
+
+/// The `codec_fast_path` toggle flows through the factory: both modes
+/// build, and their products are interchangeable on the wire.
+#[test]
+fn factory_fast_path_toggle_is_wire_transparent() {
+    let fast_params = CodecParams::default();
+    let ref_params = CodecParams {
+        fast_path: false,
+        ..Default::default()
+    };
+    let x = Dct2d::forward_tensor(&codec::smooth_activations(&[2, 4, 14, 14], 99));
+    for name in &["slfac", "afd-uniform"] {
+        let fast = codec::by_name(name, &fast_params).unwrap();
+        let reference = codec::by_name(name, &ref_params).unwrap();
+        let pf = fast.compress(&x).unwrap();
+        let pr = reference.compress(&x).unwrap();
+        assert_eq!(pf.to_bytes(), pr.to_bytes(), "{name}");
+        // cross-decode: reference decodes the fast payload and vice versa
+        assert_eq!(
+            reference.decompress(&pf).unwrap().data(),
+            fast.decompress(&pr).unwrap().data(),
+            "{name}"
+        );
+    }
+}

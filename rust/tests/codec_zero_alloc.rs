@@ -1,0 +1,100 @@
+//! Steady-state allocation discipline: after one warm-up call per shape,
+//! the codec hot path (`compress_into` / `decompress_into` with a reused
+//! scratch arena, payload, and output tensor) performs **zero heap
+//! allocations** — the acceptance criterion of the fused-codec perf
+//! refactor.
+//!
+//! Verified with a counting global allocator, which is why this test lives
+//! alone in its own integration-test binary: the count is process-global,
+//! and a lone `#[test]` keeps harness noise out of the measured windows.
+//! To tolerate any residual runtime allocation (e.g. lazy stdio), each
+//! codec measures several windows and asserts the *minimum* is zero — a
+//! per-call allocation would show up in every window.
+
+use slfac::codec::{self, CodecParams, CodecScratch, Payload};
+use slfac::dct::Dct2d;
+use slfac::rng::{stream, Pcg32};
+use slfac::tensor::Tensor;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+// SAFETY: defers all allocation to `System`; only adds a relaxed counter.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Allocations observed across `f()`.
+fn count_allocs(mut f: impl FnMut()) -> u64 {
+    let before = ALLOC_CALLS.load(Ordering::Relaxed);
+    f();
+    ALLOC_CALLS.load(Ordering::Relaxed) - before
+}
+
+#[test]
+fn steady_state_compress_decompress_is_allocation_free() {
+    // the paper codec at MNIST scale (14×14, fused kernel + planned
+    // zig-zag), plus the uniform baseline — both scratch-arena paths
+    for (name, shape) in [
+        ("slfac", [4usize, 8, 14, 14]),
+        ("slfac", [2, 4, 16, 16]),
+        ("uniform", [4, 8, 14, 14]),
+        ("identity", [2, 4, 8, 8]),
+    ] {
+        let params = CodecParams::default();
+        let c = codec::by_name(name, &params).unwrap();
+        let x = if c.frequency_domain() {
+            Dct2d::forward_tensor(&codec::smooth_activations(&shape, 0xA110C))
+        } else {
+            codec::smooth_activations(&shape, 0xA110C)
+        };
+        let mut rng = Pcg32::derived(1, stream::CODEC, 0);
+        let mut scratch = CodecScratch::new();
+        let mut payload = Payload::empty();
+        let mut out = Tensor::zeros(&[1]);
+
+        let mut cycle = || {
+            c.compress_into(&x, &mut rng, &mut scratch, &mut payload).unwrap();
+            c.decompress_into(&payload, &mut scratch, &mut out).unwrap();
+        };
+        // warm-up: builds plans, sizes every buffer to this shape
+        for _ in 0..3 {
+            cycle();
+        }
+        // measure several windows; a true per-call allocation would appear
+        // in all of them
+        let min_allocs = (0..5)
+            .map(|_| count_allocs(|| for _ in 0..10 { cycle() }))
+            .min()
+            .unwrap();
+        assert_eq!(
+            min_allocs, 0,
+            "{name} {shape:?}: steady-state hot path allocated"
+        );
+        // the payload produced by the allocation-free path is still the
+        // canonical one
+        let want = c.compress_with_rng(&x, &mut Pcg32::derived(1, stream::CODEC, 0)).unwrap();
+        // (slfac/uniform/identity ignore the rng, so stream position is moot)
+        assert_eq!(payload.to_bytes(), want.to_bytes(), "{name}");
+    }
+}

@@ -149,6 +149,37 @@ fn repeated_parallel_runs_are_self_consistent() {
 }
 
 #[test]
+fn fast_path_and_scratch_arenas_are_bit_transparent() {
+    // Two pins in one matrix. (1) Per-worker `CodecScratch` arenas: each
+    // device's arena is reused dirty across batches and rounds, and the
+    // shard→worker assignment changes with the worker count — results must
+    // not. (2) The fused codec kernels (`codec_fast_path = true`, default)
+    // vs the multi-pass reference kernels: identical wire bytes means
+    // identical byte accounting, identical link timing, and identical
+    // training trajectories, end to end.
+    let dir = sim_dir("fastpath");
+    for &seed in &[7u64, 1234] {
+        let mut ref_cfg = cfg(&dir, "slfac", SyncMode::ParallelFedAvg, seed, 1);
+        ref_cfg.codec_params.fast_path = false;
+        let reference = run(ref_cfg);
+        for workers in [1usize, 4] {
+            for fast in [true, false] {
+                let mut c = cfg(&dir, "slfac", SyncMode::ParallelFedAvg, seed, workers);
+                c.name = format!("pardet_fastpath_{seed}_{workers}_{fast}");
+                c.codec_params.fast_path = fast;
+                let got = run(c);
+                assert_bit_identical(
+                    &reference,
+                    &got,
+                    &format!("seed={seed} workers={workers} fast_path={fast}"),
+                );
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn different_seeds_actually_diverge() {
     // guards against the comparison being vacuous (e.g. everything zero)
     let dir = sim_dir("diverge");
