@@ -18,13 +18,18 @@
 //! additionally land in machine-readable `BENCH_codec.json` so future
 //! PRs get a perf trajectory.
 //!
-//! Section 4 (`xla`; requires `make artifacts`): one full split-learning
+//! Section 4 (`compute`; always runs): **compute-backend benches** —
+//! blocked-vs-reference kernel GFLOP/s, resident-vs-artifact single
+//! device steps, and fast-vs-reference full async rounds at 64/256
+//! devices. Results additionally land in `BENCH_compute.json`.
+//!
+//! Section 5 (`xla`; requires `make artifacts`): one full split-learning
 //! round over real PJRT artifacts per codec — client_fwd, compress,
 //! uplink, idct, server_step, compress, downlink, client_step.
 //!
-//! `SLFAC_BENCH_ONLY=engine|async|codec|xla` restricts the run to one
-//! section (CI uses this to smoke the async scenarios and the codec
-//! kernels in isolation).
+//! `SLFAC_BENCH_ONLY=engine|async|codec|compute|xla` restricts the run to
+//! one section (CI uses this to smoke the async scenarios, the codec
+//! kernels, and the compute backend in isolation).
 
 use slfac::bench::{black_box, BenchResult, Bencher};
 use slfac::codec::{self, CodecParams, CodecScratch, Payload};
@@ -33,7 +38,8 @@ use slfac::coordinator::Trainer;
 use slfac::dct::Dct2d;
 use slfac::json::Json;
 use slfac::rng::Pcg32;
-use slfac::runtime::{write_sim_manifest, ExecutorHandle, SimManifestSpec};
+use slfac::runtime::compute as ck;
+use slfac::runtime::{write_sim_manifest, ExecutorHandle, HostTensor, SimManifestSpec};
 use slfac::tensor::Tensor;
 use slfac::transport::{ClientSampling, SchedulerKind, StragglerPolicy, UplinkMode};
 use std::collections::BTreeMap;
@@ -413,12 +419,244 @@ fn bench_codec_kernels(b: &mut Bencher) {
     println!("\ncodec bench results -> {path}");
 }
 
+/// Section 5: compute-backend benches — per-kernel GFLOP/s (blocked vs
+/// reference), fast-vs-reference single device steps, and fast-vs-reference
+/// full async rounds at 64/256 devices. Machine-readable output lands in
+/// `BENCH_compute.json` (the compute twin of `BENCH_codec.json`).
+fn bench_compute(b: &mut Bencher) {
+    let mut kernel_rows: Vec<Json> = Vec::new();
+
+    // --- per-kernel GFLOP/s: the MNIST-scale shapes the sim model runs ---
+    b.section("compute kernels: blocked fast vs reference (GFLOP/s)");
+    let gflops = |flops: f64, r: &BenchResult| flops / r.median.as_secs_f64().max(1e-12) / 1e9;
+    let mut rng = Pcg32::seeded(40);
+    let mut randn = |n: usize| -> Vec<f32> { (0..n).map(|_| rng.normal()).collect() };
+    // (label, batch, k, n): client fwd, server logits, client backward grad
+    for (label, bsz, k, n) in [
+        ("fwd_gemm/8x784x196", 8usize, 784usize, 196usize),
+        ("fwd_gemm/8x784x1568", 8, 784, 1568),
+        ("fwd_gemm/8x196x10", 8, 196, 10),
+    ] {
+        let x = randn(bsz * k);
+        let w = randn(k * n);
+        let flops = 2.0 * (bsz * k * n) as f64;
+        let mut out = vec![0.0f32; bsz * n];
+        let rf = b
+            .bench(&format!("{label}/fast"), || {
+                ck::fwd_gemm(black_box(&x), black_box(&w), bsz, k, n, &mut out);
+            })
+            .clone();
+        let rr = b
+            .bench(&format!("{label}/reference"), || {
+                black_box(ck::fwd_gemm_ref(black_box(&x), black_box(&w), bsz, k, n));
+            })
+            .clone();
+        println!(
+            "    -> {label}: fast {:.2} GFLOP/s vs reference {:.2} GFLOP/s (x{:.2})",
+            gflops(flops, &rf),
+            gflops(flops, &rr),
+            rf.speedup_vs(&rr)
+        );
+        let mut m = BTreeMap::new();
+        m.insert("kernel".to_string(), Json::Str(label.to_string()));
+        m.insert("fast_gflops".to_string(), Json::Num(gflops(flops, &rf)));
+        m.insert("reference_gflops".to_string(), Json::Num(gflops(flops, &rr)));
+        m.insert("speedup".to_string(), Json::Num(rf.speedup_vs(&rr)));
+        kernel_rows.push(Json::Obj(m));
+    }
+    {
+        let (bsz, i_dim, j_dim) = (8usize, 784usize, 196usize);
+        let a = randn(bsz * i_dim);
+        let d = randn(bsz * j_dim);
+        let flops = 2.0 * (bsz * i_dim * j_dim) as f64;
+        let mut out = vec![0.0f32; i_dim * j_dim];
+        let rf = b
+            .bench("grad_outer/8x784x196/fast", || {
+                ck::grad_outer(black_box(&a), black_box(&d), bsz, i_dim, j_dim, &mut out);
+            })
+            .clone();
+        let rr = b
+            .bench("grad_outer/8x784x196/reference", || {
+                black_box(ck::grad_outer_ref(black_box(&a), black_box(&d), bsz, i_dim, j_dim));
+            })
+            .clone();
+        let mut m = BTreeMap::new();
+        m.insert("kernel".to_string(), Json::Str("grad_outer/8x784x196".to_string()));
+        m.insert("fast_gflops".to_string(), Json::Num(gflops(flops, &rf)));
+        m.insert("reference_gflops".to_string(), Json::Num(gflops(flops, &rr)));
+        m.insert("speedup".to_string(), Json::Num(rf.speedup_vs(&rr)));
+        kernel_rows.push(Json::Obj(m));
+    }
+    {
+        let (bsz, feat, classes) = (8usize, 196usize, 10usize);
+        let d = randn(bsz * classes);
+        let w_s = randn(feat * classes);
+        let mut w_s_t = vec![0.0f32; feat * classes];
+        for r in 0..feat {
+            for c in 0..classes {
+                w_s_t[c * feat + r] = w_s[r * classes + c];
+            }
+        }
+        let flops = 2.0 * (bsz * feat * classes) as f64;
+        let mut out = vec![0.0f32; bsz * feat];
+        let rf = b
+            .bench("gact/8x196x10/fast", || {
+                ck::gact_fast(black_box(&d), black_box(&w_s_t), bsz, feat, classes, &mut out);
+            })
+            .clone();
+        let rr = b
+            .bench("gact/8x196x10/reference", || {
+                black_box(ck::gact_ref(black_box(&d), black_box(&w_s), bsz, feat, classes));
+            })
+            .clone();
+        let mut m = BTreeMap::new();
+        m.insert("kernel".to_string(), Json::Str("gact/8x196x10".to_string()));
+        m.insert("fast_gflops".to_string(), Json::Num(gflops(flops, &rf)));
+        m.insert("reference_gflops".to_string(), Json::Num(gflops(flops, &rr)));
+        m.insert("speedup".to_string(), Json::Num(rf.speedup_vs(&rr)));
+        kernel_rows.push(Json::Obj(m));
+    }
+
+    // --- one full device step: resident fast path vs artifact path ---
+    b.section("compute step: resident (fast) vs artifact execute (reference)");
+    let dir = format!(
+        "{}/slfac_bench_compute_{}",
+        std::env::temp_dir().display(),
+        std::process::id()
+    );
+    write_sim_manifest(
+        &dir,
+        &[SimManifestSpec {
+            preset: "mnist".into(),
+            batch_size: SIM_BATCH,
+            act_channels: 4,
+            act_hw: 7,
+        }],
+    )
+    .unwrap();
+    let exec = ExecutorHandle::spawn_sim(&dir, &["mnist".to_string()]).unwrap();
+    let step_ratio = {
+        let res = exec.open_resident("mnist", 1).unwrap().expect("resident");
+        let mut rng = Pcg32::seeded(41);
+        let x: Vec<f32> = (0..SIM_BATCH * 784).map(|_| rng.normal() * 0.5).collect();
+        let y: Vec<i32> = (0..SIM_BATCH).map(|i| (i % 10) as i32).collect();
+        let mut wire = Tensor::zeros(&[1]);
+        let mut grad = Tensor::zeros(&[1]);
+        let rf = b
+            .bench("step/fast (fwd+server+bwd, resident)", || {
+                res.client_fwd(0, &x, false, &mut wire).unwrap();
+                res.server_step(&wire, &y, 0.05, false, &mut grad).unwrap();
+                res.client_step(0, &x, &grad, 0.05).unwrap();
+            })
+            .clone();
+
+        // reference: the artifact protocol with full parameter round trips
+        let init = exec.execute("mnist", "init", vec![]).unwrap();
+        let mut cp = init[0].clone();
+        let mut sp = init[1].clone();
+        let zeros = |t: &HostTensor| HostTensor::f32(t.dims(), vec![0.0; t.numel()]);
+        let (mut cm, mut sm) = (zeros(&cp), zeros(&sp));
+        let xh = HostTensor::f32(&[SIM_BATCH, 1, 28, 28], x.clone());
+        let yh = HostTensor::i32(&[SIM_BATCH], y.clone());
+        let lr = HostTensor::scalar_f32(0.05);
+        let rr = b
+            .bench("step/reference (artifact execute)", || {
+                let fwd = exec
+                    .execute("mnist", "client_fwd", vec![cp.clone(), xh.clone()])
+                    .unwrap();
+                let out = exec
+                    .execute(
+                        "mnist",
+                        "server_step",
+                        vec![
+                            sp.clone(),
+                            sm.clone(),
+                            fwd[0].clone(),
+                            yh.clone(),
+                            lr.clone(),
+                        ],
+                    )
+                    .unwrap();
+                let mut it = out.into_iter();
+                sp = it.next().unwrap();
+                sm = it.next().unwrap();
+                let _loss = it.next().unwrap();
+                let _correct = it.next().unwrap();
+                let gact = it.next().unwrap();
+                let back = exec
+                    .execute(
+                        "mnist",
+                        "client_step",
+                        vec![cp.clone(), cm.clone(), xh.clone(), gact, lr.clone()],
+                    )
+                    .unwrap();
+                let mut it = back.into_iter();
+                cp = it.next().unwrap();
+                cm = it.next().unwrap();
+            })
+            .clone();
+        let ratio = rf.speedup_vs(&rr);
+        println!("    -> fast-vs-reference step speedup x{ratio:.2}");
+        ratio
+    };
+
+    // --- fast vs reference through full async rounds at fleet scale ------
+    b.section("compute fast vs reference: async wifi/lte rounds, 64/256 devices");
+    let mut round_rows: Vec<Json> = Vec::new();
+    for devices in [64usize, 256] {
+        let mut medians: Vec<f64> = Vec::new();
+        for (label, fast) in [("fast", true), ("reference", false)] {
+            let mut cfg = sim_cfg(&dir, "slfac", devices, 0);
+            cfg.name = format!("bench_compute_{label}_{devices}d");
+            cfg.batches_per_round = 1;
+            cfg.train_samples = 16 * devices;
+            cfg.scheduler = SchedulerKind::Async;
+            cfg.profile = "wifi/lte".into();
+            cfg.compute_fast_path = fast;
+            let mut trainer = Trainer::new(cfg, exec.clone()).unwrap();
+            let _ = trainer.run().unwrap(); // warm
+            let r = b
+                .bench(&format!("round/compute-{label}/devices={devices}"), || {
+                    let _ = trainer.run().unwrap();
+                })
+                .clone();
+            medians.push(r.median.as_secs_f64());
+        }
+        let speedup = medians[1] / medians[0].max(1e-12);
+        println!("    -> compute fast-path round speedup x{speedup:.2} ({devices} devices)");
+        let mut m = BTreeMap::new();
+        m.insert("devices".to_string(), Json::Num(devices as f64));
+        m.insert("fast_round_s".to_string(), Json::Num(medians[0]));
+        m.insert("reference_round_s".to_string(), Json::Num(medians[1]));
+        m.insert("speedup".to_string(), Json::Num(speedup));
+        round_rows.push(Json::Obj(m));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // machine-readable trajectory file
+    let mut root = BTreeMap::new();
+    root.insert(
+        "schema".to_string(),
+        Json::Str("slfac-bench-compute/1".to_string()),
+    );
+    root.insert("kernels".to_string(), Json::Arr(kernel_rows));
+    let mut step = BTreeMap::new();
+    step.insert("fast_vs_reference_speedup".to_string(), Json::Num(step_ratio));
+    root.insert("step".to_string(), Json::Obj(step));
+    root.insert("rounds".to_string(), Json::Arr(round_rows));
+    let path = "BENCH_compute.json";
+    std::fs::write(path, Json::Obj(root).to_string()).expect("write BENCH_compute.json");
+    println!("\ncompute bench results -> {path}");
+}
+
 fn main() {
     let mut b = Bencher::new();
     let only = std::env::var("SLFAC_BENCH_ONLY").unwrap_or_default();
-    if !only.is_empty() && !["engine", "async", "codec", "xla"].contains(&only.as_str()) {
+    if !only.is_empty()
+        && !["engine", "async", "codec", "compute", "xla"].contains(&only.as_str())
+    {
         // a CI typo must fail loudly, not silently run zero sections
-        eprintln!("SLFAC_BENCH_ONLY='{only}' is not one of engine|async|codec|xla");
+        eprintln!("SLFAC_BENCH_ONLY='{only}' is not one of engine|async|codec|compute|xla");
         std::process::exit(2);
     }
     let want = |section: &str| only.is_empty() || only == section;
@@ -430,6 +668,9 @@ fn main() {
     }
     if want("codec") {
         bench_codec_kernels(&mut b);
+    }
+    if want("compute") {
+        bench_compute(&mut b);
     }
     if want("xla") {
         bench_xla_round(&mut b);

@@ -160,6 +160,10 @@ pub struct CodecScratch {
     pub bitmap: Vec<u8>,
     /// Dequantization lookup table (≤ 2^bits entries, bits ≤ 8 paths).
     pub lut: Vec<f32>,
+    /// EasyQuant sparse outlier work `(flat index, value)` — recycled
+    /// through `EasyQuant::fit_with` so the fit stops allocating on the
+    /// hot path.
+    pub outliers: Vec<(u32, f32)>,
     /// Recycled payload bodies: `take_body` pops one (retaining its
     /// capacity), `recycle_body` returns one after its payload is decoded.
     pool: Vec<Vec<u8>>,

@@ -138,19 +138,19 @@ impl ActivationCodec for EasyQuantCodec {
         super::compress_fresh(self, x)
     }
 
-    /// Body-reusing compression. Note: `EasyQuant::fit` still allocates
-    /// its outlier list internally — this baseline is outside the
-    /// zero-allocation guarantee (which covers the paper codec and the
-    /// uniform/identity baselines; see `tests/codec_zero_alloc.rs`).
+    /// Body-reusing compression; the fit's outlier list recycles through
+    /// the scratch arena (`EasyQuant::fit_with`), so the whole encode is
+    /// allocation-free in steady state like the other baselines
+    /// (`tests/codec_zero_alloc.rs`).
     fn compress_into(
         &self,
         x: &Tensor,
         _rng: &mut Pcg32,
-        _scratch: &mut CodecScratch,
+        scratch: &mut CodecScratch,
         out: &mut Payload,
     ) -> Result<()> {
         let (b, c, m, n) = x.as_bchw();
-        let q = EasyQuant::fit(self.bits, x.data());
+        let q = EasyQuant::fit_with(self.bits, x.data(), std::mem::take(&mut scratch.outliers));
         let cap = 8 + q.outliers.len() * 8 + (x.numel() * self.bits as usize + 7) / 8;
         let mut w = BodyWriter::from_vec(std::mem::take(&mut out.body), cap);
         w.f32(q.clip);
@@ -164,6 +164,7 @@ impl ActivationCodec for EasyQuantCodec {
             bits.put(q.quantize(v), self.bits);
         }
         bits.finish();
+        scratch.outliers = q.outliers; // return the capacity to the arena
         *out = Payload {
             kind: CodecKind::EasyQuant as u8,
             shape: [b, c, m, n],
@@ -173,29 +174,49 @@ impl ActivationCodec for EasyQuantCodec {
     }
 
     fn decompress(&self, p: &Payload) -> Result<Tensor> {
+        super::decompress_fresh(self, p)
+    }
+
+    /// Streaming decode into the reusable output tensor: dequantize the
+    /// inlier grid straight into `out`, then patch the sparse outliers
+    /// from the body slice — no level vector, no outlier vector.
+    fn decompress_into(
+        &self,
+        p: &Payload,
+        _scratch: &mut CodecScratch,
+        out: &mut Tensor,
+    ) -> Result<()> {
         let [b, c, m, n] = p.shape;
         let count = b * c * m * n;
         let mut r = BodyReader::new(&p.body);
         let clip = r.f32()?;
         let n_out = r.u32()? as usize;
         ensure!(n_out <= count, "corrupt EasyQuant outlier count {n_out}");
-        let mut outliers = Vec::with_capacity(n_out);
-        for _ in 0..n_out {
-            let i = r.u32()?;
+        let outlier_bytes = r.bytes(n_out * 8)?;
+        // validate indices before touching `out`, so a corrupt payload
+        // fails without a half-written tensor
+        for pair in outlier_bytes.chunks_exact(8) {
+            let i = u32::from_le_bytes(pair[0..4].try_into().unwrap());
             ensure!((i as usize) < count, "corrupt outlier index {i}");
-            let v = r.f32()?;
-            outliers.push((i, v));
         }
         let q = EasyQuant {
             bits: self.bits,
             clip,
             threshold: 0.0,
-            outliers,
+            outliers: Vec::new(),
         };
         let packed = r.bytes((count * self.bits as usize + 7) / 8)?;
         let mut bits = BitReader::new(packed);
-        let levels: Vec<u32> = (0..count).map(|_| bits.get(self.bits)).collect();
-        Ok(Tensor::new(&[b, c, m, n], q.reconstruct(&levels)))
+        out.reset_dense(&[b, c, m, n]); // dense: every element written below
+        for o in out.data_mut() {
+            *o = q.dequantize(bits.get(self.bits));
+        }
+        let data = out.data_mut();
+        for pair in outlier_bytes.chunks_exact(8) {
+            let i = u32::from_le_bytes(pair[0..4].try_into().unwrap()) as usize;
+            data[i] = f32::from_le_bytes(pair[4..8].try_into().unwrap());
+        }
+        Ok(())
     }
 }
 

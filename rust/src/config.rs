@@ -128,6 +128,13 @@ pub struct ExperimentConfig {
     pub artifacts_dir: String,
     /// Whether gradients (downlink) are compressed too (paper: yes).
     pub compress_gradients: bool,
+    /// Use the planned zero-allocation compute backend (blocked GEMM
+    /// kernels + device-resident model state) on backends that support it
+    /// (default). `false` routes model compute through the artifact
+    /// `execute` path with the reference kernels — results are
+    /// **bit-identical** either way (see ARCHITECTURE.md "Compute hot
+    /// path"); the toggle exists for debugging and differential testing.
+    pub compute_fast_path: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -161,6 +168,7 @@ impl Default for ExperimentConfig {
             seed: 1234,
             artifacts_dir: "artifacts".into(),
             compress_gradients: true,
+            compute_fast_path: true,
         }
     }
 }
@@ -281,6 +289,9 @@ impl ExperimentConfig {
                 }
                 "compress_gradients" => {
                     cfg.compress_gradients = v.as_bool().context("compress_gradients")?
+                }
+                "compute_fast_path" => {
+                    cfg.compute_fast_path = v.as_bool().context("compute_fast_path")?
                 }
                 other => bail!("unknown config key '{other}'"),
             }
@@ -518,6 +529,10 @@ impl ExperimentConfig {
             "compress_gradients".into(),
             Json::Bool(self.compress_gradients),
         );
+        m.insert(
+            "compute_fast_path".into(),
+            Json::Bool(self.compute_fast_path),
+        );
         Json::Obj(m)
     }
 }
@@ -591,6 +606,21 @@ mod tests {
         let bad = Json::parse(r#"{"codec_fast_path": "yes"}"#).unwrap();
         let err = format!("{:#}", ExperimentConfig::from_json(&bad).unwrap_err());
         assert!(err.contains("codec_fast_path"), "{err}");
+    }
+
+    #[test]
+    fn compute_fast_path_parses_and_roundtrips() {
+        // default true
+        assert!(ExperimentConfig::default().compute_fast_path);
+        let json = Json::parse(r#"{"compute_fast_path": false}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&json).unwrap();
+        assert!(!cfg.compute_fast_path);
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert!(!back.compute_fast_path);
+        // non-bool value rejected with the key name
+        let bad = Json::parse(r#"{"compute_fast_path": 1}"#).unwrap();
+        let err = format!("{:#}", ExperimentConfig::from_json(&bad).unwrap_err());
+        assert!(err.contains("compute_fast_path"), "{err}");
     }
 
     #[test]

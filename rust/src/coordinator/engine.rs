@@ -47,6 +47,14 @@
 //! or worker counts can never perturb results — `parallel_determinism.rs`
 //! pins this differentially (same bytes for `workers = 1/4/0` and for
 //! fresh-vs-reused arenas).
+//!
+//! The compute fast path extends the same discipline to **model state**:
+//! each device's weights/momenta/forward stash live in a per-device slot
+//! of the shared [`crate::runtime::ResidentSession`] (its own mutex,
+//! uncontended because of the shard ownership above), and the server slot
+//! is only touched from the serial `server_step` phase. Slot scratch is
+//! write-before-read like the codec arenas, so `compute_fast_path` ×
+//! worker count is bit-transparent too — same differential pin.
 
 use anyhow::Result;
 
@@ -143,6 +151,8 @@ fn assert_engine_types_are_send() {
     is_send::<crate::runtime::HostTensor>();
     is_send::<crate::runtime::ExecutorHandle>();
     is_sync::<crate::runtime::ExecutorHandle>();
+    // the resident session is shared by reference across the phase workers
+    is_sync::<crate::runtime::ResidentSession>();
     is_send::<crate::data::BatchLoader>();
     is_send::<crate::rng::Pcg32>();
 }

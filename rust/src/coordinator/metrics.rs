@@ -78,9 +78,39 @@ pub struct TrainingHistory {
     pub codec: String,
     /// Rounds, in order.
     pub rounds: Vec<RoundMetrics>,
+    /// Running cumulative byte totals, maintained by [`TrainingHistory::push`]:
+    /// `cum[i] = Σ_{r ≤ i} total_bytes(r)` — O(1) per round instead of the
+    /// historical per-query prefix re-sum. Private so it can only drift
+    /// from `rounds` when callers push into `rounds` directly, which the
+    /// accessors below detect and fall back from.
+    cum: Vec<u64>,
 }
 
 impl TrainingHistory {
+    /// Empty history with identifying metadata.
+    pub fn new(name: &str, codec: &str) -> Self {
+        TrainingHistory {
+            name: name.to_string(),
+            codec: codec.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// [`TrainingHistory::new`] with both vectors pre-sized (the trainer
+    /// knows the round count up front, so steady-state pushes never grow).
+    pub fn with_capacity(name: &str, codec: &str, rounds: usize) -> Self {
+        let mut h = Self::new(name, codec);
+        h.rounds.reserve(rounds);
+        h.cum.reserve(rounds);
+        h
+    }
+
+    /// Append a round, extending the running byte total in O(1).
+    pub fn push(&mut self, m: RoundMetrics) {
+        let prev = self.cum.last().copied().unwrap_or(0);
+        self.cum.push(prev + m.total_bytes());
+        self.rounds.push(m);
+    }
     /// Best test accuracy seen.
     pub fn best_test_acc(&self) -> f64 {
         self.rounds.iter().map(|r| r.test_acc).fold(0.0, f64::max)
@@ -96,24 +126,39 @@ impl TrainingHistory {
         self.rounds.iter().find(|r| r.test_acc >= target).map(|r| r.round)
     }
 
+    /// Whether the running totals cover every round (false only when a
+    /// caller pushed into `rounds` directly, bypassing `push`).
+    fn cum_valid(&self) -> bool {
+        self.cum.len() == self.rounds.len()
+    }
+
     /// Cumulative bytes transmitted up to and including round `i` (0-based).
+    /// O(1) from the running total; falls back to a prefix sum for
+    /// hand-assembled histories.
     pub fn cumulative_bytes(&self, i: usize) -> u64 {
-        self.rounds[..=i].iter().map(|r| r.total_bytes()).sum()
+        if self.cum_valid() {
+            self.cum[i]
+        } else {
+            self.rounds[..=i].iter().map(|r| r.total_bytes()).sum()
+        }
     }
 
-    /// Total bytes for the whole run.
+    /// Total bytes for the whole run (O(1) from the running total).
     pub fn total_bytes(&self) -> u64 {
-        self.rounds.iter().map(|r| r.total_bytes()).sum()
+        if self.cum_valid() {
+            self.cum.last().copied().unwrap_or(0)
+        } else {
+            self.rounds.iter().map(|r| r.total_bytes()).sum()
+        }
     }
 
-    /// Render as CSV (header + one row per round).
+    /// Render as CSV (header + one row per round); the `cum_bytes` column
+    /// reuses the running totals.
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
             "round,train_loss,train_acc,test_loss,test_acc,uplink_bytes,downlink_bytes,cum_bytes,comm_time_s,sim_time_s,queue_wait_s,dropped,sampled,wall_time_s\n",
         );
-        let mut cum = 0u64;
-        for r in &self.rounds {
-            cum += r.total_bytes();
+        for (i, r) in self.rounds.iter().enumerate() {
             let _ = writeln!(
                 s,
                 "{},{:.5},{:.4},{:.5},{:.4},{},{},{},{:.4},{:.4},{:.4},{},{},{:.3}",
@@ -124,7 +169,7 @@ impl TrainingHistory {
                 r.test_acc,
                 r.uplink_bytes,
                 r.downlink_bytes,
-                cum,
+                self.cumulative_bytes(i),
                 r.comm_time_s,
                 r.sim_time_s,
                 r.queue_wait_s,
@@ -192,13 +237,17 @@ mod tests {
         }
     }
 
+    fn hist(rounds: Vec<RoundMetrics>) -> TrainingHistory {
+        let mut h = TrainingHistory::new("t", "x");
+        for m in rounds {
+            h.push(m);
+        }
+        h
+    }
+
     #[test]
     fn accuracy_queries() {
-        let h = TrainingHistory {
-            name: "t".into(),
-            codec: "slfac".into(),
-            rounds: vec![mk(1, 0.5, 100), mk(2, 0.8, 100), mk(3, 0.7, 100)],
-        };
+        let h = hist(vec![mk(1, 0.5, 100), mk(2, 0.8, 100), mk(3, 0.7, 100)]);
         assert_eq!(h.best_test_acc(), 0.8);
         assert_eq!(h.final_test_acc(), 0.7);
         assert_eq!(h.rounds_to_accuracy(0.75), Some(2));
@@ -207,14 +256,30 @@ mod tests {
 
     #[test]
     fn byte_accounting() {
-        let h = TrainingHistory {
-            name: "t".into(),
-            codec: "x".into(),
-            rounds: vec![mk(1, 0.1, 100), mk(2, 0.2, 200)],
-        };
+        let h = hist(vec![mk(1, 0.1, 100), mk(2, 0.2, 200)]);
         assert_eq!(h.cumulative_bytes(0), 150);
         assert_eq!(h.cumulative_bytes(1), 450);
         assert_eq!(h.total_bytes(), 450);
+    }
+
+    #[test]
+    fn running_totals_match_prefix_recompute_and_survive_raw_pushes() {
+        // push() path: cum cache equals the O(n) prefix re-sum
+        let rounds: Vec<RoundMetrics> =
+            (1..=6).map(|r| mk(r, 0.1, (r as u64) * 37)).collect();
+        let h = hist(rounds.clone());
+        for i in 0..h.rounds.len() {
+            let want: u64 = h.rounds[..=i].iter().map(|r| r.total_bytes()).sum();
+            assert_eq!(h.cumulative_bytes(i), want, "round {i}");
+        }
+        // hand-assembled history (rounds pushed directly, cache bypassed):
+        // the accessors must fall back to recomputation, not panic or lie
+        let mut raw = TrainingHistory::new("raw", "x");
+        for m in rounds {
+            raw.rounds.push(m);
+        }
+        assert_eq!(raw.cumulative_bytes(2), h.cumulative_bytes(2));
+        assert_eq!(raw.total_bytes(), h.total_bytes());
     }
 
     #[test]
@@ -238,32 +303,16 @@ mod tests {
         let mut g = a.clone();
         g.sampled_devices = 4;
         assert!(!a.bit_eq(&g), "sampling membership must affect bit_eq");
-        let ha = TrainingHistory {
-            name: "x".into(),
-            codec: "y".into(),
-            rounds: vec![a.clone(), b],
-        };
-        let hb = TrainingHistory {
-            name: "x".into(),
-            codec: "y".into(),
-            rounds: vec![a.clone(), a.clone()],
-        };
+        let ha = hist(vec![a.clone(), b]);
+        let hb = hist(vec![a.clone(), a.clone()]);
         assert!(ha.bit_eq(&hb));
-        let short = TrainingHistory {
-            name: "x".into(),
-            codec: "y".into(),
-            rounds: vec![a],
-        };
+        let short = hist(vec![a]);
         assert!(!ha.bit_eq(&short));
     }
 
     #[test]
     fn csv_shape() {
-        let h = TrainingHistory {
-            name: "t".into(),
-            codec: "x".into(),
-            rounds: vec![mk(1, 0.5, 64)],
-        };
+        let h = hist(vec![mk(1, 0.5, 64)]);
         let csv = h.to_csv();
         let lines: Vec<&str> = csv.trim().lines().collect();
         assert_eq!(lines.len(), 2);

@@ -10,7 +10,7 @@ use crate::data::{
     partition_dirichlet, partition_iid, synthetic, BatchLoader, Dataset,
 };
 use crate::rng::{derive_seed, stream, Pcg32};
-use crate::runtime::{ExecutorHandle, ExecutorStats, HostTensor};
+use crate::runtime::{ExecutorHandle, ExecutorStats, HostTensor, ResidentSession};
 use crate::tensor::Tensor;
 use crate::transport::{
     assign_profiles, build_scheduler, CommStats, DeviceId, DeviceProfile, Direction, Link,
@@ -48,10 +48,22 @@ struct DeviceCtx {
     /// place each step; its data is copied into a `HostTensor` for the
     /// executor).
     decode: Tensor,
+    /// Fast path: reusable batch image buffer (`[B·C·H·W]` flat).
+    x_buf: Vec<f32>,
+    /// Fast path: reusable batch label buffer.
+    y_buf: Vec<i32>,
+    /// Fast path: reusable wire-domain staging tensor — the activation
+    /// coefficients/activations on fan-out, the gradient on the downlink.
+    wire: Tensor,
+    /// Fast path: reusable spatial tensor for decoded + inverse-DCT'd
+    /// payloads.
+    spatial: Tensor,
     /// Device's client-side parameters (SplitFed: reset to the aggregate at
-    /// round start; sequential: handed off device-to-device).
+    /// round start; sequential: handed off device-to-device). Reference
+    /// path only — the fast path keeps weights device-resident in the
+    /// executor's [`ResidentSession`] slots.
     cp: Vec<HostTensor>,
-    /// Device's client-side momenta.
+    /// Device's client-side momenta (reference path only).
     cm: Vec<HostTensor>,
     shard_len: usize,
     /// Set by fan-out, consumed by the server step and fan-in.
@@ -60,8 +72,10 @@ struct DeviceCtx {
 
 /// One in-flight batch between phases.
 struct StepCtx {
-    x: HostTensor,
-    y: HostTensor,
+    /// Batch tensors (reference path; the fast path keeps the batch in
+    /// the device's reusable `x_buf`/`y_buf` instead — `None` here).
+    x: Option<HostTensor>,
+    y: Option<HostTensor>,
     uplink: Payload,
     /// Filled by the server step.
     grad: Option<GradMsg>,
@@ -71,8 +85,11 @@ struct StepCtx {
 enum GradMsg {
     /// Compressed (codec wire path).
     Compressed(Payload),
-    /// Raw tensor (when `compress_gradients = false`).
+    /// Raw tensor (reference path, `compress_gradients = false`).
     Raw(HostTensor),
+    /// Fast path, `compress_gradients = false`: the spatial gradient sits
+    /// in the device's reusable `wire` tensor (no `HostTensor` built).
+    Stashed,
 }
 
 /// Final result of a training run.
@@ -102,9 +119,16 @@ pub struct Trainer {
     /// the Mutex documents the sharing discipline for future
     /// parallel-server modes).
     server: Mutex<(Vec<HostTensor>, Vec<HostTensor>)>,
-    /// Aggregated client params/momenta between rounds.
+    /// Aggregated client params/momenta between rounds (reference path;
+    /// the fast path's aggregate lives in the resident session's slot).
     client: (Vec<HostTensor>, Vec<HostTensor>),
     n_client_params: usize,
+    /// Device-resident compute session (`compute_fast_path` + a backend
+    /// that supports it). `None` routes everything through the artifact
+    /// `execute` path — bit-identical, just slower.
+    resident: Option<ResidentSession>,
+    /// Reusable per-round participant buffer (client sampling).
+    participants: Vec<usize>,
     /// Sum of per-round communication makespans (the satellite fix: the
     /// run-level makespan is per-round accounting, not a lifetime max).
     makespan_total_s: f64,
@@ -173,6 +197,25 @@ impl Trainer {
         let codec: Arc<dyn ActivationCodec> =
             Arc::from(codec::by_name(&cfg.codec, &cfg.codec_params)?);
 
+        // Device-resident compute (the zero-allocation fast path): weights
+        // and momenta live in executor-side per-device slots updated in
+        // place, instead of round-tripping through fresh HostTensors every
+        // step. Bit-identical to the artifact path by construction (see
+        // runtime::compute); backends without support fall back silently.
+        let resident = if cfg.compute_fast_path {
+            let r = exec.open_resident(&preset, cfg.devices)?;
+            if r.is_none() {
+                crate::info!(
+                    "compute_fast_path: backend has no device-resident support — \
+                     using the artifact execute path"
+                );
+            }
+            r
+        } else {
+            None
+        };
+        let use_resident = resident.is_some();
+
         // Per-device heterogeneity (link class + compute multiplier) from
         // the profile spec; "config" keeps the pre-transport homogeneous
         // behavior.
@@ -199,8 +242,14 @@ impl Trainer {
                 codec_rng: Pcg32::derived(cfg.seed, stream::CODEC, id as u64),
                 scratch: CodecScratch::new(),
                 decode: Tensor::zeros(&[1]),
-                cp: cp.clone(),
-                cm: cm.clone(),
+                x_buf: Vec::new(),
+                y_buf: Vec::new(),
+                wire: Tensor::zeros(&[1]),
+                spatial: Tensor::zeros(&[1]),
+                // the fast path keeps weights in the resident slots — no
+                // per-device HostTensor copies to maintain
+                cp: if use_resident { Vec::new() } else { cp.clone() },
+                cm: if use_resident { Vec::new() } else { cm.clone() },
                 pending: None,
             })
             .collect();
@@ -218,6 +267,8 @@ impl Trainer {
             server: Mutex::new((sp, sm)),
             client: (cp, cm),
             n_client_params: n_client,
+            resident,
+            participants: Vec::new(),
             makespan_total_s: 0.0,
         })
     }
@@ -229,11 +280,8 @@ impl Trainer {
 
     /// Run all configured rounds; returns the full outcome.
     pub fn run(&mut self) -> Result<TrainOutcome> {
-        let mut history = TrainingHistory {
-            name: self.cfg.name.clone(),
-            codec: self.cfg.codec.clone(),
-            rounds: Vec::new(),
-        };
+        let mut history =
+            TrainingHistory::with_capacity(&self.cfg.name, &self.cfg.codec, self.cfg.rounds);
         self.makespan_total_s = 0.0;
         for round in 1..=self.cfg.rounds {
             let m = self.run_round(round)?;
@@ -261,7 +309,7 @@ impl Trainer {
                 m.sim_time_s,
                 extras
             );
-            history.rounds.push(m);
+            history.push(m);
         }
         // Order-stable reduction: fold in device-id order so f64 sums are
         // bit-identical no matter how many workers ran the phases. The
@@ -290,10 +338,21 @@ impl Trainer {
 
     fn round_parallel(&mut self, round: usize, t0: Instant) -> Result<RoundMetrics> {
         // reset device copies to the aggregate + fresh round accounting
-        for d in self.devices.iter_mut() {
-            d.cp = self.client.0.clone();
-            d.cm = self.client.1.clone();
-            d.link.begin_round();
+        if let Some(res) = &self.resident {
+            // in-place copy into the resident slots — same values the
+            // reference path clones, no allocation
+            for d in 0..self.devices.len() {
+                res.load_client_from_agg(d)?;
+            }
+            for d in self.devices.iter_mut() {
+                d.link.begin_round();
+            }
+        } else {
+            for d in self.devices.iter_mut() {
+                d.cp = self.client.0.clone();
+                d.cm = self.client.1.clone();
+                d.link.begin_round();
+            }
         }
         let (mut up0, mut down0) = (0u64, 0u64);
         for d in &self.devices {
@@ -305,26 +364,27 @@ impl Trainer {
         // function of (seed, round), drawn before any scheduling. Devices
         // left out transfer nothing this round and rejoin from the
         // aggregate next round (the straggler rejoin path, minus the
-        // wasted bytes).
-        let participants = self
-            .cfg
+        // wasted bytes). Drawn into a reusable buffer.
+        self.cfg
             .sampling
-            .draw(self.cfg.seed, round, self.cfg.devices);
+            .draw_into(self.cfg.seed, round, self.cfg.devices, &mut self.participants);
 
         // The scheduler drives the round through the RoundOps interface;
         // disjoint-field borrows let it run against the device table while
         // the scheduler itself stays borrowed from self.
         let workers = self.workers();
+        let participants = &self.participants;
         let report = {
             let mut ops = TrainerRoundOps {
                 devices: &mut self.devices[..],
-                participants: &participants,
+                participants,
                 exec: &self.exec,
                 codec: self.codec.as_ref(),
                 cfg: &self.cfg,
                 preset: &self.preset,
                 train: &self.train,
                 server: &self.server,
+                resident: self.resident.as_ref(),
                 workers,
             };
             self.scheduler.run_round(&mut ops)?
@@ -333,7 +393,7 @@ impl Trainer {
         // Expand the scheduler's participant-local completion vector back
         // to the full fleet: unsampled devices carry zero FedAvg weight.
         let mut completed = vec![false; self.devices.len()];
-        for (local, &global) in participants.iter().enumerate() {
+        for (local, &global) in self.participants.iter().enumerate() {
             completed[global] = report.completed[local];
         }
 
@@ -343,7 +403,9 @@ impl Trainer {
         // and rejoin from the aggregate next round). Sharded across
         // workers by *parameter index* — each parameter still folds its
         // devices in id order, so the result is bit-identical to the
-        // sequential fold (see `aggregate::fedavg_sharded`).
+        // sequential fold (see `aggregate::fedavg_sharded`). The fast path
+        // folds the resident slots in place with the identical arithmetic
+        // (see `ResidentSession::fedavg`).
         let weights: Vec<f64> = self
             .devices
             .iter()
@@ -351,14 +413,18 @@ impl Trainer {
             .map(|(i, d)| if completed[i] { d.shard_len as f64 } else { 0.0 })
             .collect();
         if weights.iter().sum::<f64>() > 0.0 {
-            let cps: Vec<Vec<HostTensor>> =
-                self.devices.iter().map(|d| d.cp.clone()).collect();
-            let cms: Vec<Vec<HostTensor>> =
-                self.devices.iter().map(|d| d.cm.clone()).collect();
-            self.client = (
-                super::aggregate::fedavg_sharded(&cps, &weights, workers)?,
-                super::aggregate::fedavg_sharded(&cms, &weights, workers)?,
-            );
+            if let Some(res) = &self.resident {
+                res.fedavg(&weights)?;
+            } else {
+                let cps: Vec<Vec<HostTensor>> =
+                    self.devices.iter().map(|d| d.cp.clone()).collect();
+                let cms: Vec<Vec<HostTensor>> =
+                    self.devices.iter().map(|d| d.cm.clone()).collect();
+                self.client = (
+                    super::aggregate::fedavg_sharded(&cps, &weights, workers)?,
+                    super::aggregate::fedavg_sharded(&cms, &weights, workers)?,
+                );
+            }
         } else {
             crate::warn!(
                 "round {round}: every participant was dropped (policy {}) — \
@@ -367,7 +433,8 @@ impl Trainer {
             );
         }
 
-        self.finish_round(round, t0, &report, up0, down0, participants.len() as u64)
+        let sampled = self.participants.len() as u64;
+        self.finish_round(round, t0, &report, up0, down0, sampled)
     }
 
     fn round_sequential(&mut self, round: usize, t0: Instant) -> Result<RoundMetrics> {
@@ -378,10 +445,9 @@ impl Trainer {
         for d in self.devices.iter_mut() {
             d.link.begin_round();
         }
-        let participants = self
-            .cfg
+        self.cfg
             .sampling
-            .draw(self.cfg.seed, round, self.cfg.devices);
+            .draw_into(self.cfg.seed, round, self.cfg.devices, &mut self.participants);
         let mut loss_sum = 0.0f64;
         let mut correct = 0u64;
         let mut samples = 0u64;
@@ -392,13 +458,30 @@ impl Trainer {
             down0 += d.link.downlink_bytes;
         }
 
-        let (mut cp, mut cm) = (self.client.0.clone(), self.client.1.clone());
-        for &di in &participants {
-            self.devices[di].cp = cp.clone();
-            self.devices[di].cm = cm.clone();
+        // Weight shuttle: the fast path hands the resident slots off
+        // device→device in place; the reference path clones HostTensors
+        // along the same chain (identical values either way).
+        let (mut cp, mut cm) = if self.resident.is_some() {
+            (Vec::new(), Vec::new())
+        } else {
+            (self.client.0.clone(), self.client.1.clone())
+        };
+        let mut prev: Option<usize> = None;
+        for idx in 0..self.participants.len() {
+            let di = self.participants[idx];
+            if let Some(res) = &self.resident {
+                match prev {
+                    None => res.load_client_from_agg(di)?,
+                    Some(p) => res.copy_client(p, di)?,
+                }
+            } else {
+                self.devices[di].cp = cp.clone();
+                self.devices[di].cm = cm.clone();
+            }
             for _ in 0..self.cfg.batches_per_round {
                 device_fanout_impl(
                     &mut self.devices[di],
+                    self.resident.as_ref(),
                     &self.exec,
                     self.codec.as_ref(),
                     &self.cfg,
@@ -407,6 +490,7 @@ impl Trainer {
                 )?;
                 let out = server_step_impl(
                     &mut self.devices[di],
+                    self.resident.as_ref(),
                     &self.exec,
                     self.codec.as_ref(),
                     &self.cfg,
@@ -419,23 +503,33 @@ impl Trainer {
                 server_steps += 1;
                 device_fanin_impl(
                     &mut self.devices[di],
+                    self.resident.as_ref(),
                     &self.exec,
                     self.codec.as_ref(),
                     &self.cfg,
                     &self.preset,
                 )?;
             }
-            cp = self.devices[di].cp.clone();
-            cm = self.devices[di].cm.clone();
+            if self.resident.is_none() {
+                cp = self.devices[di].cp.clone();
+                cm = self.devices[di].cm.clone();
+            }
+            prev = Some(di);
         }
-        self.client = (cp, cm);
+        if let Some(res) = &self.resident {
+            if let Some(last) = prev {
+                res.store_client_to_agg(last)?;
+            }
+        } else {
+            self.client = (cp, cm);
+        }
 
         // serial handoff: the round's simulated duration is the sum over
         // participants of their transfer busy time, two compute phases per
         // local step, and the server's per-batch service time (the server
         // never queues here — one device talks to it at a time)
         let mut sim_round_s = 0.0f64;
-        for &di in &participants {
+        for &di in &self.participants {
             let d = &self.devices[di];
             sim_round_s += d.link.round_busy_s
                 + 2.0
@@ -453,9 +547,10 @@ impl Trainer {
             server_steps,
             sim_round_s,
             queue_wait_s: 0.0,
-            completed: vec![true; participants.len()],
+            completed: vec![true; self.participants.len()],
         };
-        self.finish_round(round, t0, &report, up0, down0, participants.len() as u64)
+        let sampled = self.participants.len() as u64;
+        self.finish_round(round, t0, &report, up0, down0, sampled)
     }
 
     /// Effective worker-pool width for the parallel phases.
@@ -505,6 +600,21 @@ impl Trainer {
         let b = self.cfg.batch_size;
         let n_batches = self.test.len() / b;
         anyhow::ensure!(n_batches > 0, "test set smaller than one batch");
+        if let Some(res) = &self.resident {
+            // resident slots + reusable batch staging — allocation-free,
+            // same per-batch loss/correct values as the artifact path
+            let mut loss = 0.0;
+            let mut correct = 0u64;
+            for i in 0..n_batches {
+                let (l, c) = res.eval_batch(&self.test, i * b, b)?;
+                loss += l;
+                correct += c;
+            }
+            return Ok((
+                loss / n_batches as f64,
+                correct as f64 / (n_batches * b) as f64,
+            ));
+        }
         let server = self.server.lock().unwrap();
         let (sp, _) = &*server;
         let mut loss = 0.0;
@@ -553,12 +663,18 @@ impl Trainer {
     /// differential determinism tests: parallel and sequential runs must
     /// end bit-identical here).
     pub fn client_params(&self) -> Vec<HostTensor> {
-        self.client.0.clone()
+        match &self.resident {
+            Some(res) => res.client_params(),
+            None => self.client.0.clone(),
+        }
     }
 
     /// Snapshot of the server-side parameters.
     pub fn server_params(&self) -> Vec<HostTensor> {
-        self.server.lock().unwrap().0.clone()
+        match &self.resident {
+            Some(res) => res.server_params(),
+            None => self.server.lock().unwrap().0.clone(),
+        }
     }
 }
 
@@ -580,6 +696,8 @@ struct TrainerRoundOps<'a> {
     preset: &'a str,
     train: &'a Dataset,
     server: &'a Mutex<(Vec<HostTensor>, Vec<HostTensor>)>,
+    /// Device-resident fast path (None routes through `exec`).
+    resident: Option<&'a ResidentSession>,
     workers: usize,
 }
 
@@ -646,6 +764,7 @@ impl RoundOps for TrainerRoundOps<'_> {
         let cfg = self.cfg;
         let preset = self.preset;
         let train = self.train;
+        let resident = self.resident;
         let workers = self.workers;
         let zero = UplinkMsg {
             wire_bytes: 0,
@@ -654,7 +773,8 @@ impl RoundOps for TrainerRoundOps<'_> {
         let mut items: Vec<(&mut DeviceCtx, UplinkMsg)> =
             self.batch_refs(devs).into_iter().map(|d| (d, zero)).collect();
         engine::run_sharded(&mut items, workers, |_, item| {
-            item.1 = device_fanout_impl(&mut *item.0, exec, codec, cfg, preset, train)?;
+            item.1 =
+                device_fanout_impl(&mut *item.0, resident, exec, codec, cfg, preset, train)?;
             Ok(())
         })?;
         Ok(items.into_iter().map(|(_, msg)| msg).collect())
@@ -663,6 +783,7 @@ impl RoundOps for TrainerRoundOps<'_> {
     fn server_step(&mut self, dev: DeviceId) -> Result<ServerOut> {
         server_step_impl(
             &mut self.devices[self.participants[dev]],
+            self.resident,
             self.exec,
             self.codec,
             self.cfg,
@@ -676,10 +797,11 @@ impl RoundOps for TrainerRoundOps<'_> {
         let codec = self.codec;
         let cfg = self.cfg;
         let preset = self.preset;
+        let resident = self.resident;
         let workers = self.workers;
         let mut items = self.batch_refs(devs);
         engine::run_sharded(&mut items, workers, |_, dev| {
-            device_fanin_impl(&mut **dev, exec, codec, cfg, preset)
+            device_fanin_impl(&mut **dev, resident, exec, codec, cfg, preset)
         })
     }
 
@@ -692,39 +814,55 @@ impl RoundOps for TrainerRoundOps<'_> {
 /// uplink charge (private mode only — in shared-uplink mode the scheduler
 /// charges the link once the fair-share model decides the duration).
 /// Returns the payload's wire size and the private-mode transfer seconds.
+///
+/// With a resident session the forward runs on the device slot (weights in
+/// place, activations stashed for the backward) and the batch stays in the
+/// device's reusable buffers — zero steady-state allocations. Without one,
+/// the historical artifact `execute` path runs; both produce bit-identical
+/// wire bytes.
 fn device_fanout_impl(
     dev: &mut DeviceCtx,
+    resident: Option<&ResidentSession>,
     exec: &ExecutorHandle,
     codec: &dyn ActivationCodec,
     cfg: &ExperimentConfig,
     preset: &str,
     train: &Dataset,
 ) -> Result<UplinkMsg> {
-    let (images, labels) = dev.loader.next_batch(train);
-    let x = HostTensor::f32(
-        &[cfg.batch_size, train.channels, train.height, train.width],
-        images,
-    );
-    let y = HostTensor::i32(
-        &[cfg.batch_size],
-        labels.into_iter().map(|l| l as i32).collect(),
-    );
-    let mut inputs: Vec<HostTensor> = dev.cp.iter().cloned().collect();
-    inputs.push(x.clone());
-    let mut out = exec.execute(preset, "client_fwd", inputs)?.into_iter();
-    let act = out.next().context("act output")?;
-    let act_dct = out.next().context("act_dct output")?;
-
-    let wire_input: Tensor = if codec.frequency_domain() {
-        act_dct.into_tensor()
-    } else {
-        act.into_tensor()
-    };
+    let freq = codec.frequency_domain();
     // zero-allocation steady state: recycled body + per-device scratch
     // arena (bit-identical to `compress_with_rng` — the codec contract)
     let mut payload = Payload::empty();
     payload.body = dev.scratch.take_body();
-    codec.compress_into(&wire_input, &mut dev.codec_rng, &mut dev.scratch, &mut payload)?;
+    let (x, y) = if let Some(res) = resident {
+        dev.loader
+            .next_batch_into(train, &mut dev.x_buf, &mut dev.y_buf);
+        res.client_fwd(dev.id, &dev.x_buf, freq, &mut dev.wire)?;
+        codec.compress_into(&dev.wire, &mut dev.codec_rng, &mut dev.scratch, &mut payload)?;
+        (None, None)
+    } else {
+        let (images, labels) = dev.loader.next_batch(train);
+        let x = HostTensor::f32(
+            &[cfg.batch_size, train.channels, train.height, train.width],
+            images,
+        );
+        let y = HostTensor::i32(
+            &[cfg.batch_size],
+            labels.into_iter().map(|l| l as i32).collect(),
+        );
+        let mut inputs: Vec<HostTensor> = dev.cp.iter().cloned().collect();
+        inputs.push(x.clone());
+        let mut out = exec.execute(preset, "client_fwd", inputs)?.into_iter();
+        let act = out.next().context("act output")?;
+        let act_dct = out.next().context("act_dct output")?;
+        let wire_input: Tensor = if freq {
+            act_dct.into_tensor()
+        } else {
+            act.into_tensor()
+        };
+        codec.compress_into(&wire_input, &mut dev.codec_rng, &mut dev.scratch, &mut payload)?;
+        (Some(x), Some(y))
+    };
     let wire_bytes = payload.wire_bytes();
     let cost_s = match cfg.uplink {
         UplinkMode::Private => dev.link.transfer(Direction::Uplink, wire_bytes),
@@ -748,8 +886,14 @@ fn device_fanout_impl(
 
 /// Server-step body (shared by all modes): decompress the pending uplink,
 /// run the server training step, compress + charge the downlink gradient.
+///
+/// With a resident session the step updates `W_s`/`M_s` in place on the
+/// server slot (fused softmax, maintained `W_sᵀ` for the activation
+/// gradient) and stages the downlink gradient in the device's reusable
+/// `wire` tensor; the artifact path round-trips full parameter tensors.
 fn server_step_impl(
     dev: &mut DeviceCtx,
+    resident: Option<&ResidentSession>,
     exec: &ExecutorHandle,
     codec: &dyn ActivationCodec,
     cfg: &ExperimentConfig,
@@ -763,6 +907,44 @@ fn server_step_impl(
     // then recycle the payload body for the gradient below
     codec.decompress_into(&step.uplink, &mut dev.scratch, &mut dev.decode)?;
     dev.scratch.recycle_body(std::mem::take(&mut step.uplink.body));
+
+    if let Some(res) = resident {
+        let act: &Tensor = if freq {
+            res.idct(dev.id, &dev.decode, &mut dev.spatial)?;
+            &dev.spatial
+        } else {
+            &dev.decode
+        };
+        // the gradient travels in the codec's domain when compressed,
+        // spatially when raw — exactly like the artifact path
+        let freq_grad = cfg.compress_gradients && freq;
+        let (loss_f32, correct) =
+            res.server_step(act, &dev.y_buf, cfg.lr, freq_grad, &mut dev.wire)?;
+        let batch = dev.y_buf.len() as u64;
+        let downlink_s = if cfg.compress_gradients {
+            let mut payload = Payload::empty();
+            payload.body = dev.scratch.take_body();
+            codec.compress_into(&dev.wire, &mut dev.codec_rng, &mut dev.scratch, &mut payload)?;
+            let t = dev
+                .link
+                .transfer(Direction::Downlink, payload.wire_bytes());
+            step.grad = Some(GradMsg::Compressed(payload));
+            t
+        } else {
+            let t = dev
+                .link
+                .transfer(Direction::Downlink, dev.wire.numel() * 4);
+            step.grad = Some(GradMsg::Stashed);
+            t
+        };
+        return Ok(ServerOut {
+            downlink_s,
+            loss: loss_f32 as f64,
+            correct,
+            samples: batch,
+        });
+    }
+
     let act = if freq {
         let out = exec.execute(
             preset,
@@ -775,6 +957,7 @@ fn server_step_impl(
     };
 
     // server training step
+    let y = step.y.as_ref().context("reference step without labels")?;
     let mut guard = server.lock().unwrap();
     let (sp, sm) = &mut *guard;
     let n_s = sp.len();
@@ -782,7 +965,7 @@ fn server_step_impl(
     inputs.extend(sp.iter().cloned());
     inputs.extend(sm.iter().cloned());
     inputs.push(act);
-    inputs.push(step.y.clone());
+    inputs.push(y.clone());
     inputs.push(HostTensor::scalar_f32(cfg.lr));
     let mut out = exec
         .execute(preset, "server_step", inputs)?
@@ -798,7 +981,7 @@ fn server_step_impl(
     drop(guard);
 
     // downlink gradient
-    let batch = step.y.numel() as u64;
+    let batch = y.numel() as u64;
     let downlink_s = if cfg.compress_gradients {
         let g = if freq { gact_dct } else { gact };
         let mut payload = Payload::empty();
@@ -828,8 +1011,13 @@ fn server_step_impl(
 }
 
 /// Fan-in body (shared by all modes): gradient decode + client backward.
+///
+/// With a resident session the backward runs on the device slot: `dz` from
+/// the stashed forward activations (no forward recompute), `gW_c`, and an
+/// in-place SGD update — no parameter tensors cross the call.
 fn device_fanin_impl(
     dev: &mut DeviceCtx,
+    resident: Option<&ResidentSession>,
     exec: &ExecutorHandle,
     codec: &dyn ActivationCodec,
     cfg: &ExperimentConfig,
@@ -837,6 +1025,29 @@ fn device_fanin_impl(
 ) -> Result<()> {
     let step = dev.pending.take().context("phase order violation")?;
     let grad = step.grad.context("server step did not run")?;
+
+    if let Some(res) = resident {
+        match grad {
+            GradMsg::Compressed(mut p) => {
+                codec.decompress_into(&p, &mut dev.scratch, &mut dev.decode)?;
+                dev.scratch.recycle_body(std::mem::take(&mut p.body));
+                if codec.frequency_domain() {
+                    res.idct(dev.id, &dev.decode, &mut dev.spatial)?;
+                    res.client_step(dev.id, &dev.x_buf, &dev.spatial, cfg.lr)?;
+                } else {
+                    res.client_step(dev.id, &dev.x_buf, &dev.decode, cfg.lr)?;
+                }
+            }
+            // uncompressed gradient: the spatial gact is still staged in
+            // the device's wire tensor
+            GradMsg::Stashed => {
+                res.client_step(dev.id, &dev.x_buf, &dev.wire, cfg.lr)?;
+            }
+            GradMsg::Raw(_) => anyhow::bail!("raw HostTensor gradient on the resident path"),
+        }
+        return Ok(());
+    }
+
     let gact = match grad {
         GradMsg::Raw(g) => g,
         GradMsg::Compressed(mut p) => {
@@ -851,12 +1062,13 @@ fn device_fanin_impl(
                 HostTensor::from_tensor(&dev.decode)
             }
         }
+        GradMsg::Stashed => anyhow::bail!("stashed gradient on the reference path"),
     };
     let n_c = dev.cp.len();
     let mut inputs = Vec::with_capacity(2 * n_c + 3);
     inputs.extend(dev.cp.iter().cloned());
     inputs.extend(dev.cm.iter().cloned());
-    inputs.push(step.x);
+    inputs.push(step.x.context("reference step without batch tensor")?);
     inputs.push(gact);
     inputs.push(HostTensor::scalar_f32(cfg.lr));
     let mut out = exec.execute(preset, "client_step", inputs)?.into_iter();

@@ -42,6 +42,20 @@ impl BatchLoader {
         (self.indices.len() + self.batch_size - 1) / self.batch_size
     }
 
+    /// Advance the cursor (wrapping + reshuffling at epoch boundaries) and
+    /// return the next sample index. The draw sequence is identical for
+    /// both batch APIs below.
+    fn next_index(&mut self) -> usize {
+        if self.cursor >= self.indices.len() {
+            self.cursor = 0;
+            self.epochs += 1;
+            self.rng.shuffle(&mut self.indices);
+        }
+        let i = self.indices[self.cursor];
+        self.cursor += 1;
+        i
+    }
+
     /// Next batch of `(images, labels)` copied out of `dataset`.
     /// Images are a flat `[batch, C, H, W]` buffer; labels are u32.
     pub fn next_batch(&mut self, dataset: &Dataset) -> (Vec<f32>, Vec<u32>) {
@@ -49,17 +63,32 @@ impl BatchLoader {
         let mut images = Vec::with_capacity(self.batch_size * sz);
         let mut labels = Vec::with_capacity(self.batch_size);
         for _ in 0..self.batch_size {
-            if self.cursor >= self.indices.len() {
-                self.cursor = 0;
-                self.epochs += 1;
-                self.rng.shuffle(&mut self.indices);
-            }
-            let i = self.indices[self.cursor];
-            self.cursor += 1;
+            let i = self.next_index();
             images.extend_from_slice(dataset.image(i));
             labels.push(dataset.labels[i]);
         }
         (images, labels)
+    }
+
+    /// [`BatchLoader::next_batch`] into caller-owned buffers (cleared,
+    /// capacity reused — zero allocations once warm), with labels cast to
+    /// the executor's i32 dtype. Same index-draw sequence as `next_batch`,
+    /// so the two APIs are interchangeable mid-run.
+    pub fn next_batch_into(
+        &mut self,
+        dataset: &Dataset,
+        images: &mut Vec<f32>,
+        labels: &mut Vec<i32>,
+    ) {
+        images.clear();
+        labels.clear();
+        images.reserve(self.batch_size * dataset.sample_size());
+        labels.reserve(self.batch_size);
+        for _ in 0..self.batch_size {
+            let i = self.next_index();
+            images.extend_from_slice(dataset.image(i));
+            labels.push(dataset.labels[i] as i32);
+        }
     }
 }
 
@@ -114,6 +143,22 @@ mod tests {
         // 10 samples drawn, epoch counter still <= 1
         assert!(l.epochs <= 1);
         assert!(!seen.is_empty());
+    }
+
+    #[test]
+    fn into_api_matches_allocating_api() {
+        let d = dataset();
+        let mut a = BatchLoader::new((0..d.len()).collect(), 4, 9);
+        let mut b = BatchLoader::new((0..d.len()).collect(), 4, 9);
+        let (mut xs, mut ys) = (Vec::new(), Vec::new());
+        for _ in 0..6 {
+            let (xa, ya) = a.next_batch(&d);
+            b.next_batch_into(&d, &mut xs, &mut ys);
+            assert_eq!(xa, xs);
+            let ya_i32: Vec<i32> = ya.iter().map(|&l| l as i32).collect();
+            assert_eq!(ya_i32, ys);
+        }
+        assert_eq!(a.epochs, b.epochs, "same wrap/reshuffle sequence");
     }
 
     #[test]

@@ -53,7 +53,11 @@
 //! **xla** (PJRT over AOT HLO artifacts — requires `make artifacts` and a
 //! real `xla` crate in place of the vendored stub) and **sim** (a small
 //! deterministic pure-Rust split model driven by `manifest.json` alone),
-//! so the full coordinator stack runs and tests offline.
+//! so the full coordinator stack runs and tests offline. On the sim
+//! backend the trainer defaults to the **device-resident compute fast
+//! path** ([`runtime::compute`], `compute_fast_path` config key): blocked
+//! GEMM kernels and in-place model state, bit-identical to the artifact
+//! `execute` path with zero steady-state heap allocations.
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index.
 

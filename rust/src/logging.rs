@@ -96,30 +96,54 @@ pub fn log(l: Level, module: &str, msg: &str) {
     eprintln!("[{t:9.3}s {} {module}] {msg}", l.tag());
 }
 
+// The macros check `enabled` *before* formatting: a suppressed log line
+// costs one atomic load and zero heap (the `format!` never runs), which
+// is what lets quiet steady-state training rounds stay allocation-free.
+
 /// Log at INFO.
 #[macro_export]
 macro_rules! info {
-    ($($arg:tt)*) => { $crate::logging::log($crate::logging::Level::Info, module_path!(), &format!($($arg)*)) };
+    ($($arg:tt)*) => {
+        if $crate::logging::enabled($crate::logging::Level::Info) {
+            $crate::logging::log($crate::logging::Level::Info, module_path!(), &format!($($arg)*))
+        }
+    };
 }
 /// Log at DEBUG.
 #[macro_export]
 macro_rules! debug {
-    ($($arg:tt)*) => { $crate::logging::log($crate::logging::Level::Debug, module_path!(), &format!($($arg)*)) };
+    ($($arg:tt)*) => {
+        if $crate::logging::enabled($crate::logging::Level::Debug) {
+            $crate::logging::log($crate::logging::Level::Debug, module_path!(), &format!($($arg)*))
+        }
+    };
 }
 /// Log at TRACE.
 #[macro_export]
 macro_rules! trace {
-    ($($arg:tt)*) => { $crate::logging::log($crate::logging::Level::Trace, module_path!(), &format!($($arg)*)) };
+    ($($arg:tt)*) => {
+        if $crate::logging::enabled($crate::logging::Level::Trace) {
+            $crate::logging::log($crate::logging::Level::Trace, module_path!(), &format!($($arg)*))
+        }
+    };
 }
 /// Log at WARN.
 #[macro_export]
 macro_rules! warn {
-    ($($arg:tt)*) => { $crate::logging::log($crate::logging::Level::Warn, module_path!(), &format!($($arg)*)) };
+    ($($arg:tt)*) => {
+        if $crate::logging::enabled($crate::logging::Level::Warn) {
+            $crate::logging::log($crate::logging::Level::Warn, module_path!(), &format!($($arg)*))
+        }
+    };
 }
 /// Log at ERROR.
 #[macro_export]
 macro_rules! error {
-    ($($arg:tt)*) => { $crate::logging::log($crate::logging::Level::Error, module_path!(), &format!($($arg)*)) };
+    ($($arg:tt)*) => {
+        if $crate::logging::enabled($crate::logging::Level::Error) {
+            $crate::logging::log($crate::logging::Level::Error, module_path!(), &format!($($arg)*))
+        }
+    };
 }
 
 #[cfg(test)]

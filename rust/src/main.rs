@@ -44,6 +44,14 @@ fn cli() -> Command {
                      (false); wire bytes are bit-identical either way",
                     None,
                 )
+                .opt(
+                    "compute-fast-path",
+                    "BOOL",
+                    "blocked GEMM kernels + device-resident model state (true, \
+                     default) or the artifact execute path with reference \
+                     kernels (false); results are bit-identical either way",
+                    None,
+                )
                 .opt("devices", "N", "edge devices", None)
                 .opt("workers", "N", "round-engine worker threads (0 = auto)", None)
                 .opt("seed", "N", "master seed", None)
@@ -147,6 +155,12 @@ fn build_config(m: &Matches) -> Result<ExperimentConfig> {
         .map_err(anyhow::Error::msg)?
     {
         cfg.codec_params.fast_path = f;
+    }
+    if let Some(f) = m
+        .get_parsed::<bool>("compute-fast-path")
+        .map_err(anyhow::Error::msg)?
+    {
+        cfg.compute_fast_path = f;
     }
     if let Some(d) = m.get_parsed::<usize>("devices").map_err(anyhow::Error::msg)? {
         cfg.devices = d;

@@ -31,6 +31,16 @@ pub const OUTLIER_SIGMA: f32 = 3.0;
 impl EasyQuant {
     /// Fit on `data`: detect outliers, then grid-search the clip range.
     pub fn fit(bits: u32, data: &[f32]) -> Self {
+        Self::fit_with(bits, data, Vec::new())
+    }
+
+    /// [`EasyQuant::fit`] reusing a caller-owned outlier buffer (cleared,
+    /// capacity kept). With the buffer recycled across calls — the codec
+    /// hot path threads it through `CodecScratch` — the fit performs zero
+    /// steady-state heap allocations; the fitted transform is identical
+    /// to `fit`'s.
+    pub fn fit_with(bits: u32, data: &[f32], mut outliers: Vec<(u32, f32)>) -> Self {
+        outliers.clear();
         let sigma = crate::tensor::std_dev(data);
         let mean = if data.is_empty() {
             0.0
@@ -38,7 +48,6 @@ impl EasyQuant {
             data.iter().sum::<f32>() / data.len() as f32
         };
         let threshold = OUTLIER_SIGMA * sigma;
-        let mut outliers = Vec::new();
         let mut inlier_max = 0.0f32;
         for (i, &x) in data.iter().enumerate() {
             if (x - mean).abs() > threshold && sigma > 0.0 {
@@ -180,6 +189,26 @@ mod tests {
         for &b in &back {
             assert!((b - 2.5).abs() < 0.3, "b={b}");
         }
+    }
+
+    #[test]
+    fn fit_with_reuses_buffer_and_matches_fit() {
+        let mut rng = Pcg32::seeded(44);
+        let mut data: Vec<f32> = (0..800).map(|_| rng.normal() * 0.2).collect();
+        data[10] = 30.0;
+        data[700] = -25.0;
+        let plain = EasyQuant::fit(5, &data);
+        // dirty recycled buffer: contents must not leak into the fit
+        let recycled = vec![(99u32, 123.0f32); 16];
+        let cap = recycled.capacity();
+        let reused = EasyQuant::fit_with(5, &data, recycled);
+        assert_eq!(plain.clip.to_bits(), reused.clip.to_bits());
+        assert_eq!(plain.threshold.to_bits(), reused.threshold.to_bits());
+        assert_eq!(plain.outliers, reused.outliers);
+        assert!(
+            reused.outliers.capacity() >= cap,
+            "recycled buffer must keep its capacity"
+        );
     }
 
     #[test]

@@ -1,0 +1,1028 @@
+//! The planned, zero-steady-state-allocation compute backend behind the
+//! sim executor — blocked GEMM kernels, device-resident model state, and a
+//! fused backward path (see ARCHITECTURE.md "Compute hot path").
+//!
+//! # Two kernel families, one numeric contract
+//!
+//! Every kernel exists in two forms:
+//!
+//! * **Reference** (`*_ref`) — the historical naive loops the sim backend
+//!   has always run through the artifact `execute` path. They allocate
+//!   their outputs and are the bit-frozen definition of the model math.
+//! * **Fast** — column-blocked / unrolled i-k-j loops writing into
+//!   caller-owned buffers. Each output element still folds **exactly the
+//!   same addends in exactly the same order** as its reference twin
+//!   (ascending `k`, f32 accumulation, identical zero-skip tests), so the
+//!   fast kernels are **bit-identical** — blocking only re-orders work
+//!   across *independent* output elements, never within one element's
+//!   accumulation chain. `tests/compute_differential.rs` pins this over
+//!   randomized shapes and seeds; the end-to-end guarantee (same train
+//!   curves, same wire bytes) rides on it.
+//!
+//! # Device-resident state ([`ResidentSession`])
+//!
+//! The artifact `execute` protocol is stateless: every `server_step` /
+//! `client_step` ships full weight + momentum tensors in and fresh ones
+//! out as `HostTensor`s. At fleet scale that is megabytes of clone + free
+//! per device per batch — the dominant cost once the codec path is
+//! allocation-free (PR 4). A `ResidentSession` instead keeps
+//!
+//! * one **client slot per device** — `W_c`, `M_c`, the stashed `tanh`
+//!   activations of the last forward, and the backward scratch
+//!   (`dz`, `gW_c`) plus a per-device [`Dct2d`] transformer;
+//! * one **server slot** — `W_s`, `M_s`, the maintained transpose `W_sᵀ`
+//!   (refreshed in the same pass as the SGD update, so the `gact`
+//!   backward kernel reads unit-stride rows), and the step scratch
+//!   (`logits`, the exp row, `dlogits`, `gW_s`, `gact`);
+//! * an **aggregate slot** (FedAvg result + its f64 fold buffer) and an
+//!   **eval slot** (batch staging + forward scratch).
+//!
+//! Weights update **in place**; the activation stash lets `client_step`
+//! compute `dz = gact · (1 − act²)` without re-running the forward GEMM
+//! (the stashed `tanh(z)` is the bit-same value the reference recomputes).
+//! After one warm-up step per shape the whole training round performs zero
+//! heap allocations (`tests/compute_zero_alloc.rs`).
+//!
+//! # Concurrency & determinism
+//!
+//! Every slot sits behind its own `Mutex`. The round engine's shard
+//! ownership (one worker per device per phase) keeps the per-device locks
+//! uncontended; the server slot is only touched from the serial
+//! `server_step` phase. Slot *contents* never influence results — every
+//! scratch buffer is fully overwritten before it is read — so carrying
+//! state across rounds or worker counts is bit-transparent
+//! (`parallel_determinism.rs` pins `compute_fast_path` × workers).
+
+use super::executor::SimState;
+use super::host::HostTensor;
+use super::sim::{SimPreset, SIM_MOMENTUM};
+use crate::data::Dataset;
+use crate::dct::Dct2d;
+use crate::tensor::Tensor;
+use anyhow::{ensure, Context, Result};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Column block width for the blocked GEMM kernels: 64 f32 = 256 B of
+/// output tile, small enough to stay register/L1-resident while the
+/// weight rows stream, large enough to amortize the loop overhead.
+pub const COL_BLOCK: usize = 64;
+
+// ---------------------------------------------------------------------------
+// Kernels — reference (bit-frozen) and fast (blocked, bit-identical)
+// ---------------------------------------------------------------------------
+
+/// `acc[j] += a · x[j]` with an 8-wide unrolled body. Element order is
+/// untouched (each `acc[j]` receives exactly one addend), so this is a
+/// pure codegen aid (bounds-check elision + vectorization).
+#[inline]
+fn axpy(acc: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    let n8 = acc.len() - acc.len() % 8;
+    let (ah, at) = acc.split_at_mut(n8);
+    let (xh, xt) = x.split_at(n8);
+    for (o, v) in ah.chunks_exact_mut(8).zip(xh.chunks_exact(8)) {
+        o[0] += a * v[0];
+        o[1] += a * v[1];
+        o[2] += a * v[2];
+        o[3] += a * v[3];
+        o[4] += a * v[4];
+        o[5] += a * v[5];
+        o[6] += a * v[6];
+        o[7] += a * v[7];
+    }
+    for (o, &v) in at.iter_mut().zip(xt) {
+        *o += a * v;
+    }
+}
+
+/// Reference forward GEMM `out[r, j] = Σ_k x[r, k] · w[k, j]` — fixed
+/// i-k-j loop order, f32 accumulation, zero-skip on `x` (the historical
+/// sim-backend `matmul`, verbatim; the artifact execute path still runs
+/// this).
+pub fn fwd_gemm_ref(x: &[f32], w: &[f32], b: usize, i_dim: usize, j_dim: usize) -> Vec<f32> {
+    assert_eq!(x.len(), b * i_dim);
+    assert_eq!(w.len(), i_dim * j_dim);
+    let mut out = vec![0.0f32; b * j_dim];
+    for bi in 0..b {
+        let row = &x[bi * i_dim..(bi + 1) * i_dim];
+        let orow = &mut out[bi * j_dim..(bi + 1) * j_dim];
+        for (i, &xv) in row.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[i * j_dim..(i + 1) * j_dim];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+    }
+    out
+}
+
+/// Blocked forward GEMM into a caller-owned buffer. Column blocks of
+/// [`COL_BLOCK`] keep the output tile hot while the weight rows stream;
+/// each `out[r, j]` folds the same addends in the same ascending-`k`
+/// order (with the same `x == 0` skip) as [`fwd_gemm_ref`], so the result
+/// is **bit-identical**.
+pub fn fwd_gemm(x: &[f32], w: &[f32], b: usize, i_dim: usize, j_dim: usize, out: &mut [f32]) {
+    assert_eq!(x.len(), b * i_dim);
+    assert_eq!(w.len(), i_dim * j_dim);
+    assert_eq!(out.len(), b * j_dim);
+    let mut jb = 0;
+    while jb < j_dim {
+        let jw = COL_BLOCK.min(j_dim - jb);
+        for bi in 0..b {
+            let orow = &mut out[bi * j_dim + jb..bi * j_dim + jb + jw];
+            orow.fill(0.0);
+            let xrow = &x[bi * i_dim..(bi + 1) * i_dim];
+            for (i, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                axpy(orow, xv, &w[i * j_dim + jb..i * j_dim + jb + jw]);
+            }
+        }
+        jb += COL_BLOCK;
+    }
+}
+
+/// Reference weight-gradient kernel `out[i, j] = Σ_r a[r, i] · d[r, j]`
+/// (`Aᵀ·D` folded over the batch) — the historical `gW_s` / `gW_c` loops:
+/// ascending batch index, zero-skip on `a`.
+pub fn grad_outer_ref(
+    a: &[f32],
+    d: &[f32],
+    rows: usize,
+    i_dim: usize,
+    j_dim: usize,
+) -> Vec<f32> {
+    assert_eq!(a.len(), rows * i_dim);
+    assert_eq!(d.len(), rows * j_dim);
+    let mut out = vec![0.0f32; i_dim * j_dim];
+    for r in 0..rows {
+        let arow = &a[r * i_dim..(r + 1) * i_dim];
+        let drow = &d[r * j_dim..(r + 1) * j_dim];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let grow = &mut out[i * j_dim..(i + 1) * j_dim];
+            for (g, &dv) in grow.iter_mut().zip(drow) {
+                *g += av * dv;
+            }
+        }
+    }
+    out
+}
+
+/// Blocked weight-gradient kernel into a caller-owned buffer. Column
+/// blocks keep a `i_dim × COL_BLOCK` output tile L2-hot across the batch
+/// fold; each element still folds batch rows in ascending order with the
+/// reference zero-skip — bit-identical to [`grad_outer_ref`].
+pub fn grad_outer(
+    a: &[f32],
+    d: &[f32],
+    rows: usize,
+    i_dim: usize,
+    j_dim: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), rows * i_dim);
+    assert_eq!(d.len(), rows * j_dim);
+    assert_eq!(out.len(), i_dim * j_dim);
+    out.fill(0.0);
+    let mut jb = 0;
+    while jb < j_dim {
+        let jw = COL_BLOCK.min(j_dim - jb);
+        for r in 0..rows {
+            let arow = &a[r * i_dim..(r + 1) * i_dim];
+            let dseg = &d[r * j_dim + jb..r * j_dim + jb + jw];
+            for (i, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                axpy(&mut out[i * j_dim + jb..i * j_dim + jb + jw], av, dseg);
+            }
+        }
+        jb += COL_BLOCK;
+    }
+}
+
+/// Reference activation-gradient kernel
+/// `out[r, j] = Σ_k d[r, k] · w_s[j, k]` — the historical per-element dot
+/// products over `W_s` rows (no zero-skip).
+pub fn gact_ref(d: &[f32], w_s: &[f32], b: usize, feat: usize, classes: usize) -> Vec<f32> {
+    assert_eq!(d.len(), b * classes);
+    assert_eq!(w_s.len(), feat * classes);
+    let mut out = vec![0.0f32; b * feat];
+    for bi in 0..b {
+        let drow = &d[bi * classes..(bi + 1) * classes];
+        let grow = &mut out[bi * feat..(bi + 1) * feat];
+        for (j, g) in grow.iter_mut().enumerate() {
+            let wrow = &w_s[j * classes..(j + 1) * classes];
+            let mut acc = 0.0f32;
+            for (&dv, &wv) in drow.iter().zip(wrow) {
+                acc += dv * wv;
+            }
+            *g = acc;
+        }
+    }
+    out
+}
+
+/// Fast activation-gradient kernel over the **pre-transposed** server
+/// weights (`w_s_t` is `classes × feat`, maintained by
+/// [`sgd_momentum_tracked`]): an i-k-j sweep whose inner loop walks a
+/// contiguous `W_sᵀ` row instead of striding `W_s` columns. Each
+/// `out[r, j]` folds `d[r, k] · W_sᵀ[k, j]` in ascending-`k` order from a
+/// `+0.0` start — the identical addend sequence of [`gact_ref`]'s scalar
+/// accumulator (which also starts at `+0.0` and has no zero-skip), so the
+/// result is bit-identical.
+pub fn gact_fast(
+    d: &[f32],
+    w_s_t: &[f32],
+    b: usize,
+    feat: usize,
+    classes: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(d.len(), b * classes);
+    assert_eq!(w_s_t.len(), classes * feat);
+    assert_eq!(out.len(), b * feat);
+    let mut jb = 0;
+    while jb < feat {
+        let jw = COL_BLOCK.min(feat - jb);
+        for bi in 0..b {
+            let orow = &mut out[bi * feat + jb..bi * feat + jb + jw];
+            orow.fill(0.0);
+            let drow = &d[bi * classes..(bi + 1) * classes];
+            for (k, &dv) in drow.iter().enumerate() {
+                axpy(orow, dv, &w_s_t[k * feat + jb..k * feat + jb + jw]);
+            }
+        }
+        jb += COL_BLOCK;
+    }
+}
+
+/// Reference momentum-SGD update `m' = µ·m + g`, `w' = w − lr·m'`,
+/// returning fresh vectors (the historical sim-backend helper).
+pub fn sgd_momentum_ref(w: &[f32], m: &[f32], g: &[f32], lr: f32) -> (Vec<f32>, Vec<f32>) {
+    let mut new_m = Vec::with_capacity(m.len());
+    let mut new_w = Vec::with_capacity(w.len());
+    for ((&wv, &mv), &gv) in w.iter().zip(m).zip(g) {
+        let nm = SIM_MOMENTUM * mv + gv;
+        new_m.push(nm);
+        new_w.push(wv - lr * nm);
+    }
+    (new_w, new_m)
+}
+
+/// In-place momentum-SGD update — the same per-element operations as
+/// [`sgd_momentum_ref`] without the two output allocations.
+pub fn sgd_momentum(w: &mut [f32], m: &mut [f32], g: &[f32], lr: f32) {
+    assert_eq!(w.len(), m.len());
+    assert_eq!(w.len(), g.len());
+    for ((wv, mv), &gv) in w.iter_mut().zip(m.iter_mut()).zip(g) {
+        let nm = SIM_MOMENTUM * *mv + gv;
+        *mv = nm;
+        *wv -= lr * nm;
+    }
+}
+
+/// In-place momentum-SGD update that also refreshes the maintained
+/// transpose `wt[c, r] = w[r, c]` in the same pass, keeping the `gact`
+/// fast kernel's operand exact at zero extra numeric cost (the transpose
+/// entry is a copy of the freshly computed weight, not a recomputation).
+pub fn sgd_momentum_tracked(
+    w: &mut [f32],
+    m: &mut [f32],
+    g: &[f32],
+    lr: f32,
+    wt: &mut [f32],
+    rows: usize,
+    cols: usize,
+) {
+    assert_eq!(w.len(), rows * cols);
+    assert_eq!(wt.len(), rows * cols);
+    assert_eq!(w.len(), m.len());
+    assert_eq!(w.len(), g.len());
+    for r in 0..rows {
+        for c in 0..cols {
+            let idx = r * cols + c;
+            let nm = SIM_MOMENTUM * m[idx] + g[idx];
+            m[idx] = nm;
+            let nw = w[idx] - lr * nm;
+            w[idx] = nw;
+            wt[c * rows + r] = nw;
+        }
+    }
+}
+
+/// Reference softmax cross-entropy forward: `(mean loss, correct count,
+/// per-element `(p − onehot)/B` logit gradients)` — the historical
+/// two-exp-pass sim-backend kernel, verbatim.
+pub fn softmax_xent_ref(
+    logits: &[f32],
+    labels: &[i32],
+    b: usize,
+    classes: usize,
+) -> (f64, u64, Vec<f32>) {
+    let mut loss = 0.0f64;
+    let mut correct = 0u64;
+    let mut dlogits = vec![0.0f32; b * classes];
+    for bi in 0..b {
+        let row = &logits[bi * classes..(bi + 1) * classes];
+        let y = labels[bi] as usize;
+        let mut max = f32::NEG_INFINITY;
+        let mut argmax = 0usize;
+        for (k, &v) in row.iter().enumerate() {
+            if v > max {
+                max = v;
+                argmax = k;
+            }
+        }
+        if argmax == y {
+            correct += 1;
+        }
+        let mut denom = 0.0f32;
+        for &v in row {
+            denom += (v - max).exp();
+        }
+        let log_denom = denom.ln();
+        loss += (log_denom - (row[y] - max)) as f64;
+        let drow = &mut dlogits[bi * classes..(bi + 1) * classes];
+        for (k, &v) in row.iter().enumerate() {
+            let p = (v - max).exp() / denom;
+            drow[k] = (p - if k == y { 1.0 } else { 0.0 }) / b as f32;
+        }
+    }
+    (loss / b as f64, correct, dlogits)
+}
+
+/// Fused single-exp-pass softmax cross-entropy into caller-owned buffers:
+/// the denominator pass **stores** each `exp(v − max)` in `exp_row`
+/// instead of recomputing it for the gradient pass. The stored value is
+/// the identical f32 the reference recomputes (`p = exp_row[k] / denom`
+/// divides the same operands), so loss, correct count, and `dlogits` are
+/// bit-identical to [`softmax_xent_ref`].
+pub fn softmax_xent_fused(
+    logits: &[f32],
+    labels: &[i32],
+    b: usize,
+    classes: usize,
+    exp_row: &mut [f32],
+    dlogits: &mut [f32],
+) -> (f64, u64) {
+    assert_eq!(logits.len(), b * classes);
+    assert_eq!(labels.len(), b);
+    assert_eq!(exp_row.len(), b * classes);
+    assert_eq!(dlogits.len(), b * classes);
+    let mut loss = 0.0f64;
+    let mut correct = 0u64;
+    for bi in 0..b {
+        let row = &logits[bi * classes..(bi + 1) * classes];
+        let erow = &mut exp_row[bi * classes..(bi + 1) * classes];
+        let y = labels[bi] as usize;
+        let mut max = f32::NEG_INFINITY;
+        let mut argmax = 0usize;
+        for (k, &v) in row.iter().enumerate() {
+            if v > max {
+                max = v;
+                argmax = k;
+            }
+        }
+        if argmax == y {
+            correct += 1;
+        }
+        let mut denom = 0.0f32;
+        for (e, &v) in erow.iter_mut().zip(row) {
+            let ev = (v - max).exp();
+            *e = ev;
+            denom += ev;
+        }
+        let log_denom = denom.ln();
+        loss += (log_denom - (row[y] - max)) as f64;
+        let drow = &mut dlogits[bi * classes..(bi + 1) * classes];
+        for (k, (dv, &ev)) in drow.iter_mut().zip(erow.iter()).enumerate() {
+            let p = ev / denom;
+            *dv = (p - if k == y { 1.0 } else { 0.0 }) / b as f32;
+        }
+    }
+    (loss / b as f64, correct)
+}
+
+// ---------------------------------------------------------------------------
+// Device-resident model state
+// ---------------------------------------------------------------------------
+
+/// Immutable per-preset compute plan: the resolved model dimensions every
+/// slot of a [`ResidentSession`] shares, fixed at session build time. The
+/// layout decisions the plan encodes — maintained `W_sᵀ` for the `gact`
+/// kernel, per-slot activation stash, [`COL_BLOCK`]-wide GEMM tiles — are
+/// applied by the session methods below.
+#[derive(Debug, Clone)]
+pub struct ModelPlan {
+    /// Flattened image size (`C·H·W`).
+    pub in_dim: usize,
+    /// Per-sample cut-layer activation size (`C·M·N`).
+    pub act_feat: usize,
+    /// Output classes.
+    pub classes: usize,
+    /// Cut-layer activation shape `[batch, C, M, N]` from the manifest.
+    pub act_shape: [usize; 4],
+}
+
+/// One device's resident client-side state + step scratch.
+struct ClientSlot {
+    /// Client weights `[in_dim, act_feat]`, updated in place.
+    w_c: Vec<f32>,
+    /// Client momenta.
+    m_c: Vec<f32>,
+    /// Stashed `tanh(z)` of the last forward (`[b, act_feat]`) — reused by
+    /// `client_step` so the backward never re-runs the forward GEMM.
+    act: Vec<f32>,
+    /// `dz = gact · (1 − act²)` work buffer.
+    dz: Vec<f32>,
+    /// `gW_c` work buffer (`[in_dim, act_feat]`).
+    g_wc: Vec<f32>,
+    /// Per-device DCT transformer (plan shared, scratch private).
+    dct: Dct2d,
+}
+
+/// The server's resident state + step scratch.
+struct ServerSlot {
+    /// Server weights `[act_feat, classes]`, updated in place.
+    w_s: Vec<f32>,
+    /// Server momenta.
+    m_s: Vec<f32>,
+    /// Maintained transpose `[classes, act_feat]` — refreshed by
+    /// [`sgd_momentum_tracked`] in the same pass as the update.
+    w_s_t: Vec<f32>,
+    logits: Vec<f32>,
+    exp: Vec<f32>,
+    dlogits: Vec<f32>,
+    g_ws: Vec<f32>,
+    gact: Vec<f32>,
+    dct: Dct2d,
+}
+
+/// FedAvg aggregate of the client side + the f64 fold buffer.
+struct AggSlot {
+    w: Vec<f32>,
+    m: Vec<f32>,
+    /// f64 accumulator (`in_dim · act_feat`) shared by both fold passes.
+    acc: Vec<f64>,
+}
+
+/// Evaluation staging: batch gather buffers + forward scratch.
+struct EvalSlot {
+    x: Vec<f32>,
+    y: Vec<i32>,
+    z: Vec<f32>,
+    logits: Vec<f32>,
+    exp: Vec<f32>,
+    dlogits: Vec<f32>,
+}
+
+/// Pre-built statistics keys (`preset/artifact`), so steady-state stat
+/// recording never formats a string.
+struct StatKeys {
+    client_fwd: String,
+    idct: String,
+    server_step: String,
+    client_step: String,
+    eval_step: String,
+}
+
+/// A device-resident compute session over the sim backend: the fast
+/// counterpart of the artifact `execute` path (see module docs). Built by
+/// [`crate::runtime::ExecutorHandle::open_resident`]; `Send + Sync`, so
+/// the round engine's workers drive their devices' slots concurrently.
+pub struct ResidentSession {
+    sim: Arc<SimState>,
+    preset: SimPreset,
+    plan: ModelPlan,
+    keys: StatKeys,
+    server: Mutex<ServerSlot>,
+    agg: Mutex<AggSlot>,
+    eval: Mutex<EvalSlot>,
+    devices: Vec<Mutex<ClientSlot>>,
+}
+
+fn ensure_len_f32(v: &mut Vec<f32>, n: usize) {
+    if v.len() != n {
+        v.resize(n, 0.0);
+    }
+}
+
+impl ResidentSession {
+    /// Build a session: resolve the preset, run the deterministic init
+    /// (the same RNG streams as the `init` artifact, so resident and
+    /// artifact paths start from bit-identical parameters), and size the
+    /// per-device slots.
+    pub(crate) fn new(sim: Arc<SimState>, preset_name: &str, devices: usize) -> Result<Self> {
+        ensure!(devices > 0, "resident session needs at least one device");
+        let preset = sim.backend.preset(preset_name)?.clone();
+        let plan = ModelPlan {
+            in_dim: preset.in_dim,
+            act_feat: preset.act_feat,
+            classes: preset.classes,
+            act_shape: preset.act_shape,
+        };
+        let (m, n) = (plan.act_shape[2], plan.act_shape[3]);
+        let (w_c, w_s) = preset.init_weights();
+        let client_slots = (0..devices)
+            .map(|_| {
+                Mutex::new(ClientSlot {
+                    w_c: w_c.clone(),
+                    m_c: vec![0.0; w_c.len()],
+                    act: Vec::new(),
+                    dz: Vec::new(),
+                    g_wc: vec![0.0; w_c.len()],
+                    dct: Dct2d::new(m, n),
+                })
+            })
+            .collect();
+        let mut w_s_t = vec![0.0f32; w_s.len()];
+        for r in 0..plan.act_feat {
+            for c in 0..plan.classes {
+                w_s_t[c * plan.act_feat + r] = w_s[r * plan.classes + c];
+            }
+        }
+        let server = ServerSlot {
+            m_s: vec![0.0; w_s.len()],
+            w_s_t,
+            logits: Vec::new(),
+            exp: Vec::new(),
+            dlogits: Vec::new(),
+            g_ws: vec![0.0; w_s.len()],
+            gact: Vec::new(),
+            dct: Dct2d::new(m, n),
+            w_s,
+        };
+        let agg = AggSlot {
+            m: vec![0.0; w_c.len()],
+            acc: vec![0.0; w_c.len()],
+            w: w_c,
+        };
+        let eval = EvalSlot {
+            x: Vec::new(),
+            y: Vec::new(),
+            z: Vec::new(),
+            logits: Vec::new(),
+            exp: Vec::new(),
+            dlogits: Vec::new(),
+        };
+        let key = |name: &str| format!("{preset_name}/{name}");
+        Ok(ResidentSession {
+            sim,
+            preset,
+            plan,
+            keys: StatKeys {
+                client_fwd: key("client_fwd"),
+                idct: key("idct"),
+                server_step: key("server_step"),
+                client_step: key("client_step"),
+                eval_step: key("eval_step"),
+            },
+            server: Mutex::new(server),
+            agg: Mutex::new(agg),
+            eval: Mutex::new(eval),
+            devices: client_slots,
+        })
+    }
+
+    /// The session's compute plan (dims/layout).
+    pub fn plan(&self) -> &ModelPlan {
+        &self.plan
+    }
+
+    /// Device slot count.
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    fn record(&self, key: &str, elapsed: std::time::Duration) {
+        self.sim.stats.lock().unwrap().record_ref(key, elapsed);
+    }
+
+    fn slot(&self, dev: usize) -> Result<&Mutex<ClientSlot>> {
+        self.devices
+            .get(dev)
+            .with_context(|| format!("resident session has no device slot {dev}"))
+    }
+
+    /// Client forward: `act = tanh(x_flat · W_c)` stashed in the device
+    /// slot, with the wire-domain tensor (DCT coefficients when `freq`,
+    /// the spatial activations otherwise) written into `wire` in place.
+    pub fn client_fwd(&self, dev: usize, x: &[f32], freq: bool, wire: &mut Tensor) -> Result<()> {
+        let t0 = Instant::now();
+        let p = &self.plan;
+        ensure!(
+            !x.is_empty() && x.len() % p.in_dim == 0,
+            "client_fwd: batch numel {} is not a multiple of in_dim {}",
+            x.len(),
+            p.in_dim
+        );
+        let b = x.len() / p.in_dim;
+        let shape = [b, p.act_shape[1], p.act_shape[2], p.act_shape[3]];
+        let mut s = self.slot(dev)?.lock().unwrap();
+        let s = &mut *s;
+        ensure_len_f32(&mut s.act, b * p.act_feat);
+        fwd_gemm(x, &s.w_c, b, p.in_dim, p.act_feat, &mut s.act);
+        for v in &mut s.act {
+            *v = v.tanh();
+        }
+        wire.reset_dense(&shape);
+        if freq {
+            let ch = p.act_shape[2] * p.act_shape[3];
+            let out = wire.data_mut();
+            for c in 0..b * p.act_shape[1] {
+                s.dct.forward(&s.act[c * ch..(c + 1) * ch], &mut out[c * ch..(c + 1) * ch]);
+            }
+        } else {
+            wire.data_mut().copy_from_slice(&s.act);
+        }
+        self.record(&self.keys.client_fwd, t0.elapsed());
+        Ok(())
+    }
+
+    /// Per-channel inverse DCT of an activation-shaped coefficient tensor
+    /// into `out` (reset in place), using the device slot's transformer —
+    /// the resident twin of the `idct` artifact.
+    pub fn idct(&self, dev: usize, coeffs: &Tensor, out: &mut Tensor) -> Result<()> {
+        let t0 = Instant::now();
+        let p = &self.plan;
+        let (b, c, m, n) = coeffs.as_bchw();
+        ensure!(
+            m == p.act_shape[2] && n == p.act_shape[3],
+            "idct: plane {m}x{n} does not match the activation plane {}x{}",
+            p.act_shape[2],
+            p.act_shape[3]
+        );
+        out.reset_dense(coeffs.shape());
+        let mut s = self.slot(dev)?.lock().unwrap();
+        let ch = m * n;
+        let dst = out.data_mut();
+        let src = coeffs.data();
+        for ci in 0..b * c {
+            s.dct.inverse(&src[ci * ch..(ci + 1) * ch], &mut dst[ci * ch..(ci + 1) * ch]);
+        }
+        self.record(&self.keys.idct, t0.elapsed());
+        Ok(())
+    }
+
+    /// Server training step on the resident server slot: logits → fused
+    /// softmax/xent → `gW_s` → `gact` (via the maintained `W_sᵀ`) → in-place
+    /// SGD (+ transpose refresh). The downlink gradient lands in `grad_out`
+    /// — DCT coefficients when `freq_grad`, spatial otherwise. Returns
+    /// `(batch loss as f32, correct)`; the f32 cast matches the artifact
+    /// path's scalar output exactly.
+    pub fn server_step(
+        &self,
+        act: &Tensor,
+        labels: &[i32],
+        lr: f32,
+        freq_grad: bool,
+        grad_out: &mut Tensor,
+    ) -> Result<(f32, u64)> {
+        let t0 = Instant::now();
+        let p = &self.plan;
+        let dims = act.shape();
+        ensure!(!dims.is_empty(), "server_step: rank-0 activations");
+        let b = dims[0];
+        ensure!(
+            act.numel() == b * p.act_feat,
+            "server_step: act numel {} != {} × act_feat {}",
+            act.numel(),
+            b,
+            p.act_feat
+        );
+        ensure!(labels.len() == b, "server_step: labels/batch mismatch");
+        let mut s = self.server.lock().unwrap();
+        let s = &mut *s;
+        ensure_len_f32(&mut s.logits, b * p.classes);
+        ensure_len_f32(&mut s.exp, b * p.classes);
+        ensure_len_f32(&mut s.dlogits, b * p.classes);
+        ensure_len_f32(&mut s.gact, b * p.act_feat);
+        let a = act.data();
+        fwd_gemm(a, &s.w_s, b, p.act_feat, p.classes, &mut s.logits);
+        let (loss, correct) =
+            softmax_xent_fused(&s.logits, labels, b, p.classes, &mut s.exp, &mut s.dlogits);
+        grad_outer(a, &s.dlogits, b, p.act_feat, p.classes, &mut s.g_ws);
+        gact_fast(&s.dlogits, &s.w_s_t, b, p.act_feat, p.classes, &mut s.gact);
+        sgd_momentum_tracked(
+            &mut s.w_s,
+            &mut s.m_s,
+            &s.g_ws,
+            lr,
+            &mut s.w_s_t,
+            p.act_feat,
+            p.classes,
+        );
+        let shape = [b, p.act_shape[1], p.act_shape[2], p.act_shape[3]];
+        grad_out.reset_dense(&shape);
+        if freq_grad {
+            let ch = p.act_shape[2] * p.act_shape[3];
+            let out = grad_out.data_mut();
+            for c in 0..b * p.act_shape[1] {
+                s.dct.forward(&s.gact[c * ch..(c + 1) * ch], &mut out[c * ch..(c + 1) * ch]);
+            }
+        } else {
+            grad_out.data_mut().copy_from_slice(&s.gact);
+        }
+        self.record(&self.keys.server_step, t0.elapsed());
+        Ok((loss as f32, correct))
+    }
+
+    /// Client backward on the resident device slot: `dz` from the stashed
+    /// forward activations (no forward recompute — the stash holds the
+    /// bit-same `tanh(z)` the reference would recompute), `gW_c`, in-place
+    /// SGD.
+    pub fn client_step(&self, dev: usize, x: &[f32], gact: &Tensor, lr: f32) -> Result<()> {
+        let t0 = Instant::now();
+        let p = &self.plan;
+        ensure!(
+            !x.is_empty() && x.len() % p.in_dim == 0,
+            "client_step: batch numel {} is not a multiple of in_dim {}",
+            x.len(),
+            p.in_dim
+        );
+        let b = x.len() / p.in_dim;
+        ensure!(
+            gact.numel() == b * p.act_feat,
+            "client_step: gact numel {} != {} × act_feat {}",
+            gact.numel(),
+            b,
+            p.act_feat
+        );
+        let mut s = self.slot(dev)?.lock().unwrap();
+        let s = &mut *s;
+        ensure!(
+            s.act.len() == b * p.act_feat,
+            "client_step without a matching stashed forward (stash {} vs {})",
+            s.act.len(),
+            b * p.act_feat
+        );
+        ensure_len_f32(&mut s.dz, b * p.act_feat);
+        for ((dzv, &av), &gv) in s.dz.iter_mut().zip(&s.act).zip(gact.data()) {
+            *dzv = gv * (1.0 - av * av);
+        }
+        grad_outer(x, &s.dz, b, p.in_dim, p.act_feat, &mut s.g_wc);
+        sgd_momentum(&mut s.w_c, &mut s.m_c, &s.g_wc, lr);
+        self.record(&self.keys.client_step, t0.elapsed());
+        Ok(())
+    }
+
+    /// Evaluate one test batch (`[start, start + b)`) against the
+    /// aggregate client weights + resident server weights, gathering into
+    /// the eval slot's reusable buffers. Returns `(batch mean loss, correct)`
+    /// with the same f64→f32→f64 loss cast chain as the artifact path.
+    pub fn eval_batch(&self, test: &Dataset, start: usize, b: usize) -> Result<(f64, u64)> {
+        let t0 = Instant::now();
+        let p = &self.plan;
+        ensure!(start + b <= test.len(), "eval batch out of range");
+        let mut e = self.eval.lock().unwrap();
+        let e = &mut *e;
+        e.x.clear();
+        e.y.clear();
+        for j in start..start + b {
+            e.x.extend_from_slice(test.image(j));
+            e.y.push(test.labels[j] as i32);
+        }
+        ensure!(
+            e.x.len() == b * p.in_dim,
+            "eval batch sample size {} != in_dim {}",
+            e.x.len() / b.max(1),
+            p.in_dim
+        );
+        ensure_len_f32(&mut e.z, b * p.act_feat);
+        ensure_len_f32(&mut e.logits, b * p.classes);
+        ensure_len_f32(&mut e.exp, b * p.classes);
+        ensure_len_f32(&mut e.dlogits, b * p.classes);
+        {
+            let agg = self.agg.lock().unwrap();
+            fwd_gemm(&e.x, &agg.w, b, p.in_dim, p.act_feat, &mut e.z);
+        }
+        for v in &mut e.z {
+            *v = v.tanh();
+        }
+        {
+            let srv = self.server.lock().unwrap();
+            fwd_gemm(&e.z, &srv.w_s, b, p.act_feat, p.classes, &mut e.logits);
+        }
+        let (loss, correct) =
+            softmax_xent_fused(&e.logits, &e.y, b, p.classes, &mut e.exp, &mut e.dlogits);
+        self.record(&self.keys.eval_step, t0.elapsed());
+        Ok((((loss as f32) as f64), correct))
+    }
+
+    /// Copy the aggregate client weights/momenta into a device slot
+    /// (SplitFed round start; the in-place twin of `cp = aggregate.clone()`).
+    pub fn load_client_from_agg(&self, dev: usize) -> Result<()> {
+        let agg = self.agg.lock().unwrap();
+        let mut s = self.slot(dev)?.lock().unwrap();
+        s.w_c.copy_from_slice(&agg.w);
+        s.m_c.copy_from_slice(&agg.m);
+        Ok(())
+    }
+
+    /// Copy one device slot's client weights/momenta into another
+    /// (sequential SL's device→device hand-off).
+    pub fn copy_client(&self, from: usize, to: usize) -> Result<()> {
+        ensure!(from != to, "copy_client: from == to ({from})");
+        let a = self.slot(from.min(to))?;
+        let b = self.slot(from.max(to))?;
+        // ascending-index lock order — deadlock-free even if a future
+        // caller overlaps hand-offs
+        let first = a.lock().unwrap();
+        let second = b.lock().unwrap();
+        let (src, mut dst) = if from < to { (first, second) } else { (second, first) };
+        dst.w_c.copy_from_slice(&src.w_c);
+        dst.m_c.copy_from_slice(&src.m_c);
+        Ok(())
+    }
+
+    /// Store a device slot's client weights/momenta as the new aggregate
+    /// (sequential SL round end).
+    pub fn store_client_to_agg(&self, dev: usize) -> Result<()> {
+        let s = self.slot(dev)?.lock().unwrap();
+        let mut agg = self.agg.lock().unwrap();
+        agg.w.copy_from_slice(&s.w_c);
+        agg.m.copy_from_slice(&s.m_c);
+        Ok(())
+    }
+
+    /// Shard-weighted FedAvg over the device slots into the aggregate
+    /// slot, in place. The fold is the exact
+    /// [`crate::coordinator::fedavg_sharded`] arithmetic — per element, an
+    /// f64 accumulator folds `frac · v` over devices in ascending id
+    /// order (zero-weight devices included, exactly like the reference) —
+    /// so the aggregate is bit-identical to the artifact path's.
+    pub fn fedavg(&self, weights: &[f64]) -> Result<()> {
+        ensure!(
+            weights.len() == self.devices.len(),
+            "fedavg weights/devices mismatch: {} vs {}",
+            weights.len(),
+            self.devices.len()
+        );
+        let total: f64 = weights.iter().sum();
+        ensure!(total > 0.0, "fedavg with zero total weight");
+        let mut agg = self.agg.lock().unwrap();
+        let agg = &mut *agg;
+        for pass in 0..2 {
+            agg.acc.fill(0.0);
+            for (dev, &wt) in self.devices.iter().zip(weights) {
+                let frac = wt / total;
+                let s = dev.lock().unwrap();
+                let src = if pass == 0 { &s.w_c } else { &s.m_c };
+                for (a, &v) in agg.acc.iter_mut().zip(src.iter()) {
+                    *a += frac * v as f64;
+                }
+            }
+            let dst = if pass == 0 { &mut agg.w } else { &mut agg.m };
+            for (d, &a) in dst.iter_mut().zip(agg.acc.iter()) {
+                *d = a as f32;
+            }
+        }
+        Ok(())
+    }
+
+    /// Allocating snapshot of the aggregate client parameters (reporting /
+    /// differential tests; not a hot path).
+    pub fn client_params(&self) -> Vec<HostTensor> {
+        let agg = self.agg.lock().unwrap();
+        vec![HostTensor::f32(
+            &[self.plan.in_dim, self.plan.act_feat],
+            agg.w.clone(),
+        )]
+    }
+
+    /// Allocating snapshot of the resident server parameters.
+    pub fn server_params(&self) -> Vec<HostTensor> {
+        let s = self.server.lock().unwrap();
+        vec![HostTensor::f32(
+            &[self.plan.act_feat, self.plan.classes],
+            s.w_s.clone(),
+        )]
+    }
+
+    /// The preset this session serves (diagnostics).
+    pub fn preset_name(&self) -> &str {
+        &self.preset.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    fn randn(n: usize, seed: u64, zero_every: usize) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n)
+            .map(|i| {
+                if zero_every != 0 && i % zero_every == 0 {
+                    0.0
+                } else {
+                    rng.normal()
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fwd_gemm_matches_reference_bitwise() {
+        for &(b, i, j) in &[(1usize, 3usize, 5usize), (4, 17, 64), (8, 64, 65), (3, 100, 130)] {
+            let x = randn(b * i, 1, 7); // zeros exercise the skip path
+            let w = randn(i * j, 2, 0);
+            let want = fwd_gemm_ref(&x, &w, b, i, j);
+            let mut got = vec![1.0f32; b * j]; // dirty buffer: must be fully overwritten
+            fwd_gemm(&x, &w, b, i, j, &mut got);
+            let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&got), bits(&want), "{b}x{i}x{j}");
+        }
+    }
+
+    #[test]
+    fn grad_outer_matches_reference_bitwise() {
+        for &(r, i, j) in &[(2usize, 5usize, 3usize), (8, 30, 64), (4, 64, 100), (6, 7, 129)] {
+            let a = randn(r * i, 3, 5);
+            let d = randn(r * j, 4, 0);
+            let want = grad_outer_ref(&a, &d, r, i, j);
+            let mut got = vec![-2.0f32; i * j];
+            grad_outer(&a, &d, r, i, j, &mut got);
+            let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&got), bits(&want), "{r}x{i}x{j}");
+        }
+    }
+
+    #[test]
+    fn gact_fast_matches_reference_bitwise() {
+        for &(b, feat, classes) in &[(2usize, 9usize, 4usize), (8, 64, 10), (4, 130, 7)] {
+            let d = randn(b * classes, 5, 0);
+            let w_s = randn(feat * classes, 6, 0);
+            let mut w_s_t = vec![0.0f32; feat * classes];
+            for r in 0..feat {
+                for c in 0..classes {
+                    w_s_t[c * feat + r] = w_s[r * classes + c];
+                }
+            }
+            let want = gact_ref(&d, &w_s, b, feat, classes);
+            let mut got = vec![9.0f32; b * feat];
+            gact_fast(&d, &w_s_t, b, feat, classes, &mut got);
+            let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&got), bits(&want), "{b}x{feat}x{classes}");
+        }
+    }
+
+    #[test]
+    fn sgd_variants_match_reference_bitwise() {
+        let (rows, cols) = (13, 5);
+        let n = rows * cols;
+        let w0 = randn(n, 7, 0);
+        let m0 = randn(n, 8, 0);
+        let g = randn(n, 9, 0);
+        let (want_w, want_m) = sgd_momentum_ref(&w0, &m0, &g, 0.05);
+
+        let (mut w1, mut m1) = (w0.clone(), m0.clone());
+        sgd_momentum(&mut w1, &mut m1, &g, 0.05);
+        assert_eq!(w1, want_w);
+        assert_eq!(m1, want_m);
+
+        let (mut w2, mut m2) = (w0, m0);
+        let mut wt = vec![0.0f32; n];
+        sgd_momentum_tracked(&mut w2, &mut m2, &g, 0.05, &mut wt, rows, cols);
+        assert_eq!(w2, want_w);
+        assert_eq!(m2, want_m);
+        for r in 0..rows {
+            for c in 0..cols {
+                assert_eq!(wt[c * rows + r].to_bits(), w2[r * cols + c].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn fused_softmax_matches_reference_bitwise() {
+        let (b, classes) = (6, 10);
+        let logits = randn(b * classes, 11, 0);
+        let labels: Vec<i32> = (0..b).map(|i| (i % classes) as i32).collect();
+        let (want_loss, want_correct, want_d) = softmax_xent_ref(&logits, &labels, b, classes);
+        let mut exp = vec![0.0f32; b * classes];
+        let mut d = vec![0.5f32; b * classes];
+        let (loss, correct) = softmax_xent_fused(&logits, &labels, b, classes, &mut exp, &mut d);
+        assert_eq!(loss.to_bits(), want_loss.to_bits());
+        assert_eq!(correct, want_correct);
+        let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&d), bits(&want_d));
+        // the stored exp row really is exp(v - max)
+        for bi in 0..b {
+            let row = &logits[bi * classes..(bi + 1) * classes];
+            let max = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+            for (k, &v) in row.iter().enumerate() {
+                assert_eq!(exp[bi * classes + k].to_bits(), (v - max).exp().to_bits());
+            }
+        }
+    }
+}

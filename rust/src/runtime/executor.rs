@@ -53,6 +53,18 @@ impl ExecutorStats {
         e.0 += 1;
         e.1 += elapsed;
     }
+
+    /// Like `record` but borrowed: only the first observation of a key
+    /// allocates (the resident fast path records with pre-built keys, so
+    /// its steady state stays allocation-free).
+    pub(crate) fn record_ref(&mut self, key: &str, elapsed: Duration) {
+        if let Some(e) = self.per_artifact.get_mut(key) {
+            e.0 += 1;
+            e.1 += elapsed;
+        } else {
+            self.per_artifact.insert(key.to_string(), (1, elapsed));
+        }
+    }
 }
 
 /// Which model backend an executor serves.
@@ -76,10 +88,11 @@ enum Request {
     Shutdown,
 }
 
-/// Sim backend + its thread-safe statistics.
-struct SimState {
-    backend: SimBackend,
-    stats: Mutex<ExecutorStats>,
+/// Sim backend + its thread-safe statistics (shared with the
+/// device-resident fast path, so both record into one stats table).
+pub(crate) struct SimState {
+    pub(crate) backend: SimBackend,
+    pub(crate) stats: Mutex<ExecutorStats>,
 }
 
 #[derive(Clone)]
@@ -196,6 +209,26 @@ impl ExecutorHandle {
     pub fn shutdown(&self) {
         if let HandleInner::Actor(tx) = &self.inner {
             let _ = tx.send(Request::Shutdown);
+        }
+    }
+
+    /// Open a device-resident compute session over this executor's model
+    /// (`compute_fast_path`; see [`super::compute`]). Returns `None` for
+    /// backends without resident support (the XLA actor executes opaque
+    /// HLO artifacts, so its state round-trips by design) — callers fall
+    /// back to the artifact `execute` path, which is bit-identical.
+    pub fn open_resident(
+        &self,
+        preset: &str,
+        devices: usize,
+    ) -> Result<Option<super::compute::ResidentSession>> {
+        match &self.inner {
+            HandleInner::Actor(_) => Ok(None),
+            HandleInner::Sim(sim) => Ok(Some(super::compute::ResidentSession::new(
+                sim.clone(),
+                preset,
+                devices,
+            )?)),
         }
     }
 }

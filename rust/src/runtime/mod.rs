@@ -19,12 +19,20 @@
 //! **inline on the calling thread** with mutex-guarded statistics, so the
 //! parallel round engine's workers execute client-side model compute
 //! genuinely concurrently.
+//!
+//! On top of the sim backend, [`compute`] provides the planned
+//! zero-allocation fast path: blocked GEMM kernels plus device-resident
+//! model state behind [`ExecutorHandle::open_resident`]
+//! (`compute_fast_path` config key) — bit-identical to the artifact
+//! `execute` path, just without the per-step parameter round trips.
 
+pub mod compute;
 pub mod executor;
 pub mod host;
 pub mod manifest;
 pub mod sim;
 
+pub use compute::{ModelPlan, ResidentSession};
 pub use executor::{BackendKind, ExecutorHandle, ExecutorStats};
 pub use host::HostTensor;
 pub use manifest::{ArtifactManifest, PresetManifest};

@@ -20,12 +20,23 @@
 //! [`SIM_MOMENTUM`]), not the paper's ResNet; fidelity experiments still
 //! require real artifacts.
 //!
+//! This artifact `execute` path runs the **reference kernels**
+//! ([`super::compute`]'s `*_ref` family — the bit-frozen definition of the
+//! model math) and round-trips full parameter tensors per call. The
+//! planned, allocation-free twin is the device-resident fast path
+//! ([`super::compute::ResidentSession`], `compute_fast_path` config key),
+//! which is bit-identical by construction and pinned differentially in
+//! `tests/compute_differential.rs`.
+//!
 //! Shape contract read from `manifest.json`: exactly one client parameter
 //! `[in_dim, act_feat]` and one server parameter `[act_feat, num_classes]`,
 //! where `in_dim = in_channels · image_hw²` and `act_feat` is the per-sample
 //! activation size. [`write_sim_manifest`] emits a conforming manifest so
 //! tests and benches can run from a temp directory.
 
+use super::compute::{
+    fwd_gemm_ref, gact_ref, grad_outer_ref, sgd_momentum_ref, softmax_xent_ref,
+};
 use super::host::HostTensor;
 use super::manifest::ArtifactManifest;
 use crate::dct::Dct2d;
@@ -43,13 +54,16 @@ pub const SIM_MOMENTUM: f32 = 0.9;
 /// from it).
 const SIM_INIT_SEED: u64 = 0x51AC_0515;
 
-/// One preset's resolved sim-model dimensions.
+/// One preset's resolved sim-model dimensions. Shared with the
+/// device-resident fast path ([`super::compute::ResidentSession`]), which
+/// mirrors this model with planned kernels and in-place state.
 #[derive(Debug, Clone)]
-struct SimPreset {
-    in_dim: usize,
-    act_shape: [usize; 4],
-    act_feat: usize,
-    classes: usize,
+pub(crate) struct SimPreset {
+    pub(crate) name: String,
+    pub(crate) in_dim: usize,
+    pub(crate) act_shape: [usize; 4],
+    pub(crate) act_feat: usize,
+    pub(crate) classes: usize,
     /// Stable per-preset init stream index.
     init_index: u64,
 }
@@ -98,6 +112,7 @@ impl SimBackend {
             out.insert(
                 name.clone(),
                 SimPreset {
+                    name: name.clone(),
                     in_dim,
                     act_shape,
                     act_feat,
@@ -109,15 +124,19 @@ impl SimBackend {
         Ok(SimBackend { presets: out })
     }
 
+    /// Resolved preset lookup (shared with the resident fast path).
+    pub(crate) fn preset(&self, name: &str) -> Result<&SimPreset> {
+        self.presets
+            .get(name)
+            .with_context(|| format!("sim backend has no preset '{name}'"))
+    }
+
     /// Execute artifact `preset/name` (same key format as the PJRT backend).
     pub fn execute(&self, key: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
         let (preset, name) = key
             .split_once('/')
             .with_context(|| format!("malformed artifact key '{key}'"))?;
-        let p = self
-            .presets
-            .get(preset)
-            .with_context(|| format!("sim backend has no preset '{preset}'"))?;
+        let p = self.preset(preset)?;
         match name {
             "init" => p.init(),
             "client_fwd" => p.client_fwd(inputs),
@@ -128,80 +147,6 @@ impl SimBackend {
             other => bail!("sim backend has no artifact '{other}'"),
         }
     }
-}
-
-/// `out[b, j] = sum_i x[b, i] * w[i, j]` — fixed loop order, f32
-/// accumulation (bit-deterministic).
-fn matmul(x: &[f32], w: &[f32], b: usize, i_dim: usize, j_dim: usize) -> Vec<f32> {
-    assert_eq!(x.len(), b * i_dim);
-    assert_eq!(w.len(), i_dim * j_dim);
-    let mut out = vec![0.0f32; b * j_dim];
-    for bi in 0..b {
-        let row = &x[bi * i_dim..(bi + 1) * i_dim];
-        let orow = &mut out[bi * j_dim..(bi + 1) * j_dim];
-        for (i, &xv) in row.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let wrow = &w[i * j_dim..(i + 1) * j_dim];
-            for (o, &wv) in orow.iter_mut().zip(wrow) {
-                *o += xv * wv;
-            }
-        }
-    }
-    out
-}
-
-/// Momentum-SGD update: `m' = mu·m + g`, `w' = w − lr·m'`.
-fn sgd_momentum(w: &[f32], m: &[f32], g: &[f32], lr: f32) -> (Vec<f32>, Vec<f32>) {
-    let mut new_m = Vec::with_capacity(m.len());
-    let mut new_w = Vec::with_capacity(w.len());
-    for ((&wv, &mv), &gv) in w.iter().zip(m).zip(g) {
-        let nm = SIM_MOMENTUM * mv + gv;
-        new_m.push(nm);
-        new_w.push(wv - lr * nm);
-    }
-    (new_w, new_m)
-}
-
-/// Softmax cross-entropy forward: returns (mean loss, correct count,
-/// per-element `(p − onehot)/B` logit gradients).
-fn softmax_xent(
-    logits: &[f32],
-    labels: &[i32],
-    b: usize,
-    classes: usize,
-) -> (f64, u64, Vec<f32>) {
-    let mut loss = 0.0f64;
-    let mut correct = 0u64;
-    let mut dlogits = vec![0.0f32; b * classes];
-    for bi in 0..b {
-        let row = &logits[bi * classes..(bi + 1) * classes];
-        let y = labels[bi] as usize;
-        let mut max = f32::NEG_INFINITY;
-        let mut argmax = 0usize;
-        for (k, &v) in row.iter().enumerate() {
-            if v > max {
-                max = v;
-                argmax = k;
-            }
-        }
-        if argmax == y {
-            correct += 1;
-        }
-        let mut denom = 0.0f32;
-        for &v in row {
-            denom += (v - max).exp();
-        }
-        let log_denom = denom.ln();
-        loss += (log_denom - (row[y] - max)) as f64;
-        let drow = &mut dlogits[bi * classes..(bi + 1) * classes];
-        for (k, &v) in row.iter().enumerate() {
-            let p = (v - max).exp() / denom;
-            drow[k] = (p - if k == y { 1.0 } else { 0.0 }) / b as f32;
-        }
-    }
-    (loss / b as f64, correct, dlogits)
 }
 
 fn idct(inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
@@ -231,7 +176,7 @@ impl SimPreset {
     /// `act = tanh(x_flat · W_c)` as a `[B, C, M, N]` tensor.
     fn forward_client(&self, w_c: &[f32], x: &HostTensor) -> Result<Tensor> {
         let (b, xf) = self.flat_batch(x)?;
-        let mut z = matmul(xf, w_c, b, self.in_dim, self.act_feat);
+        let mut z = fwd_gemm_ref(xf, w_c, b, self.in_dim, self.act_feat);
         for v in &mut z {
             *v = v.tanh();
         }
@@ -244,7 +189,10 @@ impl SimPreset {
         Ok(Tensor::new(&shape, z))
     }
 
-    fn init(&self) -> Result<Vec<HostTensor>> {
+    /// Deterministic parameter init `(W_c, W_s)` — shared by the `init`
+    /// artifact and the device-resident fast path, so both start from
+    /// bit-identical parameters.
+    pub(crate) fn init_weights(&self) -> (Vec<f32>, Vec<f32>) {
         let mut rng_c = Pcg32::derived(SIM_INIT_SEED, 0xC0DE, self.init_index);
         let mut rng_s = Pcg32::derived(SIM_INIT_SEED, 0x5E0F, self.init_index);
         let sc = 1.0 / (self.in_dim as f32).sqrt();
@@ -255,6 +203,11 @@ impl SimPreset {
         let w_s: Vec<f32> = (0..self.act_feat * self.classes)
             .map(|_| rng_s.normal() * ss)
             .collect();
+        (w_c, w_s)
+    }
+
+    fn init(&self) -> Result<Vec<HostTensor>> {
+        let (w_c, w_s) = self.init_weights();
         Ok(vec![
             HostTensor::f32(&[self.in_dim, self.act_feat], w_c),
             HostTensor::f32(&[self.act_feat, self.classes], w_s),
@@ -289,39 +242,14 @@ impl SimPreset {
         ensure!(labels.len() == b, "server_step: labels/batch mismatch");
         let a = act.as_f32();
 
-        let logits = matmul(a, w_s, b, self.act_feat, self.classes);
-        let (loss, correct, dlogits) = softmax_xent(&logits, labels, b, self.classes);
+        let logits = fwd_gemm_ref(a, w_s, b, self.act_feat, self.classes);
+        let (loss, correct, dlogits) = softmax_xent_ref(&logits, labels, b, self.classes);
 
         // gW_s[j, k] = sum_b a[b, j] · dlogits[b, k]
-        let mut g_ws = vec![0.0f32; self.act_feat * self.classes];
-        for bi in 0..b {
-            let arow = &a[bi * self.act_feat..(bi + 1) * self.act_feat];
-            let drow = &dlogits[bi * self.classes..(bi + 1) * self.classes];
-            for (j, &av) in arow.iter().enumerate() {
-                if av == 0.0 {
-                    continue;
-                }
-                let grow = &mut g_ws[j * self.classes..(j + 1) * self.classes];
-                for (g, &dv) in grow.iter_mut().zip(drow) {
-                    *g += av * dv;
-                }
-            }
-        }
+        let g_ws = grad_outer_ref(a, &dlogits, b, self.act_feat, self.classes);
         // gact[b, j] = sum_k dlogits[b, k] · W_s[j, k]
-        let mut gact = vec![0.0f32; b * self.act_feat];
-        for bi in 0..b {
-            let drow = &dlogits[bi * self.classes..(bi + 1) * self.classes];
-            let grow = &mut gact[bi * self.act_feat..(bi + 1) * self.act_feat];
-            for (j, g) in grow.iter_mut().enumerate() {
-                let wrow = &w_s[j * self.classes..(j + 1) * self.classes];
-                let mut acc = 0.0f32;
-                for (&dv, &wv) in drow.iter().zip(wrow) {
-                    acc += dv * wv;
-                }
-                *g = acc;
-            }
-        }
-        let (new_w, new_m) = sgd_momentum(w_s, m_s, &g_ws, lr);
+        let gact = gact_ref(&dlogits, w_s, b, self.act_feat, self.classes);
+        let (new_w, new_m) = sgd_momentum_ref(w_s, m_s, &g_ws, lr);
         let gact_t = Tensor::new(
             &[b, self.act_shape[1], self.act_shape[2], self.act_shape[3]],
             gact,
@@ -353,29 +281,18 @@ impl SimPreset {
             self.act_feat
         );
 
-        // recompute act = tanh(z), then dz = gact ⊙ (1 − act²)
-        let mut z = matmul(xf, w_c, b, self.in_dim, self.act_feat);
+        // recompute act = tanh(z), then dz = gact ⊙ (1 − act²) — the
+        // resident fast path skips this recompute by stashing `act` from
+        // `client_fwd` (bit-identical: the stash holds the same tanh(z))
+        let mut z = fwd_gemm_ref(xf, w_c, b, self.in_dim, self.act_feat);
         for (zv, &gv) in z.iter_mut().zip(gact.as_f32()) {
             let a = zv.tanh();
             *zv = gv * (1.0 - a * a);
         }
         let dz = z;
         // gW_c[i, j] = sum_b x[b, i] · dz[b, j]
-        let mut g_wc = vec![0.0f32; self.in_dim * self.act_feat];
-        for bi in 0..b {
-            let xrow = &xf[bi * self.in_dim..(bi + 1) * self.in_dim];
-            let drow = &dz[bi * self.act_feat..(bi + 1) * self.act_feat];
-            for (i, &xv) in xrow.iter().enumerate() {
-                if xv == 0.0 {
-                    continue;
-                }
-                let grow = &mut g_wc[i * self.act_feat..(i + 1) * self.act_feat];
-                for (g, &dv) in grow.iter_mut().zip(drow) {
-                    *g += xv * dv;
-                }
-            }
-        }
-        let (new_w, new_m) = sgd_momentum(w_c, m_c, &g_wc, lr);
+        let g_wc = grad_outer_ref(xf, &dz, b, self.in_dim, self.act_feat);
+        let (new_w, new_m) = sgd_momentum_ref(w_c, m_c, &g_wc, lr);
         Ok(vec![
             HostTensor::f32(&[self.in_dim, self.act_feat], new_w),
             HostTensor::f32(&[self.in_dim, self.act_feat], new_m),
@@ -389,8 +306,8 @@ impl SimPreset {
         let act = self.forward_client(inputs[0].as_f32(), &inputs[2])?;
         let b = act.shape()[0];
         ensure!(labels.len() == b, "eval_step: labels/batch mismatch");
-        let logits = matmul(act.data(), w_s, b, self.act_feat, self.classes);
-        let (loss, correct, _) = softmax_xent(&logits, labels, b, self.classes);
+        let logits = fwd_gemm_ref(act.data(), w_s, b, self.act_feat, self.classes);
+        let (loss, correct, _) = softmax_xent_ref(&logits, labels, b, self.classes);
         Ok(vec![
             HostTensor::scalar_f32(loss as f32),
             HostTensor::i32(&[], vec![correct as i32]),

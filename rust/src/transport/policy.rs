@@ -195,14 +195,26 @@ impl ClientSampling {
     /// holds within the sampled subset exactly as it does for the full
     /// fleet). `Full` never touches the RNG stream.
     pub fn draw(&self, seed: u64, round: usize, devices: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        self.draw_into(seed, round, devices, &mut out);
+        out
+    }
+
+    /// [`ClientSampling::draw`] into a caller-owned buffer (cleared,
+    /// capacity reused). Full participation — the default — touches
+    /// neither the RNG stream nor the heap once warm; sampled draws still
+    /// allocate inside `sample_indices`. Same draw sequence as `draw`.
+    pub fn draw_into(&self, seed: u64, round: usize, devices: usize, out: &mut Vec<usize>) {
+        out.clear();
         let k = self.effective_k(devices);
         if k == devices {
-            return (0..devices).collect();
+            out.extend(0..devices);
+            return;
         }
         let mut rng = Pcg32::derived(seed, stream::SAMPLE, round as u64);
         let mut picked = rng.sample_indices(devices, k);
         picked.sort_unstable();
-        picked
+        out.extend(picked);
     }
 }
 

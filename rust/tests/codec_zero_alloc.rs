@@ -54,11 +54,13 @@ fn count_allocs(mut f: impl FnMut()) -> u64 {
 #[test]
 fn steady_state_compress_decompress_is_allocation_free() {
     // the paper codec at MNIST scale (14×14, fused kernel + planned
-    // zig-zag), plus the uniform baseline — both scratch-arena paths
+    // zig-zag), plus the uniform baselines — all scratch-arena paths
+    // (easyquant joined once its fit gained the recycled outlier buffer)
     for (name, shape) in [
         ("slfac", [4usize, 8, 14, 14]),
         ("slfac", [2, 4, 16, 16]),
         ("uniform", [4, 8, 14, 14]),
+        ("easyquant", [4, 8, 14, 14]),
         ("identity", [2, 4, 8, 8]),
     ] {
         let params = CodecParams::default();

@@ -1,0 +1,306 @@
+//! Differential bit-identity for the compute backend: the planned fast
+//! path (blocked GEMM kernels + device-resident state + fused backward,
+//! `compute_fast_path = true`, the default) must reproduce the reference
+//! artifact-execute path **bit-for-bit** — kernel by kernel over
+//! randomized shapes/seeds, and end-to-end over full training runs
+//! (histories, comm stats, wire bytes, final parameters).
+//!
+//! Runs on the sim executor backend (pure Rust, manifest only), so it
+//! needs no XLA runtime and always runs.
+
+use slfac::config::{ExperimentConfig, SyncMode};
+use slfac::coordinator::{TrainOutcome, Trainer};
+use slfac::runtime::compute::{
+    fwd_gemm, fwd_gemm_ref, gact_fast, gact_ref, grad_outer, grad_outer_ref, sgd_momentum,
+    sgd_momentum_ref, sgd_momentum_tracked, softmax_xent_fused, softmax_xent_ref,
+};
+use slfac::runtime::{write_sim_manifest, ExecutorHandle, HostTensor, SimManifestSpec};
+use slfac::testing::prop;
+
+const BATCH: usize = 8;
+
+// --- kernel level ---------------------------------------------------------
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|f| f.to_bits()).collect()
+}
+
+#[test]
+fn blocked_kernels_match_reference_over_random_shapes() {
+    prop("fast kernels == reference kernels", 80, |g| {
+        let b = g.usize_in(1, 9);
+        let i_dim = g.usize_in(1, 150);
+        let j_dim = g.usize_in(1, 200);
+        // ~1/8 exact zeros so the zero-skip branches are exercised on both
+        // sides of the comparison
+        let sparse = |n: usize, g: &mut slfac::testing::Gen| -> Vec<f32> {
+            (0..n)
+                .map(|_| {
+                    if g.usize_in(0, 7) == 0 {
+                        0.0
+                    } else {
+                        g.f32_in(-2.0, 2.0)
+                    }
+                })
+                .collect()
+        };
+        let x = sparse(b * i_dim, g);
+        let w = sparse(i_dim * j_dim, g);
+        let want = fwd_gemm_ref(&x, &w, b, i_dim, j_dim);
+        let mut got = vec![f32::NAN; b * j_dim]; // dirty output buffer
+        fwd_gemm(&x, &w, b, i_dim, j_dim, &mut got);
+        assert_eq!(bits(&got), bits(&want), "fwd {b}x{i_dim}x{j_dim}");
+
+        let d = sparse(b * j_dim, g);
+        let want = grad_outer_ref(&x, &d, b, i_dim, j_dim);
+        let mut got = vec![f32::NAN; i_dim * j_dim];
+        grad_outer(&x, &d, b, i_dim, j_dim, &mut got);
+        assert_eq!(bits(&got), bits(&want), "grad {b}x{i_dim}x{j_dim}");
+
+        // gact: treat i_dim as the feature width, j_dim-capped classes
+        let classes = g.usize_in(1, 12);
+        let dl = sparse(b * classes, g);
+        let w_s = sparse(i_dim * classes, g);
+        let mut w_s_t = vec![0.0f32; i_dim * classes];
+        for r in 0..i_dim {
+            for c in 0..classes {
+                w_s_t[c * i_dim + r] = w_s[r * classes + c];
+            }
+        }
+        let want = gact_ref(&dl, &w_s, b, i_dim, classes);
+        let mut got = vec![f32::NAN; b * i_dim];
+        gact_fast(&dl, &w_s_t, b, i_dim, classes, &mut got);
+        assert_eq!(bits(&got), bits(&want), "gact {b}x{i_dim}x{classes}");
+    });
+}
+
+#[test]
+fn fused_softmax_and_sgd_match_reference_over_random_inputs() {
+    prop("fused softmax/sgd == reference", 80, |g| {
+        let b = g.usize_in(1, 10);
+        let classes = g.usize_in(2, 12);
+        let logits = g.normal_vec(b * classes);
+        let labels: Vec<i32> = (0..b).map(|_| g.usize_in(0, classes - 1) as i32).collect();
+        let (want_loss, want_correct, want_d) = softmax_xent_ref(&logits, &labels, b, classes);
+        let mut exp = vec![f32::NAN; b * classes];
+        let mut d = vec![f32::NAN; b * classes];
+        let (loss, correct) = softmax_xent_fused(&logits, &labels, b, classes, &mut exp, &mut d);
+        assert_eq!(loss.to_bits(), want_loss.to_bits());
+        assert_eq!(correct, want_correct);
+        assert_eq!(bits(&d), bits(&want_d));
+
+        let rows = g.usize_in(1, 20);
+        let cols = g.usize_in(1, 20);
+        let n = rows * cols;
+        let w0 = g.normal_vec(n);
+        let m0 = g.normal_vec(n);
+        let grad = g.normal_vec(n);
+        let lr = g.f32_in(0.001, 0.5);
+        let (want_w, want_m) = sgd_momentum_ref(&w0, &m0, &grad, lr);
+        let (mut w1, mut m1) = (w0.clone(), m0.clone());
+        sgd_momentum(&mut w1, &mut m1, &grad, lr);
+        assert_eq!(bits(&w1), bits(&want_w));
+        assert_eq!(bits(&m1), bits(&want_m));
+        let (mut w2, mut m2) = (w0, m0);
+        let mut wt = vec![f32::NAN; n];
+        sgd_momentum_tracked(&mut w2, &mut m2, &grad, lr, &mut wt, rows, cols);
+        assert_eq!(bits(&w2), bits(&want_w));
+        assert_eq!(bits(&m2), bits(&want_m));
+        for r in 0..rows {
+            for c in 0..cols {
+                assert_eq!(
+                    wt[c * rows + r].to_bits(),
+                    w2[r * cols + c].to_bits(),
+                    "transpose drifted at ({r},{c})"
+                );
+            }
+        }
+    });
+}
+
+// --- trainer level --------------------------------------------------------
+
+fn sim_dir(label: &str, act_channels: usize, act_hw: usize) -> String {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    let dir = format!(
+        "{}/slfac_compdiff_{label}_{}_{}",
+        std::env::temp_dir().display(),
+        std::process::id(),
+        NEXT.fetch_add(1, Ordering::Relaxed)
+    );
+    write_sim_manifest(
+        &dir,
+        &[SimManifestSpec {
+            preset: "mnist".into(),
+            batch_size: BATCH,
+            act_channels,
+            act_hw,
+        }],
+    )
+    .unwrap();
+    dir
+}
+
+fn cfg(dir: &str, codec: &str, seed: u64, fast: bool) -> ExperimentConfig {
+    ExperimentConfig {
+        name: format!("compdiff_{codec}_{seed}_{fast}"),
+        codec: codec.into(),
+        devices: 4,
+        workers: 1,
+        rounds: 2,
+        batches_per_round: 2,
+        batch_size: BATCH,
+        train_samples: 160,
+        test_samples: 2 * BATCH,
+        seed,
+        artifacts_dir: dir.into(),
+        compute_fast_path: fast,
+        ..Default::default()
+    }
+}
+
+struct RunResult {
+    outcome: TrainOutcome,
+    client: Vec<HostTensor>,
+    server: Vec<HostTensor>,
+}
+
+fn run(cfg: ExperimentConfig) -> RunResult {
+    let exec = ExecutorHandle::spawn_sim(&cfg.artifacts_dir, &["mnist".into()])
+        .expect("sim executor");
+    let mut trainer = Trainer::new(cfg, exec).expect("trainer");
+    let outcome = trainer.run().expect("run");
+    RunResult {
+        outcome,
+        client: trainer.client_params(),
+        server: trainer.server_params(),
+    }
+}
+
+fn param_bits(params: &[HostTensor]) -> Vec<Vec<u32>> {
+    params
+        .iter()
+        .map(|t| t.as_f32().iter().map(|v| v.to_bits()).collect())
+        .collect()
+}
+
+fn assert_bit_identical(a: &RunResult, b: &RunResult, label: &str) {
+    assert!(
+        a.outcome.history.bit_eq(&b.outcome.history),
+        "{label}: TrainingHistory diverged"
+    );
+    assert!(
+        a.outcome.comm.bit_eq(&b.outcome.comm),
+        "{label}: CommStats diverged"
+    );
+    assert_eq!(
+        param_bits(&a.client),
+        param_bits(&b.client),
+        "{label}: client params diverged"
+    );
+    assert_eq!(
+        param_bits(&a.server),
+        param_bits(&b.server),
+        "{label}: server params diverged"
+    );
+}
+
+#[test]
+fn fast_compute_matches_reference_end_to_end() {
+    // seeds × codecs (frequency-domain slfac exercises the resident DCT
+    // path, identity the spatial one, tk-sl the randomized-codec RNG
+    // threading) × both activation plane kinds (power-of-two 4×4 takes
+    // the Lee DCT, 7×7 the planned matmul DCT)
+    for &(act_c, act_hw) in &[(2usize, 4usize), (2, 7)] {
+        let dir = sim_dir("e2e", act_c, act_hw);
+        for &seed in &[7u64, 1234] {
+            for codec in ["slfac", "identity", "tk-sl"] {
+                let reference = run(cfg(&dir, codec, seed, false));
+                let fast = run(cfg(&dir, codec, seed, true));
+                assert_bit_identical(
+                    &reference,
+                    &fast,
+                    &format!("plane {act_c}x{act_hw}x{act_hw} seed={seed} codec={codec}"),
+                );
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn fast_compute_matches_reference_in_sequential_mode() {
+    // sequential SL shuttles client weights device→device: the resident
+    // copy chain must reproduce the reference clone chain exactly
+    let dir = sim_dir("seq", 2, 4);
+    for &seed in &[7u64, 99] {
+        let mk = |fast: bool| {
+            let mut c = cfg(&dir, "slfac", seed, fast);
+            c.sync = SyncMode::Sequential;
+            c
+        };
+        let reference = run(mk(false));
+        let fast = run(mk(true));
+        assert_bit_identical(&reference, &fast, &format!("sequential seed={seed}"));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fast_compute_matches_reference_with_raw_gradients() {
+    // compress_gradients = false: the fast path stages the raw spatial
+    // gradient in the device wire tensor (GradMsg::Stashed) — bytes and
+    // math must still match the reference HostTensor path
+    let dir = sim_dir("rawgrad", 2, 4);
+    let mk = |fast: bool| {
+        let mut c = cfg(&dir, "slfac", 21, fast);
+        c.compress_gradients = false;
+        c
+    };
+    let reference = run(mk(false));
+    let fast = run(mk(true));
+    assert_bit_identical(&reference, &fast, "raw gradients");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fast_compute_composes_with_sampling_and_straggler_policies() {
+    // client sampling + async quorum over a heterogeneous fleet: devices
+    // rejoin from the aggregate after sitting out — the resident slot
+    // reload must match the reference clone-reset exactly
+    use slfac::transport::{ClientSampling, SchedulerKind, StragglerPolicy};
+    let dir = sim_dir("contention", 2, 4);
+    let mk = |fast: bool| {
+        let mut c = cfg(&dir, "slfac", 11, fast);
+        c.scheduler = SchedulerKind::Async;
+        c.profile = "wifi/lte".into();
+        c.straggler = StragglerPolicy::Quorum { k: 2 };
+        c.sampling = ClientSampling::Count(3);
+        c.rounds = 3;
+        c
+    };
+    let reference = run(mk(false));
+    let fast = run(mk(true));
+    assert_bit_identical(&reference, &fast, "sampled quorum");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resident_session_records_the_same_stats_surface() {
+    // exec stats are wall-clock diagnostics (not part of bit_eq), but the
+    // resident path must keep the per-artifact accounting comparable:
+    // same keys, same execution counts as the artifact path
+    let dir = sim_dir("stats", 2, 4);
+    let reference = run(cfg(&dir, "slfac", 5, false));
+    let fast = run(cfg(&dir, "slfac", 5, true));
+    let counts = |o: &TrainOutcome| -> Vec<(String, u64)> {
+        o.exec_stats
+            .per_artifact
+            .iter()
+            .map(|(k, (n, _))| (k.clone(), *n))
+            .collect()
+    };
+    assert_eq!(counts(&reference.outcome), counts(&fast.outcome));
+    let _ = std::fs::remove_dir_all(&dir);
+}

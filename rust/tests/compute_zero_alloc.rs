@@ -1,0 +1,214 @@
+//! Steady-state allocation discipline for the compute spine: one full
+//! training round — batch loading, client forward (+DCT), codec
+//! compress/decompress both directions, inverse DCT, server step, client
+//! backward, FedAvg, and evaluation — driven through the device-resident
+//! fast path exactly as the trainer drives it, performs **zero heap
+//! allocations** once warm. This is the executor-side counterpart of
+//! `tests/codec_zero_alloc.rs` (PR 4 pinned the codec half; this pins the
+//! model-compute half plus their composition).
+//!
+//! Scope note: the transport bookkeeping around a trainer round (event
+//! queue, per-batch `UplinkMsg` vectors, scoped worker spawns) still makes
+//! a handful of O(devices) allocations per round by design; what this test
+//! pins is the per-element compute + wire work — the part that used to
+//! allocate megabytes of parameter tensors per device step.
+//!
+//! Verified with a counting global allocator, which is why this test lives
+//! alone in its own integration-test binary. Each window measures several
+//! runs and asserts the *minimum* is zero — a per-step allocation would
+//! show up in every window.
+
+use slfac::codec::{self, CodecParams, CodecScratch, Payload};
+use slfac::data::{synthetic, BatchLoader};
+use slfac::rng::{stream, Pcg32};
+use slfac::runtime::{write_sim_manifest, ExecutorHandle, ResidentSession, SimManifestSpec};
+use slfac::tensor::Tensor;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+// SAFETY: defers all allocation to `System`; only adds a relaxed counter.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Allocations observed across `f()`.
+fn count_allocs(mut f: impl FnMut()) -> u64 {
+    let before = ALLOC_CALLS.load(Ordering::Relaxed);
+    f();
+    ALLOC_CALLS.load(Ordering::Relaxed) - before
+}
+
+const BATCH: usize = 4;
+const DEVICES: usize = 3;
+const STEPS: usize = 2;
+
+/// Everything one device owns on the fast path (mirrors `DeviceCtx`).
+struct Dev {
+    loader: BatchLoader,
+    codec_rng: Pcg32,
+    scratch: CodecScratch,
+    x: Vec<f32>,
+    y: Vec<i32>,
+    wire: Tensor,
+    decode: Tensor,
+    spatial: Tensor,
+}
+
+/// One full training round through the resident session, mirroring the
+/// trainer's fast-path phase bodies per device per step.
+fn round(
+    res: &ResidentSession,
+    codec: &dyn codec::ActivationCodec,
+    devs: &mut [Dev],
+    train: &slfac::data::Dataset,
+    test: &slfac::data::Dataset,
+    weights: &[f64],
+) {
+    let freq = codec.frequency_domain();
+    for d in 0..devs.len() {
+        res.load_client_from_agg(d).unwrap();
+    }
+    for _step in 0..STEPS {
+        for (id, dev) in devs.iter_mut().enumerate() {
+            // fan-out: batch + forward + encode
+            dev.loader.next_batch_into(train, &mut dev.x, &mut dev.y);
+            res.client_fwd(id, &dev.x, freq, &mut dev.wire).unwrap();
+            let mut up = Payload::empty();
+            up.body = dev.scratch.take_body();
+            codec
+                .compress_into(&dev.wire, &mut dev.codec_rng, &mut dev.scratch, &mut up)
+                .unwrap();
+
+            // server: decode + idct + step + gradient encode
+            codec.decompress_into(&up, &mut dev.scratch, &mut dev.decode).unwrap();
+            dev.scratch.recycle_body(std::mem::take(&mut up.body));
+            let (loss, _correct) = if freq {
+                res.idct(id, &dev.decode, &mut dev.spatial).unwrap();
+                res.server_step(&dev.spatial, &dev.y, 0.05, true, &mut dev.wire)
+                    .unwrap()
+            } else {
+                res.server_step(&dev.decode, &dev.y, 0.05, false, &mut dev.wire)
+                    .unwrap()
+            };
+            assert!(loss.is_finite());
+            let mut down = Payload::empty();
+            down.body = dev.scratch.take_body();
+            codec
+                .compress_into(&dev.wire, &mut dev.codec_rng, &mut dev.scratch, &mut down)
+                .unwrap();
+
+            // fan-in: decode + idct + backward
+            codec
+                .decompress_into(&down, &mut dev.scratch, &mut dev.decode)
+                .unwrap();
+            dev.scratch.recycle_body(std::mem::take(&mut down.body));
+            if freq {
+                res.idct(id, &dev.decode, &mut dev.spatial).unwrap();
+                res.client_step(id, &dev.x, &dev.spatial, 0.05).unwrap();
+            } else {
+                res.client_step(id, &dev.x, &dev.decode, 0.05).unwrap();
+            }
+        }
+    }
+    res.fedavg(weights).unwrap();
+    for i in 0..test.len() / BATCH {
+        let (loss, _) = res.eval_batch(test, i * BATCH, BATCH).unwrap();
+        assert!(loss.is_finite());
+    }
+}
+
+#[test]
+fn steady_state_training_round_is_allocation_free() {
+    let dir = format!(
+        "{}/slfac_compute_alloc_{}",
+        std::env::temp_dir().display(),
+        std::process::id()
+    );
+    write_sim_manifest(
+        &dir,
+        &[SimManifestSpec {
+            preset: "mnist".into(),
+            batch_size: BATCH,
+            act_channels: 2,
+            act_hw: 8,
+        }],
+    )
+    .unwrap();
+    let exec = ExecutorHandle::spawn_sim(&dir, &["mnist".into()]).unwrap();
+    let (train, test) = synthetic::mnist_like(&synthetic::DatasetSpec {
+        train_samples: 24 * DEVICES,
+        test_samples: 2 * BATCH,
+        noise: 0.2,
+        seed: 9,
+    });
+    let weights: Vec<f64> = (1..=DEVICES).map(|d| d as f64).collect();
+
+    // the paper codec (frequency domain: resident forward-DCT + idct on
+    // the hot path) and identity (spatial) both must hold the guarantee
+    for name in ["slfac", "identity"] {
+        let res = exec
+            .open_resident("mnist", DEVICES)
+            .unwrap()
+            .expect("sim backend supports resident state");
+        let codec = codec::by_name(name, &CodecParams::default()).unwrap();
+        let mut devs: Vec<Dev> = (0..DEVICES)
+            .map(|d| Dev {
+                loader: BatchLoader::new(
+                    (d * 24..(d + 1) * 24).collect(),
+                    BATCH,
+                    d as u64,
+                ),
+                codec_rng: Pcg32::derived(1, stream::CODEC, d as u64),
+                scratch: CodecScratch::new(),
+                x: Vec::new(),
+                y: Vec::new(),
+                wire: Tensor::zeros(&[1]),
+                decode: Tensor::zeros(&[1]),
+                spatial: Tensor::zeros(&[1]),
+            })
+            .collect();
+
+        // warm-up: size every slot buffer, build plans, fill body pools
+        for _ in 0..3 {
+            round(&res, codec.as_ref(), &mut devs, &train, &test, &weights);
+        }
+        // measure several windows; a true per-round allocation would
+        // appear in all of them
+        let min_allocs = (0..5)
+            .map(|_| {
+                count_allocs(|| {
+                    for _ in 0..3 {
+                        round(&res, codec.as_ref(), &mut devs, &train, &test, &weights);
+                    }
+                })
+            })
+            .min()
+            .unwrap();
+        assert_eq!(
+            min_allocs, 0,
+            "{name}: steady-state training round allocated"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

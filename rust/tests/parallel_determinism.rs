@@ -180,6 +180,41 @@ fn fast_path_and_scratch_arenas_are_bit_transparent() {
 }
 
 #[test]
+fn compute_fast_path_is_bit_transparent_across_workers() {
+    // The compute-backend matrix: `compute_fast_path` (device-resident
+    // blocked kernels vs the artifact execute path with reference
+    // kernels) × workers 1/4 must all reproduce the reference run
+    // (compute_fast_path = false, workers = 1) bit-for-bit — histories,
+    // comm stats, and final parameters. Device-resident state means the
+    // weights never leave the executor on the fast path; this pins that
+    // the relocation is purely mechanical.
+    let dir = sim_dir("computefast");
+    for &seed in &[7u64, 1234] {
+        for codec in ["slfac", "tk-sl"] {
+            let mut ref_cfg = cfg(&dir, codec, SyncMode::ParallelFedAvg, seed, 1);
+            ref_cfg.compute_fast_path = false;
+            let reference = run(ref_cfg);
+            for workers in [1usize, 4] {
+                for fast in [true, false] {
+                    let mut c = cfg(&dir, codec, SyncMode::ParallelFedAvg, seed, workers);
+                    c.name = format!("pardet_compute_{codec}_{seed}_{workers}_{fast}");
+                    c.compute_fast_path = fast;
+                    let got = run(c);
+                    assert_bit_identical(
+                        &reference,
+                        &got,
+                        &format!(
+                            "seed={seed} codec={codec} workers={workers} compute_fast={fast}"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn different_seeds_actually_diverge() {
     // guards against the comparison being vacuous (e.g. everything zero)
     let dir = sim_dir("diverge");
