@@ -23,13 +23,21 @@
 //! device steps, and fast-vs-reference full async rounds at 64/256
 //! devices. Results additionally land in `BENCH_compute.json`.
 //!
-//! Section 5 (`xla`; requires `make artifacts`): one full split-learning
+//! Section 5 (`fleet`; always runs): **fleet-scale transport rounds** —
+//! cohort-compressed scheduler rounds over [`FleetOps`] (pure transport,
+//! no model compute) at 10k / 100k / 1M devices, sync and async. The
+//! headline rounds/s numbers land in `BENCH_fleet.json`; this is the
+//! acceptance surface for the million-device simulation.
+//!
+//! Section 6 (`xla`; requires `make artifacts`): one full split-learning
 //! round over real PJRT artifacts per codec — client_fwd, compress,
 //! uplink, idct, server_step, compress, downlink, client_step.
 //!
-//! `SLFAC_BENCH_ONLY=engine|async|codec|compute|xla` restricts the run to
-//! one section (CI uses this to smoke the async scenarios, the codec
-//! kernels, and the compute backend in isolation).
+//! `SLFAC_BENCH_ONLY=engine|async|codec|compute|fleet|xla` restricts the
+//! run to one section (CI uses this to smoke the async scenarios, the
+//! codec kernels, the compute backend, and the fleet scale in isolation).
+//!
+//! [`FleetOps`]: slfac::transport::FleetOps
 
 use slfac::bench::{black_box, BenchResult, Bencher};
 use slfac::codec::{self, CodecParams, CodecScratch, Payload};
@@ -41,7 +49,11 @@ use slfac::rng::Pcg32;
 use slfac::runtime::compute as ck;
 use slfac::runtime::{write_sim_manifest, ExecutorHandle, HostTensor, SimManifestSpec};
 use slfac::tensor::Tensor;
-use slfac::transport::{ClientSampling, SchedulerKind, StragglerPolicy, UplinkMode};
+use slfac::transport::fleet::FleetCohort;
+use slfac::transport::{
+    AsyncEventScheduler, ClientSampling, FleetOps, RoundScheduler, SchedulerKind,
+    StragglerPolicy, SyncEventScheduler, UplinkMode,
+};
 use std::collections::BTreeMap;
 
 const SIM_BATCH: usize = 8;
@@ -649,14 +661,88 @@ fn bench_compute(b: &mut Bencher) {
     println!("\ncompute bench results -> {path}");
 }
 
+/// Section 5: fleet-scale transport rounds — cohort-compressed scheduler
+/// rounds over [`FleetOps`] at 10k/100k/1M devices (pure transport, no
+/// model compute). Proves a million-device round completes and records
+/// rounds/s in `BENCH_fleet.json`.
+fn bench_fleet(b: &mut Bencher) {
+    b.section("fleet scale: cohort-compressed transport rounds, 10k/100k/1M devices");
+    // two cost cohorts (the wifi/lte shape), round-robin like
+    // assign_profiles
+    let profiles = vec![
+        FleetCohort {
+            compute_s: 0.002,
+            uplink_cost_s: 0.012,
+            downlink_s: 0.006,
+            uplink_bytes: 12_000,
+            downlink_bytes: 6_000,
+        },
+        FleetCohort {
+            compute_s: 0.006,
+            uplink_cost_s: 0.045,
+            downlink_s: 0.020,
+            uplink_bytes: 12_000,
+            downlink_bytes: 6_000,
+        },
+    ];
+    let mut rows: Vec<Json> = Vec::new();
+    for devices in [10_000usize, 100_000, 1_000_000] {
+        let schedulers: [(&str, Box<dyn RoundScheduler>); 2] = [
+            ("sync", Box::new(SyncEventScheduler::new())),
+            (
+                "async/wait-all",
+                Box::new(AsyncEventScheduler::new(StragglerPolicy::WaitAll)),
+            ),
+        ];
+        for (label, sched) in schedulers {
+            let mut ops = FleetOps::new(devices, 1, profiles.clone());
+            ops.set_cohorts(profiles.len());
+            ops.set_server_service_s(1e-6);
+            // warm once (scratch first-touch) and prove the round completes
+            let report = sched.run_round(&mut ops).unwrap();
+            assert_eq!(
+                report.completed, devices,
+                "fleet round must complete every device"
+            );
+            let r = b
+                .bench(&format!("fleet round/{label}/devices={devices}"), || {
+                    let _ = sched.run_round(black_box(&mut ops)).unwrap();
+                })
+                .clone();
+            let round_s = r.median.as_secs_f64();
+            let rounds_per_s = 1.0 / round_s.max(1e-12);
+            println!("    -> {rounds_per_s:.2} rounds/s ({label}, {devices} devices)");
+            let mut m = BTreeMap::new();
+            m.insert("devices".to_string(), Json::Num(devices as f64));
+            m.insert("scheduler".to_string(), Json::Str(label.to_string()));
+            m.insert("cohorts".to_string(), Json::Num(profiles.len() as f64));
+            m.insert("round_s".to_string(), Json::Num(round_s));
+            m.insert("rounds_per_s".to_string(), Json::Num(rounds_per_s));
+            rows.push(Json::Obj(m));
+        }
+    }
+
+    let mut root = BTreeMap::new();
+    root.insert(
+        "schema".to_string(),
+        Json::Str("slfac-bench-fleet/1".to_string()),
+    );
+    root.insert("rounds".to_string(), Json::Arr(rows));
+    let path = "BENCH_fleet.json";
+    std::fs::write(path, Json::Obj(root).to_string()).expect("write BENCH_fleet.json");
+    println!("\nfleet bench results -> {path}");
+}
+
 fn main() {
     let mut b = Bencher::new();
     let only = std::env::var("SLFAC_BENCH_ONLY").unwrap_or_default();
     if !only.is_empty()
-        && !["engine", "async", "codec", "compute", "xla"].contains(&only.as_str())
+        && !["engine", "async", "codec", "compute", "fleet", "xla"].contains(&only.as_str())
     {
         // a CI typo must fail loudly, not silently run zero sections
-        eprintln!("SLFAC_BENCH_ONLY='{only}' is not one of engine|async|codec|compute|xla");
+        eprintln!(
+            "SLFAC_BENCH_ONLY='{only}' is not one of engine|async|codec|compute|fleet|xla"
+        );
         std::process::exit(2);
     }
     let want = |section: &str| only.is_empty() || only == section;
@@ -671,6 +757,9 @@ fn main() {
     }
     if want("compute") {
         bench_compute(&mut b);
+    }
+    if want("fleet") {
+        bench_fleet(&mut b);
     }
     if want("xla") {
         bench_xla_round(&mut b);

@@ -7,7 +7,9 @@
 
 use crate::codec::CodecParams;
 use crate::json::Json;
-use crate::transport::{ClientSampling, LinkConfig, SchedulerKind, StragglerPolicy, UplinkMode};
+use crate::transport::{
+    ClientSampling, DownlinkMode, LinkConfig, SchedulerKind, StragglerPolicy, UplinkMode,
+};
 use anyhow::{bail, Context, Result};
 
 /// Which dataset preset to use (selects the artifact set too).
@@ -113,6 +115,22 @@ pub struct ExperimentConfig {
     /// Capacity of the shared uplink pipe in bits/s; `None` inherits the
     /// base link's `uplink_mbps`. Only meaningful with `uplink = shared`.
     pub shared_uplink_bps: Option<f64>,
+    /// Downlink contention model: `private` per-device pipes (default) or
+    /// one `shared` server-egress pipe whose concurrent broadcasts split
+    /// the capacity fairly (the mirror image of `uplink`).
+    pub downlink: DownlinkMode,
+    /// Capacity of the shared downlink pipe in bits/s; `None` inherits
+    /// the base link's `downlink_mbps`. Only meaningful with
+    /// `downlink = shared`.
+    pub shared_downlink_bps: Option<f64>,
+    /// Cohort count for fleet-scale rounds: `0` (default) runs the
+    /// per-device scheduler paths; any positive value switches both
+    /// schedulers to cohort-compressed control flow that is bit-identical
+    /// to the per-device paths (the value only sizes the event-grouping
+    /// table — match it to the number of distinct device profiles). Falls
+    /// back to the per-device paths under shared uplink/downlink pipes,
+    /// whose flow bookkeeping is inherently per-device.
+    pub cohorts: usize,
     /// Simulated seconds one batch occupies the server (uplinks queue for
     /// this serial resource; `0` = infinitely fast server, the default).
     pub server_service_s: f64,
@@ -162,6 +180,9 @@ impl Default for ExperimentConfig {
             straggler: StragglerPolicy::WaitAll,
             uplink: UplinkMode::Private,
             shared_uplink_bps: None,
+            downlink: DownlinkMode::Private,
+            shared_downlink_bps: None,
+            cohorts: 0,
             server_service_s: 0.0,
             sampling: ClientSampling::Full,
             base_compute_s: 0.002,
@@ -273,6 +294,14 @@ impl ExperimentConfig {
                     cfg.shared_uplink_bps =
                         Some(v.as_f64().context("shared_uplink_mbps")? * 1e6)
                 }
+                "downlink" => {
+                    cfg.downlink = DownlinkMode::parse(v.as_str().context("downlink: string")?)?
+                }
+                "shared_downlink_mbps" => {
+                    cfg.shared_downlink_bps =
+                        Some(v.as_f64().context("shared_downlink_mbps")? * 1e6)
+                }
+                "cohorts" => cfg.cohorts = v.as_usize().context("cohorts")?,
                 "server_service_s" => {
                     cfg.server_service_s = v.as_f64().context("server_service_s")?
                 }
@@ -311,6 +340,13 @@ impl ExperimentConfig {
     /// `shared_uplink_mbps` key, else the base link's uplink bandwidth.
     pub fn shared_capacity_bps(&self) -> f64 {
         self.shared_uplink_bps.unwrap_or(self.link.uplink_bps)
+    }
+
+    /// Capacity of the shared downlink (server-egress) pipe: the explicit
+    /// `shared_downlink_mbps` key, else the base link's downlink
+    /// bandwidth.
+    pub fn shared_downlink_capacity_bps(&self) -> f64 {
+        self.shared_downlink_bps.unwrap_or(self.link.downlink_bps)
     }
 
     /// Sanity-check ranges and key combinations. Every rejection names
@@ -414,6 +450,58 @@ impl ExperimentConfig {
                 }
             }
         }
+        match self.downlink {
+            DownlinkMode::Private => {
+                if let Some(bps) = self.shared_downlink_bps {
+                    bail!(
+                        "shared_downlink_mbps = {} requires downlink = \"shared\", got \
+                         downlink = \"private\"",
+                        bps / 1e6
+                    );
+                }
+            }
+            DownlinkMode::Shared => {
+                let cap = self.shared_downlink_capacity_bps();
+                if !(cap.is_finite() && cap > 0.0) {
+                    // name the key the capacity actually came from
+                    match self.shared_downlink_bps {
+                        Some(_) => bail!(
+                            "downlink = \"shared\" needs a positive finite capacity, \
+                             got shared_downlink_mbps = {}",
+                            cap / 1e6
+                        ),
+                        None => bail!(
+                            "downlink = \"shared\" needs a positive finite capacity, \
+                             got downlink_mbps = {} (shared_downlink_mbps is unset, \
+                             so the capacity inherits downlink_mbps)",
+                            cap / 1e6
+                        ),
+                    }
+                }
+                if self.link.jitter > 0.0 {
+                    bail!(
+                        "downlink = \"shared\" does not compose with link jitter \
+                         (jitter = {}) — the fair-share pipe is jitter-free",
+                        self.link.jitter
+                    );
+                }
+                if self.sync == SyncMode::Sequential {
+                    bail!(
+                        "downlink = \"shared\" requires sync = \"parallel\", got \
+                         sync = \"sequential\" — serial hand-off never contends \
+                         for the pipe"
+                    );
+                }
+            }
+        }
+        if self.cohorts > self.devices {
+            bail!(
+                "cohorts = {} exceeds devices = {} — a cohort cannot be \
+                 emptier than one device",
+                self.cohorts,
+                self.devices
+            );
+        }
         self.sampling.validate(self.devices)?;
         if let StragglerPolicy::Quorum { k } = self.straggler {
             // straggler.validate already bounded k by the fleet size; only
@@ -509,6 +597,13 @@ impl ExperimentConfig {
         m.insert("uplink".into(), Json::Str(self.uplink.name().into()));
         if let Some(bps) = self.shared_uplink_bps {
             m.insert("shared_uplink_mbps".into(), Json::Num(bps / 1e6));
+        }
+        m.insert("downlink".into(), Json::Str(self.downlink.name().into()));
+        if let Some(bps) = self.shared_downlink_bps {
+            m.insert("shared_downlink_mbps".into(), Json::Num(bps / 1e6));
+        }
+        if self.cohorts > 0 {
+            m.insert("cohorts".into(), Json::Num(self.cohorts as f64));
         }
         m.insert(
             "server_service_s".into(),
@@ -711,6 +806,64 @@ mod tests {
     }
 
     #[test]
+    fn fleet_keys_parse_and_roundtrip() {
+        let json = Json::parse(
+            r#"{"downlink": "shared", "shared_downlink_mbps": 20, "cohorts": 4,
+                "devices": 8}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&json).unwrap();
+        assert_eq!(cfg.downlink, DownlinkMode::Shared);
+        assert!((cfg.shared_downlink_capacity_bps() - 20e6).abs() < 1.0);
+        assert_eq!(cfg.cohorts, 4);
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.downlink, cfg.downlink);
+        assert_eq!(back.shared_downlink_bps, cfg.shared_downlink_bps);
+        assert_eq!(back.cohorts, cfg.cohorts);
+
+        // shared downlink capacity inherits downlink_mbps when not given
+        let json = Json::parse(r#"{"downlink": "shared", "downlink_mbps": 30}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&json).unwrap();
+        assert_eq!(cfg.shared_downlink_bps, None);
+        assert!((cfg.shared_downlink_capacity_bps() - 30e6).abs() < 1.0);
+
+        // cohorts = 0 (the default) stays off the serialized form
+        let cfg = ExperimentConfig::default();
+        assert_eq!(cfg.cohorts, 0);
+        assert!(!cfg.to_json().to_string().contains("cohorts"));
+    }
+
+    #[test]
+    fn fleet_misconfigurations_rejected() {
+        for bad in [
+            // shared downlink capacity without shared mode
+            r#"{"shared_downlink_mbps": 20}"#,
+            // shared pipe is jitter-free
+            r#"{"downlink": "shared", "jitter": 0.1}"#,
+            // sequential SL never contends
+            r#"{"downlink": "shared", "sync": "sequential"}"#,
+            // zero capacity (explicit and inherited)
+            r#"{"downlink": "shared", "shared_downlink_mbps": 0}"#,
+            r#"{"downlink": "shared", "downlink_mbps": 0}"#,
+            // unknown mode
+            r#"{"downlink": "multicast"}"#,
+            // more cohorts than devices (default 5)
+            r#"{"cohorts": 6}"#,
+        ] {
+            let json = Json::parse(bad).unwrap();
+            assert!(
+                ExperimentConfig::from_json(&json).is_err(),
+                "should reject {bad}"
+            );
+        }
+        // cohorts composes with shared pipes (falls back to the per-device
+        // scheduler paths) — allowed, not an error
+        let json =
+            Json::parse(r#"{"uplink": "shared", "jitter": 0.0, "cohorts": 2}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&json).is_ok());
+    }
+
+    #[test]
     fn contention_misconfigurations_rejected() {
         for bad in [
             // shared capacity without shared mode
@@ -767,6 +920,10 @@ mod tests {
             (r#"{"uplink": "shared", "uplink_mbps": 0}"#, "uplink_mbps"),
             (r#"{"server_service_s": -1}"#, "server_service_s"),
             (r#"{"train_samples": 3, "devices": 5}"#, "train_samples"),
+            (r#"{"shared_downlink_mbps": 10}"#, "shared_downlink_mbps"),
+            // a bad *inherited* downlink capacity must blame downlink_mbps
+            (r#"{"downlink": "shared", "downlink_mbps": 0}"#, "downlink_mbps"),
+            (r#"{"cohorts": 9, "devices": 5}"#, "cohorts"),
         ];
         for (bad, key) in cases {
             let json = Json::parse(bad).unwrap();

@@ -138,6 +138,123 @@ where
     }
 }
 
+/// Covariant raw-pointer wrapper that lets scoped workers take disjoint
+/// `&mut` borrows of a slice through an index list. Safe only under the
+/// duplicate-free contract checked in [`run_sharded_indexed`].
+struct Ptr<T>(*mut T);
+
+impl<T> Clone for Ptr<T> {
+    fn clone(&self) -> Self {
+        Ptr(self.0)
+    }
+}
+impl<T> Copy for Ptr<T> {}
+
+// SAFETY: the pointer is only dereferenced at indices proven distinct
+// across workers (bounds- and duplicate-checked by the caller contract),
+// so sending a copy to each scoped worker creates no aliasing.
+unsafe impl<T: Send> Send for Ptr<T> {}
+
+/// Like [`run_sharded`], but over an **index list** into `items`:
+/// `f(k, &mut items[idx[k]])` runs for every position `k`, and its result
+/// lands in `out[k]`. This is the zero-allocation batch dispatch the
+/// trainer's fan-out uses — the scheduler hands it an arbitrary device
+/// subset (event-ordered, not contiguous), and both `idx` and `out` are
+/// round-persistent buffers, so no per-batch `Vec` is built.
+///
+/// Contract: `idx` entries must be in-bounds (asserted) and pairwise
+/// distinct — duplicates would alias `&mut` across workers. Distinctness
+/// is debug-asserted with an O(k) strictly-increasing fast path (the
+/// common case: batches are built in ascending device order) and an
+/// allocation-free O(k²) pair scan otherwise.
+///
+/// Error semantics match [`run_sharded`]: every position is visited
+/// regardless of worker count, and the error surfaced is the one at the
+/// **lowest position**, labeled `item {k}`. `out[k]` is untouched for a
+/// failing position.
+pub fn run_sharded_indexed<T, R, F>(
+    items: &mut [T],
+    idx: &[usize],
+    out: &mut [R],
+    workers: usize,
+    f: F,
+) -> Result<()>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut T) -> Result<R> + Sync,
+{
+    let k = idx.len();
+    assert_eq!(out.len(), k, "out buffer must be as long as the index list");
+    let n = items.len();
+    for &i in idx {
+        assert!(i < n, "index {i} out of bounds for {n} items");
+    }
+    if cfg!(debug_assertions) && !idx.windows(2).all(|w| w[0] < w[1]) {
+        for a in 0..k {
+            for b in a + 1..k {
+                assert_ne!(idx[a], idx[b], "duplicate index {}", idx[a]);
+            }
+        }
+    }
+    if k == 0 {
+        return Ok(());
+    }
+    let w = workers.clamp(1, k);
+    if w == 1 {
+        let mut first_err: Option<(usize, anyhow::Error)> = None;
+        for (j, (&i, slot)) in idx.iter().zip(out.iter_mut()).enumerate() {
+            match f(j, &mut items[i]) {
+                Ok(r) => *slot = r,
+                Err(e) => {
+                    first_err.get_or_insert((j, e));
+                }
+            }
+        }
+        return match first_err {
+            Some((j, e)) => Err(e.context(format!("item {j}"))),
+            None => Ok(()),
+        };
+    }
+
+    let chunk = (k + w - 1) / w;
+    let base = Ptr(items.as_mut_ptr());
+    let f = &f;
+    let mut failures: Vec<(usize, anyhow::Error)> = std::thread::scope(|s| {
+        let handles: Vec<_> = idx
+            .chunks(chunk)
+            .zip(out.chunks_mut(chunk))
+            .enumerate()
+            .map(|(ci, (ishard, oshard))| {
+                s.spawn(move || {
+                    let start = ci * chunk;
+                    let mut errs = Vec::new();
+                    for (j, (&i, slot)) in ishard.iter().zip(oshard.iter_mut()).enumerate() {
+                        // SAFETY: `i` is bounds-checked above, and the
+                        // duplicate-free contract makes this the only
+                        // `&mut` to `items[i]` across all workers.
+                        let item = unsafe { &mut *base.0.add(i) };
+                        match f(start + j, item) {
+                            Ok(r) => *slot = r,
+                            Err(e) => errs.push((start + j, e)),
+                        }
+                    }
+                    errs
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("round-engine worker panicked"))
+            .collect()
+    });
+    failures.sort_by_key(|(j, _)| *j);
+    match failures.into_iter().next() {
+        Some((j, e)) => Err(e.context(format!("item {j}"))),
+        None => Ok(()),
+    }
+}
+
 /// Compile-time guard: types crossing the engine's thread boundary. The
 /// phase closures are shared by reference across workers, so the executor
 /// handle must be `Sync` too (true since Rust 1.72, where
@@ -258,6 +375,92 @@ mod tests {
         })
         .unwrap();
         assert!(OVERLAPPED.load(Ordering::SeqCst), "workers never overlapped");
+    }
+
+    #[test]
+    fn indexed_visits_selected_items_in_position_order() {
+        for workers in [1, 2, 4, 16] {
+            let mut items: Vec<u64> = vec![0; 12];
+            let idx = [7usize, 2, 9, 0, 5];
+            let mut out = [0u64; 5];
+            run_sharded_indexed(&mut items, &idx, &mut out, workers, |k, item| {
+                *item = 100 + k as u64;
+                Ok(*item * 2)
+            })
+            .unwrap();
+            for (k, &i) in idx.iter().enumerate() {
+                assert_eq!(items[i], 100 + k as u64, "workers={workers}");
+                assert_eq!(out[k], (100 + k as u64) * 2, "workers={workers}");
+            }
+            // untouched items stay untouched
+            assert_eq!(items[1], 0);
+            assert_eq!(items[11], 0);
+        }
+    }
+
+    #[test]
+    fn indexed_parallel_matches_sequential_bitwise() {
+        let run = |workers: usize| -> (Vec<u64>, Vec<u64>) {
+            let mut items: Vec<u64> = (0..31).map(|i| i * 13 + 5).collect();
+            let idx: Vec<usize> = (0..31).rev().step_by(2).collect();
+            let mut out = vec![0u64; idx.len()];
+            run_sharded_indexed(&mut items, &idx, &mut out, workers, |k, item| {
+                let mut rng = crate::rng::Pcg32::derived(7, 0x1D, k as u64);
+                for _ in 0..20 {
+                    *item = item.wrapping_add(rng.next_u32() as u64);
+                }
+                Ok(*item ^ 0xABCD)
+            })
+            .unwrap();
+            (items, out)
+        };
+        let reference = run(1);
+        for workers in [2, 3, 8] {
+            assert_eq!(run(workers), reference, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn indexed_lowest_position_error_wins() {
+        for workers in [1, 2, 4] {
+            let mut items = vec![(); 8];
+            let idx = [6usize, 1, 3, 7];
+            let mut out = vec![(); 4];
+            let err = run_sharded_indexed(&mut items, &idx, &mut out, workers, |k, _| {
+                if k == 1 || k == 3 {
+                    anyhow::bail!("boom {k}")
+                }
+                Ok(())
+            })
+            .unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("item 1"), "workers={workers}: {msg}");
+            assert!(msg.contains("boom 1"), "workers={workers}: {msg}");
+        }
+    }
+
+    #[test]
+    fn indexed_empty_and_zst_out() {
+        let mut items: Vec<u32> = vec![1, 2, 3];
+        let mut out: Vec<()> = vec![];
+        run_sharded_indexed(&mut items, &[], &mut out, 4, |_, _| Ok(())).unwrap();
+        // ZST results (fan-in uses R = ()) never allocate in `out`
+        let idx = [2usize, 0];
+        let mut out = vec![(); 2];
+        run_sharded_indexed(&mut items, &idx, &mut out, 4, |_, item| {
+            *item += 10;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(items, vec![11, 2, 13]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn indexed_rejects_out_of_bounds() {
+        let mut items = vec![0u8; 3];
+        let mut out = vec![(); 1];
+        let _ = run_sharded_indexed(&mut items, &[3], &mut out, 1, |_, _| Ok(()));
     }
 
     #[test]

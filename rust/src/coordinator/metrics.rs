@@ -1,6 +1,101 @@
 //! Per-round training metrics and history (the data behind Fig. 2–4).
+//!
+//! Everything here is O(1) per round in the fleet size: [`RoundMetrics`]
+//! carries only scalars, and per-device quantities reach it through
+//! [`StreamFold`]-style running reductions (count/sum/min/max) instead of
+//! materialized per-device vectors — at a million devices a single
+//! `Vec<f64>` per round would dwarf the round itself.
 
 use std::fmt::Write as _;
+
+/// Order-stable streaming fold over `f64` samples: count, sum, min, max —
+/// the per-round reduction primitive at fleet scale (no per-device vector
+/// is ever built).
+///
+/// Determinism: `sum` accumulates in `observe` order, so callers must feed
+/// samples in a schedule-independent order (device-id order, like every
+/// other fold in the trainer — see `coordinator::engine`). `min`/`max`
+/// over finite non-NaN samples are order-independent, so they are
+/// bit-stable under any feed order.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamFold {
+    n: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for StreamFold {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StreamFold {
+    /// An empty fold.
+    pub fn new() -> Self {
+        StreamFold {
+            n: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Fold one sample in.
+    pub fn observe(&mut self, v: f64) {
+        self.n += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Merge another fold in (for sharded reductions: merge shard folds in
+    /// shard order to keep `sum` bit-stable).
+    pub fn merge(&mut self, other: &StreamFold) {
+        self.n += other.n;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Samples folded.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Running sum (in observe order).
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Mean, or `0.0` for an empty fold.
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    /// Minimum, or `default` for an empty fold.
+    pub fn min_or(&self, default: f64) -> f64 {
+        if self.n == 0 {
+            default
+        } else {
+            self.min
+        }
+    }
+
+    /// Maximum, or `default` for an empty fold.
+    pub fn max_or(&self, default: f64) -> f64 {
+        if self.n == 0 {
+            default
+        } else {
+            self.max
+        }
+    }
+}
 
 /// Everything measured in one communication round.
 #[derive(Debug, Clone)]
@@ -218,6 +313,65 @@ impl TrainingHistory {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn stream_fold_basics() {
+        let mut f = StreamFold::new();
+        assert_eq!(f.count(), 0);
+        assert_eq!(f.mean(), 0.0);
+        assert_eq!(f.min_or(7.0), 7.0);
+        assert_eq!(f.max_or(0.0), 0.0);
+        for v in [3.0, 1.0, 2.0] {
+            f.observe(v);
+        }
+        assert_eq!(f.count(), 3);
+        assert_eq!(f.sum(), 6.0);
+        assert_eq!(f.mean(), 2.0);
+        assert_eq!(f.min_or(0.0), 1.0);
+        assert_eq!(f.max_or(0.0), 3.0);
+    }
+
+    #[test]
+    fn stream_fold_matches_materialized_fold_bitwise() {
+        // the fold must be bit-identical to the vector it replaces:
+        // sum in feed order, max order-independent
+        let xs: Vec<f64> = (0..1000).map(|i| (i as f64) * 0.001 + 1.0 / (i + 1) as f64).collect();
+        let mut f = StreamFold::new();
+        let mut sum = 0.0f64;
+        let mut mx = 0.0f64;
+        for &x in &xs {
+            f.observe(x);
+            sum += x;
+            mx = mx.max(x);
+        }
+        assert_eq!(f.sum().to_bits(), sum.to_bits());
+        // non-negative samples: NEG_INFINITY seed folds to the same max
+        // as a 0.0 seed
+        assert_eq!(f.max_or(0.0).to_bits(), mx.to_bits());
+    }
+
+    #[test]
+    fn stream_fold_merge_in_shard_order_is_bit_stable() {
+        let xs: Vec<f64> = (0..64).map(|i| 0.1 * i as f64).collect();
+        let mut whole = StreamFold::new();
+        for &x in &xs {
+            whole.observe(x);
+        }
+        let mut merged = StreamFold::new();
+        for shard in xs.chunks(16) {
+            let mut f = StreamFold::new();
+            for &x in shard {
+                f.observe(x);
+            }
+            merged.merge(&f);
+        }
+        assert_eq!(merged.count(), whole.count());
+        // shard-ordered merge reassociates the sum the same way the
+        // engine's shard fold does; min/max are exactly order-independent
+        assert_eq!(merged.min_or(0.0).to_bits(), whole.min_or(0.0).to_bits());
+        assert_eq!(merged.max_or(0.0).to_bits(), whole.max_or(0.0).to_bits());
+        assert!((merged.sum() - whole.sum()).abs() < 1e-9);
+    }
 
     fn mk(round: usize, acc: f64, bytes: u64) -> RoundMetrics {
         RoundMetrics {

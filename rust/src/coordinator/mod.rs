@@ -68,6 +68,6 @@ pub mod metrics;
 pub mod trainer;
 
 pub use aggregate::{fedavg, fedavg_sharded};
-pub use engine::{effective_workers, run_sharded};
-pub use metrics::{RoundMetrics, TrainingHistory};
+pub use engine::{effective_workers, run_sharded, run_sharded_indexed};
+pub use metrics::{RoundMetrics, StreamFold, TrainingHistory};
 pub use trainer::{TrainOutcome, Trainer};

@@ -13,15 +13,16 @@ use crate::rng::{derive_seed, stream, Pcg32};
 use crate::runtime::{ExecutorHandle, ExecutorStats, HostTensor, ResidentSession};
 use crate::tensor::Tensor;
 use crate::transport::{
-    assign_profiles, build_scheduler, CommStats, DeviceId, DeviceProfile, Direction, Link,
-    RoundOps, RoundReport, RoundScheduler, ServerOut, UplinkMode, UplinkMsg,
+    assign_profiles, build_scheduler, CommStats, DeviceId, DeviceProfile, Direction,
+    DownlinkMode, Link, RoundOps, RoundReport, RoundScheduler, ServerOut, UplinkMode,
+    UplinkMsg,
 };
 use anyhow::{Context, Result};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use super::engine;
-use super::metrics::{RoundMetrics, TrainingHistory};
+use super::metrics::{RoundMetrics, StreamFold, TrainingHistory};
 
 /// Per-device state owned by the trainer across rounds. Everything a
 /// worker thread needs for the fan-out/fan-in phases lives here (own
@@ -129,6 +130,17 @@ pub struct Trainer {
     resident: Option<ResidentSession>,
     /// Reusable per-round participant buffer (client sampling).
     participants: Vec<usize>,
+    /// Reusable per-round completion mask, global device ids. Participants
+    /// start a round `true`; the scheduler retracts stragglers through
+    /// [`RoundOps::cancel`], so the mask is exact when `run_round` returns
+    /// ([`RoundReport`] itself carries only counts — no per-device vector
+    /// is materialized at fleet scale).
+    completed_mask: Vec<bool>,
+    /// Reusable per-round FedAvg weight buffer.
+    fedavg_weights: Vec<f64>,
+    /// Reusable participant-local → global index buffer for the sharded
+    /// batch dispatch (`engine::run_sharded_indexed`).
+    scratch_idx: Vec<usize>,
     /// Sum of per-round communication makespans (the satellite fix: the
     /// run-level makespan is per-round accounting, not a lifetime max).
     makespan_total_s: f64,
@@ -269,6 +281,9 @@ impl Trainer {
             n_client_params: n_client,
             resident,
             participants: Vec::new(),
+            completed_mask: Vec::new(),
+            fedavg_weights: Vec::new(),
+            scratch_idx: Vec::new(),
             makespan_total_s: 0.0,
         })
     }
@@ -369,6 +384,16 @@ impl Trainer {
             .sampling
             .draw_into(self.cfg.seed, round, self.cfg.devices, &mut self.participants);
 
+        // Participants start the round marked complete; the scheduler
+        // retracts stragglers through `RoundOps::cancel`, so the mask is
+        // exact when `run_round` returns. Unsampled devices stay `false`
+        // and carry zero FedAvg weight.
+        self.completed_mask.clear();
+        self.completed_mask.resize(self.devices.len(), false);
+        for &g in &self.participants {
+            self.completed_mask[g] = true;
+        }
+
         // The scheduler drives the round through the RoundOps interface;
         // disjoint-field borrows let it run against the device table while
         // the scheduler itself stays borrowed from self.
@@ -378,6 +403,8 @@ impl Trainer {
             let mut ops = TrainerRoundOps {
                 devices: &mut self.devices[..],
                 participants,
+                completed: &mut self.completed_mask[..],
+                idx: &mut self.scratch_idx,
                 exec: &self.exec,
                 codec: self.codec.as_ref(),
                 cfg: &self.cfg,
@@ -390,13 +417,6 @@ impl Trainer {
             self.scheduler.run_round(&mut ops)?
         };
 
-        // Expand the scheduler's participant-local completion vector back
-        // to the full fleet: unsampled devices carry zero FedAvg weight.
-        let mut completed = vec![false; self.devices.len()];
-        for (local, &global) in self.participants.iter().enumerate() {
-            completed[global] = report.completed[local];
-        }
-
         // SplitFed aggregation, weighted by shard sizes, over devices that
         // completed the round (stragglers dropped by the policy — and
         // devices not sampled into the round — sit this aggregation out
@@ -406,23 +426,26 @@ impl Trainer {
         // sequential fold (see `aggregate::fedavg_sharded`). The fast path
         // folds the resident slots in place with the identical arithmetic
         // (see `ResidentSession::fedavg`).
-        let weights: Vec<f64> = self
-            .devices
-            .iter()
-            .enumerate()
-            .map(|(i, d)| if completed[i] { d.shard_len as f64 } else { 0.0 })
-            .collect();
-        if weights.iter().sum::<f64>() > 0.0 {
+        let mask = &self.completed_mask;
+        let devices = &self.devices;
+        self.fedavg_weights.clear();
+        self.fedavg_weights.extend(
+            devices
+                .iter()
+                .enumerate()
+                .map(|(i, d)| if mask[i] { d.shard_len as f64 } else { 0.0 }),
+        );
+        if self.fedavg_weights.iter().sum::<f64>() > 0.0 {
             if let Some(res) = &self.resident {
-                res.fedavg(&weights)?;
+                res.fedavg(&self.fedavg_weights)?;
             } else {
                 let cps: Vec<Vec<HostTensor>> =
                     self.devices.iter().map(|d| d.cp.clone()).collect();
                 let cms: Vec<Vec<HostTensor>> =
                     self.devices.iter().map(|d| d.cm.clone()).collect();
                 self.client = (
-                    super::aggregate::fedavg_sharded(&cps, &weights, workers)?,
-                    super::aggregate::fedavg_sharded(&cms, &weights, workers)?,
+                    super::aggregate::fedavg_sharded(&cps, &self.fedavg_weights, workers)?,
+                    super::aggregate::fedavg_sharded(&cms, &self.fedavg_weights, workers)?,
                 );
             }
         } else {
@@ -547,7 +570,8 @@ impl Trainer {
             server_steps,
             sim_round_s,
             queue_wait_s: 0.0,
-            completed: vec![true; self.participants.len()],
+            n_devices: self.participants.len(),
+            completed: self.participants.len(),
         };
         let sampled = self.participants.len() as u64;
         self.finish_round(round, t0, &report, up0, down0, sampled)
@@ -570,13 +594,18 @@ impl Trainer {
         let (test_loss, test_acc) = self.evaluate()?;
         let (mut up1, mut down1) = (0u64, 0u64);
         // per-round makespan from the round-busy snapshot counters (the
-        // CommStats::makespan_s fix: never derived from lifetime busy_s)
-        let mut makespan = 0.0f64;
+        // CommStats::makespan_s fix: never derived from lifetime busy_s),
+        // folded in device-id order as a streaming reduction — no
+        // per-device vector is ever built (fleet-scale discipline; busy
+        // times are non-negative, so the fold's max is bit-identical to
+        // the historical 0.0-seeded running max)
+        let mut busy = StreamFold::new();
         for d in &self.devices {
             up1 += d.link.uplink_bytes;
             down1 += d.link.downlink_bytes;
-            makespan = makespan.max(d.link.round_busy_s);
+            busy.observe(d.link.round_busy_s);
         }
+        let makespan = busy.max_or(0.0);
         self.makespan_total_s += makespan;
         Ok(RoundMetrics {
             round,
@@ -690,6 +719,13 @@ struct TrainerRoundOps<'a> {
     devices: &'a mut [DeviceCtx],
     /// Global device ids participating this round, ascending.
     participants: &'a [usize],
+    /// Per-round completion mask over **global** device ids (owned by the
+    /// trainer, round-persistent). Participants enter `true`;
+    /// [`RoundOps::cancel`] retracts.
+    completed: &'a mut [bool],
+    /// Round-persistent participant-local → global index staging for the
+    /// sharded batch dispatch (`engine::run_sharded_indexed`).
+    idx: &'a mut Vec<usize>,
     exec: &'a ExecutorHandle,
     codec: &'a dyn ActivationCodec,
     cfg: &'a ExperimentConfig,
@@ -702,20 +738,13 @@ struct TrainerRoundOps<'a> {
 }
 
 impl TrainerRoundOps<'_> {
-    /// Disjoint `&mut` handles for a scheduler-chosen device batch
-    /// (participant-local ids), in batch order (panics on duplicates — a
-    /// scheduler bug).
-    fn batch_refs(&mut self, devs: &[DeviceId]) -> Vec<&mut DeviceCtx> {
+    /// Stage the global ids behind a participant-local batch into the
+    /// round-persistent index buffer (duplicates are a scheduler bug —
+    /// debug-asserted inside `run_sharded_indexed`).
+    fn stage_idx(&mut self, devs: &[DeviceId]) {
         let participants = self.participants;
-        let mut by_id: Vec<Option<&mut DeviceCtx>> =
-            self.devices.iter_mut().map(Some).collect();
-        devs.iter()
-            .map(|&d| {
-                by_id[participants[d]]
-                    .take()
-                    .expect("duplicate device in scheduler batch")
-            })
-            .collect()
+        self.idx.clear();
+        self.idx.extend(devs.iter().map(|&d| participants[d]));
     }
 
     /// The device behind a participant-local id.
@@ -758,7 +787,28 @@ impl RoundOps for TrainerRoundOps<'_> {
             .charge(Direction::Uplink, 0, busy_s);
     }
 
-    fn fanout(&mut self, devs: &[DeviceId]) -> Result<Vec<UplinkMsg>> {
+    fn shared_downlink_bps(&self) -> Option<f64> {
+        match self.cfg.downlink {
+            DownlinkMode::Private => None,
+            DownlinkMode::Shared => Some(self.cfg.shared_downlink_capacity_bps()),
+        }
+    }
+
+    fn downlink_latency_s(&self, dev: DeviceId) -> f64 {
+        self.dev(dev).profile.link.latency_s
+    }
+
+    fn charge_downlink(&mut self, dev: DeviceId, busy_s: f64) {
+        self.devices[self.participants[dev]]
+            .link
+            .charge(Direction::Downlink, 0, busy_s);
+    }
+
+    fn cohorts(&self) -> usize {
+        self.cfg.cohorts
+    }
+
+    fn fanout(&mut self, devs: &[DeviceId], out: &mut Vec<UplinkMsg>) -> Result<()> {
         let exec = self.exec;
         let codec = self.codec;
         let cfg = self.cfg;
@@ -766,18 +816,22 @@ impl RoundOps for TrainerRoundOps<'_> {
         let train = self.train;
         let resident = self.resident;
         let workers = self.workers;
-        let zero = UplinkMsg {
-            wire_bytes: 0,
-            cost_s: 0.0,
-        };
-        let mut items: Vec<(&mut DeviceCtx, UplinkMsg)> =
-            self.batch_refs(devs).into_iter().map(|d| (d, zero)).collect();
-        engine::run_sharded(&mut items, workers, |_, item| {
-            item.1 =
-                device_fanout_impl(&mut *item.0, resident, exec, codec, cfg, preset, train)?;
-            Ok(())
-        })?;
-        Ok(items.into_iter().map(|(_, msg)| msg).collect())
+        self.stage_idx(devs);
+        out.clear();
+        out.resize(
+            devs.len(),
+            UplinkMsg {
+                wire_bytes: 0,
+                cost_s: 0.0,
+            },
+        );
+        engine::run_sharded_indexed(
+            &mut *self.devices,
+            &self.idx[..],
+            &mut out[..],
+            workers,
+            |_, dev| device_fanout_impl(dev, resident, exec, codec, cfg, preset, train),
+        )
     }
 
     fn server_step(&mut self, dev: DeviceId) -> Result<ServerOut> {
@@ -799,14 +853,22 @@ impl RoundOps for TrainerRoundOps<'_> {
         let preset = self.preset;
         let resident = self.resident;
         let workers = self.workers;
-        let mut items = self.batch_refs(devs);
-        engine::run_sharded(&mut items, workers, |_, dev| {
-            device_fanin_impl(&mut **dev, resident, exec, codec, cfg, preset)
-        })
+        self.stage_idx(devs);
+        // zero-sized results: `vec![(); n]` never touches the heap
+        let mut units = vec![(); devs.len()];
+        engine::run_sharded_indexed(
+            &mut *self.devices,
+            &self.idx[..],
+            &mut units[..],
+            workers,
+            |_, dev| device_fanin_impl(dev, resident, exec, codec, cfg, preset),
+        )
     }
 
     fn cancel(&mut self, dev: DeviceId) {
-        self.devices[self.participants[dev]].pending = None;
+        let global = self.participants[dev];
+        self.devices[global].pending = None;
+        self.completed[global] = false;
     }
 }
 
@@ -921,24 +983,23 @@ fn server_step_impl(
         let (loss_f32, correct) =
             res.server_step(act, &dev.y_buf, cfg.lr, freq_grad, &mut dev.wire)?;
         let batch = dev.y_buf.len() as u64;
-        let downlink_s = if cfg.compress_gradients {
+        let (downlink_s, wire_bytes) = if cfg.compress_gradients {
             let mut payload = Payload::empty();
             payload.body = dev.scratch.take_body();
             codec.compress_into(&dev.wire, &mut dev.codec_rng, &mut dev.scratch, &mut payload)?;
-            let t = dev
-                .link
-                .transfer(Direction::Downlink, payload.wire_bytes());
+            let wire = payload.wire_bytes();
+            let t = downlink_send(dev, cfg, wire);
             step.grad = Some(GradMsg::Compressed(payload));
-            t
+            (t, wire)
         } else {
-            let t = dev
-                .link
-                .transfer(Direction::Downlink, dev.wire.numel() * 4);
+            let wire = dev.wire.numel() * 4;
+            let t = downlink_send(dev, cfg, wire);
             step.grad = Some(GradMsg::Stashed);
-            t
+            (t, wire)
         };
         return Ok(ServerOut {
             downlink_s,
+            wire_bytes,
             loss: loss_f32 as f64,
             correct,
             samples: batch,
@@ -982,7 +1043,7 @@ fn server_step_impl(
 
     // downlink gradient
     let batch = y.numel() as u64;
-    let downlink_s = if cfg.compress_gradients {
+    let (downlink_s, wire_bytes) = if cfg.compress_gradients {
         let g = if freq { gact_dct } else { gact };
         let mut payload = Payload::empty();
         payload.body = dev.scratch.take_body();
@@ -992,22 +1053,40 @@ fn server_step_impl(
             &mut dev.scratch,
             &mut payload,
         )?;
-        let t = dev
-            .link
-            .transfer(Direction::Downlink, payload.wire_bytes());
+        let wire = payload.wire_bytes();
+        let t = downlink_send(dev, cfg, wire);
         step.grad = Some(GradMsg::Compressed(payload));
-        t
+        (t, wire)
     } else {
-        let t = dev.link.transfer(Direction::Downlink, gact.raw_bytes());
+        let wire = gact.raw_bytes();
+        let t = downlink_send(dev, cfg, wire);
         step.grad = Some(GradMsg::Raw(gact));
-        t
+        (t, wire)
     };
     Ok(ServerOut {
         downlink_s,
+        wire_bytes,
         loss,
         correct,
         samples: batch,
     })
+}
+
+/// Downlink send accounting, symmetric to the uplink side of
+/// [`device_fanout_impl`]: private mode charges the device link for the
+/// full transfer and returns its duration; `downlink = "shared"` mode
+/// charges the bytes at send time (they count even if a deadline later
+/// abandons the flow mid-pipe) and returns `0.0` — the fair-share model
+/// decides the duration and the scheduler adds the occupancy seconds at
+/// drain via [`RoundOps::charge_downlink`].
+fn downlink_send(dev: &mut DeviceCtx, cfg: &ExperimentConfig, wire_bytes: usize) -> f64 {
+    match cfg.downlink {
+        DownlinkMode::Private => dev.link.transfer(Direction::Downlink, wire_bytes),
+        DownlinkMode::Shared => {
+            dev.link.charge(Direction::Downlink, wire_bytes, 0.0);
+            0.0
+        }
+    }
 }
 
 /// Fan-in body (shared by all modes): gradient decode + client backward.

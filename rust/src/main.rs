@@ -17,6 +17,8 @@
 //!     --deadline-s 0.5 --devices 64
 //! slfac train --scheduler async --devices 128 --uplink shared \
 //!     --shared-uplink-mbps 100 --server-service-s 0.002 --sample-fraction 0.25
+//! slfac train --scheduler async --devices 100000 --cohorts 2 --profile wifi/lte
+//! slfac train --devices 64 --downlink shared --shared-downlink-mbps 200
 //! slfac inspect --artifacts artifacts
 //! slfac bench-codec --shape 32x16x14x14
 //! ```
@@ -25,7 +27,7 @@ use anyhow::{Context, Result};
 use slfac::cli::{CliError, Command, Matches};
 use slfac::codec;
 use slfac::config::{DatasetKind, ExperimentConfig, Partition, SyncMode};
-use slfac::transport::{ClientSampling, SchedulerKind, StragglerPolicy, UplinkMode};
+use slfac::transport::{ClientSampling, DownlinkMode, SchedulerKind, StragglerPolicy, UplinkMode};
 
 fn cli() -> Command {
     Command::new("slfac", "SL-FAC: communication-efficient split learning")
@@ -72,6 +74,20 @@ fn cli() -> Command {
                     "shared-uplink-mbps",
                     "MBPS",
                     "shared pipe capacity (default: uplink_mbps)",
+                    None,
+                )
+                .opt("downlink", "MODE", "downlink contention: private | shared", None)
+                .opt(
+                    "shared-downlink-mbps",
+                    "MBPS",
+                    "shared server-egress capacity (default: downlink_mbps)",
+                    None,
+                )
+                .opt(
+                    "cohorts",
+                    "N",
+                    "cohort-compressed rounds for fleet scale (0 = per-device; \
+                     results are bit-identical either way)",
                     None,
                 )
                 .opt("server-service-s", "SECS", "simulated server time per batch", None)
@@ -210,6 +226,18 @@ fn build_config(m: &Matches) -> Result<ExperimentConfig> {
         .map_err(anyhow::Error::msg)?
     {
         cfg.shared_uplink_bps = Some(mbps * 1e6);
+    }
+    if let Some(d) = m.get("downlink") {
+        cfg.downlink = DownlinkMode::parse(d)?;
+    }
+    if let Some(mbps) = m
+        .get_parsed::<f64>("shared-downlink-mbps")
+        .map_err(anyhow::Error::msg)?
+    {
+        cfg.shared_downlink_bps = Some(mbps * 1e6);
+    }
+    if let Some(c) = m.get_parsed::<usize>("cohorts").map_err(anyhow::Error::msg)? {
+        cfg.cohorts = c;
     }
     if let Some(s) = m
         .get_parsed::<f64>("server-service-s")

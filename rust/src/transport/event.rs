@@ -64,9 +64,55 @@ pub enum Event {
         /// 0-based local step within the round.
         step: usize,
     },
+    /// The server begins transmitting `bytes` of gradient on the **shared**
+    /// downlink pipe toward this event's device. Only emitted in
+    /// `downlink = "shared"` mode — the egress twin of
+    /// [`Event::UplinkStart`].
+    DownlinkStart {
+        /// 0-based local step within the round.
+        step: usize,
+        /// Exact wire bytes of the gradient payload entering the pipe.
+        bytes: usize,
+    },
+    /// Shared-downlink drain prediction — the egress twin of
+    /// [`Event::SharedDrain`], with the same lazy generation invalidation.
+    DownDrain {
+        /// Downlink-pipe generation this prediction was made under.
+        generation: u64,
+    },
     /// The device finished the client-backward of its last local step —
     /// its round participation is complete.
     DeviceDone,
+    /// Cohort-compressed uplink arrival: `len` devices' uplinks landed at
+    /// this same instant. Members live at `arena[off .. off + len]` in the
+    /// scheduler's round arena, **in push order** — replaying them in that
+    /// order reproduces the per-device event sequence exactly (same-time
+    /// per-device pushes are consecutive in seq, so no foreign event can
+    /// interleave). The arena entry carries `(device, step)`.
+    UplinkBatch {
+        /// Start offset into the scheduler's member arena.
+        off: u32,
+        /// Member count.
+        len: u32,
+    },
+    /// Cohort-compressed downlink arrival — the grouped twin of
+    /// [`Event::DownlinkArrived`], same arena contract as
+    /// [`Event::UplinkBatch`].
+    DownlinkBatch {
+        /// Start offset into the scheduler's member arena.
+        off: u32,
+        /// Member count.
+        len: u32,
+    },
+    /// Cohort-compressed device completion — the grouped twin of
+    /// [`Event::DeviceDone`], same arena contract as
+    /// [`Event::UplinkBatch`].
+    DoneBatch {
+        /// Start offset into the scheduler's member arena.
+        off: u32,
+        /// Member count.
+        len: u32,
+    },
 }
 
 /// One scheduled event: `(time, seq)` is the total order.
@@ -184,6 +230,18 @@ impl EventQueue {
 /// With `service_s = 0` every acquire starts exactly at `ready_t` and
 /// waits zero seconds — the pre-contention "infinitely fast server"
 /// behavior, bit-for-bit (`x + 0.0 == x` for every non-negative time).
+///
+/// # Round-boundary semantics
+///
+/// Server busy time does **not** carry across rounds. When a straggler
+/// policy closes a round early, `EventQueue::clear` abandons the in-flight
+/// events — but batches already `acquire`d pushed `free_t` forward, and
+/// letting that busy window leak into the next round would charge round
+/// `r + 1` queue wait for work round `r` abandoned. The pinned semantics
+/// are *fresh server per round*: schedulers call [`ServerResource::reset`]
+/// (or construct a new resource) at every round start, so `free_t` starts
+/// at 0 alongside the round's event clock. See ARCHITECTURE.md, "Fleet
+/// scale".
 #[derive(Debug, Default)]
 pub struct ServerResource {
     /// Per-batch service cost in simulated seconds (≥ 0, finite).
@@ -218,6 +276,14 @@ impl ServerResource {
     /// Instant the server next becomes idle.
     pub fn free_t(&self) -> f64 {
         self.free_t
+    }
+
+    /// Forget all accepted work: the server is idle again at t = 0. Called
+    /// at round start so busy time from batches a straggler policy
+    /// abandoned (`EventQueue::clear`) never leaks into the next round —
+    /// the round-boundary semantics pinned in the type-level docs.
+    pub fn reset(&mut self) {
+        self.free_t = 0.0;
     }
 }
 
@@ -316,6 +382,28 @@ mod tests {
     #[should_panic(expected = "service time")]
     fn server_resource_rejects_nan_service() {
         ServerResource::new(f64::NAN);
+    }
+
+    #[test]
+    fn server_busy_time_does_not_leak_across_rounds() {
+        // Regression for the abandoned-batch leak: a round the straggler
+        // policy closes early clears the event queue, but batches already
+        // acquired pushed free_t far into the future. Without the
+        // round-start reset, the *next* round's first batch would queue
+        // behind work that was abandoned — here, 99 s of phantom wait.
+        let mut q = EventQueue::new();
+        let mut s = ServerResource::new(100.0);
+        let (start, end) = s.acquire(1.0);
+        assert_eq!((start, end), (1.0, 101.0));
+        q.push(end, 0, Event::DownlinkArrived { step: 0 });
+        // deadline closes the round: events abandoned, server state stale
+        q.clear();
+        assert_eq!(s.free_t(), 101.0, "free_t still holds the abandoned batch");
+        // pinned semantics: fresh server per round
+        s.reset();
+        assert_eq!(s.free_t(), 0.0);
+        let (start, end) = s.acquire(2.0);
+        assert_eq!((start, end), (2.0, 102.0), "no phantom queue wait in round r+1");
     }
 
     #[test]

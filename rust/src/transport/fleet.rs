@@ -1,0 +1,280 @@
+//! Training-free round harness for fleet-scale simulation.
+//!
+//! [`FleetOps`] implements [`RoundOps`] over compact per-cohort cost
+//! tables instead of real devices: device `d` takes its compute time,
+//! transfer costs, and wire sizes from cohort `d % k`. No model state, no
+//! codec, no links — just the exact numbers the schedulers consume. That
+//! makes it the harness of choice for
+//!
+//! * the `SLFAC_BENCH_ONLY=fleet` bench, which drives rounds at 10k /
+//!   100k / 1M devices (a [`FleetOps`] is a few vectors, so a
+//!   million-device fleet costs megabytes, not gigabytes), and
+//! * the fleet equivalence tests, which run the *same* ops instance
+//!   through the cohort-compressed and per-device scheduler paths and
+//!   demand bit-identical [`RoundReport`]s and byte counters.
+//!
+//! Losses are a pure function of the device id, so the report's
+//! `loss_sum` — an order-dependent f64 fold — pins the server processing
+//! *order*, not just the set of processed steps.
+//!
+//! [`RoundReport`]: super::scheduler::RoundReport
+
+use super::scheduler::{RoundOps, ServerOut, UplinkMsg};
+use super::DeviceId;
+use anyhow::Result;
+
+/// Per-cohort simulation costs (everything [`RoundOps`] reports about a
+/// device, keyed by `device % cohorts`).
+#[derive(Debug, Clone, Copy)]
+pub struct FleetCohort {
+    /// Simulated seconds per fan-out / fan-in compute phase.
+    pub compute_s: f64,
+    /// Private-uplink transfer seconds per step.
+    pub uplink_cost_s: f64,
+    /// Private-downlink transfer seconds per step.
+    pub downlink_s: f64,
+    /// Uplink payload wire bytes per step.
+    pub uplink_bytes: usize,
+    /// Downlink payload wire bytes per step.
+    pub downlink_bytes: usize,
+}
+
+impl Default for FleetCohort {
+    fn default() -> Self {
+        FleetCohort {
+            compute_s: 0.002,
+            uplink_cost_s: 0.010,
+            downlink_s: 0.005,
+            uplink_bytes: 12_000,
+            downlink_bytes: 6_000,
+        }
+    }
+}
+
+/// A synthetic fleet: `devices` devices cycling through a short table of
+/// [`FleetCohort`] cost profiles (the same round-robin assignment
+/// [`super::profile::assign_profiles`] uses, so `cohorts` matches the
+/// number of distinct profiles exactly).
+#[derive(Debug, Clone)]
+pub struct FleetOps {
+    devices: usize,
+    steps: usize,
+    server_service_s: f64,
+    /// What [`RoundOps::cohorts`] reports: `0` keeps the schedulers on
+    /// their per-device paths, any positive value switches them to the
+    /// cohort-compressed paths (bit-identical either way).
+    cohorts: usize,
+    profiles: Vec<FleetCohort>,
+    /// Fan-out messages produced (one per device per step dispatched).
+    pub fanout_msgs: u64,
+    /// Server steps executed.
+    pub server_steps: u64,
+    /// Fan-in completions.
+    pub fanin_msgs: u64,
+    /// Devices cancelled by the straggler policy.
+    pub cancelled: u64,
+    /// Total uplink payload bytes put on the wire.
+    pub uplink_bytes_total: u64,
+    /// Total downlink payload bytes put on the wire.
+    pub downlink_bytes_total: u64,
+}
+
+impl FleetOps {
+    /// A fleet cycling through the given cost profiles (`device %
+    /// profiles.len()`). Starts on the per-device scheduler paths; opt
+    /// into cohort compression with [`FleetOps::set_cohorts`].
+    pub fn new(devices: usize, steps: usize, profiles: Vec<FleetCohort>) -> Self {
+        assert!(!profiles.is_empty(), "a fleet needs at least one cohort profile");
+        FleetOps {
+            devices,
+            steps,
+            server_service_s: 0.0,
+            cohorts: 0,
+            profiles,
+            fanout_msgs: 0,
+            server_steps: 0,
+            fanin_msgs: 0,
+            cancelled: 0,
+            uplink_bytes_total: 0,
+            downlink_bytes_total: 0,
+        }
+    }
+
+    /// A single-profile (homogeneous) fleet with the default costs.
+    pub fn homogeneous(devices: usize, steps: usize) -> Self {
+        FleetOps::new(devices, steps, vec![FleetCohort::default()])
+    }
+
+    /// Select the scheduler path: `0` = per-device, `> 0` = cohort-compressed
+    /// (the value sizes the event-grouping table; the natural choice is
+    /// the profile count).
+    pub fn set_cohorts(&mut self, cohorts: usize) {
+        self.cohorts = cohorts;
+    }
+
+    /// Serial server occupancy per batch (default `0.0`).
+    pub fn set_server_service_s(&mut self, s: f64) {
+        self.server_service_s = s;
+    }
+
+    /// Zero the dispatch/byte counters (reports stay comparable across
+    /// repeated rounds on one instance).
+    pub fn reset_counters(&mut self) {
+        self.fanout_msgs = 0;
+        self.server_steps = 0;
+        self.fanin_msgs = 0;
+        self.cancelled = 0;
+        self.uplink_bytes_total = 0;
+        self.downlink_bytes_total = 0;
+    }
+
+    /// The counter snapshot the equivalence tests compare.
+    pub fn counters(&self) -> (u64, u64, u64, u64, u64, u64) {
+        (
+            self.fanout_msgs,
+            self.server_steps,
+            self.fanin_msgs,
+            self.cancelled,
+            self.uplink_bytes_total,
+            self.downlink_bytes_total,
+        )
+    }
+
+    fn profile(&self, dev: DeviceId) -> &FleetCohort {
+        &self.profiles[dev % self.profiles.len()]
+    }
+}
+
+impl RoundOps for FleetOps {
+    fn n_devices(&self) -> usize {
+        self.devices
+    }
+
+    fn steps(&self) -> usize {
+        self.steps
+    }
+
+    fn compute_s(&self, dev: DeviceId) -> f64 {
+        self.profile(dev).compute_s
+    }
+
+    fn server_service_s(&self) -> f64 {
+        self.server_service_s
+    }
+
+    fn cohorts(&self) -> usize {
+        self.cohorts
+    }
+
+    fn fanout(&mut self, devs: &[DeviceId], out: &mut Vec<UplinkMsg>) -> Result<()> {
+        out.clear();
+        for &d in devs {
+            let p = self.profiles[d % self.profiles.len()];
+            out.push(UplinkMsg {
+                wire_bytes: p.uplink_bytes,
+                cost_s: p.uplink_cost_s,
+            });
+            self.uplink_bytes_total += p.uplink_bytes as u64;
+        }
+        self.fanout_msgs += devs.len() as u64;
+        Ok(())
+    }
+
+    fn server_step(&mut self, dev: DeviceId) -> Result<ServerOut> {
+        let p = *self.profile(dev);
+        self.server_steps += 1;
+        self.downlink_bytes_total += p.downlink_bytes as u64;
+        Ok(ServerOut {
+            downlink_s: p.downlink_s,
+            wire_bytes: p.downlink_bytes,
+            // device-dependent loss: the report's f64 fold pins the
+            // server processing order
+            loss: 1.0 + (dev % 1021) as f64 * 1e-3,
+            correct: (dev % 3 == 0) as u64,
+            samples: 1,
+        })
+    }
+
+    fn fanin(&mut self, devs: &[DeviceId]) -> Result<()> {
+        self.fanin_msgs += devs.len() as u64;
+        Ok(())
+    }
+
+    fn cancel(&mut self, _dev: DeviceId) {
+        self.cancelled += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scheduler::{AsyncEventScheduler, RoundScheduler, SyncEventScheduler};
+    use super::super::StragglerPolicy;
+    use super::*;
+
+    fn het(devices: usize, steps: usize) -> FleetOps {
+        FleetOps::new(
+            devices,
+            steps,
+            vec![
+                FleetCohort {
+                    compute_s: 0.001,
+                    uplink_cost_s: 0.008,
+                    downlink_s: 0.004,
+                    uplink_bytes: 10_000,
+                    downlink_bytes: 5_000,
+                },
+                FleetCohort {
+                    compute_s: 0.004,
+                    uplink_cost_s: 0.030,
+                    downlink_s: 0.015,
+                    uplink_bytes: 40_000,
+                    downlink_bytes: 20_000,
+                },
+            ],
+        )
+    }
+
+    #[test]
+    fn cohort_and_per_device_paths_agree_bitwise() {
+        let run = |sched: &dyn RoundScheduler, cohorts: usize| {
+            let mut ops = het(48, 3);
+            ops.set_cohorts(cohorts);
+            ops.set_server_service_s(0.0005);
+            let r = sched.run_round(&mut ops).unwrap();
+            (
+                r.loss_sum.to_bits(),
+                r.sim_round_s.to_bits(),
+                r.queue_wait_s.to_bits(),
+                r.server_steps,
+                r.completed,
+                r.n_devices,
+                ops.counters(),
+            )
+        };
+        let sync = SyncEventScheduler::new();
+        assert_eq!(run(&sync, 2), run(&sync, 0));
+        for policy in [
+            StragglerPolicy::WaitAll,
+            StragglerPolicy::DeadlineDrop { deadline_s: 0.08 },
+            StragglerPolicy::Quorum { k: 30 },
+        ] {
+            let a = AsyncEventScheduler::new(policy);
+            assert_eq!(run(&a, 2), run(&a, 0), "policy {policy:?}");
+        }
+    }
+
+    #[test]
+    fn counters_track_a_full_round() {
+        let mut ops = FleetOps::homogeneous(10, 2);
+        ops.set_cohorts(1);
+        let sched = SyncEventScheduler::new();
+        let r = sched.run_round(&mut ops).unwrap();
+        assert_eq!(r.completed, 10);
+        assert_eq!(ops.fanout_msgs, 20);
+        assert_eq!(ops.server_steps, 20);
+        assert_eq!(ops.fanin_msgs, 20);
+        assert_eq!(ops.cancelled, 0);
+        assert_eq!(ops.uplink_bytes_total, 20 * 12_000);
+        assert_eq!(ops.downlink_bytes_total, 20 * 6_000);
+    }
+}

@@ -24,7 +24,20 @@
 //! — the fluid model the round schedulers drive through start/drain
 //! events. Per-device accounting stays on the [`Link`] (via
 //! [`Link::charge`]); only the *duration* computation moves to the shared
-//! model. Downlinks remain private in either mode.
+//! model.
+//!
+//! # Downlink contention
+//!
+//! Downlinks are private pipes by default ([`DownlinkMode::Private`]). In
+//! [`DownlinkMode::Shared`] the server's egress is one more
+//! [`SharedUplink`] instance (the fluid model is direction-agnostic: it
+//! models "n flows splitting one capacity" and never inspects which way
+//! the bytes move) with capacity `shared_downlink_mbps`, driven by the
+//! schedulers through `DownlinkStart`/`DownDrain` events exactly as the
+//! uplink pipe is driven through `UplinkStart`/`SharedDrain`. The
+//! single-flow == private-cost bit-identity guarantee carries over
+//! unchanged, because it is a property of the model, not of the
+//! direction the bytes move.
 //!
 //! # Round accounting
 //!
@@ -77,6 +90,40 @@ impl UplinkMode {
         match self {
             UplinkMode::Private => "private",
             UplinkMode::Shared => "shared",
+        }
+    }
+}
+
+/// Downlink contention model: the server-egress mirror of [`UplinkMode`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DownlinkMode {
+    /// Each server→device downlink is an independent pipe at the device's
+    /// profile bandwidth (the pre-contention behavior; default).
+    #[default]
+    Private,
+    /// All downlinks share one server-egress pipe of
+    /// `shared_downlink_mbps` capacity; concurrent transfers split it
+    /// fairly (the same [`SharedUplink`] fluid model, pointed the other
+    /// way). Per-device propagation latency still applies per flow;
+    /// per-device downlink bandwidth is ignored.
+    Shared,
+}
+
+impl DownlinkMode {
+    /// Parse from a config/CLI string.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "private" | "per-device" => DownlinkMode::Private,
+            "shared" | "contended" => DownlinkMode::Shared,
+            other => bail!("unknown downlink mode '{other}' (private | shared)"),
+        })
+    }
+
+    /// Stable display name (config key value).
+    pub fn name(&self) -> &'static str {
+        match self {
+            DownlinkMode::Private => "private",
+            DownlinkMode::Shared => "shared",
         }
     }
 }
@@ -224,7 +271,13 @@ pub struct CompletedFlow {
     pub busy_s: f64,
 }
 
-/// Fair-share fluid model of one shared uplink pipe.
+/// Fair-share fluid model of one shared pipe.
+///
+/// Named for its original (uplink) use, but direction-agnostic: the model
+/// is "n concurrent flows split `capacity_bps` fairly" and never inspects
+/// which way the bytes move, so the schedulers instantiate a second one
+/// as the server-egress pipe in `downlink = "shared"` mode
+/// ([`DownlinkMode::Shared`]).
 ///
 /// At any instant, each of the `n` active flows drains at
 /// `capacity_bps / n` bits per second. The active-flow set only changes at
@@ -602,6 +655,40 @@ mod tests {
         for m in [UplinkMode::Private, UplinkMode::Shared] {
             assert_eq!(UplinkMode::parse(m.name()).unwrap(), m);
         }
+    }
+
+    #[test]
+    fn downlink_mode_parses_and_names() {
+        assert_eq!(DownlinkMode::parse("private").unwrap(), DownlinkMode::Private);
+        assert_eq!(DownlinkMode::parse("SHARED").unwrap(), DownlinkMode::Shared);
+        assert_eq!(DownlinkMode::parse("per-device").unwrap(), DownlinkMode::Private);
+        assert_eq!(DownlinkMode::parse("contended").unwrap(), DownlinkMode::Shared);
+        assert!(DownlinkMode::parse("broadcast-tree").is_err());
+        assert_eq!(DownlinkMode::default(), DownlinkMode::Private);
+        for m in [DownlinkMode::Private, DownlinkMode::Shared] {
+            assert_eq!(DownlinkMode::parse(m.name()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn shared_pipe_as_downlink_single_flow_is_bitwise_private_cost() {
+        // the same fluid model serves as the server-egress pipe; a lone
+        // downlink flow must cost bit-for-bit what Link::transfer charges
+        // in the Downlink direction
+        let cfg = LinkConfig {
+            uplink_bps: 40e6,
+            downlink_bps: 16e6,
+            latency_s: 0.007,
+            jitter: 0.0,
+        };
+        let mut private = Link::new(cfg, 9);
+        let want = private.transfer(Direction::Downlink, 321_017);
+        let mut pipe = SharedUplink::new(cfg.downlink_bps);
+        let (_t_drain, gen) = pipe.start(1.5, 5, 2, 321_017, cfg.latency_s);
+        let (done, next) = pipe.complete(gen).expect("live generation");
+        assert!(next.is_none(), "pipe drained");
+        assert_eq!(done.busy_s.to_bits(), want.to_bits(), "single flow == private cost");
+        assert_eq!(done.arrival_t.to_bits(), (1.5 + want).to_bits());
     }
 
     #[test]

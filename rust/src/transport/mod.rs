@@ -19,6 +19,10 @@
 //! * [`policy`] — straggler policies for async rounds (`wait-all`,
 //!   `deadline-drop`, `k`-of-`n` `quorum`) and per-round client sampling
 //!   ([`ClientSampling`]: `sample_fraction` / `sample_k`).
+//! * [`fleet`] — [`FleetOps`], a training-free [`RoundOps`] over compact
+//!   per-cohort cost tables: the harness the fleet-scale benches and
+//!   equivalence tests use to drive million-device rounds without any
+//!   model state.
 //! * [`scheduler`] — the [`RoundScheduler`] trait plus both
 //!   implementations: barriered lockstep re-expressed as events
 //!   ([`SyncEventScheduler`], bit-identical to the pre-transport engine
@@ -29,13 +33,18 @@
 //! compatibility.
 
 pub mod event;
+pub mod fleet;
 pub mod link;
 pub mod policy;
 pub mod profile;
 pub mod scheduler;
 
 pub use event::{DeviceId, Event, EventQueue, Scheduled, ServerResource};
-pub use link::{CommStats, CompletedFlow, Direction, Link, LinkConfig, SharedUplink, UplinkMode};
+pub use fleet::FleetOps;
+pub use link::{
+    CommStats, CompletedFlow, Direction, DownlinkMode, Link, LinkConfig, SharedUplink,
+    UplinkMode,
+};
 pub use policy::{ClientSampling, StragglerPolicy};
 pub use profile::{assign_profiles, DeviceProfile, LinkClass};
 pub use scheduler::{

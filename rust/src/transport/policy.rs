@@ -201,9 +201,12 @@ impl ClientSampling {
     }
 
     /// [`ClientSampling::draw`] into a caller-owned buffer (cleared,
-    /// capacity reused). Full participation — the default — touches
-    /// neither the RNG stream nor the heap once warm; sampled draws still
-    /// allocate inside `sample_indices`. Same draw sequence as `draw`.
+    /// capacity reused). Zero heap allocation once `out` is warm:
+    /// sampled draws use selection sampling (Knuth's Algorithm S), which
+    /// scans the fleet once and emits the subset **already sorted** —
+    /// O(devices) time, O(1) extra space, uniform over k-subsets. The
+    /// draw still depends only on `(seed, stream::SAMPLE, round)`; `Full`
+    /// never touches the RNG stream.
     pub fn draw_into(&self, seed: u64, round: usize, devices: usize, out: &mut Vec<usize>) {
         out.clear();
         let k = self.effective_k(devices);
@@ -212,9 +215,21 @@ impl ClientSampling {
             return;
         }
         let mut rng = Pcg32::derived(seed, stream::SAMPLE, round as u64);
-        let mut picked = rng.sample_indices(devices, k);
-        picked.sort_unstable();
-        out.extend(picked);
+        let mut need = k;
+        for d in 0..devices {
+            // P(select d) = need / left — the classic selection-sampling
+            // invariant; uniform_f64() < 1 guarantees selection whenever
+            // need == left, so exactly k ids are always emitted
+            let left = devices - d;
+            if rng.uniform_f64() * left as f64 < need as f64 {
+                out.push(d);
+                need -= 1;
+                if need == 0 {
+                    break;
+                }
+            }
+        }
+        debug_assert_eq!(out.len(), k);
     }
 }
 

@@ -121,6 +121,14 @@ impl DeviceProfile {
 /// Parse a profile spec (see module docs) and assign one profile per
 /// device. `fallback` is the experiment's base `link` config; its `jitter`
 /// also applies to class presets.
+///
+/// Assignment is **round-robin** (`device % classes`), which is what makes
+/// the fleet-scale `cohorts` knob natural: devices `d` and `d + k·classes`
+/// share a profile, so setting `cohorts` to the class count gives the
+/// schedulers' cohort-compressed paths one group per distinct cost profile
+/// (any value works — it only sizes the event-grouping table; results are
+/// bit-identical regardless — but the class count is the efficient
+/// choice).
 pub fn assign_profiles(
     spec: &str,
     devices: usize,

@@ -36,15 +36,46 @@
 //! device profile's multiplier). Server processing occupies a serial
 //! busy resource for `server_service_s` per batch
 //! ([`super::event::ServerResource`]; `0` = the historical instantaneous
-//! server), and uplink transfer times come either from the private link
-//! cost model ([`super::link`]) or, in `uplink = "shared"` mode, from the
-//! fair-share fluid model ([`super::link::SharedUplink`]) that both
-//! schedulers drive through `UplinkStart`/`SharedDrain` events.
+//! server, and the resource is **fresh every round** — see the
+//! round-boundary semantics on that type). Uplink transfer times come
+//! either from the private link cost model ([`super::link`]) or, in
+//! `uplink = "shared"` mode, from the fair-share fluid model
+//! ([`super::link::SharedUplink`]) that both schedulers drive through
+//! `UplinkStart`/`SharedDrain` events. In `downlink = "shared"` mode the
+//! server's egress is a second instance of the same fluid model, driven
+//! through the mirror-image `DownlinkStart`/`DownDrain` events.
+//!
+//! # Fleet scale: cohort-compressed rounds
+//!
+//! At 1M devices the per-device event queue and the per-round `Vec`
+//! churn dominate. When `RoundOps::cohorts() > 0` and both pipes are
+//! private, the schedulers switch to cohort-compressed control flow that
+//! is **bit-identical** to the per-device path:
+//!
+//! * sync rounds drop the heap entirely — the barrier is a running
+//!   `max` over arrival times (max over finite non-negative f64 is
+//!   order-independent), and the server phase already runs in device-id
+//!   order;
+//! * async rounds group same-instant events: instead of one heap entry
+//!   per device, the queue carries one [`Event::UplinkBatch`] /
+//!   [`Event::DownlinkBatch`] / [`Event::DoneBatch`] entry per *distinct
+//!   arrival instant* within a submission batch, with members parked in a
+//!   round arena in push order. Replaying a group's members in push order
+//!   reproduces the per-device pop sequence exactly: same-time per-device
+//!   pushes within one submission batch are consecutive in seq, so no
+//!   foreign event can interleave between them. A homogeneous fleet of a
+//!   million devices therefore costs O(cohorts) heap traffic per step.
+//!
+//! Both schedulers keep their working state in round-persistent scratch
+//! buffers (behind a `Mutex`, since `run_round` takes `&self`), so the
+//! steady-state round performs no heap allocation — pinned by
+//! `tests/compute_zero_alloc.rs`.
 
 use super::event::{DeviceId, Event, EventQueue, ServerResource};
 use super::link::SharedUplink;
 use super::policy::StragglerPolicy;
 use anyhow::{bail, Result};
+use std::sync::Mutex;
 
 /// Which round scheduler to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -77,8 +108,12 @@ impl SchedulerKind {
 /// What one server step produced (returned by [`RoundOps::server_step`]).
 #[derive(Debug, Clone, Copy)]
 pub struct ServerOut {
-    /// Simulated seconds the downlink transfer took.
+    /// Simulated seconds the downlink transfer took (private mode; `0.0`
+    /// in `downlink = "shared"` mode, where the fair-share model decides).
     pub downlink_s: f64,
+    /// Exact wire bytes of the gradient payload (drives the shared
+    /// downlink pipe; informational in private mode).
+    pub wire_bytes: usize,
     /// Batch loss.
     pub loss: f64,
     /// Correct predictions in the batch.
@@ -106,8 +141,9 @@ pub struct UplinkMsg {
 /// guarantee that).
 ///
 /// The contention-model accessors (`server_service_s`,
-/// `shared_uplink_bps`, `uplink_latency_s`, `charge_uplink`) default to
-/// the pre-contention behavior — instantaneous server, private links — so
+/// `shared_uplink_bps`, `shared_downlink_bps`, latency and charge hooks)
+/// default to the pre-contention behavior — instantaneous server, private
+/// links — and `cohorts` defaults to the per-device control flow, so
 /// simple implementations (mocks, sequential mode) need not override
 /// them.
 pub trait RoundOps {
@@ -133,9 +169,22 @@ pub trait RoundOps {
         None
     }
 
+    /// `Some(capacity_bps)` when all downlinks contend for one shared
+    /// server-egress pipe (`downlink = "shared"`); `None` for private
+    /// per-device downlinks.
+    fn shared_downlink_bps(&self) -> Option<f64> {
+        None
+    }
+
     /// Per-flow propagation latency for `dev`'s uplink in shared mode
     /// (private mode folds latency into the `fanout` cost).
     fn uplink_latency_s(&self, _dev: DeviceId) -> f64 {
+        0.0
+    }
+
+    /// Per-flow propagation latency for `dev`'s downlink in shared mode
+    /// (private mode folds latency into the `server_step` cost).
+    fn downlink_latency_s(&self, _dev: DeviceId) -> f64 {
         0.0
     }
 
@@ -145,10 +194,25 @@ pub trait RoundOps {
     /// deadline abandons mid-pipe still counts its transmitted bytes.)
     fn charge_uplink(&mut self, _dev: DeviceId, _busy_s: f64) {}
 
+    /// Shared-downlink accounting hook — the egress twin of
+    /// [`RoundOps::charge_uplink`], with the same charge-at-send byte
+    /// convention (bytes land in `server_step`, occupancy lands here).
+    fn charge_downlink(&mut self, _dev: DeviceId, _busy_s: f64) {}
+
+    /// Cohort count for cohort-compressed control flow; `0` (the
+    /// default) keeps the per-device event path. Any `> 0` value is
+    /// *exact* — it only sizes the same-instant grouping table, so
+    /// heterogeneous fleets merely group less.
+    fn cohorts(&self) -> usize {
+        0
+    }
+
     /// Client forward + codec encode (+ uplink charge in private mode)
     /// for each listed device (the implementation may fan work across its
-    /// thread pool). Returns each device's [`UplinkMsg`], in `devs` order.
-    fn fanout(&mut self, devs: &[DeviceId]) -> Result<Vec<UplinkMsg>>;
+    /// thread pool). Clears `out` and fills it with each device's
+    /// [`UplinkMsg`], in `devs` order — the buffer is round-persistent
+    /// scheduler scratch, so steady-state rounds allocate nothing.
+    fn fanout(&mut self, devs: &[DeviceId], out: &mut Vec<UplinkMsg>) -> Result<()>;
 
     /// Server decode + train step + downlink charge for one device's
     /// pending uplink.
@@ -162,8 +226,11 @@ pub trait RoundOps {
     fn cancel(&mut self, dev: DeviceId);
 }
 
-/// What one round produced, scheduler-agnostic.
-#[derive(Debug, Clone)]
+/// What one round produced, scheduler-agnostic. Per-device outcomes are
+/// not materialized here (a million-device round would pay O(devices) for
+/// a report) — completion is a running count, and the trainer learns the
+/// identity of dropped devices through [`RoundOps::cancel`].
+#[derive(Debug, Clone, Copy)]
 pub struct RoundReport {
     /// Sum of batch losses over executed server steps (event order).
     pub loss_sum: f64,
@@ -180,15 +247,18 @@ pub struct RoundReport {
     /// resource this round (summed over executed server steps; `0` when
     /// `server_service_s = 0`).
     pub queue_wait_s: f64,
-    /// `completed[d]`: device `d` finished all its steps and participates
-    /// in this round's aggregation.
-    pub completed: Vec<bool>,
+    /// Devices that entered the round.
+    pub n_devices: usize,
+    /// Devices that finished all their steps and participate in this
+    /// round's aggregation. Every other device received a
+    /// [`RoundOps::cancel`].
+    pub completed: usize,
 }
 
 impl RoundReport {
     /// Devices dropped by the straggler policy this round.
     pub fn dropped(&self) -> usize {
-        self.completed.iter().filter(|&&c| !c).count()
+        self.n_devices - self.completed
     }
 }
 
@@ -205,8 +275,8 @@ pub trait RoundScheduler: Send + Sync {
 /// inherently wait-all; the config layer rejects other combinations).
 pub fn build_scheduler(kind: SchedulerKind, policy: StragglerPolicy) -> Box<dyn RoundScheduler> {
     match kind {
-        SchedulerKind::Sync => Box::new(SyncEventScheduler),
-        SchedulerKind::Async => Box::new(AsyncEventScheduler { policy }),
+        SchedulerKind::Sync => Box::new(SyncEventScheduler::new()),
+        SchedulerKind::Async => Box::new(AsyncEventScheduler::new(policy)),
     }
 }
 
@@ -271,11 +341,161 @@ fn pipe_event(
     }
 }
 
+/// Drive the shared-*downlink* fluid model for one popped event — the
+/// server-egress mirror of [`pipe_event`], reusing [`SharedUplink`] (the
+/// fluid model is direction-agnostic). Delivery re-enters the queue as a
+/// plain [`Event::DownlinkArrived`].
+fn down_pipe_event(
+    pipe: &mut SharedUplink,
+    q: &mut EventQueue,
+    ops: &mut dyn RoundOps,
+    ev: &super::event::Scheduled,
+) -> bool {
+    match ev.event {
+        Event::DownlinkStart { step, bytes } => {
+            let (t_drain, gen) =
+                pipe.start(ev.time, ev.device, step, bytes, ops.downlink_latency_s(ev.device));
+            q.push(t_drain, ev.device, Event::DownDrain { generation: gen });
+            true
+        }
+        Event::DownDrain { generation } => {
+            if let Some((done, next)) = pipe.complete(generation) {
+                ops.charge_downlink(done.device, done.busy_s);
+                q.push(done.arrival_t, done.device, Event::DownlinkArrived { step: done.step });
+                if let Some((t_next, gen)) = next {
+                    q.push(t_next, done.device, Event::DownDrain { generation: gen });
+                }
+            }
+            true
+        }
+        _ => false,
+    }
+}
+
+/// Bounded distinct-time table for same-instant event grouping. One
+/// segment of a submission batch is scattered into per-group arena runs
+/// via counting sort (counts → prefix offsets → cursor scatter), which
+/// preserves submission order within each group — the property the
+/// bit-identity argument rests on.
+#[derive(Debug, Default)]
+struct GroupTable {
+    /// Distinct arrival-time bits, in first-occurrence order.
+    times: Vec<u64>,
+    /// Per-group member count.
+    len: Vec<u32>,
+    /// Per-group arena start offset.
+    off: Vec<u32>,
+    /// Per-group scatter cursor.
+    cur: Vec<u32>,
+    /// Per-member group index for the current segment.
+    gidx: Vec<u32>,
+}
+
+/// Group `members` (parallel to `times`) by exact arrival instant
+/// (`f64::to_bits`) and push one event per distinct instant, members
+/// parked in `arena[off .. off + len]` in submission order. The table is
+/// bounded at `cap` distinct instants; when a batch holds more, it is
+/// flushed in segments — two groups at the same instant then pop in push
+/// order, which is exactly the per-device order, so segmentation never
+/// breaks bit-identity (it only groups less).
+fn submit_grouped(
+    q: &mut EventQueue,
+    arena: &mut Vec<(DeviceId, u32)>,
+    tbl: &mut GroupTable,
+    members: &[(DeviceId, u32)],
+    times: &[f64],
+    cap: usize,
+    mk: impl Fn(u32, u32) -> Event,
+) {
+    debug_assert_eq!(members.len(), times.len());
+    let mut seg = 0usize;
+    while seg < members.len() {
+        tbl.times.clear();
+        tbl.gidx.clear();
+        let mut i = seg;
+        while i < members.len() {
+            let bits = times[i].to_bits();
+            // linear probe: the table never exceeds `cap` entries
+            let g = match tbl.times.iter().position(|&t| t == bits) {
+                Some(g) => g,
+                None if tbl.times.len() == cap => break, // flush segment
+                None => {
+                    tbl.times.push(bits);
+                    tbl.times.len() - 1
+                }
+            };
+            tbl.gidx.push(g as u32);
+            i += 1;
+        }
+        let seg_end = i;
+        tbl.len.clear();
+        tbl.len.resize(tbl.times.len(), 0);
+        for &g in &tbl.gidx {
+            tbl.len[g as usize] += 1;
+        }
+        let base = arena.len();
+        assert!(
+            base + (seg_end - seg) <= u32::MAX as usize,
+            "round arena overflow: more than u32::MAX grouped events in one round"
+        );
+        tbl.off.clear();
+        tbl.cur.clear();
+        let mut off = base as u32;
+        for &l in &tbl.len {
+            tbl.off.push(off);
+            tbl.cur.push(off);
+            off += l;
+        }
+        arena.resize(base + (seg_end - seg), (0, 0));
+        for (k, &g) in tbl.gidx.iter().enumerate() {
+            let slot = tbl.cur[g as usize] as usize;
+            arena[slot] = members[seg + k];
+            tbl.cur[g as usize] += 1;
+        }
+        for ((&off, &len), &bits) in tbl.off.iter().zip(tbl.len.iter()).zip(tbl.times.iter()) {
+            // the group's device is its first member's — only used for
+            // event provenance; handlers fan over the arena run
+            q.push(f64::from_bits(bits), arena[off as usize].0, mk(off, len));
+        }
+        seg = seg_end;
+    }
+}
+
+/// Round-persistent scratch for the sync scheduler (see the module-level
+/// "Fleet scale" notes).
+#[derive(Default)]
+struct SyncScratch {
+    q: EventQueue,
+    all: Vec<DeviceId>,
+    ups: Vec<UplinkMsg>,
+}
+
 /// Lockstep phases on the event queue — bit-identical op sequence to the
 /// pre-transport engine (fan-out all → server in device-id order → fan-in
 /// all, per local step) when the contention model is off
-/// (`uplink = private`, `server_service_s = 0`).
-pub struct SyncEventScheduler;
+/// (`uplink = private`, `server_service_s = 0`). With
+/// `RoundOps::cohorts() > 0` and both pipes private, the round runs a
+/// heap-free barrier fold that is bit-identical to the event path (the
+/// barrier is a max over the same arrival times; max over finite
+/// non-negative f64 is order-independent).
+pub struct SyncEventScheduler {
+    scratch: Mutex<SyncScratch>,
+}
+
+impl SyncEventScheduler {
+    /// Scheduler with empty (lazily grown) round scratch.
+    pub fn new() -> Self {
+        SyncEventScheduler {
+            scratch: Mutex::new(SyncScratch::default()),
+        }
+    }
+}
+
+impl Default for SyncEventScheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
 
 impl RoundScheduler for SyncEventScheduler {
     fn name(&self) -> &'static str {
@@ -283,19 +503,76 @@ impl RoundScheduler for SyncEventScheduler {
     }
 
     fn run_round(&self, ops: &mut dyn RoundOps) -> Result<RoundReport> {
+        let mut guard = self.scratch.lock().expect("sync scheduler scratch poisoned");
+        let scr = &mut *guard;
         let n = ops.n_devices();
         let steps = ops.steps();
-        let all: Vec<DeviceId> = (0..n).collect();
-        let mut q = EventQueue::new();
-        let mut pipe = ops.shared_uplink_bps().map(SharedUplink::new);
+        if scr.all.len() != n {
+            scr.all.clear();
+            scr.all.extend(0..n);
+        }
+        // Fresh server each round: busy time never leaks across round
+        // boundaries (see ServerResource's round-boundary semantics).
         let mut server = ServerResource::new(ops.server_service_s());
-        let mut t = 0.0f64;
         let (mut loss_sum, mut correct, mut samples, mut server_steps) = (0.0f64, 0u64, 0u64, 0u64);
         let mut queue_wait_s = 0.0f64;
+        let mut t = 0.0f64;
+
+        if ops.cohorts() > 0
+            && ops.shared_uplink_bps().is_none()
+            && ops.shared_downlink_bps().is_none()
+        {
+            // Cohort fold path: no heap. Arrival and ready times use the
+            // exact arithmetic of the event path, folded with max.
+            for _step in 0..steps {
+                ops.fanout(&scr.all, &mut scr.ups)?;
+                let mut barrier_t = t;
+                for d in 0..n {
+                    let arrive = (t + ops.compute_s(d)) + scr.ups[d].cost_s;
+                    barrier_t = barrier_t.max(arrive);
+                }
+                let mut step_loss = 0.0f64;
+                let mut ready_t = barrier_t;
+                for d in 0..n {
+                    let (start, end) = server.acquire(barrier_t);
+                    queue_wait_s += start - barrier_t;
+                    let out = ops.server_step(d)?;
+                    step_loss += out.loss;
+                    correct += out.correct;
+                    samples += out.samples;
+                    server_steps += 1;
+                    ready_t = ready_t.max((end + out.downlink_s) + ops.compute_s(d));
+                }
+                loss_sum += step_loss;
+                ops.fanin(&scr.all)?;
+                t = ready_t;
+            }
+            return Ok(RoundReport {
+                loss_sum,
+                correct,
+                samples,
+                server_steps,
+                sim_round_s: t,
+                queue_wait_s,
+                n_devices: n,
+                completed: n,
+            });
+        }
+
+        scr.q.clear();
+        let mut pipe = ops.shared_uplink_bps().map(SharedUplink::new);
+        let mut down_pipe = ops.shared_downlink_bps().map(SharedUplink::new);
         for step in 0..steps {
-            let ups = ops.fanout(&all)?;
+            ops.fanout(&scr.all, &mut scr.ups)?;
             for d in 0..n {
-                submit_uplink(&mut q, pipe.is_some(), t + ops.compute_s(d), d, step, &ups[d]);
+                submit_uplink(
+                    &mut scr.q,
+                    pipe.is_some(),
+                    t + ops.compute_s(d),
+                    d,
+                    step,
+                    &scr.ups[d],
+                );
             }
             // Barrier: every uplink lands before the server phase starts.
             // The queue fixes the arrival order; lockstep mode then serves
@@ -304,9 +581,9 @@ impl RoundScheduler for SyncEventScheduler {
             let mut barrier_t = t;
             let mut landed = 0usize;
             while landed < n {
-                let ev = q.pop().expect("uplinks still in flight");
+                let ev = scr.q.pop().expect("uplinks still in flight");
                 if let Some(p) = pipe.as_mut() {
-                    if pipe_event(p, &mut q, ops, &ev) {
+                    if pipe_event(p, &mut scr.q, ops, &ev) {
                         continue;
                     }
                 }
@@ -328,19 +605,28 @@ impl RoundScheduler for SyncEventScheduler {
                 correct += out.correct;
                 samples += out.samples;
                 server_steps += 1;
-                q.push(end + out.downlink_s, d, Event::DownlinkArrived { step });
+                if down_pipe.is_some() {
+                    scr.q.push(end, d, Event::DownlinkStart { step, bytes: out.wire_bytes });
+                } else {
+                    scr.q.push(end + out.downlink_s, d, Event::DownlinkArrived { step });
+                }
             }
             loss_sum += step_loss;
             // Step ends when the slowest device has its gradient applied.
             // (Only downlinks count: a stale shared-drain prediction may
             // still be queued at the same instant as the last arrival.)
             let mut ready_t = barrier_t;
-            while let Some(ev) = q.pop() {
+            while let Some(ev) = scr.q.pop() {
+                if let Some(p) = down_pipe.as_mut() {
+                    if down_pipe_event(p, &mut scr.q, ops, &ev) {
+                        continue;
+                    }
+                }
                 if matches!(ev.event, Event::DownlinkArrived { .. }) {
                     ready_t = ready_t.max(ev.time + ops.compute_s(ev.device));
                 }
             }
-            ops.fanin(&all)?;
+            ops.fanin(&scr.all)?;
             t = ready_t;
         }
         Ok(RoundReport {
@@ -350,17 +636,56 @@ impl RoundScheduler for SyncEventScheduler {
             server_steps,
             sim_round_s: t,
             queue_wait_s,
-            completed: vec![true; n],
+            n_devices: n,
+            completed: n,
         })
     }
 }
 
+/// Round-persistent scratch for the async scheduler: the event queue, the
+/// grouped-event member arena, and every working vector a round touches.
+#[derive(Default)]
+struct AsyncScratch {
+    q: EventQueue,
+    all: Vec<DeviceId>,
+    ups: Vec<UplinkMsg>,
+    done_mask: Vec<bool>,
+    batch: Vec<(DeviceId, usize)>,
+    devs: Vec<DeviceId>,
+    cont: Vec<(DeviceId, usize)>,
+    cont_devs: Vec<DeviceId>,
+    /// Grouped-event member arena: `(device, step)` runs addressed by the
+    /// `off/len` carried on batch events. Cleared per round, capacity
+    /// retained.
+    arena: Vec<(DeviceId, u32)>,
+    /// Members of the group currently being replayed (copied out of the
+    /// arena so handlers can append new groups while iterating).
+    members: Vec<(DeviceId, u32)>,
+    m2: Vec<(DeviceId, u32)>,
+    times: Vec<f64>,
+    t2: Vec<f64>,
+    tbl: GroupTable,
+}
+
 /// Event-driven rounds: devices pipeline local steps independently, the
 /// server consumes uplinks in arrival order, and the straggler policy
-/// closes the round.
+/// closes the round. With `RoundOps::cohorts() > 0` and both pipes
+/// private, rounds run on cohort-grouped events (one heap entry per
+/// distinct arrival instant) — bit-identical to the per-device path.
 pub struct AsyncEventScheduler {
     /// Round-close policy.
     pub policy: StragglerPolicy,
+    scratch: Mutex<AsyncScratch>,
+}
+
+impl AsyncEventScheduler {
+    /// Scheduler with the given round-close policy and empty scratch.
+    pub fn new(policy: StragglerPolicy) -> Self {
+        AsyncEventScheduler {
+            policy,
+            scratch: Mutex::new(AsyncScratch::default()),
+        }
+    }
 }
 
 impl RoundScheduler for AsyncEventScheduler {
@@ -369,9 +694,10 @@ impl RoundScheduler for AsyncEventScheduler {
     }
 
     fn run_round(&self, ops: &mut dyn RoundOps) -> Result<RoundReport> {
+        let mut guard = self.scratch.lock().expect("async scheduler scratch poisoned");
+        let scr = &mut *guard;
         let n = ops.n_devices();
         let steps = ops.steps();
-        let mut completed = vec![false; n];
         if n == 0 || steps == 0 {
             return Ok(RoundReport {
                 loss_sum: 0.0,
@@ -380,7 +706,8 @@ impl RoundScheduler for AsyncEventScheduler {
                 server_steps: 0,
                 sim_round_s: 0.0,
                 queue_wait_s: 0.0,
-                completed: vec![true; n],
+                n_devices: n,
+                completed: n,
             });
         }
         let deadline = match self.policy {
@@ -392,8 +719,15 @@ impl RoundScheduler for AsyncEventScheduler {
             _ => None,
         };
 
-        let mut q = EventQueue::new();
-        let mut pipe = ops.shared_uplink_bps().map(SharedUplink::new);
+        if scr.all.len() != n {
+            scr.all.clear();
+            scr.all.extend(0..n);
+        }
+        scr.done_mask.clear();
+        scr.done_mask.resize(n, false);
+        scr.q.clear();
+        // Fresh server each round (ServerResource round-boundary
+        // semantics): abandoned batches never charge the next round.
         let mut server = ServerResource::new(ops.server_service_s());
         let (mut loss_sum, mut correct, mut samples, mut server_steps) = (0.0f64, 0u64, 0u64, 0u64);
         let mut queue_wait_s = 0.0f64;
@@ -401,118 +735,311 @@ impl RoundScheduler for AsyncEventScheduler {
         let mut close_t: Option<f64> = None;
         let mut last_t = 0.0f64;
 
-        // Kick-off: every device starts its first local step at t = 0
-        // (one thread-parallel fan-out batch).
-        let all: Vec<DeviceId> = (0..n).collect();
-        let ups = ops.fanout(&all)?;
-        for d in 0..n {
-            submit_uplink(&mut q, pipe.is_some(), ops.compute_s(d), d, 0, &ups[d]);
-        }
+        let grouped = ops.cohorts() > 0
+            && ops.shared_uplink_bps().is_none()
+            && ops.shared_downlink_bps().is_none();
 
-        while let Some(ev) = q.pop() {
-            // A stale drain prediction is bookkeeping noise, not network
-            // activity — discard it before the deadline check so a
-            // long-superseded prediction cannot close a round whose real
-            // events all finished in time.
-            if let (Some(p), Event::SharedDrain { generation }) = (pipe.as_ref(), ev.event) {
-                if generation != p.generation() {
-                    continue;
-                }
+        if grouped {
+            let cap = ops.cohorts().max(16);
+            scr.arena.clear();
+            // Kick-off: every device starts its first local step at t = 0.
+            ops.fanout(&scr.all, &mut scr.ups)?;
+            scr.members.clear();
+            scr.times.clear();
+            for d in 0..n {
+                scr.members.push((d, 0u32));
+                scr.times.push(ops.compute_s(d) + scr.ups[d].cost_s);
             }
-            if let Some(t_max) = deadline {
-                if ev.time > t_max {
-                    close_t = Some(t_max);
-                    break;
-                }
-            }
-            if let Some(p) = pipe.as_mut() {
-                if pipe_event(p, &mut q, ops, &ev) {
-                    continue;
-                }
-            }
-            last_t = ev.time;
-            match ev.event {
-                Event::UplinkArrived { step } => {
-                    // The uplink queues for the serial server resource;
-                    // fan-in order is arrival order, service back-to-back.
-                    let (start, end) = server.acquire(ev.time);
-                    queue_wait_s += start - ev.time;
-                    let out = ops.server_step(ev.device)?;
-                    loss_sum += out.loss;
-                    correct += out.correct;
-                    samples += out.samples;
-                    server_steps += 1;
-                    q.push(end + out.downlink_s, ev.device, Event::DownlinkArrived { step });
-                }
-                Event::DownlinkArrived { step } => {
-                    // Batch ties: downlinks landing at the bit-same instant
-                    // run fan-in/fan-out through one worker-pool dispatch
-                    // (homogeneous fleets stay as parallel as lockstep mode).
-                    // Batch composition is event order — deterministic.
-                    let mut batch: Vec<(DeviceId, usize)> = vec![(ev.device, step)];
-                    loop {
-                        let tie = matches!(
-                            q.peek(),
-                            Some(next) if matches!(next.event, Event::DownlinkArrived { .. })
-                                && next.time.to_bits() == ev.time.to_bits()
-                        );
-                        if !tie {
-                            break;
-                        }
-                        let nev = q.pop().expect("peeked event");
-                        let Event::DownlinkArrived { step: s2 } = nev.event else {
-                            unreachable!("tie check admits only downlinks")
-                        };
-                        batch.push((nev.device, s2));
+            submit_grouped(
+                &mut scr.q,
+                &mut scr.arena,
+                &mut scr.tbl,
+                &scr.members,
+                &scr.times,
+                cap,
+                |off, len| Event::UplinkBatch { off, len },
+            );
+
+            'outer: while let Some(ev) = scr.q.pop() {
+                if let Some(t_max) = deadline {
+                    if ev.time > t_max {
+                        close_t = Some(t_max);
+                        break;
                     }
-                    let devs: Vec<DeviceId> = batch.iter().map(|&(d, _)| d).collect();
-                    ops.fanin(&devs)?;
-                    let continuing: Vec<(DeviceId, usize)> = batch
-                        .iter()
-                        .filter(|&&(_, s)| s + 1 < steps)
-                        .copied()
-                        .collect();
-                    if !continuing.is_empty() {
-                        let cont_devs: Vec<DeviceId> =
-                            continuing.iter().map(|&(d, _)| d).collect();
-                        let ups = ops.fanout(&cont_devs)?;
-                        for (i, &(d, s)) in continuing.iter().enumerate() {
-                            // fan-in compute + next fan-out compute, then
-                            // the uplink (direct arrival or shared flow)
-                            submit_uplink(
-                                &mut q,
-                                pipe.is_some(),
-                                ev.time + 2.0 * ops.compute_s(d),
-                                d,
-                                s + 1,
-                                &ups[i],
+                }
+                last_t = ev.time;
+                match ev.event {
+                    Event::UplinkBatch { off, len } => {
+                        scr.members.clear();
+                        scr.members
+                            .extend_from_slice(&scr.arena[off as usize..(off + len) as usize]);
+                        scr.times.clear();
+                        for &(d, _s) in scr.members.iter() {
+                            let (start, end) = server.acquire(ev.time);
+                            queue_wait_s += start - ev.time;
+                            let out = ops.server_step(d)?;
+                            loss_sum += out.loss;
+                            correct += out.correct;
+                            samples += out.samples;
+                            server_steps += 1;
+                            scr.times.push(end + out.downlink_s);
+                        }
+                        submit_grouped(
+                            &mut scr.q,
+                            &mut scr.arena,
+                            &mut scr.tbl,
+                            &scr.members,
+                            &scr.times,
+                            cap,
+                            |off, len| Event::DownlinkBatch { off, len },
+                        );
+                    }
+                    Event::DownlinkBatch { off, len } => {
+                        scr.members.clear();
+                        scr.members
+                            .extend_from_slice(&scr.arena[off as usize..(off + len) as usize]);
+                        // Merge tied downlink groups (same bit-instant)
+                        // into one dispatch — group pop order is group
+                        // push order, so the merged member sequence is
+                        // exactly the per-device tie-batch.
+                        loop {
+                            let tie = matches!(
+                                scr.q.peek(),
+                                Some(next) if matches!(next.event, Event::DownlinkBatch { .. })
+                                    && next.time.to_bits() == ev.time.to_bits()
+                            );
+                            if !tie {
+                                break;
+                            }
+                            let nev = scr.q.pop().expect("peeked event");
+                            let Event::DownlinkBatch { off: o2, len: l2 } = nev.event else {
+                                unreachable!("tie check admits only downlink batches")
+                            };
+                            scr.members
+                                .extend_from_slice(&scr.arena[o2 as usize..(o2 + l2) as usize]);
+                        }
+                        scr.devs.clear();
+                        scr.devs.extend(scr.members.iter().map(|&(d, _)| d));
+                        ops.fanin(&scr.devs)?;
+                        // continuing members pipeline into their next step
+                        scr.m2.clear();
+                        scr.cont_devs.clear();
+                        for &(d, s) in scr.members.iter() {
+                            if (s as usize) + 1 < steps {
+                                scr.m2.push((d, s + 1));
+                                scr.cont_devs.push(d);
+                            }
+                        }
+                        if !scr.m2.is_empty() {
+                            ops.fanout(&scr.cont_devs, &mut scr.ups)?;
+                            scr.t2.clear();
+                            for (i, &(d, _s)) in scr.m2.iter().enumerate() {
+                                // fan-in compute + next fan-out compute,
+                                // then the private uplink
+                                scr.t2
+                                    .push((ev.time + 2.0 * ops.compute_s(d)) + scr.ups[i].cost_s);
+                            }
+                            submit_grouped(
+                                &mut scr.q,
+                                &mut scr.arena,
+                                &mut scr.tbl,
+                                &scr.m2,
+                                &scr.t2,
+                                cap,
+                                |off, len| Event::UplinkBatch { off, len },
+                            );
+                        }
+                        scr.m2.clear();
+                        scr.t2.clear();
+                        for &(d, s) in scr.members.iter() {
+                            if (s as usize) + 1 == steps {
+                                scr.m2.push((d, s));
+                                scr.t2.push(ev.time + ops.compute_s(d));
+                            }
+                        }
+                        if !scr.m2.is_empty() {
+                            submit_grouped(
+                                &mut scr.q,
+                                &mut scr.arena,
+                                &mut scr.tbl,
+                                &scr.m2,
+                                &scr.t2,
+                                cap,
+                                |off, len| Event::DoneBatch { off, len },
                             );
                         }
                     }
-                    for &(d, s) in &batch {
-                        if s + 1 == steps {
-                            q.push(ev.time + ops.compute_s(d), d, Event::DeviceDone);
+                    Event::DoneBatch { off, len } => {
+                        scr.members.clear();
+                        scr.members
+                            .extend_from_slice(&scr.arena[off as usize..(off + len) as usize]);
+                        for &(d, _s) in scr.members.iter() {
+                            scr.done_mask[d] = true;
+                            done += 1;
+                            if let Some(k) = quorum {
+                                if done >= k {
+                                    // mid-group close: remaining members
+                                    // stay incomplete, exactly like the
+                                    // per-device tied DeviceDone events a
+                                    // quorum close abandons
+                                    close_t = Some(ev.time);
+                                    break 'outer;
+                                }
+                            }
                         }
                     }
+                    _ => unreachable!("cohort path schedules only batch events"),
                 }
-                Event::DeviceDone => {
-                    completed[ev.device] = true;
-                    done += 1;
-                    if let Some(k) = quorum {
-                        if done >= k {
-                            close_t = Some(ev.time);
-                            break;
-                        }
+            }
+        } else {
+            // Per-device event path (also the only path under a shared
+            // pipe, whose flow bookkeeping is inherently per-device).
+            let mut pipe = ops.shared_uplink_bps().map(SharedUplink::new);
+            let mut down_pipe = ops.shared_downlink_bps().map(SharedUplink::new);
+
+            // Kick-off: every device starts its first local step at t = 0
+            // (one thread-parallel fan-out batch).
+            ops.fanout(&scr.all, &mut scr.ups)?;
+            for d in 0..n {
+                submit_uplink(&mut scr.q, pipe.is_some(), ops.compute_s(d), d, 0, &scr.ups[d]);
+            }
+
+            while let Some(ev) = scr.q.pop() {
+                // A stale drain prediction is bookkeeping noise, not network
+                // activity — discard it before the deadline check so a
+                // long-superseded prediction cannot close a round whose real
+                // events all finished in time.
+                if let (Some(p), Event::SharedDrain { generation }) = (pipe.as_ref(), ev.event) {
+                    if generation != p.generation() {
+                        continue;
                     }
                 }
-                Event::UplinkStart { .. } | Event::SharedDrain { .. } => {
-                    unreachable!("pipe events are consumed before dispatch")
+                if let (Some(p), Event::DownDrain { generation }) = (down_pipe.as_ref(), ev.event)
+                {
+                    if generation != p.generation() {
+                        continue;
+                    }
+                }
+                if let Some(t_max) = deadline {
+                    if ev.time > t_max {
+                        close_t = Some(t_max);
+                        break;
+                    }
+                }
+                if let Some(p) = pipe.as_mut() {
+                    if pipe_event(p, &mut scr.q, ops, &ev) {
+                        continue;
+                    }
+                }
+                if let Some(p) = down_pipe.as_mut() {
+                    if down_pipe_event(p, &mut scr.q, ops, &ev) {
+                        continue;
+                    }
+                }
+                last_t = ev.time;
+                match ev.event {
+                    Event::UplinkArrived { step } => {
+                        // The uplink queues for the serial server resource;
+                        // fan-in order is arrival order, service back-to-back.
+                        let (start, end) = server.acquire(ev.time);
+                        queue_wait_s += start - ev.time;
+                        let out = ops.server_step(ev.device)?;
+                        loss_sum += out.loss;
+                        correct += out.correct;
+                        samples += out.samples;
+                        server_steps += 1;
+                        if down_pipe.is_some() {
+                            scr.q.push(
+                                end,
+                                ev.device,
+                                Event::DownlinkStart { step, bytes: out.wire_bytes },
+                            );
+                        } else {
+                            scr.q.push(
+                                end + out.downlink_s,
+                                ev.device,
+                                Event::DownlinkArrived { step },
+                            );
+                        }
+                    }
+                    Event::DownlinkArrived { step } => {
+                        // Batch ties: downlinks landing at the bit-same instant
+                        // run fan-in/fan-out through one worker-pool dispatch
+                        // (homogeneous fleets stay as parallel as lockstep mode).
+                        // Batch composition is event order — deterministic.
+                        scr.batch.clear();
+                        scr.batch.push((ev.device, step));
+                        loop {
+                            let tie = matches!(
+                                scr.q.peek(),
+                                Some(next) if matches!(next.event, Event::DownlinkArrived { .. })
+                                    && next.time.to_bits() == ev.time.to_bits()
+                            );
+                            if !tie {
+                                break;
+                            }
+                            let nev = scr.q.pop().expect("peeked event");
+                            let Event::DownlinkArrived { step: s2 } = nev.event else {
+                                unreachable!("tie check admits only downlinks")
+                            };
+                            scr.batch.push((nev.device, s2));
+                        }
+                        scr.devs.clear();
+                        scr.devs.extend(scr.batch.iter().map(|&(d, _)| d));
+                        ops.fanin(&scr.devs)?;
+                        scr.cont.clear();
+                        scr.cont
+                            .extend(scr.batch.iter().filter(|&&(_, s)| s + 1 < steps).copied());
+                        if !scr.cont.is_empty() {
+                            scr.cont_devs.clear();
+                            scr.cont_devs.extend(scr.cont.iter().map(|&(d, _)| d));
+                            ops.fanout(&scr.cont_devs, &mut scr.ups)?;
+                            for (i, &(d, s)) in scr.cont.iter().enumerate() {
+                                // fan-in compute + next fan-out compute, then
+                                // the uplink (direct arrival or shared flow)
+                                submit_uplink(
+                                    &mut scr.q,
+                                    pipe.is_some(),
+                                    ev.time + 2.0 * ops.compute_s(d),
+                                    d,
+                                    s + 1,
+                                    &scr.ups[i],
+                                );
+                            }
+                        }
+                        for &(d, s) in scr.batch.iter() {
+                            if s + 1 == steps {
+                                scr.q.push(ev.time + ops.compute_s(d), d, Event::DeviceDone);
+                            }
+                        }
+                    }
+                    Event::DeviceDone => {
+                        scr.done_mask[ev.device] = true;
+                        done += 1;
+                        if let Some(k) = quorum {
+                            if done >= k {
+                                close_t = Some(ev.time);
+                                break;
+                            }
+                        }
+                    }
+                    Event::UplinkStart { .. }
+                    | Event::SharedDrain { .. }
+                    | Event::DownlinkStart { .. }
+                    | Event::DownDrain { .. } => {
+                        unreachable!("pipe events are consumed before dispatch")
+                    }
+                    Event::UplinkBatch { .. }
+                    | Event::DownlinkBatch { .. }
+                    | Event::DoneBatch { .. } => {
+                        unreachable!("grouped events exist only on the cohort path")
+                    }
                 }
             }
         }
-        q.clear();
-        for (d, &c) in completed.iter().enumerate() {
-            if !c {
+        scr.q.clear();
+        for d in 0..n {
+            if !scr.done_mask[d] {
                 ops.cancel(d);
             }
         }
@@ -523,7 +1050,8 @@ impl RoundScheduler for AsyncEventScheduler {
             server_steps,
             sim_round_s: close_t.unwrap_or(last_t),
             queue_wait_s,
-            completed,
+            n_devices: n,
+            completed: done,
         })
     }
 }
@@ -534,20 +1062,25 @@ mod tests {
 
     /// Pure-timing mock: per-device compute/uplink/downlink costs, plus an
     /// op log so tests can pin exact scheduling decisions. The contention
-    /// knobs (`service_s`, `shared_bps`, per-device `bytes`/`latency`)
-    /// default to the pre-contention behavior.
+    /// knobs (`service_s`, `shared_bps`, `shared_down_bps`, per-device
+    /// `bytes`/`dbytes`/`latency`) default to the pre-contention behavior,
+    /// and `n_cohorts` defaults to the per-device control flow.
     struct MockOps {
         steps: usize,
         compute: Vec<f64>,
         up_s: Vec<f64>,
         down_s: Vec<f64>,
         bytes: Vec<usize>,
+        dbytes: Vec<usize>,
         latency: Vec<f64>,
         service_s: f64,
         shared_bps: Option<f64>,
+        shared_down_bps: Option<f64>,
+        n_cohorts: usize,
         log: Vec<String>,
         cancelled: Vec<DeviceId>,
         charges: Vec<(DeviceId, u64)>,
+        down_charges: Vec<(DeviceId, u64)>,
     }
 
     impl MockOps {
@@ -558,12 +1091,16 @@ mod tests {
                 up_s: vec![up; n],
                 down_s: vec![down; n],
                 bytes: vec![0; n],
+                dbytes: vec![0; n],
                 latency: vec![0.0; n],
                 service_s: 0.0,
                 shared_bps: None,
+                shared_down_bps: None,
+                n_cohorts: 0,
                 log: Vec::new(),
                 cancelled: Vec::new(),
                 charges: Vec::new(),
+                down_charges: Vec::new(),
             }
         }
 
@@ -591,26 +1128,38 @@ mod tests {
         fn shared_uplink_bps(&self) -> Option<f64> {
             self.shared_bps
         }
+        fn shared_downlink_bps(&self) -> Option<f64> {
+            self.shared_down_bps
+        }
         fn uplink_latency_s(&self, dev: DeviceId) -> f64 {
+            self.latency[dev]
+        }
+        fn downlink_latency_s(&self, dev: DeviceId) -> f64 {
             self.latency[dev]
         }
         fn charge_uplink(&mut self, dev: DeviceId, busy_s: f64) {
             self.charges.push((dev, busy_s.to_bits()));
         }
-        fn fanout(&mut self, devs: &[DeviceId]) -> Result<Vec<UplinkMsg>> {
+        fn charge_downlink(&mut self, dev: DeviceId, busy_s: f64) {
+            self.down_charges.push((dev, busy_s.to_bits()));
+        }
+        fn cohorts(&self) -> usize {
+            self.n_cohorts
+        }
+        fn fanout(&mut self, devs: &[DeviceId], out: &mut Vec<UplinkMsg>) -> Result<()> {
             self.log.push(format!("fanout:{devs:?}"));
-            Ok(devs
-                .iter()
-                .map(|&d| UplinkMsg {
-                    wire_bytes: self.bytes[d],
-                    cost_s: self.up_s[d],
-                })
-                .collect())
+            out.clear();
+            out.extend(devs.iter().map(|&d| UplinkMsg {
+                wire_bytes: self.bytes[d],
+                cost_s: self.up_s[d],
+            }));
+            Ok(())
         }
         fn server_step(&mut self, dev: DeviceId) -> Result<ServerOut> {
             self.log.push(format!("server:{dev}"));
             Ok(ServerOut {
                 downlink_s: self.down_s[dev],
+                wire_bytes: self.dbytes[dev],
                 loss: 1.0 + dev as f64,
                 correct: 1,
                 samples: 2,
@@ -636,7 +1185,7 @@ mod tests {
     #[test]
     fn sync_runs_lockstep_phases_in_device_order() {
         let mut ops = MockOps::uniform(2, 2, 1.0, 2.0, 4.0);
-        let report = SyncEventScheduler.run_round(&mut ops).unwrap();
+        let report = SyncEventScheduler::new().run_round(&mut ops).unwrap();
         assert_eq!(
             ops.log,
             vec![
@@ -651,7 +1200,7 @@ mod tests {
             ]
         );
         assert_eq!(report.server_steps, 4);
-        assert_eq!(report.completed, vec![true, true]);
+        assert_eq!((report.n_devices, report.completed), (2, 2));
         assert_eq!(report.dropped(), 0);
         // per step: fanout compute 1 + up 2 (barrier 3), down 4 + fanin 1
         // => 8 per step, 2 steps = 16 (integers: exact in f64)
@@ -661,19 +1210,34 @@ mod tests {
     }
 
     #[test]
+    fn sync_scratch_reuse_across_rounds_is_invisible() {
+        // the same scheduler instance must give bit-identical rounds on a
+        // fresh mock — round-persistent scratch (queue clock, seq counter,
+        // buffers) never leaks into results
+        let sched = SyncEventScheduler::new();
+        let run = |sched: &SyncEventScheduler| {
+            let mut ops = MockOps {
+                service_s: 2.0,
+                ..MockOps::uniform(3, 2, 1.0, 2.0, 4.0)
+            };
+            let r = sched.run_round(&mut ops).unwrap();
+            (ops.log, r.sim_round_s.to_bits(), r.queue_wait_s.to_bits(), r.loss_sum.to_bits())
+        };
+        assert_eq!(run(&sched), run(&sched));
+    }
+
+    #[test]
     fn async_server_consumes_in_arrival_order() {
         // arrival = compute + up: dev2 lands first, then dev0, then dev1
         let mut ops = MockOps {
             up_s: vec![2.0, 5.0, 0.5],
             ..MockOps::uniform(3, 1, 1.0, 0.0, 1.0)
         };
-        let report = AsyncEventScheduler {
-            policy: StragglerPolicy::WaitAll,
-        }
-        .run_round(&mut ops)
-        .unwrap();
+        let report = AsyncEventScheduler::new(StragglerPolicy::WaitAll)
+            .run_round(&mut ops)
+            .unwrap();
         assert_eq!(ops.server_order(), vec![2, 0, 1]);
-        assert_eq!(report.completed, vec![true, true, true]);
+        assert_eq!((report.n_devices, report.completed), (3, 3));
         // slowest chain: dev1 done at 1 + 5 (up) + 1 (down) + 1 (fanin) = 8
         assert_eq!(report.sim_round_s, 8.0);
         assert!(ops.cancelled.is_empty());
@@ -683,14 +1247,12 @@ mod tests {
     fn async_wait_all_pipeline_timing() {
         // single device, 2 steps: up@3, down@7, next up@11, down@15, done@16
         let mut ops = MockOps::uniform(1, 2, 1.0, 2.0, 4.0);
-        let report = AsyncEventScheduler {
-            policy: StragglerPolicy::WaitAll,
-        }
-        .run_round(&mut ops)
-        .unwrap();
+        let report = AsyncEventScheduler::new(StragglerPolicy::WaitAll)
+            .run_round(&mut ops)
+            .unwrap();
         assert_eq!(report.server_steps, 2);
         assert_eq!(report.sim_round_s, 16.0);
-        assert_eq!(report.completed, vec![true]);
+        assert_eq!(report.completed, 1);
     }
 
     #[test]
@@ -701,14 +1263,12 @@ mod tests {
             down_s: vec![1.0, 10.0],
             ..MockOps::uniform(2, 1, 0.0, 0.0, 0.0)
         };
-        let report = AsyncEventScheduler {
-            policy: StragglerPolicy::DeadlineDrop { deadline_s: 5.0 },
-        }
-        .run_round(&mut ops)
-        .unwrap();
+        let report = AsyncEventScheduler::new(StragglerPolicy::DeadlineDrop { deadline_s: 5.0 })
+            .run_round(&mut ops)
+            .unwrap();
         // dev0: up@2, down@3, done@4 — inside the deadline
         // dev1: up@20 — never processed
-        assert_eq!(report.completed, vec![true, false]);
+        assert_eq!((report.n_devices, report.completed), (2, 1));
         assert_eq!(report.dropped(), 1);
         assert_eq!(report.server_steps, 1, "dropped uplink never hits the server");
         assert_eq!(ops.server_order(), vec![0]);
@@ -719,12 +1279,10 @@ mod tests {
     #[test]
     fn async_deadline_everyone_drops_when_too_tight() {
         let mut ops = MockOps::uniform(3, 1, 1.0, 1.0, 1.0);
-        let report = AsyncEventScheduler {
-            policy: StragglerPolicy::DeadlineDrop { deadline_s: 1e-6 },
-        }
-        .run_round(&mut ops)
-        .unwrap();
-        assert_eq!(report.completed, vec![false; 3]);
+        let report = AsyncEventScheduler::new(StragglerPolicy::DeadlineDrop { deadline_s: 1e-6 })
+            .run_round(&mut ops)
+            .unwrap();
+        assert_eq!(report.completed, 0);
         assert_eq!(report.server_steps, 0);
         assert_eq!(ops.cancelled, vec![0, 1, 2]);
     }
@@ -734,12 +1292,10 @@ mod tests {
         // identical devices: completions tie at the same instant; the
         // deterministic seq order makes devices 0 and 1 the quorum
         let mut ops = MockOps::uniform(4, 1, 1.0, 1.0, 1.0);
-        let report = AsyncEventScheduler {
-            policy: StragglerPolicy::Quorum { k: 2 },
-        }
-        .run_round(&mut ops)
-        .unwrap();
-        assert_eq!(report.completed, vec![true, true, false, false]);
+        let report = AsyncEventScheduler::new(StragglerPolicy::Quorum { k: 2 })
+            .run_round(&mut ops)
+            .unwrap();
+        assert_eq!((report.n_devices, report.completed), (4, 2));
         assert_eq!(ops.cancelled, vec![2, 3]);
         // done at fanout 1 + up 1 + down 1 + fanin 1 = 4
         assert_eq!(report.sim_round_s, 4.0);
@@ -749,17 +1305,13 @@ mod tests {
     fn async_quorum_equal_to_n_is_wait_all() {
         let mk = || MockOps::uniform(3, 2, 0.5, 1.0, 1.0);
         let mut a = mk();
-        let ra = AsyncEventScheduler {
-            policy: StragglerPolicy::Quorum { k: 3 },
-        }
-        .run_round(&mut a)
-        .unwrap();
+        let ra = AsyncEventScheduler::new(StragglerPolicy::Quorum { k: 3 })
+            .run_round(&mut a)
+            .unwrap();
         let mut b = mk();
-        let rb = AsyncEventScheduler {
-            policy: StragglerPolicy::WaitAll,
-        }
-        .run_round(&mut b)
-        .unwrap();
+        let rb = AsyncEventScheduler::new(StragglerPolicy::WaitAll)
+            .run_round(&mut b)
+            .unwrap();
         assert_eq!(ra.completed, rb.completed);
         assert_eq!(ra.server_steps, rb.server_steps);
         assert_eq!(ra.sim_round_s.to_bits(), rb.sim_round_s.to_bits());
@@ -772,15 +1324,13 @@ mod tests {
         // instant, so the server sees device-id order — the property that
         // makes async wait-all match sync byte-for-byte
         let mut ops = MockOps::uniform(3, 2, 1.0, 2.0, 3.0);
-        let report = AsyncEventScheduler {
-            policy: StragglerPolicy::WaitAll,
-        }
-        .run_round(&mut ops)
-        .unwrap();
+        let report = AsyncEventScheduler::new(StragglerPolicy::WaitAll)
+            .run_round(&mut ops)
+            .unwrap();
         assert_eq!(ops.server_order(), vec![0, 1, 2, 0, 1, 2]);
         // tie-batched fan-in/fan-out: one dispatch for all three devices
         assert!(ops.log.contains(&"fanin:[0, 1, 2]".to_string()));
-        assert_eq!(report.completed, vec![true; 3]);
+        assert_eq!(report.completed, 3);
     }
 
     #[test]
@@ -793,11 +1343,11 @@ mod tests {
         };
         let run = |policy: StragglerPolicy| {
             let mut ops = mk();
-            let r = AsyncEventScheduler { policy }.run_round(&mut ops).unwrap();
+            let r = AsyncEventScheduler::new(policy).run_round(&mut ops).unwrap();
             (
                 ops.log.clone(),
                 ops.cancelled.clone(),
-                r.completed.clone(),
+                r.completed,
                 r.loss_sum.to_bits(),
                 r.sim_round_s.to_bits(),
                 r.server_steps,
@@ -821,16 +1371,14 @@ mod tests {
             service_s: 1.0,
             ..MockOps::uniform(3, 1, 1.0, 1.0, 0.5)
         };
-        let report = AsyncEventScheduler {
-            policy: StragglerPolicy::WaitAll,
-        }
-        .run_round(&mut ops)
-        .unwrap();
+        let report = AsyncEventScheduler::new(StragglerPolicy::WaitAll)
+            .run_round(&mut ops)
+            .unwrap();
         assert_eq!(ops.server_order(), vec![0, 1, 2], "FIFO under ties");
         assert_eq!(report.queue_wait_s, 3.0);
         // dev2: service ends 5.0, downlink 0.5, fanin compute 1.0 => 6.5
         assert_eq!(report.sim_round_s, 6.5);
-        assert_eq!(report.completed, vec![true; 3]);
+        assert_eq!(report.completed, 3);
     }
 
     #[test]
@@ -841,7 +1389,7 @@ mod tests {
             service_s: 2.0,
             ..MockOps::uniform(2, 1, 1.0, 2.0, 4.0)
         };
-        let report = SyncEventScheduler.run_round(&mut ops).unwrap();
+        let report = SyncEventScheduler::new().run_round(&mut ops).unwrap();
         assert_eq!(report.queue_wait_s, 2.0);
         // dev1 gradient lands at 7 + 4 = 11, fanin compute 1 => 12
         assert_eq!(report.sim_round_s, 12.0);
@@ -879,11 +1427,9 @@ mod tests {
                 shared_bps: if shared { Some(capacity) } else { None },
                 ..MockOps::uniform(1, 2, 0.5, 0.0, 0.25)
             };
-            let r = AsyncEventScheduler {
-                policy: StragglerPolicy::WaitAll,
-            }
-            .run_round(&mut ops)
-            .unwrap();
+            let r = AsyncEventScheduler::new(StragglerPolicy::WaitAll)
+                .run_round(&mut ops)
+                .unwrap();
             (r.sim_round_s.to_bits(), r.loss_sum.to_bits(), ops.server_order())
         };
         assert_eq!(run(true), run(false), "single shared flow == private cost");
@@ -903,16 +1449,12 @@ mod tests {
             shared_bps: if shared { Some(capacity) } else { None },
             ..MockOps::uniform(2, 1, 0.0, 0.0, 0.0)
         };
-        let shared = AsyncEventScheduler {
-            policy: StragglerPolicy::WaitAll,
-        }
-        .run_round(&mut mk(true))
-        .unwrap();
-        let private = AsyncEventScheduler {
-            policy: StragglerPolicy::WaitAll,
-        }
-        .run_round(&mut mk(false))
-        .unwrap();
+        let shared = AsyncEventScheduler::new(StragglerPolicy::WaitAll)
+            .run_round(&mut mk(true))
+            .unwrap();
+        let private = AsyncEventScheduler::new(StragglerPolicy::WaitAll)
+            .run_round(&mut mk(false))
+            .unwrap();
         assert!((private.sim_round_s - 1.0).abs() < 1e-9, "private: both in 1 s");
         assert!(
             (shared.sim_round_s - 2.0).abs() < 1e-9,
@@ -920,7 +1462,7 @@ mod tests {
             shared.sim_round_s
         );
         assert_eq!(shared.server_steps, 2);
-        assert_eq!(shared.completed, vec![true; 2]);
+        assert_eq!(shared.completed, 2);
     }
 
     #[test]
@@ -932,11 +1474,9 @@ mod tests {
             shared_bps: Some(8e6),
             ..MockOps::uniform(2, 1, 0.0, 0.0, 0.0)
         };
-        AsyncEventScheduler {
-            policy: StragglerPolicy::WaitAll,
-        }
-        .run_round(&mut ops)
-        .unwrap();
+        AsyncEventScheduler::new(StragglerPolicy::WaitAll)
+            .run_round(&mut ops)
+            .unwrap();
         assert_eq!(ops.charges.len(), 2, "one occupancy charge per drained flow");
         for &(_, t) in &ops.charges {
             assert!((f64::from_bits(t) - 2.0).abs() < 1e-9, "each flow took 2 s fair-share");
@@ -951,7 +1491,7 @@ mod tests {
             shared_bps: Some(8e6),
             ..MockOps::uniform(2, 1, 0.0, 0.0, 0.0)
         };
-        let report = SyncEventScheduler.run_round(&mut ops).unwrap();
+        let report = SyncEventScheduler::new().run_round(&mut ops).unwrap();
         assert_eq!(ops.server_order(), vec![0, 1], "lockstep stays device-id order");
         assert!((report.sim_round_s - 2.0).abs() < 1e-9, "barrier at the 2 s drain");
         assert_eq!(report.server_steps, 2);
@@ -970,11 +1510,11 @@ mod tests {
         };
         let run = |policy: StragglerPolicy| {
             let mut ops = mk();
-            let r = AsyncEventScheduler { policy }.run_round(&mut ops).unwrap();
+            let r = AsyncEventScheduler::new(policy).run_round(&mut ops).unwrap();
             (
                 ops.log.clone(),
                 ops.charges.clone(),
-                r.completed.clone(),
+                r.completed,
                 r.sim_round_s.to_bits(),
                 r.queue_wait_s.to_bits(),
                 r.server_steps,
@@ -987,6 +1527,204 @@ mod tests {
         ] {
             assert_eq!(run(policy), run(policy), "{}", policy.name());
         }
+    }
+
+    #[test]
+    fn shared_downlink_single_device_is_bitwise_private() {
+        // one flow on the shared egress pipe == the private downlink cost,
+        // bit for bit — the downlink twin of the uplink guarantee
+        let capacity = 8e6;
+        let latency = 0.013;
+        let bytes = 750_000usize;
+        let private_cost = latency + (bytes as f64 * 8.0) / capacity;
+        let run = |shared: bool| {
+            let mut ops = MockOps {
+                dbytes: vec![bytes],
+                latency: vec![latency],
+                down_s: vec![if shared { 0.0 } else { private_cost }],
+                shared_down_bps: if shared { Some(capacity) } else { None },
+                ..MockOps::uniform(1, 2, 0.5, 0.25, 0.0)
+            };
+            let r = AsyncEventScheduler::new(StragglerPolicy::WaitAll)
+                .run_round(&mut ops)
+                .unwrap();
+            (r.sim_round_s.to_bits(), r.loss_sum.to_bits(), ops.server_order())
+        };
+        assert_eq!(run(true), run(false), "single shared egress flow == private cost");
+    }
+
+    #[test]
+    fn shared_downlink_concurrent_transfers_contend() {
+        // two gradients leave the server at the same instant on a pipe
+        // sized for one: fair share doubles both transfer times
+        let capacity = 8e6;
+        let bytes = 1_000_000usize; // 1 s solo at 8 Mbit/s
+        let solo = (bytes as f64 * 8.0) / capacity;
+        let mk = |shared: bool| MockOps {
+            dbytes: vec![bytes; 2],
+            down_s: vec![if shared { 0.0 } else { solo }; 2],
+            shared_down_bps: if shared { Some(capacity) } else { None },
+            ..MockOps::uniform(2, 1, 0.0, 0.0, 0.0)
+        };
+        let shared = AsyncEventScheduler::new(StragglerPolicy::WaitAll)
+            .run_round(&mut mk(true))
+            .unwrap();
+        let private = AsyncEventScheduler::new(StragglerPolicy::WaitAll)
+            .run_round(&mut mk(false))
+            .unwrap();
+        assert!((private.sim_round_s - 1.0).abs() < 1e-9, "private: both in 1 s");
+        assert!(
+            (shared.sim_round_s - 2.0).abs() < 1e-9,
+            "shared egress: fair-share halves the rate, got {}",
+            shared.sim_round_s
+        );
+        assert_eq!(shared.completed, 2);
+    }
+
+    #[test]
+    fn shared_downlink_charges_occupancy_at_drain() {
+        let mut ops = MockOps {
+            dbytes: vec![1_000_000; 2],
+            shared_down_bps: Some(8e6),
+            ..MockOps::uniform(2, 1, 0.0, 0.0, 0.0)
+        };
+        AsyncEventScheduler::new(StragglerPolicy::WaitAll)
+            .run_round(&mut ops)
+            .unwrap();
+        assert_eq!(ops.down_charges.len(), 2, "one occupancy charge per drained flow");
+        for &(_, t) in &ops.down_charges {
+            assert!((f64::from_bits(t) - 2.0).abs() < 1e-9, "each flow took 2 s fair-share");
+        }
+    }
+
+    #[test]
+    fn shared_downlink_works_under_sync_scheduler() {
+        let mut ops = MockOps {
+            dbytes: vec![1_000_000; 2],
+            shared_down_bps: Some(8e6),
+            ..MockOps::uniform(2, 1, 0.0, 0.0, 0.0)
+        };
+        let report = SyncEventScheduler::new().run_round(&mut ops).unwrap();
+        assert_eq!(ops.server_order(), vec![0, 1]);
+        assert!(
+            (report.sim_round_s - 2.0).abs() < 1e-9,
+            "round ends at the 2 s fair-share drain"
+        );
+        assert_eq!(report.server_steps, 2);
+    }
+
+    /// Heterogeneous 6-device mock (two timing classes) used by the
+    /// cohort-equivalence tests — exercises distinct arrival instants,
+    /// tie-batches, server queueing, and multi-step pipelining at once.
+    fn het_fleet(n_cohorts: usize) -> MockOps {
+        let n = 6;
+        MockOps {
+            compute: (0..n).map(|d| [0.25, 1.0][d % 2]).collect(),
+            up_s: (0..n).map(|d| [0.125, 0.5][d % 2]).collect(),
+            down_s: (0..n).map(|d| [0.5, 0.25][d % 2]).collect(),
+            service_s: 0.01,
+            n_cohorts,
+            ..MockOps::uniform(n, 3, 0.0, 0.0, 0.0)
+        }
+    }
+
+    /// Everything a round decides, for bit-level comparison.
+    #[allow(clippy::type_complexity)]
+    fn round_fingerprint(
+        ops: MockOps,
+        r: RoundReport,
+    ) -> (Vec<String>, Vec<DeviceId>, u64, u64, u64, u64, usize, usize) {
+        (
+            ops.log,
+            ops.cancelled,
+            r.loss_sum.to_bits(),
+            r.sim_round_s.to_bits(),
+            r.queue_wait_s.to_bits(),
+            r.server_steps,
+            r.completed,
+            r.n_devices,
+        )
+    }
+
+    #[test]
+    fn cohort_grouped_async_is_bitwise_per_device() {
+        // the tentpole guarantee: cohort-grouped control flow replays the
+        // exact per-device op sequence — op log, drops, and every f64 bit —
+        // across all three straggler policies, het and hom fleets
+        let policies = [
+            StragglerPolicy::WaitAll,
+            StragglerPolicy::DeadlineDrop { deadline_s: 2.5 },
+            StragglerPolicy::Quorum { k: 4 },
+        ];
+        for policy in policies {
+            let run = |cohorts: usize| {
+                let mut ops = het_fleet(cohorts);
+                let r = AsyncEventScheduler::new(policy).run_round(&mut ops).unwrap();
+                round_fingerprint(ops, r)
+            };
+            assert_eq!(run(2), run(0), "het fleet, {}", policy.name());
+
+            let run_hom = |cohorts: usize| {
+                let mut ops = MockOps {
+                    n_cohorts: cohorts,
+                    ..MockOps::uniform(6, 2, 1.0, 2.0, 3.0)
+                };
+                let r = AsyncEventScheduler::new(policy).run_round(&mut ops).unwrap();
+                round_fingerprint(ops, r)
+            };
+            assert_eq!(run_hom(1), run_hom(0), "hom fleet, {}", policy.name());
+        }
+    }
+
+    #[test]
+    fn cohort_fold_sync_is_bitwise_event_path() {
+        let run = |cohorts: usize| {
+            let mut ops = MockOps {
+                service_s: 2.0,
+                ..het_fleet(cohorts)
+            };
+            let r = SyncEventScheduler::new().run_round(&mut ops).unwrap();
+            round_fingerprint(ops, r)
+        };
+        assert_eq!(run(4), run(0), "heap-free sync fold == event path");
+    }
+
+    #[test]
+    fn cohort_grouping_handles_table_overflow() {
+        // 40 distinct arrival instants against a 16-entry grouping table
+        // (cohorts = 1 → cap = 16): the batch flushes in segments, which
+        // must stay bit-identical (segmentation only groups less)
+        let run = |cohorts: usize| {
+            let mut ops = MockOps {
+                compute: (0..40).map(|d| d as f64 * 0.01).collect(),
+                n_cohorts: cohorts,
+                ..MockOps::uniform(40, 2, 0.0, 0.25, 0.125)
+            };
+            let r = AsyncEventScheduler::new(StragglerPolicy::WaitAll)
+                .run_round(&mut ops)
+                .unwrap();
+            round_fingerprint(ops, r)
+        };
+        assert_eq!(run(1), run(0));
+    }
+
+    #[test]
+    fn cohort_grouped_homogeneous_fleet_uses_one_group_per_phase() {
+        // 64 identical devices, grouped: every phase collapses to a single
+        // batch event, so the server order is device-id order and fan-in
+        // is one dispatch over the whole fleet
+        let mut ops = MockOps {
+            n_cohorts: 1,
+            ..MockOps::uniform(64, 1, 1.0, 2.0, 3.0)
+        };
+        let report = AsyncEventScheduler::new(StragglerPolicy::WaitAll)
+            .run_round(&mut ops)
+            .unwrap();
+        assert_eq!(ops.server_order(), (0..64).collect::<Vec<_>>());
+        let fanin_calls = ops.log.iter().filter(|l| l.starts_with("fanin:")).count();
+        assert_eq!(fanin_calls, 1, "one grouped fan-in dispatch");
+        assert_eq!(report.completed, 64);
+        assert_eq!(report.sim_round_s, 7.0); // 1 + 2 + 3 + 1
     }
 
     #[test]

@@ -7,11 +7,16 @@
 //! `tests/codec_zero_alloc.rs` (PR 4 pinned the codec half; this pins the
 //! model-compute half plus their composition).
 //!
-//! Scope note: the transport bookkeeping around a trainer round (event
-//! queue, per-batch `UplinkMsg` vectors, scoped worker spawns) still makes
-//! a handful of O(devices) allocations per round by design; what this test
-//! pins is the per-element compute + wire work — the part that used to
-//! allocate megabytes of parameter tensors per device step.
+//! Scope note: as of the fleet-scale PR the transport bookkeeping around
+//! a round (event queue, cohort grouping arenas, `UplinkMsg` staging
+//! vectors) is also allocation-free once warm — the scheduler owns
+//! round-persistent scratch and `RoundOps::fanout` fills a caller-owned
+//! buffer instead of returning a fresh `Vec`. That half is pinned by
+//! [`transport_round_is_allocation_free`] below, driving both schedulers
+//! over [`FleetOps`] with cohorts off and on. Still exempt by design:
+//! the shared-pipe modes (`SharedUplink`'s per-flow state grows with
+//! concurrent flows) and the reference (non-resident) compute path's
+//! per-step parameter clones — neither is on the fleet hot path.
 //!
 //! Verified with a counting global allocator, which is why this test lives
 //! alone in its own integration-test binary. Each window measures several
@@ -211,4 +216,62 @@ fn steady_state_training_round_is_allocation_free() {
         );
     }
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The transport half of the discipline: a full scheduler round —
+/// fan-out staging, event-queue (or cohort-fold) control flow, server
+/// contention accounting, fan-in — performs zero heap allocations once
+/// the round-persistent scratch is warm. Driven over [`FleetOps`]
+/// (pure-bookkeeping device work) so only the transport layer is on the
+/// clock, across both schedulers with the cohort path off and on.
+#[test]
+fn transport_round_is_allocation_free() {
+    use slfac::transport::fleet::{FleetCohort, FleetOps};
+    use slfac::transport::{
+        AsyncEventScheduler, RoundScheduler, StragglerPolicy, SyncEventScheduler,
+    };
+
+    let profiles = vec![
+        FleetCohort::default(),
+        FleetCohort {
+            compute_s: 0.006,
+            uplink_cost_s: 0.045,
+            downlink_s: 0.020,
+            uplink_bytes: 12_000,
+            downlink_bytes: 6_000,
+        },
+    ];
+    let schedulers: [(&str, Box<dyn RoundScheduler>); 2] = [
+        ("sync", Box::new(SyncEventScheduler::new())),
+        (
+            "async/wait-all",
+            Box::new(AsyncEventScheduler::new(StragglerPolicy::WaitAll)),
+        ),
+    ];
+    for (label, sched) in &schedulers {
+        for cohorts in [0usize, 4] {
+            let mut ops = FleetOps::new(64, 3, profiles.clone());
+            ops.set_cohorts(cohorts);
+            ops.set_server_service_s(5e-4);
+            // warm-up: grow the scheduler's round-persistent scratch and
+            // the fan-out staging buffer to their steady-state sizes
+            for _ in 0..3 {
+                sched.run_round(&mut ops).unwrap();
+            }
+            let min_allocs = (0..5)
+                .map(|_| {
+                    count_allocs(|| {
+                        for _ in 0..3 {
+                            sched.run_round(&mut ops).unwrap();
+                        }
+                    })
+                })
+                .min()
+                .unwrap();
+            assert_eq!(
+                min_allocs, 0,
+                "{label} cohorts={cohorts}: transport round allocated"
+            );
+        }
+    }
 }
