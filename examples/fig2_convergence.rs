@@ -1,26 +1,35 @@
 //! Fig. 2 reproduction: test accuracy vs communication rounds for SL-FAC
 //! against PQ-SL, TK-SL and FC-SL, on both datasets, IID and non-IID.
 //!
+//! The grid itself is declarative — `configs/sweeps/fig2_convergence.json`
+//! (dataset × partition × codec, with the byte-parity calibration on each
+//! baseline codec's axis entry) — and runs through the sweep
+//! orchestrator, so it checkpoints per run and resumes mid-grid:
+//!
 //! ```text
-//! cargo run --release --example fig2_convergence -- \
-//!     [--datasets mnist,ham] [--partitions iid,non-iid] [--rounds N] [--codecs ...]
+//! cargo run --release --example fig2_convergence -- [--workers N]
+//! # equivalently: slfac sweep run --spec configs/sweeps/fig2_convergence.json
 //! ```
 //!
-//! Writes one CSV per (setting, codec) under results/ and prints the
-//! paper-style convergence grids. Expect ~45 s per (codec, setting) at the
-//! default 15 rounds on a laptop-class CPU.
+//! Writes one CSV per run plus journal + `slfac-sweep/1` report under
+//! `results/fig2/`, and prints the paper-style convergence grids. Expect
+//! ~45 s per run at the default 15 rounds on a laptop-class CPU.
 
 use slfac::cli::Command;
-use slfac::config::{ExperimentConfig, Partition};
-use slfac::experiments::{print_convergence_table, run_suite, with_codec};
+use slfac::experiments::print_sweep_tables;
+use slfac::sweep::{run_sweep, SweepOptions, SweepSpec};
 
 fn main() -> anyhow::Result<()> {
     slfac::logging::init_from_env();
     let cmd = Command::new("fig2_convergence", "paper Fig. 2 reproduction")
-        .opt("datasets", "LIST", "comma list: mnist,ham", Some("mnist,ham"))
-        .opt("partitions", "LIST", "comma list: iid,non-iid", Some("iid,non-iid"))
-        .opt("codecs", "LIST", "comma list", Some("slfac,pq-sl,tk-sl,fc-sl"))
-        .opt("rounds", "N", "override rounds (0 = config default)", Some("0"));
+        .opt(
+            "spec",
+            "PATH",
+            "sweep spec",
+            Some("configs/sweeps/fig2_convergence.json"),
+        )
+        .opt("workers", "N", "concurrent runs (0 = auto)", None)
+        .opt("out-dir", "DIR", "results root", Some("results"));
     let m = match cmd.parse() {
         Ok(m) => m,
         Err(slfac::cli::CliError::Help(h)) => {
@@ -29,40 +38,17 @@ fn main() -> anyhow::Result<()> {
         }
         Err(slfac::cli::CliError::Bad(e)) => anyhow::bail!(e),
     };
-    let datasets: Vec<&str> = m.req("datasets").map_err(anyhow::Error::msg)?.split(',').collect();
-    let partitions: Vec<&str> = m.req("partitions").map_err(anyhow::Error::msg)?.split(',').collect();
-    let codecs: Vec<String> = m
-        .req("codecs")
-        .map_err(anyhow::Error::msg)?
-        .split(',')
-        .map(|s| s.to_string())
-        .collect();
-    let rounds_override: usize = m.get_parsed("rounds").map_err(anyhow::Error::msg)?.unwrap_or(0);
-
-    for dataset in &datasets {
-        for partition in &partitions {
-            let cfg_name = format!(
-                "{}_{}",
-                dataset,
-                if *partition == "iid" { "iid" } else { "noniid" }
-            );
-            let mut base = ExperimentConfig::load(&format!("configs/{cfg_name}.json"))?;
-            base.partition = if *partition == "iid" {
-                Partition::Iid
-            } else {
-                Partition::Dirichlet(0.5)
-            };
-            if rounds_override > 0 {
-                base.rounds = rounds_override;
-            }
-            let variants: Vec<ExperimentConfig> =
-                codecs.iter().map(|c| with_codec(&base, c)).collect();
-            let runs = run_suite(variants)?;
-            print_convergence_table(
-                &format!("Fig. 2 panel: {dataset} / {partition}"),
-                &runs,
-            );
-        }
-    }
+    let spec = SweepSpec::load(m.req("spec").map_err(anyhow::Error::msg)?)?;
+    let opts = SweepOptions {
+        workers: m.get_parsed("workers").map_err(anyhow::Error::msg)?,
+        out_dir: m.req("out-dir").map_err(anyhow::Error::msg)?.to_string(),
+        ..Default::default()
+    };
+    let outcome = run_sweep(&spec, &opts)?;
+    print_sweep_tables("Fig. 2 panel", &outcome.results);
+    println!(
+        "\n{} of {} runs journaled; report -> {}",
+        outcome.completed, outcome.grid, outcome.report_path
+    );
     Ok(())
 }

@@ -1,21 +1,29 @@
 //! Fig. 3 reproduction: impact of the energy threshold θ on model
 //! performance (MNIST, IID and non-IID).
 //!
+//! The grid is `configs/sweeps/fig3_theta.json` (partition × θ on the
+//! SL-FAC codec), run through the sweep orchestrator:
+//!
 //! ```text
-//! cargo run --release --example fig3_theta_sweep -- \
-//!     [--thetas 0.5,0.7,0.8,0.9,0.95] [--rounds N] [--partitions iid,non-iid]
+//! cargo run --release --example fig3_theta_sweep -- [--workers N]
+//! # equivalently: slfac sweep run --spec configs/sweeps/fig3_theta.json
 //! ```
 
 use slfac::cli::Command;
-use slfac::config::{ExperimentConfig, Partition};
-use slfac::experiments::{print_convergence_table, run_suite, with_theta};
+use slfac::experiments::print_sweep_tables;
+use slfac::sweep::{run_sweep, SweepOptions, SweepSpec};
 
 fn main() -> anyhow::Result<()> {
     slfac::logging::init_from_env();
     let cmd = Command::new("fig3_theta_sweep", "paper Fig. 3 reproduction")
-        .opt("thetas", "LIST", "θ values", Some("0.5,0.7,0.8,0.9,0.95"))
-        .opt("partitions", "LIST", "iid,non-iid", Some("iid,non-iid"))
-        .opt("rounds", "N", "override rounds (0 = config default)", Some("0"));
+        .opt(
+            "spec",
+            "PATH",
+            "sweep spec",
+            Some("configs/sweeps/fig3_theta.json"),
+        )
+        .opt("workers", "N", "concurrent runs (0 = auto)", None)
+        .opt("out-dir", "DIR", "results root", Some("results"));
     let m = match cmd.parse() {
         Ok(m) => m,
         Err(slfac::cli::CliError::Help(h)) => {
@@ -24,35 +32,17 @@ fn main() -> anyhow::Result<()> {
         }
         Err(slfac::cli::CliError::Bad(e)) => anyhow::bail!(e),
     };
-    let thetas: Vec<f64> = m
-        .req("thetas")
-        .map_err(anyhow::Error::msg)?
-        .split(',')
-        .map(|s| s.parse().unwrap())
-        .collect();
-    let partitions: Vec<&str> = m.req("partitions").map_err(anyhow::Error::msg)?.split(',').collect();
-    let rounds_override: usize = m.get_parsed("rounds").map_err(anyhow::Error::msg)?.unwrap_or(0);
-
-    for partition in &partitions {
-        let cfg_name = if *partition == "iid" { "mnist_iid" } else { "mnist_noniid" };
-        let mut base = ExperimentConfig::load(&format!("configs/{cfg_name}.json"))?;
-        base.partition = if *partition == "iid" {
-            Partition::Iid
-        } else {
-            Partition::Dirichlet(0.5)
-        };
-        base.codec = "slfac".into();
-        if rounds_override > 0 {
-            base.rounds = rounds_override;
-        }
-        let variants: Vec<ExperimentConfig> =
-            thetas.iter().map(|&t| with_theta(&base, t)).collect();
-        let mut runs = run_suite(variants)?;
-        // label columns by theta instead of codec
-        for (run, &t) in runs.iter_mut().zip(&thetas) {
-            run.cfg.codec = format!("θ={t}");
-        }
-        print_convergence_table(&format!("Fig. 3 panel: MNIST / {partition}"), &runs);
-    }
+    let spec = SweepSpec::load(m.req("spec").map_err(anyhow::Error::msg)?)?;
+    let opts = SweepOptions {
+        workers: m.get_parsed("workers").map_err(anyhow::Error::msg)?,
+        out_dir: m.req("out-dir").map_err(anyhow::Error::msg)?.to_string(),
+        ..Default::default()
+    };
+    let outcome = run_sweep(&spec, &opts)?;
+    print_sweep_tables("Fig. 3 panel", &outcome.results);
+    println!(
+        "\n{} of {} runs journaled; report -> {}",
+        outcome.completed, outcome.grid, outcome.report_path
+    );
     Ok(())
 }

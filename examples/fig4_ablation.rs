@@ -1,26 +1,44 @@
 //! Fig. 4 reproduction: the two ablation rows.
 //!
-//! * row 1 (`--part afd`): AFD vs magnitude-based and STD-based spatial
-//!   feature selection (same bit machinery, different "what to keep").
-//! * row 2 (`--part fqc`): FQC vs PowerQuant vs EasyQuant vs flat
-//!   AFD+uniform bits (same AFD front end where applicable, different
-//!   quantizer).
+//! * row 1 (`--part afd`, `configs/sweeps/fig4_afd.json`): AFD vs
+//!   magnitude-based and STD-based spatial feature selection (same bit
+//!   machinery, different "what to keep").
+//! * row 2 (`--part fqc`, `configs/sweeps/fig4_fqc.json`): FQC vs
+//!   PowerQuant vs EasyQuant vs flat AFD+uniform bits (same AFD front end
+//!   where applicable, different quantizer).
+//!
+//! Each row is its own sweep spec (partition × codec, byte-parity
+//! calibration on the codec axis), so each checkpoints and resumes
+//! independently:
 //!
 //! ```text
-//! cargo run --release --example fig4_ablation -- \
-//!     [--part afd|fqc|both] [--partitions iid,non-iid] [--rounds N]
+//! cargo run --release --example fig4_ablation -- [--part afd|fqc|both]
+//! # equivalently: slfac sweep run --spec configs/sweeps/fig4_afd.json
+//! #               slfac sweep run --spec configs/sweeps/fig4_fqc.json
 //! ```
 
 use slfac::cli::Command;
-use slfac::config::{ExperimentConfig, Partition};
-use slfac::experiments::{print_convergence_table, run_suite, with_codec};
+use slfac::experiments::print_sweep_tables;
+use slfac::sweep::{run_sweep, SweepOptions, SweepSpec};
 
 fn main() -> anyhow::Result<()> {
     slfac::logging::init_from_env();
     let cmd = Command::new("fig4_ablation", "paper Fig. 4 reproduction")
         .opt("part", "WHICH", "afd | fqc | both", Some("both"))
-        .opt("partitions", "LIST", "iid,non-iid", Some("iid,non-iid"))
-        .opt("rounds", "N", "override rounds (0 = config default)", Some("0"));
+        .opt(
+            "afd-spec",
+            "PATH",
+            "row-1 sweep spec",
+            Some("configs/sweeps/fig4_afd.json"),
+        )
+        .opt(
+            "fqc-spec",
+            "PATH",
+            "row-2 sweep spec",
+            Some("configs/sweeps/fig4_fqc.json"),
+        )
+        .opt("workers", "N", "concurrent runs (0 = auto)", None)
+        .opt("out-dir", "DIR", "results root", Some("results"));
     let m = match cmd.parse() {
         Ok(m) => m,
         Err(slfac::cli::CliError::Help(h)) => {
@@ -30,42 +48,28 @@ fn main() -> anyhow::Result<()> {
         Err(slfac::cli::CliError::Bad(e)) => anyhow::bail!(e),
     };
     let part = m.req("part").map_err(anyhow::Error::msg)?.to_string();
-    let partitions: Vec<&str> = m.req("partitions").map_err(anyhow::Error::msg)?.split(',').collect();
-    let rounds_override: usize = m.get_parsed("rounds").map_err(anyhow::Error::msg)?.unwrap_or(0);
-
-    let rows: Vec<(&str, Vec<&str>)> = match part.as_str() {
-        "afd" => vec![("AFD ablation (Fig. 4 row 1)", vec!["slfac", "magnitude", "std"])],
-        "fqc" => vec![(
-            "FQC ablation (Fig. 4 row 2)",
-            vec!["slfac", "pq-sl", "easyquant", "afd-uniform"],
-        )],
-        _ => vec![
-            ("AFD ablation (Fig. 4 row 1)", vec!["slfac", "magnitude", "std"]),
-            (
-                "FQC ablation (Fig. 4 row 2)",
-                vec!["slfac", "pq-sl", "easyquant", "afd-uniform"],
-            ),
+    let rows: Vec<(&str, &str)> = match part.as_str() {
+        "afd" => vec![("AFD ablation (Fig. 4 row 1)", "afd-spec")],
+        "fqc" => vec![("FQC ablation (Fig. 4 row 2)", "fqc-spec")],
+        "both" => vec![
+            ("AFD ablation (Fig. 4 row 1)", "afd-spec"),
+            ("FQC ablation (Fig. 4 row 2)", "fqc-spec"),
         ],
+        other => anyhow::bail!("--part must be afd | fqc | both, got '{other}'"),
     };
-
-    for (title, codecs) in rows {
-        for partition in &partitions {
-            let cfg_name = if *partition == "iid" { "mnist_iid" } else { "mnist_noniid" };
-            let mut base = ExperimentConfig::load(&format!("configs/{cfg_name}.json"))?;
-            base.partition = if *partition == "iid" {
-                Partition::Iid
-            } else {
-                Partition::Dirichlet(0.5)
-            };
-            base.name = format!("fig4_{}_{}", part, cfg_name);
-            if rounds_override > 0 {
-                base.rounds = rounds_override;
-            }
-            let variants: Vec<ExperimentConfig> =
-                codecs.iter().map(|c| with_codec(&base, c)).collect();
-            let runs = run_suite(variants)?;
-            print_convergence_table(&format!("{title}: MNIST / {partition}"), &runs);
-        }
+    let opts = SweepOptions {
+        workers: m.get_parsed("workers").map_err(anyhow::Error::msg)?,
+        out_dir: m.req("out-dir").map_err(anyhow::Error::msg)?.to_string(),
+        ..Default::default()
+    };
+    for (title, spec_opt) in rows {
+        let spec = SweepSpec::load(m.req(spec_opt).map_err(anyhow::Error::msg)?)?;
+        let outcome = run_sweep(&spec, &opts)?;
+        print_sweep_tables(title, &outcome.results);
+        println!(
+            "\n{} of {} runs journaled; report -> {}",
+            outcome.completed, outcome.grid, outcome.report_path
+        );
     }
     Ok(())
 }

@@ -36,10 +36,12 @@
 //! `SLFAC_BENCH_ONLY=engine|async|codec|compute|fleet|xla` restricts the
 //! run to one section (CI uses this to smoke the async scenarios, the
 //! codec kernels, the compute backend, and the fleet scale in isolation).
+//! An unknown section name is an error listing the valid names — it does
+//! not silently run zero sections.
 //!
 //! [`FleetOps`]: slfac::transport::FleetOps
 
-use slfac::bench::{black_box, BenchResult, Bencher};
+use slfac::bench::{black_box, report, BenchResult, Bencher, SectionFilter};
 use slfac::codec::{self, CodecParams, CodecScratch, Payload};
 use slfac::config::ExperimentConfig;
 use slfac::coordinator::Trainer;
@@ -416,10 +418,6 @@ fn bench_codec_kernels(b: &mut Bencher) {
 
     // machine-readable trajectory file
     let mut root = BTreeMap::new();
-    root.insert(
-        "schema".to_string(),
-        Json::Str("slfac-bench-codec/1".to_string()),
-    );
     root.insert("micro".to_string(), Json::Arr(micro_rows));
     root.insert(
         "slfac_fast_vs_reference".to_string(),
@@ -427,7 +425,8 @@ fn bench_codec_kernels(b: &mut Bencher) {
     );
     root.insert("rounds".to_string(), Json::Arr(round_rows));
     let path = "BENCH_codec.json";
-    std::fs::write(path, Json::Obj(root).to_string()).expect("write BENCH_codec.json");
+    report::write(path, &report::versioned("bench-codec", 1, root))
+        .expect("write BENCH_codec.json");
     println!("\ncodec bench results -> {path}");
 }
 
@@ -647,17 +646,14 @@ fn bench_compute(b: &mut Bencher) {
 
     // machine-readable trajectory file
     let mut root = BTreeMap::new();
-    root.insert(
-        "schema".to_string(),
-        Json::Str("slfac-bench-compute/1".to_string()),
-    );
     root.insert("kernels".to_string(), Json::Arr(kernel_rows));
     let mut step = BTreeMap::new();
     step.insert("fast_vs_reference_speedup".to_string(), Json::Num(step_ratio));
     root.insert("step".to_string(), Json::Obj(step));
     root.insert("rounds".to_string(), Json::Arr(round_rows));
     let path = "BENCH_compute.json";
-    std::fs::write(path, Json::Obj(root).to_string()).expect("write BENCH_compute.json");
+    report::write(path, &report::versioned("bench-compute", 1, root))
+        .expect("write BENCH_compute.json");
     println!("\ncompute bench results -> {path}");
 }
 
@@ -723,29 +719,27 @@ fn bench_fleet(b: &mut Bencher) {
     }
 
     let mut root = BTreeMap::new();
-    root.insert(
-        "schema".to_string(),
-        Json::Str("slfac-bench-fleet/1".to_string()),
-    );
     root.insert("rounds".to_string(), Json::Arr(rows));
     let path = "BENCH_fleet.json";
-    std::fs::write(path, Json::Obj(root).to_string()).expect("write BENCH_fleet.json");
+    report::write(path, &report::versioned("bench-fleet", 1, root))
+        .expect("write BENCH_fleet.json");
     println!("\nfleet bench results -> {path}");
 }
 
 fn main() {
     let mut b = Bencher::new();
-    let only = std::env::var("SLFAC_BENCH_ONLY").unwrap_or_default();
-    if !only.is_empty()
-        && !["engine", "async", "codec", "compute", "fleet", "xla"].contains(&only.as_str())
-    {
-        // a CI typo must fail loudly, not silently run zero sections
-        eprintln!(
-            "SLFAC_BENCH_ONLY='{only}' is not one of engine|async|codec|compute|fleet|xla"
-        );
-        std::process::exit(2);
-    }
-    let want = |section: &str| only.is_empty() || only == section;
+    // a CI typo must fail loudly, not silently run zero sections
+    let filter = match SectionFilter::from_env(
+        "SLFAC_BENCH_ONLY",
+        &["engine", "async", "codec", "compute", "fleet", "xla"],
+    ) {
+        Ok(f) => f,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    };
+    let want = |section: &str| filter.wants(section);
     if want("engine") {
         bench_sim_engine(&mut b);
     }

@@ -186,6 +186,86 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Which bench sections to run, driven by an env var
+/// (`SLFAC_BENCH_ONLY`). Unset or empty ⇒ every section runs. An unknown
+/// section name is an **error** listing the valid names — it used to
+/// silently run zero sections, which made a CI typo look like a pass.
+#[derive(Debug, Clone)]
+pub struct SectionFilter {
+    only: Option<String>,
+}
+
+impl SectionFilter {
+    /// Build from the environment variable `var`, validating the value
+    /// against `sections`.
+    pub fn from_env(var: &str, sections: &[&str]) -> Result<Self, String> {
+        Self::from_value(std::env::var(var).ok().as_deref(), var, sections)
+    }
+
+    /// Testable core: `value` is the raw variable value (`None` = unset).
+    pub fn from_value(value: Option<&str>, var: &str, sections: &[&str]) -> Result<Self, String> {
+        match value {
+            None | Some("") => Ok(SectionFilter { only: None }),
+            Some(v) if sections.contains(&v) => Ok(SectionFilter {
+                only: Some(v.to_string()),
+            }),
+            Some(v) => Err(format!(
+                "{var}='{v}' names no bench section (valid: {})",
+                sections.join(", ")
+            )),
+        }
+    }
+
+    /// Whether `section` should run under this filter.
+    pub fn wants(&self, section: &str) -> bool {
+        match &self.only {
+            None => true,
+            Some(o) => o == section,
+        }
+    }
+}
+
+pub mod report {
+    //! Schema-versioned machine-readable result files.
+    //!
+    //! Every JSON the harness emits for machines — the bench trajectory
+    //! files (`BENCH_codec.json` / `BENCH_compute.json` /
+    //! `BENCH_fleet.json`) and the sweep control plane (journal header,
+    //! status, paginated report pages) — carries a `schema` key of the
+    //! form `slfac-<family>/<version>`, written through this one place so
+    //! consumers dispatch on one stable field.
+
+    use crate::json::Json;
+    use std::collections::BTreeMap;
+
+    /// Stable schema identifier: `slfac-<family>/<version>`.
+    pub fn schema_id(family: &str, version: u32) -> String {
+        format!("slfac-{family}/{version}")
+    }
+
+    /// Wrap `fields` into a versioned document by inserting the `schema`
+    /// key.
+    ///
+    /// # Panics
+    /// If `fields` already contains a `schema` key — the writer owns it.
+    pub fn versioned(family: &str, version: u32, mut fields: BTreeMap<String, Json>) -> Json {
+        let prev = fields.insert("schema".into(), Json::Str(schema_id(family, version)));
+        assert!(prev.is_none(), "'schema' key is owned by bench::report");
+        Json::Obj(fields)
+    }
+
+    /// Serialize `doc` compactly and write it to `path`, creating parent
+    /// directories as needed.
+    pub fn write(path: &str, doc: &Json) -> std::io::Result<()> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, doc.to_string())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -241,5 +321,47 @@ mod tests {
     fn duration_formatting() {
         assert_eq!(fmt_dur(Duration::from_nanos(500)), "500 ns");
         assert!(fmt_dur(Duration::from_micros(1500)).contains("ms"));
+    }
+
+    #[test]
+    fn section_filter_accepts_known_rejects_unknown() {
+        let sections = ["codec", "compute", "fleet"];
+        let all = SectionFilter::from_value(None, "SLFAC_BENCH_ONLY", &sections).unwrap();
+        assert!(all.wants("codec") && all.wants("fleet"));
+        let empty =
+            SectionFilter::from_value(Some(""), "SLFAC_BENCH_ONLY", &sections).unwrap();
+        assert!(empty.wants("compute"));
+        let one =
+            SectionFilter::from_value(Some("codec"), "SLFAC_BENCH_ONLY", &sections).unwrap();
+        assert!(one.wants("codec"));
+        assert!(!one.wants("compute"));
+        // the bugfix: an unknown name errors, listing the valid sections
+        let err = SectionFilter::from_value(Some("codex"), "SLFAC_BENCH_ONLY", &sections)
+            .unwrap_err();
+        assert!(err.contains("codex"), "{err}");
+        assert!(err.contains("codec, compute, fleet"), "{err}");
+    }
+
+    #[test]
+    fn report_writer_stamps_schema() {
+        use crate::json::Json;
+        assert_eq!(report::schema_id("sweep", 1), "slfac-sweep/1");
+        let mut fields = std::collections::BTreeMap::new();
+        fields.insert("rows".to_string(), Json::Arr(vec![]));
+        let doc = report::versioned("bench-codec", 1, fields);
+        assert_eq!(
+            doc.get("schema").unwrap().as_str(),
+            Some("slfac-bench-codec/1")
+        );
+        assert_eq!(doc.to_string(), r#"{"rows":[],"schema":"slfac-bench-codec/1"}"#);
+    }
+
+    #[test]
+    #[should_panic(expected = "schema")]
+    fn report_writer_owns_schema_key() {
+        use crate::json::Json;
+        let mut fields = std::collections::BTreeMap::new();
+        fields.insert("schema".to_string(), Json::Str("mine".into()));
+        let _ = report::versioned("sweep", 1, fields);
     }
 }

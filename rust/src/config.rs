@@ -571,6 +571,10 @@ impl ExperimentConfig {
             Json::Num(self.codec_params.keep_fraction),
         );
         m.insert(
+            "random_fraction".into(),
+            Json::Num(self.codec_params.random_fraction),
+        );
+        m.insert(
             "codec_fast_path".into(),
             Json::Bool(self.codec_params.fast_path),
         );
@@ -629,6 +633,15 @@ impl ExperimentConfig {
             Json::Bool(self.compute_fast_path),
         );
         Json::Obj(m)
+    }
+
+    /// Stable 64-bit fingerprint of the canonical serialization
+    /// ([`ExperimentConfig::to_json`]). The sweep journal records it per
+    /// run so a resumed sweep can detect that a journaled run no longer
+    /// matches what the spec expands to. `artifacts_dir` is not part of
+    /// `to_json`, so relocating artifacts does not invalidate a journal.
+    pub fn fingerprint(&self) -> u64 {
+        self.to_json().fingerprint()
     }
 }
 
@@ -716,6 +729,38 @@ mod tests {
         let bad = Json::parse(r#"{"compute_fast_path": 1}"#).unwrap();
         let err = format!("{:#}", ExperimentConfig::from_json(&bad).unwrap_err());
         assert!(err.contains("compute_fast_path"), "{err}");
+    }
+
+    #[test]
+    fn random_fraction_roundtrips() {
+        let json = Json::parse(r#"{"codec": "tk-sl", "random_fraction": 0.02}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&json).unwrap();
+        assert!((cfg.codec_params.random_fraction - 0.02).abs() < 1e-12);
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(
+            back.codec_params.random_fraction.to_bits(),
+            cfg.codec_params.random_fraction.to_bits()
+        );
+    }
+
+    #[test]
+    fn fingerprint_tracks_every_serialized_knob() {
+        let base = ExperimentConfig::default();
+        assert_eq!(base.fingerprint(), ExperimentConfig::default().fingerprint());
+        let mut c = base.clone();
+        c.codec = "tk-sl".into();
+        assert_ne!(base.fingerprint(), c.fingerprint());
+        let mut c = base.clone();
+        c.codec_params.theta = 0.5;
+        assert_ne!(base.fingerprint(), c.fingerprint());
+        // random_fraction is serialized (the tk-sl calibration depends on
+        // it), so it must move the fingerprint too
+        let mut c = base.clone();
+        c.codec_params.random_fraction = 0.02;
+        assert_ne!(base.fingerprint(), c.fingerprint());
+        let mut c = base.clone();
+        c.seed = 99;
+        assert_ne!(base.fingerprint(), c.fingerprint());
     }
 
     #[test]

@@ -1,50 +1,19 @@
-//! Experiment-suite runner shared by the `examples/fig*` drivers.
+//! Paper-style result tables for sweep outcomes.
 //!
-//! Runs a list of [`ExperimentConfig`] variants against a shared executor
-//! (compiling each preset once), collects [`TrainOutcome`]s, prints
-//! paper-style tables, and writes per-run CSVs under `results/`.
+//! The figure grids themselves live in `configs/sweeps/*.json` and run
+//! through [`crate::sweep::run_sweep`] (the `examples/fig*` drivers are
+//! thin wrappers); this module only renders the executed runs as the
+//! accuracy-vs-round panels and headline tables the paper's Figs. 2–4
+//! use.
 
-use crate::config::ExperimentConfig;
-use crate::coordinator::{TrainOutcome, Trainer};
-use crate::runtime::ExecutorHandle;
-use anyhow::Result;
-use std::collections::BTreeSet;
+use crate::sweep::SweepRunResult;
 
-/// One completed run.
-pub struct SuiteRun {
-    /// The configuration that produced it.
-    pub cfg: ExperimentConfig,
-    /// The outcome.
-    pub outcome: TrainOutcome,
-}
-
-/// Run every variant sequentially on a shared executor; writes
-/// `results/<name>_<codec>.csv` per run.
-pub fn run_suite(variants: Vec<ExperimentConfig>) -> Result<Vec<SuiteRun>> {
-    anyhow::ensure!(!variants.is_empty(), "empty suite");
-    let presets: BTreeSet<String> = variants
-        .iter()
-        .map(|v| v.dataset.name().to_string())
-        .collect();
-    let presets: Vec<String> = presets.into_iter().collect();
-    let exec = ExecutorHandle::spawn(&variants[0].artifacts_dir, &presets)?;
-
-    let mut runs = Vec::with_capacity(variants.len());
-    for cfg in variants {
-        crate::info!("=== run {} / codec {} ===", cfg.name, cfg.codec);
-        let mut trainer = Trainer::new(cfg.clone(), exec.clone())?;
-        let outcome = trainer.run()?;
-        let path = format!("results/{}_{}.csv", cfg.name, cfg.codec);
-        outcome.history.write_csv(&path)?;
-        println!("{}   -> {path}", outcome.history.summary());
-        runs.push(SuiteRun { cfg, outcome });
-    }
-    Ok(runs)
-}
-
-/// Print an accuracy-vs-round grid (rows = rounds, columns = runs), the
-/// shape of the paper's Fig. 2/3/4 panels, plus a headline table.
-pub fn print_convergence_table(title: &str, runs: &[SuiteRun]) {
+/// Print one panel: an accuracy-vs-round grid (rows = rounds, columns =
+/// runs) plus a headline table with accuracy-per-byte numbers. Column
+/// labels are each run's last axis label (the innermost, fastest-varying
+/// axis — codec for Fig. 2/4, θ for Fig. 3), falling back to the codec
+/// name for axis-less runs.
+pub fn print_convergence_table(title: &str, runs: &[&SweepRunResult]) {
     println!("\n### {title}");
     print!("{:>5} ", "round");
     for r in runs {
@@ -66,10 +35,17 @@ pub fn print_convergence_table(title: &str, runs: &[SuiteRun]) {
         }
         println!();
     }
-    println!("\n{:<16} {:>10} {:>10} {:>12} {:>14}", "run", "final acc", "best acc", "MB total", "MB->90% best");
+    println!(
+        "\n{:<16} {:>10} {:>10} {:>12} {:>14}",
+        "run", "final acc", "best acc", "MB total", "MB->90% best"
+    );
+    let target = 0.9
+        * runs
+            .iter()
+            .map(|x| x.outcome.history.best_test_acc())
+            .fold(0.0, f64::max);
     for r in runs {
         let h = &r.outcome.history;
-        let target = 0.9 * runs.iter().map(|x| x.outcome.history.best_test_acc()).fold(0.0, f64::max);
         let mb_to_target = h
             .rounds_to_accuracy(target)
             .map(|round| h.cumulative_bytes(round - 1) as f64 / 1e6);
@@ -86,45 +62,45 @@ pub fn print_convergence_table(title: &str, runs: &[SuiteRun]) {
     }
 }
 
-fn label(r: &SuiteRun) -> String {
-    r.cfg.codec.clone()
-}
-
-/// Convenience: clone a base config with a new codec, applying the
-/// byte-parity calibration used throughout the evaluation: every baseline's
-/// aggressiveness is set so its wire volume lands near SL-FAC's (~8–10×
-/// compression on cut-layer tensors), making "accuracy at equal
-/// communication" the thing Fig. 2/4 actually compare (paper §III-A.3 pits
-/// methods at their operating points; with a simulated link we can do the
-/// fairer equal-bytes comparison and note it in EXPERIMENTS.md).
-pub fn with_codec(base: &ExperimentConfig, codec: &str) -> ExperimentConfig {
-    let mut c = base.clone();
-    c.codec = codec.into();
-    match codec {
-        // top-k keeps 6 B/element (u32 idx + f16): ~10% kept ⇒ ~6.7×
-        "tk-sl" => {
-            c.codec_params.keep_fraction = 0.08;
-            c.codec_params.random_fraction = 0.02;
-        }
-        // SplitFC at 4 bits: half the channels kept ⇒ ~14×
-        "fc-sl" => {
-            c.codec_params.keep_fraction = 0.5;
-        }
-        // spatial-selection ablations: ~15% kept at 6 bits ⇒ ~9×
-        "magnitude" | "std" => {
-            c.codec_params.keep_fraction = 0.15;
-            c.codec_params.uniform_bits = 6;
-        }
-        // uniform-bit quantizers at 4 bits ⇒ 8×
-        _ => {}
+/// Print every panel of a sweep: consecutive runs sharing all axis labels
+/// but the last form one panel (the grid expands with the last axis
+/// fastest, so a panel is exactly one pass of the innermost axis). Runs
+/// executed this invocation only — a resumed sweep prints the runs it
+/// actually ran.
+pub fn print_sweep_tables(title: &str, results: &[SweepRunResult]) {
+    if results.is_empty() {
+        println!("(no runs executed this invocation — nothing to tabulate)");
+        return;
     }
-    c
+    let mut start = 0;
+    while start < results.len() {
+        let key = panel_key(&results[start]);
+        let mut end = start + 1;
+        while end < results.len() && panel_key(&results[end]) == key {
+            end += 1;
+        }
+        let panel: Vec<&SweepRunResult> = results[start..end].iter().collect();
+        let panel_title = if key.is_empty() {
+            title.to_string()
+        } else {
+            format!("{title}: {key}")
+        };
+        print_convergence_table(&panel_title, &panel);
+        start = end;
+    }
 }
 
-/// Convenience: clone a base config with a new θ (name updated).
-pub fn with_theta(base: &ExperimentConfig, theta: f64) -> ExperimentConfig {
-    let mut c = base.clone();
-    c.codec_params.theta = theta;
-    c.name = format!("{}_theta{}", c.name, theta);
-    c
+/// All axis labels but the innermost: the panel a run belongs to.
+fn panel_key(r: &SweepRunResult) -> String {
+    match r.run.labels.split_last() {
+        Some((_, outer)) => outer.join(" / "),
+        None => String::new(),
+    }
+}
+
+fn label(r: &SweepRunResult) -> String {
+    match r.run.labels.last() {
+        Some(l) => l.clone(),
+        None => r.run.cfg.codec.clone(),
+    }
 }

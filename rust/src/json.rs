@@ -277,6 +277,17 @@ impl<'a> Parser<'a> {
     }
 }
 
+/// 64-bit FNV-1a hash — the cheap, dependency-free stable digest used for
+/// canonical-JSON fingerprints ([`Json::fingerprint`]).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 fn utf8_len(b: u8) -> usize {
     match b {
         0x00..=0x7F => 1,
@@ -362,6 +373,31 @@ impl Json {
         let mut out = String::new();
         self.write(&mut out);
         out
+    }
+
+    /// Shallow object overlay: `self` with every top-level entry of
+    /// `patch` inserted (replacing colliding keys). Returns `None` unless
+    /// both values are objects. The sweep expander uses this to stamp an
+    /// axis patch onto a base experiment config.
+    pub fn overlaid(&self, patch: &Json) -> Option<Json> {
+        match (self, patch) {
+            (Json::Obj(base), Json::Obj(p)) => {
+                let mut m = base.clone();
+                for (k, v) in p {
+                    m.insert(k.clone(), v.clone());
+                }
+                Some(Json::Obj(m))
+            }
+            _ => None,
+        }
+    }
+
+    /// 64-bit FNV-1a over the compact serialization. Equal values have
+    /// equal serializations (`BTreeMap` key order, shortest-roundtrip
+    /// float formatting), so equal values ⇒ equal fingerprints; the sweep
+    /// journal pins these to detect spec/config drift across restarts.
+    pub fn fingerprint(&self) -> u64 {
+        fnv1a64(self.to_string().as_bytes())
     }
 
     fn write(&self, out: &mut String) {
@@ -486,5 +522,35 @@ mod tests {
     fn utf8_passthrough() {
         let v = Json::parse("\"héllo wörld\"").unwrap();
         assert_eq!(v.as_str(), Some("héllo wörld"));
+    }
+
+    #[test]
+    fn overlay_replaces_and_keeps() {
+        let base = Json::parse(r#"{"a": 1, "b": 2}"#).unwrap();
+        let patch = Json::parse(r#"{"b": 9, "c": 3}"#).unwrap();
+        let out = base.overlaid(&patch).unwrap();
+        assert_eq!(out.get("a").unwrap().as_usize(), Some(1));
+        assert_eq!(out.get("b").unwrap().as_usize(), Some(9));
+        assert_eq!(out.get("c").unwrap().as_usize(), Some(3));
+        // shallow: nested objects are replaced wholesale, not merged
+        let base = Json::parse(r#"{"o": {"x": 1, "y": 2}}"#).unwrap();
+        let patch = Json::parse(r#"{"o": {"x": 7}}"#).unwrap();
+        let out = base.overlaid(&patch).unwrap();
+        assert_eq!(out.get("o"), patch.get("o"));
+        // non-objects refuse
+        assert!(Json::Num(1.0).overlaid(&patch).is_none());
+        assert!(base.overlaid(&Json::Null).is_none());
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_discriminating() {
+        // FNV-1a offset basis for empty input — pins the constant
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        let a = Json::parse(r#"{"x": 1, "y": 2}"#).unwrap();
+        // key order cannot matter: BTreeMap canonicalizes
+        let b = Json::parse(r#"{"y": 2, "x": 1}"#).unwrap();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let c = Json::parse(r#"{"x": 1, "y": 3}"#).unwrap();
+        assert_ne!(a.fingerprint(), c.fingerprint());
     }
 }

@@ -59,6 +59,14 @@
 //! GEMM kernels and in-place model state, bit-identical to the artifact
 //! `execute` path with zero steady-state heap allocations.
 //!
+//! # Sweeps
+//!
+//! Figure-scale experiment grids run through the [`sweep`] orchestrator:
+//! a declarative JSON [`sweep::SweepSpec`] (`configs/sweeps/`) expands
+//! into validated runs, executes across a worker pool with each
+//! completed run checkpointed to an append-only journal, and resumes
+//! mid-grid byte-identically (`slfac sweep run | status | report`).
+//!
 //! See `DESIGN.md` for the full system inventory and experiment index.
 
 pub mod bench;
@@ -76,6 +84,7 @@ pub mod net;
 pub mod quant;
 pub mod rng;
 pub mod runtime;
+pub mod sweep;
 pub mod tensor;
 pub mod testing;
 pub mod transport;

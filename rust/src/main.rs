@@ -4,6 +4,10 @@
 //!
 //! * `train`       — run one split-learning experiment from a config file
 //!                   (plus CLI overrides), writing a metrics CSV.
+//! * `sweep`       — declarative experiment grids: `sweep run` executes (or
+//!                   resumes) a `configs/sweeps/*.json` spec with journaled
+//!                   checkpoints, `sweep status` shows grid progress,
+//!                   `sweep report` emits paginated `slfac-sweep/1` JSON.
 //! * `inspect`     — print the artifact manifest and codec wire diagnostics.
 //! * `bench-codec` — quick codec throughput/ratio table (the full harness
 //!                   is `cargo bench`).
@@ -19,6 +23,10 @@
 //!     --shared-uplink-mbps 100 --server-service-s 0.002 --sample-fraction 0.25
 //! slfac train --scheduler async --devices 100000 --cohorts 2 --profile wifi/lte
 //! slfac train --devices 64 --downlink shared --shared-downlink-mbps 200
+//! slfac sweep run --spec configs/sweeps/fig2_convergence.json --workers 4
+//! slfac sweep status --spec configs/sweeps/fig2_convergence.json
+//! slfac sweep report --spec configs/sweeps/fig2_convergence.json \
+//!     --page-size 8 --cursor run:7
 //! slfac inspect --artifacts artifacts
 //! slfac bench-codec --shape 32x16x14x14
 //! ```
@@ -99,6 +107,38 @@ fn cli() -> Command {
                 .flag("quiet", "suppress per-round logs"),
         )
         .subcommand(
+            Command::new("sweep", "declarative experiment grids (run | status | report)")
+                .subcommand(
+                    Command::new("run", "execute (or resume) a sweep spec")
+                        .opt("spec", "PATH", "sweep spec JSON (see configs/sweeps/)", None)
+                        .opt("workers", "N", "concurrent runs (0 = auto; overrides spec)", None)
+                        .opt(
+                            "stop-after",
+                            "N",
+                            "execute at most N new runs, then stop cleanly (resumable)",
+                            None,
+                        )
+                        .opt("out-dir", "DIR", "results root", Some("results"))
+                        .opt("journal", "PATH", "journal path override", None)
+                        .flag("quiet", "suppress per-round logs"),
+                )
+                .subcommand(
+                    Command::new("status", "show journaled grid progress")
+                        .opt("spec", "PATH", "sweep spec JSON", None)
+                        .opt("out-dir", "DIR", "results root", Some("results"))
+                        .opt("journal", "PATH", "journal path override", None),
+                )
+                .subcommand(
+                    Command::new("report", "emit a paginated slfac-sweep/1 report page")
+                        .opt("spec", "PATH", "sweep spec JSON", None)
+                        .opt("out-dir", "DIR", "results root", Some("results"))
+                        .opt("journal", "PATH", "journal path override", None)
+                        .opt("page-size", "N", "runs per page (0 = everything)", Some("0"))
+                        .opt("cursor", "CUR", "resume after this cursor (run:<id>)", None)
+                        .opt("out", "PATH", "write the page here instead of stdout", None),
+                ),
+        )
+        .subcommand(
             Command::new("inspect", "print manifest + codec diagnostics")
                 .opt("artifacts", "DIR", "artifacts directory", Some("artifacts")),
         )
@@ -126,6 +166,7 @@ fn main() {
     let result = match &matches.subcommand {
         Some((name, sub)) => match name.as_str() {
             "train" => cmd_train(sub),
+            "sweep" => cmd_sweep(sub),
             "inspect" => cmd_inspect(sub),
             "bench-codec" => cmd_bench_codec(sub),
             _ => unreachable!(),
@@ -295,6 +336,89 @@ fn cmd_train(m: &Matches) -> Result<()> {
         .unwrap_or_else(|| format!("results/{name}_{codec_name}.csv"));
     outcome.history.write_csv(&out_path)?;
     println!("metrics -> {out_path}");
+    Ok(())
+}
+
+/// Load the spec + options shared by every `sweep` subcommand.
+fn sweep_common(m: &Matches) -> Result<(slfac::sweep::SweepSpec, slfac::sweep::SweepOptions)> {
+    let spec_path = m.req("spec").map_err(anyhow::Error::msg)?;
+    let spec = slfac::sweep::SweepSpec::load(spec_path)?;
+    let opts = slfac::sweep::SweepOptions {
+        workers: m.get_parsed::<usize>("workers").map_err(anyhow::Error::msg)?,
+        stop_after: m
+            .get_parsed::<usize>("stop-after")
+            .map_err(anyhow::Error::msg)?,
+        out_dir: m.req("out-dir").map_err(anyhow::Error::msg)?.to_string(),
+        journal_path: m.get("journal").map(|s| s.to_string()),
+    };
+    Ok((spec, opts))
+}
+
+fn cmd_sweep(m: &Matches) -> Result<()> {
+    match &m.subcommand {
+        Some((name, sub)) => match name.as_str() {
+            "run" => cmd_sweep_run(sub),
+            "status" => cmd_sweep_status(sub),
+            "report" => cmd_sweep_report(sub),
+            _ => unreachable!(),
+        },
+        None => anyhow::bail!("sweep needs a subcommand: run | status | report"),
+    }
+}
+
+fn cmd_sweep_run(m: &Matches) -> Result<()> {
+    if m.flag("quiet") {
+        slfac::logging::set_level(slfac::logging::Level::Warn);
+    }
+    let (spec, opts) = sweep_common(m)?;
+    let outcome = slfac::sweep::run_sweep(&spec, &opts)?;
+    slfac::experiments::print_sweep_tables(&spec.name, &outcome.results);
+    println!(
+        "sweep '{}': {} of {} runs journaled ({} skipped as already done, \
+         {} executed now)",
+        spec.name, outcome.completed, outcome.grid, outcome.skipped, outcome.executed
+    );
+    println!("journal -> {}", outcome.journal_path);
+    println!("report  -> {}", outcome.report_path);
+    if outcome.interrupted {
+        println!(
+            "stopped early (--stop-after): re-run the same command to resume \
+             the remaining {} runs",
+            outcome.grid - outcome.completed
+        );
+    }
+    Ok(())
+}
+
+fn cmd_sweep_status(m: &Matches) -> Result<()> {
+    let (spec, opts) = sweep_common(m)?;
+    println!("{}", slfac::sweep::sweep_status(&spec, &opts)?.to_string());
+    Ok(())
+}
+
+fn cmd_sweep_report(m: &Matches) -> Result<()> {
+    let (spec, opts) = sweep_common(m)?;
+    let runs = spec.expand()?;
+    let jpath = slfac::sweep::journal_path(&spec, &opts);
+    let journal = slfac::sweep::Journal::open(&jpath)
+        .with_context(|| format!("no journal for sweep '{}' yet — run it first", spec.name))?;
+    slfac::sweep::verify_journal(&spec, &runs, &journal)?;
+    let cursor = match m.get("cursor") {
+        Some(c) => Some(slfac::sweep::parse_cursor(c)?),
+        None => None,
+    };
+    let page_size: usize = m
+        .get_parsed("page-size")
+        .map_err(anyhow::Error::msg)?
+        .unwrap_or(0);
+    let doc = slfac::sweep::page(journal.header(), journal.records(), cursor, page_size);
+    match m.get("out") {
+        Some(path) => {
+            slfac::bench::report::write(path, &doc)?;
+            println!("report page -> {path}");
+        }
+        None => println!("{}", doc.to_string()),
+    }
     Ok(())
 }
 

@@ -1,0 +1,442 @@
+//! Append-only sweep results journal (`slfac-sweep-journal/1`).
+//!
+//! One JSON document per line: the header (sweep name, spec fingerprint,
+//! grid size) on line 1, then one [`RunRecord`] per completed run, in
+//! dense `run_id` order. Resume = read the journal, skip the first
+//! `records().len()` runs of the expanded grid.
+//!
+//! Crash safety: a record only counts once its trailing newline is on
+//! disk. An unterminated tail (torn write from a killed process) is
+//! ignored on open and truncated away by the first append, so a resumed
+//! sweep re-executes the torn run and rewrites the line — determinism
+//! makes the rewrite byte-identical to what an uninterrupted sweep would
+//! have produced.
+
+use crate::bench::report;
+use crate::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Seek, SeekFrom, Write};
+
+/// Schema family for journal lines; full id is `slfac-sweep-journal/1`.
+pub const JOURNAL_FAMILY: &str = "sweep-journal";
+/// Current journal schema version.
+pub const JOURNAL_VERSION: u32 = 1;
+
+/// Journal line 1: identifies which sweep the records belong to.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JournalHeader {
+    /// Sweep name from the spec.
+    pub sweep: String,
+    /// Hex [`SweepSpec::fingerprint_hex`](crate::sweep::SweepSpec::fingerprint_hex)
+    /// of the spec this journal was created for.
+    pub fingerprint: String,
+    /// Grid size the spec expands to.
+    pub grid: usize,
+}
+
+impl JournalHeader {
+    /// Serialize as the journal's first line.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("sweep".to_string(), Json::Str(self.sweep.clone()));
+        m.insert("fingerprint".to_string(), Json::Str(self.fingerprint.clone()));
+        m.insert("grid".to_string(), Json::Num(self.grid as f64));
+        report::versioned(JOURNAL_FAMILY, JOURNAL_VERSION, m)
+    }
+
+    /// Parse a header line, checking the schema id.
+    pub fn from_json(json: &Json) -> Result<Self> {
+        let obj = json.as_obj().context("journal header must be an object")?;
+        let schema = obj
+            .get("schema")
+            .and_then(|s| s.as_str())
+            .context("journal header missing 'schema'")?;
+        let want = report::schema_id(JOURNAL_FAMILY, JOURNAL_VERSION);
+        if schema != want {
+            bail!("journal schema '{schema}' is not '{want}'");
+        }
+        Ok(JournalHeader {
+            sweep: obj
+                .get("sweep")
+                .and_then(|s| s.as_str())
+                .context("journal header missing 'sweep'")?
+                .to_string(),
+            fingerprint: obj
+                .get("fingerprint")
+                .and_then(|s| s.as_str())
+                .context("journal header missing 'fingerprint'")?
+                .to_string(),
+            grid: obj
+                .get("grid")
+                .and_then(|g| g.as_usize())
+                .context("journal header missing 'grid'")?,
+        })
+    }
+}
+
+/// The deterministic per-run results pinned by the journal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunMetrics {
+    /// Rounds the run executed.
+    pub rounds: usize,
+    /// Training loss at the final round.
+    pub final_train_loss: f64,
+    /// Test loss at the final round.
+    pub final_test_loss: f64,
+    /// Test accuracy at the final round.
+    pub final_test_acc: f64,
+    /// Best test accuracy over all rounds.
+    pub best_test_acc: f64,
+    /// Total uplink bytes across rounds.
+    pub uplink_bytes: u64,
+    /// Total downlink bytes across rounds.
+    pub downlink_bytes: u64,
+    /// Uplink + downlink.
+    pub total_bytes: u64,
+    /// Simulated communication makespan, seconds.
+    pub makespan_s: f64,
+    /// Summed queue-wait across rounds, seconds.
+    pub queue_wait_s: f64,
+    /// Summed deadline-dropped device count across rounds.
+    pub dropped_devices: u64,
+}
+
+/// One journal line: a completed run and its metrics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunRecord {
+    /// Dense grid index (must equal the line's position in the journal).
+    pub run_id: usize,
+    /// Generated run name.
+    pub name: String,
+    /// Axis key → chosen scalar value.
+    pub axes: BTreeMap<String, Json>,
+    /// Hex fingerprint of the run's canonical
+    /// [`ExperimentConfig::to_json`](crate::config::ExperimentConfig::to_json),
+    /// so resume detects a spec whose expansion drifted.
+    pub config_fp: String,
+    /// The run's results.
+    pub metrics: RunMetrics,
+}
+
+impl RunRecord {
+    /// Serialize as a journal line / report `runs[]` entry. f64 fields use
+    /// the shortest-roundtrip formatter, so equal bits ⇒ equal text ⇒
+    /// byte-identical journals.
+    pub fn to_json(&self) -> Json {
+        let m = &self.metrics;
+        let mut j = BTreeMap::new();
+        j.insert("run_id".to_string(), Json::Num(self.run_id as f64));
+        j.insert("name".to_string(), Json::Str(self.name.clone()));
+        j.insert("axes".to_string(), Json::Obj(self.axes.clone()));
+        j.insert("config_fp".to_string(), Json::Str(self.config_fp.clone()));
+        j.insert("rounds".to_string(), Json::Num(m.rounds as f64));
+        j.insert("final_train_loss".to_string(), Json::Num(m.final_train_loss));
+        j.insert("final_test_loss".to_string(), Json::Num(m.final_test_loss));
+        j.insert("final_test_acc".to_string(), Json::Num(m.final_test_acc));
+        j.insert("best_test_acc".to_string(), Json::Num(m.best_test_acc));
+        j.insert("uplink_bytes".to_string(), Json::Num(m.uplink_bytes as f64));
+        j.insert("downlink_bytes".to_string(), Json::Num(m.downlink_bytes as f64));
+        j.insert("total_bytes".to_string(), Json::Num(m.total_bytes as f64));
+        j.insert("makespan_s".to_string(), Json::Num(m.makespan_s));
+        j.insert("queue_wait_s".to_string(), Json::Num(m.queue_wait_s));
+        j.insert("dropped_devices".to_string(), Json::Num(m.dropped_devices as f64));
+        Json::Obj(j)
+    }
+
+    /// Parse a journal line.
+    pub fn from_json(json: &Json) -> Result<Self> {
+        let obj = json.as_obj().context("journal record must be an object")?;
+        let f = |key: &str| -> Result<f64> {
+            obj.get(key)
+                .and_then(|v| v.as_f64())
+                .with_context(|| format!("journal record missing '{key}'"))
+        };
+        let u = |key: &str| -> Result<u64> { Ok(f(key)? as u64) };
+        let axes = match obj.get("axes") {
+            Some(Json::Obj(m)) => m.clone(),
+            Some(_) => bail!("journal record 'axes' must be an object"),
+            None => bail!("journal record missing 'axes'"),
+        };
+        Ok(RunRecord {
+            run_id: obj
+                .get("run_id")
+                .and_then(|v| v.as_usize())
+                .context("journal record missing 'run_id'")?,
+            name: obj
+                .get("name")
+                .and_then(|v| v.as_str())
+                .context("journal record missing 'name'")?
+                .to_string(),
+            axes,
+            config_fp: obj
+                .get("config_fp")
+                .and_then(|v| v.as_str())
+                .context("journal record missing 'config_fp'")?
+                .to_string(),
+            metrics: RunMetrics {
+                rounds: f("rounds")? as usize,
+                final_train_loss: f("final_train_loss")?,
+                final_test_loss: f("final_test_loss")?,
+                final_test_acc: f("final_test_acc")?,
+                best_test_acc: f("best_test_acc")?,
+                uplink_bytes: u("uplink_bytes")?,
+                downlink_bytes: u("downlink_bytes")?,
+                total_bytes: u("total_bytes")?,
+                makespan_s: f("makespan_s")?,
+                queue_wait_s: f("queue_wait_s")?,
+                dropped_devices: u("dropped_devices")?,
+            },
+        })
+    }
+}
+
+/// An open journal file: parsed header + records, plus the byte length of
+/// the valid (newline-terminated) prefix so appends can truncate a torn
+/// tail first.
+#[derive(Debug)]
+pub struct Journal {
+    path: String,
+    header: JournalHeader,
+    records: Vec<RunRecord>,
+    valid_len: u64,
+}
+
+impl Journal {
+    /// Create a fresh journal at `path` (parent directories included),
+    /// writing the header line. Fails if the file already exists — use
+    /// [`Journal::open_or_create`] for resume semantics.
+    pub fn create(path: &str, header: JournalHeader) -> Result<Journal> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {}", parent.display()))?;
+            }
+        }
+        let line = format!("{}\n", header.to_json().to_string());
+        let mut file = std::fs::OpenOptions::new()
+            .write(true)
+            .create_new(true)
+            .open(path)
+            .with_context(|| format!("creating journal {path}"))?;
+        file.write_all(line.as_bytes())
+            .and_then(|()| file.flush())
+            .with_context(|| format!("writing journal header to {path}"))?;
+        Ok(Journal {
+            path: path.to_string(),
+            header,
+            records: Vec::new(),
+            valid_len: line.len() as u64,
+        })
+    }
+
+    /// Open an existing journal, validating the header schema and dense
+    /// record order. An unterminated final line is treated as a torn
+    /// write: it is not parsed, and the next append truncates it.
+    pub fn open(path: &str) -> Result<Journal> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading journal {path}"))?;
+        // the valid prefix ends at the last newline; anything after it is
+        // a torn tail from an interrupted append
+        let valid = match text.rfind('\n') {
+            Some(pos) => &text[..=pos],
+            None => bail!("journal {path} has no complete lines"),
+        };
+        let mut lines = valid.lines();
+        let header_line = lines
+            .next()
+            .with_context(|| format!("journal {path} is empty"))?;
+        let header = Json::parse(header_line)
+            .map_err(anyhow::Error::from)
+            .and_then(|j| JournalHeader::from_json(&j))
+            .with_context(|| format!("journal {path} line 1"))?;
+        let mut records = Vec::new();
+        for (i, line) in lines.enumerate() {
+            let rec = Json::parse(line)
+                .map_err(anyhow::Error::from)
+                .and_then(|j| RunRecord::from_json(&j))
+                .with_context(|| format!("journal {path} line {}", i + 2))?;
+            if rec.run_id != records.len() {
+                bail!(
+                    "journal {path} line {}: run_id {} out of order (expected {})",
+                    i + 2,
+                    rec.run_id,
+                    records.len()
+                );
+            }
+            records.push(rec);
+        }
+        Ok(Journal {
+            path: path.to_string(),
+            header,
+            records,
+            valid_len: valid.len() as u64,
+        })
+    }
+
+    /// Open `path` if it exists, else create it with `header`.
+    pub fn open_or_create(path: &str, header: JournalHeader) -> Result<Journal> {
+        if std::path::Path::new(path).exists() {
+            Journal::open(path)
+        } else {
+            Journal::create(path, header)
+        }
+    }
+
+    /// Append a completed run. `rec.run_id` must be the next dense index.
+    /// Truncates any torn tail, then writes the full line + newline and
+    /// flushes before returning, so a record is durable once this returns.
+    pub fn append(&mut self, rec: RunRecord) -> Result<()> {
+        if rec.run_id != self.records.len() {
+            bail!(
+                "journal {}: appending run_id {} but {} records are journaled",
+                self.path,
+                rec.run_id,
+                self.records.len()
+            );
+        }
+        let line = format!("{}\n", rec.to_json().to_string());
+        let mut file = std::fs::OpenOptions::new()
+            .write(true)
+            .open(&self.path)
+            .with_context(|| format!("opening journal {}", self.path))?;
+        file.set_len(self.valid_len)
+            .and_then(|()| file.seek(SeekFrom::End(0)))
+            .and_then(|_| file.write_all(line.as_bytes()))
+            .and_then(|()| file.flush())
+            .with_context(|| format!("appending to journal {}", self.path))?;
+        self.valid_len += line.len() as u64;
+        self.records.push(rec);
+        Ok(())
+    }
+
+    /// The journal's header.
+    pub fn header(&self) -> &JournalHeader {
+        &self.header
+    }
+
+    /// Journaled records, in dense `run_id` order.
+    pub fn records(&self) -> &[RunRecord] {
+        &self.records
+    }
+
+    /// Number of completed (journaled) runs.
+    pub fn completed(&self) -> usize {
+        self.records.len()
+    }
+
+    /// The journal's file path.
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn temp_path(tag: &str) -> String {
+        static N: AtomicUsize = AtomicUsize::new(0);
+        let n = N.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir()
+            .join(format!("slfac_journal_{tag}_{}_{n}/journal.jsonl", std::process::id()))
+            .to_str()
+            .unwrap()
+            .to_string()
+    }
+
+    fn header() -> JournalHeader {
+        JournalHeader {
+            sweep: "g".into(),
+            fingerprint: "00000000deadbeef".into(),
+            grid: 3,
+        }
+    }
+
+    fn record(run_id: usize) -> RunRecord {
+        RunRecord {
+            run_id,
+            name: format!("g_run{run_id}"),
+            axes: BTreeMap::from([("seed".to_string(), Json::Num(run_id as f64))]),
+            config_fp: format!("{:016x}", 0xabcu64 + run_id as u64),
+            metrics: RunMetrics {
+                rounds: 2,
+                final_train_loss: 0.5 + run_id as f64,
+                final_test_loss: 0.25,
+                final_test_acc: 0.75,
+                best_test_acc: 0.8,
+                uplink_bytes: 1024,
+                downlink_bytes: 2048,
+                total_bytes: 3072,
+                makespan_s: 1.5,
+                queue_wait_s: 0.125,
+                dropped_devices: 1,
+            },
+        }
+    }
+
+    #[test]
+    fn roundtrips_header_and_records() {
+        let path = temp_path("roundtrip");
+        let mut j = Journal::create(&path, header()).unwrap();
+        j.append(record(0)).unwrap();
+        j.append(record(1)).unwrap();
+        let re = Journal::open(&path).unwrap();
+        assert_eq!(re.header(), &header());
+        assert_eq!(re.records(), &[record(0), record(1)]);
+        assert_eq!(re.completed(), 2);
+        // record schema survives a json round-trip exactly
+        let back = RunRecord::from_json(&record(0).to_json()).unwrap();
+        assert_eq!(back, record(0));
+    }
+
+    #[test]
+    fn torn_tail_is_ignored_and_truncated_by_append() {
+        let path = temp_path("torn");
+        let mut j = Journal::create(&path, header()).unwrap();
+        j.append(record(0)).unwrap();
+        let clean = std::fs::read(&path).unwrap();
+        // simulate a crash mid-append: garbage with no trailing newline
+        let mut torn = clean.clone();
+        torn.extend_from_slice(b"{\"run_id\":1,\"na");
+        std::fs::write(&path, &torn).unwrap();
+        let mut re = Journal::open(&path).unwrap();
+        assert_eq!(re.completed(), 1, "torn tail must not count");
+        re.append(record(1)).unwrap();
+        let mut want = clean;
+        want.extend_from_slice(format!("{}\n", record(1).to_json().to_string()).as_bytes());
+        assert_eq!(std::fs::read(&path).unwrap(), want);
+    }
+
+    #[test]
+    fn rejects_out_of_order_and_bad_schema() {
+        let path = temp_path("order");
+        let mut j = Journal::create(&path, header()).unwrap();
+        let err = j.append(record(1)).unwrap_err();
+        assert!(format!("{err:#}").contains("run_id 1"), "{err:#}");
+        j.append(record(0)).unwrap();
+        // hand-edit the file into an out-of-order state
+        let text = std::fs::read_to_string(&path).unwrap();
+        let skipped = text.replace("\"run_id\":0", "\"run_id\":2");
+        std::fs::write(&path, skipped).unwrap();
+        let err = Journal::open(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("out of order"), "{err:#}");
+        // wrong schema id on the header line
+        let bad = temp_path("schema");
+        std::fs::create_dir_all(std::path::Path::new(&bad).parent().unwrap()).unwrap();
+        std::fs::write(&bad, "{\"schema\":\"slfac-sweep-journal/9\"}\n").unwrap();
+        let err = Journal::open(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("slfac-sweep-journal/9"), "{err:#}");
+    }
+
+    #[test]
+    fn create_refuses_to_clobber() {
+        let path = temp_path("clobber");
+        Journal::create(&path, header()).unwrap();
+        assert!(Journal::create(&path, header()).is_err());
+        // open_or_create resumes instead
+        let j = Journal::open_or_create(&path, header()).unwrap();
+        assert_eq!(j.completed(), 0);
+    }
+}

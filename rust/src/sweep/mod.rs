@@ -1,0 +1,33 @@
+//! Experiment sweep orchestrator: declarative grids, resumable
+//! checkpointed execution, and a paginated results control plane.
+//!
+//! The paper's figures are grids — codec × scheduler × straggler ×
+//! sampling × contention × seed — and this module is the single harness
+//! that runs them reproducibly:
+//!
+//! - [`spec`]: [`SweepSpec`] parses a JSON grid description and
+//!   cross-products its axes into concrete, fully validated [`RunSpec`]s
+//!   (see `configs/sweeps/` for the shipped figure grids).
+//! - [`orchestrator`]: [`run_sweep`] plans, executes across a
+//!   scoped-thread worker pool, and checkpoints each completed run to an
+//!   append-only [`Journal`]; restarting skips journaled runs, and an
+//!   interrupted+resumed sweep is **byte-identical** to an uninterrupted
+//!   one at any worker count (pinned by `tests/sweep_determinism.rs`).
+//! - [`report`]: stable `slfac-sweep/1` pages with `run:<id>` keyset
+//!   cursors, queryable while the sweep is still executing.
+//!
+//! The `slfac sweep run | status | report` CLI subcommands front all
+//! three.
+
+pub mod journal;
+pub mod orchestrator;
+pub mod report;
+pub mod spec;
+
+pub use journal::{Journal, JournalHeader, RunMetrics, RunRecord};
+pub use orchestrator::{
+    journal_path, planned_header, run_sweep, sweep_status, verify_journal, SweepOptions,
+    SweepOutcome, SweepRunResult,
+};
+pub use report::{cursor_for, page, pages, parse_cursor};
+pub use spec::{Axis, RunSpec, SweepSpec};

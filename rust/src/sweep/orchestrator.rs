@@ -1,0 +1,371 @@
+//! Phased sweep orchestrator: **plan → execute → report**.
+//!
+//! Plan expands the grid, opens (or creates) the journal, and
+//! cross-checks it against the spec — sweep name, spec fingerprint, grid
+//! size, and each journaled record's run name + config fingerprint must
+//! match what the spec expands to, so a resumed sweep fails fast instead
+//! of silently mixing results from two different grids.
+//!
+//! Execute dispatches pending runs in **waves** of the worker-pool width
+//! through [`run_sharded`] (the same scoped-thread shard discipline as
+//! the round engine: each worker owns its slot exclusively; the shared
+//! [`ExecutorHandle`] is the only cross-thread state). After the wave
+//! barrier, completed runs are journaled **in grid order** — so the
+//! journal's bytes are independent of the worker count, and killing the
+//! process loses at most the in-flight wave, never reorders records.
+//!
+//! Report re-reads the journal from disk and writes an unpaginated
+//! `slfac-sweep/1` page next to it. Determinism argument: each run's
+//! metrics are bit-reproducible at a fixed seed regardless of worker
+//! count (the trainer's own differential pin), records serialize floats
+//! with the shortest-roundtrip formatter (equal bits ⇒ equal text), and
+//! records land in dense grid order — so interrupted+resumed, at any
+//! worker counts, is byte-identical to uninterrupted.
+
+use crate::coordinator::{effective_workers, run_sharded, TrainOutcome, Trainer};
+use crate::json::Json;
+use crate::runtime::{write_sim_manifest, BackendKind, ExecutorHandle};
+use crate::sweep::journal::{Journal, JournalHeader, RunMetrics, RunRecord};
+use crate::sweep::report;
+use crate::sweep::spec::{RunSpec, SweepSpec};
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Knobs for one `run_sweep` invocation (not part of the spec: none of
+/// these may change results, only where they land and how far they go).
+#[derive(Debug, Clone)]
+pub struct SweepOptions {
+    /// Sweep-level worker pool override (`None` = the spec's `workers`).
+    pub workers: Option<usize>,
+    /// Execute at most this many *new* runs, then stop cleanly — the
+    /// interruption hook the resume tests and the CI smoke use.
+    pub stop_after: Option<usize>,
+    /// Results root: the sweep writes under `<out_dir>/<sweep-name>/`.
+    pub out_dir: String,
+    /// Journal path override (`None` = `<out_dir>/<name>/journal.jsonl`).
+    pub journal_path: Option<String>,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        SweepOptions {
+            workers: None,
+            stop_after: None,
+            out_dir: "results".to_string(),
+            journal_path: None,
+        }
+    }
+}
+
+/// One executed run: its spec plus the full training outcome (history,
+/// comm stats). Only runs executed by *this* invocation appear —
+/// journaled-and-skipped runs are summarized by their [`RunRecord`]s.
+pub struct SweepRunResult {
+    /// The expanded run.
+    pub run: RunSpec,
+    /// The trainer's outcome.
+    pub outcome: TrainOutcome,
+}
+
+/// What one `run_sweep` invocation did.
+pub struct SweepOutcome {
+    /// Grid size.
+    pub grid: usize,
+    /// Runs already journaled before this invocation (skipped).
+    pub skipped: usize,
+    /// Runs executed by this invocation.
+    pub executed: usize,
+    /// Runs journaled in total after this invocation.
+    pub completed: usize,
+    /// True when the sweep stopped (via `stop_after`) before the grid was
+    /// exhausted.
+    pub interrupted: bool,
+    /// Journal path.
+    pub journal_path: String,
+    /// Report path (written every invocation, partial or not).
+    pub report_path: String,
+    /// Full outcomes of the runs this invocation executed, in grid order.
+    pub results: Vec<SweepRunResult>,
+}
+
+/// Where the journal lives for this spec + options.
+pub fn journal_path(spec: &SweepSpec, opts: &SweepOptions) -> String {
+    match &opts.journal_path {
+        Some(p) => p.clone(),
+        None => format!("{}/{}/journal.jsonl", opts.out_dir, spec.name),
+    }
+}
+
+/// The journal header this spec plans to: sweep name, spec fingerprint,
+/// grid size.
+pub fn planned_header(spec: &SweepSpec) -> JournalHeader {
+    JournalHeader {
+        sweep: spec.name.clone(),
+        fingerprint: spec.fingerprint_hex(),
+        grid: spec.grid_size(),
+    }
+}
+
+/// Cross-check an opened journal against the spec's expansion: header
+/// identity plus, per journaled record, the run name and config
+/// fingerprint the grid produces at that index.
+pub fn verify_journal(spec: &SweepSpec, runs: &[RunSpec], journal: &Journal) -> Result<()> {
+    let planned = planned_header(spec);
+    let found = journal.header();
+    if *found != planned {
+        bail!(
+            "journal {} belongs to a different sweep: journal has \
+             (sweep '{}', fingerprint {}, grid {}), spec expands to \
+             (sweep '{}', fingerprint {}, grid {})",
+            journal.path(),
+            found.sweep,
+            found.fingerprint,
+            found.grid,
+            planned.sweep,
+            planned.fingerprint,
+            planned.grid
+        );
+    }
+    for rec in journal.records() {
+        let run = &runs[rec.run_id];
+        let fp = format!("{:016x}", run.cfg.fingerprint());
+        if rec.name != run.name || rec.config_fp != fp {
+            bail!(
+                "journal {} record {}: journaled ('{}', config {}) but the \
+                 spec expands run {} to ('{}', config {})",
+                journal.path(),
+                rec.run_id,
+                rec.name,
+                rec.config_fp,
+                rec.run_id,
+                run.name,
+                fp
+            );
+        }
+    }
+    Ok(())
+}
+
+fn record_for(run: &RunSpec, outcome: &TrainOutcome) -> RunRecord {
+    let h = &outcome.history;
+    let last = h.rounds.last();
+    RunRecord {
+        run_id: run.run_id,
+        name: run.name.clone(),
+        axes: run.axes.clone(),
+        config_fp: format!("{:016x}", run.cfg.fingerprint()),
+        metrics: RunMetrics {
+            rounds: h.rounds.len(),
+            final_train_loss: last.map(|r| r.train_loss).unwrap_or(0.0),
+            final_test_loss: last.map(|r| r.test_loss).unwrap_or(0.0),
+            final_test_acc: h.final_test_acc(),
+            best_test_acc: h.best_test_acc(),
+            uplink_bytes: outcome.comm.uplink_bytes,
+            downlink_bytes: outcome.comm.downlink_bytes,
+            total_bytes: outcome.comm.uplink_bytes + outcome.comm.downlink_bytes,
+            makespan_s: outcome.comm.makespan_s,
+            // round-order folds: order-stable, so bit-reproducible
+            queue_wait_s: h.rounds.iter().map(|r| r.queue_wait_s).sum(),
+            dropped_devices: h.rounds.iter().map(|r| r.dropped_devices).sum(),
+        },
+    }
+}
+
+/// Run (or resume) a sweep. See the module docs for the phase lifecycle
+/// and the determinism argument.
+pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<SweepOutcome> {
+    // ---- plan ----
+    let runs = spec.expand()?;
+    let grid = runs.len();
+    // one executor serves every run, so they must share an artifacts dir
+    let artifacts_dir = runs
+        .first()
+        .map(|r| r.cfg.artifacts_dir.clone())
+        .unwrap_or_default();
+    if let Some(odd) = runs.iter().find(|r| r.cfg.artifacts_dir != artifacts_dir) {
+        bail!(
+            "sweep runs must share one artifacts_dir: run '{}' uses '{}' but \
+             run '{}' uses '{}' (set it in `base`, not on an axis)",
+            runs[0].name,
+            artifacts_dir,
+            odd.name,
+            odd.cfg.artifacts_dir
+        );
+    }
+    let jpath = journal_path(spec, opts);
+    let mut journal = Journal::open_or_create(&jpath, planned_header(spec))?;
+    verify_journal(spec, &runs, &journal)?;
+    let skipped = journal.completed();
+
+    // ---- execute ----
+    let mut next = skipped;
+    let mut budget = opts.stop_after;
+    let mut results: Vec<SweepRunResult> = Vec::new();
+    if next < grid && budget != Some(0) {
+        if spec.backend == BackendKind::Sim {
+            if let Some(sm) = &spec.sim_manifest {
+                let manifest = format!("{artifacts_dir}/manifest.json");
+                if !std::path::Path::new(&manifest).exists() {
+                    write_sim_manifest(&artifacts_dir, std::slice::from_ref(sm))
+                        .context("writing sweep sim manifest")?;
+                }
+            }
+        }
+        let presets: BTreeSet<String> = runs
+            .iter()
+            .map(|r| r.cfg.dataset.name().to_string())
+            .collect();
+        let presets: Vec<String> = presets.into_iter().collect();
+        let exec = ExecutorHandle::spawn_backend(&artifacts_dir, &presets, spec.backend)?;
+        let pool = effective_workers(opts.workers.unwrap_or(spec.workers), grid - next);
+        while next < grid && budget != Some(0) {
+            let mut wave_end = (next + pool).min(grid);
+            if let Some(b) = budget {
+                wave_end = wave_end.min(next + b);
+            }
+            // each slot owns its run id, executor clone, and result; the
+            // scoped workers touch nothing else
+            let mut slots: Vec<(usize, ExecutorHandle, Option<TrainOutcome>)> =
+                (next..wave_end).map(|i| (i, exec.clone(), None)).collect();
+            let wave_err = run_sharded(&mut slots, pool, |_, slot| {
+                let run = &runs[slot.0];
+                let mut trainer = Trainer::new(run.cfg.clone(), slot.1.clone())
+                    .with_context(|| format!("sweep run '{}'", run.name))?;
+                slot.2 = Some(
+                    trainer
+                        .run()
+                        .with_context(|| format!("sweep run '{}'", run.name))?,
+                );
+                Ok(())
+            });
+            // journal strictly in grid order; a failed slot stops the
+            // dense prefix so the journal never has holes
+            for (i, _, outcome) in slots {
+                let Some(outcome) = outcome else { break };
+                let run = &runs[i];
+                let csv = format!("{}/{}/{}.csv", opts.out_dir, spec.name, run.name);
+                outcome
+                    .history
+                    .write_csv(&csv)
+                    .with_context(|| format!("writing {csv}"))?;
+                journal.append(record_for(run, &outcome))?;
+                next = i + 1;
+                if let Some(b) = &mut budget {
+                    *b -= 1;
+                }
+                results.push(SweepRunResult {
+                    run: run.clone(),
+                    outcome,
+                });
+            }
+            wave_err?;
+        }
+    }
+
+    // ---- report ----
+    // re-read from disk so the report reflects exactly the journaled bytes
+    let journal = Journal::open(&jpath)?;
+    let doc = report::page(journal.header(), journal.records(), None, 0);
+    let report_path = format!("{}/{}/report.json", opts.out_dir, spec.name);
+    crate::bench::report::write(&report_path, &doc)
+        .with_context(|| format!("writing {report_path}"))?;
+
+    Ok(SweepOutcome {
+        grid,
+        skipped,
+        executed: results.len(),
+        completed: journal.completed(),
+        interrupted: next < grid,
+        journal_path: jpath,
+        report_path,
+        results,
+    })
+}
+
+/// Queryable sweep status (`slfac-sweep-status/1`): how much of the grid
+/// is journaled, without executing anything. A missing journal is an
+/// un-started sweep, not an error.
+pub fn sweep_status(spec: &SweepSpec, opts: &SweepOptions) -> Result<Json> {
+    let runs = spec.expand()?;
+    let jpath = journal_path(spec, opts);
+    let completed = if std::path::Path::new(&jpath).exists() {
+        let journal = Journal::open(&jpath)?;
+        verify_journal(spec, &runs, &journal)?;
+        journal.completed()
+    } else {
+        0
+    };
+    let mut m = BTreeMap::new();
+    m.insert("sweep".to_string(), Json::Str(spec.name.clone()));
+    m.insert("fingerprint".to_string(), Json::Str(spec.fingerprint_hex()));
+    m.insert("grid".to_string(), Json::Num(runs.len() as f64));
+    m.insert("completed".to_string(), Json::Num(completed as f64));
+    m.insert("pending".to_string(), Json::Num((runs.len() - completed) as f64));
+    m.insert("journal".to_string(), Json::Str(jpath));
+    Ok(crate::bench::report::versioned("sweep-status", 1, m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(text: &str) -> SweepSpec {
+        SweepSpec::from_json(&Json::parse(text).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn journal_path_defaults_under_out_dir() {
+        let s = spec(r#"{"name": "g"}"#);
+        let opts = SweepOptions::default();
+        assert_eq!(journal_path(&s, &opts), "results/g/journal.jsonl");
+        let opts = SweepOptions {
+            journal_path: Some("elsewhere/j.jsonl".into()),
+            ..Default::default()
+        };
+        assert_eq!(journal_path(&s, &opts), "elsewhere/j.jsonl");
+    }
+
+    #[test]
+    fn planned_header_pins_spec_identity() {
+        let s = spec(r#"{"name": "g", "axes": [{"seed": [1, 2, 3]}]}"#);
+        let h = planned_header(&s);
+        assert_eq!(h.sweep, "g");
+        assert_eq!(h.grid, 3);
+        assert_eq!(h.fingerprint, s.fingerprint_hex());
+    }
+
+    #[test]
+    fn status_of_unstarted_sweep_is_all_pending() {
+        let s = spec(r#"{"name": "g_unstarted_nowhere", "axes": [{"seed": [1, 2]}]}"#);
+        let opts = SweepOptions {
+            out_dir: std::env::temp_dir()
+                .join(format!("slfac_sweep_status_{}", std::process::id()))
+                .to_str()
+                .unwrap()
+                .to_string(),
+            ..Default::default()
+        };
+        let st = sweep_status(&s, &opts).unwrap();
+        assert_eq!(st.get("completed").and_then(|v| v.as_usize()), Some(0));
+        assert_eq!(st.get("pending").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(
+            st.get("schema").and_then(|v| v.as_str()),
+            Some("slfac-sweep-status/1")
+        );
+    }
+
+    #[test]
+    fn mixed_artifacts_dirs_are_rejected_before_any_io() {
+        let s = spec(
+            r#"{"name": "g", "axes": [
+                {"artifacts_dir": ["a", "b"]}]}"#,
+        );
+        let opts = SweepOptions {
+            out_dir: "/nonexistent-never-created".into(),
+            ..Default::default()
+        };
+        let err = format!("{:#}", run_sweep(&s, &opts).unwrap_err());
+        assert!(err.contains("share one artifacts_dir"), "{err}");
+        assert!(!std::path::Path::new("/nonexistent-never-created").exists());
+    }
+}

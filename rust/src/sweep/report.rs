@@ -1,0 +1,237 @@
+//! Paginated sweep reports (`slfac-sweep/1`).
+//!
+//! A report page is a self-describing JSON document over a prefix of the
+//! journal: header fields (sweep, fingerprint, grid, completed), the page
+//! of run records, and keyset-pagination cursors. Cursors are
+//! `run:<run_id>` strings — pass a page's `next_cursor` back to get the
+//! records *after* that run.
+//!
+//! Stability contract: because records are journaled in dense `run_id`
+//! order and every field of a record is deterministic, a **full** page
+//! (one holding `page_size` records) is byte-identical no matter how much
+//! of the sweep has completed since — its `next_cursor` depends only on
+//! the page's own last record and the (fixed) grid size, never on the
+//! current completion count. Only the frontier partial page changes as
+//! the sweep progresses, by gaining records. Consumers can therefore
+//! cache full pages of a sweep that is still executing.
+
+use crate::bench::report;
+use crate::json::Json;
+use crate::sweep::journal::{JournalHeader, RunRecord};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+/// Schema family for report pages; full id is `slfac-sweep/1`.
+pub const REPORT_FAMILY: &str = "sweep";
+/// Current report schema version.
+pub const REPORT_VERSION: u32 = 1;
+
+/// The cursor naming a run: page requests resume *after* it.
+pub fn cursor_for(run_id: usize) -> String {
+    format!("run:{run_id}")
+}
+
+/// Parse a `run:<id>` cursor.
+pub fn parse_cursor(s: &str) -> Result<usize> {
+    s.strip_prefix("run:")
+        .and_then(|id| id.parse().ok())
+        .with_context(|| format!("bad cursor '{s}' (expected 'run:<id>')"))
+}
+
+/// Build one report page over the journaled `records`, starting after
+/// `cursor` (from the beginning when `None`). `page_size == 0` means
+/// unpaginated: everything from the cursor on. Records must be in dense
+/// `run_id` order, as [`Journal::open`](crate::sweep::Journal::open)
+/// guarantees.
+pub fn page(
+    header: &JournalHeader,
+    records: &[RunRecord],
+    cursor: Option<usize>,
+    page_size: usize,
+) -> Json {
+    let from = cursor.map(|c| c + 1).unwrap_or(0).min(records.len());
+    let until = if page_size == 0 {
+        records.len()
+    } else {
+        (from + page_size).min(records.len())
+    };
+    let slice = &records[from..until];
+    // keyset semantics: the next cursor is a function of this page's own
+    // records and the fixed grid size — NOT of records.len() — so a full
+    // page's bytes never change as the journal grows behind it.
+    let next_cursor = match slice.last() {
+        Some(last) if last.run_id + 1 < header.grid => Json::Str(cursor_for(last.run_id)),
+        _ => Json::Null,
+    };
+    let mut m = BTreeMap::new();
+    m.insert("sweep".to_string(), Json::Str(header.sweep.clone()));
+    m.insert("fingerprint".to_string(), Json::Str(header.fingerprint.clone()));
+    m.insert("grid".to_string(), Json::Num(header.grid as f64));
+    m.insert("completed".to_string(), Json::Num(records.len() as f64));
+    m.insert(
+        "cursor".to_string(),
+        match cursor {
+            Some(c) => Json::Str(cursor_for(c)),
+            None => Json::Null,
+        },
+    );
+    m.insert("page_size".to_string(), Json::Num(page_size as f64));
+    m.insert("next_cursor".to_string(), next_cursor);
+    m.insert(
+        "runs".to_string(),
+        Json::Arr(slice.iter().map(|r| r.to_json()).collect()),
+    );
+    report::versioned(REPORT_FAMILY, REPORT_VERSION, m)
+}
+
+/// Walk the whole journal as a sequence of pages (the last may be
+/// partial). With `page_size == 0`, a single unpaginated page. Never
+/// emits a trailing empty page.
+pub fn pages(header: &JournalHeader, records: &[RunRecord], page_size: usize) -> Vec<Json> {
+    if page_size == 0 {
+        return vec![page(header, records, None, 0)];
+    }
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    loop {
+        // records are dense, so the cursor before index `from` is simply
+        // the previous record's run_id
+        let cursor = if from == 0 {
+            None
+        } else {
+            Some(records[from - 1].run_id)
+        };
+        out.push(page(header, records, cursor, page_size));
+        from += page_size;
+        if from >= records.len() {
+            break;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::journal::RunMetrics;
+
+    fn header(grid: usize) -> JournalHeader {
+        JournalHeader {
+            sweep: "g".into(),
+            fingerprint: "00000000deadbeef".into(),
+            grid,
+        }
+    }
+
+    fn record(run_id: usize) -> RunRecord {
+        RunRecord {
+            run_id,
+            name: format!("g_run{run_id}"),
+            axes: BTreeMap::new(),
+            config_fp: "0".repeat(16),
+            metrics: RunMetrics {
+                rounds: 1,
+                final_train_loss: 1.0,
+                final_test_loss: 1.0,
+                final_test_acc: 0.5,
+                best_test_acc: 0.5,
+                uplink_bytes: 1,
+                downlink_bytes: 1,
+                total_bytes: 2,
+                makespan_s: 1.0,
+                queue_wait_s: 0.0,
+                dropped_devices: 0,
+            },
+        }
+    }
+
+    fn records(n: usize) -> Vec<RunRecord> {
+        (0..n).map(record).collect()
+    }
+
+    fn runs_in(p: &Json) -> Vec<usize> {
+        p.get("runs")
+            .and_then(|r| r.as_arr())
+            .unwrap()
+            .iter()
+            .map(|r| r.get("run_id").and_then(|v| v.as_usize()).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn cursors_roundtrip_and_reject_garbage() {
+        assert_eq!(parse_cursor(&cursor_for(17)).unwrap(), 17);
+        for bad in ["", "17", "run:", "run:x", "page:3"] {
+            let err = parse_cursor(bad).unwrap_err();
+            assert!(format!("{err:#}").contains(bad), "{err:#}");
+        }
+    }
+
+    #[test]
+    fn pages_slice_the_journal_in_order() {
+        let h = header(5);
+        let rs = records(5);
+        let p1 = page(&h, &rs, None, 2);
+        assert_eq!(runs_in(&p1), [0, 1]);
+        assert_eq!(p1.get("next_cursor").and_then(|c| c.as_str()), Some("run:1"));
+        assert_eq!(p1.get("cursor"), Some(&Json::Null));
+        let p2 = page(&h, &rs, Some(1), 2);
+        assert_eq!(runs_in(&p2), [2, 3]);
+        assert_eq!(p2.get("cursor").and_then(|c| c.as_str()), Some("run:1"));
+        let p3 = page(&h, &rs, Some(3), 2);
+        assert_eq!(runs_in(&p3), [4]);
+        // last run of the grid ⇒ chain terminates
+        assert_eq!(p3.get("next_cursor"), Some(&Json::Null));
+        assert_eq!(p3.get("completed").and_then(|c| c.as_usize()), Some(5));
+    }
+
+    #[test]
+    fn full_pages_are_stable_as_the_journal_grows() {
+        let h = header(6);
+        let early = page(&h, &records(2), None, 2);
+        let late = page(&h, &records(6), None, 2);
+        assert_eq!(
+            early.get("runs"),
+            late.get("runs"),
+            "a full page's records must not change"
+        );
+        // next_cursor matches too: grid says more runs exist either way
+        assert_eq!(early.get("next_cursor"), late.get("next_cursor"));
+        // completed is the only field allowed to differ
+        assert_ne!(early.get("completed"), late.get("completed"));
+    }
+
+    #[test]
+    fn frontier_page_past_the_journal_is_empty_not_an_error() {
+        let h = header(8);
+        let p = page(&h, &records(3), Some(5), 2);
+        assert!(runs_in(&p).is_empty());
+        assert_eq!(p.get("next_cursor"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn unpaginated_page_holds_everything() {
+        let h = header(4);
+        let p = page(&h, &records(3), None, 0);
+        assert_eq!(runs_in(&p), [0, 1, 2]);
+        // grid not yet complete ⇒ the chain continues from run 2
+        assert_eq!(p.get("next_cursor").and_then(|c| c.as_str()), Some("run:2"));
+        let schema = p.get("schema").and_then(|s| s.as_str()).unwrap();
+        assert_eq!(schema, "slfac-sweep/1");
+    }
+
+    #[test]
+    fn pages_helper_covers_without_overlap() {
+        let h = header(7);
+        let rs = records(7);
+        let all = pages(&h, &rs, 3);
+        assert_eq!(all.len(), 3);
+        let ids: Vec<usize> = all.iter().flat_map(runs_in).collect();
+        assert_eq!(ids, (0..7).collect::<Vec<_>>());
+        assert_eq!(all[2].get("next_cursor"), Some(&Json::Null));
+        // no trailing empty page even when the journal divides evenly
+        let even = pages(&header(6), &records(6), 3);
+        assert_eq!(even.len(), 2);
+        assert!(!runs_in(&even[1]).is_empty());
+    }
+}

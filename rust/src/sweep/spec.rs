@@ -1,0 +1,563 @@
+//! Declarative sweep grids: [`SweepSpec`] cross-products its axes into
+//! concrete [`RunSpec`]s.
+//!
+//! A spec is a JSON file (see `configs/sweeps/`):
+//!
+//! ```json
+//! {
+//!   "name": "fig2",
+//!   "base": {"rounds": 15},
+//!   "axes": [
+//!     {"dataset": ["mnist", "ham"]},
+//!     {"codec": ["slfac", {"codec": "tk-sl", "keep_fraction": 0.08}]}
+//!   ]
+//! }
+//! ```
+//!
+//! `axes` is an **array** of single-key objects so author order survives
+//! the order-canonicalizing JSON parser; expansion is row-major with the
+//! **last axis fastest**, so consecutive runs form the paper's panel
+//! columns. Scalar axis values patch `{key: value}`; object values are
+//! multi-key patches applied together (they must set `key` itself, which
+//! names the run) — that is how a codec axis carries its byte-parity
+//! calibration (`keep_fraction`, `uniform_bits`, …) alongside the codec
+//! name. Every expanded config goes through
+//! [`ExperimentConfig::from_json`], so key and value errors are named
+//! exactly as for a hand-written config file.
+
+use crate::config::ExperimentConfig;
+use crate::json::Json;
+use crate::runtime::{BackendKind, SimManifestSpec};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// One sweep axis: a config key and the values it takes, in author order.
+#[derive(Debug, Clone)]
+pub struct Axis {
+    /// Config key this axis varies.
+    pub key: String,
+    /// Values: scalars, or objects carrying a multi-key patch.
+    pub values: Vec<Json>,
+}
+
+/// A declarative experiment grid, parsed from JSON.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    /// Sweep name: results live under `<out_dir>/<name>/` and every run
+    /// name is prefixed with it. Restricted to `[A-Za-z0-9_.-]`.
+    pub name: String,
+    /// Executor backend every run shares (`xla` default, or `sim`).
+    pub backend: BackendKind,
+    /// Sweep-level worker pool width — concurrent *runs* (`0` = auto).
+    /// Distinct from the per-run `workers` config key (device-parallel
+    /// round phases inside one run).
+    pub workers: usize,
+    /// With `backend = "sim"`: write this sim manifest into the shared
+    /// `artifacts_dir` when no `manifest.json` exists there, so a sweep
+    /// is self-contained from a scratch directory.
+    pub sim_manifest: Option<SimManifestSpec>,
+    /// Base experiment config (JSON object) every run starts from.
+    pub base: Json,
+    /// Axes, outermost first.
+    pub axes: Vec<Axis>,
+}
+
+/// One concrete run expanded from the grid.
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    /// Dense grid index, row-major with the last axis fastest. Doubles as
+    /// the journal record id and the pagination key.
+    pub run_id: usize,
+    /// Generated run name: `<sweep>_<label>_<label>…`.
+    pub name: String,
+    /// Per-axis label pieces, in axis order (the last one is the panel
+    /// column label).
+    pub labels: Vec<String>,
+    /// Axis key → the scalar value chosen for this run.
+    pub axes: BTreeMap<String, Json>,
+    /// The fully validated experiment configuration.
+    pub cfg: ExperimentConfig,
+}
+
+impl SweepSpec {
+    /// Load from a JSON file.
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading sweep spec {path}"))?;
+        let json = Json::parse(&text).with_context(|| format!("parsing sweep spec {path}"))?;
+        Self::from_json(&json).with_context(|| format!("validating sweep spec {path}"))
+    }
+
+    /// Build from parsed JSON. Unknown keys are rejected (typo safety),
+    /// and every rejection names the offending key and value, matching
+    /// the `config.rs` error style.
+    pub fn from_json(json: &Json) -> Result<Self> {
+        let obj = json.as_obj().context("sweep spec root must be an object")?;
+        let mut name: Option<String> = None;
+        let mut backend = BackendKind::Xla;
+        let mut workers = 0usize;
+        let mut sim_manifest: Option<SimManifestSpec> = None;
+        let mut base = Json::Obj(BTreeMap::new());
+        let mut axes: Vec<Axis> = Vec::new();
+        for (key, v) in obj {
+            match key.as_str() {
+                "name" => name = Some(v.as_str().context("name: string")?.to_string()),
+                "backend" => {
+                    backend = match v.as_str().context("backend: string")? {
+                        "xla" => BackendKind::Xla,
+                        "sim" => BackendKind::Sim,
+                        other => bail!("unknown backend '{other}' (expected xla | sim)"),
+                    }
+                }
+                "workers" => workers = v.as_usize().context("workers")?,
+                "sim_manifest" => sim_manifest = Some(parse_sim_manifest(v)?),
+                "base" => {
+                    v.as_obj().context("base: object")?;
+                    base = v.clone();
+                }
+                "axes" => axes = parse_axes(v)?,
+                other => bail!("unknown sweep key '{other}'"),
+            }
+        }
+        let name = name.context("sweep spec needs a 'name' key")?;
+        if name.is_empty() || !name.chars().all(path_safe) {
+            bail!(
+                "sweep name '{name}' must be non-empty and contain only \
+                 letters, digits, '_', '.', '-' (it becomes a directory name)"
+            );
+        }
+        if sim_manifest.is_some() && backend != BackendKind::Sim {
+            bail!("sim_manifest requires backend = \"sim\", got backend = \"xla\"");
+        }
+        Ok(SweepSpec {
+            name,
+            backend,
+            workers,
+            sim_manifest,
+            base,
+            axes,
+        })
+    }
+
+    /// Grid size: the product of axis lengths (1 when there are no axes —
+    /// the base config alone).
+    pub fn grid_size(&self) -> usize {
+        self.axes.iter().map(|a| a.values.len()).product()
+    }
+
+    /// Canonical serialization (status output + fingerprinting).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert(
+            "backend".to_string(),
+            Json::Str(
+                match self.backend {
+                    BackendKind::Xla => "xla",
+                    BackendKind::Sim => "sim",
+                }
+                .into(),
+            ),
+        );
+        m.insert("workers".to_string(), Json::Num(self.workers as f64));
+        if let Some(sm) = &self.sim_manifest {
+            let mut s = BTreeMap::new();
+            s.insert("preset".to_string(), Json::Str(sm.preset.clone()));
+            s.insert("batch_size".to_string(), Json::Num(sm.batch_size as f64));
+            s.insert(
+                "act_channels".to_string(),
+                Json::Num(sm.act_channels as f64),
+            );
+            s.insert("act_hw".to_string(), Json::Num(sm.act_hw as f64));
+            m.insert("sim_manifest".to_string(), Json::Obj(s));
+        }
+        m.insert("base".to_string(), self.base.clone());
+        m.insert(
+            "axes".to_string(),
+            Json::Arr(
+                self.axes
+                    .iter()
+                    .map(|a| {
+                        Json::Obj(BTreeMap::from([(
+                            a.key.clone(),
+                            Json::Arr(a.values.clone()),
+                        )]))
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(m)
+    }
+
+    /// Stable hex fingerprint of the canonical spec serialization. The
+    /// journal header pins it, so a resumed sweep detects spec drift
+    /// before touching any run.
+    pub fn fingerprint_hex(&self) -> String {
+        format!("{:016x}", self.to_json().fingerprint())
+    }
+
+    /// Cross-product the axes into concrete runs, row-major with the last
+    /// axis fastest. Each run's config is `base` ⊕ axis patches ⊕ the
+    /// generated run name, then parsed and validated by
+    /// [`ExperimentConfig::from_json`].
+    pub fn expand(&self) -> Result<Vec<RunSpec>> {
+        let total = self.grid_size();
+        let mut runs = Vec::with_capacity(total);
+        let mut names: BTreeMap<String, usize> = BTreeMap::new();
+        for run_id in 0..total {
+            // decode the mixed-radix grid index, last axis fastest
+            let mut picks = vec![0usize; self.axes.len()];
+            let mut rem = run_id;
+            for (ai, axis) in self.axes.iter().enumerate().rev() {
+                picks[ai] = rem % axis.values.len();
+                rem /= axis.values.len();
+            }
+            let mut doc = self.base.clone();
+            let mut labels = Vec::with_capacity(self.axes.len());
+            let mut chosen = BTreeMap::new();
+            for (axis, &pi) in self.axes.iter().zip(&picks) {
+                let val = &axis.values[pi];
+                let patch = match val {
+                    Json::Obj(_) => val.clone(),
+                    scalar => {
+                        Json::Obj(BTreeMap::from([(axis.key.clone(), scalar.clone())]))
+                    }
+                };
+                doc = doc
+                    .overlaid(&patch)
+                    .expect("base and axis patches are objects (validated at parse)");
+                labels.push(value_label(&axis.key, val)?);
+                let scalar = match val {
+                    Json::Obj(m) => m.get(&axis.key).expect("validated at parse").clone(),
+                    s => s.clone(),
+                };
+                chosen.insert(axis.key.clone(), scalar);
+            }
+            let run_name = if labels.is_empty() {
+                format!("{}_base", self.name)
+            } else {
+                format!("{}_{}", self.name, labels.join("_"))
+            };
+            let name_patch =
+                Json::Obj(BTreeMap::from([("name".to_string(), Json::Str(run_name.clone()))]));
+            doc = doc.overlaid(&name_patch).expect("doc is an object");
+            let cfg = ExperimentConfig::from_json(&doc)
+                .with_context(|| format!("sweep run '{run_name}' (run {run_id} of {total})"))?;
+            if let Some(prev) = names.insert(run_name.clone(), run_id) {
+                bail!(
+                    "runs {prev} and {run_id} are both labelled '{run_name}' — \
+                     distinct axis values collide after label sanitizing"
+                );
+            }
+            runs.push(RunSpec {
+                run_id,
+                name: run_name,
+                labels,
+                axes: chosen,
+                cfg,
+            });
+        }
+        Ok(runs)
+    }
+}
+
+fn path_safe(c: char) -> bool {
+    c.is_ascii_alphanumeric() || matches!(c, '_' | '.' | '-')
+}
+
+fn sanitize(s: &str) -> String {
+    s.chars().map(|c| if path_safe(c) { c } else { '-' }).collect()
+}
+
+/// The label piece an axis value contributes to the run name. Object
+/// values must set the axis key itself; its scalar names the run. Strings
+/// label as themselves (`slfac`), numbers as `<key><value>` (`theta0.5`),
+/// bools as `<key>-<value>`.
+fn value_label(key: &str, val: &Json) -> Result<String> {
+    let scalar = match val {
+        Json::Obj(m) => m.get(key).with_context(|| {
+            format!(
+                "axis '{key}': an object value must set the '{key}' key itself \
+                 (it names the run)"
+            )
+        })?,
+        other => other,
+    };
+    let raw = match scalar {
+        Json::Str(s) => s.clone(),
+        Json::Num(v) => {
+            let text = Json::Num(*v).to_string(); // shortest-roundtrip, int-aware
+            format!("{key}{text}")
+        }
+        Json::Bool(b) => format!("{key}-{b}"),
+        other => bail!(
+            "axis '{key}': values must be strings, numbers, bools, or patch \
+             objects, got {}",
+            kind_name(other)
+        ),
+    };
+    Ok(sanitize(&raw))
+}
+
+fn kind_name(v: &Json) -> &'static str {
+    match v {
+        Json::Null => "null",
+        Json::Bool(_) => "a bool",
+        Json::Num(_) => "a number",
+        Json::Str(_) => "a string",
+        Json::Arr(_) => "an array",
+        Json::Obj(_) => "an object",
+    }
+}
+
+fn parse_axes(v: &Json) -> Result<Vec<Axis>> {
+    let arr = v
+        .as_arr()
+        .context("axes: array of single-key objects like {\"codec\": [...]}")?;
+    let mut axes: Vec<Axis> = Vec::new();
+    for (i, item) in arr.iter().enumerate() {
+        let obj = item
+            .as_obj()
+            .with_context(|| format!("axes[{i}] must be a single-key object"))?;
+        if obj.len() != 1 {
+            bail!(
+                "axes[{i}] must have exactly one key (the config key it varies), \
+                 got {} keys",
+                obj.len()
+            );
+        }
+        let (key, values) = obj.iter().next().expect("len == 1");
+        let values = values
+            .as_arr()
+            .with_context(|| format!("axis '{key}': values must be an array"))?;
+        if values.is_empty() {
+            bail!("axis '{key}' has no values");
+        }
+        if axes.iter().any(|a| a.key == *key) {
+            bail!("duplicate axis '{key}'");
+        }
+        let mut labels: Vec<String> = Vec::with_capacity(values.len());
+        for (j, val) in values.iter().enumerate() {
+            let label = value_label(key, val).with_context(|| format!("axis '{key}' value {j}"))?;
+            if labels.contains(&label) {
+                bail!("axis '{key}' repeats the value labelled '{label}'");
+            }
+            labels.push(label);
+        }
+        axes.push(Axis {
+            key: key.clone(),
+            values: values.to_vec(),
+        });
+    }
+    Ok(axes)
+}
+
+fn parse_sim_manifest(v: &Json) -> Result<SimManifestSpec> {
+    let obj = v.as_obj().context("sim_manifest: object")?;
+    let mut spec = SimManifestSpec {
+        preset: "mnist".into(),
+        batch_size: 8,
+        act_channels: 2,
+        act_hw: 4,
+    };
+    for (key, v) in obj {
+        match key.as_str() {
+            "preset" => {
+                spec.preset = v.as_str().context("sim_manifest.preset: string")?.to_string()
+            }
+            "batch_size" => spec.batch_size = v.as_usize().context("sim_manifest.batch_size")?,
+            "act_channels" => {
+                spec.act_channels = v.as_usize().context("sim_manifest.act_channels")?
+            }
+            "act_hw" => spec.act_hw = v.as_usize().context("sim_manifest.act_hw")?,
+            other => bail!("unknown sim_manifest key '{other}'"),
+        }
+    }
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(text: &str) -> Result<SweepSpec> {
+        SweepSpec::from_json(&Json::parse(text).unwrap())
+    }
+
+    #[test]
+    fn minimal_spec_expands_to_base() {
+        let s = spec(r#"{"name": "solo"}"#).unwrap();
+        assert_eq!(s.grid_size(), 1);
+        let runs = s.expand().unwrap();
+        assert_eq!(runs.len(), 1);
+        assert_eq!(runs[0].name, "solo_base");
+        assert_eq!(runs[0].cfg.name, "solo_base");
+        assert_eq!(runs[0].cfg.codec, "slfac"); // defaults fill in
+    }
+
+    #[test]
+    fn expansion_is_row_major_last_axis_fastest() {
+        let s = spec(
+            r#"{"name": "g",
+                "axes": [{"codec": ["slfac", "pq-sl"]}, {"seed": [7, 9]}]}"#,
+        )
+        .unwrap();
+        let runs = s.expand().unwrap();
+        assert_eq!(runs.len(), 4);
+        let names: Vec<&str> = runs.iter().map(|r| r.name.as_str()).collect();
+        assert_eq!(
+            names,
+            ["g_slfac_seed7", "g_slfac_seed9", "g_pq-sl_seed7", "g_pq-sl_seed9"]
+        );
+        assert_eq!(runs[2].cfg.codec, "pq-sl");
+        assert_eq!(runs[2].cfg.seed, 7);
+        assert_eq!(runs[3].cfg.seed, 9);
+        // run_id is the dense index and the seed axis landed in `axes`
+        for (i, r) in runs.iter().enumerate() {
+            assert_eq!(r.run_id, i);
+            assert!(r.axes.contains_key("codec") && r.axes.contains_key("seed"));
+        }
+    }
+
+    #[test]
+    fn object_values_patch_multiple_keys() {
+        let s = spec(
+            r#"{"name": "g", "axes": [
+                {"codec": ["slfac",
+                           {"codec": "tk-sl", "keep_fraction": 0.08,
+                            "random_fraction": 0.02}]}]}"#,
+        )
+        .unwrap();
+        let runs = s.expand().unwrap();
+        assert_eq!(runs[1].name, "g_tk-sl");
+        assert_eq!(runs[1].cfg.codec, "tk-sl");
+        assert!((runs[1].cfg.codec_params.keep_fraction - 0.08).abs() < 1e-12);
+        assert!((runs[1].cfg.codec_params.random_fraction - 0.02).abs() < 1e-12);
+        // the slfac run keeps the defaults
+        assert!((runs[0].cfg.codec_params.keep_fraction
+            - crate::codec::CodecParams::default().keep_fraction)
+            .abs()
+            < 1e-12);
+    }
+
+    #[test]
+    fn base_seeds_every_run_and_axes_override_it() {
+        let s = spec(
+            r#"{"name": "g", "base": {"rounds": 3, "seed": 42},
+                "axes": [{"seed": [7, 42]}]}"#,
+        )
+        .unwrap();
+        let runs = s.expand().unwrap();
+        assert_eq!(runs[0].cfg.rounds, 3);
+        assert_eq!(runs[0].cfg.seed, 7);
+        // codec params inherit the per-run seed (from_json contract)
+        assert_eq!(runs[0].cfg.codec_params.seed, 7);
+        assert_eq!(runs[1].cfg.seed, 42);
+    }
+
+    #[test]
+    fn errors_name_key_and_value() {
+        for (bad, needle) in [
+            (r#"{"name": "g", "axez": []}"#, "axez"),
+            (r#"{"base": {}}"#, "name"),
+            (r#"{"name": "a b"}"#, "a b"),
+            (r#"{"name": "g", "backend": "tpu"}"#, "tpu"),
+            (r#"{"name": "g", "sim_manifest": {}}"#, "sim_manifest"),
+            (r#"{"name": "g", "axes": [{"codec": []}]}"#, "axis 'codec' has no values"),
+            (
+                r#"{"name": "g", "axes": [{"codec": ["a"], "seed": [1]}]}"#,
+                "exactly one key",
+            ),
+            (
+                r#"{"name": "g", "axes": [{"seed": [1]}, {"seed": [2]}]}"#,
+                "duplicate axis 'seed'",
+            ),
+            (
+                r#"{"name": "g", "axes": [{"seed": [1, 1]}]}"#,
+                "repeats the value",
+            ),
+            (
+                r#"{"name": "g", "axes": [{"codec": [{"keep_fraction": 0.5}]}]}"#,
+                "must set the 'codec' key",
+            ),
+            (r#"{"name": "g", "axes": [{"codec": [null]}]}"#, "null"),
+            // config-level validation flows through with the run context
+            (r#"{"name": "g", "axes": [{"theta": [1.5]}]}"#, "theta"),
+            (r#"{"name": "g", "base": {"codek": "slfac"}}"#, "codek"),
+        ] {
+            let err = match spec(bad) {
+                Err(e) => format!("{e:#}"),
+                Ok(s) => match s.expand() {
+                    Err(e) => format!("{e:#}"),
+                    Ok(_) => panic!("should reject {bad}"),
+                },
+            };
+            assert!(err.contains(needle), "error for {bad} should name '{needle}': {err}");
+        }
+    }
+
+    #[test]
+    fn expand_error_names_the_run() {
+        let s = spec(r#"{"name": "g", "axes": [{"theta": [0.9, 1.5]}]}"#).unwrap();
+        let err = format!("{:#}", s.expand().unwrap_err());
+        assert!(err.contains("g_theta1.5"), "{err}");
+        assert!(err.contains("run 1 of 2"), "{err}");
+    }
+
+    #[test]
+    fn fingerprint_pins_the_whole_spec() {
+        let a = spec(r#"{"name": "g", "axes": [{"seed": [1, 2]}]}"#).unwrap();
+        let b = spec(r#"{"name": "g", "axes": [{"seed": [1, 2]}]}"#).unwrap();
+        assert_eq!(a.fingerprint_hex(), b.fingerprint_hex());
+        let c = spec(r#"{"name": "g", "axes": [{"seed": [1, 3]}]}"#).unwrap();
+        assert_ne!(a.fingerprint_hex(), c.fingerprint_hex());
+        let d = spec(r#"{"name": "g", "base": {"rounds": 9}, "axes": [{"seed": [1, 2]}]}"#)
+            .unwrap();
+        assert_ne!(a.fingerprint_hex(), d.fingerprint_hex());
+        assert_eq!(a.fingerprint_hex().len(), 16);
+    }
+
+    #[test]
+    fn sim_manifest_requires_sim_backend_and_parses() {
+        let s = spec(
+            r#"{"name": "g", "backend": "sim",
+                "sim_manifest": {"preset": "mnist", "batch_size": 8,
+                                 "act_channels": 2, "act_hw": 4}}"#,
+        )
+        .unwrap();
+        let sm = s.sim_manifest.unwrap();
+        assert_eq!(sm.preset, "mnist");
+        assert_eq!((sm.batch_size, sm.act_channels, sm.act_hw), (8, 2, 4));
+        let err = spec(r#"{"name": "g", "sim_manifest": {"preset": "mnist"}}"#).unwrap_err();
+        assert!(format!("{err:#}").contains("backend"), "{err:#}");
+        let err = spec(r#"{"name": "g", "backend": "sim", "sim_manifest": {"presett": "x"}}"#)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("presett"), "{err:#}");
+    }
+
+    #[test]
+    fn label_sanitizing_collisions_are_rejected() {
+        // 'a/b' and 'a-b' both sanitize to 'a-b' — ambiguous run names
+        let s = spec(r#"{"name": "g", "axes": [{"profile": ["wifi/lte", "wifi-lte"]}]}"#);
+        let err = format!("{:#}", s.unwrap_err());
+        assert!(err.contains("repeats the value"), "{err}");
+    }
+
+    #[test]
+    fn shipped_sweep_specs_validate_and_expand() {
+        let mut seen = 0;
+        for entry in std::fs::read_dir("configs/sweeps").expect("configs/sweeps/ exists") {
+            let p = entry.unwrap().path();
+            if p.extension().is_some_and(|e| e == "json") {
+                let s = SweepSpec::load(p.to_str().unwrap())
+                    .unwrap_or_else(|e| panic!("{}: {e:#}", p.display()));
+                let runs = s
+                    .expand()
+                    .unwrap_or_else(|e| panic!("{}: {e:#}", p.display()));
+                assert!(!runs.is_empty(), "{}: empty grid", p.display());
+                seen += 1;
+            }
+        }
+        assert!(seen >= 5, "expected the shipped sweep specs, found {seen}");
+    }
+}

@@ -1,0 +1,237 @@
+//! Sweep orchestrator determinism: the journal and the `slfac-sweep/1`
+//! report are **byte-identical** functions of (spec, seed) alone —
+//! independent of the worker count, and independent of whether the sweep
+//! ran uninterrupted or was stopped mid-grid and resumed (even through a
+//! torn journal tail). This is the resume contract from the sweep module
+//! docs, pinned differentially at workers 1 and 4.
+//!
+//! Runs on the sim executor backend (pure Rust, manifest only), so this
+//! test needs no XLA runtime and no `make artifacts` — it always runs.
+
+use slfac::json::Json;
+use slfac::sweep::{page, run_sweep, sweep_status, Journal, SweepOptions, SweepSpec};
+
+/// Unique per-test temp root (the shared artifacts dir and every sweep's
+/// out_dir live under it).
+fn temp_root(label: &str) -> String {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    format!(
+        "{}/slfac_sweepdet_{label}_{}_{}",
+        std::env::temp_dir().display(),
+        std::process::id(),
+        NEXT.fetch_add(1, Ordering::Relaxed)
+    )
+}
+
+/// A 2 codecs × 2 seeds grid of tiny sim-backend runs. All variants of
+/// one test share this spec (and so its artifacts dir and fingerprint);
+/// only the sweep's `out_dir` differs, so journals are comparable
+/// byte-for-byte. The orchestrator writes the sim manifest itself on
+/// first use (`sim_manifest` key).
+fn smoke_spec(root: &str) -> SweepSpec {
+    let text = format!(
+        r#"{{
+          "name": "det",
+          "backend": "sim",
+          "sim_manifest": {{"preset": "mnist", "batch_size": 8,
+                            "act_channels": 2, "act_hw": 4}},
+          "base": {{
+            "artifacts_dir": "{root}/artifacts",
+            "dataset": "mnist",
+            "devices": 3,
+            "workers": 1,
+            "train_samples": 48,
+            "test_samples": 8,
+            "rounds": 1,
+            "batches_per_round": 1,
+            "batch_size": 8
+          }},
+          "axes": [
+            {{"codec": ["slfac", "pq-sl"]}},
+            {{"seed": [7, 1234]}}
+          ]
+        }}"#
+    );
+    SweepSpec::from_json(&Json::parse(&text).unwrap()).unwrap()
+}
+
+fn opts(root: &str, sub: &str, workers: usize, stop_after: Option<usize>) -> SweepOptions {
+    SweepOptions {
+        workers: Some(workers),
+        stop_after,
+        out_dir: format!("{root}/{sub}"),
+        journal_path: None,
+    }
+}
+
+fn journal_bytes(root: &str, sub: &str) -> Vec<u8> {
+    std::fs::read(format!("{root}/{sub}/det/journal.jsonl")).expect("journal exists")
+}
+
+fn report_bytes(root: &str, sub: &str) -> Vec<u8> {
+    std::fs::read(format!("{root}/{sub}/det/report.json")).expect("report exists")
+}
+
+#[test]
+fn interrupted_resume_is_bit_identical_at_workers_1_and_4() {
+    let root = temp_root("resume");
+    let spec = smoke_spec(&root);
+    let mut full_journals: Vec<Vec<u8>> = Vec::new();
+    for w in [1usize, 4] {
+        // uninterrupted reference sweep
+        let full = format!("full_w{w}");
+        let out = run_sweep(&spec, &opts(&root, &full, w, None)).unwrap();
+        assert_eq!((out.grid, out.completed, out.executed), (4, 4, 4));
+        assert!(!out.interrupted);
+
+        // same grid, stopped after 3 runs, then resumed
+        let res = format!("resumed_w{w}");
+        let out = run_sweep(&spec, &opts(&root, &res, w, Some(3))).unwrap();
+        assert!(out.interrupted);
+        assert_eq!((out.completed, out.executed), (3, 3));
+        let out = run_sweep(&spec, &opts(&root, &res, w, None)).unwrap();
+        assert!(!out.interrupted);
+        assert_eq!((out.completed, out.skipped, out.executed), (4, 3, 1));
+
+        assert_eq!(
+            journal_bytes(&root, &full),
+            journal_bytes(&root, &res),
+            "workers={w}: resumed journal must be byte-identical"
+        );
+        assert_eq!(
+            report_bytes(&root, &full),
+            report_bytes(&root, &res),
+            "workers={w}: resumed report must be byte-identical"
+        );
+        full_journals.push(journal_bytes(&root, &full));
+    }
+    // and across worker counts
+    assert_eq!(
+        full_journals[0], full_journals[1],
+        "journal bytes must not depend on the worker count"
+    );
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn report_pages_are_stable_while_the_sweep_progresses() {
+    let root = temp_root("pages");
+    let spec = smoke_spec(&root);
+    let o = opts(&root, "out", 2, Some(3));
+    run_sweep(&spec, &o).unwrap();
+    let jpath = format!("{root}/out/det/journal.jsonl");
+
+    // first full page over the partial (3 of 4 runs) journal
+    let j = Journal::open(&jpath).unwrap();
+    assert_eq!(j.completed(), 3);
+    let partial_p1 = page(j.header(), j.records(), None, 2).to_string();
+    assert_eq!(
+        Json::parse(&partial_p1)
+            .unwrap()
+            .get("next_cursor")
+            .and_then(|c| c.as_str()),
+        Some("run:1")
+    );
+
+    // finish the sweep; the full page must not have changed a byte except
+    // the `completed` counter — strip it and compare the rest, then walk
+    // the cursor chain over the complete journal
+    run_sweep(&spec, &opts(&root, "out", 2, None)).unwrap();
+    let j = Journal::open(&jpath).unwrap();
+    assert_eq!(j.completed(), 4);
+    let complete_p1 = page(j.header(), j.records(), None, 2).to_string();
+    let strip = |s: &str| {
+        let mut doc = match Json::parse(s).unwrap() {
+            Json::Obj(m) => m,
+            _ => panic!("page is an object"),
+        };
+        doc.remove("completed").expect("page has 'completed'");
+        Json::Obj(doc).to_string()
+    };
+    assert_eq!(
+        strip(&partial_p1),
+        strip(&complete_p1),
+        "a full page must be stable as the journal grows"
+    );
+
+    // cursor chain: run:1 -> runs [2, 3] -> end
+    let p2 = page(j.header(), j.records(), Some(1), 2);
+    let ids: Vec<usize> = p2
+        .get("runs")
+        .and_then(|r| r.as_arr())
+        .unwrap()
+        .iter()
+        .map(|r| r.get("run_id").and_then(|v| v.as_usize()).unwrap())
+        .collect();
+    assert_eq!(ids, [2, 3]);
+    assert_eq!(p2.get("next_cursor"), Some(&Json::Null));
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn journal_of_a_different_grid_is_rejected() {
+    let root = temp_root("foreign");
+    let spec = smoke_spec(&root);
+    run_sweep(&spec, &opts(&root, "out", 1, Some(1))).unwrap();
+
+    // same sweep name, different seed axis ⇒ different fingerprint
+    let other = {
+        let mut j = match spec.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        j.insert(
+            "axes".to_string(),
+            Json::parse(r#"[{"codec": ["slfac", "pq-sl"]}, {"seed": [8, 1234]}]"#).unwrap(),
+        );
+        SweepSpec::from_json(&Json::Obj(j)).unwrap()
+    };
+    let err = format!(
+        "{:#}",
+        run_sweep(&other, &opts(&root, "out", 1, None)).unwrap_err()
+    );
+    assert!(err.contains("journal"), "{err}");
+    assert!(err.contains("fingerprint"), "{err}");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn torn_journal_tail_resumes_byte_identically() {
+    let root = temp_root("torn");
+    let spec = smoke_spec(&root);
+    run_sweep(&spec, &opts(&root, "full", 1, None)).unwrap();
+
+    run_sweep(&spec, &opts(&root, "torn", 1, Some(2))).unwrap();
+    // simulate a crash mid-append: an unterminated half-record
+    let jpath = format!("{root}/torn/det/journal.jsonl");
+    let mut bytes = std::fs::read(&jpath).unwrap();
+    bytes.extend_from_slice(b"{\"run_id\":2,\"name\":\"det_");
+    std::fs::write(&jpath, &bytes).unwrap();
+
+    run_sweep(&spec, &opts(&root, "torn", 1, None)).unwrap();
+    assert_eq!(journal_bytes(&root, "full"), journal_bytes(&root, "torn"));
+    assert_eq!(report_bytes(&root, "full"), report_bytes(&root, "torn"));
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn status_tracks_grid_progress() {
+    let root = temp_root("status");
+    let spec = smoke_spec(&root);
+    let o = opts(&root, "out", 1, Some(3));
+    let count = |st: &Json, key: &str| st.get(key).and_then(|v| v.as_usize()).unwrap();
+
+    let st = sweep_status(&spec, &o).unwrap();
+    assert_eq!((count(&st, "completed"), count(&st, "pending")), (0, 4));
+
+    run_sweep(&spec, &o).unwrap();
+    let st = sweep_status(&spec, &o).unwrap();
+    assert_eq!((count(&st, "completed"), count(&st, "pending")), (3, 1));
+    assert_eq!(st.get("schema").and_then(|s| s.as_str()), Some("slfac-sweep-status/1"));
+
+    run_sweep(&spec, &opts(&root, "out", 1, None)).unwrap();
+    let st = sweep_status(&spec, &o).unwrap();
+    assert_eq!((count(&st, "completed"), count(&st, "pending")), (4, 0));
+    let _ = std::fs::remove_dir_all(&root);
+}
