@@ -1,0 +1,339 @@
+//! Adaptive feature-wise drop + quantize (Oh et al. 2023, arXiv:2307.10805).
+//!
+//! Where FC-SL ([`crate::codec::SplitFcCodec`]) keeps a *fixed fraction* of
+//! channels by std rank, this codec is fully adaptive: a channel survives
+//! when its dispersion clears a **relative threshold**, and each surviving
+//! channel is quantized at its own bit width proportional to how much of
+//! the sample's dispersion it carries. Per sample:
+//!
+//! 1. `s_c = std(x_c)` for every channel, `s_max = max_c s_c`;
+//! 2. drop channel `c` iff `s_c < drop_threshold · s_max` (each dropped
+//!    channel is summarized by its f16 mean, as in FC-SL); an all-constant
+//!    sample (`s_max = 0`) legitimately drops **every** channel;
+//! 3. kept channels get `b_c = round(b_min + (b_max − b_min) · s_c/s_max)`
+//!    bits of per-channel min-max quantization.
+//!
+//! Unlike FC-SL there is no ranking sort — only max folds — so the kernel
+//! is allocation-free and covered by `tests/codec_zero_alloc.rs`.
+//!
+//! Wire layout (body, after the standard payload header), frozen by the
+//! golden vectors in `tests/golden/codec_wire.json`:
+//!
+//! ```text
+//! per sample:
+//!   ⌈C/8⌉ bytes                 channel bitmap (bit set ⇒ channel kept)
+//!   f16 × (#dropped)            dropped channel means, channel-ascending
+//!   per kept channel (ascending):
+//!     u8   b_c                  allocated bit width
+//!     f32  min                  channel range minimum
+//!     f32  max                  channel range maximum
+//!     ⌈M·N·b_c/8⌉ bytes         packed levels, row-major, MSB-first
+//! ```
+
+use super::plan::CodecScratch;
+use super::wire::{BodyReader, BodyWriter, Payload};
+use super::{ActivationCodec, CodecKind};
+use crate::quant::{pack_levels_into, unpack_levels_lut, AllocationConfig, LinearQuantizer};
+use crate::rng::Pcg32;
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// Feature-wise codec parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct FeatureWiseConfig {
+    /// Relative dispersion threshold in `[0, 1]`: channel `c` is dropped
+    /// when `s_c < drop_threshold · s_max`. 0 keeps everything (of a
+    /// non-constant sample); 1 keeps only the max-dispersion channels.
+    pub drop_threshold: f64,
+    /// Bit-width bounds for the kept channels.
+    pub alloc: AllocationConfig,
+}
+
+impl Default for FeatureWiseConfig {
+    fn default() -> Self {
+        FeatureWiseConfig {
+            drop_threshold: 0.2,
+            alloc: AllocationConfig::default(),
+        }
+    }
+}
+
+/// Adaptive feature-wise drop/quantize codec. Spatial domain, deterministic.
+#[derive(Debug, Clone)]
+pub struct FeatureWiseCodec {
+    cfg: FeatureWiseConfig,
+}
+
+/// Eq. 7-style linear ramp on the dispersion share (no log map: stds are
+/// already scale-compressed relative to energies).
+fn feature_bits(alloc: &AllocationConfig, s: f32, s_max: f32) -> u32 {
+    let frac = ((s as f64) / (s_max as f64)).clamp(0.0, 1.0);
+    let b = alloc.b_min as f64 + (alloc.b_max - alloc.b_min) as f64 * frac;
+    (b + 0.5).floor().clamp(alloc.b_min as f64, alloc.b_max as f64) as u32
+}
+
+impl FeatureWiseCodec {
+    /// Build from config (panics on out-of-range threshold/bounds).
+    pub fn new(cfg: FeatureWiseConfig) -> Self {
+        assert!(
+            (0.0..=1.0).contains(&cfg.drop_threshold),
+            "drop_threshold must be in [0, 1]"
+        );
+        cfg.alloc.validate().expect("feature-wise bit bounds");
+        FeatureWiseCodec { cfg }
+    }
+
+    fn compress_impl(
+        &self,
+        x: &Tensor,
+        scratch: &mut CodecScratch,
+        body: Vec<u8>,
+    ) -> Result<Payload> {
+        let (b, c, m, n) = x.as_bchw();
+        let mut w = BodyWriter::from_vec(body, 0);
+        let stds = &mut scratch.vals;
+        let bitmap = &mut scratch.bitmap;
+        for bi in 0..b {
+            stds.clear();
+            let mut s_max = 0.0f32;
+            for ci in 0..c {
+                let s = crate::tensor::std_dev(x.channel(bi, ci));
+                s_max = s_max.max(s);
+                stds.push(s);
+            }
+            bitmap.clear();
+            bitmap.resize((c + 7) / 8, 0);
+            if s_max > 0.0 {
+                for ci in 0..c {
+                    if (stds[ci] as f64) >= self.cfg.drop_threshold * (s_max as f64) {
+                        bitmap[ci / 8] |= 1 << (ci % 8);
+                    }
+                }
+            }
+            // s_max == 0 (all channels constant): bitmap stays empty and
+            // the whole sample travels as C f16 means
+            w.bytes(bitmap);
+            for ci in 0..c {
+                if bitmap[ci / 8] & (1 << (ci % 8)) == 0 {
+                    let ch = x.channel(bi, ci);
+                    let mean = ch.iter().sum::<f32>() / ch.len() as f32;
+                    w.f16(mean);
+                }
+            }
+            for ci in 0..c {
+                if bitmap[ci / 8] & (1 << (ci % 8)) != 0 {
+                    let ch = x.channel(bi, ci);
+                    let bits = feature_bits(&self.cfg.alloc, stds[ci], s_max);
+                    let q = LinearQuantizer::fit(bits, ch);
+                    w.u8(bits as u8);
+                    w.f32(q.min);
+                    w.f32(q.max);
+                    pack_levels_into(ch, &q, &mut w);
+                }
+            }
+        }
+        Ok(Payload {
+            kind: CodecKind::FeatureWise as u8,
+            shape: [b, c, m, n],
+            body: w.finish(),
+        })
+    }
+}
+
+impl ActivationCodec for FeatureWiseCodec {
+    fn name(&self) -> &'static str {
+        "featurewise"
+    }
+
+    fn kind(&self) -> CodecKind {
+        CodecKind::FeatureWise
+    }
+
+    fn compress(&self, x: &Tensor) -> Result<Payload> {
+        super::compress_fresh(self, x)
+    }
+
+    fn decompress(&self, p: &Payload) -> Result<Tensor> {
+        super::decompress_fresh(self, p)
+    }
+
+    fn compress_into(
+        &self,
+        x: &Tensor,
+        _rng: &mut Pcg32,
+        scratch: &mut CodecScratch,
+        out: &mut Payload,
+    ) -> Result<()> {
+        let body = std::mem::take(&mut out.body);
+        *out = self.compress_impl(x, scratch, body)?;
+        Ok(())
+    }
+
+    fn decompress_into(
+        &self,
+        p: &Payload,
+        scratch: &mut CodecScratch,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        let [b, c, m, n] = p.shape;
+        let plane = m * n;
+        out.reset_dense(&[b, c, m, n]);
+        let mut r = BodyReader::new(&p.body);
+        let bitmap = &mut scratch.bitmap;
+        for bi in 0..b {
+            bitmap.clear();
+            bitmap.extend_from_slice(r.bytes((c + 7) / 8)?);
+            // an empty bitmap is legitimate here (all-constant sample) —
+            // unlike FC-SL, which always keeps >= 1 channel
+            for ci in 0..c {
+                if bitmap[ci / 8] & (1 << (ci % 8)) == 0 {
+                    let mean = r.f16()?;
+                    out.channel_mut(bi, ci).fill(mean);
+                }
+            }
+            for ci in 0..c {
+                if bitmap[ci / 8] & (1 << (ci % 8)) != 0 {
+                    let bits = r.u8()? as u32;
+                    ensure!(
+                        (1..=16).contains(&bits),
+                        "corrupt feature-wise bit width {bits}"
+                    );
+                    let min = r.f32()?;
+                    let max = r.f32()?;
+                    let q = LinearQuantizer { bits, min, max };
+                    unpack_levels_lut(
+                        &mut r,
+                        &q,
+                        plane,
+                        &mut scratch.lut,
+                        out.channel_mut(bi, ci),
+                    )?;
+                }
+            }
+        }
+        ensure!(
+            r.remaining() == 0,
+            "trailing bytes in feature-wise payload: {}",
+            r.remaining()
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::smooth_activations;
+    use crate::rng::Pcg32;
+
+    fn mk(thr: f64) -> FeatureWiseCodec {
+        FeatureWiseCodec::new(FeatureWiseConfig {
+            drop_threshold: thr,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn zero_threshold_keeps_everything_and_roundtrips() {
+        let x = smooth_activations(&[2, 4, 9, 9], 51);
+        let c = mk(0.0);
+        let p = c.compress(&x).unwrap();
+        // bitmap of sample 0: all 4 channels set
+        assert_eq!(p.body[0], 0b0000_1111);
+        let back = c.decompress(&p).unwrap();
+        assert!(back.rel_l2_error(&x) < 0.2);
+    }
+
+    #[test]
+    fn flat_channels_dropped_and_mean_reconstructed() {
+        let mut rng = Pcg32::seeded(52);
+        let mut x = Tensor::zeros(&[1, 4, 6, 6]);
+        for v in x.channel_mut(0, 1).iter_mut() {
+            *v = rng.normal();
+        }
+        for ci in [0usize, 2, 3] {
+            x.channel_mut(0, ci).fill(1.5); // exactly representable in f16
+        }
+        let c = mk(0.5);
+        let p = c.compress(&x).unwrap();
+        assert_eq!(p.body[0], 0b0000_0010, "only the noisy channel survives");
+        let back = c.decompress(&p).unwrap();
+        for ci in [0usize, 2, 3] {
+            assert_eq!(back.channel(0, ci), x.channel(0, ci));
+        }
+        assert!(
+            Tensor::new(&[36], back.channel(0, 1).to_vec())
+                .rel_l2_error(&Tensor::new(&[36], x.channel(0, 1).to_vec()))
+                < 0.05,
+            "max-dispersion channel rides at b_max"
+        );
+    }
+
+    #[test]
+    fn all_constant_sample_drops_every_channel() {
+        let x = Tensor::full(&[2, 3, 5, 5], -2.5);
+        let c = mk(0.2);
+        let p = c.compress(&x).unwrap();
+        // 2 samples × (1 bitmap byte + 3 f16 means) — nothing else
+        assert_eq!(p.body.len(), 2 * (1 + 3 * 2));
+        let back = c.decompress(&p).unwrap();
+        assert_eq!(back.data(), x.data());
+    }
+
+    #[test]
+    fn dispersion_share_drives_bit_widths() {
+        let mut x = Tensor::zeros(&[1, 2, 6, 6]);
+        for (i, v) in x.channel_mut(0, 0).iter_mut().enumerate() {
+            *v = if i % 2 == 0 { 4.0 } else { -4.0 };
+        }
+        for (i, v) in x.channel_mut(0, 1).iter_mut().enumerate() {
+            *v = if i % 2 == 0 { 0.4 } else { -0.4 };
+        }
+        let c = mk(0.0);
+        let p = c.compress(&x).unwrap();
+        let mut r = BodyReader::new(&p.body);
+        r.bytes(1).unwrap(); // bitmap: both kept, no dropped means
+        let b0 = r.u8().unwrap();
+        assert_eq!(b0, 8, "s_max channel gets b_max");
+        r.f32().unwrap();
+        r.f32().unwrap();
+        r.bytes((36 * b0 as usize + 7) / 8).unwrap();
+        let b1 = r.u8().unwrap();
+        // s_1/s_max = 0.1 → round(2 + 6·0.1) = 3
+        assert_eq!(b1, 3, "low-dispersion channel rides near b_min");
+    }
+
+    #[test]
+    fn wire_size_shrinks_as_threshold_rises() {
+        // channels with geometrically decaying dispersion: each threshold
+        // step drops more of them
+        let mut rng = Pcg32::seeded(53);
+        let mut x = Tensor::zeros(&[1, 8, 8, 8]);
+        for ci in 0..8 {
+            let scale = 0.5f32.powi(ci as i32);
+            for v in x.channel_mut(0, ci).iter_mut() {
+                *v = rng.normal() * scale;
+            }
+        }
+        let sizes: Vec<usize> = [0.0, 0.3, 0.9]
+            .iter()
+            .map(|&t| mk(t).compress(&x).unwrap().wire_bytes())
+            .collect();
+        assert!(
+            sizes[0] > sizes[1] && sizes[1] > sizes[2],
+            "sizes {sizes:?} must decrease with threshold"
+        );
+    }
+
+    #[test]
+    fn corrupt_payloads_rejected() {
+        let x = smooth_activations(&[1, 3, 6, 6], 54);
+        let c = mk(0.0);
+        let mut p = c.compress(&x).unwrap();
+        p.body.truncate(p.body.len() - 2);
+        assert!(c.decompress(&p).is_err());
+        let mut p2 = c.compress(&x).unwrap();
+        p2.body.push(0);
+        assert!(c.decompress(&p2).is_err());
+    }
+}

@@ -9,8 +9,9 @@
 //!   come out of the HLO graph (the L1 Pallas kernel inside `client_fwd` /
 //!   `server_step`), and the decompressed planes go back through the `idct`
 //!   artifact — Rust never recomputes the transform there.
-//! * **spatial-domain** codecs (TK-SL, FC-SL, PQ-SL, EasyQuant, identity)
-//!   consume the activations directly.
+//! * **spatial-domain** codecs (TK-SL, FC-SL, PQ-SL, EasyQuant, identity,
+//!   and the literature-cluster family SL-ACC / feature-wise / mask-topk /
+//!   NSC-SL) consume the activations directly.
 //!
 //! [`roundtrip_spatial`] wraps either kind into a spatial-in/spatial-out
 //! round trip (using the Rust DCT for frequency codecs) so fidelity and
@@ -26,16 +27,24 @@
 //! allocating reference paths (see ARCHITECTURE.md "Codec hot path &
 //! memory discipline" and `tests/codec_differential.rs`).
 
+pub mod featurewise;
+pub mod maskenc;
+pub mod nscsl;
 pub mod plan;
 pub mod select;
+pub mod slacc;
 pub mod slfac;
 pub mod splitfc;
 pub mod topk;
 pub mod uniform;
 pub mod wire;
 
+pub use featurewise::{FeatureWiseCodec, FeatureWiseConfig};
+pub use maskenc::{MaskTopKCodec, MaskTopKConfig};
+pub use nscsl::{NscSlCodec, NscSlConfig};
 pub use plan::{CodecPlan, CodecScratch};
 pub use select::{MagnitudeSelectCodec, SelectConfig, StdSelectCodec};
+pub use slacc::{SlAccCodec, SlAccConfig};
 pub use slfac::{AfdUniformCodec, SlFacCodec, SlFacConfig};
 pub use splitfc::{SplitFcCodec, SplitFcConfig};
 pub use topk::{TopKCodec, TopKConfig};
@@ -70,6 +79,14 @@ pub enum CodecKind {
     AfdUniform = 8,
     /// Plain per-tensor min-max linear quantization.
     UniformLinear = 9,
+    /// SL-ACC: channel-wise energy-adaptive bit allocation (arXiv:2508.12984).
+    SlAcc = 10,
+    /// Adaptive feature-wise drop + quantize (Oh et al., arXiv:2307.10805).
+    FeatureWise = 11,
+    /// Mask-encoded top-k sparsification (arXiv:2408.13787).
+    MaskTopK = 12,
+    /// NSC-SL: seeded-subspace projection compression (arXiv:2602.02696).
+    NscSl = 13,
 }
 
 /// The codec interface used by the coordinator and benches.
@@ -165,7 +182,10 @@ pub(crate) fn decompress_fresh<C: ActivationCodec + ?Sized>(c: &C, p: &Payload) 
 
 /// Construct a codec by config name. Accepted names (paper labels):
 /// `slfac`, `pq-sl`/`powerquant`, `tk-sl`/`topk`, `fc-sl`/`splitfc`,
-/// `easyquant`, `magnitude`, `std`, `afd-uniform`, `uniform`, `identity`/`fp32`.
+/// `easyquant`, `magnitude`, `std`, `afd-uniform`, `uniform`,
+/// `identity`/`fp32`, and the literature-cluster family
+/// `sl-acc`/`slacc`, `featurewise`/`feature-wise`,
+/// `mask-topk`/`maskenc`/`mask-encoded`, `nsc-sl`/`nscsl`.
 pub fn by_name(name: &str, params: &CodecParams) -> Result<Box<dyn ActivationCodec>> {
     let c: Box<dyn ActivationCodec> = match name.to_ascii_lowercase().as_str() {
         "slfac" | "sl-fac" => Box::new(SlFacCodec::new(SlFacConfig {
@@ -201,6 +221,29 @@ pub fn by_name(name: &str, params: &CodecParams) -> Result<Box<dyn ActivationCod
             params.fast_path,
         )),
         "uniform" => Box::new(UniformLinearCodec::new(params.uniform_bits)),
+        "sl-acc" | "slacc" => Box::new(SlAccCodec::new(SlAccConfig {
+            alloc: crate::quant::AllocationConfig {
+                b_min: params.b_min,
+                b_max: params.b_max,
+            },
+            fast_path: params.fast_path,
+        })),
+        "featurewise" | "feature-wise" => Box::new(FeatureWiseCodec::new(FeatureWiseConfig {
+            drop_threshold: params.drop_threshold,
+            alloc: crate::quant::AllocationConfig {
+                b_min: params.b_min,
+                b_max: params.b_max,
+            },
+        })),
+        "mask-topk" | "maskenc" | "mask-encoded" => Box::new(MaskTopKCodec::new(MaskTopKConfig {
+            keep_fraction: params.keep_fraction,
+            bits: params.uniform_bits,
+        })),
+        "nsc-sl" | "nscsl" => Box::new(NscSlCodec::new(NscSlConfig {
+            subspace_fraction: params.subspace_fraction,
+            bits: params.uniform_bits,
+            seed: params.seed,
+        })),
         "identity" | "fp32" | "none" => Box::new(IdentityCodec),
         other => anyhow::bail!("unknown codec '{other}'"),
     };
@@ -224,6 +267,12 @@ pub struct CodecParams {
     pub random_fraction: f64,
     /// Seed for randomized codecs.
     pub seed: u64,
+    /// Relative dispersion threshold for the feature-wise codec: a channel
+    /// is dropped when `std_c < drop_threshold · std_max`.
+    pub drop_threshold: f64,
+    /// Subspace rank fraction for NSC-SL: `r = ⌈f · M·N⌉` coefficients
+    /// travel per channel.
+    pub subspace_fraction: f64,
     /// Use the fused single-pass kernels (default). `false` routes the
     /// AFD-family codecs through the multi-pass reference kernels — wire
     /// bytes are bit-identical either way (enforced by
@@ -242,6 +291,8 @@ impl Default for CodecParams {
             keep_fraction: 0.25,
             random_fraction: 0.05,
             seed: 7,
+            drop_threshold: 0.2,
+            subspace_fraction: 0.5,
             fast_path: true,
         }
     }
@@ -259,6 +310,10 @@ pub const ALL_CODECS: &[&str] = &[
     "afd-uniform",
     "uniform",
     "identity",
+    "sl-acc",
+    "featurewise",
+    "mask-topk",
+    "nsc-sl",
 ];
 
 /// Spatial-domain round trip through any codec: frequency-domain codecs get

@@ -1,0 +1,415 @@
+//! NSC-SL — neural subspace compression for split learning
+//! (arXiv:2602.02696).
+//!
+//! Projects each channel's `P = M·N` plane onto an `r`-dimensional
+//! subspace (`r = ⌈subspace_fraction · P⌉`), transmits the `r` projection
+//! coefficients quantized at `bits`, and reconstructs by the transposed
+//! projection. Where the reference learns its subspace end-to-end, this
+//! implementation uses a **seeded random orthonormal basis** — Gaussian
+//! rows orthonormalized by modified Gram-Schmidt — which makes the scheme
+//! bandwidth-parameterized, training-free, and exactly reproducible: the
+//! basis is a pure function of `(seed, P, r)`, so client and server derive
+//! identical matrices from configuration alone and the wire never carries
+//! the basis. Orthonormality makes decode an orthogonal projection
+//! (`B^T B`), so reconstruction error is exactly the energy outside the
+//! subspace plus quantization noise — no amplification.
+//!
+//! Bases are derived from the dedicated [`crate::rng::stream::BASIS`]
+//! stream (geometry-indexed, device-independent) and cached in a
+//! process-wide [`SnapshotCache`] — built once per distinct `(P, r, seed)`,
+//! then a lock-free lookup on the hot path.
+//!
+//! Wire layout (body, after the standard payload header), frozen by the
+//! golden vectors in `tests/golden/codec_wire.json`:
+//!
+//! ```text
+//! u16  r                        subspace rank (payload self-describing)
+//! per sample, per channel (both ascending):
+//!   f32  min                    coefficient range minimum
+//!   f32  max                    coefficient range maximum
+//!   ⌈r·bits/8⌉ bytes            packed coefficient levels, MSB-first
+//! ```
+
+use super::plan::{CodecScratch, SnapshotCache};
+use super::wire::{BodyReader, BodyWriter, Payload};
+use super::{ActivationCodec, CodecKind};
+use crate::quant::{pack_levels_into, unpack_levels_lut, LinearQuantizer};
+use crate::rng::{stream, Pcg32};
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+
+/// NSC-SL parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct NscSlConfig {
+    /// Subspace rank as a fraction of the plane size: `r = ⌈f · M·N⌉`,
+    /// clamped to `[1, M·N]`. Directly parameterizes the bandwidth.
+    pub subspace_fraction: f64,
+    /// Bit width of the coefficient quantizer.
+    pub bits: u32,
+    /// Basis seed — must agree between client and server (it is part of
+    /// the run config, so the config fingerprint pins it).
+    pub seed: u64,
+}
+
+impl Default for NscSlConfig {
+    fn default() -> Self {
+        NscSlConfig {
+            subspace_fraction: 0.5,
+            bits: 4,
+            seed: 7,
+        }
+    }
+}
+
+fn basis_cache() -> &'static SnapshotCache<(usize, usize, u64), Vec<f32>> {
+    static CACHE: std::sync::OnceLock<SnapshotCache<(usize, usize, u64), Vec<f32>>> =
+        std::sync::OnceLock::new();
+    CACHE.get_or_init(SnapshotCache::new)
+}
+
+/// The `r × p` row-major orthonormal basis for `(p, r, seed)` — built once,
+/// then shared process-wide.
+fn basis(p: usize, r: usize, seed: u64) -> Arc<Vec<f32>> {
+    basis_cache().get_or_build((p, r, seed), || build_basis(p, r, seed))
+}
+
+/// Gaussian rows + modified Gram-Schmidt. Deterministic: the draw order and
+/// the (f64) orthogonalization arithmetic are fixed, so every process
+/// derives bit-identical bases.
+fn build_basis(p: usize, r: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::derived(seed, stream::BASIS, ((p as u64) << 24) ^ r as u64);
+    let mut b = vec![0.0f32; r * p];
+    for i in 0..r {
+        let (done, rest) = b.split_at_mut(i * p);
+        let row = &mut rest[..p];
+        // a fresh Gaussian row is dependent on the span of `done` with
+        // probability zero; the redraw loop is a numerical safety net, and
+        // the unit-vector fallback keeps the basis well-defined even then
+        let mut ok = false;
+        for _attempt in 0..8 {
+            for v in row.iter_mut() {
+                *v = rng.normal();
+            }
+            orthogonalize(row, done, p, i);
+            if normalize(row) {
+                ok = true;
+                break;
+            }
+        }
+        if !ok {
+            row.fill(0.0);
+            row[i % p] = 1.0;
+            orthogonalize(row, done, p, i);
+            if !normalize(row) {
+                row.fill(0.0);
+                row[i % p] = 1.0;
+            }
+        }
+    }
+    b
+}
+
+/// Subtract `row`'s components along each of the `k` earlier rows (modified
+/// Gram-Schmidt step, f64 accumulators).
+fn orthogonalize(row: &mut [f32], done: &[f32], p: usize, k: usize) {
+    for e in 0..k {
+        let earlier = &done[e * p..(e + 1) * p];
+        let dot: f64 = row
+            .iter()
+            .zip(earlier)
+            .map(|(&a, &b)| a as f64 * b as f64)
+            .sum();
+        for (v, &w) in row.iter_mut().zip(earlier) {
+            *v -= (dot * w as f64) as f32;
+        }
+    }
+}
+
+/// Scale `row` to unit norm; false when the row is numerically degenerate.
+fn normalize(row: &mut [f32]) -> bool {
+    let norm = row
+        .iter()
+        .map(|&v| v as f64 * v as f64)
+        .sum::<f64>()
+        .sqrt();
+    if norm <= 1e-6 {
+        return false;
+    }
+    let inv = (1.0 / norm) as f32;
+    for v in row.iter_mut() {
+        *v *= inv;
+    }
+    true
+}
+
+/// NSC-SL codec. Spatial domain, deterministic, fixed-rate.
+#[derive(Debug, Clone)]
+pub struct NscSlCodec {
+    cfg: NscSlConfig,
+}
+
+impl NscSlCodec {
+    /// Build from config.
+    pub fn new(cfg: NscSlConfig) -> Self {
+        assert!(
+            cfg.subspace_fraction > 0.0 && cfg.subspace_fraction <= 1.0,
+            "subspace_fraction out of range"
+        );
+        assert!((1..=16).contains(&cfg.bits));
+        NscSlCodec { cfg }
+    }
+
+    fn rank(&self, p: usize) -> usize {
+        ((p as f64 * self.cfg.subspace_fraction).ceil() as usize).clamp(1, p)
+    }
+
+    fn compress_impl(
+        &self,
+        x: &Tensor,
+        scratch: &mut CodecScratch,
+        body: Vec<u8>,
+    ) -> Result<Payload> {
+        let (b, c, m, n) = x.as_bchw();
+        let p = m * n;
+        let r_dim = self.rank(p);
+        ensure!(
+            r_dim <= u16::MAX as usize,
+            "NSC-SL rank {r_dim} exceeds the u16 wire field"
+        );
+        let bmat = basis(p, r_dim, self.cfg.seed);
+        let packed = (r_dim * self.cfg.bits as usize + 7) / 8;
+        let mut w = BodyWriter::from_vec(body, 2 + b * c * (8 + packed));
+        w.u16(r_dim as u16);
+        let coeffs = &mut scratch.vals;
+        for bi in 0..b {
+            for ci in 0..c {
+                let ch = x.channel(bi, ci);
+                coeffs.clear();
+                for i in 0..r_dim {
+                    let row = &bmat[i * p..(i + 1) * p];
+                    let mut y = 0.0f32;
+                    for (&w_ij, &v) in row.iter().zip(ch) {
+                        y += w_ij * v;
+                    }
+                    coeffs.push(y);
+                }
+                let q = LinearQuantizer::fit(self.cfg.bits, coeffs);
+                w.f32(q.min);
+                w.f32(q.max);
+                pack_levels_into(coeffs, &q, &mut w);
+            }
+        }
+        Ok(Payload {
+            kind: CodecKind::NscSl as u8,
+            shape: [b, c, m, n],
+            body: w.finish(),
+        })
+    }
+}
+
+impl ActivationCodec for NscSlCodec {
+    fn name(&self) -> &'static str {
+        "nsc-sl"
+    }
+
+    fn kind(&self) -> CodecKind {
+        CodecKind::NscSl
+    }
+
+    fn compress(&self, x: &Tensor) -> Result<Payload> {
+        super::compress_fresh(self, x)
+    }
+
+    fn decompress(&self, p: &Payload) -> Result<Tensor> {
+        super::decompress_fresh(self, p)
+    }
+
+    fn compress_into(
+        &self,
+        x: &Tensor,
+        _rng: &mut Pcg32,
+        scratch: &mut CodecScratch,
+        out: &mut Payload,
+    ) -> Result<()> {
+        let body = std::mem::take(&mut out.body);
+        *out = self.compress_impl(x, scratch, body)?;
+        Ok(())
+    }
+
+    fn decompress_into(
+        &self,
+        p: &Payload,
+        scratch: &mut CodecScratch,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        let [b, c, m, n] = p.shape;
+        let plane = m * n;
+        out.reset_dense(&[b, c, m, n]);
+        let mut r = BodyReader::new(&p.body);
+        let r_dim = r.u16()? as usize;
+        ensure!(
+            r_dim >= 1 && r_dim <= plane,
+            "corrupt NSC-SL rank {r_dim} for plane {plane}"
+        );
+        // the payload self-describes its rank: decode works even when the
+        // local subspace_fraction differs from the encoder's
+        let bmat = basis(plane, r_dim, self.cfg.seed);
+        let coeffs = &mut scratch.vals;
+        let lut = &mut scratch.lut;
+        for bi in 0..b {
+            for ci in 0..c {
+                let min = r.f32()?;
+                let max = r.f32()?;
+                let q = LinearQuantizer {
+                    bits: self.cfg.bits,
+                    min,
+                    max,
+                };
+                coeffs.clear();
+                coeffs.resize(r_dim, 0.0);
+                unpack_levels_lut(&mut r, &q, r_dim, lut, coeffs)?;
+                let ch = out.channel_mut(bi, ci);
+                ch.fill(0.0);
+                for i in 0..r_dim {
+                    let row = &bmat[i * plane..(i + 1) * plane];
+                    let y = coeffs[i];
+                    for (d, &w_ij) in ch.iter_mut().zip(row) {
+                        *d += y * w_ij;
+                    }
+                }
+            }
+        }
+        ensure!(
+            r.remaining() == 0,
+            "trailing bytes in NSC-SL payload: {}",
+            r.remaining()
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::smooth_activations;
+
+    fn mk(frac: f64, bits: u32) -> NscSlCodec {
+        NscSlCodec::new(NscSlConfig {
+            subspace_fraction: frac,
+            bits,
+            seed: 7,
+        })
+    }
+
+    #[test]
+    fn basis_is_orthonormal() {
+        let (p, r) = (16usize, 8usize);
+        let b = basis(p, r, 7);
+        for i in 0..r {
+            for j in 0..r {
+                let dot: f64 = (0..p)
+                    .map(|t| b[i * p + t] as f64 * b[j * p + t] as f64)
+                    .sum();
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (dot - want).abs() < 1e-4,
+                    "⟨b{i}, b{j}⟩ = {dot}, want {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn basis_is_cached_and_deterministic() {
+        let a = basis(25, 5, 7);
+        let b = basis(25, 5, 7);
+        assert!(Arc::ptr_eq(&a, &b), "second fetch must hit the cache");
+        assert_ne!(*basis(25, 5, 8), *a, "different seed, different basis");
+        assert_eq!(build_basis(25, 5, 7), *a, "rebuild is bit-identical");
+    }
+
+    #[test]
+    fn full_rank_roundtrips_near_exact() {
+        let x = smooth_activations(&[1, 2, 4, 4], 71);
+        let c = mk(1.0, 16);
+        let back = c.decompress(&c.compress(&x).unwrap()).unwrap();
+        // r = P with an orthonormal basis ⇒ B^T B = I up to fp noise, and
+        // 16-bit coefficients add almost nothing
+        assert!(back.rel_l2_error(&x) < 0.02);
+    }
+
+    #[test]
+    fn error_decreases_with_rank() {
+        let x = smooth_activations(&[2, 3, 6, 6], 72);
+        let errs: Vec<f64> = [0.25, 0.5, 1.0]
+            .iter()
+            .map(|&f| {
+                let c = mk(f, 8);
+                c.decompress(&c.compress(&x).unwrap())
+                    .unwrap()
+                    .rel_l2_error(&x)
+            })
+            .collect();
+        assert!(
+            errs[0] > errs[1] && errs[1] > errs[2],
+            "errors {errs:?} must fall with rank"
+        );
+        assert!(errs[0] < 0.95, "quarter-rank projection keeps some signal");
+    }
+
+    #[test]
+    fn wire_size_tracks_rank_and_bits() {
+        let x = smooth_activations(&[2, 4, 8, 8], 73);
+        let by_rank: Vec<usize> = [0.25, 0.5, 1.0]
+            .iter()
+            .map(|&f| mk(f, 4).compress(&x).unwrap().wire_bytes())
+            .collect();
+        assert!(by_rank[0] < by_rank[1] && by_rank[1] < by_rank[2]);
+        let by_bits: Vec<usize> = [2, 4, 8]
+            .iter()
+            .map(|&bits| mk(0.5, bits).compress(&x).unwrap().wire_bytes())
+            .collect();
+        assert!(by_bits[0] < by_bits[1] && by_bits[1] < by_bits[2]);
+    }
+
+    #[test]
+    fn decoder_rank_comes_from_the_wire() {
+        // a decoder configured at a different fraction still decodes
+        // correctly: r travels in the payload
+        let x = smooth_activations(&[1, 2, 5, 5], 74);
+        let enc = mk(0.5, 8);
+        let p = enc.compress(&x).unwrap();
+        let a = enc.decompress(&p).unwrap();
+        let b = mk(0.25, 8).decompress(&p).unwrap();
+        assert_eq!(a.data(), b.data());
+    }
+
+    #[test]
+    fn degenerate_inputs_roundtrip() {
+        let c = mk(0.5, 4);
+        let z = Tensor::zeros(&[1, 2, 3, 3]);
+        let back = c.decompress(&c.compress(&z).unwrap()).unwrap();
+        // all coefficients are exactly 0 ⇒ exact reconstruction
+        assert_eq!(back.data(), z.data());
+        let one = Tensor::new(&[1, 1, 1, 1], vec![3.25]);
+        let b1 = c.decompress(&c.compress(&one).unwrap()).unwrap();
+        // P = 1 ⇒ r = 1 and the basis row is ±1
+        assert!((b1.data()[0] - 3.25).abs() < 1e-2);
+    }
+
+    #[test]
+    fn corrupt_rank_and_trailing_bytes_rejected() {
+        let x = smooth_activations(&[1, 2, 4, 4], 75);
+        let c = mk(0.5, 4);
+        let mut p = c.compress(&x).unwrap();
+        p.body[..2].copy_from_slice(&0u16.to_le_bytes());
+        assert!(c.decompress(&p).is_err(), "rank 0 rejected");
+        let mut p2 = c.compress(&x).unwrap();
+        p2.body[..2].copy_from_slice(&1000u16.to_le_bytes());
+        assert!(c.decompress(&p2).is_err(), "rank > P rejected");
+        let mut p3 = c.compress(&x).unwrap();
+        p3.body.push(0);
+        assert!(c.decompress(&p3).is_err(), "trailing bytes rejected");
+    }
+}

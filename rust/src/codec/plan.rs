@@ -164,6 +164,8 @@ pub struct CodecScratch {
     /// through `EasyQuant::fit_with` so the fit stops allocating on the
     /// hot path.
     pub outliers: Vec<(u32, f32)>,
+    /// Per-channel f64 accumulators (SL-ACC mean spectral energies).
+    pub energies: Vec<f64>,
     /// Recycled payload bodies: `take_body` pops one (retaining its
     /// capacity), `recycle_body` returns one after its payload is decoded.
     pool: Vec<Vec<u8>>,

@@ -1,0 +1,320 @@
+//! SL-ACC — adaptive channel-wise compression (arXiv:2508.12984).
+//!
+//! SL-ACC scores each channel of the smashed data by its mean energy and
+//! allocates quantization bit widths per channel from those scores, so
+//! informative (high-energy) channels travel at high precision while
+//! near-silent channels are squeezed to `b_min` bits. It is the spatial,
+//! channel-granular sibling of SL-FAC's frequency-group allocation: both
+//! route through the same Eq. 6/7 machinery
+//! ([`crate::quant::log_energy`] / [`crate::quant::group_bits`]), with
+//! SL-ACC's groups being the `C` channels of a sample instead of the two
+//! frequency bands of a channel.
+//!
+//! Per sample:
+//!
+//! 1. mean energy per channel `Ē_c = ‖x_c‖² / (M·N)` (f64 accumulation);
+//! 2. `E*_c = ln(Ē_c + 1)`, `τ = max_c E*_c`,
+//!    `b_c = round(b_min + (b_max − b_min)·tanh(π/2 · E*_c/τ))`;
+//! 3. min-max linear quantization of each channel at `b_c` bits.
+//!
+//! Wire layout (body, after the standard payload header), frozen by the
+//! golden vectors in `tests/golden/codec_wire.json`:
+//!
+//! ```text
+//! per sample, per channel (both ascending):
+//!   u8   b_c                    allocated bit width
+//!   f32  min                    channel range minimum
+//!   f32  max                    channel range maximum
+//!   ⌈M·N·b_c/8⌉ bytes           packed levels, row-major, MSB-first
+//! ```
+//!
+//! Like SL-FAC, the codec has a **fused** single-pass kernel (energy and
+//! min/max folded in one sweep per channel) and a multi-pass **reference**
+//! kernel (separate [`LinearQuantizer::fit`]), selected by `fast_path`.
+//! Both produce bit-identical wire bytes: the fused min/max fold replicates
+//! [`crate::tensor::min_max`]'s NaN-skipping convention exactly, and the
+//! energy fold order (ascending, f64) matches the reference's `sum()`
+//! (pinned by `tests/codec_differential.rs`).
+
+use super::plan::CodecScratch;
+use super::wire::{BodyReader, BodyWriter, Payload};
+use super::{ActivationCodec, CodecKind};
+use crate::quant::{
+    group_bits, log_energy, pack_levels_into, unpack_levels_lut, AllocationConfig,
+    LinearQuantizer,
+};
+use crate::rng::Pcg32;
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// SL-ACC parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SlAccConfig {
+    /// Per-channel bit-width bounds (shared with FQC's Eq. 7).
+    pub alloc: AllocationConfig,
+    /// Fused single-pass kernel (default) vs the multi-pass reference —
+    /// bit-identical on the wire either way.
+    pub fast_path: bool,
+}
+
+impl Default for SlAccConfig {
+    fn default() -> Self {
+        SlAccConfig {
+            alloc: AllocationConfig::default(),
+            fast_path: true,
+        }
+    }
+}
+
+/// SL-ACC codec. Spatial domain, deterministic.
+#[derive(Debug, Clone)]
+pub struct SlAccCodec {
+    cfg: SlAccConfig,
+}
+
+impl SlAccCodec {
+    /// Build from config (bounds validated).
+    pub fn new(cfg: SlAccConfig) -> Self {
+        cfg.alloc.validate().expect("SL-ACC bit bounds");
+        SlAccCodec { cfg }
+    }
+
+    fn compress_impl(
+        &self,
+        x: &Tensor,
+        scratch: &mut CodecScratch,
+        body: Vec<u8>,
+    ) -> Result<Payload> {
+        let (b, c, m, n) = x.as_bchw();
+        let plane = m * n;
+        let worst_plane_bytes = (plane * self.cfg.alloc.b_max as usize + 7) / 8;
+        let mut w = BodyWriter::from_vec(body, b * c * (9 + worst_plane_bytes));
+        let energies = &mut scratch.energies;
+        let minmax = &mut scratch.vals; // fused kernel's (lo, hi) staging
+        for bi in 0..b {
+            energies.clear();
+            minmax.clear();
+            if self.cfg.fast_path {
+                // fused: one sweep per channel folds energy AND range.
+                // The min/max fold mirrors tensor::min_max (skip NaN,
+                // empty/all-NaN => (0, 0)) so the reference's
+                // LinearQuantizer::fit sees identical bytes.
+                for ci in 0..c {
+                    let ch = x.channel(bi, ci);
+                    let mut e = 0.0f64;
+                    let mut lo = f32::INFINITY;
+                    let mut hi = f32::NEG_INFINITY;
+                    for &v in ch {
+                        e += (v as f64) * (v as f64);
+                        if !v.is_nan() {
+                            lo = lo.min(v);
+                            hi = hi.max(v);
+                        }
+                    }
+                    if lo > hi {
+                        (lo, hi) = (0.0, 0.0);
+                    }
+                    energies.push(e / plane as f64);
+                    minmax.push(lo);
+                    minmax.push(hi);
+                }
+            } else {
+                // reference: energy pass only; ranges come from a second
+                // pass inside LinearQuantizer::fit below
+                for ci in 0..c {
+                    let ch = x.channel(bi, ci);
+                    let e: f64 = ch.iter().map(|&v| (v as f64) * (v as f64)).sum();
+                    energies.push(e / plane as f64);
+                }
+            }
+            // τ is per sample: the channel bit budget adapts to each
+            // sample's own energy profile (the "adaptive" in SL-ACC)
+            let tau = energies.iter().fold(0.0f64, |t, &e| t.max(log_energy(e)));
+            for ci in 0..c {
+                let ch = x.channel(bi, ci);
+                let bits = group_bits(&self.cfg.alloc, log_energy(energies[ci]), tau);
+                let q = if self.cfg.fast_path {
+                    LinearQuantizer {
+                        bits,
+                        min: minmax[2 * ci],
+                        max: minmax[2 * ci + 1],
+                    }
+                } else {
+                    LinearQuantizer::fit(bits, ch)
+                };
+                w.u8(bits as u8);
+                w.f32(q.min);
+                w.f32(q.max);
+                pack_levels_into(ch, &q, &mut w);
+            }
+        }
+        Ok(Payload {
+            kind: CodecKind::SlAcc as u8,
+            shape: [b, c, m, n],
+            body: w.finish(),
+        })
+    }
+}
+
+impl ActivationCodec for SlAccCodec {
+    fn name(&self) -> &'static str {
+        "sl-acc"
+    }
+
+    fn kind(&self) -> CodecKind {
+        CodecKind::SlAcc
+    }
+
+    fn compress(&self, x: &Tensor) -> Result<Payload> {
+        super::compress_fresh(self, x)
+    }
+
+    fn decompress(&self, p: &Payload) -> Result<Tensor> {
+        super::decompress_fresh(self, p)
+    }
+
+    fn compress_into(
+        &self,
+        x: &Tensor,
+        _rng: &mut Pcg32,
+        scratch: &mut CodecScratch,
+        out: &mut Payload,
+    ) -> Result<()> {
+        let body = std::mem::take(&mut out.body);
+        *out = self.compress_impl(x, scratch, body)?;
+        Ok(())
+    }
+
+    fn decompress_into(
+        &self,
+        p: &Payload,
+        scratch: &mut CodecScratch,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        let [b, c, m, n] = p.shape;
+        let plane = m * n;
+        out.reset_dense(&[b, c, m, n]);
+        let mut r = BodyReader::new(&p.body);
+        for bi in 0..b {
+            for ci in 0..c {
+                let bits = r.u8()? as u32;
+                ensure!(
+                    (1..=16).contains(&bits),
+                    "corrupt SL-ACC bit width {bits}"
+                );
+                let min = r.f32()?;
+                let max = r.f32()?;
+                let q = LinearQuantizer { bits, min, max };
+                unpack_levels_lut(
+                    &mut r,
+                    &q,
+                    plane,
+                    &mut scratch.lut,
+                    out.channel_mut(bi, ci),
+                )?;
+            }
+        }
+        ensure!(
+            r.remaining() == 0,
+            "trailing bytes in SL-ACC payload: {}",
+            r.remaining()
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::smooth_activations;
+
+    fn mk(fast: bool) -> SlAccCodec {
+        SlAccCodec::new(SlAccConfig {
+            fast_path: fast,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn roundtrip_bounded_by_quantizer_step() {
+        let x = smooth_activations(&[2, 4, 10, 10], 41);
+        let c = mk(true);
+        let p = c.compress(&x).unwrap();
+        let back = c.decompress(&p).unwrap();
+        assert_eq!(back.shape(), x.shape());
+        // every channel got >= b_min bits of min-max quantization, so the
+        // worst-case element error is half a step of the coarsest channel
+        let err = back.rel_l2_error(&x);
+        assert!(err < 0.2, "rel err {err}");
+    }
+
+    #[test]
+    fn high_energy_channels_get_more_bits() {
+        let mut x = Tensor::zeros(&[1, 3, 6, 6]);
+        for (i, v) in x.channel_mut(0, 0).iter_mut().enumerate() {
+            *v = if i % 2 == 0 { 40.0 } else { -40.0 };
+        }
+        for v in x.channel_mut(0, 1).iter_mut() {
+            *v = 0.01;
+        }
+        // channel 2 stays all-zero
+        let c = mk(true);
+        let p = c.compress(&x).unwrap();
+        let mut r = BodyReader::new(&p.body);
+        let mut bits = Vec::new();
+        for _ in 0..3 {
+            let b = r.u8().unwrap() as u32;
+            bits.push(b);
+            let _ = r.f32().unwrap();
+            let _ = r.f32().unwrap();
+            r.bytes((36 * b as usize + 7) / 8).unwrap();
+        }
+        assert_eq!(r.remaining(), 0);
+        assert_eq!(bits[0], 8, "dominant channel takes b_max-ish bits");
+        assert!(bits[1] < bits[0], "weak channel gets fewer: {bits:?}");
+        assert_eq!(bits[2], 2, "silent channel pinned at b_min");
+    }
+
+    #[test]
+    fn fused_matches_reference_bitwise() {
+        for seed in [1u64, 2, 3] {
+            let x = smooth_activations(&[2, 3, 7, 9], seed);
+            let pf = mk(true).compress(&x).unwrap();
+            let pr = mk(false).compress(&x).unwrap();
+            assert_eq!(pf.to_bytes(), pr.to_bytes(), "seed {seed}");
+        }
+        // degenerate inputs hit the lo>hi => (0,0) branch
+        for x in [
+            Tensor::zeros(&[1, 2, 4, 4]),
+            Tensor::full(&[2, 1, 3, 3], -2.5),
+            Tensor::full(&[1, 1, 1, 1], f32::NAN),
+        ] {
+            let pf = mk(true).compress(&x).unwrap();
+            let pr = mk(false).compress(&x).unwrap();
+            assert_eq!(pf.to_bytes(), pr.to_bytes());
+        }
+    }
+
+    #[test]
+    fn all_zero_sample_is_exact_and_minimal() {
+        let x = Tensor::zeros(&[1, 2, 5, 5]);
+        let c = mk(true);
+        let p = c.compress(&x).unwrap();
+        let back = c.decompress(&p).unwrap();
+        assert_eq!(back.data(), x.data());
+        // every channel at b_min: 9-byte header + ceil(25·2/8) payload each
+        assert_eq!(p.body.len(), 2 * (9 + 7));
+    }
+
+    #[test]
+    fn corrupt_bit_width_rejected() {
+        let x = smooth_activations(&[1, 2, 4, 4], 43);
+        let c = mk(true);
+        let mut p = c.compress(&x).unwrap();
+        p.body[0] = 0; // bits = 0 is never written
+        assert!(c.decompress(&p).is_err());
+        let mut p2 = c.compress(&x).unwrap();
+        p2.body.push(0xAB); // trailing garbage
+        assert!(c.decompress(&p2).is_err());
+    }
+}

@@ -258,6 +258,13 @@ impl ExperimentConfig {
                 "random_fraction" => {
                     cfg.codec_params.random_fraction = v.as_f64().context("random_fraction")?
                 }
+                "drop_threshold" => {
+                    cfg.codec_params.drop_threshold = v.as_f64().context("drop_threshold")?
+                }
+                "subspace_fraction" => {
+                    cfg.codec_params.subspace_fraction =
+                        v.as_f64().context("subspace_fraction")?
+                }
                 "codec_fast_path" => {
                     cfg.codec_params.fast_path = v.as_bool().context("codec_fast_path")?
                 }
@@ -373,6 +380,20 @@ impl ExperimentConfig {
         }
         .validate()
         .map_err(|e| anyhow::anyhow!(e))?;
+        if !(0.0..=1.0).contains(&self.codec_params.drop_threshold) {
+            bail!(
+                "drop_threshold must be in [0, 1], got {}",
+                self.codec_params.drop_threshold
+            );
+        }
+        if !(self.codec_params.subspace_fraction > 0.0
+            && self.codec_params.subspace_fraction <= 1.0)
+        {
+            bail!(
+                "subspace_fraction must be in (0, 1], got {}",
+                self.codec_params.subspace_fraction
+            );
+        }
         if self.train_samples < self.devices {
             bail!(
                 "train_samples = {} is smaller than devices = {} — every device needs data",
@@ -575,6 +596,14 @@ impl ExperimentConfig {
             Json::Num(self.codec_params.random_fraction),
         );
         m.insert(
+            "drop_threshold".into(),
+            Json::Num(self.codec_params.drop_threshold),
+        );
+        m.insert(
+            "subspace_fraction".into(),
+            Json::Num(self.codec_params.subspace_fraction),
+        );
+        m.insert(
             "codec_fast_path".into(),
             Json::Bool(self.codec_params.fast_path),
         );
@@ -759,8 +788,47 @@ mod tests {
         c.codec_params.random_fraction = 0.02;
         assert_ne!(base.fingerprint(), c.fingerprint());
         let mut c = base.clone();
+        c.codec_params.drop_threshold = 0.4;
+        assert_ne!(base.fingerprint(), c.fingerprint());
+        let mut c = base.clone();
+        c.codec_params.subspace_fraction = 0.25;
+        assert_ne!(base.fingerprint(), c.fingerprint());
+        let mut c = base.clone();
         c.seed = 99;
         assert_ne!(base.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn cluster_codec_keys_parse_and_roundtrip() {
+        // defaults
+        let base = ExperimentConfig::default();
+        assert!((base.codec_params.drop_threshold - 0.2).abs() < 1e-12);
+        assert!((base.codec_params.subspace_fraction - 0.5).abs() < 1e-12);
+        let json = Json::parse(
+            r#"{"codec": "nsc-sl", "drop_threshold": 0.35, "subspace_fraction": 0.125}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&json).unwrap();
+        assert!((cfg.codec_params.drop_threshold - 0.35).abs() < 1e-12);
+        assert!((cfg.codec_params.subspace_fraction - 0.125).abs() < 1e-12);
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(
+            back.codec_params.drop_threshold.to_bits(),
+            cfg.codec_params.drop_threshold.to_bits()
+        );
+        assert_eq!(
+            back.codec_params.subspace_fraction.to_bits(),
+            cfg.codec_params.subspace_fraction.to_bits()
+        );
+        // boundary values are legal: threshold 0 (keep all) and 1
+        for ok in [
+            r#"{"drop_threshold": 0.0}"#,
+            r#"{"drop_threshold": 1.0}"#,
+            r#"{"subspace_fraction": 1.0}"#,
+        ] {
+            let json = Json::parse(ok).unwrap();
+            assert!(ExperimentConfig::from_json(&json).is_ok(), "{ok}");
+        }
     }
 
     #[test]
@@ -954,6 +1022,8 @@ mod tests {
             (r#"{"rounds": 0}"#, "rounds"),
             (r#"{"batches_per_round": 0}"#, "batches_per_round"),
             (r#"{"theta": 1.5}"#, "theta"),
+            (r#"{"drop_threshold": 1.5}"#, "drop_threshold"),
+            (r#"{"subspace_fraction": 0.0}"#, "subspace_fraction"),
             (r#"{"lr": -1}"#, "lr"),
             (r#"{"scheduler": "async", "sync": "sequential"}"#, "scheduler"),
             (r#"{"straggler": "quorum", "quorum_k": 2}"#, "straggler"),

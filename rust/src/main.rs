@@ -48,6 +48,19 @@ fn cli() -> Command {
                 .opt("rounds", "N", "communication rounds", None)
                 .opt("theta", "F", "AFD energy threshold", None)
                 .opt(
+                    "drop-threshold",
+                    "F",
+                    "feature-wise codec: drop channels below this fraction of \
+                     the max channel std",
+                    None,
+                )
+                .opt(
+                    "subspace-fraction",
+                    "F",
+                    "nsc-sl codec: subspace rank as a fraction of the plane size",
+                    None,
+                )
+                .opt(
                     "codec-fast-path",
                     "BOOL",
                     "fused codec kernels (true, default) or reference kernels \
@@ -206,6 +219,18 @@ fn build_config(m: &Matches) -> Result<ExperimentConfig> {
     }
     if let Some(t) = m.get_parsed::<f64>("theta").map_err(anyhow::Error::msg)? {
         cfg.codec_params.theta = t;
+    }
+    if let Some(t) = m
+        .get_parsed::<f64>("drop-threshold")
+        .map_err(anyhow::Error::msg)?
+    {
+        cfg.codec_params.drop_threshold = t;
+    }
+    if let Some(f) = m
+        .get_parsed::<f64>("subspace-fraction")
+        .map_err(anyhow::Error::msg)?
+    {
+        cfg.codec_params.subspace_fraction = f;
     }
     if let Some(f) = m
         .get_parsed::<bool>("codec-fast-path")

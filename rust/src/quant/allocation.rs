@@ -46,6 +46,27 @@ pub fn phi(x: f64) -> f64 {
     (std::f64::consts::FRAC_PI_2 * x).tanh()
 }
 
+/// Log-energy map `E* = ln(mean_energy + 1)` (Eq. 6), shared by every
+/// energy-adaptive allocator so their τ and bit widths agree exactly.
+#[inline]
+pub fn log_energy(mean_energy: f64) -> f64 {
+    (mean_energy.max(0.0) + 1.0).ln()
+}
+
+/// Bit width for one group from its log energy `E*` and the dynamic
+/// scaling factor `τ` (the max `E*` over the groups sharing the budget).
+/// This is Eq. 7 for an arbitrary group count: the two-group FQC
+/// [`allocate_bits`] and the channel-wise SL-ACC codec both route
+/// through it, so an N-way allocation degenerates to the paper's rule at
+/// N = 2.
+#[inline]
+pub fn group_bits(cfg: &AllocationConfig, e_star: f64, tau: f64) -> u32 {
+    let frac = if tau <= 0.0 { 0.0 } else { phi(e_star / tau) };
+    let b = cfg.b_min as f64 + (cfg.b_max - cfg.b_min) as f64 * frac;
+    // ⌊·⌉ rounding, clamped to the bounds.
+    (b + 0.5).floor().clamp(cfg.b_min as f64, cfg.b_max as f64) as u32
+}
+
 /// Allocate bit widths `(b_low, b_high)` for one channel from the mean
 /// spectral energies of its two groups (Eq. 5 outputs).
 pub fn allocate_bits(
@@ -54,17 +75,11 @@ pub fn allocate_bits(
     mean_energy_high: f64,
 ) -> (u32, u32) {
     // Eq. 6 — log map.
-    let e_low = (mean_energy_low.max(0.0) + 1.0).ln();
-    let e_high = (mean_energy_high.max(0.0) + 1.0).ln();
+    let e_low = log_energy(mean_energy_low);
+    let e_high = log_energy(mean_energy_high);
     // τ_c — dynamic scaling factor.
     let tau = e_low.max(e_high);
-    let alloc = |e: f64| -> u32 {
-        let frac = if tau <= 0.0 { 0.0 } else { phi(e / tau) };
-        let b = cfg.b_min as f64 + (cfg.b_max - cfg.b_min) as f64 * frac;
-        // ⌊·⌉ rounding, clamped to the bounds.
-        (b + 0.5).floor().clamp(cfg.b_min as f64, cfg.b_max as f64) as u32
-    };
-    (alloc(e_low), alloc(e_high))
+    (group_bits(cfg, e_low, tau), group_bits(cfg, e_high, tau))
 }
 
 #[cfg(test)]
@@ -133,6 +148,25 @@ mod tests {
         assert!(bl >= bh);
         let (bl2, bh2) = allocate_bits(&cfg, 10.0, 1000.0);
         assert!(bh2 >= bl2);
+    }
+
+    #[test]
+    fn group_bits_generalizes_the_two_group_rule() {
+        // allocate_bits is exactly group_bits applied to the two log
+        // energies under their shared τ — the N-way generalization must
+        // degenerate to the paper's rule at N = 2
+        let cfg = AllocationConfig { b_min: 3, b_max: 11 };
+        let mut rng = crate::rng::Pcg32::seeded(31);
+        for _ in 0..200 {
+            let el = rng.uniform_f64() * 1e7;
+            let eh = rng.uniform_f64() * 1e3;
+            let (bl, bh) = allocate_bits(&cfg, el, eh);
+            let tau = log_energy(el).max(log_energy(eh));
+            assert_eq!(bl, group_bits(&cfg, log_energy(el), tau));
+            assert_eq!(bh, group_bits(&cfg, log_energy(eh), tau));
+        }
+        // τ = 0 (all-zero energies) pins every group to b_min
+        assert_eq!(group_bits(&cfg, 0.0, 0.0), cfg.b_min);
     }
 
     #[test]

@@ -9,7 +9,7 @@ pub mod easy;
 pub mod linear;
 pub mod power;
 
-pub use allocation::{allocate_bits, AllocationConfig};
+pub use allocation::{allocate_bits, group_bits, log_energy, AllocationConfig};
 pub use bitpack::{pack_uniform, unpack_uniform, BitPacker, BitReader, BitWriter};
 pub use easy::EasyQuant;
 pub use linear::LinearQuantizer;

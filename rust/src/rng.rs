@@ -48,6 +48,10 @@ pub mod stream {
     /// Per-round client sampling (which devices participate in a round);
     /// indexed by round number, not device id.
     pub const SAMPLE: u64 = 0x5341_4D50;
+    /// Deterministic projection bases (NSC-SL subspace codec); indexed by
+    /// the plane/rank geometry, not device id — every device shares the
+    /// same basis for a given `(seed, shape, rank)`.
+    pub const BASIS: u64 = 0x4241_5349;
 }
 
 impl Pcg32 {

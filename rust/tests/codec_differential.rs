@@ -170,7 +170,9 @@ fn factory_fast_path_toggle_is_wire_transparent() {
         ..Default::default()
     };
     let x = Dct2d::forward_tensor(&codec::smooth_activations(&[2, 4, 14, 14], 99));
-    for name in &["slfac", "afd-uniform"] {
+    // sl-acc is spatial but carries the same fused/reference dual kernel;
+    // coefficient planes are as good an input as any for bit-identity
+    for name in &["slfac", "afd-uniform", "sl-acc"] {
         let fast = codec::by_name(name, &fast_params).unwrap();
         let reference = codec::by_name(name, &ref_params).unwrap();
         let pf = fast.compress(&x).unwrap();

@@ -6,9 +6,11 @@
 
 use slfac::codec::wire::{f16_to_f32, f32_to_f16, BodyReader, Payload};
 use slfac::codec::{
-    self, ActivationCodec, AfdUniformCodec, CodecParams, EasyQuantCodec, IdentityCodec,
-    MagnitudeSelectCodec, PowerQuantCodec, SlFacCodec, SlFacConfig, SplitFcCodec,
-    SplitFcConfig, StdSelectCodec, TopKCodec, TopKConfig, UniformLinearCodec,
+    self, ActivationCodec, AfdUniformCodec, CodecParams, EasyQuantCodec, FeatureWiseCodec,
+    FeatureWiseConfig, IdentityCodec, MagnitudeSelectCodec, MaskTopKCodec, MaskTopKConfig,
+    NscSlCodec, NscSlConfig, PowerQuantCodec, SlAccCodec, SlAccConfig, SlFacCodec,
+    SlFacConfig, SplitFcCodec, SplitFcConfig, StdSelectCodec, TopKCodec, TopKConfig,
+    UniformLinearCodec,
 };
 use slfac::dct::Dct2d;
 use slfac::rng::Pcg32;
@@ -30,6 +32,10 @@ fn every_registered_codec_is_send_sync() {
     check::<StdSelectCodec>();
     check::<UniformLinearCodec>();
     check::<IdentityCodec>();
+    check::<SlAccCodec>();
+    check::<FeatureWiseCodec>();
+    check::<MaskTopKCodec>();
+    check::<NscSlCodec>();
     check::<Box<dyn ActivationCodec>>();
     check::<std::sync::Arc<dyn ActivationCodec>>();
 }
@@ -257,6 +263,141 @@ fn property_splitfc_roundtrip_and_channel_budget() {
         // serialized form is stable through the wire
         let p2 = Payload::from_bytes(&p.to_bytes()).unwrap();
         assert_eq!(c.decompress(&p2).unwrap().data(), back.data());
+    });
+}
+
+#[test]
+fn property_slacc_header_bounds_and_kernel_identity() {
+    // SL-ACC wire invariants on random tensors: every channel's bit width
+    // sits in [b_min, b_max], ranges are ordered, the body parses exactly —
+    // and the fused kernel is bit-identical to the reference
+    prop("sl-acc header invariants", 60, |g| {
+        let shape = g.bchw_shape();
+        let x = g.tensor(&shape, *g.choose(&[0.3f32, 1.0, 4.0]));
+        let alloc = slfac::quant::AllocationConfig::default();
+        let c = SlAccCodec::new(SlAccConfig {
+            alloc,
+            fast_path: true,
+        });
+        let p = c.compress(&x).unwrap();
+        let [b, ch, m, n] = p.shape;
+        let plane = m * n;
+        let mut r = BodyReader::new(&p.body);
+        for _ in 0..b * ch {
+            let bits = r.u8().unwrap() as u32;
+            assert!((alloc.b_min..=alloc.b_max).contains(&bits), "bits={bits}");
+            let min = r.f32().unwrap();
+            let max = r.f32().unwrap();
+            assert!(min <= max);
+            r.bytes((plane * bits as usize + 7) / 8).unwrap();
+        }
+        assert_eq!(r.remaining(), 0);
+        let reference = SlAccCodec::new(SlAccConfig {
+            alloc,
+            fast_path: false,
+        });
+        assert_eq!(p.to_bytes(), reference.compress(&x).unwrap().to_bytes());
+        let back = c.decompress(&p).unwrap();
+        assert_eq!(back.shape(), x.shape());
+        for v in back.data() {
+            assert!(v.is_finite());
+        }
+    });
+}
+
+#[test]
+fn property_featurewise_size_monotone_in_threshold() {
+    // raising drop_threshold can only drop more channels, so the payload
+    // never grows; constant tensors reconstruct exactly from f16 means
+    prop("feature-wise threshold monotonicity", 60, |g| {
+        let shape = g.bchw_shape();
+        let x = g.tensor(&shape, 1.0);
+        let mut last = usize::MAX;
+        for thr in [0.0f64, 0.3, 0.7, 1.0] {
+            let c = FeatureWiseCodec::new(FeatureWiseConfig {
+                drop_threshold: thr,
+                ..Default::default()
+            });
+            let p = c.compress(&x).unwrap();
+            assert!(
+                p.wire_bytes() <= last,
+                "thr={thr}: {} > {last}",
+                p.wire_bytes()
+            );
+            last = p.wire_bytes();
+            let back = c.decompress(&p).unwrap();
+            assert_eq!(back.shape(), x.shape());
+            for v in back.data() {
+                assert!(v.is_finite());
+            }
+        }
+        // degenerate: an all-constant tensor drops every channel and
+        // reconstructs exactly (2.5 is f16-representable)
+        let flat = slfac::tensor::Tensor::full(&shape, 2.5);
+        let c = FeatureWiseCodec::new(FeatureWiseConfig::default());
+        let back = c.decompress(&c.compress(&flat).unwrap()).unwrap();
+        assert_eq!(back.data(), flat.data());
+    });
+}
+
+#[test]
+fn property_masktopk_fixed_rate_and_size_monotone_in_bits() {
+    prop("mask-topk size monotonicity", 60, |g| {
+        let shape = g.bchw_shape();
+        let x = g.tensor(&shape, 1.0);
+        let keep = *g.choose(&[0.1f64, 0.25, 0.5, 1.0]);
+        let mut last = 0usize;
+        for bits in [2u32, 4, 8] {
+            let c = MaskTopKCodec::new(MaskTopKConfig {
+                keep_fraction: keep,
+                bits,
+            });
+            let p = c.compress(&x).unwrap();
+            assert!(p.wire_bytes() >= last, "bits={bits}");
+            last = p.wire_bytes();
+            // fixed-rate: an all-zero tensor of the same shape costs the
+            // same bytes (and reconstructs exactly)
+            let z = slfac::tensor::Tensor::zeros(&shape);
+            let pz = c.compress(&z).unwrap();
+            assert_eq!(pz.wire_bytes(), p.wire_bytes());
+            assert_eq!(c.decompress(&pz).unwrap().data(), z.data());
+            let back = c.decompress(&p).unwrap();
+            assert_eq!(back.shape(), x.shape());
+            for v in back.data() {
+                assert!(v.is_finite());
+            }
+        }
+    });
+}
+
+#[test]
+fn property_nscsl_size_monotone_in_rank_and_error_bounded_at_full_rank() {
+    prop("nsc-sl rank monotonicity", 40, |g| {
+        let shape = g.bchw_shape();
+        let x = g.tensor(&shape, 1.0);
+        let mut last = 0usize;
+        for frac in [0.25f64, 0.5, 1.0] {
+            let c = NscSlCodec::new(NscSlConfig {
+                subspace_fraction: frac,
+                bits: 8,
+                seed: 7,
+            });
+            let p = c.compress(&x).unwrap();
+            assert!(p.wire_bytes() >= last, "frac={frac}");
+            last = p.wire_bytes();
+            let back = c.decompress(&p).unwrap();
+            assert_eq!(back.shape(), x.shape());
+            for v in back.data() {
+                assert!(v.is_finite());
+            }
+            // orthogonal projection never amplifies: reconstruction error
+            // is bounded by the input norm plus quantization slack
+            let err = back.rel_l2_error(&x);
+            assert!(err < 1.2, "frac={frac}: rel err {err}");
+            if frac == 1.0 {
+                assert!(err < 0.05, "full rank must be near-exact, err {err}");
+            }
+        }
     });
 }
 

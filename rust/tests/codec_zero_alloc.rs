@@ -55,13 +55,19 @@ fn count_allocs(mut f: impl FnMut()) -> u64 {
 fn steady_state_compress_decompress_is_allocation_free() {
     // the paper codec at MNIST scale (14×14, fused kernel + planned
     // zig-zag), plus the uniform baselines — all scratch-arena paths
-    // (easyquant joined once its fit gained the recycled outlier buffer)
+    // (easyquant joined once its fit gained the recycled outlier buffer;
+    // the literature-cluster codecs were written against this bar from the
+    // start — no sorts, scratch-staged folds, cached NSC-SL bases)
     for (name, shape) in [
         ("slfac", [4usize, 8, 14, 14]),
         ("slfac", [2, 4, 16, 16]),
         ("uniform", [4, 8, 14, 14]),
         ("easyquant", [4, 8, 14, 14]),
         ("identity", [2, 4, 8, 8]),
+        ("sl-acc", [4, 8, 14, 14]),
+        ("featurewise", [4, 8, 14, 14]),
+        ("mask-topk", [4, 8, 14, 14]),
+        ("nsc-sl", [4, 8, 14, 14]),
     ] {
         let params = CodecParams::default();
         let c = codec::by_name(name, &params).unwrap();

@@ -13,7 +13,7 @@
 //! codec or threading layers cannot silently re-baseline what goes on
 //! the wire.
 
-use slfac::codec::{self, CodecParams, Payload};
+use slfac::codec::{self, CodecParams, MaskTopKCodec, MaskTopKConfig, Payload};
 use slfac::dct::Dct2d;
 use slfac::freq::{afd_channel, zigzag};
 use slfac::json::Json;
@@ -208,6 +208,42 @@ fn codec_wire_bytes_match_golden_vectors() {
              re-bless with SLFAC_BLESS=1 and bump the payload version"
         );
     }
+}
+
+/// Mask-encoded top-k bit-layout oracle: the wire bytes of a
+/// hand-computable payload, derived **independently** of the encoder.
+/// This is the human-readable counterpart of the hex in
+/// `codec_wire.json` — if either this test or the golden hex moves, the
+/// mask-topk format changed.
+///
+/// Layout per sample: `f32 γ | f32 min | f32 max | ⌈P/8⌉ bitmap
+/// (LSB-first kept flags) | ⌈k·bits/8⌉ packed levels (MSB-first,
+/// ascending element index)`.
+#[test]
+fn masktopk_bit_layout_oracle() {
+    use slfac::codec::ActivationCodec;
+    // P = 8 elements, keep 0.5 -> k = 4; the four nonzeros are kept and
+    // the dropped elements are zero, so γ = √(total/kept energy) = 1.0
+    // exactly. min = -7, max = 8 -> 4-bit step = (8 - -7)/15 = 1.0, and
+    // every kept value sits exactly on the lattice.
+    let x = Tensor::new(&[1, 1, 2, 4], vec![8.0, 0.0, 0.0, 6.0, -7.0, 0.0, 2.0, 0.0]);
+    let c = MaskTopKCodec::new(MaskTopKConfig {
+        keep_fraction: 0.5,
+        bits: 4,
+    });
+    let p = c.compress(&x).unwrap();
+    let mut want = Vec::new();
+    want.extend_from_slice(&1.0f32.to_le_bytes()); // γ
+    want.extend_from_slice(&(-7.0f32).to_le_bytes()); // min
+    want.extend_from_slice(&8.0f32.to_le_bytes()); // max
+    // kept indices {0, 3, 4, 6} -> bits 0,3,4,6 set
+    want.push(0b0101_1001);
+    // levels round((v - min)/step): 8->15, 6->13, -7->0, 2->9, packed
+    // MSB-first in index order: (15,13) (0,9)
+    want.extend_from_slice(&[0xFD, 0x09]);
+    assert_eq!(p.body, want, "mask-topk wire layout changed");
+    // lattice-exact input reconstructs bit-exactly
+    assert_eq!(c.decompress(&p).unwrap().data(), x.data());
 }
 
 #[test]

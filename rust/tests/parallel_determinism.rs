@@ -288,9 +288,11 @@ fn async_wait_all_homogeneous_matches_sync_exactly() {
     // per-round bytes, AND final parameters. (Content-adaptive codecs
     // like slfac have content-dependent payload sizes, so arrival order —
     // and hence server order — legitimately diverges; they are covered by
-    // the round-1 uplink check below and the bit-transparency test.)
+    // the round-1 uplink check below and the bit-transparency test.
+    // mask-topk and nsc-sl are fixed-rate — payload size is a function of
+    // shape alone — so they must hold the exact-match bar too.)
     let dir = sim_dir("async_vs_sync");
-    for codec in ["identity", "uniform"] {
+    for codec in ["identity", "uniform", "mask-topk", "nsc-sl"] {
         let sync = run(cfg(&dir, codec, SyncMode::ParallelFedAvg, 99, 2));
         let mut ac = cfg(&dir, codec, SyncMode::ParallelFedAvg, 99, 2);
         ac.scheduler = SchedulerKind::Async;
