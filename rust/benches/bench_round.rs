@@ -53,8 +53,8 @@ use slfac::runtime::{write_sim_manifest, ExecutorHandle, HostTensor, SimManifest
 use slfac::tensor::Tensor;
 use slfac::transport::fleet::FleetCohort;
 use slfac::transport::{
-    AsyncEventScheduler, ClientSampling, FleetOps, RoundScheduler, SchedulerKind,
-    StragglerPolicy, SyncEventScheduler, UplinkMode,
+    AsyncEventScheduler, ClientSampling, FaultConfig, FaultPlan, FleetOps, RoundScheduler,
+    SchedulerKind, StragglerPolicy, SyncEventScheduler, UplinkMode,
 };
 use std::collections::BTreeMap;
 
@@ -716,6 +716,44 @@ fn bench_fleet(b: &mut Bencher) {
             m.insert("rounds_per_s".to_string(), Json::Num(rounds_per_s));
             rows.push(Json::Obj(m));
         }
+    }
+
+    // faulty-fleet row: 10k devices with 5% seeded uplink/downlink loss —
+    // the per-device retry path (faulty rounds never cohort-compress), so
+    // this also bounds the fault layer's overhead at scale
+    {
+        let fc = FaultConfig {
+            loss_prob: 0.05,
+            ..Default::default()
+        };
+        let devices = 10_000usize;
+        let sched = SyncEventScheduler::new();
+        let mut ops = FleetOps::new(devices, 1, profiles.clone());
+        ops.set_server_service_s(1e-6);
+        ops.set_fault(Some(FaultPlan::new(fc, 0xFA17, 0)));
+        let report = sched.run_round(&mut ops).unwrap();
+        assert!(
+            report.retransmits > 0,
+            "5% loss over 10k devices must retransmit"
+        );
+        assert!(report.completed + report.dropped() == devices);
+        let r = b
+            .bench(&format!("fleet round/sync+faults/devices={devices}"), || {
+                let _ = sched.run_round(black_box(&mut ops)).unwrap();
+            })
+            .clone();
+        let round_s = r.median.as_secs_f64();
+        let mut m = BTreeMap::new();
+        m.insert("devices".to_string(), Json::Num(devices as f64));
+        m.insert("scheduler".to_string(), Json::Str("sync+faults".to_string()));
+        m.insert("loss_prob".to_string(), Json::Num(fc.loss_prob));
+        m.insert("retransmits".to_string(), Json::Num(report.retransmits as f64));
+        m.insert("round_s".to_string(), Json::Num(round_s));
+        m.insert(
+            "rounds_per_s".to_string(),
+            Json::Num(1.0 / round_s.max(1e-12)),
+        );
+        rows.push(Json::Obj(m));
     }
 
     let mut root = BTreeMap::new();

@@ -25,6 +25,11 @@ pub const MAGIC: &[u8; 4] = b"SLFC";
 pub const VERSION: u8 = 1;
 /// Fixed header size in bytes.
 pub const HEADER_BYTES: usize = 28;
+/// Upper bound on the element count a wire header may claim (2^28 f32
+/// elements = 1 GiB decoded). Parsing rejects anything larger so a
+/// corrupted shape field can never drive an OOM-sized allocation in a
+/// decoder.
+pub const MAX_WIRE_ELEMS: usize = 1 << 28;
 
 /// A compressed tensor en route between device and server.
 #[derive(Debug, Clone)]
@@ -95,6 +100,13 @@ impl Payload {
         for (i, d) in shape.iter_mut().enumerate() {
             let off = 8 + i * 4;
             *d = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+        }
+        let numel = shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .filter(|&n| n <= MAX_WIRE_ELEMS);
+        if numel.is_none() {
+            bail!("implausible payload shape {shape:?}");
         }
         let body_len =
             u32::from_le_bytes(bytes[24..28].try_into().unwrap()) as usize;

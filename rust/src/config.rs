@@ -8,7 +8,8 @@
 use crate::codec::CodecParams;
 use crate::json::Json;
 use crate::transport::{
-    ClientSampling, DownlinkMode, LinkConfig, SchedulerKind, StragglerPolicy, UplinkMode,
+    ClientSampling, DownlinkMode, FaultConfig, LinkConfig, SchedulerKind, StragglerPolicy,
+    UplinkMode,
 };
 use anyhow::{bail, Context, Result};
 
@@ -137,6 +138,10 @@ pub struct ExperimentConfig {
     /// Per-round client sampling (`sample_fraction` / `sample_k` keys;
     /// default: every device participates every round).
     pub sampling: ClientSampling,
+    /// Fault injection knobs (`loss_prob` / `corrupt_prob` / `crash_rate`
+    /// / `max_retries` / `retry_base_s` / `server_outage_s`; all defaults
+    /// = fault layer off, bit-identical to the pre-fault engine).
+    pub fault: FaultConfig,
     /// Simulated client compute seconds per fan-out/fan-in phase on a
     /// reference (multiplier 1.0) device.
     pub base_compute_s: f64,
@@ -185,6 +190,7 @@ impl Default for ExperimentConfig {
             cohorts: 0,
             server_service_s: 0.0,
             sampling: ClientSampling::Full,
+            fault: FaultConfig::default(),
             base_compute_s: 0.002,
             seed: 1234,
             artifacts_dir: "artifacts".into(),
@@ -316,6 +322,16 @@ impl ExperimentConfig {
                     sample_fraction = Some(v.as_f64().context("sample_fraction")?)
                 }
                 "sample_k" => sample_k = Some(v.as_usize().context("sample_k")?),
+                "loss_prob" => cfg.fault.loss_prob = v.as_f64().context("loss_prob")?,
+                "corrupt_prob" => cfg.fault.corrupt_prob = v.as_f64().context("corrupt_prob")?,
+                "crash_rate" => cfg.fault.crash_rate = v.as_f64().context("crash_rate")?,
+                "max_retries" => {
+                    cfg.fault.max_retries = v.as_usize().context("max_retries")? as u32
+                }
+                "retry_base_s" => cfg.fault.retry_base_s = v.as_f64().context("retry_base_s")?,
+                "server_outage_s" => {
+                    cfg.fault.server_outage_s = v.as_f64().context("server_outage_s")?
+                }
                 "base_compute_s" => {
                     cfg.base_compute_s = v.as_f64().context("base_compute_s")?
                 }
@@ -544,6 +560,29 @@ impl ExperimentConfig {
                 }
             }
         }
+        self.fault.validate()?;
+        if self.fault.is_active() {
+            if self.sync == SyncMode::Sequential {
+                bail!(
+                    "fault injection (loss_prob/corrupt_prob/crash_rate/\
+                     server_outage_s) requires sync = \"parallel\", got \
+                     sync = \"sequential\" — the serial hand-off has no \
+                     retry/drop semantics"
+                );
+            }
+            if self.uplink == UplinkMode::Shared {
+                bail!(
+                    "fault injection does not compose with uplink = \"shared\" \
+                     — retransmissions assume private per-device pipes"
+                );
+            }
+            if self.downlink == DownlinkMode::Shared {
+                bail!(
+                    "fault injection does not compose with downlink = \"shared\" \
+                     — retransmissions assume private per-device pipes"
+                );
+            }
+        }
         // profile spec must parse and assign cleanly at this device count
         crate::transport::assign_profiles(&self.profile, self.devices, self.link)?;
         Ok(())
@@ -650,6 +689,31 @@ impl ExperimentConfig {
             ClientSampling::Count(k) => {
                 m.insert("sample_k".into(), Json::Num(k as f64));
             }
+        }
+        // fault knobs: each key only when it differs from the default, so
+        // fault-free configs keep their historical serialization bytes
+        // (and thus fingerprints and sweep journal entries)
+        let fd = FaultConfig::default();
+        if self.fault.loss_prob != fd.loss_prob {
+            m.insert("loss_prob".into(), Json::Num(self.fault.loss_prob));
+        }
+        if self.fault.corrupt_prob != fd.corrupt_prob {
+            m.insert("corrupt_prob".into(), Json::Num(self.fault.corrupt_prob));
+        }
+        if self.fault.crash_rate != fd.crash_rate {
+            m.insert("crash_rate".into(), Json::Num(self.fault.crash_rate));
+        }
+        if self.fault.max_retries != fd.max_retries {
+            m.insert("max_retries".into(), Json::Num(self.fault.max_retries as f64));
+        }
+        if self.fault.retry_base_s != fd.retry_base_s {
+            m.insert("retry_base_s".into(), Json::Num(self.fault.retry_base_s));
+        }
+        if self.fault.server_outage_s != fd.server_outage_s {
+            m.insert(
+                "server_outage_s".into(),
+                Json::Num(self.fault.server_outage_s),
+            );
         }
         m.insert("base_compute_s".into(), Json::Num(self.base_compute_s));
         m.insert("seed".into(), Json::Num(self.seed as f64));
@@ -1013,6 +1077,80 @@ mod tests {
         // sample_k >= devices is NOT an error: it degrades to full
         // participation
         let json = Json::parse(r#"{"sample_k": 64}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&json).is_ok());
+    }
+
+    #[test]
+    fn fault_keys_parse_and_roundtrip() {
+        let json = Json::parse(
+            r#"{"loss_prob": 0.1, "corrupt_prob": 0.02, "crash_rate": 0.05,
+                "max_retries": 5, "retry_base_s": 0.2, "server_outage_s": 1.5}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&json).unwrap();
+        assert!((cfg.fault.loss_prob - 0.1).abs() < 1e-12);
+        assert!((cfg.fault.corrupt_prob - 0.02).abs() < 1e-12);
+        assert!((cfg.fault.crash_rate - 0.05).abs() < 1e-12);
+        assert_eq!(cfg.fault.max_retries, 5);
+        assert!((cfg.fault.retry_base_s - 0.2).abs() < 1e-12);
+        assert!((cfg.fault.server_outage_s - 1.5).abs() < 1e-12);
+        assert!(cfg.fault.is_active());
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.fault, cfg.fault);
+
+        // fault knobs at defaults stay off the serialized form entirely —
+        // the json bytes (and fingerprint) of a fault-free config are the
+        // historical ones
+        let clean = ExperimentConfig::default();
+        assert!(!clean.fault.is_active());
+        let s = clean.to_json().to_string();
+        for key in [
+            "loss_prob",
+            "corrupt_prob",
+            "crash_rate",
+            "max_retries",
+            "retry_base_s",
+            "server_outage_s",
+        ] {
+            assert!(!s.contains(key), "default config serialized {key}");
+        }
+
+        // every fault knob moves the fingerprint
+        let base = ExperimentConfig::default();
+        let mut c = base.clone();
+        c.fault.loss_prob = 0.1;
+        assert_ne!(base.fingerprint(), c.fingerprint());
+        let mut c = base.clone();
+        c.fault.max_retries = 7;
+        assert_ne!(base.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn fault_misconfigurations_rejected() {
+        for bad in [
+            // probabilities out of range
+            r#"{"loss_prob": 1.5}"#,
+            r#"{"corrupt_prob": -0.1}"#,
+            r#"{"crash_rate": 1.0}"#,
+            // retry knobs out of range
+            r#"{"max_retries": 33}"#,
+            r#"{"retry_base_s": -0.5}"#,
+            r#"{"loss_prob": 0.1, "retry_base_s": 0.0}"#,
+            r#"{"server_outage_s": -1}"#,
+            // fault layer needs the parallel schedulers
+            r#"{"loss_prob": 0.1, "sync": "sequential"}"#,
+            // retransmissions assume private pipes
+            r#"{"loss_prob": 0.1, "uplink": "shared"}"#,
+            r#"{"corrupt_prob": 0.1, "downlink": "shared"}"#,
+        ] {
+            let json = Json::parse(bad).unwrap();
+            assert!(
+                ExperimentConfig::from_json(&json).is_err(),
+                "should reject {bad}"
+            );
+        }
+        // inert retry knobs compose with everything (the layer is off)
+        let json = Json::parse(r#"{"max_retries": 5, "sync": "sequential"}"#).unwrap();
         assert!(ExperimentConfig::from_json(&json).is_ok());
     }
 

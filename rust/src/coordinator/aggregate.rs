@@ -54,7 +54,7 @@ pub fn fedavg_sharded(
                 "param {i} shape mismatch across devices"
             );
             let frac = w / total;
-            for (a, &v) in acc.iter_mut().zip(params[i].as_f32()) {
+            for (a, &v) in acc.iter_mut().zip(params[i].as_f32()?) {
                 *a += frac * v as f64;
             }
         }
@@ -81,19 +81,19 @@ mod tests {
     #[test]
     fn equal_weights_is_plain_mean() {
         let avg = fedavg(&[p(&[1.0, 2.0]), p(&[3.0, 4.0])], &[1.0, 1.0]).unwrap();
-        assert_eq!(avg[0].as_f32(), &[2.0, 3.0]);
+        assert_eq!(avg[0].as_f32().unwrap(), &[2.0, 3.0]);
     }
 
     #[test]
     fn weighted_mean() {
         let avg = fedavg(&[p(&[0.0]), p(&[10.0])], &[3.0, 1.0]).unwrap();
-        assert!((avg[0].as_f32()[0] - 2.5).abs() < 1e-6);
+        assert!((avg[0].as_f32().unwrap()[0] - 2.5).abs() < 1e-6);
     }
 
     #[test]
     fn single_device_identity() {
         let avg = fedavg(&[p(&[5.0, -1.0])], &[7.0]).unwrap();
-        assert_eq!(avg[0].as_f32(), &[5.0, -1.0]);
+        assert_eq!(avg[0].as_f32().unwrap(), &[5.0, -1.0]);
     }
 
     #[test]
@@ -125,8 +125,8 @@ mod tests {
             let got = fedavg_sharded(&per, &weights, workers).unwrap();
             assert_eq!(got.len(), reference.len());
             for (a, b) in got.iter().zip(&reference) {
-                let ab: Vec<u32> = a.as_f32().iter().map(|v| v.to_bits()).collect();
-                let bb: Vec<u32> = b.as_f32().iter().map(|v| v.to_bits()).collect();
+                let ab: Vec<u32> = a.as_f32().unwrap().iter().map(|v| v.to_bits()).collect();
+                let bb: Vec<u32> = b.as_f32().unwrap().iter().map(|v| v.to_bits()).collect();
                 assert_eq!(ab, bb, "workers={workers}");
             }
         }
@@ -145,10 +145,10 @@ mod tests {
                 .collect();
             let avg = fedavg(&per, &weights).unwrap();
             for i in 0..n {
-                let vals: Vec<f32> = per.iter().map(|d| d[0].as_f32()[i]).collect();
+                let vals: Vec<f32> = per.iter().map(|d| d[0].as_f32().unwrap()[i]).collect();
                 let lo = vals.iter().cloned().fold(f32::INFINITY, f32::min);
                 let hi = vals.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-                let a = avg[0].as_f32()[i];
+                let a = avg[0].as_f32().unwrap()[i];
                 assert!(a >= lo - 1e-4 && a <= hi + 1e-4);
             }
         });

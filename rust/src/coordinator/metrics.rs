@@ -130,6 +130,16 @@ pub struct RoundMetrics {
     pub dropped_devices: u64,
     /// Devices sampled into this round (`devices` when sampling is off).
     pub sampled_devices: u64,
+    /// Retransmitted message copies this round (fault injection; 0 with
+    /// the fault layer off).
+    pub retransmits: u64,
+    /// Wire bytes of message copies lost in flight this round.
+    pub lost_bytes: u64,
+    /// Corrupted uplink deliveries this round (transport-checksum NACKs
+    /// plus serve-time decode failures).
+    pub corrupt_payloads: u64,
+    /// Simulated seconds arrivals waited out server outage windows, s.
+    pub recovery_wait_s: f64,
     /// Wall-clock compute time this round, s.
     pub wall_time_s: f64,
 }
@@ -161,6 +171,10 @@ impl RoundMetrics {
             && self.queue_wait_s.to_bits() == other.queue_wait_s.to_bits()
             && self.dropped_devices == other.dropped_devices
             && self.sampled_devices == other.sampled_devices
+            && self.retransmits == other.retransmits
+            && self.lost_bytes == other.lost_bytes
+            && self.corrupt_payloads == other.corrupt_payloads
+            && self.recovery_wait_s.to_bits() == other.recovery_wait_s.to_bits()
     }
 }
 
@@ -247,16 +261,37 @@ impl TrainingHistory {
         }
     }
 
+    /// Whether any round recorded fault-layer activity. Gates the fault
+    /// CSV columns so fault-free runs keep the historical CSV bytes.
+    fn has_fault_activity(&self) -> bool {
+        self.rounds.iter().any(|r| {
+            r.retransmits > 0
+                || r.lost_bytes > 0
+                || r.corrupt_payloads > 0
+                || r.recovery_wait_s != 0.0
+        })
+    }
+
     /// Render as CSV (header + one row per round); the `cum_bytes` column
     /// reuses the running totals.
+    ///
+    /// The fault columns (`retransmits,lost_bytes,corrupt_payloads,
+    /// recovery_wait_s`) are emitted only when some round recorded fault
+    /// activity — a fault-free run's CSV is byte-identical to the
+    /// pre-fault-layer format (pinned by the fault-determinism tests).
     pub fn to_csv(&self) -> String {
+        let faulty = self.has_fault_activity();
         let mut s = String::from(
-            "round,train_loss,train_acc,test_loss,test_acc,uplink_bytes,downlink_bytes,cum_bytes,comm_time_s,sim_time_s,queue_wait_s,dropped,sampled,wall_time_s\n",
+            "round,train_loss,train_acc,test_loss,test_acc,uplink_bytes,downlink_bytes,cum_bytes,comm_time_s,sim_time_s,queue_wait_s,dropped,sampled",
         );
+        if faulty {
+            s.push_str(",retransmits,lost_bytes,corrupt_payloads,recovery_wait_s");
+        }
+        s.push_str(",wall_time_s\n");
         for (i, r) in self.rounds.iter().enumerate() {
-            let _ = writeln!(
+            let _ = write!(
                 s,
-                "{},{:.5},{:.4},{:.5},{:.4},{},{},{},{:.4},{:.4},{:.4},{},{},{:.3}",
+                "{},{:.5},{:.4},{:.5},{:.4},{},{},{},{:.4},{:.4},{:.4},{},{}",
                 r.round,
                 r.train_loss,
                 r.train_acc,
@@ -270,8 +305,15 @@ impl TrainingHistory {
                 r.queue_wait_s,
                 r.dropped_devices,
                 r.sampled_devices,
-                r.wall_time_s
             );
+            if faulty {
+                let _ = write!(
+                    s,
+                    ",{},{},{},{:.4}",
+                    r.retransmits, r.lost_bytes, r.corrupt_payloads, r.recovery_wait_s
+                );
+            }
+            let _ = writeln!(s, ",{:.3}", r.wall_time_s);
         }
         s
     }
@@ -387,6 +429,10 @@ mod tests {
             queue_wait_s: 0.0,
             dropped_devices: 0,
             sampled_devices: 5,
+            retransmits: 0,
+            lost_bytes: 0,
+            corrupt_payloads: 0,
+            recovery_wait_s: 0.0,
             wall_time_s: 0.5,
         }
     }
@@ -471,5 +517,48 @@ mod tests {
         let lines: Vec<&str> = csv.trim().lines().collect();
         assert_eq!(lines.len(), 2);
         assert_eq!(lines[0].split(',').count(), lines[1].split(',').count());
+    }
+
+    #[test]
+    fn bit_eq_detects_fault_counter_drift() {
+        let a = mk(1, 0.5, 100);
+        let mut b = a.clone();
+        b.retransmits = 1;
+        assert!(!a.bit_eq(&b), "retransmit drift must be detected");
+        let mut c = a.clone();
+        c.corrupt_payloads = 1;
+        assert!(!a.bit_eq(&c), "corruption drift must be detected");
+        let mut d = a.clone();
+        d.lost_bytes = 7;
+        assert!(!a.bit_eq(&d), "lost-byte drift must be detected");
+        let mut e = a.clone();
+        e.recovery_wait_s = f64::from_bits(a.recovery_wait_s.to_bits() + 1);
+        assert!(!a.bit_eq(&e), "1-ulp recovery-wait drift must be detected");
+    }
+
+    #[test]
+    fn csv_fault_columns_appear_only_with_fault_activity() {
+        // fault-free: the historical 14-column format, byte-stable
+        let clean = hist(vec![mk(1, 0.5, 64)]);
+        let clean_csv = clean.to_csv();
+        assert!(clean_csv.starts_with("round,"));
+        assert!(!clean_csv.contains("retransmits"));
+        assert_eq!(clean_csv.lines().next().unwrap().split(',').count(), 14);
+        // any fault activity switches every row to the 18-column format
+        let mut m = mk(1, 0.5, 64);
+        m.retransmits = 3;
+        m.lost_bytes = 128;
+        m.corrupt_payloads = 1;
+        m.recovery_wait_s = 0.25;
+        let faulty = hist(vec![mk(2, 0.6, 64), m]);
+        let csv = faulty.to_csv();
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert!(lines[0].ends_with(
+            "dropped,sampled,retransmits,lost_bytes,corrupt_payloads,recovery_wait_s,wall_time_s"
+        ));
+        for l in &lines {
+            assert_eq!(l.split(',').count(), 18, "row {l:?}");
+        }
+        assert!(lines[2].contains(",3,128,1,0.2500,"));
     }
 }

@@ -13,9 +13,9 @@ use crate::rng::{derive_seed, stream, Pcg32};
 use crate::runtime::{ExecutorHandle, ExecutorStats, HostTensor, ResidentSession};
 use crate::tensor::Tensor;
 use crate::transport::{
-    assign_profiles, build_scheduler, CommStats, DeviceId, DeviceProfile, Direction,
-    DownlinkMode, Link, RoundOps, RoundReport, RoundScheduler, ServerOut, UplinkMode,
-    UplinkMsg,
+    assign_profiles, build_scheduler, fault::CORRUPT_FLIPS, CommStats, DeviceId, DeviceProfile,
+    Direction, DownlinkMode, FaultPlan, Link, RoundOps, RoundReport, RoundScheduler, ServerOut,
+    ServerStep, UplinkMode, UplinkMsg,
 };
 use anyhow::{Context, Result};
 use std::sync::{Arc, Mutex};
@@ -69,6 +69,10 @@ struct DeviceCtx {
     shard_len: usize,
     /// Set by fan-out, consumed by the server step and fan-in.
     pending: Option<StepCtx>,
+    /// Fault injection: clean copy of the pending uplink body while seeded
+    /// bit flips are applied (the retransmission resends the original
+    /// payload). Empty — no allocation — unless the fault layer is active.
+    clean_body: Vec<u8>,
 }
 
 /// One in-flight batch between phases.
@@ -263,6 +267,7 @@ impl Trainer {
                 cp: if use_resident { Vec::new() } else { cp.clone() },
                 cm: if use_resident { Vec::new() } else { cm.clone() },
                 pending: None,
+                clean_body: Vec::new(),
             })
             .collect();
 
@@ -306,6 +311,12 @@ impl Trainer {
             }
             if m.dropped_devices > 0 {
                 extras.push_str(&format!("  dropped {}", m.dropped_devices));
+            }
+            if m.retransmits > 0 || m.corrupt_payloads > 0 {
+                extras.push_str(&format!(
+                    "  retx {} corrupt {}",
+                    m.retransmits, m.corrupt_payloads
+                ));
             }
             if (m.sampled_devices as usize) < self.cfg.devices {
                 extras.push_str(&format!(
@@ -399,6 +410,15 @@ impl Trainer {
         // the scheduler itself stays borrowed from self.
         let workers = self.workers();
         let participants = &self.participants;
+        // One fault plan per round, a pure function of (seed, round) — the
+        // same plan at workers = 1 and N, sync and async. Inactive fault
+        // configs hand the schedulers `None` and take the legacy paths
+        // bit-identically.
+        let fault = self
+            .cfg
+            .fault
+            .is_active()
+            .then(|| FaultPlan::new(self.cfg.fault, self.cfg.seed, round as u64));
         let report = {
             let mut ops = TrainerRoundOps {
                 devices: &mut self.devices[..],
@@ -413,6 +433,7 @@ impl Trainer {
                 server: &self.server,
                 resident: self.resident.as_ref(),
                 workers,
+                fault,
             };
             self.scheduler.run_round(&mut ops)?
         };
@@ -519,7 +540,8 @@ impl Trainer {
                     &self.cfg,
                     &self.preset,
                     &self.server,
-                )?;
+                )?
+                .context("corrupt uplink payload in sequential round")?;
                 loss_sum += out.loss;
                 correct += out.correct;
                 samples += out.samples;
@@ -572,6 +594,7 @@ impl Trainer {
             queue_wait_s: 0.0,
             n_devices: self.participants.len(),
             completed: self.participants.len(),
+            ..RoundReport::zeroed()
         };
         let sampled = self.participants.len() as u64;
         self.finish_round(round, t0, &report, up0, down0, sampled)
@@ -620,6 +643,10 @@ impl Trainer {
             queue_wait_s: report.queue_wait_s,
             dropped_devices: report.dropped() as u64,
             sampled_devices,
+            retransmits: report.retransmits,
+            lost_bytes: report.lost_bytes,
+            corrupt_payloads: report.corrupt_payloads,
+            recovery_wait_s: report.recovery_wait_s,
             wall_time_s: t0.elapsed().as_secs_f64(),
         })
     }
@@ -735,6 +762,11 @@ struct TrainerRoundOps<'a> {
     /// Device-resident fast path (None routes through `exec`).
     resident: Option<&'a ResidentSession>,
     workers: usize,
+    /// This round's fault plan (`None` = fault layer off → schedulers take
+    /// the legacy bit-identical paths). Draws are keyed by
+    /// **participant-local** device ids, like every other scheduler-side
+    /// id; with sampling off, local and global ids coincide.
+    fault: Option<FaultPlan>,
 }
 
 impl TrainerRoundOps<'_> {
@@ -835,6 +867,9 @@ impl RoundOps for TrainerRoundOps<'_> {
     }
 
     fn server_step(&mut self, dev: DeviceId) -> Result<ServerOut> {
+        // legacy contract: a decode failure aborts the round (fault-free
+        // configs never hit this — corrupted payloads only exist under an
+        // active plan, which routes through `server_step_checked` instead)
         server_step_impl(
             &mut self.devices[self.participants[dev]],
             self.resident,
@@ -843,6 +878,27 @@ impl RoundOps for TrainerRoundOps<'_> {
             self.cfg,
             self.preset,
             self.server,
+        )?
+        .ok_or_else(|| anyhow::anyhow!("corrupt uplink payload on device {dev}"))
+    }
+
+    fn server_step_checked(&mut self, dev: DeviceId) -> Result<ServerStep> {
+        // fail-closed: a decode failure fails only this device (the
+        // scheduler counts it and drops the device); every other device's
+        // round is untouched
+        Ok(
+            match server_step_impl(
+                &mut self.devices[self.participants[dev]],
+                self.resident,
+                self.exec,
+                self.codec,
+                self.cfg,
+                self.preset,
+                self.server,
+            )? {
+                Some(out) => ServerStep::Served(out),
+                None => ServerStep::Corrupt,
+            },
         )
     }
 
@@ -869,6 +925,48 @@ impl RoundOps for TrainerRoundOps<'_> {
         let global = self.participants[dev];
         self.devices[global].pending = None;
         self.completed[global] = false;
+    }
+
+    fn fault_plan(&self) -> Option<FaultPlan> {
+        self.fault
+    }
+
+    fn corrupt_uplink(&mut self, dev: DeviceId, step: usize, attempt: u32) {
+        // Inject the plan's seeded bit flips into the pending uplink body
+        // and drive the decoder over the corrupted bytes — the live-path
+        // proof that decode fails *closed* (an `Err` or garbage output,
+        // never a panic or a round abort). The clean body is restored
+        // afterwards: a retransmission resends the original payload.
+        let Some(plan) = self.fault else { return };
+        let d = &mut self.devices[self.participants[dev]];
+        let Some(pending) = d.pending.as_mut() else { return };
+        if pending.uplink.body.is_empty() {
+            return;
+        }
+        d.clean_body.clear();
+        d.clean_body.extend_from_slice(&pending.uplink.body);
+        let n_bits = pending.uplink.body.len() * 8;
+        for i in 0..CORRUPT_FLIPS {
+            let bit = plan.flip_bit(dev, step, attempt, i, n_bits);
+            pending.uplink.body[bit / 8] ^= 1 << (bit % 8);
+        }
+        let _ = self
+            .codec
+            .decompress_into(&pending.uplink, &mut d.scratch, &mut d.decode);
+        pending.uplink.body.clear();
+        pending.uplink.body.extend_from_slice(&d.clean_body);
+    }
+
+    fn charge_retransmit_uplink(&mut self, dev: DeviceId, bytes: usize, busy_s: f64) {
+        self.devices[self.participants[dev]]
+            .link
+            .charge(Direction::Uplink, bytes, busy_s);
+    }
+
+    fn charge_retransmit_downlink(&mut self, dev: DeviceId, bytes: usize, busy_s: f64) {
+        self.devices[self.participants[dev]]
+            .link
+            .charge(Direction::Downlink, bytes, busy_s);
     }
 }
 
@@ -918,9 +1016,9 @@ fn device_fanout_impl(
         let act = out.next().context("act output")?;
         let act_dct = out.next().context("act_dct output")?;
         let wire_input: Tensor = if freq {
-            act_dct.into_tensor()
+            act_dct.into_tensor()?
         } else {
-            act.into_tensor()
+            act.into_tensor()?
         };
         codec.compress_into(&wire_input, &mut dev.codec_rng, &mut dev.scratch, &mut payload)?;
         (Some(x), Some(y))
@@ -949,6 +1047,12 @@ fn device_fanout_impl(
 /// Server-step body (shared by all modes): decompress the pending uplink,
 /// run the server training step, compress + charge the downlink gradient.
 ///
+/// Returns `Ok(None)` when the uplink payload fails to decode (corrupted
+/// bytes that escaped the transport checksum): the device's pending step
+/// is left intact — nothing is consumed, no server state is touched — and
+/// the caller decides between retransmit/drop (`server_step_checked`) and
+/// the legacy round abort (`server_step`).
+///
 /// With a resident session the step updates `W_s`/`M_s` in place on the
 /// server slot (fused softmax, maintained `W_sᵀ` for the activation
 /// gradient) and stages the downlink gradient in the device's reusable
@@ -961,13 +1065,18 @@ fn server_step_impl(
     cfg: &ExperimentConfig,
     preset: &str,
     server: &Mutex<(Vec<HostTensor>, Vec<HostTensor>)>,
-) -> Result<ServerOut> {
+) -> Result<Option<ServerOut>> {
     let freq = codec.frequency_domain();
     let step = dev.pending.as_mut().context("phase order violation")?;
 
     // decompress uplink → activations (into the reusable decode target),
-    // then recycle the payload body for the gradient below
-    codec.decompress_into(&step.uplink, &mut dev.scratch, &mut dev.decode)?;
+    // then recycle the payload body for the gradient below. Fail closed on
+    // a decode error: the pending payload stays untouched for the caller's
+    // retransmit/drop decision, and no other device is affected.
+    if let Err(e) = codec.decompress_into(&step.uplink, &mut dev.scratch, &mut dev.decode) {
+        crate::warn!("device {}: uplink decode failed: {e:#}", dev.id);
+        return Ok(None);
+    }
     dev.scratch.recycle_body(std::mem::take(&mut step.uplink.body));
 
     if let Some(res) = resident {
@@ -997,13 +1106,13 @@ fn server_step_impl(
             step.grad = Some(GradMsg::Stashed);
             (t, wire)
         };
-        return Ok(ServerOut {
+        return Ok(Some(ServerOut {
             downlink_s,
             wire_bytes,
             loss: loss_f32 as f64,
             correct,
             samples: batch,
-        });
+        }));
     }
 
     let act = if freq {
@@ -1048,7 +1157,7 @@ fn server_step_impl(
         let mut payload = Payload::empty();
         payload.body = dev.scratch.take_body();
         codec.compress_into(
-            &g.into_tensor(),
+            &g.into_tensor()?,
             &mut dev.codec_rng,
             &mut dev.scratch,
             &mut payload,
@@ -1063,13 +1172,13 @@ fn server_step_impl(
         step.grad = Some(GradMsg::Raw(gact));
         (t, wire)
     };
-    Ok(ServerOut {
+    Ok(Some(ServerOut {
         downlink_s,
         wire_bytes,
         loss,
         correct,
         samples: batch,
-    })
+    }))
 }
 
 /// Downlink send accounting, symmetric to the uplink side of

@@ -23,6 +23,7 @@
 //!     --shared-uplink-mbps 100 --server-service-s 0.002 --sample-fraction 0.25
 //! slfac train --scheduler async --devices 100000 --cohorts 2 --profile wifi/lte
 //! slfac train --devices 64 --downlink shared --shared-downlink-mbps 200
+//! slfac train --scheduler async --loss-prob 0.05 --corrupt-prob 0.02 --max-retries 3
 //! slfac sweep run --spec configs/sweeps/fig2_convergence.json --workers 4
 //! slfac sweep status --spec configs/sweeps/fig2_convergence.json
 //! slfac sweep report --spec configs/sweeps/fig2_convergence.json \
@@ -112,6 +113,22 @@ fn cli() -> Command {
                     None,
                 )
                 .opt("server-service-s", "SECS", "simulated server time per batch", None)
+                .opt("loss-prob", "P", "per-message seeded loss probability, [0, 1]", None)
+                .opt(
+                    "corrupt-prob",
+                    "P",
+                    "per-message seeded payload bit-corruption probability, [0, 1]",
+                    None,
+                )
+                .opt("crash-rate", "P", "per-round device crash probability, [0, 1)", None)
+                .opt("max-retries", "N", "retransmissions before a device is dropped", None)
+                .opt("retry-base-s", "SECS", "retransmission backoff base (doubles per attempt)", None)
+                .opt(
+                    "server-outage-s",
+                    "SECS",
+                    "seeded per-round server outage window duration",
+                    None,
+                )
                 .opt("sample-fraction", "F", "fraction of devices per round, (0, 1]", None)
                 .opt("sample-k", "N", "devices sampled per round", None)
                 .opt("backend", "KIND", "executor backend: xla | sim", Some("xla"))
@@ -310,6 +327,42 @@ fn build_config(m: &Matches) -> Result<ExperimentConfig> {
         .map_err(anyhow::Error::msg)?
     {
         cfg.server_service_s = s;
+    }
+    if let Some(p) = m
+        .get_parsed::<f64>("loss-prob")
+        .map_err(anyhow::Error::msg)?
+    {
+        cfg.fault.loss_prob = p;
+    }
+    if let Some(p) = m
+        .get_parsed::<f64>("corrupt-prob")
+        .map_err(anyhow::Error::msg)?
+    {
+        cfg.fault.corrupt_prob = p;
+    }
+    if let Some(p) = m
+        .get_parsed::<f64>("crash-rate")
+        .map_err(anyhow::Error::msg)?
+    {
+        cfg.fault.crash_rate = p;
+    }
+    if let Some(n) = m
+        .get_parsed::<u32>("max-retries")
+        .map_err(anyhow::Error::msg)?
+    {
+        cfg.fault.max_retries = n;
+    }
+    if let Some(s) = m
+        .get_parsed::<f64>("retry-base-s")
+        .map_err(anyhow::Error::msg)?
+    {
+        cfg.fault.retry_base_s = s;
+    }
+    if let Some(s) = m
+        .get_parsed::<f64>("server-outage-s")
+        .map_err(anyhow::Error::msg)?
+    {
+        cfg.fault.server_outage_s = s;
     }
     let sample_fraction = m
         .get_parsed::<f64>("sample-fraction")

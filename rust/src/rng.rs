@@ -52,6 +52,13 @@ pub mod stream {
     /// the plane/rank geometry, not device id — every device shares the
     /// same basis for a given `(seed, shape, rank)`.
     pub const BASIS: u64 = 0x4241_5349;
+    /// Fault injection (crash windows, message loss, payload corruption,
+    /// retry jitter, server outages); indexed by the round number. Every
+    /// individual draw folds `(device, step, attempt, kind)` into the
+    /// derive index, so a fault decision is a pure function of the message
+    /// identity — never of scheduler control flow or worker count. See
+    /// [`crate::transport::fault`].
+    pub const FAULT: u64 = 0x4641_554C;
 }
 
 impl Pcg32 {

@@ -2,6 +2,7 @@
 //! and the executor actor.
 
 use crate::tensor::Tensor;
+use anyhow::{bail, Result};
 
 /// A dense host tensor (f32 or i32), row-major.
 #[derive(Debug, Clone, PartialEq)]
@@ -61,19 +62,24 @@ impl HostTensor {
         self.dims().iter().product()
     }
 
-    /// Borrow f32 data (panics on i32 tensors).
-    pub fn as_f32(&self) -> &[f32] {
+    /// Borrow f32 data; a typed error on i32 tensors so a malformed
+    /// executor request surfaces as a failed round, not a panicked worker.
+    pub fn as_f32(&self) -> Result<&[f32]> {
         match self {
-            HostTensor::F32 { data, .. } => data,
-            HostTensor::I32 { .. } => panic!("expected f32 tensor, got i32"),
+            HostTensor::F32 { data, .. } => Ok(data),
+            HostTensor::I32 { dims, .. } => {
+                bail!("expected f32 tensor, got i32 (dims {dims:?})")
+            }
         }
     }
 
-    /// Borrow i32 data (panics on f32 tensors).
-    pub fn as_i32(&self) -> &[i32] {
+    /// Borrow i32 data; a typed error on f32 tensors.
+    pub fn as_i32(&self) -> Result<&[i32]> {
         match self {
-            HostTensor::I32 { data, .. } => data,
-            HostTensor::F32 { .. } => panic!("expected i32 tensor, got f32"),
+            HostTensor::I32 { data, .. } => Ok(data),
+            HostTensor::F32 { dims, .. } => {
+                bail!("expected i32 tensor, got f32 (dims {dims:?})")
+            }
         }
     }
 
@@ -85,11 +91,14 @@ impl HostTensor {
         }
     }
 
-    /// Convert into the codec [`Tensor`] type (f32 only).
-    pub fn into_tensor(self) -> Tensor {
+    /// Convert into the codec [`Tensor`] type (f32 only); a typed error
+    /// on i32 tensors.
+    pub fn into_tensor(self) -> Result<Tensor> {
         match self {
-            HostTensor::F32 { dims, data } => Tensor::new(&dims, data),
-            HostTensor::I32 { .. } => panic!("cannot convert i32 tensor to codec Tensor"),
+            HostTensor::F32 { dims, data } => Ok(Tensor::new(&dims, data)),
+            HostTensor::I32 { dims, .. } => {
+                bail!("cannot convert i32 tensor (dims {dims:?}) to codec Tensor")
+            }
         }
     }
 
@@ -131,6 +140,39 @@ mod tests {
     fn tensor_roundtrip() {
         let t = Tensor::new(&[1, 2, 2, 2], (0..8).map(|i| i as f32).collect());
         let h = HostTensor::from_tensor(&t);
-        assert_eq!(h.into_tensor(), t);
+        assert_eq!(h.into_tensor().unwrap(), t);
+    }
+
+    #[test]
+    fn as_f32_on_i32_is_a_typed_error() {
+        let t = HostTensor::i32(&[2], vec![1, 2]);
+        let err = t.as_f32().unwrap_err().to_string();
+        assert!(err.contains("expected f32"), "got: {err}");
+        assert!(err.contains("[2]"), "error should name the dims: {err}");
+    }
+
+    #[test]
+    fn as_i32_on_f32_is_a_typed_error() {
+        let t = HostTensor::f32(&[3], vec![0.0; 3]);
+        let err = t.as_i32().unwrap_err().to_string();
+        assert!(err.contains("expected i32"), "got: {err}");
+        assert!(err.contains("[3]"), "error should name the dims: {err}");
+    }
+
+    #[test]
+    fn into_tensor_on_i32_is_a_typed_error() {
+        let t = HostTensor::i32(&[1], vec![9]);
+        let err = t.into_tensor().unwrap_err().to_string();
+        assert!(err.contains("i32 tensor"), "got: {err}");
+        assert!(err.contains("codec Tensor"), "got: {err}");
+    }
+
+    #[test]
+    fn happy_paths_still_borrow() {
+        assert_eq!(
+            HostTensor::f32(&[2], vec![1.0, 2.0]).as_f32().unwrap(),
+            &[1.0, 2.0]
+        );
+        assert_eq!(HostTensor::i32(&[1], vec![5]).as_i32().unwrap(), &[5]);
     }
 }

@@ -151,7 +151,7 @@ impl SimBackend {
 
 fn idct(inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
     ensure!(inputs.len() == 1, "idct takes 1 input, got {}", inputs.len());
-    let coeffs = inputs.into_iter().next().unwrap().into_tensor();
+    let coeffs = inputs.into_iter().next().unwrap().into_tensor()?;
     Ok(vec![HostTensor::from_tensor(&Dct2d::inverse_tensor(
         &coeffs,
     ))])
@@ -170,7 +170,7 @@ impl SimPreset {
             b,
             self.in_dim
         );
-        Ok((b, x.as_f32()))
+        Ok((b, x.as_f32()?))
     }
 
     /// `act = tanh(x_flat · W_c)` as a `[B, C, M, N]` tensor.
@@ -216,7 +216,7 @@ impl SimPreset {
 
     fn client_fwd(&self, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
         ensure!(inputs.len() == 2, "client_fwd takes [W_c, x]");
-        let act = self.forward_client(inputs[0].as_f32(), &inputs[1])?;
+        let act = self.forward_client(inputs[0].as_f32()?, &inputs[1])?;
         let act_dct = Dct2d::forward_tensor(&act);
         Ok(vec![
             HostTensor::from_tensor(&act),
@@ -226,11 +226,11 @@ impl SimPreset {
 
     fn server_step(&self, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
         ensure!(inputs.len() == 5, "server_step takes [W_s, M_s, act, y, lr]");
-        let w_s = inputs[0].as_f32();
-        let m_s = inputs[1].as_f32();
+        let w_s = inputs[0].as_f32()?;
+        let m_s = inputs[1].as_f32()?;
         let act = &inputs[2];
-        let labels = inputs[3].as_i32();
-        let lr = inputs[4].as_f32()[0];
+        let labels = inputs[3].as_i32()?;
+        let lr = inputs[4].as_f32()?[0];
         let b = act.dims()[0];
         ensure!(
             act.numel() == b * self.act_feat,
@@ -240,7 +240,7 @@ impl SimPreset {
             self.act_feat
         );
         ensure!(labels.len() == b, "server_step: labels/batch mismatch");
-        let a = act.as_f32();
+        let a = act.as_f32()?;
 
         let logits = fwd_gemm_ref(a, w_s, b, self.act_feat, self.classes);
         let (loss, correct, dlogits) = softmax_xent_ref(&logits, labels, b, self.classes);
@@ -267,11 +267,11 @@ impl SimPreset {
 
     fn client_step(&self, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
         ensure!(inputs.len() == 5, "client_step takes [W_c, M_c, x, gact, lr]");
-        let w_c = inputs[0].as_f32();
-        let m_c = inputs[1].as_f32();
+        let w_c = inputs[0].as_f32()?;
+        let m_c = inputs[1].as_f32()?;
         let x = &inputs[2];
         let gact = &inputs[3];
-        let lr = inputs[4].as_f32()[0];
+        let lr = inputs[4].as_f32()?[0];
         let (b, xf) = self.flat_batch(x)?;
         ensure!(
             gact.numel() == b * self.act_feat,
@@ -285,7 +285,7 @@ impl SimPreset {
         // resident fast path skips this recompute by stashing `act` from
         // `client_fwd` (bit-identical: the stash holds the same tanh(z))
         let mut z = fwd_gemm_ref(xf, w_c, b, self.in_dim, self.act_feat);
-        for (zv, &gv) in z.iter_mut().zip(gact.as_f32()) {
+        for (zv, &gv) in z.iter_mut().zip(gact.as_f32()?) {
             let a = zv.tanh();
             *zv = gv * (1.0 - a * a);
         }
@@ -301,9 +301,9 @@ impl SimPreset {
 
     fn eval_step(&self, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
         ensure!(inputs.len() == 4, "eval_step takes [W_c, W_s, x, y]");
-        let w_s = inputs[1].as_f32();
-        let labels = inputs[3].as_i32();
-        let act = self.forward_client(inputs[0].as_f32(), &inputs[2])?;
+        let w_s = inputs[1].as_f32()?;
+        let labels = inputs[3].as_i32()?;
+        let act = self.forward_client(inputs[0].as_f32()?, &inputs[2])?;
         let b = act.shape()[0];
         ensure!(labels.len() == b, "eval_step: labels/batch mismatch");
         let logits = fwd_gemm_ref(act.data(), w_s, b, self.act_feat, self.classes);
@@ -452,13 +452,14 @@ mod tests {
             .remove(0);
         let diff = back
             .as_f32()
+            .unwrap()
             .iter()
-            .zip(out[0].as_f32())
+            .zip(out[0].as_f32().unwrap())
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f32, f32::max);
         assert!(diff < 1e-4, "idct roundtrip diff {diff}");
         // tanh bounds
-        assert!(out[0].as_f32().iter().all(|v| v.abs() <= 1.0));
+        assert!(out[0].as_f32().unwrap().iter().all(|v| v.abs() <= 1.0));
     }
 
     #[test]

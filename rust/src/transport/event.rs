@@ -83,6 +83,21 @@ pub enum Event {
     /// The device finished the client-backward of its last local step —
     /// its round participation is complete.
     DeviceDone,
+    /// Ack timeout fired for a lost or corrupted **uplink** copy of local
+    /// step `step`: the device retransmits (with exponential backoff and
+    /// seeded jitter) or, with retries exhausted, counts as dropped for
+    /// the round. Only emitted by the fault-injection paths
+    /// ([`super::fault::FaultPlan`]); fault-free rounds never see it.
+    UplinkRetry {
+        /// 0-based local step within the round.
+        step: usize,
+    },
+    /// Ack timeout for a lost **downlink** copy — the egress twin of
+    /// [`Event::UplinkRetry`], re-sent by the server.
+    DownlinkRetry {
+        /// 0-based local step within the round.
+        step: usize,
+    },
     /// Cohort-compressed uplink arrival: `len` devices' uplinks landed at
     /// this same instant. Members live at `arena[off .. off + len]` in the
     /// scheduler's round arena, **in push order** — replaying them in that
@@ -248,6 +263,14 @@ pub struct ServerResource {
     service_s: f64,
     /// Instant the server finishes its last accepted batch.
     free_t: f64,
+    /// Outage window `[start, end)` during which the server accepts no
+    /// work: a batch offered inside it waits until `end` (fault
+    /// injection; `None` in fault-free rounds, where `acquire` is
+    /// bit-identical to the pre-outage behavior).
+    outage: Option<(f64, f64)>,
+    /// Total time batches spent waiting out the outage window this round
+    /// — surfaced as `RoundMetrics::recovery_wait_s`.
+    recovery_wait_s: f64,
 }
 
 impl ServerResource {
@@ -260,14 +283,38 @@ impl ServerResource {
         ServerResource {
             service_s,
             free_t: 0.0,
+            outage: None,
+            recovery_wait_s: 0.0,
         }
+    }
+
+    /// Install an outage window `[start, end)` for this round: batches
+    /// offered inside it pause until `end` (service resumes and the FIFO
+    /// drains in offer order). `None` clears the window. Fault injection
+    /// only — with no window installed `acquire` is unchanged.
+    pub fn set_outage(&mut self, window: Option<(f64, f64)>) {
+        if let Some((start, end)) = window {
+            assert!(
+                start.is_finite() && end.is_finite() && start <= end,
+                "outage window must be finite and ordered, got [{start}, {end})"
+            );
+        }
+        self.outage = window;
     }
 
     /// Offer one batch that became ready at `ready_t`; returns
     /// `(start_t, end_t)` of its service slot and marks the server busy
-    /// until `end_t`.
+    /// until `end_t`. If the would-be start falls inside an installed
+    /// outage window, service pauses until the window ends and the pause
+    /// accrues to [`ServerResource::recovery_wait_s`].
     pub fn acquire(&mut self, ready_t: f64) -> (f64, f64) {
-        let start = ready_t.max(self.free_t);
+        let mut start = ready_t.max(self.free_t);
+        if let Some((o_start, o_end)) = self.outage {
+            if start >= o_start && start < o_end {
+                self.recovery_wait_s += o_end - start;
+                start = o_end;
+            }
+        }
         let end = start + self.service_s;
         self.free_t = end;
         (start, end)
@@ -278,12 +325,21 @@ impl ServerResource {
         self.free_t
     }
 
-    /// Forget all accepted work: the server is idle again at t = 0. Called
-    /// at round start so busy time from batches a straggler policy
-    /// abandoned (`EventQueue::clear`) never leaks into the next round —
-    /// the round-boundary semantics pinned in the type-level docs.
+    /// Time batches have spent paused on the outage window since the last
+    /// reset.
+    pub fn recovery_wait_s(&self) -> f64 {
+        self.recovery_wait_s
+    }
+
+    /// Forget all accepted work: the server is idle again at t = 0, with
+    /// no outage window and zeroed recovery wait. Called at round start so
+    /// busy time from batches a straggler policy abandoned
+    /// (`EventQueue::clear`) never leaks into the next round — the
+    /// round-boundary semantics pinned in the type-level docs.
     pub fn reset(&mut self) {
         self.free_t = 0.0;
+        self.outage = None;
+        self.recovery_wait_s = 0.0;
     }
 }
 
@@ -382,6 +438,42 @@ mod tests {
     #[should_panic(expected = "service time")]
     fn server_resource_rejects_nan_service() {
         ServerResource::new(f64::NAN);
+    }
+
+    #[test]
+    fn server_outage_pauses_service_and_drains_fifo_on_recovery() {
+        let mut s = ServerResource::new(1.0);
+        s.set_outage(Some((2.0, 5.0)));
+        // before the window: untouched
+        assert_eq!(s.acquire(0.5), (0.5, 1.5));
+        // lands inside the window: waits for recovery
+        assert_eq!(s.acquire(3.0), (5.0, 6.0));
+        // queued behind the drained batch, past the window: plain FIFO
+        assert_eq!(s.acquire(3.0), (6.0, 7.0));
+        assert_eq!(s.recovery_wait_s(), 2.0, "only the paused batch accrues");
+        // reset clears window and counter
+        s.reset();
+        assert_eq!(s.recovery_wait_s(), 0.0);
+        assert_eq!(s.acquire(3.0), (3.0, 4.0));
+    }
+
+    #[test]
+    fn server_without_outage_is_bit_identical() {
+        let offers = [0.0, 0.5, 0.5, 3.25, 2.0];
+        let run = |with_clear: bool| {
+            let mut s = ServerResource::new(0.25);
+            if with_clear {
+                s.set_outage(None);
+            }
+            offers
+                .iter()
+                .map(|&t| {
+                    let (a, b) = s.acquire(t);
+                    (a.to_bits(), b.to_bits())
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(false), run(true));
     }
 
     #[test]

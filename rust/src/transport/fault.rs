@@ -1,0 +1,423 @@
+//! Seeded fault injection: crashes, message loss, payload corruption,
+//! retry backoff, and server outages — all bit-reproducible.
+//!
+//! Every fault decision is a **pure function of the message identity**
+//! `(seed, round, device, step, attempt)` plus a draw-kind tag, derived
+//! through [`crate::rng::stream::FAULT`]. Nothing is sampled from
+//! scheduler control flow, thread timing, or worker count, so:
+//!
+//! * the same config produces the same fault pattern at `workers = 1`
+//!   and `workers = N`;
+//! * sync and async schedulers see the same per-message loss/corruption
+//!   verdicts (their *reaction* may differ only where the schedulers'
+//!   semantics differ, e.g. when downlinks are anchored at a barrier);
+//! * a fault-free config ([`FaultConfig::is_active`] `== false`) draws
+//!   nothing at all and leaves every legacy code path bit-identical.
+//!
+//! The plan object is tiny and `Copy`: schedulers grab one per round via
+//! [`crate::transport::RoundOps::fault_plan`] and query it statelessly.
+
+use crate::rng::{derive_seed, mix64, stream};
+use crate::transport::DeviceId;
+use anyhow::{bail, Result};
+
+/// Draw-kind tags folded into the derive index so each decision about
+/// the same message uses an independent stream.
+const K_CRASH: u64 = 1;
+const K_UP_LOSS: u64 = 2;
+const K_DOWN_LOSS: u64 = 3;
+const K_CORRUPT: u64 = 4;
+const K_JITTER: u64 = 5;
+const K_OUTAGE: u64 = 6;
+const K_FLIP: u64 = 7;
+
+/// Number of seeded bit flips injected into a corrupted payload body.
+pub const CORRUPT_FLIPS: usize = 8;
+
+/// Cap on the exponential-backoff shift so `retry_base_s << attempt`
+/// cannot overflow; also the validation ceiling for `max_retries`.
+pub const MAX_RETRIES_CAP: u32 = 32;
+
+/// User-facing fault knobs (config/CLI keys of the same names).
+///
+/// All-defaults means "fault layer off": no RNG draws, no extra events,
+/// no allocations — pinned by the differential tests and the transport
+/// counting-allocator bench.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultConfig {
+    /// Per-transmission loss probability, applied independently to each
+    /// uplink and downlink copy (including retransmissions).
+    pub loss_prob: f64,
+    /// Per-delivery probability that an uplink payload arrives with
+    /// flipped bits (detected by the transport checksum on receipt).
+    pub corrupt_prob: f64,
+    /// Per-round probability that a device is crashed for the whole
+    /// round (no compute, no bytes); it rejoins automatically the next
+    /// round through the existing zero-weight FedAvg path.
+    pub crash_rate: f64,
+    /// Retransmissions allowed per message before the device counts as
+    /// dropped for the round.
+    pub max_retries: u32,
+    /// Base ack-timeout; attempt `a` retries after
+    /// `retry_base_s * 2^a * (1 + 0.5 * jitter)` with seeded jitter.
+    pub retry_base_s: f64,
+    /// Length of the per-round server outage window (0 = none). The
+    /// window start is drawn uniformly in `[0, server_outage_s)`;
+    /// arrivals inside it queue until recovery and the waiting time is
+    /// reported as `recovery_wait_s`.
+    pub server_outage_s: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            loss_prob: 0.0,
+            corrupt_prob: 0.0,
+            crash_rate: 0.0,
+            max_retries: 3,
+            retry_base_s: 0.05,
+            server_outage_s: 0.0,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Whether any fault mechanism is enabled. Inactive configs take the
+    /// legacy scheduler paths untouched (bit-identical, draw-free).
+    pub fn is_active(&self) -> bool {
+        self.loss_prob > 0.0
+            || self.corrupt_prob > 0.0
+            || self.crash_rate > 0.0
+            || self.server_outage_s > 0.0
+    }
+
+    /// Validate ranges; errors name the offending key.
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..=1.0).contains(&self.loss_prob) {
+            bail!("loss_prob must be in [0, 1], got {}", self.loss_prob);
+        }
+        if !(0.0..=1.0).contains(&self.corrupt_prob) {
+            bail!("corrupt_prob must be in [0, 1], got {}", self.corrupt_prob);
+        }
+        if !(0.0..1.0).contains(&self.crash_rate) {
+            bail!("crash_rate must be in [0, 1), got {}", self.crash_rate);
+        }
+        if self.max_retries > MAX_RETRIES_CAP {
+            bail!(
+                "max_retries must be <= {MAX_RETRIES_CAP}, got {}",
+                self.max_retries
+            );
+        }
+        if !self.retry_base_s.is_finite() || self.retry_base_s < 0.0 {
+            bail!(
+                "retry_base_s must be finite and >= 0, got {}",
+                self.retry_base_s
+            );
+        }
+        if self.is_active() && self.loss_prob > 0.0 && self.retry_base_s == 0.0 {
+            bail!("retry_base_s must be > 0 when loss_prob > 0");
+        }
+        if !self.server_outage_s.is_finite() || self.server_outage_s < 0.0 {
+            bail!(
+                "server_outage_s must be finite and >= 0, got {}",
+                self.server_outage_s
+            );
+        }
+        Ok(())
+    }
+}
+
+/// One round's fault plan: the config plus a round-derived seed. `Copy`
+/// so `RoundOps::fault_plan()` can hand it out without borrow conflicts.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultPlan {
+    cfg: FaultConfig,
+    round_seed: u64,
+}
+
+impl FaultPlan {
+    /// Plan for `round` of the experiment seeded with `seed`.
+    pub fn new(cfg: FaultConfig, seed: u64, round: u64) -> FaultPlan {
+        FaultPlan {
+            cfg,
+            round_seed: derive_seed(seed, stream::FAULT, round),
+        }
+    }
+
+    /// The knobs this plan was built from.
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    /// Retransmissions allowed per message.
+    pub fn max_retries(&self) -> u32 {
+        self.cfg.max_retries
+    }
+
+    /// Raw 64-bit draw for `(kind, device, step, attempt)` — stateless.
+    fn draw(&self, kind: u64, device: u64, step: u64, attempt: u64) -> u64 {
+        let idx = mix64(device ^ mix64(step ^ mix64(attempt ^ mix64(kind))));
+        derive_seed(self.round_seed, stream::FAULT, idx)
+    }
+
+    /// Uniform in [0, 1) from the top 53 bits of a draw.
+    fn draw_unit(&self, kind: u64, device: u64, step: u64, attempt: u64) -> f64 {
+        (self.draw(kind, device, step, attempt) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Whether `device` is crashed for this entire round.
+    pub fn device_crashed(&self, device: DeviceId) -> bool {
+        self.cfg.crash_rate > 0.0
+            && self.draw_unit(K_CRASH, device as u64, 0, 0) < self.cfg.crash_rate
+    }
+
+    /// Whether uplink copy `attempt` of `(device, step)` is lost in flight.
+    pub fn uplink_lost(&self, device: DeviceId, step: usize, attempt: u32) -> bool {
+        self.cfg.loss_prob > 0.0
+            && self.draw_unit(K_UP_LOSS, device as u64, step as u64, attempt as u64)
+                < self.cfg.loss_prob
+    }
+
+    /// Whether downlink copy `attempt` of `(device, step)` is lost in flight.
+    pub fn downlink_lost(&self, device: DeviceId, step: usize, attempt: u32) -> bool {
+        self.cfg.loss_prob > 0.0
+            && self.draw_unit(K_DOWN_LOSS, device as u64, step as u64, attempt as u64)
+                < self.cfg.loss_prob
+    }
+
+    /// Whether uplink copy `attempt` of `(device, step)` arrives corrupted.
+    pub fn uplink_corrupt(&self, device: DeviceId, step: usize, attempt: u32) -> bool {
+        self.cfg.corrupt_prob > 0.0
+            && self.draw_unit(K_CORRUPT, device as u64, step as u64, attempt as u64)
+                < self.cfg.corrupt_prob
+    }
+
+    /// Ack-timeout before retransmitting copy `attempt`: exponential
+    /// backoff with seeded jitter in [1.0, 1.5).
+    pub fn backoff_s(&self, device: DeviceId, step: usize, attempt: u32) -> f64 {
+        let shift = attempt.min(MAX_RETRIES_CAP);
+        let base = self.cfg.retry_base_s * (1u64 << shift) as f64;
+        base * (1.0 + 0.5 * self.draw_unit(K_JITTER, device as u64, step as u64, attempt as u64))
+    }
+
+    /// The server outage window for this round, if any: start drawn
+    /// uniformly in `[0, server_outage_s)`, duration `server_outage_s`.
+    pub fn outage_window(&self) -> Option<(f64, f64)> {
+        if self.cfg.server_outage_s > 0.0 {
+            let start = self.draw_unit(K_OUTAGE, 0, 0, 0) * self.cfg.server_outage_s;
+            Some((start, start + self.cfg.server_outage_s))
+        } else {
+            None
+        }
+    }
+
+    /// Bit position (within a body of `n_bits` bits) of the `i`-th seeded
+    /// flip injected into corrupted copy `attempt` of `(device, step)`.
+    pub fn flip_bit(
+        &self,
+        device: DeviceId,
+        step: usize,
+        attempt: u32,
+        i: usize,
+        n_bits: usize,
+    ) -> usize {
+        debug_assert!(n_bits > 0);
+        (self.draw(
+            K_FLIP,
+            device as u64,
+            step as u64,
+            (attempt as u64) * (CORRUPT_FLIPS as u64) + i as u64,
+        ) % n_bits as u64) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn active_cfg() -> FaultConfig {
+        FaultConfig {
+            loss_prob: 0.3,
+            corrupt_prob: 0.2,
+            crash_rate: 0.1,
+            server_outage_s: 0.5,
+            ..FaultConfig::default()
+        }
+    }
+
+    #[test]
+    fn default_config_is_inactive_and_valid() {
+        let cfg = FaultConfig::default();
+        assert!(!cfg.is_active());
+        cfg.validate().unwrap();
+        // max_retries / retry_base_s alone do not activate the layer
+        let cfg = FaultConfig {
+            max_retries: 9,
+            retry_base_s: 1.0,
+            ..FaultConfig::default()
+        };
+        assert!(!cfg.is_active());
+    }
+
+    #[test]
+    fn validation_errors_name_the_offending_key() {
+        let cases: &[(FaultConfig, &str)] = &[
+            (
+                FaultConfig {
+                    loss_prob: 1.5,
+                    ..FaultConfig::default()
+                },
+                "loss_prob",
+            ),
+            (
+                FaultConfig {
+                    corrupt_prob: -0.1,
+                    ..FaultConfig::default()
+                },
+                "corrupt_prob",
+            ),
+            (
+                FaultConfig {
+                    crash_rate: 1.0,
+                    ..FaultConfig::default()
+                },
+                "crash_rate",
+            ),
+            (
+                FaultConfig {
+                    max_retries: 33,
+                    ..FaultConfig::default()
+                },
+                "max_retries",
+            ),
+            (
+                FaultConfig {
+                    retry_base_s: f64::NAN,
+                    ..FaultConfig::default()
+                },
+                "retry_base_s",
+            ),
+            (
+                FaultConfig {
+                    loss_prob: 0.1,
+                    retry_base_s: 0.0,
+                    ..FaultConfig::default()
+                },
+                "retry_base_s",
+            ),
+            (
+                FaultConfig {
+                    server_outage_s: -1.0,
+                    ..FaultConfig::default()
+                },
+                "server_outage_s",
+            ),
+        ];
+        for (cfg, key) in cases {
+            let err = cfg.validate().unwrap_err().to_string();
+            assert!(err.contains(key), "error {err:?} should name {key}");
+        }
+    }
+
+    #[test]
+    fn draws_are_pure_functions_of_identity() {
+        let plan = FaultPlan::new(active_cfg(), 42, 3);
+        let again = FaultPlan::new(active_cfg(), 42, 3);
+        for dev in 0..64 {
+            for step in 0..3 {
+                for attempt in 0..4 {
+                    assert_eq!(
+                        plan.uplink_lost(dev, step, attempt),
+                        again.uplink_lost(dev, step, attempt)
+                    );
+                    assert_eq!(
+                        plan.uplink_corrupt(dev, step, attempt),
+                        again.uplink_corrupt(dev, step, attempt)
+                    );
+                    assert_eq!(
+                        plan.backoff_s(dev, step, attempt).to_bits(),
+                        again.backoff_s(dev, step, attempt).to_bits()
+                    );
+                }
+            }
+            assert_eq!(plan.device_crashed(dev), again.device_crashed(dev));
+        }
+        assert_eq!(
+            plan.outage_window().map(|(a, b)| (a.to_bits(), b.to_bits())),
+            again.outage_window().map(|(a, b)| (a.to_bits(), b.to_bits()))
+        );
+    }
+
+    #[test]
+    fn draw_kinds_and_identities_are_independent() {
+        let plan = FaultPlan::new(active_cfg(), 7, 0);
+        // Same identity, different kinds → different raw draws.
+        assert_ne!(plan.draw(K_UP_LOSS, 5, 1, 2), plan.draw(K_DOWN_LOSS, 5, 1, 2));
+        assert_ne!(plan.draw(K_UP_LOSS, 5, 1, 2), plan.draw(K_CORRUPT, 5, 1, 2));
+        // Attempt changes the verdict stream.
+        assert_ne!(plan.draw(K_UP_LOSS, 5, 1, 0), plan.draw(K_UP_LOSS, 5, 1, 1));
+        // Rounds decorrelate.
+        let other = FaultPlan::new(active_cfg(), 7, 1);
+        assert_ne!(plan.draw(K_UP_LOSS, 5, 1, 0), other.draw(K_UP_LOSS, 5, 1, 0));
+    }
+
+    #[test]
+    fn loss_rate_tracks_probability() {
+        let cfg = FaultConfig {
+            loss_prob: 0.25,
+            ..FaultConfig::default()
+        };
+        let plan = FaultPlan::new(cfg, 11, 0);
+        let lost = (0..10_000).filter(|&d| plan.uplink_lost(d, 0, 0)).count();
+        let rate = lost as f64 / 10_000.0;
+        assert!((rate - 0.25).abs() < 0.02, "rate={rate}");
+    }
+
+    #[test]
+    fn backoff_grows_exponentially_with_bounded_jitter() {
+        let plan = FaultPlan::new(active_cfg(), 9, 2);
+        let base = plan.config().retry_base_s;
+        for attempt in 0..6u32 {
+            let b = plan.backoff_s(3, 0, attempt);
+            let nominal = base * (1u64 << attempt) as f64;
+            assert!(b >= nominal && b < nominal * 1.5, "attempt={attempt} b={b}");
+        }
+        // The shift saturates instead of overflowing.
+        assert!(plan.backoff_s(3, 0, MAX_RETRIES_CAP).is_finite());
+    }
+
+    #[test]
+    fn outage_window_sits_inside_twice_its_length() {
+        let plan = FaultPlan::new(active_cfg(), 13, 5);
+        let (start, end) = plan.outage_window().unwrap();
+        let len = plan.config().server_outage_s;
+        assert!((0.0..len).contains(&start));
+        assert!((end - start - len).abs() < 1e-12);
+        let calm = FaultPlan::new(FaultConfig::default(), 13, 5);
+        assert!(calm.outage_window().is_none());
+    }
+
+    #[test]
+    fn flip_bits_stay_in_range_and_vary() {
+        let plan = FaultPlan::new(active_cfg(), 21, 0);
+        let n_bits = 333 * 8;
+        let flips: Vec<usize> = (0..CORRUPT_FLIPS)
+            .map(|i| plan.flip_bit(4, 0, 1, i, n_bits))
+            .collect();
+        assert!(flips.iter().all(|&p| p < n_bits));
+        let distinct: std::collections::BTreeSet<_> = flips.iter().collect();
+        assert!(distinct.len() > 1, "flips should not collapse: {flips:?}");
+    }
+
+    #[test]
+    fn inactive_plan_never_faults() {
+        let plan = FaultPlan::new(FaultConfig::default(), 99, 0);
+        for dev in 0..256 {
+            assert!(!plan.device_crashed(dev));
+            assert!(!plan.uplink_lost(dev, 0, 0));
+            assert!(!plan.downlink_lost(dev, 0, 0));
+            assert!(!plan.uplink_corrupt(dev, 0, 0));
+        }
+        assert!(plan.outage_window().is_none());
+    }
+}

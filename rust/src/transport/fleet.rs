@@ -19,6 +19,7 @@
 //!
 //! [`RoundReport`]: super::scheduler::RoundReport
 
+use super::fault::FaultPlan;
 use super::scheduler::{RoundOps, ServerOut, UplinkMsg};
 use super::DeviceId;
 use anyhow::Result;
@@ -65,6 +66,9 @@ pub struct FleetOps {
     /// cohort-compressed paths (bit-identical either way).
     cohorts: usize,
     profiles: Vec<FleetCohort>,
+    /// Optional fault plan the schedulers pick up via
+    /// [`RoundOps::fault_plan`] (faulty rounds always run per-device).
+    fault: Option<FaultPlan>,
     /// Fan-out messages produced (one per device per step dispatched).
     pub fanout_msgs: u64,
     /// Server steps executed.
@@ -91,6 +95,7 @@ impl FleetOps {
             server_service_s: 0.0,
             cohorts: 0,
             profiles,
+            fault: None,
             fanout_msgs: 0,
             server_steps: 0,
             fanin_msgs: 0,
@@ -115,6 +120,11 @@ impl FleetOps {
     /// Serial server occupancy per batch (default `0.0`).
     pub fn set_server_service_s(&mut self, s: f64) {
         self.server_service_s = s;
+    }
+
+    /// Arm (or disarm) seeded fault injection for subsequent rounds.
+    pub fn set_fault(&mut self, plan: Option<FaultPlan>) {
+        self.fault = plan;
     }
 
     /// Zero the dispatch/byte counters (reports stay comparable across
@@ -203,6 +213,18 @@ impl RoundOps for FleetOps {
     fn cancel(&mut self, _dev: DeviceId) {
         self.cancelled += 1;
     }
+
+    fn fault_plan(&self) -> Option<FaultPlan> {
+        self.fault
+    }
+
+    fn charge_retransmit_uplink(&mut self, dev: DeviceId, _bytes: usize, _busy_s: f64) {
+        self.uplink_bytes_total += self.profile(dev).uplink_bytes as u64;
+    }
+
+    fn charge_retransmit_downlink(&mut self, dev: DeviceId, _bytes: usize, _busy_s: f64) {
+        self.downlink_bytes_total += self.profile(dev).downlink_bytes as u64;
+    }
 }
 
 #[cfg(test)]
@@ -260,6 +282,47 @@ mod tests {
         ] {
             let a = AsyncEventScheduler::new(policy);
             assert_eq!(run(&a, 2), run(&a, 0), "policy {policy:?}");
+        }
+    }
+
+    #[test]
+    fn faulty_fleet_rounds_are_deterministic_and_charge_retransmits() {
+        use super::super::fault::FaultConfig;
+        let fc = FaultConfig {
+            loss_prob: 0.2,
+            corrupt_prob: 0.1,
+            crash_rate: 0.1,
+            ..Default::default()
+        };
+        // a seed whose plan loses at least one surviving device's first
+        // uplink, so the round must retransmit
+        let seed = (0..1000u64)
+            .find(|&s| {
+                let p = FaultPlan::new(fc, s, 0);
+                (0..48).any(|d| !p.device_crashed(d) && p.uplink_lost(d, 0, 0))
+            })
+            .expect("no lossy seed in 1000 candidates");
+        let run = |sched: &dyn RoundScheduler| {
+            let mut ops = het(48, 2);
+            ops.set_fault(Some(FaultPlan::new(fc, seed, 0)));
+            let r = sched.run_round(&mut ops).unwrap();
+            (
+                r.loss_sum.to_bits(),
+                r.sim_round_s.to_bits(),
+                r.retransmits,
+                r.lost_bytes,
+                r.corrupt_payloads,
+                r.completed,
+                ops.counters(),
+            )
+        };
+        let sync = SyncEventScheduler::new();
+        let asy = AsyncEventScheduler::new(StragglerPolicy::WaitAll);
+        for sched in [&sync as &dyn RoundScheduler, &asy] {
+            let a = run(sched);
+            assert_eq!(a, run(sched), "faulty fleet round must be reproducible");
+            assert!(a.2 > 0, "seed {seed} must force a retransmission");
+            assert!(a.3 > 0, "lost bytes accounted");
         }
     }
 

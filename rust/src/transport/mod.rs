@@ -19,6 +19,10 @@
 //! * [`policy`] — straggler policies for async rounds (`wait-all`,
 //!   `deadline-drop`, `k`-of-`n` `quorum`) and per-round client sampling
 //!   ([`ClientSampling`]: `sample_fraction` / `sample_k`).
+//! * [`fault`] — seeded fault injection ([`FaultPlan`]): per-round
+//!   crash windows, per-message loss/corruption verdicts, retry backoff
+//!   with jitter, and server outage windows, all pure functions of
+//!   `(seed, round, device, step, attempt)`.
 //! * [`fleet`] — [`FleetOps`], a training-free [`RoundOps`] over compact
 //!   per-cohort cost tables: the harness the fleet-scale benches and
 //!   equivalence tests use to drive million-device rounds without any
@@ -33,6 +37,7 @@
 //! compatibility.
 
 pub mod event;
+pub mod fault;
 pub mod fleet;
 pub mod link;
 pub mod policy;
@@ -40,6 +45,7 @@ pub mod profile;
 pub mod scheduler;
 
 pub use event::{DeviceId, Event, EventQueue, Scheduled, ServerResource};
+pub use fault::{FaultConfig, FaultPlan};
 pub use fleet::FleetOps;
 pub use link::{
     CommStats, CompletedFlow, Direction, DownlinkMode, Link, LinkConfig, SharedUplink,
@@ -49,5 +55,5 @@ pub use policy::{ClientSampling, StragglerPolicy};
 pub use profile::{assign_profiles, DeviceProfile, LinkClass};
 pub use scheduler::{
     build_scheduler, AsyncEventScheduler, RoundOps, RoundReport, RoundScheduler, SchedulerKind,
-    ServerOut, SyncEventScheduler, UplinkMsg,
+    ServerOut, ServerStep, SyncEventScheduler, UplinkMsg,
 };

@@ -72,6 +72,7 @@
 //! `tests/compute_zero_alloc.rs`.
 
 use super::event::{DeviceId, Event, EventQueue, ServerResource};
+use super::fault::FaultPlan;
 use super::link::SharedUplink;
 use super::policy::StragglerPolicy;
 use anyhow::{bail, Result};
@@ -224,6 +225,50 @@ pub trait RoundOps {
     /// Straggler drop: discard any in-flight state for `dev` so the next
     /// round starts clean.
     fn cancel(&mut self, dev: DeviceId);
+
+    /// Fault plan for this round; `None` (the default) disables the fault
+    /// layer entirely — schedulers take their legacy paths, draw-free and
+    /// bit-identical to pre-fault behavior.
+    fn fault_plan(&self) -> Option<FaultPlan> {
+        None
+    }
+
+    /// Fault hook: the transport detected (checksum model) that copy
+    /// `attempt` of `dev`'s uplink for `step` arrived corrupted.
+    /// Implementations flip seeded bits in the stored payload, exercise
+    /// their decode path fail-closed, and restore the clean copy for the
+    /// retransmission the scheduler is about to arm. Default: nothing
+    /// (timing-only mocks have no payload to corrupt).
+    fn corrupt_uplink(&mut self, _dev: DeviceId, _step: usize, _attempt: u32) {}
+
+    /// Fault hook: account one retransmitted uplink copy (`bytes` on the
+    /// wire, `busy_s` link occupancy) against `dev` — charge-at-send,
+    /// exactly like the original copy charged in `fanout`.
+    fn charge_retransmit_uplink(&mut self, _dev: DeviceId, _bytes: usize, _busy_s: f64) {}
+
+    /// Fault hook: account one retransmitted downlink copy against `dev`
+    /// — the egress twin of [`RoundOps::charge_retransmit_uplink`].
+    fn charge_retransmit_downlink(&mut self, _dev: DeviceId, _bytes: usize, _busy_s: f64) {}
+
+    /// Server step that converts a decode failure on `dev`'s pending
+    /// payload into [`ServerStep::Corrupt`] instead of an `Err`. The
+    /// default wraps [`RoundOps::server_step`] (any success is served) —
+    /// trainers with a real decode path override it so one corrupt
+    /// payload fails only its own device, never the round.
+    fn server_step_checked(&mut self, dev: DeviceId) -> Result<ServerStep> {
+        Ok(ServerStep::Served(self.server_step(dev)?))
+    }
+}
+
+/// Result of a checked server step ([`RoundOps::server_step_checked`]).
+#[derive(Debug, Clone, Copy)]
+pub enum ServerStep {
+    /// The uplink decoded and the server trained on it.
+    Served(ServerOut),
+    /// The pending payload failed to decode (corruption the transport
+    /// checksum missed). Fail-closed: the device drops out of the round;
+    /// no other device and no shared server state is affected.
+    Corrupt,
 }
 
 /// What one round produced, scheduler-agnostic. Per-device outcomes are
@@ -253,12 +298,42 @@ pub struct RoundReport {
     /// round's aggregation. Every other device received a
     /// [`RoundOps::cancel`].
     pub completed: usize,
+    /// Message copies retransmitted after loss, corruption, or an ack
+    /// timeout (fault injection; `0` in fault-free rounds).
+    pub retransmits: u64,
+    /// Wire bytes of message copies lost in flight (fault injection).
+    pub lost_bytes: u64,
+    /// Uplink payloads that arrived corrupted (fault injection; includes
+    /// decode failures the fail-closed server path converted to drops).
+    pub corrupt_payloads: u64,
+    /// Simulated seconds batches spent paused on a server outage window
+    /// before service resumed (fault injection).
+    pub recovery_wait_s: f64,
 }
 
 impl RoundReport {
     /// Devices dropped by the straggler policy this round.
     pub fn dropped(&self) -> usize {
         self.n_devices - self.completed
+    }
+
+    /// All-zero report — the functional-update base (`..RoundReport::zeroed()`)
+    /// for construction sites that leave the fault counters at rest.
+    pub fn zeroed() -> RoundReport {
+        RoundReport {
+            loss_sum: 0.0,
+            correct: 0,
+            samples: 0,
+            server_steps: 0,
+            sim_round_s: 0.0,
+            queue_wait_s: 0.0,
+            n_devices: 0,
+            completed: 0,
+            retransmits: 0,
+            lost_bytes: 0,
+            corrupt_payloads: 0,
+            recovery_wait_s: 0.0,
+        }
     }
 }
 
@@ -302,6 +377,193 @@ fn submit_uplink(
         );
     } else {
         q.push(start_t + msg.cost_s, dev, Event::UplinkArrived { step });
+    }
+}
+
+/// Round-persistent working state for the fault-injection paths. Left
+/// empty (no allocation) unless a round actually runs with an active
+/// [`FaultPlan`] — the zero-overhead guarantee the counting-allocator
+/// test pins for fault-free rounds.
+#[derive(Default)]
+struct FaultScratch {
+    /// Retransmission attempt of the in-flight uplink copy, per device.
+    up_attempt: Vec<u32>,
+    /// Retransmission attempt of the in-flight downlink copy, per device.
+    down_attempt: Vec<u32>,
+    /// Last fanned-out uplink message, per device (retransmissions reuse
+    /// its cost and byte count — same payload, same link state).
+    up_msg: Vec<UplinkMsg>,
+    /// Last served downlink `(cost_s, wire_bytes)`, per device.
+    down_msg: Vec<(f64, usize)>,
+    /// Devices out of the round (crashed, retries exhausted, or decode
+    /// failure) — they take no further part and are cancelled.
+    failed: Vec<bool>,
+    /// Devices still in the round (rebuilt per phase).
+    alive: Vec<DeviceId>,
+    /// Valid-arrival order of the sync barrier (the server drains its
+    /// receive queue in this order — the same `(time, seq)` order the
+    /// async scheduler serves in).
+    order: Vec<DeviceId>,
+    /// Fan-in list (served devices that also received their gradient).
+    fan: Vec<DeviceId>,
+    /// Retransmitted copies this round.
+    retransmits: u64,
+    /// Wire bytes of copies lost in flight this round.
+    lost_bytes: u64,
+    /// Corrupted uplink deliveries this round.
+    corrupt_payloads: u64,
+}
+
+impl FaultScratch {
+    /// Size for `n` devices and zero the round counters.
+    fn begin_round(&mut self, n: usize) {
+        self.up_attempt.clear();
+        self.up_attempt.resize(n, 0);
+        self.down_attempt.clear();
+        self.down_attempt.resize(n, 0);
+        self.up_msg.clear();
+        self.up_msg.resize(
+            n,
+            UplinkMsg {
+                wire_bytes: 0,
+                cost_s: 0.0,
+            },
+        );
+        self.down_msg.clear();
+        self.down_msg.resize(n, (0.0, 0));
+        self.failed.clear();
+        self.failed.resize(n, false);
+        self.alive.clear();
+        self.order.clear();
+        self.fan.clear();
+        self.retransmits = 0;
+        self.lost_bytes = 0;
+        self.corrupt_payloads = 0;
+    }
+}
+
+/// Submit the current uplink copy of `(dev, step)` under the fault plan:
+/// a lost copy arms a deterministic ack-timeout [`Event::UplinkRetry`]
+/// at `send_t + backoff` instead of an arrival. The loss verdict is a
+/// pure function of `(dev, step, attempt)` — never of queue state.
+fn submit_uplink_faulty(
+    q: &mut EventQueue,
+    plan: &FaultPlan,
+    fs: &mut FaultScratch,
+    send_t: f64,
+    dev: DeviceId,
+    step: usize,
+) {
+    let attempt = fs.up_attempt[dev];
+    let msg = fs.up_msg[dev];
+    if plan.uplink_lost(dev, step, attempt) {
+        fs.lost_bytes += msg.wire_bytes as u64;
+        q.push(
+            send_t + plan.backoff_s(dev, step, attempt),
+            dev,
+            Event::UplinkRetry { step },
+        );
+    } else {
+        q.push(send_t + msg.cost_s, dev, Event::UplinkArrived { step });
+    }
+}
+
+/// Submit the current downlink copy of `(dev, step)` under the fault
+/// plan — the egress twin of [`submit_uplink_faulty`].
+fn submit_downlink_faulty(
+    q: &mut EventQueue,
+    plan: &FaultPlan,
+    fs: &mut FaultScratch,
+    send_t: f64,
+    dev: DeviceId,
+    step: usize,
+) {
+    let attempt = fs.down_attempt[dev];
+    let (cost_s, bytes) = fs.down_msg[dev];
+    if plan.downlink_lost(dev, step, attempt) {
+        fs.lost_bytes += bytes as u64;
+        q.push(
+            send_t + plan.backoff_s(dev, step, attempt),
+            dev,
+            Event::DownlinkRetry { step },
+        );
+    } else {
+        q.push(send_t + cost_s, dev, Event::DownlinkArrived { step });
+    }
+}
+
+/// Handle a popped [`Event::UplinkRetry`]: with retries left, charge and
+/// resubmit the copy (returns `false`); with retries exhausted, return
+/// `true` — the caller fails the device into the straggler-drop path.
+fn handle_uplink_retry(
+    q: &mut EventQueue,
+    plan: &FaultPlan,
+    fs: &mut FaultScratch,
+    ops: &mut dyn RoundOps,
+    t: f64,
+    dev: DeviceId,
+    step: usize,
+) -> bool {
+    if fs.up_attempt[dev] >= plan.max_retries() {
+        return true;
+    }
+    fs.up_attempt[dev] += 1;
+    fs.retransmits += 1;
+    let msg = fs.up_msg[dev];
+    ops.charge_retransmit_uplink(dev, msg.wire_bytes, msg.cost_s);
+    submit_uplink_faulty(q, plan, fs, t, dev, step);
+    false
+}
+
+/// Handle a popped [`Event::DownlinkRetry`] — the egress twin of
+/// [`handle_uplink_retry`].
+fn handle_downlink_retry(
+    q: &mut EventQueue,
+    plan: &FaultPlan,
+    fs: &mut FaultScratch,
+    ops: &mut dyn RoundOps,
+    t: f64,
+    dev: DeviceId,
+    step: usize,
+) -> bool {
+    if fs.down_attempt[dev] >= plan.max_retries() {
+        return true;
+    }
+    fs.down_attempt[dev] += 1;
+    fs.retransmits += 1;
+    let (cost_s, bytes) = fs.down_msg[dev];
+    ops.charge_retransmit_downlink(dev, bytes, cost_s);
+    submit_downlink_faulty(q, plan, fs, t, dev, step);
+    false
+}
+
+/// On an uplink arrival, apply the corruption verdict: a corrupted copy
+/// is counted, injected into the trainer's stored payload
+/// ([`RoundOps::corrupt_uplink`] — which exercises the decode path
+/// fail-closed and restores the clean copy), and a NACK-driven
+/// retransmission is armed. Returns `true` when the arrival was consumed
+/// as corrupt.
+fn arrival_corrupt(
+    q: &mut EventQueue,
+    plan: &FaultPlan,
+    fs: &mut FaultScratch,
+    ops: &mut dyn RoundOps,
+    t: f64,
+    dev: DeviceId,
+    step: usize,
+) -> bool {
+    let attempt = fs.up_attempt[dev];
+    if plan.uplink_corrupt(dev, step, attempt) {
+        fs.corrupt_payloads += 1;
+        ops.corrupt_uplink(dev, step, attempt);
+        q.push(
+            t + plan.backoff_s(dev, step, attempt),
+            dev,
+            Event::UplinkRetry { step },
+        );
+        true
+    } else {
+        false
     }
 }
 
@@ -468,6 +730,7 @@ struct SyncScratch {
     q: EventQueue,
     all: Vec<DeviceId>,
     ups: Vec<UplinkMsg>,
+    fault: FaultScratch,
 }
 
 /// Lockstep phases on the event queue — bit-identical op sequence to the
@@ -505,6 +768,11 @@ impl RoundScheduler for SyncEventScheduler {
     fn run_round(&self, ops: &mut dyn RoundOps) -> Result<RoundReport> {
         let mut guard = self.scratch.lock().expect("sync scheduler scratch poisoned");
         let scr = &mut *guard;
+        if let Some(plan) = ops.fault_plan() {
+            // Faults take the dedicated path so the legacy round below
+            // stays structurally untouched (bit-identical, draw-free).
+            return run_sync_faulty(scr, ops, plan);
+        }
         let n = ops.n_devices();
         let steps = ops.steps();
         if scr.all.len() != n {
@@ -556,6 +824,7 @@ impl RoundScheduler for SyncEventScheduler {
                 queue_wait_s,
                 n_devices: n,
                 completed: n,
+                ..RoundReport::zeroed()
             });
         }
 
@@ -638,8 +907,168 @@ impl RoundScheduler for SyncEventScheduler {
             queue_wait_s,
             n_devices: n,
             completed: n,
+            ..RoundReport::zeroed()
         })
     }
+}
+
+/// The sync round under an active [`FaultPlan`]: lockstep phases with
+/// per-message loss/corruption, retry backoff, per-round crashes, and a
+/// server outage window. Runs the per-device event path regardless of
+/// `cohorts()` (faults make arrival instants device-specific, so there is
+/// nothing to group — the same fallback shared pipes already take).
+///
+/// Semantics deltas from the fault-free sync round, all confined to this
+/// function:
+/// * crashed devices are excluded before the first fan-out (no compute,
+///   no bytes) and cancelled at round end — FedAvg rejoins them at zero
+///   weight next round, like any straggler drop;
+/// * the barrier waits for one **valid** uplink copy per live device
+///   (corrupted copies are NACKed and retransmitted; exhausted retries
+///   fail the device into the straggler-drop path);
+/// * the server phase serves in barrier **arrival order** — the exact
+///   `(time, seq)` order the async scheduler serves in, so faulty sync
+///   and async rounds fold losses identically;
+/// * downlinks are lossy too, retransmitted from the server with the
+///   same backoff schedule.
+fn run_sync_faulty(
+    scr: &mut SyncScratch,
+    ops: &mut dyn RoundOps,
+    plan: FaultPlan,
+) -> Result<RoundReport> {
+    let n = ops.n_devices();
+    let steps = ops.steps();
+    let fs = &mut scr.fault;
+    fs.begin_round(n);
+    let mut server = ServerResource::new(ops.server_service_s());
+    server.set_outage(plan.outage_window());
+    let (mut loss_sum, mut correct, mut samples, mut server_steps) = (0.0f64, 0u64, 0u64, 0u64);
+    let mut queue_wait_s = 0.0f64;
+    let mut t = 0.0f64;
+    scr.q.clear();
+    for d in 0..n {
+        if plan.device_crashed(d) {
+            fs.failed[d] = true;
+        }
+    }
+    for step in 0..steps {
+        fs.alive.clear();
+        fs.alive.extend((0..n).filter(|&d| !fs.failed[d]));
+        if fs.alive.is_empty() {
+            break;
+        }
+        ops.fanout(&fs.alive, &mut scr.ups)?;
+        for i in 0..fs.alive.len() {
+            let d = fs.alive[i];
+            fs.up_msg[d] = scr.ups[i];
+            fs.up_attempt[d] = 0;
+            submit_uplink_faulty(&mut scr.q, &plan, fs, t + ops.compute_s(d), d, step);
+        }
+        // Barrier: one valid arrival — or retry exhaustion — per device.
+        let mut barrier_t = t;
+        let mut landed = 0usize;
+        let expected = fs.alive.len();
+        fs.order.clear();
+        while landed < expected {
+            let ev = scr.q.pop().expect("uplinks still in flight");
+            match ev.event {
+                Event::UplinkArrived { step: s } => {
+                    if arrival_corrupt(&mut scr.q, &plan, fs, ops, ev.time, ev.device, s) {
+                        continue;
+                    }
+                    barrier_t = barrier_t.max(ev.time);
+                    fs.order.push(ev.device);
+                    landed += 1;
+                }
+                Event::UplinkRetry { step: s } => {
+                    if handle_uplink_retry(&mut scr.q, &plan, fs, ops, ev.time, ev.device, s) {
+                        fs.failed[ev.device] = true;
+                        landed += 1;
+                    }
+                }
+                _ => unreachable!("faulty sync barrier sees only uplink events"),
+            }
+        }
+        // Server phase at the barrier, in arrival order. A decode failure
+        // (checksum escape) fails only its own device.
+        let mut step_loss = 0.0f64;
+        let mut pending_down = 0usize;
+        for i in 0..fs.order.len() {
+            let d = fs.order[i];
+            let (start, end) = server.acquire(barrier_t);
+            queue_wait_s += start - barrier_t;
+            match ops.server_step_checked(d)? {
+                ServerStep::Served(out) => {
+                    step_loss += out.loss;
+                    correct += out.correct;
+                    samples += out.samples;
+                    server_steps += 1;
+                    fs.down_msg[d] = (out.downlink_s, out.wire_bytes);
+                    fs.down_attempt[d] = 0;
+                    submit_downlink_faulty(&mut scr.q, &plan, fs, end, d, step);
+                    pending_down += 1;
+                }
+                ServerStep::Corrupt => {
+                    fs.corrupt_payloads += 1;
+                    fs.failed[d] = true;
+                }
+            }
+        }
+        loss_sum += step_loss;
+        // Drain downlinks: one arrival or exhaustion per served device.
+        let mut ready_t = barrier_t;
+        while pending_down > 0 {
+            let ev = scr.q.pop().expect("downlinks still in flight");
+            match ev.event {
+                Event::DownlinkArrived { .. } => {
+                    ready_t = ready_t.max(ev.time + ops.compute_s(ev.device));
+                    pending_down -= 1;
+                }
+                Event::DownlinkRetry { step: s } => {
+                    if handle_downlink_retry(&mut scr.q, &plan, fs, ops, ev.time, ev.device, s) {
+                        fs.failed[ev.device] = true;
+                        pending_down -= 1;
+                    }
+                }
+                _ => unreachable!("faulty sync drain sees only downlink events"),
+            }
+        }
+        // Fan-in over devices that actually hold a gradient, in the same
+        // arrival order the server served them.
+        fs.fan.clear();
+        for i in 0..fs.order.len() {
+            let d = fs.order[i];
+            if !fs.failed[d] {
+                fs.fan.push(d);
+            }
+        }
+        if !fs.fan.is_empty() {
+            ops.fanin(&fs.fan)?;
+        }
+        t = ready_t;
+    }
+    let mut completed = 0usize;
+    for d in 0..n {
+        if fs.failed[d] {
+            ops.cancel(d);
+        } else {
+            completed += 1;
+        }
+    }
+    Ok(RoundReport {
+        loss_sum,
+        correct,
+        samples,
+        server_steps,
+        sim_round_s: t,
+        queue_wait_s,
+        n_devices: n,
+        completed,
+        retransmits: fs.retransmits,
+        lost_bytes: fs.lost_bytes,
+        corrupt_payloads: fs.corrupt_payloads,
+        recovery_wait_s: server.recovery_wait_s(),
+    })
 }
 
 /// Round-persistent scratch for the async scheduler: the event queue, the
@@ -665,6 +1094,7 @@ struct AsyncScratch {
     times: Vec<f64>,
     t2: Vec<f64>,
     tbl: GroupTable,
+    fault: FaultScratch,
 }
 
 /// Event-driven rounds: devices pipeline local steps independently, the
@@ -700,14 +1130,9 @@ impl RoundScheduler for AsyncEventScheduler {
         let steps = ops.steps();
         if n == 0 || steps == 0 {
             return Ok(RoundReport {
-                loss_sum: 0.0,
-                correct: 0,
-                samples: 0,
-                server_steps: 0,
-                sim_round_s: 0.0,
-                queue_wait_s: 0.0,
                 n_devices: n,
                 completed: n,
+                ..RoundReport::zeroed()
             });
         }
         let deadline = match self.policy {
@@ -718,6 +1143,11 @@ impl RoundScheduler for AsyncEventScheduler {
             StragglerPolicy::Quorum { k } => Some(k),
             _ => None,
         };
+        if let Some(plan) = ops.fault_plan() {
+            // Faults take the dedicated path so the legacy round below
+            // stays structurally untouched (bit-identical, draw-free).
+            return run_async_faulty(scr, ops, plan, deadline, quorum);
+        }
 
         if scr.all.len() != n {
             scr.all.clear();
@@ -1052,8 +1482,153 @@ impl RoundScheduler for AsyncEventScheduler {
             queue_wait_s,
             n_devices: n,
             completed: done,
+            ..RoundReport::zeroed()
         })
     }
+}
+
+/// The async round under an active [`FaultPlan`]: the same event-driven
+/// pipeline, with per-message loss/corruption, retry backoff, per-round
+/// crashes, and a server outage window. Runs per-device regardless of
+/// `cohorts()` (fault verdicts are per-message, so arrival instants stop
+/// coinciding and there is nothing to group); fan-in/fan-out dispatch one
+/// device at a time — device-local work, so results are unchanged, only
+/// wall-clock batching is lost. Retry events obey the same `(time, seq)`
+/// ordering as every other event, so the whole faulty round remains a
+/// pure function of the seed.
+fn run_async_faulty(
+    scr: &mut AsyncScratch,
+    ops: &mut dyn RoundOps,
+    plan: FaultPlan,
+    deadline: Option<f64>,
+    quorum: Option<usize>,
+) -> Result<RoundReport> {
+    let n = ops.n_devices();
+    let steps = ops.steps();
+    let fs = &mut scr.fault;
+    fs.begin_round(n);
+    scr.done_mask.clear();
+    scr.done_mask.resize(n, false);
+    scr.q.clear();
+    let mut server = ServerResource::new(ops.server_service_s());
+    server.set_outage(plan.outage_window());
+    let (mut loss_sum, mut correct, mut samples, mut server_steps) = (0.0f64, 0u64, 0u64, 0u64);
+    let mut queue_wait_s = 0.0f64;
+    let mut done = 0usize;
+    let mut close_t: Option<f64> = None;
+    let mut last_t = 0.0f64;
+
+    for d in 0..n {
+        if plan.device_crashed(d) {
+            fs.failed[d] = true;
+        } else {
+            fs.alive.push(d);
+        }
+    }
+    if !fs.alive.is_empty() {
+        ops.fanout(&fs.alive, &mut scr.ups)?;
+        for i in 0..fs.alive.len() {
+            let d = fs.alive[i];
+            fs.up_msg[d] = scr.ups[i];
+            fs.up_attempt[d] = 0;
+            submit_uplink_faulty(&mut scr.q, &plan, fs, ops.compute_s(d), d, 0);
+        }
+    }
+    while let Some(ev) = scr.q.pop() {
+        if let Some(t_max) = deadline {
+            if ev.time > t_max {
+                close_t = Some(t_max);
+                break;
+            }
+        }
+        last_t = ev.time;
+        let d = ev.device;
+        match ev.event {
+            Event::UplinkArrived { step } => {
+                if arrival_corrupt(&mut scr.q, &plan, fs, ops, ev.time, d, step) {
+                    continue;
+                }
+                let (start, end) = server.acquire(ev.time);
+                queue_wait_s += start - ev.time;
+                match ops.server_step_checked(d)? {
+                    ServerStep::Served(out) => {
+                        loss_sum += out.loss;
+                        correct += out.correct;
+                        samples += out.samples;
+                        server_steps += 1;
+                        fs.down_msg[d] = (out.downlink_s, out.wire_bytes);
+                        fs.down_attempt[d] = 0;
+                        submit_downlink_faulty(&mut scr.q, &plan, fs, end, d, step);
+                    }
+                    ServerStep::Corrupt => {
+                        fs.corrupt_payloads += 1;
+                        fs.failed[d] = true;
+                    }
+                }
+            }
+            Event::UplinkRetry { step } => {
+                if handle_uplink_retry(&mut scr.q, &plan, fs, ops, ev.time, d, step) {
+                    fs.failed[d] = true;
+                }
+            }
+            Event::DownlinkArrived { step } => {
+                scr.devs.clear();
+                scr.devs.push(d);
+                ops.fanin(&scr.devs)?;
+                if step + 1 < steps {
+                    ops.fanout(&scr.devs, &mut scr.ups)?;
+                    fs.up_msg[d] = scr.ups[0];
+                    fs.up_attempt[d] = 0;
+                    submit_uplink_faulty(
+                        &mut scr.q,
+                        &plan,
+                        fs,
+                        ev.time + 2.0 * ops.compute_s(d),
+                        d,
+                        step + 1,
+                    );
+                } else {
+                    scr.q.push(ev.time + ops.compute_s(d), d, Event::DeviceDone);
+                }
+            }
+            Event::DownlinkRetry { step } => {
+                if handle_downlink_retry(&mut scr.q, &plan, fs, ops, ev.time, d, step) {
+                    fs.failed[d] = true;
+                }
+            }
+            Event::DeviceDone => {
+                scr.done_mask[d] = true;
+                done += 1;
+                if let Some(k) = quorum {
+                    if done >= k {
+                        close_t = Some(ev.time);
+                        break;
+                    }
+                }
+            }
+            _ => unreachable!("faulty async path schedules only per-device events"),
+        }
+    }
+    scr.q.clear();
+    for d in 0..n {
+        if !scr.done_mask[d] {
+            ops.cancel(d);
+        }
+    }
+    Ok(RoundReport {
+        loss_sum,
+        correct,
+        samples,
+        server_steps,
+        sim_round_s: close_t.unwrap_or(last_t),
+        queue_wait_s,
+        n_devices: n,
+        completed: done,
+        retransmits: fs.retransmits,
+        lost_bytes: fs.lost_bytes,
+        corrupt_payloads: fs.corrupt_payloads,
+        recovery_wait_s: server.recovery_wait_s(),
+    })
 }
 
 #[cfg(test)]
@@ -1077,10 +1652,13 @@ mod tests {
         shared_bps: Option<f64>,
         shared_down_bps: Option<f64>,
         n_cohorts: usize,
+        fault: Option<FaultPlan>,
         log: Vec<String>,
         cancelled: Vec<DeviceId>,
         charges: Vec<(DeviceId, u64)>,
         down_charges: Vec<(DeviceId, u64)>,
+        corrupts: Vec<(DeviceId, usize, u32)>,
+        retr_charges: Vec<(&'static str, DeviceId, usize)>,
     }
 
     impl MockOps {
@@ -1097,10 +1675,13 @@ mod tests {
                 shared_bps: None,
                 shared_down_bps: None,
                 n_cohorts: 0,
+                fault: None,
                 log: Vec::new(),
                 cancelled: Vec::new(),
                 charges: Vec::new(),
                 down_charges: Vec::new(),
+                corrupts: Vec::new(),
+                retr_charges: Vec::new(),
             }
         }
 
@@ -1171,6 +1752,18 @@ mod tests {
         }
         fn cancel(&mut self, dev: DeviceId) {
             self.cancelled.push(dev);
+        }
+        fn fault_plan(&self) -> Option<FaultPlan> {
+            self.fault
+        }
+        fn corrupt_uplink(&mut self, dev: DeviceId, step: usize, attempt: u32) {
+            self.corrupts.push((dev, step, attempt));
+        }
+        fn charge_retransmit_uplink(&mut self, dev: DeviceId, bytes: usize, _busy_s: f64) {
+            self.retr_charges.push(("up", dev, bytes));
+        }
+        fn charge_retransmit_downlink(&mut self, dev: DeviceId, bytes: usize, _busy_s: f64) {
+            self.retr_charges.push(("down", dev, bytes));
         }
     }
 
@@ -1725,6 +2318,258 @@ mod tests {
         assert_eq!(fanin_calls, 1, "one grouped fan-in dispatch");
         assert_eq!(report.completed, 64);
         assert_eq!(report.sim_round_s, 7.0); // 1 + 2 + 3 + 1
+    }
+
+    use super::super::fault::FaultConfig;
+
+    fn plan(cfg: FaultConfig, seed: u64) -> FaultPlan {
+        FaultPlan::new(cfg, seed, 0)
+    }
+
+    #[test]
+    fn fault_certain_loss_exhausts_retries_into_drop() {
+        // loss_prob = 1: every copy of every message is lost; after
+        // max_retries retransmissions each device falls into the
+        // straggler-drop path — the round completes with zero server work
+        // instead of hanging or erroring.
+        let cfg = FaultConfig {
+            loss_prob: 1.0,
+            max_retries: 2,
+            ..FaultConfig::default()
+        };
+        for kind in [SchedulerKind::Sync, SchedulerKind::Async] {
+            let mut ops = MockOps {
+                bytes: vec![100; 3],
+                fault: Some(plan(cfg, 7)),
+                ..MockOps::uniform(3, 1, 1.0, 2.0, 3.0)
+            };
+            let r = build_scheduler(kind, StragglerPolicy::WaitAll)
+                .run_round(&mut ops)
+                .unwrap();
+            assert_eq!(r.completed, 0, "{}", kind.name());
+            assert_eq!(r.dropped(), 3);
+            assert_eq!(r.server_steps, 0, "lost uplinks never hit the server");
+            assert_eq!(r.retransmits, 2 * 3, "max_retries copies per device");
+            // initial copy + 2 retransmissions, all lost, header+body bytes
+            assert_eq!(r.lost_bytes, 3 * 3 * 100);
+            assert_eq!(r.corrupt_payloads, 0);
+            assert_eq!(ops.cancelled, vec![0, 1, 2]);
+            // each retransmission re-charges its wire bytes
+            assert_eq!(ops.retr_charges.len(), 6);
+            assert!(ops
+                .retr_charges
+                .iter()
+                .all(|&(dir, _, bytes)| dir == "up" && bytes == 100));
+        }
+    }
+
+    #[test]
+    fn fault_certain_corruption_nacks_and_exhausts() {
+        // corrupt_prob = 1: every delivery is corrupted, NACKed (the
+        // corrupt_uplink hook fires with the exact attempt), and
+        // retransmitted until retries exhaust into the drop path.
+        let cfg = FaultConfig {
+            corrupt_prob: 1.0,
+            max_retries: 1,
+            ..FaultConfig::default()
+        };
+        for kind in [SchedulerKind::Sync, SchedulerKind::Async] {
+            let mut ops = MockOps {
+                fault: Some(plan(cfg, 11)),
+                ..MockOps::uniform(2, 1, 1.0, 2.0, 3.0)
+            };
+            let r = build_scheduler(kind, StragglerPolicy::WaitAll)
+                .run_round(&mut ops)
+                .unwrap();
+            assert_eq!(r.completed, 0, "{}", kind.name());
+            assert_eq!(r.server_steps, 0, "corrupt payloads never train");
+            assert_eq!(r.corrupt_payloads, 4, "two deliveries per device");
+            assert_eq!(r.retransmits, 2);
+            let mut corrupts = ops.corrupts.clone();
+            corrupts.sort_unstable();
+            assert_eq!(corrupts, vec![(0, 0, 0), (0, 0, 1), (1, 0, 0), (1, 0, 1)]);
+            assert_eq!(ops.cancelled, vec![0, 1]);
+        }
+    }
+
+    #[test]
+    fn fault_crashed_devices_sit_out_the_round() {
+        let cfg = FaultConfig {
+            crash_rate: 0.4,
+            ..FaultConfig::default()
+        };
+        // pick a seed where the crash draw actually splits the fleet
+        let seed = (0..1000u64)
+            .find(|&s| {
+                let p = plan(cfg, s);
+                let crashed = (0..6).filter(|&d| p.device_crashed(d)).count();
+                crashed > 0 && crashed < 6
+            })
+            .expect("some seed splits 6 devices at 40%");
+        let p = plan(cfg, seed);
+        let crashed: Vec<DeviceId> = (0..6).filter(|&d| p.device_crashed(d)).collect();
+        for kind in [SchedulerKind::Sync, SchedulerKind::Async] {
+            let mut ops = MockOps {
+                fault: Some(p),
+                ..MockOps::uniform(6, 2, 1.0, 2.0, 3.0)
+            };
+            let r = build_scheduler(kind, StragglerPolicy::WaitAll)
+                .run_round(&mut ops)
+                .unwrap();
+            assert_eq!(r.completed, 6 - crashed.len(), "{}", kind.name());
+            assert_eq!(ops.cancelled, crashed, "crashed devices get cancelled");
+            assert_eq!(
+                r.server_steps,
+                2 * (6 - crashed.len()) as u64,
+                "crashed devices never reach the server"
+            );
+            let alive: Vec<DeviceId> = (0..6).filter(|&d| !p.device_crashed(d)).collect();
+            assert_eq!(
+                ops.log[0],
+                format!("fanout:{alive:?}"),
+                "crashed devices are excluded before the first fan-out"
+            );
+            for &c in &crashed {
+                assert!(!ops.server_order().contains(&c));
+            }
+        }
+    }
+
+    #[test]
+    fn fault_outage_pauses_service_and_reports_recovery_wait() {
+        let cfg = FaultConfig {
+            server_outage_s: 2.0,
+            ..FaultConfig::default()
+        };
+        let p = plan(cfg, 3);
+        let (o_start, o_end) = p.outage_window().unwrap();
+        assert!(o_start > 0.0, "seed 3 draws a strictly positive window start");
+        // arrivals tie at t = 2.0 (compute 1 + up 1); the first batch hits
+        // the outage window and waits out its remainder, later batches
+        // queue behind it past the window.
+        let mut ops = MockOps {
+            service_s: 1.0,
+            fault: Some(p),
+            ..MockOps::uniform(2, 1, 1.0, 1.0, 1.0)
+        };
+        let r = AsyncEventScheduler::new(StragglerPolicy::WaitAll)
+            .run_round(&mut ops)
+            .unwrap();
+        // window = [o_start, o_end), o_start < 2 ⇒ the first acquire at
+        // t = 2.0 waits exactly until recovery
+        assert_eq!(r.recovery_wait_s.to_bits(), (o_end - 2.0).to_bits());
+        assert!(r.recovery_wait_s > 0.0);
+        assert_eq!(r.completed, 2);
+        assert!(r.sim_round_s > 5.0, "outage stretches the round");
+    }
+
+    #[test]
+    fn faulty_sync_serves_in_arrival_order() {
+        // under faults the sync server drains its receive queue in
+        // arrival order — the same (time, seq) order async serves in —
+        // instead of the fault-free device-id order
+        let cfg = FaultConfig {
+            corrupt_prob: 1e-12, // active, but no draw will ever fire
+            ..FaultConfig::default()
+        };
+        let mut ops = MockOps {
+            up_s: vec![2.0, 5.0, 0.5],
+            fault: Some(plan(cfg, 1)),
+            ..MockOps::uniform(3, 1, 1.0, 0.0, 1.0)
+        };
+        let r = SyncEventScheduler::new().run_round(&mut ops).unwrap();
+        assert_eq!(ops.server_order(), vec![2, 0, 1]);
+        assert_eq!(r.completed, 3);
+        assert_eq!((r.retransmits, r.corrupt_payloads, r.lost_bytes), (0, 0, 0));
+    }
+
+    #[test]
+    fn faulty_rounds_are_deterministic_across_runs() {
+        let cfg = FaultConfig {
+            loss_prob: 0.3,
+            corrupt_prob: 0.2,
+            crash_rate: 0.1,
+            server_outage_s: 0.5,
+            retry_base_s: 0.1,
+            ..FaultConfig::default()
+        };
+        for kind in [SchedulerKind::Sync, SchedulerKind::Async] {
+            let run = || {
+                let mut ops = MockOps {
+                    bytes: vec![50; 6],
+                    dbytes: vec![30; 6],
+                    service_s: 0.01,
+                    fault: Some(plan(cfg, 42)),
+                    ..het_fleet(0)
+                };
+                let r = build_scheduler(kind, StragglerPolicy::WaitAll)
+                    .run_round(&mut ops)
+                    .unwrap();
+                (
+                    ops.log.clone(),
+                    ops.cancelled.clone(),
+                    ops.corrupts.clone(),
+                    ops.retr_charges.clone(),
+                    r.loss_sum.to_bits(),
+                    r.sim_round_s.to_bits(),
+                    r.queue_wait_s.to_bits(),
+                    r.recovery_wait_s.to_bits(),
+                    (r.retransmits, r.lost_bytes, r.corrupt_payloads),
+                    (r.completed, r.server_steps),
+                )
+            };
+            assert_eq!(run(), run(), "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn faulty_sync_and_async_agree_without_exhaustion() {
+        // corrupt + crash only (no loss: downlink retransmission chains
+        // anchor at the server's send instant, which under sync is the
+        // barrier — an intrinsic semantic difference). With a homogeneous
+        // fleet, one local step, and no device exhausting its retries,
+        // the two schedulers must produce bit-identical reports.
+        let cfg = FaultConfig {
+            corrupt_prob: 0.4,
+            crash_rate: 0.2,
+            ..FaultConfig::default()
+        };
+        let n = 8;
+        let seed = (0..10_000u64)
+            .find(|&s| {
+                let p = plan(cfg, s);
+                let crashed = (0..n).filter(|&d| p.device_crashed(d)).count();
+                let corrupted = (0..n)
+                    .filter(|&d| !p.device_crashed(d) && p.uplink_corrupt(d, 0, 0))
+                    .count();
+                let exhausted = (0..n).any(|d| {
+                    !p.device_crashed(d)
+                        && (0..=cfg.max_retries).all(|a| p.uplink_corrupt(d, 0, a))
+                });
+                crashed > 0 && crashed < n && corrupted > 0 && !exhausted
+            })
+            .expect("a seed with crashes and recoverable corruption exists");
+        let p = plan(cfg, seed);
+        let run = |kind: SchedulerKind| {
+            let mut ops = MockOps {
+                fault: Some(p),
+                ..MockOps::uniform(n, 1, 1.0, 2.0, 3.0)
+            };
+            let r = build_scheduler(kind, StragglerPolicy::WaitAll)
+                .run_round(&mut ops)
+                .unwrap();
+            (
+                ops.server_order(),
+                ops.cancelled.clone(),
+                ops.corrupts.clone(),
+                r.loss_sum.to_bits(),
+                r.sim_round_s.to_bits(),
+                r.queue_wait_s.to_bits(),
+                (r.retransmits, r.lost_bytes, r.corrupt_payloads),
+                (r.completed, r.server_steps, r.n_devices),
+            )
+        };
+        assert_eq!(run(SchedulerKind::Sync), run(SchedulerKind::Async));
     }
 
     #[test]

@@ -91,6 +91,76 @@ fn truncated_and_bitflipped_payloads_fail_closed() {
 }
 
 #[test]
+fn header_mutations_across_all_codecs_fail_closed() {
+    // Stomp every serialized header byte of a real payload from every
+    // registered codec: parsing either rejects the bytes or yields a
+    // payload that decompresses to an error / a sane tensor. No panics,
+    // and no allocation larger than the wire shape guard allows.
+    use slfac::codec::wire::{HEADER_BYTES, MAX_WIRE_ELEMS};
+    let params = CodecParams::default();
+    let x = codec::smooth_activations(&[2, 4, 8, 8], 77);
+    let mut rng = Pcg32::seeded(0x4EAD);
+    for name in codec::ALL_CODECS {
+        let c = codec::by_name(name, &params).unwrap();
+        let input = if c.frequency_domain() {
+            Dct2d::forward_tensor(&x)
+        } else {
+            x.clone()
+        };
+        let wire = c.compress(&input).unwrap().to_bytes();
+        for off in 0..HEADER_BYTES {
+            for stomp in [0x01u8, 0x80, 0xFF, rng.next_u32() as u8] {
+                let mut bytes = wire.clone();
+                bytes[off] ^= stomp;
+                if bytes[off] == wire[off] {
+                    continue;
+                }
+                let Ok(p) = Payload::from_bytes(&bytes) else {
+                    continue;
+                };
+                assert!(
+                    p.shape.iter().product::<usize>() <= MAX_WIRE_ELEMS,
+                    "{name}: parser accepted an implausible shape {:?}",
+                    p.shape
+                );
+                let _ = c.decompress(&p); // Err or garbage, never a panic
+            }
+        }
+    }
+}
+
+#[test]
+fn implausible_shape_headers_rejected_before_allocation() {
+    // A corrupted shape field claiming a huge tensor must be rejected at
+    // parse time — decoders never see it, so no OOM-sized allocation can
+    // happen. 2^28 elements is the documented ceiling.
+    use slfac::codec::wire::HEADER_BYTES;
+    let header = |shape: [u32; 4]| {
+        let mut bytes = Vec::with_capacity(HEADER_BYTES);
+        bytes.extend_from_slice(b"SLFC");
+        bytes.push(1); // version
+        bytes.push(0); // kind
+        bytes.extend_from_slice(&[0u8; 2]);
+        for d in shape {
+            bytes.extend_from_slice(&d.to_le_bytes());
+        }
+        bytes.extend_from_slice(&0u32.to_le_bytes()); // empty body
+        bytes
+    };
+    // at the ceiling: parses
+    assert!(Payload::from_bytes(&header([1, 1, 1 << 14, 1 << 14])).is_ok());
+    // over the ceiling, including products that overflow usize: rejected
+    for shape in [
+        [1, 1, 1 << 14, (1 << 14) + 1],
+        [u32::MAX, u32::MAX, u32::MAX, u32::MAX],
+        [1 << 16, 1 << 16, 1 << 16, 1],
+    ] {
+        let err = Payload::from_bytes(&header(shape)).unwrap_err().to_string();
+        assert!(err.contains("implausible"), "shape {shape:?}: {err}");
+    }
+}
+
+#[test]
 fn fqc_bit_widths_respect_bounds_in_real_payloads() {
     prop("fqc header invariants", 40, |g| {
         let shape = g.bchw_shape();

@@ -181,7 +181,7 @@ fn run(cfg: ExperimentConfig) -> RunResult {
 fn param_bits(params: &[HostTensor]) -> Vec<Vec<u32>> {
     params
         .iter()
-        .map(|t| t.as_f32().iter().map(|v| v.to_bits()).collect())
+        .map(|t| t.as_f32().unwrap().iter().map(|v| v.to_bits()).collect())
         .collect()
 }
 

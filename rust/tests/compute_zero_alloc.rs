@@ -253,6 +253,11 @@ fn transport_round_is_allocation_free() {
             let mut ops = FleetOps::new(64, 3, profiles.clone());
             ops.set_cohorts(cohorts);
             ops.set_server_service_s(5e-4);
+            // fault injection disarmed — the default. The schedulers now
+            // probe `fault_plan()` every round before picking a path;
+            // with inert knobs that probe (and the fault scratch sitting
+            // idle in the scheduler) must add zero per-message work.
+            ops.set_fault(None);
             // warm-up: grow the scheduler's round-persistent scratch and
             // the fan-out staging buffer to their steady-state sizes
             for _ in 0..3 {

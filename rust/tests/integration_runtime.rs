@@ -39,7 +39,7 @@ fn idct_artifact_matches_rust_inverse_dct() {
     let out = exec
         .execute("mnist", "idct", vec![HostTensor::from_tensor(&coeffs)])
         .unwrap();
-    let got = out.into_iter().next().unwrap().into_tensor();
+    let got = out.into_iter().next().unwrap().into_tensor().unwrap();
     let want = Dct2d::inverse_tensor(&coeffs);
     assert!(got.max_abs_diff(&want) < 1e-4);
 }
@@ -63,8 +63,8 @@ fn client_fwd_dct_output_matches_rust_dct_of_activations() {
     let mut inputs = cp;
     inputs.push(x);
     let mut out = exec.execute("mnist", "client_fwd", inputs).unwrap().into_iter();
-    let act = out.next().unwrap().into_tensor();
-    let act_dct = out.next().unwrap().into_tensor();
+    let act = out.next().unwrap().into_tensor().unwrap();
+    let act_dct = out.next().unwrap().into_tensor().unwrap();
     assert_eq!(act.shape(), &[32, 16, 14, 14]);
     let want = Dct2d::forward_tensor(&act);
     let diff = act_dct.max_abs_diff(&want);
@@ -102,8 +102,8 @@ fn server_step_learns_and_returns_consistent_grads() {
     let out = exec.execute("mnist", "server_step", inputs).unwrap();
     assert_eq!(out.len(), 2 * n_s + 4);
     let loss1 = out[2 * n_s].first();
-    let gact = out[2 * n_s + 2].clone().into_tensor();
-    let gact_dct = out[2 * n_s + 3].clone().into_tensor();
+    let gact = out[2 * n_s + 2].clone().into_tensor().unwrap();
+    let gact_dct = out[2 * n_s + 3].clone().into_tensor().unwrap();
     assert!(loss1 > 0.0);
     // grad DCT consistency with the Rust transform
     let want = Dct2d::forward_tensor(&gact);
