@@ -158,6 +158,15 @@ pub struct ExperimentConfig {
     /// **bit-identical** either way (see ARCHITECTURE.md "Compute hot
     /// path"); the toggle exists for debugging and differential testing.
     pub compute_fast_path: bool,
+    /// Checkpoint cadence: write a crash-durable training snapshot every
+    /// this many completed rounds (`0` = checkpointing off, the default).
+    /// Operational knob like `artifacts_dir`: **not** serialized by
+    /// `to_json`, so it never perturbs fingerprints or sweep journals.
+    pub checkpoint_every: usize,
+    /// Directory for checkpoint files. Required iff `checkpoint_every > 0`
+    /// (both-or-neither — validated). Not serialized, like
+    /// `artifacts_dir`.
+    pub checkpoint_dir: String,
 }
 
 impl Default for ExperimentConfig {
@@ -196,6 +205,8 @@ impl Default for ExperimentConfig {
             artifacts_dir: "artifacts".into(),
             compress_gradients: true,
             compute_fast_path: true,
+            checkpoint_every: 0,
+            checkpoint_dir: String::new(),
         }
     }
 }
@@ -344,6 +355,12 @@ impl ExperimentConfig {
                 }
                 "compute_fast_path" => {
                     cfg.compute_fast_path = v.as_bool().context("compute_fast_path")?
+                }
+                "checkpoint_every" => {
+                    cfg.checkpoint_every = v.as_usize().context("checkpoint_every")?
+                }
+                "checkpoint_dir" => {
+                    cfg.checkpoint_dir = v.as_str().context("checkpoint_dir")?.to_string()
                 }
                 other => bail!("unknown config key '{other}'"),
             }
@@ -583,6 +600,20 @@ impl ExperimentConfig {
                 );
             }
         }
+        // checkpointing: both-or-neither — a cadence without a directory
+        // has nowhere to write, a directory without a cadence never writes
+        if self.checkpoint_every > 0 && self.checkpoint_dir.is_empty() {
+            bail!(
+                "checkpoint_every = {} requires checkpoint_dir (got an empty string)",
+                self.checkpoint_every
+            );
+        }
+        if self.checkpoint_every == 0 && !self.checkpoint_dir.is_empty() {
+            bail!(
+                "checkpoint_dir = \"{}\" requires checkpoint_every > 0, got 0",
+                self.checkpoint_dir
+            );
+        }
         // profile spec must parse and assign cleanly at this device count
         crate::transport::assign_profiles(&self.profile, self.devices, self.link)?;
         Ok(())
@@ -731,8 +762,10 @@ impl ExperimentConfig {
     /// Stable 64-bit fingerprint of the canonical serialization
     /// ([`ExperimentConfig::to_json`]). The sweep journal records it per
     /// run so a resumed sweep can detect that a journaled run no longer
-    /// matches what the spec expands to. `artifacts_dir` is not part of
-    /// `to_json`, so relocating artifacts does not invalidate a journal.
+    /// matches what the spec expands to. `artifacts_dir`,
+    /// `checkpoint_every`, and `checkpoint_dir` are not part of `to_json`,
+    /// so relocating artifacts or toggling checkpointing does not
+    /// invalidate a journal (or a checkpoint's pinned fingerprint).
     pub fn fingerprint(&self) -> u64 {
         self.to_json().fingerprint()
     }
@@ -822,6 +855,39 @@ mod tests {
         let bad = Json::parse(r#"{"compute_fast_path": 1}"#).unwrap();
         let err = format!("{:#}", ExperimentConfig::from_json(&bad).unwrap_err());
         assert!(err.contains("compute_fast_path"), "{err}");
+    }
+
+    #[test]
+    fn checkpoint_keys_parse_validate_and_stay_unserialized() {
+        // defaults: checkpointing off
+        let base = ExperimentConfig::default();
+        assert_eq!(base.checkpoint_every, 0);
+        assert!(base.checkpoint_dir.is_empty());
+        // both keys together parse and validate
+        let json =
+            Json::parse(r#"{"checkpoint_every": 2, "checkpoint_dir": "ckpt"}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&json).unwrap();
+        assert_eq!(cfg.checkpoint_every, 2);
+        assert_eq!(cfg.checkpoint_dir, "ckpt");
+        // operational knobs: neither is serialized, so the fingerprint is
+        // identical to the checkpoint-free config (journal/fingerprint
+        // invariance — same rule as artifacts_dir)
+        assert_eq!(cfg.fingerprint(), base.fingerprint());
+        assert!(cfg.to_json().get("checkpoint_every").is_none());
+        assert!(cfg.to_json().get("checkpoint_dir").is_none());
+        // both-or-neither cross-validation, with named keys in the errors
+        let bad = Json::parse(r#"{"checkpoint_every": 2}"#).unwrap();
+        let err = format!("{:#}", ExperimentConfig::from_json(&bad).unwrap_err());
+        assert!(err.contains("checkpoint_every = 2"), "{err}");
+        assert!(err.contains("checkpoint_dir"), "{err}");
+        let bad = Json::parse(r#"{"checkpoint_dir": "ckpt"}"#).unwrap();
+        let err = format!("{:#}", ExperimentConfig::from_json(&bad).unwrap_err());
+        assert!(err.contains("checkpoint_dir"), "{err}");
+        assert!(err.contains("checkpoint_every"), "{err}");
+        // named-key type errors
+        let bad = Json::parse(r#"{"checkpoint_every": "two"}"#).unwrap();
+        let err = format!("{:#}", ExperimentConfig::from_json(&bad).unwrap_err());
+        assert!(err.contains("checkpoint_every"), "{err}");
     }
 
     #[test]

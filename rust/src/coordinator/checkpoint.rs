@@ -1,0 +1,728 @@
+//! Crash-durable training checkpoints with bit-identical resume.
+//!
+//! A checkpoint snapshots everything the trainer needs to continue from a
+//! round boundary exactly as if the process had never stopped: the
+//! aggregated client weights/momenta, server weights/momenta, every
+//! device's loader/link/codec RNG state, the completed-round counter, the
+//! full [`RoundMetrics`] history (cum-bytes rebuilt on import through
+//! [`crate::coordinator::TrainingHistory::push`]), and the [`CommStats`]
+//! snapshot. Per-round draws (client sampling, fault plans) are pure
+//! functions of `(seed, round)` and need no state at all — only the
+//! *stateful* streams (loader shuffles, link jitter, codec sampling) are
+//! serialized, which is what makes resume bit-identical.
+//!
+//! Durability discipline:
+//! - **Atomic writes** — [`write_atomic`] writes to `<path>.tmp`, fsyncs,
+//!   then renames into place, so a crash mid-write never leaves a torn
+//!   file under the final name.
+//! - **Fail closed on load** — the same discipline as
+//!   `Payload::from_bytes`: a length-prefixed binary layout with a magic,
+//!   a version byte, the config fingerprint, the body length, and an
+//!   FNV-1a/[`crate::rng::mix64`] checksum over the body. Torn, corrupt,
+//!   or foreign-fingerprint files are rejected with named errors; nothing
+//!   is ever partially applied.
+//! - **Keep-last-k retention** — [`save`] prunes all but the newest
+//!   [`KEEP_LAST`] `ckpt_round_*.bin` files (zero-padded round numbers, so
+//!   lexical order is numeric order and [`latest`] is a directory scan).
+
+use crate::config::ExperimentConfig;
+use crate::data::LoaderState;
+use crate::json::{fnv1a64, Json};
+use crate::rng::mix64;
+use crate::runtime::HostTensor;
+use crate::transport::{CommStats, LinkState};
+use anyhow::{bail, Context, Result};
+use std::io::Write as _;
+
+use super::metrics::RoundMetrics;
+
+/// File magic: "SLCK" (SL-FAC checkpoint).
+const MAGIC: [u8; 4] = *b"SLCK";
+/// Binary layout version. Bumped on any layout change; old files are
+/// rejected with a named error rather than misparsed.
+const VERSION: u8 = 1;
+/// Header bytes: magic + version + config fingerprint + body length +
+/// body checksum.
+const HEADER_LEN: usize = 4 + 1 + 8 + 8 + 8;
+/// Retention policy: [`save`] keeps this many newest checkpoints.
+pub const KEEP_LAST: usize = 3;
+
+/// Write `bytes` to `path` atomically: create parent dirs, write
+/// `<path>.tmp`, fsync, rename into place. The rename is atomic on POSIX
+/// filesystems, so readers see either the old file or the complete new
+/// one — never a torn write. Shared by checkpoints and
+/// [`crate::coordinator::TrainingHistory::write_csv`].
+pub fn write_atomic(path: &str, bytes: &[u8]) -> std::io::Result<()> {
+    let p = std::path::Path::new(path);
+    if let Some(parent) = p.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let tmp = format!("{path}.tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)
+}
+
+/// One device's checkpointed state: everything mutable a [`DeviceCtx`]
+/// carries across rounds (scratch buffers are fully overwritten before
+/// every read and are not state).
+///
+/// [`DeviceCtx`]: crate::coordinator::Trainer
+#[derive(Debug, Clone)]
+pub struct DeviceState {
+    /// Batch loader (shuffled order, cursor, epoch count, reshuffle RNG).
+    pub loader: LoaderState,
+    /// Link counters + jitter RNG.
+    pub link: LinkState,
+    /// Codec sampling stream `(state, inc)`.
+    pub codec_rng: (u64, u64),
+}
+
+/// Parameter + momentum tensors for one side of the split model.
+#[derive(Debug, Clone)]
+pub struct ModelState {
+    /// Parameter tensors.
+    pub params: Vec<HostTensor>,
+    /// Momentum tensors (same shapes as `params`).
+    pub momentum: Vec<HostTensor>,
+}
+
+/// Full training state at a round boundary.
+#[derive(Debug, Clone)]
+pub struct CheckpointState {
+    /// The run's serialized `ExperimentConfig` (for the named-key diff in
+    /// mismatch errors — the binary header carries only the fingerprint).
+    pub config_json: String,
+    /// `ExperimentConfig::fingerprint()` of the run that wrote this file.
+    pub config_fp: u64,
+    /// Rounds completed when the snapshot was taken; resume continues at
+    /// `completed_rounds + 1`.
+    pub completed_rounds: u64,
+    /// Accumulated per-round communication makespan at the boundary.
+    pub makespan_total_s: f64,
+    /// Per-device state, in ascending device-id order.
+    pub devices: Vec<DeviceState>,
+    /// Aggregated client weights/momenta.
+    pub client: ModelState,
+    /// Server weights/momenta.
+    pub server: ModelState,
+    /// Per-round metrics for every completed round, in order.
+    pub history: Vec<RoundMetrics>,
+    /// Communication stats at the boundary (informational — the trainer
+    /// rebuilds run-level stats from the restored links; kept so external
+    /// tools can read progress without replaying).
+    pub comm: CommStats,
+}
+
+// ---------------------------------------------------------------------
+// little-endian body writer/reader (fail-closed on truncation)
+// ---------------------------------------------------------------------
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn new() -> Self {
+        Writer { buf: Vec::new() }
+    }
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn bytes(&mut self, b: &[u8]) {
+        self.u64(b.len() as u64);
+        self.buf.extend_from_slice(b);
+    }
+    fn tensor(&mut self, t: &HostTensor) -> Result<()> {
+        let data = t.as_f32().context("checkpoint tensors must be f32")?;
+        self.u64(t.dims().len() as u64);
+        for &d in t.dims() {
+            self.u64(d as u64);
+        }
+        for &v in data {
+            self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        Ok(())
+    }
+    fn tensors(&mut self, ts: &[HostTensor]) -> Result<()> {
+        self.u64(ts.len() as u64);
+        for t in ts {
+            self.tensor(t)?;
+        }
+        Ok(())
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .context("checkpoint body truncated")?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    /// Length-prefixed count, sanity-bounded so a corrupted length can't
+    /// drive a giant allocation before the truncation check fires.
+    fn count(&mut self, what: &str) -> Result<usize> {
+        let n = self.u64()?;
+        anyhow::ensure!(
+            (n as usize) <= self.buf.len(),
+            "checkpoint body: implausible {what} count {n}"
+        );
+        Ok(n as usize)
+    }
+    fn bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.count("byte-run")?;
+        self.take(n)
+    }
+    fn tensor(&mut self) -> Result<HostTensor> {
+        let rank = self.count("tensor rank")?;
+        anyhow::ensure!(rank <= 8, "checkpoint body: implausible tensor rank {rank}");
+        let mut dims = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            dims.push(self.count("tensor dim")?);
+        }
+        let numel: usize = dims.iter().product();
+        anyhow::ensure!(
+            numel.checked_mul(4).is_some_and(|b| self.pos + b <= self.buf.len()),
+            "checkpoint body truncated inside a tensor"
+        );
+        let mut data = Vec::with_capacity(numel);
+        for _ in 0..numel {
+            data.push(f32::from_bits(u32::from_le_bytes(
+                self.take(4)?.try_into().unwrap(),
+            )));
+        }
+        Ok(HostTensor::f32(&dims, data))
+    }
+    fn tensors(&mut self) -> Result<Vec<HostTensor>> {
+        let n = self.count("tensor")?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.tensor()?);
+        }
+        Ok(out)
+    }
+}
+
+/// Body checksum: FNV-1a 64 finalized through the SplitMix64 mixer (a
+/// single flipped bit avalanches across the whole word).
+fn checksum(body: &[u8]) -> u64 {
+    mix64(fnv1a64(body))
+}
+
+impl CheckpointState {
+    /// Serialize to the length-prefixed, checksummed binary layout.
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        let mut w = Writer::new();
+        w.bytes(self.config_json.as_bytes());
+        w.u64(self.completed_rounds);
+        w.f64(self.makespan_total_s);
+        w.u64(self.devices.len() as u64);
+        for d in &self.devices {
+            w.u64(d.loader.indices.len() as u64);
+            for &i in &d.loader.indices {
+                w.u64(i as u64);
+            }
+            w.u64(d.loader.cursor as u64);
+            w.u64(d.loader.epochs as u64);
+            w.u64(d.loader.batch_size as u64);
+            w.u64(d.loader.rng.0);
+            w.u64(d.loader.rng.1);
+            w.u64(d.link.rng.0);
+            w.u64(d.link.rng.1);
+            w.u64(d.link.uplink_bytes);
+            w.u64(d.link.downlink_bytes);
+            w.f64(d.link.busy_s);
+            w.u64(d.link.transfers);
+            w.u64(d.codec_rng.0);
+            w.u64(d.codec_rng.1);
+        }
+        w.tensors(&self.client.params)?;
+        w.tensors(&self.client.momentum)?;
+        w.tensors(&self.server.params)?;
+        w.tensors(&self.server.momentum)?;
+        w.u64(self.history.len() as u64);
+        for m in &self.history {
+            w.u64(m.round as u64);
+            w.f64(m.train_loss);
+            w.f64(m.train_acc);
+            w.f64(m.test_acc);
+            w.f64(m.test_loss);
+            w.u64(m.uplink_bytes);
+            w.u64(m.downlink_bytes);
+            w.f64(m.comm_time_s);
+            w.f64(m.sim_time_s);
+            w.f64(m.queue_wait_s);
+            w.u64(m.dropped_devices);
+            w.u64(m.sampled_devices);
+            w.u64(m.retransmits);
+            w.u64(m.lost_bytes);
+            w.u64(m.corrupt_payloads);
+            w.f64(m.recovery_wait_s);
+            w.u8(m.skipped as u8);
+            w.f64(m.wall_time_s);
+        }
+        w.u64(self.comm.uplink_bytes);
+        w.u64(self.comm.downlink_bytes);
+        w.f64(self.comm.makespan_s);
+        w.f64(self.comm.total_busy_s);
+
+        let body = w.buf;
+        let mut out = Vec::with_capacity(HEADER_LEN + body.len());
+        out.extend_from_slice(&MAGIC);
+        out.push(VERSION);
+        out.extend_from_slice(&self.config_fp.to_le_bytes());
+        out.extend_from_slice(&(body.len() as u64).to_le_bytes());
+        out.extend_from_slice(&checksum(&body).to_le_bytes());
+        out.extend_from_slice(&body);
+        Ok(out)
+    }
+
+    /// Parse a checkpoint, failing closed on anything short of a complete,
+    /// checksummed, current-version file: short headers, wrong magic,
+    /// unknown versions, truncated (torn) bodies, and checksum mismatches
+    /// all produce named errors and no partial state.
+    pub fn from_bytes(bytes: &[u8]) -> Result<CheckpointState> {
+        if bytes.len() < HEADER_LEN {
+            bail!(
+                "checkpoint header truncated: {} bytes < {HEADER_LEN}",
+                bytes.len()
+            );
+        }
+        if bytes[..4] != MAGIC {
+            bail!("not a checkpoint file (bad magic)");
+        }
+        let version = bytes[4];
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version} (expected {VERSION})");
+        }
+        let config_fp = u64::from_le_bytes(bytes[5..13].try_into().unwrap());
+        let body_len = u64::from_le_bytes(bytes[13..21].try_into().unwrap()) as usize;
+        let stored_sum = u64::from_le_bytes(bytes[21..29].try_into().unwrap());
+        let body = &bytes[HEADER_LEN..];
+        if body.len() != body_len {
+            bail!(
+                "checkpoint body torn: header says {body_len} bytes, file has {}",
+                body.len()
+            );
+        }
+        let got_sum = checksum(body);
+        if got_sum != stored_sum {
+            bail!(
+                "checkpoint checksum mismatch: stored {stored_sum:#018x}, \
+                 computed {got_sum:#018x} — file is corrupt"
+            );
+        }
+
+        let mut r = Reader::new(body);
+        let config_json = String::from_utf8(r.bytes()?.to_vec())
+            .context("checkpoint config JSON is not UTF-8")?;
+        let completed_rounds = r.u64()?;
+        let makespan_total_s = r.f64()?;
+        let n_devices = r.count("device")?;
+        let mut devices = Vec::with_capacity(n_devices);
+        for _ in 0..n_devices {
+            let n_idx = r.count("shard index")?;
+            let mut indices = Vec::with_capacity(n_idx);
+            for _ in 0..n_idx {
+                indices.push(r.u64()? as usize);
+            }
+            let loader = LoaderState {
+                indices,
+                cursor: r.u64()? as usize,
+                epochs: r.u64()? as usize,
+                batch_size: r.u64()? as usize,
+                rng: (r.u64()?, r.u64()?),
+            };
+            let link = LinkState {
+                rng: (r.u64()?, r.u64()?),
+                uplink_bytes: r.u64()?,
+                downlink_bytes: r.u64()?,
+                busy_s: r.f64()?,
+                transfers: r.u64()?,
+            };
+            let codec_rng = (r.u64()?, r.u64()?);
+            devices.push(DeviceState {
+                loader,
+                link,
+                codec_rng,
+            });
+        }
+        let client = ModelState {
+            params: r.tensors()?,
+            momentum: r.tensors()?,
+        };
+        let server = ModelState {
+            params: r.tensors()?,
+            momentum: r.tensors()?,
+        };
+        let n_rounds = r.count("history round")?;
+        let mut history = Vec::with_capacity(n_rounds);
+        for _ in 0..n_rounds {
+            history.push(RoundMetrics {
+                round: r.u64()? as usize,
+                train_loss: r.f64()?,
+                train_acc: r.f64()?,
+                test_acc: r.f64()?,
+                test_loss: r.f64()?,
+                uplink_bytes: r.u64()?,
+                downlink_bytes: r.u64()?,
+                comm_time_s: r.f64()?,
+                sim_time_s: r.f64()?,
+                queue_wait_s: r.f64()?,
+                dropped_devices: r.u64()?,
+                sampled_devices: r.u64()?,
+                retransmits: r.u64()?,
+                lost_bytes: r.u64()?,
+                corrupt_payloads: r.u64()?,
+                recovery_wait_s: r.f64()?,
+                skipped: r.u8()? != 0,
+                wall_time_s: r.f64()?,
+            });
+        }
+        let comm = CommStats {
+            uplink_bytes: r.u64()?,
+            downlink_bytes: r.u64()?,
+            makespan_s: r.f64()?,
+            total_busy_s: r.f64()?,
+        };
+        if r.pos != body.len() {
+            bail!(
+                "checkpoint body has {} trailing bytes after the last section",
+                body.len() - r.pos
+            );
+        }
+        Ok(CheckpointState {
+            config_json,
+            config_fp,
+            completed_rounds,
+            makespan_total_s,
+            devices,
+            client,
+            server,
+            history,
+            comm,
+        })
+    }
+}
+
+/// Checkpoint filename for a round boundary. Zero-padded so lexical order
+/// equals numeric order (what [`latest`] relies on).
+fn file_name(round: u64) -> String {
+    format!("ckpt_round_{round:08}.bin")
+}
+
+/// Atomically write `state` into `dir` and prune to the newest
+/// `keep_last` checkpoints. Returns the written path.
+pub fn save(dir: &str, state: &CheckpointState, keep_last: usize) -> Result<String> {
+    let path = format!("{dir}/{}", file_name(state.completed_rounds));
+    let bytes = state.to_bytes()?;
+    write_atomic(&path, &bytes)
+        .with_context(|| format!("writing checkpoint {path}"))?;
+    // retention: drop the oldest files beyond keep_last (the just-written
+    // file is always newest — resume takes the highest round number)
+    let mut names = list_checkpoints(dir)?;
+    if names.len() > keep_last.max(1) {
+        let n_drop = names.len() - keep_last.max(1);
+        names.truncate(n_drop);
+        for old in names {
+            let _ = std::fs::remove_file(format!("{dir}/{old}"));
+        }
+    }
+    Ok(path)
+}
+
+/// Checkpoint file names in `dir`, ascending (oldest first). Missing dir
+/// reads as empty.
+fn list_checkpoints(dir: &str) -> Result<Vec<String>> {
+    let rd = match std::fs::read_dir(dir) {
+        Ok(rd) => rd,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(e).with_context(|| format!("reading checkpoint dir {dir}")),
+    };
+    let mut names: Vec<String> = rd
+        .filter_map(|e| e.ok())
+        .filter_map(|e| e.file_name().into_string().ok())
+        .filter(|n| n.starts_with("ckpt_round_") && n.ends_with(".bin"))
+        .collect();
+    names.sort();
+    Ok(names)
+}
+
+/// Path of the newest checkpoint in `dir`, or `None` when the directory
+/// is empty or missing (a fresh start, not an error — first runs resume
+/// from nothing).
+pub fn latest(dir: &str) -> Result<Option<String>> {
+    Ok(list_checkpoints(dir)?.pop().map(|n| format!("{dir}/{n}")))
+}
+
+/// Load and parse one checkpoint file (fail-closed; see
+/// [`CheckpointState::from_bytes`]).
+pub fn load(path: &str) -> Result<CheckpointState> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading checkpoint {path}"))?;
+    CheckpointState::from_bytes(&bytes)
+        .with_context(|| format!("parsing checkpoint {path}"))
+}
+
+/// Build the named-key diff error for a resume against a different
+/// config: every serialized key whose value differs between the
+/// checkpoint's stored config and the current one is listed with both
+/// values, so the operator sees exactly which hyperparameter changed.
+pub fn config_mismatch_error(stored_json: &str, current: &ExperimentConfig) -> anyhow::Error {
+    let cur = current.to_json();
+    let Ok(stored) = Json::parse(stored_json) else {
+        return anyhow::anyhow!(
+            "checkpoint was written by a different config (fingerprint mismatch), \
+             and its stored config JSON does not parse"
+        );
+    };
+    let empty = std::collections::BTreeMap::new();
+    let so = stored.as_obj().unwrap_or(&empty);
+    let co = cur.as_obj().unwrap_or(&empty);
+    let mut diffs = Vec::new();
+    for key in so.keys().chain(co.keys()) {
+        if diffs.iter().any(|d: &String| d.starts_with(&format!("{key}:"))) {
+            continue;
+        }
+        let sv = so.get(key).map(|v| v.to_string()).unwrap_or_else(|| "<absent>".into());
+        let cv = co.get(key).map(|v| v.to_string()).unwrap_or_else(|| "<absent>".into());
+        if sv != cv {
+            diffs.push(format!("{key}: checkpoint {sv} vs current {cv}"));
+        }
+    }
+    anyhow::anyhow!(
+        "cannot resume: checkpoint was written by a different config — {}",
+        if diffs.is_empty() {
+            "fingerprint differs but no serialized key does (stale fingerprint?)".to_string()
+        } else {
+            diffs.join("; ")
+        }
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state() -> CheckpointState {
+        let metric = RoundMetrics {
+            round: 1,
+            train_loss: 1.25,
+            train_acc: 0.5,
+            test_acc: 0.5,
+            test_loss: 1.5,
+            uplink_bytes: 100,
+            downlink_bytes: 50,
+            comm_time_s: 0.1,
+            sim_time_s: 0.2,
+            queue_wait_s: 0.0,
+            dropped_devices: 0,
+            sampled_devices: 2,
+            retransmits: 1,
+            lost_bytes: 64,
+            corrupt_payloads: 0,
+            recovery_wait_s: 0.0,
+            skipped: false,
+            wall_time_s: 0.01,
+        };
+        CheckpointState {
+            config_json: "{\"seed\": 7}".into(),
+            config_fp: 0xDEAD_BEEF_1234_5678,
+            completed_rounds: 1,
+            makespan_total_s: 0.375,
+            devices: vec![DeviceState {
+                loader: LoaderState {
+                    indices: vec![3, 1, 4, 1, 5],
+                    cursor: 2,
+                    epochs: 1,
+                    batch_size: 2,
+                    rng: (0x1111, 0x2223),
+                },
+                link: LinkState {
+                    rng: (0x3333, 0x4445),
+                    uplink_bytes: 1000,
+                    downlink_bytes: 500,
+                    busy_s: 1.5,
+                    transfers: 4,
+                },
+                codec_rng: (0x5555, 0x6667),
+            }],
+            client: ModelState {
+                params: vec![HostTensor::f32(&[2, 3], vec![1.0, -2.0, 3.5, 0.0, 5.0, -0.25])],
+                momentum: vec![HostTensor::f32(&[2, 3], vec![0.0; 6])],
+            },
+            server: ModelState {
+                params: vec![HostTensor::f32(&[3, 2], vec![0.5; 6])],
+                momentum: vec![HostTensor::f32(&[3, 2], vec![0.125; 6])],
+            },
+            history: vec![metric],
+            comm: CommStats {
+                uplink_bytes: 1000,
+                downlink_bytes: 500,
+                makespan_s: 0.375,
+                total_busy_s: 1.5,
+            },
+        }
+    }
+
+    fn tensors_bit_eq(a: &[HostTensor], b: &[HostTensor]) -> bool {
+        a.len() == b.len()
+            && a.iter().zip(b).all(|(x, y)| {
+                x.dims() == y.dims()
+                    && x.as_f32()
+                        .unwrap()
+                        .iter()
+                        .zip(y.as_f32().unwrap())
+                        .all(|(p, q)| p.to_bits() == q.to_bits())
+            })
+    }
+
+    #[test]
+    fn roundtrip_is_bit_identical() {
+        let s = state();
+        let bytes = s.to_bytes().unwrap();
+        let t = CheckpointState::from_bytes(&bytes).unwrap();
+        assert_eq!(t.config_json, s.config_json);
+        assert_eq!(t.config_fp, s.config_fp);
+        assert_eq!(t.completed_rounds, s.completed_rounds);
+        assert_eq!(t.makespan_total_s.to_bits(), s.makespan_total_s.to_bits());
+        assert_eq!(t.devices.len(), 1);
+        assert_eq!(t.devices[0].loader.indices, s.devices[0].loader.indices);
+        assert_eq!(t.devices[0].loader.cursor, 2);
+        assert_eq!(t.devices[0].loader.rng, (0x1111, 0x2223));
+        assert_eq!(t.devices[0].link.rng, (0x3333, 0x4445));
+        assert_eq!(t.devices[0].link.busy_s.to_bits(), 1.5f64.to_bits());
+        assert_eq!(t.devices[0].codec_rng, (0x5555, 0x6667));
+        assert!(tensors_bit_eq(&t.client.params, &s.client.params));
+        assert!(tensors_bit_eq(&t.client.momentum, &s.client.momentum));
+        assert!(tensors_bit_eq(&t.server.params, &s.server.params));
+        assert!(tensors_bit_eq(&t.server.momentum, &s.server.momentum));
+        assert_eq!(t.history.len(), 1);
+        assert!(t.history[0].bit_eq(&s.history[0]));
+        assert_eq!(t.history[0].wall_time_s.to_bits(), s.history[0].wall_time_s.to_bits());
+        assert!(t.comm.bit_eq(&s.comm));
+    }
+
+    #[test]
+    fn torn_and_corrupt_files_fail_closed_with_named_errors() {
+        let bytes = state().to_bytes().unwrap();
+        // header truncation
+        let err = CheckpointState::from_bytes(&bytes[..10]).unwrap_err();
+        assert!(err.to_string().contains("header truncated"), "{err}");
+        // torn body (crash mid-write without the atomic writer)
+        let err = CheckpointState::from_bytes(&bytes[..bytes.len() - 7]).unwrap_err();
+        assert!(err.to_string().contains("torn"), "{err}");
+        // single flipped body bit → checksum mismatch
+        let mut bad = bytes.clone();
+        let mid = HEADER_LEN + (bad.len() - HEADER_LEN) / 2;
+        bad[mid] ^= 0x10;
+        let err = CheckpointState::from_bytes(&bad).unwrap_err();
+        assert!(err.to_string().contains("checksum mismatch"), "{err}");
+        // wrong magic
+        let mut foreign = bytes.clone();
+        foreign[0] = b'X';
+        let err = CheckpointState::from_bytes(&foreign).unwrap_err();
+        assert!(err.to_string().contains("bad magic"), "{err}");
+        // future version
+        let mut vnext = bytes;
+        vnext[4] = VERSION + 1;
+        let err = CheckpointState::from_bytes(&vnext).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+    }
+
+    #[test]
+    fn save_prunes_to_keep_last_and_latest_finds_newest() {
+        let dir = format!(
+            "{}/slfac_ckpt_unit_{}",
+            std::env::temp_dir().display(),
+            std::process::id()
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(latest(&dir).unwrap().is_none(), "missing dir reads empty");
+        let mut s = state();
+        for round in 1..=6u64 {
+            s.completed_rounds = round;
+            save(&dir, &s, KEEP_LAST).unwrap();
+        }
+        let names = list_checkpoints(&dir).unwrap();
+        assert_eq!(names.len(), KEEP_LAST, "retention prunes to keep-last");
+        assert_eq!(names.last().unwrap(), &file_name(6));
+        let newest = latest(&dir).unwrap().unwrap();
+        assert!(newest.ends_with(&file_name(6)), "{newest}");
+        let loaded = load(&newest).unwrap();
+        assert_eq!(loaded.completed_rounds, 6);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn write_atomic_leaves_no_tmp_behind() {
+        let dir = format!(
+            "{}/slfac_atomic_unit_{}",
+            std::env::temp_dir().display(),
+            std::process::id()
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = format!("{dir}/nested/out.csv");
+        write_atomic(&path, b"a,b\n1,2\n").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"a,b\n1,2\n");
+        assert!(!std::path::Path::new(&format!("{path}.tmp")).exists());
+        // overwrite is atomic too
+        write_atomic(&path, b"new").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"new");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn config_mismatch_error_names_differing_keys() {
+        let a = ExperimentConfig {
+            seed: 7,
+            ..Default::default()
+        };
+        let stored = a.to_json().to_string();
+        let b = ExperimentConfig {
+            seed: 8,
+            lr: a.lr * 2.0,
+            ..Default::default()
+        };
+        let err = config_mismatch_error(&stored, &b).to_string();
+        assert!(err.contains("seed"), "{err}");
+        assert!(err.contains("lr"), "{err}");
+        assert!(err.contains("cannot resume"), "{err}");
+        // unparseable stored JSON still produces a clear error
+        let err = config_mismatch_error("not json", &b).to_string();
+        assert!(err.contains("does not parse"), "{err}");
+    }
+}

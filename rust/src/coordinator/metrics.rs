@@ -140,6 +140,11 @@ pub struct RoundMetrics {
     pub corrupt_payloads: u64,
     /// Simulated seconds arrivals waited out server outage windows, s.
     pub recovery_wait_s: f64,
+    /// Whether the round was skipped by aggregation: every participant was
+    /// dropped (deadline/quorum/fault exhaustion), so the aggregate model
+    /// carried forward unchanged instead of dividing by a zero FedAvg
+    /// weight.
+    pub skipped: bool,
     /// Wall-clock compute time this round, s.
     pub wall_time_s: f64,
 }
@@ -175,6 +180,7 @@ impl RoundMetrics {
             && self.lost_bytes == other.lost_bytes
             && self.corrupt_payloads == other.corrupt_payloads
             && self.recovery_wait_s.to_bits() == other.recovery_wait_s.to_bits()
+            && self.skipped == other.skipped
     }
 }
 
@@ -272,6 +278,13 @@ impl TrainingHistory {
         })
     }
 
+    /// Whether any round was skipped by aggregation (all participants
+    /// dropped). Gates the `skipped` CSV column the same way the fault
+    /// columns are gated.
+    fn has_skipped(&self) -> bool {
+        self.rounds.iter().any(|r| r.skipped)
+    }
+
     /// Render as CSV (header + one row per round); the `cum_bytes` column
     /// reuses the running totals.
     ///
@@ -279,13 +292,19 @@ impl TrainingHistory {
     /// recovery_wait_s`) are emitted only when some round recorded fault
     /// activity — a fault-free run's CSV is byte-identical to the
     /// pre-fault-layer format (pinned by the fault-determinism tests).
+    /// Likewise the `skipped` column (0/1) appears only when some round
+    /// was skipped by aggregation.
     pub fn to_csv(&self) -> String {
         let faulty = self.has_fault_activity();
+        let any_skipped = self.has_skipped();
         let mut s = String::from(
             "round,train_loss,train_acc,test_loss,test_acc,uplink_bytes,downlink_bytes,cum_bytes,comm_time_s,sim_time_s,queue_wait_s,dropped,sampled",
         );
         if faulty {
             s.push_str(",retransmits,lost_bytes,corrupt_payloads,recovery_wait_s");
+        }
+        if any_skipped {
+            s.push_str(",skipped");
         }
         s.push_str(",wall_time_s\n");
         for (i, r) in self.rounds.iter().enumerate() {
@@ -313,17 +332,19 @@ impl TrainingHistory {
                     r.retransmits, r.lost_bytes, r.corrupt_payloads, r.recovery_wait_s
                 );
             }
+            if any_skipped {
+                let _ = write!(s, ",{}", r.skipped as u8);
+            }
             let _ = writeln!(s, ",{:.3}", r.wall_time_s);
         }
         s
     }
 
-    /// Write the CSV to `path` (creating parent dirs).
+    /// Write the CSV to `path` (creating parent dirs) atomically — temp
+    /// file + fsync + rename via the shared checkpoint writer, so a crash
+    /// mid-write never leaves a torn CSV for the sweep report to ingest.
     pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
-        if let Some(parent) = std::path::Path::new(path).parent() {
-            std::fs::create_dir_all(parent)?;
-        }
-        std::fs::write(path, self.to_csv())
+        super::checkpoint::write_atomic(path, self.to_csv().as_bytes())
     }
 
     /// Bit-exact equality over all rounds (see [`RoundMetrics::bit_eq`];
@@ -433,6 +454,7 @@ mod tests {
             lost_bytes: 0,
             corrupt_payloads: 0,
             recovery_wait_s: 0.0,
+            skipped: false,
             wall_time_s: 0.5,
         }
     }
@@ -560,5 +582,37 @@ mod tests {
             assert_eq!(l.split(',').count(), 18, "row {l:?}");
         }
         assert!(lines[2].contains(",3,128,1,0.2500,"));
+    }
+
+    #[test]
+    fn bit_eq_detects_skipped_round_drift() {
+        let a = mk(1, 0.5, 100);
+        let mut b = a.clone();
+        b.skipped = true;
+        assert!(!a.bit_eq(&b), "skipped-round drift must be detected");
+    }
+
+    #[test]
+    fn csv_skipped_column_appears_only_when_a_round_was_skipped() {
+        // no skipped rounds: the historical 14-column format, byte-stable
+        let clean = hist(vec![mk(1, 0.5, 64)]);
+        let clean_csv = clean.to_csv();
+        assert!(!clean_csv.contains("skipped"));
+        assert_eq!(clean_csv.lines().next().unwrap().split(',').count(), 14);
+        // a skipped round switches every row to carry the 0/1 column,
+        // placed between the (optional) fault columns and wall_time_s
+        let mut m = mk(2, 0.5, 0);
+        m.skipped = true;
+        m.dropped_devices = 5;
+        let h = hist(vec![mk(1, 0.5, 64), m]);
+        let csv = h.to_csv();
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert!(lines[0].ends_with("dropped,sampled,skipped,wall_time_s"));
+        for l in &lines {
+            assert_eq!(l.split(',').count(), 15, "row {l:?}");
+        }
+        let col = |line: &str| line.split(',').nth(13).unwrap().to_string();
+        assert_eq!(col(lines[1]), "0");
+        assert_eq!(col(lines[2]), "1");
     }
 }

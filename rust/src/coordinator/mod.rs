@@ -13,6 +13,10 @@
 //!   order-stable; dropped stragglers carry zero weight).
 //! * [`metrics`] — per-round metrics, history, CSV output, and bit-exact
 //!   comparison helpers for the differential determinism tests.
+//! * [`checkpoint`] — crash-durable round-boundary snapshots (atomic
+//!   write + checksummed binary layout + keep-last-k retention) behind
+//!   the trainer's `checkpoint_every`/`resume_latest` surface; resume is
+//!   bit-identical to never having crashed.
 //!
 //! One communication round under the **sync scheduler** (the default)
 //! runs in three deterministic phases per local batch:
@@ -63,11 +67,13 @@
 //!   function of the configuration ([`crate::transport::event`]).
 
 pub mod aggregate;
+pub mod checkpoint;
 pub mod engine;
 pub mod metrics;
 pub mod trainer;
 
 pub use aggregate::{fedavg, fedavg_sharded};
+pub use checkpoint::{CheckpointState, DeviceState, ModelState};
 pub use engine::{effective_workers, run_sharded, run_sharded_indexed};
 pub use metrics::{RoundMetrics, StreamFold, TrainingHistory};
 pub use trainer::{TrainOutcome, Trainer};

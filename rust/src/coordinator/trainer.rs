@@ -21,6 +21,7 @@ use anyhow::{Context, Result};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use super::checkpoint::{self, CheckpointState, DeviceState, ModelState};
 use super::engine;
 use super::metrics::{RoundMetrics, StreamFold, TrainingHistory};
 
@@ -97,6 +98,16 @@ enum GradMsg {
     Stashed,
 }
 
+/// State restored by [`Trainer::resume_latest`], consumed by the next
+/// [`Trainer::run`]: the run starts at `completed + 1` with the restored
+/// history pre-pushed (cumulative byte totals rebuilt through the normal
+/// `push` path) and the makespan accumulator re-seeded.
+struct RestoredRun {
+    completed: usize,
+    rounds: Vec<RoundMetrics>,
+    makespan_total_s: f64,
+}
+
 /// Final result of a training run.
 pub struct TrainOutcome {
     /// Per-round metrics.
@@ -148,6 +159,18 @@ pub struct Trainer {
     /// Sum of per-round communication makespans (the satellite fix: the
     /// run-level makespan is per-round accounting, not a lifetime max).
     makespan_total_s: f64,
+    /// Runtime-only interruption hook (not a config knob, so it never
+    /// perturbs the config fingerprint): `run()` leaves the round loop
+    /// after checkpointing this round. The crash-resume tests and the CI
+    /// smoke use it to interrupt a run at a round boundary while keeping
+    /// the *configured* `rounds` — and hence the checkpoint fingerprint —
+    /// identical to the uninterrupted run.
+    stop_after_round: Option<usize>,
+    /// Set by `round_parallel` when every participant was dropped and the
+    /// aggregate was carried forward; recorded as `RoundMetrics::skipped`.
+    round_skipped: bool,
+    /// Restored state from `resume_latest`, consumed by the next `run()`.
+    resume: Option<RestoredRun>,
 }
 
 impl Trainer {
@@ -290,6 +313,9 @@ impl Trainer {
             fedavg_weights: Vec::new(),
             scratch_idx: Vec::new(),
             makespan_total_s: 0.0,
+            stop_after_round: None,
+            round_skipped: false,
+            resume: None,
         })
     }
 
@@ -298,12 +324,35 @@ impl Trainer {
         &self.cfg
     }
 
+    /// Interrupt the next `run()` after checkpointing `round` (runtime-only
+    /// knob; `None` runs to completion). See the `stop_after_round` field.
+    pub fn set_stop_after(&mut self, round: Option<usize>) {
+        self.stop_after_round = round;
+    }
+
     /// Run all configured rounds; returns the full outcome.
+    ///
+    /// When `resume_latest` restored a checkpoint, the loop starts at the
+    /// round after the checkpointed one with the restored per-round history
+    /// replayed through the normal `push` path (so the cumulative byte
+    /// totals are rebuilt identically); everything downstream — metrics,
+    /// CSV, final parameters — is bit-identical to a run that never
+    /// stopped.
     pub fn run(&mut self) -> Result<TrainOutcome> {
         let mut history =
             TrainingHistory::with_capacity(&self.cfg.name, &self.cfg.codec, self.cfg.rounds);
         self.makespan_total_s = 0.0;
-        for round in 1..=self.cfg.rounds {
+        let first_round = match self.resume.take() {
+            Some(res) => {
+                for m in res.rounds {
+                    history.push(m);
+                }
+                self.makespan_total_s = res.makespan_total_s;
+                res.completed + 1
+            }
+            None => 1,
+        };
+        for round in first_round..=self.cfg.rounds {
             let m = self.run_round(round)?;
             let mut extras = String::new();
             if m.queue_wait_s > 0.0 {
@@ -336,6 +385,13 @@ impl Trainer {
                 extras
             );
             history.push(m);
+            if self.cfg.checkpoint_every > 0 && round % self.cfg.checkpoint_every == 0 {
+                self.save_checkpoint(round, &history)?;
+            }
+            if self.stop_after_round == Some(round) {
+                crate::info!("stop_after_round: leaving the round loop after round {round}");
+                break;
+            }
         }
         // Order-stable reduction: fold in device-id order so f64 sums are
         // bit-identical no matter how many workers ran the phases. The
@@ -356,6 +412,7 @@ impl Trainer {
     /// One communication round.
     fn run_round(&mut self, round: usize) -> Result<RoundMetrics> {
         let t0 = Instant::now();
+        self.round_skipped = false;
         match self.cfg.sync {
             SyncMode::ParallelFedAvg => self.round_parallel(round, t0),
             SyncMode::Sequential => self.round_sequential(round, t0),
@@ -470,9 +527,13 @@ impl Trainer {
                 );
             }
         } else {
+            // the all-dropped round: zero total FedAvg weight would divide
+            // to NaN, so the aggregate (and momenta) carry forward
+            // unchanged and the round is recorded as skipped
+            self.round_skipped = true;
             crate::warn!(
                 "round {round}: every participant was dropped (policy {}) — \
-                 keeping previous aggregate",
+                 keeping previous aggregate, recording the round as skipped",
                 self.cfg.straggler.name()
             );
         }
@@ -647,6 +708,7 @@ impl Trainer {
             lost_bytes: report.lost_bytes,
             corrupt_payloads: report.corrupt_payloads,
             recovery_wait_s: report.recovery_wait_s,
+            skipped: self.round_skipped,
             wall_time_s: t0.elapsed().as_secs_f64(),
         })
     }
@@ -731,6 +793,200 @@ impl Trainer {
             Some(res) => res.server_params(),
             None => self.server.lock().unwrap().0.clone(),
         }
+    }
+
+    /// Full training state at the boundary after `completed` rounds.
+    ///
+    /// Round-boundary state is *sufficient* for bit-identical resume
+    /// because every per-round draw (client sampling, fault plans) is a
+    /// pure function of `(seed, round)` — only the stateful streams need
+    /// to survive: each device's loader (shuffle position), link jitter
+    /// RNG + lifetime byte/busy counters, and codec sampling RNG. Scratch
+    /// buffers and pending steps are never live at a round boundary.
+    fn checkpoint_state(
+        &self,
+        completed: usize,
+        history: &TrainingHistory,
+    ) -> Result<CheckpointState> {
+        let devices = self
+            .devices
+            .iter()
+            .map(|d| DeviceState {
+                loader: d.loader.snapshot(),
+                link: d.link.snapshot(),
+                codec_rng: d.codec_rng.state_parts(),
+            })
+            .collect();
+        let (client, server) = if let Some(res) = &self.resident {
+            // fast path: weights live in the resident aggregate/server
+            // slots — export as single flat tensors with the plan's shapes
+            let plan = res.plan();
+            let (cw, cm) = res.export_client_agg();
+            let (sw, sm) = res.export_server();
+            (
+                ModelState {
+                    params: vec![HostTensor::f32(&[plan.in_dim, plan.act_feat], cw)],
+                    momentum: vec![HostTensor::f32(&[plan.in_dim, plan.act_feat], cm)],
+                },
+                ModelState {
+                    params: vec![HostTensor::f32(&[plan.act_feat, plan.classes], sw)],
+                    momentum: vec![HostTensor::f32(&[plan.act_feat, plan.classes], sm)],
+                },
+            )
+        } else {
+            let s = self.server.lock().unwrap();
+            (
+                ModelState {
+                    params: self.client.0.clone(),
+                    momentum: self.client.1.clone(),
+                },
+                ModelState {
+                    params: s.0.clone(),
+                    momentum: s.1.clone(),
+                },
+            )
+        };
+        // informational snapshot — resume rebuilds CommStats from the
+        // restored links, this is for offline checkpoint inspection
+        let mut comm = CommStats::default();
+        for d in &self.devices {
+            comm.accumulate(&d.link);
+        }
+        comm.makespan_s = self.makespan_total_s;
+        Ok(CheckpointState {
+            config_json: self.cfg.to_json().to_string(),
+            config_fp: self.cfg.fingerprint(),
+            completed_rounds: completed as u64,
+            makespan_total_s: self.makespan_total_s,
+            devices,
+            client,
+            server,
+            history: history.rounds.clone(),
+            comm,
+        })
+    }
+
+    /// Write an atomic, checksummed checkpoint into `cfg.checkpoint_dir`
+    /// and prune to the retention window.
+    fn save_checkpoint(&self, round: usize, history: &TrainingHistory) -> Result<()> {
+        let state = self.checkpoint_state(round, history)?;
+        let path = checkpoint::save(&self.cfg.checkpoint_dir, &state, checkpoint::KEEP_LAST)?;
+        crate::info!("checkpoint: round {round} -> {path}");
+        Ok(())
+    }
+
+    /// Restore the newest checkpoint in `cfg.checkpoint_dir`, if any.
+    ///
+    /// Returns the number of completed rounds restored — `0` means a fresh
+    /// start (missing or empty directory). Fails closed on torn/corrupt
+    /// files (named errors from the checkpoint reader) and on a config
+    /// fingerprint mismatch (named-key diff: resuming under a different
+    /// config would silently change the experiment mid-run).
+    pub fn resume_latest(&mut self) -> Result<usize> {
+        anyhow::ensure!(
+            !self.cfg.checkpoint_dir.is_empty(),
+            "resume requires checkpoint_dir to be set"
+        );
+        let Some(path) = checkpoint::latest(&self.cfg.checkpoint_dir)? else {
+            crate::info!(
+                "resume: no checkpoint under {} — starting fresh",
+                self.cfg.checkpoint_dir
+            );
+            return Ok(0);
+        };
+        let state = checkpoint::load(&path)?;
+        if state.config_fp != self.cfg.fingerprint() {
+            return Err(checkpoint::config_mismatch_error(&state.config_json, &self.cfg));
+        }
+        anyhow::ensure!(
+            state.devices.len() == self.devices.len(),
+            "checkpoint has {} devices, this run has {}",
+            state.devices.len(),
+            self.devices.len()
+        );
+        let completed = state.completed_rounds as usize;
+        anyhow::ensure!(
+            completed <= self.cfg.rounds,
+            "checkpoint completed {} rounds but the config runs only {}",
+            completed,
+            self.cfg.rounds
+        );
+        anyhow::ensure!(
+            state.history.len() == completed,
+            "checkpoint history has {} rounds, its round counter says {}",
+            state.history.len(),
+            completed
+        );
+
+        // model state first (shape checks fail before anything mutates)
+        if let Some(res) = &self.resident {
+            anyhow::ensure!(
+                state.client.params.len() == 1
+                    && state.client.momentum.len() == 1
+                    && state.server.params.len() == 1
+                    && state.server.momentum.len() == 1,
+                "checkpoint tensor arity does not match the resident session layout"
+            );
+            res.import_client_agg(
+                state.client.params[0].as_f32()?,
+                state.client.momentum[0].as_f32()?,
+            )?;
+            res.import_server(
+                state.server.params[0].as_f32()?,
+                state.server.momentum[0].as_f32()?,
+            )?;
+        } else {
+            let check = |run: &[HostTensor], ckpt: &[HostTensor], what: &str| -> Result<()> {
+                anyhow::ensure!(
+                    run.len() == ckpt.len(),
+                    "{what}: checkpoint has {} tensors, this run has {}",
+                    ckpt.len(),
+                    run.len()
+                );
+                for (r, c) in run.iter().zip(ckpt) {
+                    anyhow::ensure!(
+                        r.dims() == c.dims(),
+                        "{what}: checkpoint tensor dims {:?} != this run's {:?}",
+                        c.dims(),
+                        r.dims()
+                    );
+                }
+                Ok(())
+            };
+            check(&self.client.0, &state.client.params, "client params")?;
+            check(&self.client.1, &state.client.momentum, "client momentum")?;
+            {
+                let mut guard = self.server.lock().unwrap();
+                check(&guard.0, &state.server.params, "server params")?;
+                check(&guard.1, &state.server.momentum, "server momentum")?;
+                guard.0 = state.server.params.clone();
+                guard.1 = state.server.momentum.clone();
+            }
+            self.client = (state.client.params.clone(), state.client.momentum.clone());
+        }
+
+        // per-device stateful streams (loader shuffle, link jitter +
+        // lifetime counters, codec sampling)
+        for (d, ds) in self.devices.iter_mut().zip(&state.devices) {
+            anyhow::ensure!(
+                ds.loader.indices.len() == d.shard_len,
+                "device {}: checkpoint shard has {} samples, this run's has {}",
+                d.id,
+                ds.loader.indices.len(),
+                d.shard_len
+            );
+            d.loader = BatchLoader::from_state(ds.loader.clone())?;
+            d.link.restore(&ds.link);
+            d.codec_rng = Pcg32::from_state_parts(ds.codec_rng.0, ds.codec_rng.1);
+        }
+
+        self.resume = Some(RestoredRun {
+            completed,
+            rounds: state.history,
+            makespan_total_s: state.makespan_total_s,
+        });
+        crate::info!("resume: restored {completed} completed rounds from {path}");
+        Ok(completed)
     }
 }
 

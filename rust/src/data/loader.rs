@@ -7,6 +7,25 @@
 
 use super::Dataset;
 use crate::rng::Pcg32;
+use anyhow::Result;
+
+/// Serializable snapshot of a [`BatchLoader`] mid-run — the shuffled index
+/// order, the cursor, the epoch counter, and the raw RNG state. Restoring
+/// through [`BatchLoader::from_state`] continues the draw sequence
+/// bit-identically (checkpoint/resume contract).
+#[derive(Debug, Clone)]
+pub struct LoaderState {
+    /// Index order as currently shuffled.
+    pub indices: Vec<usize>,
+    /// Position of the next draw within `indices`.
+    pub cursor: usize,
+    /// Epochs completed at snapshot time.
+    pub epochs: usize,
+    /// Batch size the loader was built with.
+    pub batch_size: usize,
+    /// Reshuffle RNG `(state, inc)` parts.
+    pub rng: (u64, u64),
+}
 
 /// Cycling, reshuffling batch iterator over a subset of a dataset.
 #[derive(Debug)]
@@ -35,6 +54,38 @@ impl BatchLoader {
             batch_size,
             epochs: 0,
         }
+    }
+
+    /// Snapshot the full loader state for a checkpoint.
+    pub fn snapshot(&self) -> LoaderState {
+        LoaderState {
+            indices: self.indices.clone(),
+            cursor: self.cursor,
+            epochs: self.epochs,
+            batch_size: self.batch_size,
+            rng: self.rng.state_parts(),
+        }
+    }
+
+    /// Rebuild a loader from a [`LoaderState`]. Fails closed on
+    /// structurally impossible state (empty shard, zero batch size, cursor
+    /// past the shard) rather than trusting checkpoint bytes blindly.
+    pub fn from_state(state: LoaderState) -> Result<Self> {
+        anyhow::ensure!(state.batch_size > 0, "loader state: batch_size is 0");
+        anyhow::ensure!(!state.indices.is_empty(), "loader state: empty shard");
+        anyhow::ensure!(
+            state.cursor <= state.indices.len(),
+            "loader state: cursor {} past shard of {}",
+            state.cursor,
+            state.indices.len()
+        );
+        Ok(BatchLoader {
+            indices: state.indices,
+            cursor: state.cursor,
+            rng: Pcg32::from_state_parts(state.rng.0, state.rng.1),
+            batch_size: state.batch_size,
+            epochs: state.epochs,
+        })
     }
 
     /// Number of batches per full pass (rounded up).
@@ -159,6 +210,35 @@ mod tests {
             assert_eq!(ya_i32, ys);
         }
         assert_eq!(a.epochs, b.epochs, "same wrap/reshuffle sequence");
+    }
+
+    #[test]
+    fn snapshot_restore_continues_draws_bit_identically() {
+        let d = dataset();
+        let mut a = BatchLoader::new((0..d.len()).collect(), 4, 9);
+        // advance mid-epoch so cursor, epochs, and RNG are all non-trivial
+        for _ in 0..7 {
+            a.next_batch(&d);
+        }
+        let mut b = BatchLoader::from_state(a.snapshot()).unwrap();
+        for _ in 0..20 {
+            assert_eq!(a.next_batch(&d), b.next_batch(&d));
+        }
+        assert_eq!(a.epochs, b.epochs);
+    }
+
+    #[test]
+    fn from_state_rejects_impossible_state() {
+        let good = BatchLoader::new((0..10).collect(), 4, 1).snapshot();
+        let mut s = good.clone();
+        s.batch_size = 0;
+        assert!(BatchLoader::from_state(s).unwrap_err().to_string().contains("batch_size"));
+        let mut s = good.clone();
+        s.indices.clear();
+        assert!(BatchLoader::from_state(s).unwrap_err().to_string().contains("empty shard"));
+        let mut s = good;
+        s.cursor = 11;
+        assert!(BatchLoader::from_state(s).unwrap_err().to_string().contains("cursor"));
     }
 
     #[test]

@@ -10,7 +10,7 @@ pub mod loader;
 pub mod partition;
 pub mod synthetic;
 
-pub use loader::BatchLoader;
+pub use loader::{BatchLoader, LoaderState};
 pub use partition::{partition_dirichlet, partition_iid};
 pub use synthetic::{ham_like, mnist_like, DatasetSpec};
 

@@ -134,6 +134,27 @@ fn cli() -> Command {
                 .opt("backend", "KIND", "executor backend: xla | sim", Some("xla"))
                 .opt("artifacts", "DIR", "artifacts directory", None)
                 .opt("out", "PATH", "metrics CSV output path", None)
+                .opt(
+                    "checkpoint-every",
+                    "N",
+                    "write a crash-durable checkpoint every N rounds (0 = off; \
+                     needs --checkpoint-dir)",
+                    None,
+                )
+                .opt("checkpoint-dir", "DIR", "checkpoint directory", None)
+                .opt(
+                    "stop-after-round",
+                    "N",
+                    "interrupt the run after checkpointing round N (runtime-only \
+                     knob for crash-resume testing; config and fingerprint keep \
+                     the full --rounds)",
+                    None,
+                )
+                .flag(
+                    "resume",
+                    "resume from the newest checkpoint in --checkpoint-dir \
+                     (fresh start if the directory is empty)",
+                )
                 .flag("quiet", "suppress per-round logs"),
         )
         .subcommand(
@@ -150,6 +171,14 @@ fn cli() -> Command {
                         )
                         .opt("out-dir", "DIR", "results root", Some("results"))
                         .opt("journal", "PATH", "journal path override", None)
+                        .opt(
+                            "checkpoint-every",
+                            "N",
+                            "per-run crash-durable checkpoints every N rounds \
+                             (0 = off); interrupted runs resume mid-run instead \
+                             of restarting",
+                            None,
+                        )
                         .flag("quiet", "suppress per-round logs"),
                 )
                 .subcommand(
@@ -376,6 +405,15 @@ fn build_config(m: &Matches) -> Result<ExperimentConfig> {
     if let Some(a) = m.get("artifacts") {
         cfg.artifacts_dir = a.to_string();
     }
+    if let Some(n) = m
+        .get_parsed::<usize>("checkpoint-every")
+        .map_err(anyhow::Error::msg)?
+    {
+        cfg.checkpoint_every = n;
+    }
+    if let Some(d) = m.get("checkpoint-dir") {
+        cfg.checkpoint_dir = d.to_string();
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -397,7 +435,21 @@ fn cmd_train(m: &Matches) -> Result<()> {
     )?;
     let name = cfg.name.clone();
     let codec_name = cfg.codec.clone();
+    let resume = m.flag("resume");
+    if resume && cfg.checkpoint_dir.is_empty() {
+        anyhow::bail!("--resume requires --checkpoint-dir (and --checkpoint-every > 0)");
+    }
+    let stop_after = m
+        .get_parsed::<usize>("stop-after-round")
+        .map_err(anyhow::Error::msg)?;
     let mut trainer = slfac::coordinator::Trainer::new(cfg, exec)?;
+    if resume {
+        let completed = trainer.resume_latest()?;
+        if completed > 0 {
+            println!("resumed from checkpoint: {completed} rounds already done");
+        }
+    }
+    trainer.set_stop_after(stop_after);
     let outcome = trainer.run()?;
     println!("{}", outcome.history.summary());
     println!(
@@ -428,6 +480,10 @@ fn sweep_common(m: &Matches) -> Result<(slfac::sweep::SweepSpec, slfac::sweep::S
             .map_err(anyhow::Error::msg)?,
         out_dir: m.req("out-dir").map_err(anyhow::Error::msg)?.to_string(),
         journal_path: m.get("journal").map(|s| s.to_string()),
+        checkpoint_every: m
+            .get_parsed::<usize>("checkpoint-every")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(0),
     };
     Ok((spec, opts))
 }

@@ -912,6 +912,64 @@ impl ResidentSession {
     pub fn preset_name(&self) -> &str {
         &self.preset.name
     }
+
+    /// Full aggregate client state `(weights, momenta)` — the
+    /// checkpoint export path. Taken at a round boundary the aggregate is
+    /// the only client state that matters: every device slot is reloaded
+    /// from it at the next round start.
+    pub fn export_client_agg(&self) -> (Vec<f32>, Vec<f32>) {
+        let agg = self.agg.lock().unwrap();
+        (agg.w.clone(), agg.m.clone())
+    }
+
+    /// Full server state `(weights, momenta)` — the checkpoint export
+    /// path (`w_s_t` is derived, rebuilt on import).
+    pub fn export_server(&self) -> (Vec<f32>, Vec<f32>) {
+        let s = self.server.lock().unwrap();
+        (s.w_s.clone(), s.m_s.clone())
+    }
+
+    /// Restore the aggregate client state from a checkpoint without
+    /// leaving device-resident mode. Length-checked against the model
+    /// plan — fails closed on mismatched checkpoints.
+    pub fn import_client_agg(&self, w: &[f32], m: &[f32]) -> Result<()> {
+        let mut agg = self.agg.lock().unwrap();
+        ensure!(
+            w.len() == agg.w.len() && m.len() == agg.m.len(),
+            "client checkpoint shape mismatch: got {}/{} values, slot holds {}/{}",
+            w.len(),
+            m.len(),
+            agg.w.len(),
+            agg.m.len()
+        );
+        agg.w.copy_from_slice(w);
+        agg.m.copy_from_slice(m);
+        Ok(())
+    }
+
+    /// Restore the server state from a checkpoint, rebuilding the
+    /// maintained `W_sᵀ` so the fast activation-gradient kernel sees the
+    /// restored weights.
+    pub fn import_server(&self, w: &[f32], m: &[f32]) -> Result<()> {
+        let mut s = self.server.lock().unwrap();
+        ensure!(
+            w.len() == s.w_s.len() && m.len() == s.m_s.len(),
+            "server checkpoint shape mismatch: got {}/{} values, slot holds {}/{}",
+            w.len(),
+            m.len(),
+            s.w_s.len(),
+            s.m_s.len()
+        );
+        s.w_s.copy_from_slice(w);
+        s.m_s.copy_from_slice(m);
+        let plan = &self.plan;
+        for r in 0..plan.act_feat {
+            for c in 0..plan.classes {
+                s.w_s_t[c * plan.act_feat + r] = s.w_s[r * plan.classes + c];
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -44,6 +44,16 @@ pub struct SweepOptions {
     pub out_dir: String,
     /// Journal path override (`None` = `<out_dir>/<name>/journal.jsonl`).
     pub journal_path: Option<String>,
+    /// Per-run crash-durable checkpoint cadence (`0` = off). When on,
+    /// every run checkpoints into
+    /// `<out_dir>/<sweep-name>/ckpt/<run-name>/` every this many rounds
+    /// and resumes mid-run from the newest checkpoint — so a mid-wave
+    /// kill loses at most `checkpoint_every - 1` rounds per in-flight
+    /// run, not the whole run. Results (and hence journal + report
+    /// bytes) are unaffected: the checkpoint keys are not part of the
+    /// config fingerprint, and resume is bit-identical to never having
+    /// crashed.
+    pub checkpoint_every: usize,
 }
 
 impl Default for SweepOptions {
@@ -53,6 +63,7 @@ impl Default for SweepOptions {
             stop_after: None,
             out_dir: "results".to_string(),
             journal_path: None,
+            checkpoint_every: 0,
         }
     }
 }
@@ -229,8 +240,22 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<SweepOutcome> 
                 (next..wave_end).map(|i| (i, exec.clone(), None)).collect();
             let wave_err = run_sharded(&mut slots, pool, |_, slot| {
                 let run = &runs[slot.0];
-                let mut trainer = Trainer::new(run.cfg.clone(), slot.1.clone())
+                let mut cfg = run.cfg.clone();
+                if opts.checkpoint_every > 0 {
+                    // operational knobs only: neither key is serialized, so
+                    // the run's config fingerprint — and the journal — are
+                    // byte-identical with checkpointing on or off
+                    cfg.checkpoint_every = opts.checkpoint_every;
+                    cfg.checkpoint_dir =
+                        format!("{}/{}/ckpt/{}", opts.out_dir, spec.name, run.name);
+                }
+                let mut trainer = Trainer::new(cfg, slot.1.clone())
                     .with_context(|| format!("sweep run '{}'", run.name))?;
+                if opts.checkpoint_every > 0 {
+                    trainer
+                        .resume_latest()
+                        .with_context(|| format!("resuming sweep run '{}'", run.name))?;
+                }
                 slot.2 = Some(
                     trainer
                         .run()

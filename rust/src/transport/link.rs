@@ -232,6 +232,49 @@ impl Link {
     pub fn total_bytes(&self) -> u64 {
         self.uplink_bytes + self.downlink_bytes
     }
+
+    /// Snapshot the link's mutable state for a checkpoint (taken at a
+    /// round boundary, so `round_busy_s` is not captured — the next
+    /// [`Link::begin_round`] resets it anyway).
+    pub fn snapshot(&self) -> LinkState {
+        LinkState {
+            rng: self.rng.state_parts(),
+            uplink_bytes: self.uplink_bytes,
+            downlink_bytes: self.downlink_bytes,
+            busy_s: self.busy_s,
+            transfers: self.transfers,
+        }
+    }
+
+    /// Restore a round-boundary snapshot taken by [`Link::snapshot`]: the
+    /// jitter stream continues bit-identically and lifetime counters pick
+    /// up where they left off. `round_busy_s` starts at zero, exactly as
+    /// after a `begin_round` at the same boundary.
+    pub fn restore(&mut self, state: &LinkState) {
+        self.rng = Pcg32::from_state_parts(state.rng.0, state.rng.1);
+        self.uplink_bytes = state.uplink_bytes;
+        self.downlink_bytes = state.downlink_bytes;
+        self.busy_s = state.busy_s;
+        self.round_busy_s = 0.0;
+        self.transfers = state.transfers;
+    }
+}
+
+/// Serializable round-boundary snapshot of a [`Link`]'s mutable state
+/// (checkpoint/resume contract; the [`LinkConfig`] itself is rebuilt from
+/// the experiment config, not stored).
+#[derive(Debug, Clone)]
+pub struct LinkState {
+    /// Jitter RNG `(state, inc)` parts.
+    pub rng: (u64, u64),
+    /// Lifetime uplink bytes.
+    pub uplink_bytes: u64,
+    /// Lifetime downlink bytes.
+    pub downlink_bytes: u64,
+    /// Lifetime transfer seconds.
+    pub busy_s: f64,
+    /// Lifetime transfer count.
+    pub transfers: u64,
 }
 
 /// One in-flight transfer on the shared uplink.
@@ -596,6 +639,33 @@ mod tests {
         let t2 = l.transfer(Direction::Downlink, 2_000_000);
         assert_eq!(l.round_busy_s.to_bits(), t2.to_bits());
         assert_eq!(l.busy_s.to_bits(), (t1 + t2).to_bits(), "lifetime keeps summing");
+    }
+
+    #[test]
+    fn snapshot_restore_continues_jitter_and_counters_bit_identically() {
+        let cfg = LinkConfig {
+            jitter: 0.2,
+            ..Default::default()
+        };
+        let mut a = Link::new(cfg, 33);
+        a.begin_round();
+        a.transfer(Direction::Uplink, 1_000_000);
+        a.transfer(Direction::Downlink, 500_000);
+        // round boundary: snapshot a, restore into a fresh link
+        let snap = a.snapshot();
+        let mut b = Link::new(cfg, 33);
+        b.restore(&snap);
+        assert_eq!(b.uplink_bytes, a.uplink_bytes);
+        assert_eq!(b.downlink_bytes, a.downlink_bytes);
+        assert_eq!(b.busy_s.to_bits(), a.busy_s.to_bits());
+        assert_eq!(b.transfers, a.transfers);
+        assert_eq!(b.round_busy_s, 0.0, "round counter starts clean");
+        a.begin_round();
+        for i in 1..20 {
+            let ta = a.transfer(Direction::Uplink, 10_000 * i);
+            let tb = b.transfer(Direction::Uplink, 10_000 * i);
+            assert_eq!(ta.to_bits(), tb.to_bits(), "jitter stream continues");
+        }
     }
 
     #[test]

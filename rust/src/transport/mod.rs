@@ -48,8 +48,8 @@ pub use event::{DeviceId, Event, EventQueue, Scheduled, ServerResource};
 pub use fault::{FaultConfig, FaultPlan};
 pub use fleet::FleetOps;
 pub use link::{
-    CommStats, CompletedFlow, Direction, DownlinkMode, Link, LinkConfig, SharedUplink,
-    UplinkMode,
+    CommStats, CompletedFlow, Direction, DownlinkMode, Link, LinkConfig, LinkState,
+    SharedUplink, UplinkMode,
 };
 pub use policy::{ClientSampling, StragglerPolicy};
 pub use profile::{assign_profiles, DeviceProfile, LinkClass};

@@ -1,0 +1,334 @@
+//! Crash-durable checkpoint/resume: the headline contract is that a run
+//! killed at a round boundary and resumed from its checkpoint is
+//! **bit-identical** to a run that never stopped — final client and
+//! server parameters, the full per-round `TrainingHistory`, `CommStats`,
+//! and the metrics CSV bytes (modulo the host-clock `wall_time_s`
+//! column, which no simulated quantity depends on).
+//!
+//! The matrix covers workers 1 and 4 × both schedulers × the
+//! device-resident fast path and the artifact reference path, plus a
+//! fault-active scenario (loss + corruption + crashes + a server outage
+//! composed with checkpointing). Fail-closed behavior is pinned
+//! separately: torn, corrupt, foreign-config, and non-checkpoint files
+//! must all be rejected with named errors, and retention must keep only
+//! the last k snapshots.
+//!
+//! Interruption uses the trainer's runtime-only `set_stop_after` hook —
+//! *not* a smaller `rounds` — so the interrupted run's config (and hence
+//! the fingerprint pinned in the checkpoint header) is identical to the
+//! uninterrupted run's.
+//!
+//! Runs on the sim executor backend — no XLA, no artifacts.
+
+use slfac::config::ExperimentConfig;
+use slfac::coordinator::{TrainOutcome, Trainer};
+use slfac::runtime::{write_sim_manifest, ExecutorHandle, HostTensor, SimManifestSpec};
+use slfac::transport::{FaultConfig, SchedulerKind};
+
+const BATCH: usize = 8;
+
+fn sim_dir(label: &str) -> String {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    let dir = format!(
+        "{}/slfac_ckpt_{label}_{}_{}",
+        std::env::temp_dir().display(),
+        std::process::id(),
+        NEXT.fetch_add(1, Ordering::Relaxed)
+    );
+    write_sim_manifest(
+        &dir,
+        &[SimManifestSpec {
+            preset: "mnist".into(),
+            batch_size: BATCH,
+            act_channels: 2,
+            act_hw: 4,
+        }],
+    )
+    .unwrap();
+    dir
+}
+
+fn cfg(dir: &str, name: &str, workers: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        name: name.into(),
+        codec: "slfac".into(),
+        devices: 4,
+        workers,
+        rounds: 4,
+        batches_per_round: 2,
+        batch_size: BATCH,
+        train_samples: 160,
+        test_samples: 2 * BATCH,
+        seed: 7,
+        artifacts_dir: dir.into(),
+        ..Default::default()
+    }
+}
+
+struct RunResult {
+    outcome: TrainOutcome,
+    client: Vec<HostTensor>,
+    server: Vec<HostTensor>,
+}
+
+/// Build a trainer, optionally resume from its checkpoint dir, optionally
+/// stop after a round, run, and snapshot the final parameters.
+fn run(cfg: ExperimentConfig, resume: bool, stop_after: Option<usize>) -> RunResult {
+    cfg.validate().expect("config validates");
+    let exec = ExecutorHandle::spawn_sim(&cfg.artifacts_dir, &["mnist".into()])
+        .expect("sim executor");
+    let mut trainer = Trainer::new(cfg, exec).expect("trainer");
+    if resume {
+        trainer.resume_latest().expect("resume");
+    }
+    trainer.set_stop_after(stop_after);
+    let outcome = trainer.run().expect("run");
+    RunResult {
+        outcome,
+        client: trainer.client_params(),
+        server: trainer.server_params(),
+    }
+}
+
+fn param_bits(params: &[HostTensor]) -> Vec<Vec<u32>> {
+    params
+        .iter()
+        .map(|t| t.as_f32().unwrap().iter().map(|v| v.to_bits()).collect())
+        .collect()
+}
+
+/// CSV text with the trailing `wall_time_s` column stripped from every
+/// line — the one column carrying host-clock noise.
+fn csv_no_wall(csv: &str) -> String {
+    csv.lines()
+        .map(|l| &l[..l.rfind(',').unwrap()])
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+fn assert_resume_matches(full: &RunResult, resumed: &RunResult, label: &str) {
+    assert!(
+        full.outcome.history.bit_eq(&resumed.outcome.history),
+        "{label}: TrainingHistory diverged"
+    );
+    assert!(
+        full.outcome.comm.bit_eq(&resumed.outcome.comm),
+        "{label}: CommStats diverged: {:?} vs {:?}",
+        full.outcome.comm,
+        resumed.outcome.comm
+    );
+    assert_eq!(
+        param_bits(&full.client),
+        param_bits(&resumed.client),
+        "{label}: client params diverged"
+    );
+    assert_eq!(
+        param_bits(&full.server),
+        param_bits(&resumed.server),
+        "{label}: server params diverged"
+    );
+    assert_eq!(
+        csv_no_wall(&full.outcome.history.to_csv()),
+        csv_no_wall(&resumed.outcome.history.to_csv()),
+        "{label}: CSV bytes diverged (wall column stripped)"
+    );
+}
+
+#[test]
+fn kill_and_resume_matches_uninterrupted_across_the_matrix() {
+    let dir = sim_dir("matrix");
+    for workers in [1usize, 4] {
+        for scheduler in [SchedulerKind::Sync, SchedulerKind::Async] {
+            for fast_path in [true, false] {
+                let label = format!(
+                    "workers={workers} scheduler={} fast_path={fast_path}",
+                    scheduler.name()
+                );
+                let mk = |ckpt: Option<&str>| {
+                    let mut c = cfg(
+                        &dir,
+                        &format!("m_{workers}_{}_{fast_path}", scheduler.name()),
+                        workers,
+                    );
+                    c.scheduler = scheduler;
+                    c.compute_fast_path = fast_path;
+                    if let Some(d) = ckpt {
+                        c.checkpoint_every = 2;
+                        c.checkpoint_dir = d.to_string();
+                    }
+                    c
+                };
+                // uninterrupted reference, checkpointing entirely off
+                let full = run(mk(None), false, None);
+
+                // interrupted at the round-2 boundary, then resumed: the
+                // checkpoint keys never enter the fingerprint, so the
+                // resumed run accepts the interrupted run's checkpoint
+                let ckpt = format!("{dir}/ckpt_{workers}_{}_{fast_path}", scheduler.name());
+                let cut = run(mk(Some(&ckpt)), false, Some(2));
+                assert_eq!(
+                    cut.outcome.history.rounds.len(),
+                    2,
+                    "{label}: interrupted run must stop after round 2"
+                );
+                assert!(
+                    std::path::Path::new(&format!("{ckpt}/ckpt_round_00000002.bin")).exists(),
+                    "{label}: round-2 checkpoint missing"
+                );
+                let resumed = run(mk(Some(&ckpt)), true, None);
+                assert_eq!(resumed.outcome.history.rounds.len(), 4);
+                assert_resume_matches(&full, &resumed, &label);
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_composes_with_fault_injection() {
+    // checkpointing through an actively faulty run: the restored link
+    // RNGs, retry accounting, and fault-plan purity must all line up so
+    // the resumed half replays the exact fault sequence
+    let dir = sim_dir("faulty");
+    for scheduler in [SchedulerKind::Sync, SchedulerKind::Async] {
+        let label = format!("faulty resume, scheduler={}", scheduler.name());
+        let mk = |ckpt: Option<&str>| {
+            let mut c = cfg(&dir, &format!("f_{}", scheduler.name()), 4);
+            c.scheduler = scheduler;
+            c.codec = "tk-sl".into();
+            c.fault = FaultConfig {
+                loss_prob: 0.1,
+                corrupt_prob: 0.05,
+                crash_rate: 0.1,
+                server_outage_s: 0.2,
+                ..Default::default()
+            };
+            if let Some(d) = ckpt {
+                c.checkpoint_every = 2;
+                c.checkpoint_dir = d.to_string();
+            }
+            c
+        };
+        let full = run(mk(None), false, None);
+        let ckpt = format!("{dir}/ckpt_f_{}", scheduler.name());
+        run(mk(Some(&ckpt)), false, Some(2));
+        let resumed = run(mk(Some(&ckpt)), true, None);
+        assert_resume_matches(&full, &resumed, &label);
+        // guard against vacuity: the fault layer must actually fire
+        let activity: u64 = resumed
+            .outcome
+            .history
+            .rounds
+            .iter()
+            .map(|m| m.retransmits + m.corrupt_payloads + m.lost_bytes)
+            .sum();
+        assert!(activity > 0, "{label}: fault layer never engaged");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_with_empty_dir_is_a_fresh_start() {
+    let dir = sim_dir("fresh");
+    let mk = |name: &str| {
+        let mut c = cfg(&dir, name, 2);
+        c.checkpoint_every = 2;
+        c.checkpoint_dir = format!("{dir}/never_written_{name}");
+        c
+    };
+    let fresh = run(mk("a"), false, None);
+    // same config, resume over a directory that has no checkpoints (it
+    // does not even exist): identical run, not an error
+    let resumed = run(mk("a"), true, None);
+    assert_resume_matches(&fresh, &resumed, "fresh-start resume");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn torn_corrupt_and_foreign_files_fail_closed() {
+    let dir = sim_dir("failclosed");
+    let ckpt = format!("{dir}/ckpt");
+    let mk = |seed: u64| {
+        let mut c = cfg(&dir, "fc", 2);
+        c.seed = seed;
+        c.checkpoint_every = 2;
+        c.checkpoint_dir = ckpt.clone();
+        c
+    };
+    run(mk(7), false, Some(2));
+    let path = format!("{ckpt}/ckpt_round_00000002.bin");
+    let pristine = std::fs::read(&path).unwrap();
+
+    let resume_err = |c: ExperimentConfig| -> String {
+        let exec = ExecutorHandle::spawn_sim(&c.artifacts_dir, &["mnist".into()]).unwrap();
+        let mut trainer = Trainer::new(c, exec).unwrap();
+        format!("{:#}", trainer.resume_latest().unwrap_err())
+    };
+
+    // torn: the file ends before the length the header promises
+    std::fs::write(&path, &pristine[..pristine.len() / 2]).unwrap();
+    let err = resume_err(mk(7));
+    assert!(err.contains("torn"), "torn file must be named: {err}");
+
+    // corrupt: one flipped bit in the body trips the checksum
+    let mut flipped = pristine.clone();
+    let mid = flipped.len() / 2;
+    flipped[mid] ^= 0x10;
+    std::fs::write(&path, &flipped).unwrap();
+    let err = resume_err(mk(7));
+    assert!(
+        err.contains("checksum") && err.contains("corrupt"),
+        "corrupt file must be named: {err}"
+    );
+
+    // foreign config: a different seed produces a different fingerprint,
+    // and the error names the differing key with both values
+    std::fs::write(&path, &pristine).unwrap();
+    let err = resume_err(mk(1234));
+    assert!(
+        err.contains("different config") && err.contains("seed"),
+        "foreign-config rejection must name the key: {err}"
+    );
+
+    // not a checkpoint at all
+    std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+    let err = resume_err(mk(7));
+    assert!(
+        err.contains("not a checkpoint file"),
+        "bad magic must be named: {err}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn retention_keeps_only_the_last_k_and_resumes_from_the_newest() {
+    let dir = sim_dir("retention");
+    let ckpt = format!("{dir}/ckpt");
+    let mk = || {
+        let mut c = cfg(&dir, "keep", 2);
+        c.checkpoint_every = 1;
+        c.checkpoint_dir = ckpt.clone();
+        c
+    };
+    let full = run(mk(), false, None);
+    let mut files: Vec<String> = std::fs::read_dir(&ckpt)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    files.sort();
+    assert_eq!(
+        files,
+        [
+            "ckpt_round_00000002.bin",
+            "ckpt_round_00000003.bin",
+            "ckpt_round_00000004.bin"
+        ],
+        "4 rounds at keep-last-3: round 1 pruned, no temp files left"
+    );
+    // resuming a *finished* run restores everything from the newest
+    // checkpoint and re-executes zero rounds
+    let resumed = run(mk(), true, None);
+    assert_resume_matches(&full, &resumed, "resume-at-completion");
+    let _ = std::fs::remove_dir_all(&dir);
+}

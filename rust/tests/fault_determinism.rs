@@ -305,6 +305,77 @@ fn one_corrupted_uplink_leaves_other_devices_untouched() {
 }
 
 #[test]
+fn all_devices_exceeding_max_retries_skips_the_round_without_nan() {
+    // corrupt_prob = 1.0 + max_retries = 1: every uplink attempt on every
+    // device is corrupt, so every device exhausts its retries and is
+    // dropped — the total FedAvg weight is zero. The regression this pins:
+    // the aggregate (and momenta) must carry forward unchanged instead of
+    // dividing to NaN, every recorded metric must stay finite, and the
+    // round must be recorded as skipped.
+    let dir = sim_dir("alldrop");
+    for scheduler in [SchedulerKind::Sync, SchedulerKind::Async] {
+        let mk = || {
+            let mut c = cfg(&dir, "identity", 7, 2);
+            c.name = format!("falldrop_{}", scheduler.name());
+            c.scheduler = scheduler;
+            c.fault = FaultConfig {
+                corrupt_prob: 1.0,
+                max_retries: 1,
+                ..Default::default()
+            };
+            c
+        };
+        // initial parameters from an identical trainer that never ran
+        let c0 = mk();
+        let exec = ExecutorHandle::spawn_sim(&c0.artifacts_dir, &["mnist".into()]).unwrap();
+        let untouched = Trainer::new(c0, exec).unwrap();
+        let init_client = param_bits(&untouched.client_params());
+        let init_server = param_bits(&untouched.server_params());
+
+        let got = run(mk());
+        let label = format!("all-dropped, scheduler={}", scheduler.name());
+        for m in &got.outcome.history.rounds {
+            assert!(m.skipped, "{label}: round {} must be skipped", m.round);
+            assert_eq!(
+                m.dropped_devices as usize, 4,
+                "{label}: every device must be dropped"
+            );
+            for (v, what) in [
+                (m.train_loss, "train_loss"),
+                (m.train_acc, "train_acc"),
+                (m.test_loss, "test_loss"),
+                (m.test_acc, "test_acc"),
+                (m.sim_time_s, "sim_time_s"),
+            ] {
+                assert!(v.is_finite(), "{label}: {what} is not finite: {v}");
+            }
+        }
+        assert_eq!(
+            param_bits(&got.client),
+            init_client,
+            "{label}: client aggregate must carry forward unchanged"
+        );
+        assert_eq!(
+            param_bits(&got.server),
+            init_server,
+            "{label}: server params must carry forward unchanged"
+        );
+        // the skipped flag reaches the CSV as its own column
+        let csv = got.outcome.history.to_csv();
+        let header = csv.lines().next().unwrap();
+        assert!(
+            header.contains(",skipped,"),
+            "{label}: skipped column missing from {header}"
+        );
+        for row in csv.lines().skip(1) {
+            let cols: Vec<&str> = row.split(',').collect();
+            assert_eq!(cols[cols.len() - 2], "1", "{label}: skipped flag not set in {row}");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn faulty_repeat_runs_are_self_consistent() {
     // same faulty config run twice: wall-clock noise must not leak into
     // any result (fault draws are seed-pure, not time-seeded)

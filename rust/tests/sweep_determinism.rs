@@ -62,6 +62,7 @@ fn opts(root: &str, sub: &str, workers: usize, stop_after: Option<usize>) -> Swe
         stop_after,
         out_dir: format!("{root}/{sub}"),
         journal_path: None,
+        checkpoint_every: 0,
     }
 }
 
@@ -212,6 +213,66 @@ fn torn_journal_tail_resumes_byte_identically() {
     run_sweep(&spec, &opts(&root, "torn", 1, None)).unwrap();
     assert_eq!(journal_bytes(&root, "full"), journal_bytes(&root, "torn"));
     assert_eq!(report_bytes(&root, "full"), report_bytes(&root, "torn"));
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Mid-wave crash with per-run checkpoints: the kill lands *after* some
+/// runs finished executing and wrote their round checkpoints, but
+/// *before* their journal records hit disk (exactly the window a wave
+/// barrier leaves open). On re-run those runs must come back from their
+/// checkpoints — the trainer restores the full history and comm state
+/// without recomputing a single round — and the journal + report must be
+/// byte-identical to a sweep that never crashed (and never checkpointed).
+#[test]
+fn mid_wave_crash_with_run_checkpoints_resumes_byte_identically() {
+    let root = temp_root("midwave");
+    let spec = smoke_spec(&root);
+    // uninterrupted reference, checkpoints off
+    run_sweep(&spec, &opts(&root, "full", 2, None)).unwrap();
+
+    // checkpointed sweep, run to completion first so every run's
+    // checkpoint exists on disk
+    let crash_opts = SweepOptions {
+        checkpoint_every: 1,
+        ..opts(&root, "crash", 2, None)
+    };
+    run_sweep(&spec, &crash_opts).unwrap();
+    for run in [
+        "det_slfac_seed7",
+        "det_slfac_seed1234",
+        "det_pq-sl_seed7",
+        "det_pq-sl_seed1234",
+    ] {
+        assert!(
+            std::path::Path::new(&format!("{root}/crash/det/ckpt/{run}")).exists(),
+            "per-run checkpoint dir missing for {run}"
+        );
+    }
+
+    // simulate the crash: drop the journal tail (header + 2 records
+    // survive), leaving runs 2 and 3 checkpointed but unjournaled
+    let jpath = format!("{root}/crash/det/journal.jsonl");
+    let text = std::fs::read_to_string(&jpath).unwrap();
+    let keep: Vec<&str> = text.lines().take(3).collect();
+    std::fs::write(&jpath, format!("{}\n", keep.join("\n"))).unwrap();
+
+    // re-run: runs 0-1 skip via the journal, runs 2-3 restore entirely
+    // from their checkpoints (zero rounds recomputed)
+    let out = run_sweep(&spec, &crash_opts).unwrap();
+    assert_eq!((out.completed, out.skipped, out.executed), (4, 2, 2));
+
+    assert_eq!(
+        journal_bytes(&root, "full"),
+        journal_bytes(&root, "crash"),
+        "journal after a mid-wave crash + checkpoint resume must be \
+         byte-identical to the uninterrupted, checkpoint-free sweep"
+    );
+    assert_eq!(
+        report_bytes(&root, "full"),
+        report_bytes(&root, "crash"),
+        "report after a mid-wave crash + checkpoint resume must be \
+         byte-identical to the uninterrupted, checkpoint-free sweep"
+    );
     let _ = std::fs::remove_dir_all(&root);
 }
 
